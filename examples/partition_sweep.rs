@@ -1,0 +1,74 @@
+//! Partition sweep over any model set — a configurable Fig-5.
+//!
+//! ```bash
+//! cargo run --release --example partition_sweep -- \
+//!     --models resnet50,googlenet --partitions 1,2,4,8,16 --batches 6
+//! ```
+
+use trafficshape::cli::CommandSpec;
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::error::Error;
+use trafficshape::model;
+use trafficshape::shaping::PartitionExperiment;
+use trafficshape::util::table::Table;
+
+fn main() -> std::process::ExitCode {
+    let spec = CommandSpec::new("partition_sweep", "sweep partition counts over models")
+        .opt("models", "LIST", Some("resnet50"), "comma-separated model names")
+        .opt("partitions", "LIST", Some("1,2,4,8,16"), "partition counts")
+        .opt("batches", "N", Some("6"), "steady-state batches")
+        .opt("accel", "NAME", Some("knl_7210"), "accelerator preset");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let m = match spec.parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return std::process::ExitCode::from(2);
+        }
+    };
+
+    let run = || -> trafficshape::error::Result<()> {
+        let accel = AcceleratorConfig::preset(m.get("accel").unwrap())?;
+        let batches = m.get_usize("batches")?.unwrap();
+        let parts = m.get_usize_list("partitions")?.unwrap();
+        let models = m.get_str_list("models").unwrap();
+
+        let mut t = Table::new(vec!["model", "n", "rel perf", "σ reduction", "avg BW gain"])
+            .left_first();
+        for name in &models {
+            let graph = model::by_name(name)?;
+            for &n in &parts {
+                if n == 1 {
+                    continue;
+                }
+                match PartitionExperiment::new(&accel, &graph)
+                    .partitions(n)
+                    .steady_batches(batches)
+                    .run()
+                {
+                    Ok(r) => t.row(vec![
+                        name.clone(),
+                        n.to_string(),
+                        format!("{:+.1}%", (r.relative_performance - 1.0) * 100.0),
+                        format!("{:+.1}%", r.std_reduction * 100.0),
+                        format!("{:+.1}%", r.avg_bw_increase * 100.0),
+                    ]),
+                    Err(Error::InfeasiblePartitioning(why)) => {
+                        eprintln!("skip {name}@{n}: {why}");
+                        t.row(vec![name.clone(), n.to_string(), "DRAM".into(), "-".into(), "-".into()])
+                    }
+                    Err(e) => return Err(e),
+                };
+            }
+        }
+        print!("{}", t.title("partition sweep").render());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => std::process::ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the library in ~20 lines.
+//!
+//! Builds ResNet-50, partitions the KNL-class accelerator 4 ways, and
+//! prints the paper's three metrics for this configuration.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use trafficshape::prelude::*;
+
+fn main() -> Result<()> {
+    // The paper's testbed: 64 cores, 6 TFLOPS, MCDRAM @ ~400 GB/s, 16 GB.
+    let accel = AcceleratorConfig::knl_7210();
+
+    // The paper's headline workload.
+    let net = resnet50();
+    println!(
+        "{}: {} layers, {:.1} M params, {:.1} GFLOP/image",
+        net.name,
+        net.len(),
+        net.param_elems() as f64 / 1e6,
+        net.flops_per_image() / 1e9
+    );
+
+    // Synchronous baseline vs 4 asynchronous partitions.
+    let report = PartitionExperiment::new(&accel, &net)
+        .partitions(4)
+        .steady_batches(6)
+        .run()?;
+
+    println!("\n4 partitions vs synchronous baseline:");
+    println!(
+        "  relative performance : {:+.1}%  (paper: +8.0% at best n)",
+        (report.relative_performance - 1.0) * 100.0
+    );
+    println!(
+        "  σ(BW) reduction      : {:+.1}%  (paper: −36.2%)",
+        report.std_reduction * 100.0
+    );
+    println!(
+        "  mean BW increase     : {:+.1}%  (paper: +15.2%)",
+        report.avg_bw_increase * 100.0
+    );
+    println!(
+        "  baseline: mean {:.1} GB/s σ {:.1} | shaped: mean {:.1} GB/s σ {:.1}",
+        report.baseline.bw.mean,
+        report.baseline.bw.std,
+        report.shaped.bw.mean,
+        report.shaped.bw.std
+    );
+    Ok(())
+}

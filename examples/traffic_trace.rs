@@ -1,0 +1,45 @@
+//! Dump Fig-1/Fig-6-style bandwidth traces to CSV for plotting.
+//!
+//! ```bash
+//! cargo run --release --example traffic_trace -- --out /tmp/ts_trace
+//! # → /tmp/ts_trace/fig1/trace.csv and /tmp/ts_trace/fig6/traces.csv
+//! ```
+
+use trafficshape::cli::CommandSpec;
+use trafficshape::config::ExperimentConfig;
+use trafficshape::experiments::run_by_id;
+
+fn main() -> std::process::ExitCode {
+    let spec = CommandSpec::new("traffic_trace", "dump bandwidth traces as CSV")
+        .opt("out", "DIR", Some("out/traces"), "output directory")
+        .opt("samples", "N", Some("400"), "samples per trace")
+        .opt("batches", "N", Some("4"), "steady-state batches");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let m = match spec.parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return std::process::ExitCode::from(2);
+        }
+    };
+    let run = || -> trafficshape::error::Result<()> {
+        let mut cfg = ExperimentConfig::default();
+        cfg.trace_samples = m.get_usize("samples")?.unwrap();
+        cfg.steady_batches = m.get_usize("batches")?.unwrap();
+        cfg.out_dir = m.get("out").unwrap().into();
+        for id in ["fig1", "fig6"] {
+            let out = run_by_id(id, &cfg)?;
+            print!("{}", out.rendered);
+            out.write_to(&cfg.out_dir)?;
+            println!("wrote {}/{}/", cfg.out_dir.display(), id);
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => std::process::ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::ExitCode::FAILURE
+        }
+    }
+}

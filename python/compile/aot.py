@@ -1,0 +1,158 @@
+"""AOT compiler: lower each TinyCNN stage to HLO **text** + manifest.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per stage and batch size, ``tiny_<stage>_b<N>.hlo.txt`` plus a
+``manifest.json`` describing shapes, parameter/FLOP counts and a
+self-check vector (deterministic input → expected output stats) that the
+rust runtime verifies after compiling each artifact.
+
+HLO *text* — not ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Batch sizes to pre-compile. 8 is the coordinator's micro-batch; 1 is
+#: kept for tests and latency-oriented runs.
+BATCHES = (1, 8)
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path).
+
+    ``print_large_constants=True`` is load-bearing: the stage parameters
+    are baked into the module as constants, and the default printer
+    elides literals over ~1k elements as ``constant({...})`` — which the
+    rust-side text parser silently reads back as zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "..." not in text, "HLO printer elided a constant"
+    return text
+
+
+def probe_input(batch: int, hwc, *, seed_salt: int = 0) -> jnp.ndarray:
+    """Deterministic, well-conditioned input for self-check vectors."""
+    h, w, c = hwc
+    n = batch * h * w * c
+    # Cheap LCG-free pattern: scaled cosine of the flat index — exactly
+    # reproducible from the formula on the rust side if ever needed.
+    idx = jnp.arange(n, dtype=jnp.float32) + float(seed_salt)
+    x = jnp.cos(idx * 0.7311) * 0.5
+    return x.reshape(batch, h, w, c)
+
+
+#: stage → parameter groups (for per-stage weight-traffic metering).
+STAGE_PARAM_GROUPS = {
+    "stem": ["stem"],
+    "block1": ["block1_a", "block1_b"],
+    "down": ["down"],
+    "block2": ["block2_a", "block2_b"],
+    "head": ["head"],
+}
+
+
+def stage_param_elems(params, name: str) -> int:
+    return sum(
+        int(v.size) for g in STAGE_PARAM_GROUPS[name] for v in params[g].values()
+    )
+
+
+def stage_artifact(params, name: str, batch: int):
+    """Lower one stage (params baked as constants) and build metadata."""
+    fn = functools.partial(model.STAGE_FNS[name], params)
+    in_hwc, out_shape = model.STAGE_SHAPES[name]
+    spec = jax.ShapeDtypeStruct((batch, *in_hwc), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+
+    # Self-check vector.
+    x = probe_input(batch, in_hwc)
+    y = jax.jit(fn)(x)
+    y = jnp.asarray(y)
+    meta = {
+        "name": name,
+        "batch": batch,
+        "file": f"tiny_{name}_b{batch}.hlo.txt",
+        "input_shape": [batch, *in_hwc],
+        "output_shape": list(y.shape),
+        "dtype": "f32",
+        "flops": model.stage_flops(name, batch),
+        "param_elems": stage_param_elems(params, name),
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "check": {
+            "output_mean": float(jnp.mean(y)),
+            "output_std": float(jnp.std(y)),
+            "first8": [float(v) for v in y.reshape(-1)[:8]],
+            "tolerance": 2e-4,
+        },
+    }
+    assert list(y.shape)[0] == batch
+    expect_out = (batch, *out_shape) if name != "head" else (batch, model.CLASSES)
+    assert tuple(y.shape) == expect_out, (name, y.shape, expect_out)
+    return text, meta
+
+
+def build(out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = model.init_params(seed)
+    stages_meta = []
+    for name in model.STAGES:
+        for batch in BATCHES:
+            text, meta = stage_artifact(params, name, batch)
+            path = os.path.join(out_dir, meta["file"])
+            with open(path, "w") as f:
+                f.write(text)
+            stages_meta.append(meta)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "model": "tiny_cnn",
+        "seed": seed,
+        "layout": "NHWC",
+        "param_count": model.param_count(params),
+        "stage_order": list(model.STAGES),
+        "batches": list(BATCHES),
+        "stages": stages_meta,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(stages_meta)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0, help="parameter seed")
+    args = ap.parse_args()
+    build(args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

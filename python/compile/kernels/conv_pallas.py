@@ -1,0 +1,156 @@
+"""Layer-1 Pallas kernel: blocked matmul with fused scale/shift/ReLU.
+
+The TinyCNN convolutions are lowered to matmul over an im2col view
+(`X̃[M=N·Ho·Wo, K=kh·kw·C] @ W[K, Kout]`), which is the TPU-shaped
+re-expression of the paper's KNL hot loop (see DESIGN.md
+§Hardware-Adaptation): the MKL-DNN register/L2 tiles become VMEM
+`BlockSpec` tiles feeding the MXU, and the fused BN scale/shift/ReLU
+epilogue rides along in the same kernel the way MKL-DNN fuses post-ops.
+
+The kernel is grid-blocked over rows of X̃; the whole (small) weight tile
+stays resident in VMEM across the grid — the weight-stationary schedule
+whose reuse the paper's partitioning deliberately trades away at the
+coordination level.
+
+MUST be lowered with ``interpret=True``: real-TPU Pallas emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the im2col matrix processed per grid step. 128 matches the MXU
+# systolic dimension; see DESIGN.md §8 for the VMEM/MXU estimate.
+DEFAULT_BLOCK_M = 128
+
+
+def _matmul_epilogue_kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref, *, relu: bool):
+    """One grid step: (TM, K) @ (K, N) → (TM, N), then y·scale + shift."""
+    acc = jnp.dot(
+        x_ref[...],
+        w_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+    y = acc * scale_ref[...] + shift_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def matmul_scale_shift(
+    x: jax.Array,
+    w: jax.Array,
+    scale: jax.Array,
+    shift: jax.Array,
+    *,
+    relu: bool = True,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> jax.Array:
+    """``maximum(x @ w * scale + shift, 0)`` as a Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` activations (im2col patches).
+      w: ``[K, N]`` weights.
+      scale: ``[N]`` fused BN scale (set to ones for a plain matmul).
+      shift: ``[N]`` fused BN shift / bias.
+      relu: apply the ReLU epilogue.
+      block_m: rows per grid step.
+
+    Returns:
+      ``[M, N]`` float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    assert scale.shape == (n,) and shift.shape == (n,), (scale.shape, shift.shape)
+
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+
+    kernel = functools.partial(_matmul_epilogue_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Row tile marches down X̃; weights/scale/shift stay resident.
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; see module docstring.
+    )(x, w, scale, shift)
+
+
+def conv2d_bn_act(
+    x: jax.Array,
+    w: jax.Array,
+    scale: jax.Array,
+    shift: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    relu: bool = True,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> jax.Array:
+    """NHWC conv + folded-BN scale/shift + optional ReLU via the kernel.
+
+    Args:
+      x: ``[N, H, W, C]`` input.
+      w: ``[kh, kw, C, K]`` filters (HWIO).
+      scale/shift: ``[K]`` folded batch-norm affine.
+
+    The im2col expansion is pure data movement
+    (``conv_general_dilated_patches``); all FLOPs run inside the Pallas
+    matmul so the whole conv lowers into one fused HLO region around the
+    kernel body.
+    """
+    n, h, wdt, c = x.shape
+    kh, kw, c2, kout = w.shape
+    assert c == c2, f"channel mismatch: {x.shape} vs {w.shape}"
+
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # patches: [N, Ho, Wo, C*kh*kw] with the *channel-major* layout
+    # (C, kh, kw) along the last axis.
+    _, ho, wo, patch_k = patches.shape
+    assert patch_k == c * kh * kw
+
+    xm = patches.reshape(n * ho * wo, patch_k)
+    # Match the patches layout: HWIO → (C, kh, kw) major.
+    wm = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * kh * kw, kout)
+
+    ym = matmul_scale_shift(xm, wm, scale, shift, relu=relu, block_m=block_m)
+    return ym.reshape(n, ho, wo, kout)
+
+
+def dense_scale_shift(
+    x: jax.Array,
+    w: jax.Array,
+    shift: jax.Array,
+    *,
+    relu: bool = False,
+) -> jax.Array:
+    """Fully-connected layer ``x @ w + shift`` on the same kernel."""
+    n = w.shape[1]
+    return matmul_scale_shift(x, w, jnp.ones((n,), jnp.float32), shift, relu=relu)
+
+
+def vmem_bytes_estimate(block_m: int, k: int, n: int, elem_bytes: int = 4) -> int:
+    """Static VMEM footprint of one grid step (DESIGN.md §8).
+
+    x tile + weight tile + scale + shift + output tile.
+    """
+    return elem_bytes * (block_m * k + k * n + 2 * n + block_m * n)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Pallas kernels — the build-time correctness
+reference. Everything here uses stock jax.lax/jnp ops only."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_scale_shift_ref(x, w, scale, shift, *, relu: bool = True):
+    """Reference for kernels.conv_pallas.matmul_scale_shift."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    y = y * scale + shift
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def conv2d_bn_act_ref(x, w, scale, shift, *, stride=1, padding=0, relu=True):
+    """Reference NHWC conv + scale/shift + ReLU via lax.conv."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y * scale + shift
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def dense_scale_shift_ref(x, w, shift, *, relu=False):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + shift
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

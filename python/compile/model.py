@@ -1,0 +1,152 @@
+"""Layer-2: the TinyCNN forward pass in JAX, calling the Pallas kernel.
+
+The network mirrors ``rust/src/model/tiny.rs`` exactly (keep in sync!):
+
+  stem   : conv3x3  3→16  s1 p1, BN, ReLU                (32×32)
+  block1 : residual [conv3x3 16→16 ×2]                   (32×32)
+  down   : conv3x3 16→32  s2 p1, BN, ReLU                (16×16)
+  block2 : residual [conv3x3 32→32 ×2]                   (16×16)
+  head   : global avg pool → dense 32→10
+
+Each *stage* is AOT-lowered to one HLO artifact with its parameters baked
+in as constants, so the rust runtime executes pure ``x → y`` functions
+and Python never appears on the request path.
+
+Layout is NHWC (TPU-native); batch normalization is pre-folded into a
+per-channel (scale, shift) pair, the inference form.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv_pallas import conv2d_bn_act, dense_scale_shift
+
+# ---------------------------------------------------------------------------
+# Shapes — single source of truth for aot.py and the tests.
+# ---------------------------------------------------------------------------
+
+INPUT_HWC = (32, 32, 3)
+CLASSES = 10
+STAGES = ("stem", "block1", "down", "block2", "head")
+
+#: stage → (input HWC, output HWC); head output is the logits vector.
+STAGE_SHAPES = {
+    "stem": ((32, 32, 3), (32, 32, 16)),
+    "block1": ((32, 32, 16), (32, 32, 16)),
+    "down": ((32, 32, 16), (16, 16, 32)),
+    "block2": ((16, 16, 32), (16, 16, 32)),
+    "head": ((16, 16, 32), (CLASSES,)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _conv_params(key, kh, kw, cin, cout):
+    kw_, ks, kb = jax.random.split(key, 3)
+    fan_in = kh * kw * cin
+    return {
+        "w": jax.random.normal(kw_, (kh, kw, cin, cout), jnp.float32)
+        * (2.0 / fan_in) ** 0.5,
+        # Folded BN: scale ∈ [0.8, 1.2], small shift.
+        "scale": 0.8 + 0.4 * jax.random.uniform(ks, (cout,), jnp.float32),
+        "shift": 0.05 * jax.random.normal(kb, (cout,), jnp.float32),
+    }
+
+
+def init_params(seed: int = 0) -> Dict[str, dict]:
+    """Deterministic parameter set for the whole network."""
+    root = jax.random.PRNGKey(seed)
+    ks = jax.random.split(root, 8)
+    return {
+        "stem": _conv_params(ks[0], 3, 3, 3, 16),
+        "block1_a": _conv_params(ks[1], 3, 3, 16, 16),
+        "block1_b": _conv_params(ks[2], 3, 3, 16, 16),
+        "down": _conv_params(ks[3], 3, 3, 16, 32),
+        "block2_a": _conv_params(ks[4], 3, 3, 32, 32),
+        "block2_b": _conv_params(ks[5], 3, 3, 32, 32),
+        "head": {
+            "w": jax.random.normal(ks[6], (32, CLASSES), jnp.float32) * (1.0 / 32) ** 0.5,
+            "shift": 0.05 * jax.random.normal(ks[7], (CLASSES,), jnp.float32),
+        },
+    }
+
+
+def param_count(params) -> int:
+    return sum(int(v.size) for leaf in params.values() for v in leaf.values())
+
+
+# ---------------------------------------------------------------------------
+# Stage forward functions (x: [N, H, W, C] NHWC)
+# ---------------------------------------------------------------------------
+
+def _residual_block(x, pa, pb):
+    y = conv2d_bn_act(x, pa["w"], pa["scale"], pa["shift"], stride=1, padding=1, relu=True)
+    y = conv2d_bn_act(y, pb["w"], pb["scale"], pb["shift"], stride=1, padding=1, relu=False)
+    return jax.nn.relu(x + y)
+
+
+def stem(params, x):
+    p = params["stem"]
+    return conv2d_bn_act(x, p["w"], p["scale"], p["shift"], stride=1, padding=1, relu=True)
+
+
+def block1(params, x):
+    return _residual_block(x, params["block1_a"], params["block1_b"])
+
+
+def down(params, x):
+    p = params["down"]
+    return conv2d_bn_act(x, p["w"], p["scale"], p["shift"], stride=2, padding=1, relu=True)
+
+
+def block2(params, x):
+    return _residual_block(x, params["block2_a"], params["block2_b"])
+
+
+def head(params, x):
+    p = params["head"]
+    pooled = jnp.mean(x, axis=(1, 2))  # [N, C]
+    return dense_scale_shift(pooled, p["w"], p["shift"], relu=False)
+
+
+STAGE_FNS = {
+    "stem": stem,
+    "block1": block1,
+    "down": down,
+    "block2": block2,
+    "head": head,
+}
+
+
+def forward(params, x):
+    """Whole-network forward: logits for a NHWC batch."""
+    for name in STAGES:
+        x = STAGE_FNS[name](params, x)
+    return x
+
+
+def stage_flops(name: str, batch: int) -> int:
+    """Analytic FLOPs of one stage (MAC = 2 FLOPs), matching the rust
+    model's accounting; used for manifest metadata."""
+    (ih, iw, ic), out = STAGE_SHAPES[name]
+    if name == "head":
+        return batch * (ih * iw * ic + 2 * ic * CLASSES)
+    oh, ow, oc = out
+    convs = {
+        "stem": [(3, ic, oc, oh, ow)],
+        "down": [(3, ic, oc, oh, ow)],
+        "block1": [(3, ic, oc, oh, ow), (3, oc, oc, oh, ow)],
+        "block2": [(3, ic, oc, oh, ow), (3, oc, oc, oh, ow)],
+    }[name]
+    total = 0
+    for k, cin, cout, ho, wo in convs:
+        total += 2 * k * k * cin * cout * ho * wo
+    if name.startswith("block"):
+        total += 2 * oh * ow * oc  # residual add + relu
+    return batch * total

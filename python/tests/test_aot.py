@@ -1,0 +1,100 @@
+"""AOT emission sanity: HLO text well-formed, manifest consistent,
+self-check vectors reproducible."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    """One representative artifact (stem, batch 1) to keep tests fast."""
+    params = model.init_params(seed=0)
+    text, meta = aot.stage_artifact(params, "stem", 1)
+    return text, meta, params
+
+
+class TestHloText:
+    def test_looks_like_hlo(self, artifact):
+        text, meta, _ = artifact
+        assert text.startswith("HloModule"), text[:60]
+        assert "ENTRY" in text
+        # Must be plain HLO ops — no TPU Mosaic custom-calls (interpret
+        # mode requirement from /opt/xla-example/README.md).
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()
+
+    def test_entry_shapes_in_text(self, artifact):
+        text, meta, _ = artifact
+        # f32[1,32,32,3] input and f32[1,32,32,16] output appear in the
+        # module signature.
+        assert "f32[1,32,32,3]" in text
+        assert "f32[1,32,32,16]" in text
+
+    def test_sha_matches(self, artifact):
+        import hashlib
+
+        text, meta, _ = artifact
+        assert meta["hlo_sha256"] == hashlib.sha256(text.encode()).hexdigest()
+
+
+class TestSelfCheck:
+    def test_probe_is_deterministic(self):
+        a = aot.probe_input(2, (4, 4, 3))
+        b = aot.probe_input(2, (4, 4, 3))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.shape == (2, 4, 4, 3)
+        assert float(jnp.max(jnp.abs(a))) <= 0.5 + 1e-6
+
+    def test_check_vector_reproduces(self, artifact):
+        _, meta, params = artifact
+        x = aot.probe_input(meta["batch"], tuple(meta["input_shape"][1:]))
+        y = model.STAGE_FNS[meta["name"]](params, x)
+        assert abs(float(jnp.mean(y)) - meta["check"]["output_mean"]) < 1e-6
+        np.testing.assert_allclose(
+            np.asarray(y).reshape(-1)[:8], meta["check"]["first8"], rtol=1e-6, atol=1e-6
+        )
+
+
+class TestBuild:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        manifest = aot.build(str(out), seed=0)
+        return out, manifest
+
+    def test_all_stage_batch_files_exist(self, built):
+        out, manifest = built
+        assert len(manifest["stages"]) == len(model.STAGES) * len(aot.BATCHES)
+        for meta in manifest["stages"]:
+            path = os.path.join(str(out), meta["file"])
+            assert os.path.exists(path), meta["file"]
+            assert os.path.getsize(path) > 100
+
+    def test_manifest_round_trips_as_json(self, built):
+        out, manifest = built
+        with open(os.path.join(str(out), "manifest.json")) as f:
+            loaded = json.load(f)
+        assert loaded == manifest
+        assert loaded["version"] == aot.MANIFEST_VERSION
+        assert loaded["stage_order"] == list(model.STAGES)
+
+    def test_output_shapes_chain_through_manifest(self, built):
+        _, manifest = built
+        by_batch = {}
+        for meta in manifest["stages"]:
+            by_batch.setdefault(meta["batch"], []).append(meta)
+        for batch, metas in by_batch.items():
+            ordered = sorted(metas, key=lambda m: manifest["stage_order"].index(m["name"]))
+            for a, b in zip(ordered[:-1], ordered[1:]):
+                assert a["output_shape"] == b["input_shape"], (a["name"], b["name"])
+
+    def test_flops_metadata_positive(self, built):
+        _, manifest = built
+        for meta in manifest["stages"]:
+            assert meta["flops"] > 0

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+This is the core correctness signal of the compile path — hypothesis
+sweeps shapes, strides, padding and block sizes against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv_pallas import (
+    conv2d_bn_act,
+    dense_scale_shift,
+    matmul_scale_shift,
+    vmem_bytes_estimate,
+)
+from compile.kernels.ref import (
+    conv2d_bn_act_ref,
+    dense_scale_shift_ref,
+    matmul_scale_shift_ref,
+)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [(8, 4, 3), (128, 27, 16), (300, 9, 10), (1, 1, 1)])
+    @pytest.mark.parametrize("relu", [True, False])
+    def test_matches_ref(self, m, k, n, relu):
+        ka, kb, kc, kd = keys(0, 4)
+        x, w = rand(ka, (m, k)), rand(kb, (k, n))
+        scale, shift = 0.5 + jax.random.uniform(kc, (n,)), rand(kd, (n,), 0.1)
+        got = matmul_scale_shift(x, w, scale, shift, relu=relu)
+        want = matmul_scale_shift_ref(x, w, scale, shift, relu=relu)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_block_size_does_not_change_result(self):
+        ka, kb = keys(1, 2)
+        x, w = rand(ka, (257, 18)), rand(kb, (18, 12))
+        ones, zeros = jnp.ones((12,)), jnp.zeros((12,))
+        full = matmul_scale_shift(x, w, ones, zeros, block_m=257)
+        for bm in (16, 64, 128, 300):
+            blocked = matmul_scale_shift(x, w, ones, zeros, block_m=bm)
+            np.testing.assert_allclose(blocked, full, rtol=1e-6, atol=1e-6)
+
+    def test_relu_clamps_negatives(self):
+        x = jnp.array([[1.0, -1.0]])
+        w = jnp.eye(2, dtype=jnp.float32)
+        y = matmul_scale_shift(x, w, jnp.ones((2,)), jnp.zeros((2,)), relu=True)
+        assert float(y[0, 1]) == 0.0
+        assert float(y[0, 0]) == 1.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 64),
+        n=st.integers(1, 48),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, m, k, n, relu, seed):
+        ka, kb, kc, kd = keys(seed, 4)
+        x, w = rand(ka, (m, k)), rand(kb, (k, n))
+        scale, shift = 0.5 + jax.random.uniform(kc, (n,)), rand(kd, (n,), 0.1)
+        got = matmul_scale_shift(x, w, scale, shift, relu=relu)
+        want = matmul_scale_shift_ref(x, w, scale, shift, relu=relu)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv kernel
+# ---------------------------------------------------------------------------
+
+class TestConv:
+    @pytest.mark.parametrize(
+        "hw,cin,cout,k,stride,pad",
+        [
+            ((32, 32), 3, 16, 3, 1, 1),   # stem
+            ((32, 32), 16, 32, 3, 2, 1),  # down
+            ((16, 16), 32, 32, 3, 1, 1),  # block2 conv
+            ((8, 8), 4, 4, 1, 1, 0),      # pointwise
+            ((9, 7), 5, 6, 3, 2, 0),      # odd sizes, valid padding
+        ],
+    )
+    def test_matches_lax_conv(self, hw, cin, cout, k, stride, pad):
+        ka, kb, kc, kd = keys(7, 4)
+        x = rand(ka, (2, *hw, cin))
+        w = rand(kb, (k, k, cin, cout), 0.3)
+        scale = 0.5 + jax.random.uniform(kc, (cout,))
+        shift = rand(kd, (cout,), 0.1)
+        got = conv2d_bn_act(x, w, scale, shift, stride=stride, padding=pad)
+        want = conv2d_bn_act_ref(x, w, scale, shift, stride=stride, padding=pad)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_no_relu_preserves_negatives(self):
+        ka, kb = keys(9, 2)
+        x = rand(ka, (1, 8, 8, 4))
+        w = rand(kb, (3, 3, 4, 4), 0.5)
+        y = conv2d_bn_act(x, w, jnp.ones((4,)), jnp.zeros((4,)), padding=1, relu=False)
+        assert float(jnp.min(y)) < 0.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        h=st.integers(4, 20),
+        w=st.integers(4, 20),
+        cin=st.integers(1, 8),
+        cout=st.integers(1, 8),
+        k=st.sampled_from([1, 3]),
+        stride=st.sampled_from([1, 2]),
+        batch=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, h, w, cin, cout, k, stride, batch, seed):
+        pad = k // 2
+        ka, kb, kc, kd = keys(seed, 4)
+        x = rand(ka, (batch, h, w, cin))
+        wt = rand(kb, (k, k, cin, cout), 0.3)
+        scale = 0.5 + jax.random.uniform(kc, (cout,))
+        shift = rand(kd, (cout,), 0.1)
+        got = conv2d_bn_act(x, wt, scale, shift, stride=stride, padding=pad)
+        want = conv2d_bn_act_ref(x, wt, scale, shift, stride=stride, padding=pad)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# dense kernel + VMEM estimate
+# ---------------------------------------------------------------------------
+
+class TestDense:
+    def test_matches_ref(self):
+        ka, kb, kc = keys(3, 3)
+        x, w, b = rand(ka, (8, 32)), rand(kb, (32, 10)), rand(kc, (10,), 0.1)
+        np.testing.assert_allclose(
+            dense_scale_shift(x, w, b),
+            dense_scale_shift_ref(x, w, b),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+def test_vmem_estimate_is_within_budget():
+    # DESIGN.md §8: worst-case TinyCNN tile must fit VMEM with headroom
+    # for double buffering (16 MiB per TPU core).
+    worst = vmem_bytes_estimate(block_m=128, k=9 * 32, n=32)
+    assert worst < 1 * 1024 * 1024, f"tile too big: {worst} B"
+
+
+def test_kernel_lowers_under_jit():
+    # The kernel must trace/lower inside jit (what aot.py relies on).
+    ka, kb = keys(5, 2)
+    x, w = rand(ka, (64, 12)), rand(kb, (12, 8))
+    f = jax.jit(
+        lambda a, b: matmul_scale_shift(a, b, jnp.ones((8,)), jnp.zeros((8,)))
+    )
+    y = f(x, w)
+    assert y.shape == (64, 8)

@@ -1,0 +1,117 @@
+"""L2 correctness: TinyCNN stages vs a pure-jnp reference network."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import conv2d_bn_act_ref, dense_scale_shift_ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=0)
+
+
+def ref_residual(x, pa, pb):
+    y = conv2d_bn_act_ref(x, pa["w"], pa["scale"], pa["shift"], stride=1, padding=1, relu=True)
+    y = conv2d_bn_act_ref(y, pb["w"], pb["scale"], pb["shift"], stride=1, padding=1, relu=False)
+    return jax.nn.relu(x + y)
+
+
+def ref_forward(params, x):
+    p = params
+    x = conv2d_bn_act_ref(x, p["stem"]["w"], p["stem"]["scale"], p["stem"]["shift"], stride=1, padding=1)
+    x = ref_residual(x, p["block1_a"], p["block1_b"])
+    x = conv2d_bn_act_ref(x, p["down"]["w"], p["down"]["scale"], p["down"]["shift"], stride=2, padding=1)
+    x = ref_residual(x, p["block2_a"], p["block2_b"])
+    pooled = jnp.mean(x, axis=(1, 2))
+    return dense_scale_shift_ref(pooled, p["head"]["w"], p["head"]["shift"])
+
+
+def rand_input(batch, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (batch, 32, 32, 3), jnp.float32)
+
+
+class TestStages:
+    @pytest.mark.parametrize("name", model.STAGES)
+    @pytest.mark.parametrize("batch", [1, 8])
+    def test_stage_shapes(self, params, name, batch):
+        in_hwc, out_shape = model.STAGE_SHAPES[name]
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, *in_hwc), jnp.float32)
+        y = model.STAGE_FNS[name](params, x)
+        if name == "head":
+            assert y.shape == (batch, model.CLASSES)
+        else:
+            assert y.shape == (batch, *out_shape)
+
+    def test_stage_shapes_chain(self):
+        # STAGE_SHAPES must pipe: out[i] == in[i+1].
+        order = model.STAGES
+        for a, b in zip(order[:-1], order[1:]):
+            assert model.STAGE_SHAPES[a][1] == model.STAGE_SHAPES[b][0], (a, b)
+
+    def test_full_forward_matches_reference(self, params):
+        x = rand_input(4)
+        got = model.forward(params, x)
+        want = ref_forward(params, x)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+    def test_forward_is_deterministic(self, params):
+        x = rand_input(2, seed=3)
+        a = model.forward(params, x)
+        b = model.forward(params, x)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_residual_path_active(self, params):
+        # block1 must not collapse to identity or to conv-only: output
+        # differs from both input and the non-residual branch.
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 32, 32, 16), jnp.float32)
+        y = model.block1(params, x)
+        assert not np.allclose(np.asarray(y), np.asarray(x))
+        assert float(jnp.min(y)) >= 0.0  # final relu
+
+    def test_logits_are_finite_and_spread(self, params):
+        x = rand_input(8, seed=9)
+        logits = model.forward(params, x)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        # Different images → different logits.
+        assert float(jnp.std(logits[:, 0])) > 1e-6
+
+
+class TestParams:
+    def test_param_count_matches_rust_twin(self, params):
+        # rust/src/model/tiny.rs test asserts < 50_000 params; keep the
+        # python twin consistent (conv w + scale + shift, fc w + shift).
+        n = model.param_count(params)
+        expected = (
+            (3 * 3 * 3 * 16 + 32)
+            + 2 * (3 * 3 * 16 * 16 + 32)
+            + (3 * 3 * 16 * 32 + 64)
+            + 2 * (3 * 3 * 32 * 32 + 64)
+            + (32 * 10 + 10)
+        )
+        assert n == expected
+        assert n < 50_000
+
+    def test_seeded_params_are_reproducible(self):
+        a = model.init_params(0)
+        b = model.init_params(0)
+        c = model.init_params(1)
+        np.testing.assert_array_equal(np.asarray(a["stem"]["w"]), np.asarray(b["stem"]["w"]))
+        assert not np.allclose(np.asarray(a["stem"]["w"]), np.asarray(c["stem"]["w"]))
+
+
+class TestFlops:
+    def test_stage_flops_are_positive_and_scale_with_batch(self):
+        for name in model.STAGES:
+            f1 = model.stage_flops(name, 1)
+            f8 = model.stage_flops(name, 8)
+            assert f1 > 0
+            assert f8 == 8 * f1
+
+    def test_total_flops_match_rust_twin_scale(self):
+        # rust tiny.rs asserts < 50 MFLOP per image; same here.
+        total = sum(model.stage_flops(n, 1) for n in model.STAGES)
+        assert 10e6 < total < 50e6, total

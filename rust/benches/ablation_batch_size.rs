@@ -1,0 +1,65 @@
+//! Ablation: in-flight image count.
+//!
+//! The paper pins the machine-wide batch to 64 ("to keep the number of
+//! images loaded on DRAM constant, 64/n images were assigned to a
+//! partition"). Here we vary the total in-flight count: fewer images
+//! per partition means each weight load is amortized over less work
+//! (reuse loss grows), more images cost DRAM. The 4-partition gain
+//! should grow with batch and saturate.
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::resnet50;
+use trafficshape::reuse::PhaseCompiler;
+use trafficshape::shaping::{PartitionPlan, StaggerPolicy};
+use trafficshape::sim::{SimEngine, Workload};
+use trafficshape::util::table::Table;
+
+/// Relative performance of n partitions vs sync at a given total batch.
+fn rel_perf(accel: &AcceleratorConfig, total_batch: usize, n: usize, repeats: usize) -> f64 {
+    let engine = SimEngine::new(accel);
+    let run = |parts: usize, stagger: bool| -> f64 {
+        let plan = PartitionPlan::with_total_batch(accel, parts, total_batch).unwrap();
+        let phases =
+            PhaseCompiler::new(accel, plan.cores_per_partition, plan.batch_per_partition)
+                .compile(&resnet50());
+        let workloads: Vec<Workload> = (0..parts)
+            .map(|i| {
+                let mut w = Workload::new(
+                    format!("p{i}"),
+                    plan.cores_per_partition,
+                    phases.clone(),
+                    repeats,
+                );
+                if stagger {
+                    w = w.with_start_phase(i * phases.len() / parts);
+                }
+                w
+            })
+            .collect();
+        engine.run(&workloads).unwrap().makespan.0
+    };
+    let _ = StaggerPolicy::UniformPhase; // (explicit: stagger=true below)
+    run(1, false) / run(n, true)
+}
+
+fn main() {
+    let accel = AcceleratorConfig::knl_7210();
+    let mut b = Bencher::from_env();
+    let batches = [16usize, 32, 64, 128, 256];
+    let mut rows = Vec::new();
+    for &tb in &batches {
+        let mut last = 0.0;
+        b.bench(format!("batch/{tb}"), || {
+            last = rel_perf(&accel, tb, 4, 5);
+        });
+        rows.push((tb, last));
+    }
+    print!("{}", b.report("Ablation — in-flight image count (ResNet-50, 4 partitions)"));
+    let mut t = Table::new(vec!["total in-flight images", "rel perf vs sync"]).left_first();
+    for (tb, g) in &rows {
+        let mark = if *tb == 64 { "  ← paper's operating point" } else { "" };
+        t.row(vec![format!("{tb}{mark}"), format!("{:+.1}%", (g - 1.0) * 100.0)]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,61 @@
+//! Ablation: over-partitioning (the paper's future-work question).
+//!
+//! "In general, we expect the performance to deteriorate as the number
+//! of partitions becomes too large, but the limitation on DRAM size
+//! prevented us from testing such scenarios." (paper §4)
+//!
+//! We sweep ResNet-50 to 32 and 64 partitions: gains flatten as the
+//! per-partition cache share shrinks (weight passes grow) and the DRAM
+//! wall lands at n=64 — the same wall the authors hit.
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::error::Error;
+use trafficshape::model::resnet50;
+use trafficshape::shaping::PartitionExperiment;
+use trafficshape::util::table::Table;
+
+fn main() {
+    let accel = AcceleratorConfig::knl_7210();
+    let graph = resnet50();
+    let mut b = Bencher::from_env();
+    let baseline = PartitionExperiment::new(&accel, &graph)
+        .steady_batches(5)
+        .run_baseline()
+        .unwrap();
+
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let mut outcome = None;
+        b.bench(format!("overpartition/{n}p"), || {
+            outcome = Some(
+                PartitionExperiment::new(&accel, &graph)
+                    .partitions(n)
+                    .steady_batches(5)
+                    .run_against(&baseline),
+            );
+        });
+        rows.push((n, outcome.unwrap()));
+    }
+
+    print!("{}", b.report("Ablation — over-partitioning (ResNet-50)"));
+    let mut t = Table::new(vec!["n", "rel perf", "σ reduction", "note"]).left_first();
+    for (n, r) in rows {
+        match r {
+            Ok(r) => t.row(vec![
+                n.to_string(),
+                format!("{:+.1}%", (r.relative_performance - 1.0) * 100.0),
+                format!("{:+.1}%", r.std_reduction * 100.0),
+                String::new(),
+            ]),
+            Err(Error::InfeasiblePartitioning(_)) => t.row(vec![
+                n.to_string(),
+                "-".into(),
+                "-".into(),
+                "DRAM wall (as in the paper)".into(),
+            ]),
+            Err(e) => panic!("{e}"),
+        };
+    }
+    print!("{}", t.render());
+}

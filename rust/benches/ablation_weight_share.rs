@@ -1,0 +1,77 @@
+//! Ablation: weight-share sensitivity — scale the weight-traffic
+//! component and find where partitioning stops paying.
+//!
+//! The paper's Fig 2 argument is that modern CNNs' weight share is small
+//! enough for the shaping gain to win. Cranking the weight multiplier
+//! emulates older, weight-heavy networks and should erase (eventually
+//! invert) the gain.
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::resnet50;
+use trafficshape::reuse::PhaseCompiler;
+use trafficshape::shaping::{PartitionPlan, StaggerPolicy};
+use trafficshape::sim::{SimEngine, Workload};
+use trafficshape::util::table::Table;
+
+/// Run a (scaled) sweep point: returns throughput relative to sync.
+fn relative_perf(accel: &AcceleratorConfig, scale: f64, n: usize) -> f64 {
+    let graph = resnet50();
+    let repeats = 5;
+    let engine = SimEngine::new(accel);
+
+    let run = |parts: usize, policy: StaggerPolicy| -> f64 {
+        let plan = PartitionPlan::new(accel, parts).unwrap();
+        let compiler = PhaseCompiler::new(accel, plan.cores_per_partition, plan.batch_per_partition)
+            .with_weight_scale(scale);
+        let phases = compiler.compile(&graph);
+        let workloads: Vec<Workload> = (0..parts)
+            .map(|i| {
+                let mut w = Workload::new(
+                    format!("p{i}"),
+                    plan.cores_per_partition,
+                    phases.clone(),
+                    repeats,
+                );
+                if matches!(policy, StaggerPolicy::UniformPhase) {
+                    w = w.with_start_phase(i * phases.len() / parts);
+                }
+                w
+            })
+            .collect();
+        engine.run(&workloads).unwrap().makespan.0
+    };
+
+    let sync = run(1, StaggerPolicy::None);
+    let shaped = run(n, StaggerPolicy::UniformPhase);
+    sync / shaped
+}
+
+fn main() {
+    let accel = AcceleratorConfig::knl_7210();
+    let mut b = Bencher::from_env();
+    let scales = [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+    let mut rows = Vec::new();
+    for &s in &scales {
+        let mut last = 0.0;
+        b.bench(format!("weight_scale/{s}"), || {
+            last = relative_perf(&accel, s, 4);
+        });
+        rows.push((s, last));
+    }
+    print!("{}", b.report("Ablation — weight-share sensitivity (ResNet-50, 4 partitions)"));
+    let mut t = Table::new(vec!["weight scale", "rel perf vs sync"]).left_first();
+    for (s, g) in &rows {
+        t.row(vec![format!("×{s}"), format!("{:+.1}%", (g - 1.0) * 100.0)]);
+    }
+    print!("{}", t.render());
+    let first = rows.first().unwrap().1;
+    let lastr = rows.last().unwrap().1;
+    println!(
+        "gain at ×{}: {:+.1}%  → gain at ×{}: {:+.1}%  (crossover where sign flips)",
+        scales[0],
+        (first - 1.0) * 100.0,
+        scales[scales.len() - 1],
+        (lastr - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,42 @@
+//! Bench: end-to-end real-compute throughput via the PJRT coordinator
+//! (needs `make artifacts`). Compares partition counts on real numerics.
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::coordinator::{Coordinator, CoordinatorConfig};
+use trafficshape::runtime::find_artifact_dir;
+use trafficshape::util::table::Table;
+
+fn main() {
+    let Some(dir) = find_artifact_dir() else {
+        eprintln!("skipping e2e bench: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let mut b = Bencher::new(0, 2);
+    let mut rows = Vec::new();
+    for parts in [1usize, 2, 4] {
+        let mut cfg = CoordinatorConfig::new(dir.clone());
+        cfg.partitions = parts;
+        cfg.total_batches = 8;
+        cfg.micro_batch = 8;
+        cfg.self_check = false; // checked once by integration tests
+        let coordinator = Coordinator::new(cfg).unwrap();
+        let mut last = None;
+        b.bench_throughput(format!("e2e/{parts}p"), 64.0, "img/s", || {
+            last = Some(coordinator.run().unwrap());
+        });
+        rows.push((parts, last.unwrap()));
+    }
+    print!("{}", b.report("E2E — real-compute coordinator throughput (TinyCNN)"));
+    let mut t = Table::new(vec!["partitions", "img/s", "traffic MB", "BW cov"]).left_first();
+    for (p, r) in &rows {
+        t.row(vec![
+            p.to_string(),
+            format!("{:.1}", r.throughput_ips),
+            format!("{:.1}", r.total_traffic_bytes / 1e6),
+            format!("{:.3}", r.bw.cov()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("note: this host has 1 CPU — partition counts cannot speed up wall-clock;");
+    println!("the e2e bench demonstrates composition + traffic metering, not scaling.");
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig 1 (bandwidth fluctuation trace, sync ResNet-50)
+//! and time the simulation.
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::ExperimentConfig;
+use trafficshape::experiments::run_fig1;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let mut b = Bencher::from_env();
+    let mut last = None;
+    b.bench("fig1/sync_trace", || {
+        last = Some(run_fig1(&cfg).unwrap());
+    });
+    print!("{}", b.report("Fig 1 — bandwidth fluctuation (sync ResNet-50)"));
+    let r = last.unwrap();
+    println!(
+        "sampled BW: mean {:.1} GB/s σ {:.1} min {:.1} max {:.1} (peak {:.0}); cov {:.3}",
+        r.summary.mean, r.summary.std, r.summary.min, r.summary.max, r.peak_gbps,
+        r.summary.cov()
+    );
+}

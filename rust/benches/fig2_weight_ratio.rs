@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 2 (weight-traffic share per ILSVRC winner).
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::ExperimentConfig;
+use trafficshape::experiments::run_fig2;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let mut b = Bencher::from_env();
+    let mut last = None;
+    b.bench("fig2/weight_ratio", || {
+        last = Some(run_fig2(&cfg).unwrap());
+    });
+    print!("{}", b.report("Fig 2 — weight share of conv+FC traffic"));
+    print!("{}", last.unwrap().render());
+}

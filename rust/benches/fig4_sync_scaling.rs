@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 4 (sync scaling of BW mean/σ with core count).
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::ExperimentConfig;
+use trafficshape::experiments::run_fig4;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.steady_batches = 4;
+    let mut b = Bencher::from_env();
+    let mut last = None;
+    b.bench("fig4/sync_scaling", || {
+        last = Some(run_fig4(&cfg).unwrap());
+    });
+    print!("{}", b.report("Fig 4 — sync baseline scaling"));
+    print!("{}", last.unwrap().render());
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig 5 — the paper's headline partition sweep across
+//! VGG-16, GoogLeNet and ResNet-50, with paper-vs-measured best gains.
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::ExperimentConfig;
+use trafficshape::experiments::run_fig5;
+use trafficshape::util::table::Table;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let mut b = Bencher::from_env();
+    let mut last = None;
+    b.bench("fig5/partition_sweep", || {
+        last = Some(run_fig5(&cfg).unwrap());
+    });
+    print!("{}", b.report("Fig 5 — partition sweep (3 models × {2,4,8,16})"));
+    let r = last.unwrap();
+    print!("{}", r.render());
+
+    // Paper-vs-measured summary (the quoted best gains).
+    let paper = [("vgg16", 3.9), ("googlenet", 11.1), ("resnet50", 8.0)];
+    let mut t = Table::new(vec!["model", "paper best gain", "measured best gain"]).left_first();
+    for (m, p) in paper {
+        let got = r.best_gain(m).map(|g| (g - 1.0) * 100.0).unwrap_or(f64::NAN);
+        t.row(vec![m.to_string(), format!("+{p:.1}%"), format!("{got:+.1}%")]);
+    }
+    print!("{}", t.title("paper vs measured").render());
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Fig 6 (traces at 1/4/16 partitions, ResNet-50).
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::ExperimentConfig;
+use trafficshape::experiments::run_fig6;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let mut b = Bencher::from_env();
+    let mut last = None;
+    b.bench("fig6/traces", || {
+        last = Some(run_fig6(&cfg).unwrap());
+    });
+    print!("{}", b.report("Fig 6 — BW traces at 1/4/16 partitions"));
+    let r = last.unwrap();
+    for (n, s) in r.configs.iter().zip(&r.summaries) {
+        println!(
+            "{n:>3} partition(s): mean {:.1} GB/s  σ {:.1}  cov {:.3}",
+            s.mean,
+            s.std,
+            s.cov()
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Generalization: the paper claims (§3) "similar observations and
+//! solutions can be applied to other accelerator types supporting
+//! concurrent execution of multiple contexts (e.g., NVIDIA Volta)".
+//! We re-run the partition sweep on a Volta-class preset (80 SMs,
+//! 14 SP-TFLOPS, HBM2 @ 900 GB/s) — partitioning must still win.
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::resnet50;
+use trafficshape::shaping::PartitionExperiment;
+use trafficshape::util::table::Table;
+
+fn main() {
+    let accel = AcceleratorConfig::volta_like();
+    let graph = resnet50();
+    let mut b = Bencher::from_env();
+
+    let baseline = PartitionExperiment::new(&accel, &graph)
+        .steady_batches(5)
+        .run_baseline()
+        .unwrap();
+
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16] {
+        let mut last = None;
+        b.bench(format!("volta/{n}p"), || {
+            last = Some(
+                PartitionExperiment::new(&accel, &graph)
+                    .partitions(n)
+                    .steady_batches(5)
+                    .run_against(&baseline)
+                    .unwrap(),
+            );
+        });
+        rows.push((n, last.unwrap()));
+    }
+
+    print!("{}", b.report("Generalization — ResNet-50 on a Volta-class device"));
+    let mut t = Table::new(vec!["n", "rel perf", "σ reduction", "avg BW gain"]);
+    for (n, r) in &rows {
+        t.row(vec![
+            n.to_string(),
+            format!("{:+.1}%", (r.relative_performance - 1.0) * 100.0),
+            format!("{:+.1}%", r.std_reduction * 100.0),
+            format!("{:+.1}%", r.avg_bw_increase * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    let any_gain = rows.iter().any(|(_, r)| r.relative_performance > 1.0);
+    println!(
+        "partitioning {} on the Volta-class preset (paper §3 prediction)",
+        if any_gain { "still wins" } else { "does NOT win" }
+    );
+}

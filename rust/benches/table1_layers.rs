@@ -1,0 +1,16 @@
+//! Bench: regenerate Table 1 (per-layer BW and achieved FLOPS).
+
+use trafficshape::bench_support::Bencher;
+use trafficshape::config::ExperimentConfig;
+use trafficshape::experiments::run_table1;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let mut b = Bencher::from_env();
+    let mut last = None;
+    b.bench("table1/per_layer", || {
+        last = Some(run_table1(&cfg).unwrap());
+    });
+    print!("{}", b.report("Table 1 — per-layer BW & FLOPS"));
+    print!("{}", last.unwrap().render());
+}

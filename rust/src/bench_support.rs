@@ -1,0 +1,164 @@
+//! Minimal benchmark harness (the offline crate set has no criterion).
+//!
+//! Provides warmup + timed iterations with mean/σ/min reporting, plus a
+//! tiny runner so `cargo bench` targets (all `harness = false`) share
+//! consistent output. Results print as a table and can be dumped as CSV
+//! for EXPERIMENTS.md.
+
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+use std::time::Instant;
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub time: Summary,
+    /// Optional throughput label (e.g. images/s) computed by the caller.
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.time.mean * 1e3
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 1, iters: 5, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        assert!(iters > 0);
+        Self { warmup_iters, iters, results: Vec::new() }
+    }
+
+    /// Honour `TRAFFICSHAPE_BENCH_FAST=1` for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("TRAFFICSHAPE_BENCH_FAST").as_deref() == Ok("1") {
+            Self::new(0, 2)
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f` and record under `name`. The closure's return value is
+    /// passed to a keep-alive sink so the work can't be optimized away.
+    pub fn bench<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.into(),
+            time: Summary::of(&samples),
+            throughput: None,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Like [`Self::bench`] but annotates items/second throughput.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: impl Into<String>,
+        items: f64,
+        unit: &'static str,
+        f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench(name, f);
+        let last = self.results.last_mut().unwrap();
+        last.throughput = Some((items / last.time.mean, unit));
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the standard report table.
+    pub fn report(&self, title: &str) -> String {
+        let mut t = Table::new(vec!["benchmark", "mean", "σ", "min", "throughput"])
+            .title(title)
+            .left_first();
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                format_secs(r.time.mean),
+                format_secs(r.time.std),
+                format_secs(r.time.min),
+                match r.throughput {
+                    Some((v, unit)) => format!("{v:.1} {unit}"),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t.render()
+    }
+}
+
+fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        let r = &b.results()[0];
+        assert_eq!(r.time.count, 3);
+        assert!(r.time.mean > 0.0);
+        let report = b.report("test");
+        assert!(report.contains("spin"));
+        assert!(report.contains("mean"));
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bencher::new(0, 2);
+        b.bench_throughput("t", 100.0, "img/s", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        let (v, unit) = b.results()[0].throughput.unwrap();
+        assert!(v > 0.0 && v < 200_000.0);
+        assert_eq!(unit, "img/s");
+    }
+
+    #[test]
+    fn fast_env_reduces_iters() {
+        std::env::set_var("TRAFFICSHAPE_BENCH_FAST", "1");
+        let b = Bencher::from_env();
+        assert_eq!(b.iters, 2);
+        std::env::remove_var("TRAFFICSHAPE_BENCH_FAST");
+    }
+}

@@ -1,0 +1,333 @@
+//! Hand-rolled command-line parsing (no `clap` in the offline crate set).
+//!
+//! Supports the subset the `trafficshape` binary and the examples need:
+//! subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! repeated flags, positional arguments, and auto-generated `--help`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None → boolean switch; Some(meta) → takes a value shown as `<meta>`.
+    pub value: Option<&'static str>,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a (sub)command: flags plus positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, flags: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, value: None, default: None });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        meta: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(FlagSpec { name, help, value: Some(meta), default });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.flags.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.positionals.is_empty() {
+            s.push_str("\n\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.flags.is_empty() {
+            s.push_str("\n\nOPTIONS:\n");
+            for f in &self.flags {
+                let left = match f.value {
+                    Some(meta) => format!("--{} <{}>", f.name, meta),
+                    None => format!("--{}", f.name),
+                };
+                let def = match f.default {
+                    Some(d) => format!(" [default: {d}]"),
+                    None => String::new(),
+                };
+                s.push_str(&format!("  {left:<28} {}{def}\n", f.help));
+            }
+        }
+        s
+    }
+
+    /// Parse raw args (without argv[0]) against this spec.
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut switches: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positionals = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::Usage(self.usage()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| Error::Usage(format!("unknown flag --{name}\n\n{}", self.usage())))?;
+                match spec.value {
+                    None => {
+                        if inline.is_some() {
+                            return Err(Error::Usage(format!("--{name} takes no value")));
+                        }
+                        switches.insert(name, true);
+                    }
+                    Some(_) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                args.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| Error::Usage(format!("--{name} needs a value")))?
+                            }
+                        };
+                        values.entry(name).or_default().push(v);
+                    }
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(Error::Usage(format!(
+                "unexpected argument '{}'\n\n{}",
+                positionals[self.positionals.len()],
+                self.usage()
+            )));
+        }
+        // Fill defaults.
+        for f in &self.flags {
+            if let (Some(_), Some(d)) = (f.value, f.default) {
+                values.entry(f.name.to_string()).or_insert_with(|| vec![d.to_string()]);
+            }
+        }
+        Ok(Matches { values, switches, positionals })
+    }
+}
+
+/// Parsed argument values.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    values: BTreeMap<String, Vec<String>>,
+    switches: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| Error::Usage(format!("missing required --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|s| s.parse::<usize>().map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{s}'"))))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|s| s.parse::<f64>().map_err(|_| Error::Usage(format!("--{name} expects a number, got '{s}'"))))
+            .transpose()
+    }
+
+    /// Parse a comma-separated list like `1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => {
+                let mut out = Vec::new();
+                for piece in s.split(',') {
+                    let piece = piece.trim();
+                    if piece.is_empty() {
+                        continue;
+                    }
+                    out.push(piece.parse::<usize>().map_err(|_| {
+                        Error::Usage(format!("--{name} expects comma-separated integers, got '{piece}'"))
+                    })?);
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+
+    pub fn get_str_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name).map(|s| {
+            s.split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect()
+        })
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+/// Top-level multi-command app.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<COMMAND> --help' for command options.\n");
+        s
+    }
+
+    /// Split argv into (command, matches).
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Matches)> {
+        let cmd_name = argv
+            .first()
+            .ok_or_else(|| Error::Usage(self.usage()))?;
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(Error::Usage(self.usage()));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| Error::Usage(format!("unknown command '{cmd_name}'\n\n{}", self.usage())))?;
+        let matches = spec.parse(&argv[1..])?;
+        Ok((cmd_name.clone(), matches))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("exp", "run an experiment")
+            .opt("partitions", "LIST", Some("1,2,4"), "partition counts")
+            .opt("model", "NAME", None, "model name")
+            .opt("seed", "N", Some("42"), "rng seed")
+            .switch("verbose", "chatty output")
+            .positional("figure", "which figure to run")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_values_positionals() {
+        let m = spec()
+            .parse(&args(&["fig5", "--model", "resnet50", "--verbose", "--partitions=1,2,8"]))
+            .unwrap();
+        assert_eq!(m.positional(0), Some("fig5"));
+        assert_eq!(m.get("model"), Some("resnet50"));
+        assert!(m.flag("verbose"));
+        assert_eq!(m.get_usize_list("partitions").unwrap().unwrap(), vec![1, 2, 8]);
+        assert_eq!(m.get_usize("seed").unwrap(), Some(42)); // default applied
+    }
+
+    #[test]
+    fn unknown_flag_is_usage_error() {
+        let e = spec().parse(&args(&["--bogus"])).unwrap_err();
+        assert!(matches!(e, Error::Usage(_)));
+        assert!(e.to_string().contains("--bogus"));
+    }
+
+    #[test]
+    fn missing_value_is_usage_error() {
+        let e = spec().parse(&args(&["--model"])).unwrap_err();
+        assert!(e.to_string().contains("needs a value"));
+    }
+
+    #[test]
+    fn help_produces_usage() {
+        let e = spec().parse(&args(&["--help"])).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("OPTIONS"));
+        assert!(msg.contains("--partitions"));
+        assert!(msg.contains("[default: 1,2,4]"));
+    }
+
+    #[test]
+    fn bad_numbers_are_diagnosed() {
+        // Parsing succeeds (values are strings); typed access diagnoses.
+        let m = spec().parse(&args(&["--seed", "abc"])).unwrap();
+        let e = m.get_usize("seed").unwrap_err();
+        assert!(e.to_string().contains("integer"));
+    }
+
+    #[test]
+    fn too_many_positionals_rejected() {
+        let e = spec().parse(&args(&["fig5", "extra"])).unwrap_err();
+        assert!(e.to_string().contains("unexpected argument"));
+    }
+
+    #[test]
+    fn app_dispatches_subcommands() {
+        let app = App {
+            name: "trafficshape",
+            about: "traffic shaping repro",
+            commands: vec![spec(), CommandSpec::new("list", "list experiments")],
+        };
+        let (cmd, m) = app.parse(&args(&["exp", "fig1"])).unwrap();
+        assert_eq!(cmd, "exp");
+        assert_eq!(m.positional(0), Some("fig1"));
+        assert!(app.parse(&args(&["nope"])).is_err());
+        assert!(app.parse(&args(&[])).is_err());
+    }
+}

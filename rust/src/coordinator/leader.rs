@@ -1,0 +1,183 @@
+//! The leader: dispatches jobs to partition workers and aggregates the
+//! metered traffic into shaping statistics.
+
+use super::metrics::TrafficMeter;
+use super::worker::{BatchJob, BatchResult, PartitionWorker};
+use crate::error::{Error, Result};
+use crate::runtime::Manifest;
+use crate::util::rng::Xoshiro256StarStar;
+use crate::util::stats::{StepSeries, Summary};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifact_dir: PathBuf,
+    /// Number of partitions (worker threads).
+    pub partitions: usize,
+    /// Micro-batch size (must exist in the manifest's `batches`).
+    pub micro_batch: usize,
+    /// Total micro-batches to process across all partitions.
+    pub total_batches: usize,
+    /// Verify every compiled artifact against its manifest check vector.
+    pub self_check: bool,
+    /// Seed for synthetic input images.
+    pub seed: u64,
+    /// Samples for the bandwidth series statistics.
+    pub trace_samples: usize,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            artifact_dir: artifact_dir.into(),
+            partitions: 2,
+            micro_batch: 8,
+            total_batches: 16,
+            self_check: true,
+            seed: 42,
+            trace_samples: 64,
+        }
+    }
+}
+
+/// Aggregated result of a coordinator run.
+#[derive(Debug, Clone)]
+pub struct CoordinatorReport {
+    pub partitions: usize,
+    pub images: usize,
+    pub wall_seconds: f64,
+    pub throughput_ips: f64,
+    /// Metered-traffic bandwidth summary (GB/s over sampled series).
+    pub bw: Summary,
+    pub total_traffic_bytes: f64,
+    /// Per-worker processed job counts.
+    pub jobs_per_worker: Vec<usize>,
+    /// Checksum over all logits (regression guard: runs with the same
+    /// seed must reproduce it exactly).
+    pub logits_checksum: f64,
+}
+
+/// The leader/worker coordinator.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    manifest: Manifest,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Result<Self> {
+        let manifest = Manifest::load(&cfg.artifact_dir)?;
+        if !manifest.batches.contains(&cfg.micro_batch) {
+            return Err(Error::InvalidConfig(format!(
+                "micro_batch {} not in manifest batches {:?}",
+                cfg.micro_batch, manifest.batches
+            )));
+        }
+        if cfg.partitions == 0 || cfg.total_batches == 0 {
+            return Err(Error::InvalidConfig("partitions and total_batches must be > 0".into()));
+        }
+        Ok(Self { cfg, manifest })
+    }
+
+    /// Deterministic synthetic input batch.
+    fn make_input(rng: &mut Xoshiro256StarStar, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect()
+    }
+
+    /// Run the full workload; blocks until all jobs complete.
+    pub fn run(&self) -> Result<CoordinatorReport> {
+        let n = self.cfg.partitions;
+        let origin = Instant::now();
+
+        // Pre-generate all job inputs (leader-side, deterministic).
+        let stage0 = self.manifest.stage(&self.manifest.stage_order[0], self.cfg.micro_batch)?;
+        let input_len = stage0.input_elems();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(self.cfg.seed);
+        let jobs: Vec<BatchJob> = (0..self.cfg.total_batches)
+            .map(|id| BatchJob { id, input: Self::make_input(&mut rng, input_len) })
+            .collect();
+
+        // Round-robin static assignment (each partition processes its own
+        // stream, like the paper's independent instances).
+        let mut queues: Vec<Vec<BatchJob>> = vec![Vec::new(); n];
+        for (i, job) in jobs.into_iter().enumerate() {
+            queues[i % n].push(job);
+        }
+
+        let (tx, rx) = mpsc::channel::<Result<BatchResult>>();
+        let mut handles = Vec::new();
+        for (idx, queue) in queues.into_iter().enumerate() {
+            let tx = tx.clone();
+            let manifest = self.manifest.clone();
+            let micro_batch = self.cfg.micro_batch;
+            let self_check = self.cfg.self_check;
+            handles.push(std::thread::spawn(move || -> Result<TrafficMeter> {
+                let mut worker =
+                    PartitionWorker::new(idx, &manifest, micro_batch, origin, self_check)?;
+                for job in queue {
+                    let result = worker.process(job);
+                    let failed = result.is_err();
+                    tx.send(result).map_err(|_| {
+                        Error::Coordinator("leader hung up".into())
+                    })?;
+                    if failed {
+                        break;
+                    }
+                }
+                Ok(worker.into_meter())
+            }));
+        }
+        drop(tx);
+
+        // Collect results.
+        let mut results: Vec<BatchResult> = Vec::with_capacity(self.cfg.total_batches);
+        for r in rx {
+            results.push(r?);
+        }
+
+        // Join workers, collect meters.
+        let mut meters = Vec::with_capacity(n);
+        for h in handles {
+            let meter = h
+                .join()
+                .map_err(|_| Error::Coordinator("worker panicked".into()))??;
+            meters.push(meter);
+        }
+        let wall = origin.elapsed().as_secs_f64();
+
+        if results.len() != self.cfg.total_batches {
+            return Err(Error::Coordinator(format!(
+                "lost jobs: {} of {}",
+                results.len(),
+                self.cfg.total_batches
+            )));
+        }
+
+        // Aggregate statistics.
+        let merged: StepSeries = TrafficMeter::merge(&meters, wall);
+        let gbps: Vec<f64> = merged
+            .resample(self.cfg.trace_samples)
+            .into_iter()
+            .map(|b| b / 1e9)
+            .collect();
+        let mut jobs_per_worker = vec![0usize; n];
+        let mut checksum = 0.0f64;
+        for r in &results {
+            jobs_per_worker[r.worker] += 1;
+            checksum += r.logits.iter().map(|&v| v as f64).sum::<f64>();
+        }
+        let images = self.cfg.total_batches * self.cfg.micro_batch;
+        Ok(CoordinatorReport {
+            partitions: n,
+            images,
+            wall_seconds: wall,
+            throughput_ips: images as f64 / wall,
+            bw: Summary::of(&gbps),
+            total_traffic_bytes: meters.iter().map(|m| m.total_bytes()).sum(),
+            jobs_per_worker,
+            logits_checksum: checksum,
+        })
+    }
+}

@@ -1,0 +1,123 @@
+//! Live traffic metering for the real-execution path.
+
+use crate::util::stats::StepSeries;
+use std::time::Instant;
+
+/// One metered stage execution: wall-clock interval plus bytes moved
+/// (analytic per-stage byte count from the manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficEvent {
+    pub t0: f64,
+    pub t1: f64,
+    pub bytes: f64,
+}
+
+/// Per-worker traffic recorder. Workers record locally (no contention);
+/// the leader merges the meters after the run.
+#[derive(Debug)]
+pub struct TrafficMeter {
+    origin: Instant,
+    events: Vec<TrafficEvent>,
+}
+
+impl TrafficMeter {
+    /// `origin` is shared across all workers so timelines align.
+    pub fn new(origin: Instant) -> Self {
+        Self { origin, events: Vec::new() }
+    }
+
+    /// Current time on the shared clock.
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    /// Record a stage execution that started at `t0` (from [`Self::now`])
+    /// and just finished, moving `bytes`.
+    pub fn record(&mut self, t0: f64, bytes: f64) {
+        let t1 = self.now();
+        self.events.push(TrafficEvent { t0, t1: t1.max(t0 + 1e-9), bytes });
+    }
+
+    pub fn events(&self) -> &[TrafficEvent] {
+        &self.events
+    }
+
+    /// Convert to a gap-filled bandwidth series over `[0, horizon]`.
+    pub fn to_series(&self, horizon: f64) -> StepSeries {
+        let mut s = StepSeries::new();
+        let mut cursor = 0.0;
+        for e in &self.events {
+            let (t0, t1) = (e.t0.max(cursor), e.t1.min(horizon).max(e.t0));
+            if t0 > cursor {
+                s.push(cursor, t0, 0.0);
+            }
+            if t1 > t0 {
+                s.push(t0, t1, e.bytes / (e.t1 - e.t0));
+                cursor = t1;
+            }
+        }
+        if cursor < horizon {
+            s.push(cursor, horizon, 0.0);
+        }
+        s
+    }
+
+    /// Total bytes recorded.
+    pub fn total_bytes(&self) -> f64 {
+        self.events.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Merge several meters into the aggregate bandwidth series the
+    /// "memory controller" of this host saw.
+    pub fn merge(meters: &[TrafficMeter], horizon: f64) -> StepSeries {
+        let series: Vec<StepSeries> = meters.iter().map(|m| m.to_series(horizon)).collect();
+        let refs: Vec<&StepSeries> = series.iter().collect();
+        StepSeries::sum(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meter_with(events: &[(f64, f64, f64)]) -> TrafficMeter {
+        let mut m = TrafficMeter::new(Instant::now());
+        for &(t0, t1, b) in events {
+            m.events.push(TrafficEvent { t0, t1, bytes: b });
+        }
+        m
+    }
+
+    #[test]
+    fn series_fills_gaps_and_conserves_bytes() {
+        let m = meter_with(&[(0.1, 0.2, 100.0), (0.5, 1.0, 50.0)]);
+        let s = m.to_series(1.5);
+        assert!((s.integral() - 150.0).abs() < 1e-9);
+        assert_eq!(s.start(), 0.0);
+        assert_eq!(s.end(), 1.5);
+        assert_eq!(s.at(0.05), 0.0);
+        assert!((s.at(0.15) - 1000.0).abs() < 1e-9);
+        assert_eq!(s.at(1.2), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_workers() {
+        let a = meter_with(&[(0.0, 1.0, 100.0)]);
+        let b = meter_with(&[(0.5, 1.5, 100.0)]);
+        let merged = TrafficMeter::merge(&[a, b], 2.0);
+        assert!((merged.integral() - 200.0).abs() < 1e-9);
+        assert!((merged.at(0.75) - 200.0).abs() < 1e-9); // overlap region
+        assert!((merged.at(0.25) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_uses_wall_clock() {
+        let mut m = TrafficMeter::new(Instant::now());
+        let t0 = m.now();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.record(t0, 42.0);
+        let e = m.events()[0];
+        assert!(e.t1 > e.t0);
+        assert!((m.total_bytes() - 42.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! Threaded partition coordinator — the real-execution twin of the
+//! simulator.
+//!
+//! A leader thread dispatches micro-batch jobs to `n` partition workers;
+//! each worker owns an independent [`crate::runtime::RuntimeClient`]
+//! (its own PJRT client and compiled executables — one framework
+//! instance per partition, exactly the paper's deployment) and runs the
+//! TinyCNN pipeline stage by stage, metering the memory traffic of every
+//! stage execution. The merged per-partition traffic series gives the
+//! same σ/mean bandwidth statistics the simulator produces, measured on
+//! real numerics.
+
+mod leader;
+mod metrics;
+mod worker;
+
+pub use leader::{Coordinator, CoordinatorConfig, CoordinatorReport};
+pub use metrics::{TrafficEvent, TrafficMeter};
+pub use worker::{BatchJob, BatchResult, PartitionWorker};

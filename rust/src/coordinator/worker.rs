@@ -1,0 +1,86 @@
+//! Partition worker: one synchronous core group's execution loop.
+
+use super::metrics::TrafficMeter;
+use crate::error::Result;
+use crate::runtime::{Manifest, RuntimeClient};
+use std::time::Instant;
+
+/// One unit of work: a micro-batch of images (flat NHWC f32).
+#[derive(Debug, Clone)]
+pub struct BatchJob {
+    pub id: usize,
+    pub input: Vec<f32>,
+}
+
+/// What a worker returns per job.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    pub id: usize,
+    pub worker: usize,
+    /// Output logits, flat [batch, classes].
+    pub logits: Vec<f32>,
+    /// Wall time of the pipeline pass in seconds.
+    pub elapsed: f64,
+}
+
+/// A partition worker: owns its own PJRT client and compiled pipeline
+/// (one independent instance per partition, like the paper's per-
+/// partition framework instances).
+pub struct PartitionWorker {
+    pub index: usize,
+    pub micro_batch: usize,
+    client: RuntimeClient,
+    meter: TrafficMeter,
+}
+
+impl PartitionWorker {
+    pub fn new(
+        index: usize,
+        manifest: &Manifest,
+        micro_batch: usize,
+        origin: Instant,
+        self_check: bool,
+    ) -> Result<Self> {
+        let client = RuntimeClient::new(manifest, micro_batch)?;
+        if self_check {
+            client.self_check_all()?;
+        }
+        Ok(Self { index, micro_batch, client, meter: TrafficMeter::new(origin) })
+    }
+
+    /// Execute one micro-batch through the full pipeline, metering every
+    /// stage's traffic.
+    pub fn process(&mut self, job: BatchJob) -> Result<BatchResult> {
+        let start = self.meter.now();
+        let order = self.client.manifest().stage_order.clone();
+        let mut x = job.input;
+        for name in &order {
+            let t0 = self.meter.now();
+            let stage = self.client.stage(name, self.micro_batch)?;
+            let bytes = stage.meta.traffic_bytes();
+            x = stage.run(&x)?;
+            self.meter.record(t0, bytes);
+        }
+        Ok(BatchResult {
+            id: job.id,
+            worker: self.index,
+            logits: x,
+            elapsed: self.meter.now() - start,
+        })
+    }
+
+    /// Surrender the traffic meter at end of run.
+    pub fn into_meter(self) -> TrafficMeter {
+        self.meter
+    }
+
+    /// Expected flat input length for one job.
+    pub fn input_len(&self) -> usize {
+        let first = &self.client.manifest().stage_order[0];
+        self.client
+            .manifest()
+            .stage(first, self.micro_batch)
+            .map(|s| s.input_elems())
+            .unwrap_or(0)
+    }
+}

@@ -1,0 +1,85 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes surfaced by the trafficshape library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A CNN graph failed validation (dangling edge, shape mismatch, ...).
+    #[error("invalid model graph: {0}")]
+    InvalidGraph(String),
+
+    /// Configuration rejected (out-of-range knob, unknown preset, ...).
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+
+    /// Requested partitioning is infeasible (cores not divisible, DRAM
+    /// capacity exceeded, ...). Mirrors the paper's "VGG-16 only up to
+    /// 8 partitions" DRAM constraint.
+    #[error("infeasible partitioning: {0}")]
+    InfeasiblePartitioning(String),
+
+    /// The simulator detected an internal inconsistency (conservation
+    /// violation, negative time, ...). Always a bug, never user error.
+    #[error("simulator invariant violated: {0}")]
+    SimInvariant(String),
+
+    /// JSON parse error from the hand-rolled parser in [`crate::util::json`].
+    #[error("json error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// CLI usage error; carries the message shown to the user.
+    #[error("usage: {0}")]
+    Usage(String),
+
+    /// Artifact store problems (missing manifest, hash mismatch, ...).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failures, wrapped from the `xla` crate.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Coordinator-level failures (worker panicked, channel closed, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper used by the JSON parser.
+    pub fn json(offset: usize, message: impl Into<String>) -> Self {
+        Error::Json { offset, message: message.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_prefixed() {
+        let e = Error::InvalidGraph("loop".into());
+        assert_eq!(e.to_string(), "invalid model graph: loop");
+        let e = Error::json(12, "bad token");
+        assert_eq!(e.to_string(), "json error at byte 12: bad token");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,96 @@
+//! Fig 2: weight share of total memory traffic (conv + FC layers) across
+//! the ILSVRC-winner lineage — the trend that makes partitioning's
+//! weight-replication cost affordable on modern CNNs.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::model::{alexnet, googlenet, resnet50, vgg16, Graph};
+use crate::reuse::TrafficModel;
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Fig2Result {
+    /// (model, year, weight ratio at the paper's batch).
+    pub rows: Vec<(String, u32, f64)>,
+}
+
+impl Fig2Result {
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec!["model", "ilsvrc_year", "weight_ratio"]);
+        for (m, y, r) in &self.rows {
+            w.row(vec![m.clone(), y.to_string(), crate::util::csv::format_float(*r)]);
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["model", "ILSVRC", "weight / total traffic"]).left_first();
+        for (m, y, r) in &self.rows {
+            t.row(vec![m.clone(), y.to_string(), format!("{:.1}%", r * 100.0)]);
+        }
+        t.title("Fig 2 — weight share of conv+FC memory traffic (batch = 64)")
+            .render()
+    }
+}
+
+fn weight_ratio(model: &TrafficModel, graph: &Graph, batch: usize) -> f64 {
+    // Conv + FC layers only, as in the paper's figure.
+    let mut weights = 0.0;
+    let mut total = 0.0;
+    for layer in graph.layers() {
+        if !layer.is_compute_dense() {
+            continue;
+        }
+        let t = model.layer_traffic(graph, layer, batch);
+        weights += t.weights.0;
+        total += t.total().0;
+    }
+    if total > 0.0 {
+        weights / total
+    } else {
+        0.0
+    }
+}
+
+pub fn run_fig2(cfg: &ExperimentConfig) -> Result<Fig2Result> {
+    let accel = &cfg.accelerator;
+    let model = TrafficModel::new(accel, accel.cores);
+    let batch = accel.cores;
+    let entries: [(Graph, u32); 4] = [
+        (alexnet(), 2012),
+        (vgg16(), 2014),
+        (googlenet(), 2014),
+        (resnet50(), 2015),
+    ];
+    let rows = entries
+        .into_iter()
+        .map(|(g, year)| {
+            let r = weight_ratio(&model, &g, batch);
+            (g.name.clone(), year, r)
+        })
+        .collect();
+    Ok(Fig2Result { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_declines_across_generations() {
+        let r = run_fig2(&ExperimentConfig::default()).unwrap();
+        assert_eq!(r.rows.len(), 4);
+        let get = |name: &str| r.rows.iter().find(|(m, _, _)| m == name).unwrap().2;
+        let alex = get("alexnet");
+        let vgg = get("vgg16");
+        let goog = get("googlenet");
+        let res = get("resnet50");
+        // Paper Fig 2: newer → lower weight share.
+        assert!(alex > vgg && vgg > res && res > goog, "{alex} {vgg} {res} {goog}");
+        for (_, _, ratio) in &r.rows {
+            assert!((0.0..=1.0).contains(ratio));
+        }
+        assert!(r.render().contains("alexnet"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Fig 4: synchronous-baseline scaling — average bandwidth per core and
+//! σ of total bandwidth as the active core count grows (batch = cores).
+//!
+//! Shows that scaling up the synchronous group makes the absolute
+//! bandwidth fluctuation grow until memory queueing depresses per-core
+//! usage — the paper's evidence that the bottleneck is real at 64 cores.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::model::resnet50;
+use crate::reuse::PhaseCompiler;
+use crate::sim::{SimEngine, Workload};
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Fig4Result {
+    /// (cores, avg GB/s per core, σ of total GB/s, mean total GB/s).
+    pub rows: Vec<(usize, f64, f64, f64)>,
+}
+
+impl Fig4Result {
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec!["cores", "avg_gbps_per_core", "std_gbps", "mean_gbps"]);
+        for &(c, per, std, mean) in &self.rows {
+            w.row_f64(&[c as f64, per, std, mean]);
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let mut t =
+            Table::new(vec!["cores", "avg BW/core (GB/s)", "σ(BW) (GB/s)", "mean BW (GB/s)"]);
+        for &(c, per, std, mean) in &self.rows {
+            t.row(vec![
+                c.to_string(),
+                format!("{per:.2}"),
+                format!("{std:.1}"),
+                format!("{mean:.1}"),
+            ]);
+        }
+        t.title("Fig 4 — sync baseline scaling, ResNet-50").render()
+    }
+}
+
+pub fn run_fig4(cfg: &ExperimentConfig) -> Result<Fig4Result> {
+    let graph = resnet50();
+    let mut rows = Vec::new();
+    for shift in (0..4).rev() {
+        let cores = cfg.accelerator.cores >> shift; // 8, 16, 32, 64
+        if cores == 0 {
+            continue;
+        }
+        let compiler = PhaseCompiler::new(&cfg.accelerator, cores, cores);
+        let phases = compiler.compile(&graph);
+        let w = Workload::new(format!("sync{cores}"), cores, phases, cfg.steady_batches);
+        let outcome = SimEngine::new(&cfg.accelerator).run(&[w])?;
+        let s = outcome.trace.sampled_summary(cfg.trace_samples);
+        rows.push((cores, s.mean / cores as f64, s.std, s.mean));
+    }
+    Ok(Fig4Result { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn std_grows_and_per_core_avg_falls_with_cores() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.steady_batches = 3;
+        let r = run_fig4(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 4);
+        let first = r.rows.first().unwrap();
+        let last = r.rows.last().unwrap();
+        assert_eq!(first.0, 8);
+        assert_eq!(last.0, 64);
+        // Paper Fig 4: σ grows with core count...
+        assert!(last.2 > first.2, "σ: {} → {}", first.2, last.2);
+        // ...while average bandwidth per core decays (queueing).
+        assert!(last.1 < first.1, "BW/core: {} → {}", first.1, last.1);
+        assert!(r.render().contains("Fig 4"));
+    }
+}

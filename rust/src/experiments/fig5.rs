@@ -1,0 +1,207 @@
+//! Fig 5: the headline result — relative performance, σ(BW) and mean BW
+//! for 1..16 partitions across VGG-16, GoogLeNet, ResNet-50.
+//!
+//! Paper numbers at the best partition count:
+//!   VGG-16    +3.9% perf, −20.0% σ, +18.7% mean (capped at 8 by DRAM)
+//!   GoogLeNet +11.1%,     −37.6%,   +22.7%
+//!   ResNet-50 +8.0%,      −36.2%,   +15.2%
+
+use crate::config::ExperimentConfig;
+use crate::error::{Error, Result};
+use crate::model;
+use crate::shaping::PartitionExperiment;
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub model: String,
+    pub partitions: usize,
+    /// None when the point is DRAM-infeasible (paper: VGG-16 beyond 8).
+    pub relative_performance: Option<f64>,
+    pub std_reduction: Option<f64>,
+    pub avg_bw_increase: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig5Result {
+    pub rows: Vec<Fig5Row>,
+}
+
+impl Fig5Result {
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec![
+            "model",
+            "partitions",
+            "relative_performance",
+            "std_reduction",
+            "avg_bw_increase",
+        ]);
+        let f = |v: Option<f64>| match v {
+            Some(x) => crate::util::csv::format_float(x),
+            None => "dram_infeasible".to_string(),
+        };
+        for r in &self.rows {
+            w.row(vec![
+                r.model.clone(),
+                r.partitions.to_string(),
+                f(r.relative_performance),
+                f(r.std_reduction),
+                f(r.avg_bw_increase),
+            ]);
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["model", "n", "rel. perf", "σ reduction", "avg BW gain"])
+            .left_first();
+        for r in &self.rows {
+            let pct = |v: Option<f64>, plus: bool| match v {
+                Some(x) => {
+                    if plus {
+                        format!("{:+.1}%", (x - 1.0) * 100.0)
+                    } else {
+                        format!("{:+.1}%", x * 100.0)
+                    }
+                }
+                None => "DRAM".to_string(),
+            };
+            t.row(vec![
+                r.model.clone(),
+                r.partitions.to_string(),
+                pct(r.relative_performance, true),
+                pct(r.std_reduction, false),
+                pct(r.avg_bw_increase, false),
+            ]);
+        }
+        t.title("Fig 5 — partitioning sweep (relative to synchronous baseline)")
+            .render()
+    }
+
+    /// Best relative performance per model (the paper's quoted gains).
+    pub fn best_gain(&self, model: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter(|r| r.model == model)
+            .filter_map(|r| r.relative_performance)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+}
+
+pub fn run_fig5(cfg: &ExperimentConfig) -> Result<Fig5Result> {
+    run_fig5_for_models(cfg, &model::PAPER_MODELS)
+}
+
+pub fn run_fig5_for_models(cfg: &ExperimentConfig, models: &[&str]) -> Result<Fig5Result> {
+    let mut rows = Vec::new();
+    for &name in models {
+        let graph = model::by_name(name)?;
+        // The synchronous baseline is shared by every sweep point.
+        let baseline = PartitionExperiment::new(&cfg.accelerator, &graph)
+            .steady_batches(cfg.steady_batches)
+            .trace_samples(cfg.trace_samples)
+            .run_baseline()?;
+        for &n in &cfg.partitions {
+            if n == 1 {
+                continue; // the baseline itself
+            }
+            let exp = PartitionExperiment::new(&cfg.accelerator, &graph)
+                .partitions(n)
+                .steady_batches(cfg.steady_batches)
+                .trace_samples(cfg.trace_samples);
+            match exp.run_against(&baseline) {
+                Ok(report) => rows.push(Fig5Row {
+                    model: name.to_string(),
+                    partitions: n,
+                    relative_performance: Some(report.relative_performance),
+                    std_reduction: Some(report.std_reduction),
+                    avg_bw_increase: Some(report.avg_bw_increase),
+                }),
+                Err(Error::InfeasiblePartitioning(_)) => rows.push(Fig5Row {
+                    model: name.to_string(),
+                    partitions: n,
+                    relative_performance: None,
+                    std_reduction: None,
+                    avg_bw_increase: None,
+                }),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    Ok(Fig5Result { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.steady_batches = 3;
+        cfg.partitions = vec![1, 2, 4, 8, 16];
+        cfg
+    }
+
+    #[test]
+    fn reproduces_paper_shape() {
+        let r = run_fig5(&fast_cfg()).unwrap();
+        // 3 models × 4 partition counts.
+        assert_eq!(r.rows.len(), 12);
+
+        // All three models gain at their best point.
+        let v = r.best_gain("vgg16").unwrap();
+        let g = r.best_gain("googlenet").unwrap();
+        let s = r.best_gain("resnet50").unwrap();
+        assert!(v > 1.0, "vgg {v}");
+        assert!(g > 1.0, "googlenet {g}");
+        assert!(s > 1.0, "resnet {s}");
+        // Ordering: GoogLeNet gains most, VGG least.
+        assert!(g > v && s > v, "g={g} s={s} v={v}");
+
+        // VGG-16's 16-partition point is DRAM-infeasible.
+        let vgg16_16 = r
+            .rows
+            .iter()
+            .find(|row| row.model == "vgg16" && row.partitions == 16)
+            .unwrap();
+        assert!(vgg16_16.relative_performance.is_none());
+
+        // ResNet/GoogLeNet are feasible at 16.
+        assert!(r
+            .rows
+            .iter()
+            .find(|row| row.model == "resnet50" && row.partitions == 16)
+            .unwrap()
+            .relative_performance
+            .is_some());
+
+        // σ reduction is positive wherever feasible.
+        for row in &r.rows {
+            if let Some(sr) = row.std_reduction {
+                assert!(sr > 0.0, "{}@{} σ reduction {sr}", row.model, row.partitions);
+            }
+        }
+        assert!(r.render().contains("Fig 5"));
+    }
+
+    #[test]
+    fn biggest_jump_is_one_to_two() {
+        // Paper: "The performance improvement is most significant when
+        // partition size is increased from 1 (no partition) to 2."
+        let r = run_fig5_for_models(&fast_cfg(), &["resnet50"]).unwrap();
+        let perf = |n: usize| {
+            r.rows
+                .iter()
+                .find(|row| row.partitions == n)
+                .unwrap()
+                .relative_performance
+                .unwrap()
+        };
+        let jump12 = perf(2) - 1.0;
+        let jump24 = perf(4) - perf(2);
+        let jump48 = perf(8) - perf(4);
+        assert!(jump12 > jump24.max(jump48), "jumps: {jump12} {jump24} {jump48}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Fig 6: bandwidth-over-time traces for no partition, 4 partitions and
+//! 16 partitions (ResNet-50) — the visual of statistical traffic
+//! shaping: more partitions → visibly steadier utilization.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::model::resnet50;
+use crate::shaping::{PartitionExperiment, StaggerPolicy};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct Fig6Result {
+    /// Partition counts traced (1, 4, 16).
+    pub configs: Vec<usize>,
+    /// Sampled GB/s series, one per config (equal length).
+    pub traces: Vec<Vec<f64>>,
+    pub summaries: Vec<Summary>,
+    /// Lag-1 autocorrelation per config — the "statistical shuffling"
+    /// evidence: shaped traffic decorrelates.
+    pub lag1_autocorr: Vec<f64>,
+}
+
+impl Fig6Result {
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut cols = vec!["sample".to_string()];
+        cols.extend(self.configs.iter().map(|n| format!("gbps_{n}p")));
+        let mut w = CsvWriter::new(cols);
+        let len = self.traces.first().map(|t| t.len()).unwrap_or(0);
+        for i in 0..len {
+            let mut row = vec![i as f64];
+            for t in &self.traces {
+                row.push(t[i]);
+            }
+            w.row_f64(&row);
+        }
+        w
+    }
+}
+
+pub fn run_fig6(cfg: &ExperimentConfig) -> Result<Fig6Result> {
+    let graph = resnet50();
+    let configs = vec![1usize, 4, 16];
+    let mut traces = Vec::new();
+    let mut summaries = Vec::new();
+    let mut lag1 = Vec::new();
+    for &n in &configs {
+        let exp = PartitionExperiment::new(&cfg.accelerator, &graph)
+            .steady_batches(cfg.steady_batches)
+            .trace_samples(cfg.trace_samples);
+        let policy = if n == 1 { StaggerPolicy::None } else { StaggerPolicy::UniformPhase };
+        let outcome = exp.run_single(n, policy)?;
+        let gbps = outcome.trace.sampled_gbps(cfg.trace_samples);
+        summaries.push(Summary::of(&gbps));
+        lag1.push(crate::util::stats::autocorrelation(&gbps, 1));
+        traces.push(gbps);
+    }
+    Ok(Fig6Result { configs, traces, summaries, lag1_autocorr: lag1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_partitions_means_steadier_bandwidth() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.steady_batches = 3;
+        let r = run_fig6(&cfg).unwrap();
+        assert_eq!(r.configs, vec![1, 4, 16]);
+        // Statistical shuffling decorrelates the series at short lags.
+        assert!(
+            r.lag1_autocorr[2] < r.lag1_autocorr[0],
+            "lag-1 autocorr should drop: {:?}",
+            r.lag1_autocorr
+        );
+        let cov: Vec<f64> = r.summaries.iter().map(|s| s.cov()).collect();
+        // Paper Fig 6: no-P fluctuates severely; 16-P is relatively steady.
+        assert!(cov[1] < cov[0], "4P cov {} < sync cov {}", cov[1], cov[0]);
+        assert!(cov[2] < cov[0], "16P cov {} < sync cov {}", cov[2], cov[0]);
+        assert!(
+            cov[2] < 0.6 * cov[0],
+            "16 partitions should smooth substantially: {} vs {}",
+            cov[2],
+            cov[0]
+        );
+        let csv = r.to_csv().to_string();
+        assert!(csv.contains("gbps_16p"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation.
+//!
+//! Every driver consumes an [`crate::config::ExperimentConfig`], runs the
+//! simulator (or the traffic model), renders a paper-style ASCII table
+//! and returns the CSV series behind the figure. The CLI (`trafficshape
+//! exp <id>`) and the bench targets both go through these functions, so
+//! the numbers in EXPERIMENTS.md are regenerated from exactly one code
+//! path.
+
+mod fig1;
+mod fig2;
+mod fig4;
+mod fig5;
+mod fig6;
+mod runner;
+mod table1;
+
+pub use fig1::{run_fig1, Fig1Result};
+pub use fig2::{run_fig2, Fig2Result};
+pub use fig4::{run_fig4, Fig4Result};
+pub use fig5::{run_fig5, Fig5Result, Fig5Row};
+pub use fig6::{run_fig6, Fig6Result};
+pub use runner::{list_experiments, run_by_id, ExperimentOutput};
+pub use table1::{run_table1, Table1Result, TABLE1_LAYERS};

@@ -1,0 +1,172 @@
+//! Table 1: per-layer bandwidth and achieved FLOPS for six named
+//! ResNet-50 layers on the synchronous baseline.
+//!
+//! Paper values (KNL 7210, batch 64):
+//!
+//! | layer    | BW (GB/s) | FLOPS |
+//! |----------|-----------|-------|
+//! | Pooling  | 254       | 0.6T  |
+//! | Conv2_1a | 174       | 2.9T  |
+//! | Conv2_2a | 120       | 3.0T  |
+//! | Conv3_2b | 55        | 3.7T  |
+//! | Conv4_3a | 76        | 3.0T  |
+//! | Conv5_3b | 15        | 2.2T  |
+//!
+//! We report the solo-roofline estimate per phase: running alone on the
+//! whole machine, `t = max(t_compute, bytes/peak_bw)`; BW = bytes/t,
+//! FLOPS = flops/t. Absolute values differ from hardware counters; the
+//! *structure* (pool/1×1 convs bandwidth-hungry, late 3×3 convs compute-
+//! hungry) is the reproduction target.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::model::resnet50;
+use crate::reuse::PhaseCompiler;
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+
+/// (paper row name, our layer name, paper BW GB/s, paper TFLOPS).
+pub const TABLE1_LAYERS: [(&str, &str, f64, f64); 6] = [
+    ("Pooling", "pool1", 254.0, 0.6),
+    ("Conv2_1a", "conv2_a_1x1a", 174.0, 2.9),
+    ("Conv2_2a", "conv2_b_1x1a", 120.0, 3.0),
+    ("Conv3_2b", "conv3_b_3x3b", 55.0, 3.7),
+    ("Conv4_3a", "conv4_c_1x1a", 76.0, 3.0),
+    ("Conv5_3b", "conv5_c_3x3b", 15.0, 2.2),
+];
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub paper_name: String,
+    pub layer_name: String,
+    pub bw_gbps: f64,
+    pub tflops: f64,
+    pub paper_bw_gbps: f64,
+    pub paper_tflops: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1Result {
+    pub rows: Vec<Table1Row>,
+}
+
+impl Table1Result {
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec![
+            "layer",
+            "bw_gbps",
+            "tflops",
+            "paper_bw_gbps",
+            "paper_tflops",
+        ]);
+        for r in &self.rows {
+            w.row_labeled(
+                &r.paper_name,
+                &[r.bw_gbps, r.tflops, r.paper_bw_gbps, r.paper_tflops],
+            );
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "layer",
+            "BW (GB/s)",
+            "FLOPS",
+            "paper BW",
+            "paper FLOPS",
+        ])
+        .left_first();
+        for r in &self.rows {
+            t.row(vec![
+                r.paper_name.clone(),
+                format!("{:.0}", r.bw_gbps),
+                format!("{:.1}T", r.tflops),
+                format!("{:.0}", r.paper_bw_gbps),
+                format!("{:.1}T", r.paper_tflops),
+            ]);
+        }
+        t.title("Table 1 — ResNet-50 per-layer bandwidth & achieved FLOPS (sync, batch 64)")
+            .render()
+    }
+}
+
+pub fn run_table1(cfg: &ExperimentConfig) -> Result<Table1Result> {
+    let accel = &cfg.accelerator;
+    let graph = resnet50();
+    let compiler = PhaseCompiler::synchronous(accel);
+    let phases = compiler.compile(&graph);
+
+    let mut rows = Vec::new();
+    for (paper_name, ours, paper_bw, paper_tf) in TABLE1_LAYERS {
+        let phase = phases
+            .iter()
+            .find(|p| p.name == ours)
+            .unwrap_or_else(|| panic!("layer {ours} missing from ResNet-50"));
+        let tc = phase.compute_time(accel, accel.cores).0;
+        let tm = phase.bytes.0 / accel.mem_bw.0;
+        let t = tc.max(tm);
+        rows.push(Table1Row {
+            paper_name: paper_name.to_string(),
+            layer_name: ours.to_string(),
+            bw_gbps: phase.bytes.0 / t / 1e9,
+            tflops: phase.flops.0 / t / 1e12,
+            paper_bw_gbps: paper_bw,
+            paper_tflops: paper_tf,
+        });
+    }
+    Ok(Table1Result { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_matches_paper() {
+        let r = run_table1(&ExperimentConfig::default()).unwrap();
+        assert_eq!(r.rows.len(), 6);
+        let get = |name: &str| r.rows.iter().find(|x| x.paper_name == name).unwrap();
+
+        let pool = get("Pooling");
+        let c2 = get("Conv2_1a");
+        let c3 = get("Conv3_2b");
+        let c5 = get("Conv5_3b");
+
+        // Structural facts the paper's table demonstrates:
+        // 1. Early layers are bandwidth-hungry; conv5 is the quietest.
+        assert!(pool.bw_gbps > c3.bw_gbps && pool.bw_gbps > c5.bw_gbps);
+        assert!(c2.bw_gbps > c3.bw_gbps, "{} vs {}", c2.bw_gbps, c3.bw_gbps);
+        assert!(c5.bw_gbps < 60.0, "conv5 quiet: {}", c5.bw_gbps);
+        // 2. Pooling achieves trivially few FLOPS despite huge BW.
+        assert!(pool.tflops < 1.0);
+        // 3. Convs achieve TFLOPS-range compute.
+        for name in ["Conv2_1a", "Conv2_2a", "Conv3_2b", "Conv4_3a", "Conv5_3b"] {
+            let row = get(name);
+            assert!(
+                (1.0..4.5).contains(&row.tflops),
+                "{name}: {} TFLOPS",
+                row.tflops
+            );
+        }
+        // 4. The big 3×3 conv is the most compute-efficient of the set.
+        assert!(c3.tflops >= get("Conv2_1a").tflops * 0.9);
+    }
+
+    #[test]
+    fn bandwidth_in_paper_ballpark() {
+        // Within ~2× of the paper's counters for the BW column.
+        let r = run_table1(&ExperimentConfig::default()).unwrap();
+        for row in &r.rows {
+            let ratio = row.bw_gbps / row.paper_bw_gbps;
+            assert!(
+                (0.3..3.0).contains(&ratio),
+                "{}: {:.0} GB/s vs paper {:.0} (ratio {ratio:.2})",
+                row.paper_name,
+                row.bw_gbps,
+                row.paper_bw_gbps
+            );
+        }
+        assert!(r.render().contains("Table 1"));
+    }
+}

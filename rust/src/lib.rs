@@ -1,0 +1,76 @@
+//! # trafficshape
+//!
+//! Reproduction of *"Partitioning Compute Units in CNN Acceleration for
+//! Statistical Memory Traffic Shaping"* (Jung, Lee, Rhee, Ahn — IEEE
+//! Computer Architecture Letters 2018, DOI 10.1109/LCA.2017.2773055).
+//!
+//! The library models a manycore CNN accelerator (Intel KNL-class) whose
+//! compute cores are divided into **partitions**: cores inside a partition
+//! process a batch of images synchronously (maximising kernel-weight reuse),
+//! while different partitions run **asynchronously**, so their per-layer
+//! memory-traffic bursts statistically interleave — *statistical memory
+//! traffic shaping* — smoothing aggregate main-memory bandwidth demand.
+//!
+//! ## Layers
+//!
+//! * [`model`] — CNN layer-graph substrate with exact builders for
+//!   VGG-16, GoogLeNet, ResNet-50 (the paper's workloads) plus AlexNet
+//!   and a TinyCNN used by the real-compute path.
+//! * [`reuse`] — analytical loop-blocking / data-reuse model (after Yang
+//!   et al., the paper's reference [16]) that turns a layer into a
+//!   `(flops, bytes)` execution phase at a given on-chip capacity.
+//! * [`sim`] — fluid-flow discrete-event simulator of cores sharing one
+//!   main-memory bandwidth pool (the KNL + MCDRAM substitute substrate).
+//! * [`shaping`] — the paper's contribution: compute-unit partitioning,
+//!   asynchronous scheduling policies and traffic-shaping analysis.
+//! * [`runtime`] / [`coordinator`] — the real-execution path: a PJRT CPU
+//!   client loads AOT-compiled HLO artifacts (JAX + Pallas, build-time
+//!   Python) and partition worker threads run them with live traffic
+//!   metering. Python is never on the request path.
+//! * [`experiments`] — drivers that regenerate every figure and table in
+//!   the paper's evaluation section.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use trafficshape::prelude::*;
+//!
+//! let accel = AcceleratorConfig::knl_7210();
+//! let net = resnet50();
+//! let report = PartitionExperiment::new(&accel, &net)
+//!     .partitions(4)
+//!     .steady_batches(6)
+//!     .run()
+//!     .unwrap();
+//! println!("relative perf vs sync: {:.3}", report.relative_performance);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod model;
+pub mod reuse;
+pub mod runtime;
+pub mod shaping;
+pub mod sim;
+pub mod util;
+
+pub mod bench_support;
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::config::{AcceleratorConfig, ExperimentConfig};
+    pub use crate::error::{Error, Result};
+    pub use crate::model::{
+        alexnet, googlenet, resnet50, tiny_cnn, vgg16, Graph, Layer, LayerKind, TensorShape,
+    };
+    pub use crate::reuse::{BlockingOptimizer, LayerTraffic, Phase, PhaseCompiler};
+    pub use crate::shaping::{
+        PartitionExperiment, PartitionPlan, ShapingAnalysis, StaggerPolicy,
+    };
+    pub use crate::sim::{BandwidthTrace, SimEngine, SimOutcome, Workload};
+    pub use crate::util::stats::Summary;
+    pub use crate::util::units::{Bytes, Flops, GbPerS, Seconds};
+}

@@ -1,0 +1,282 @@
+//! `trafficshape` — CLI for the traffic-shaping reproduction.
+//!
+//! Commands:
+//!   list                      list reproducible experiments
+//!   exp <id|all>              run experiment drivers, write CSV/JSON
+//!   models                    print the model zoo inventory
+//!   sweep                     custom partition sweep
+//!   e2e                       real-compute coordinator run (PJRT)
+
+use std::process::ExitCode;
+use trafficshape::cli::{App, CommandSpec, Matches};
+use trafficshape::config::{AcceleratorConfig, ExperimentConfig};
+use trafficshape::coordinator::{Coordinator, CoordinatorConfig};
+use trafficshape::error::{Error, Result};
+use trafficshape::experiments::{list_experiments, run_by_id};
+use trafficshape::model;
+use trafficshape::runtime::find_artifact_dir;
+use trafficshape::shaping::PartitionExperiment;
+use trafficshape::util::table::Table;
+
+fn app() -> App {
+    App {
+        name: "trafficshape",
+        about: "statistical memory traffic shaping for CNN acceleration (Jung et al., IEEE CAL 2018)",
+        commands: vec![
+            CommandSpec::new("list", "list reproducible experiments"),
+            CommandSpec::new("exp", "run an experiment driver")
+                .positional("id", "experiment id (fig1/fig2/fig4/fig5/fig6/table1/all)")
+                .opt("out", "DIR", Some("out"), "output directory")
+                .opt("batches", "N", Some("6"), "steady-state batches per run")
+                .opt("samples", "N", Some("400"), "trace samples")
+                .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
+            CommandSpec::new("models", "print the model zoo inventory"),
+            CommandSpec::new("sweep", "custom partition sweep")
+                .opt("models", "LIST", Some("resnet50"), "comma-separated model names")
+                .opt("partitions", "LIST", Some("1,2,4,8,16"), "partition counts")
+                .opt("batches", "N", Some("6"), "steady-state batches")
+                .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
+            CommandSpec::new("tune", "auto-select the partition count for a model")
+                .opt("model", "NAME", Some("resnet50"), "model name")
+                .opt("accel", "NAME", Some("knl_7210"), "accelerator preset")
+                .switch("online", "use the O(log n) hill-climbing probe"),
+            CommandSpec::new("mixed", "co-schedule multiple models as asynchronous tenants")
+                .opt("tenants", "LIST", Some("vgg16:32,resnet50:32"), "model:cores pairs")
+                .opt("batches", "N", Some("4"), "steady-state batches per tenant")
+                .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
+            CommandSpec::new("e2e", "run the real-compute coordinator (needs `make artifacts`)")
+                .opt("partitions", "N", Some("2"), "worker partitions")
+                .opt("batches", "N", Some("16"), "total micro-batches")
+                .opt("micro-batch", "N", Some("8"), "images per micro-batch")
+                .opt("artifacts", "DIR", None, "artifact directory override")
+                .switch("no-self-check", "skip artifact self-checks"),
+        ],
+    }
+}
+
+fn experiment_config(m: &Matches) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(b) = m.get_usize("batches")? {
+        cfg.steady_batches = b;
+    }
+    if let Some(s) = m.get_usize("samples")? {
+        cfg.trace_samples = s;
+    }
+    if let Some(a) = m.get("accel") {
+        cfg.accelerator = AcceleratorConfig::preset(a)?;
+    }
+    if let Some(o) = m.get("out") {
+        cfg.out_dir = o.into();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_list() -> Result<()> {
+    let mut t = Table::new(vec!["id", "reproduces"]).left_first();
+    for (id, desc) in list_experiments() {
+        t.row(vec![id, desc]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_exp(m: &Matches) -> Result<()> {
+    let id = m.positional(0).unwrap_or("all").to_string();
+    let cfg = experiment_config(m)?;
+    let ids: Vec<&str> = if id == "all" {
+        list_experiments().iter().map(|(i, _)| *i).collect()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let out = run_by_id(id, &cfg)?;
+        println!("== {} ==", out.title);
+        print!("{}", out.rendered);
+        out.write_to(&cfg.out_dir)?;
+        println!("wrote {}/{}/*.csv\n", cfg.out_dir.display(), out.id);
+    }
+    Ok(())
+}
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new(vec!["model", "layers", "params (M)", "GFLOP/img", "weights (MB)"])
+        .left_first();
+    for name in ["alexnet", "vgg16", "vgg19", "googlenet", "resnet50", "resnet101", "resnet152", "tiny"] {
+        let g = model::by_name(name)?;
+        t.row(vec![
+            g.name.clone(),
+            g.len().to_string(),
+            format!("{:.2}", g.param_elems() as f64 / 1e6),
+            format!("{:.2}", g.flops_per_image() / 1e9),
+            format!("{:.1}", g.param_elems() as f64 * 4.0 / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_sweep(m: &Matches) -> Result<()> {
+    let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
+    let batches = m.get_usize("batches")?.unwrap_or(6);
+    let parts = m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4, 8, 16]);
+    let models = m
+        .get_str_list("models")
+        .unwrap_or_else(|| vec!["resnet50".to_string()]);
+
+    let mut t = Table::new(vec!["model", "n", "rel perf", "σ reduction", "avg BW gain"])
+        .left_first();
+    for name in &models {
+        let graph = model::by_name(name)?;
+        for &n in &parts {
+            if n == 1 {
+                continue;
+            }
+            let row = PartitionExperiment::new(&accel, &graph)
+                .partitions(n)
+                .steady_batches(batches)
+                .run();
+            match row {
+                Ok(r) => t.row(vec![
+                    name.clone(),
+                    n.to_string(),
+                    format!("{:+.1}%", (r.relative_performance - 1.0) * 100.0),
+                    format!("{:+.1}%", r.std_reduction * 100.0),
+                    format!("{:+.1}%", r.avg_bw_increase * 100.0),
+                ]),
+                Err(Error::InfeasiblePartitioning(why)) => {
+                    t.row(vec![name.clone(), n.to_string(), "DRAM".into(), "-".into(), "-".into()]);
+                    eprintln!("note: {why}");
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_tune(m: &Matches) -> Result<()> {
+    use trafficshape::shaping::AdaptivePartitioner;
+    let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
+    let graph = model::by_name(m.get("model").unwrap_or("resnet50"))?;
+    let tuner = AdaptivePartitioner::new(&accel, &graph);
+    let d = if m.flag("online") { tuner.select_online()? } else { tuner.select()? };
+    let mut t = Table::new(vec!["partitions", "rel perf", "σ reduction"]);
+    for c in &d.probes {
+        t.row(vec![
+            c.partitions.to_string(),
+            format!("{:+.1}%", (c.relative_performance - 1.0) * 100.0),
+            format!("{:+.1}%", c.std_reduction * 100.0),
+        ]);
+    }
+    print!("{}", t.title(&format!("tune {} on {}", graph.name, accel.name)).render());
+    if !d.skipped.is_empty() {
+        println!("skipped (DRAM): {:?}", d.skipped);
+    }
+    println!(
+        "→ best: {} partitions ({:+.1}%)",
+        d.best.partitions,
+        (d.best.relative_performance - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_mixed(m: &Matches) -> Result<()> {
+    use trafficshape::shaping::MixedWorkloadExperiment;
+    let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
+    let batches = m.get_usize("batches")?.unwrap_or(4);
+    let spec = m.get("tenants").unwrap_or("vgg16:32,resnet50:32");
+    let mut exp = MixedWorkloadExperiment::new(&accel);
+    for pair in spec.split(',') {
+        let (name, cores) = pair
+            .split_once(':')
+            .ok_or_else(|| Error::Usage(format!("tenant '{pair}' must be model:cores")))?;
+        let cores: usize = cores
+            .trim()
+            .parse()
+            .map_err(|_| Error::Usage(format!("bad core count in '{pair}'")))?;
+        exp = exp.tenant(model::by_name(name.trim())?, cores, batches);
+    }
+    let r = exp.run()?;
+    println!("co-scheduled makespan : {:.4} s", r.coscheduled_makespan);
+    println!("time-shared makespan  : {:.4} s", r.timeshared_makespan);
+    println!("speedup               : {:+.1}%", (r.speedup - 1.0) * 100.0);
+    println!(
+        "co-scheduled BW       : mean {:.1} GB/s σ {:.1} (cov {:.3})",
+        r.bw.mean,
+        r.bw.std,
+        r.bw.cov()
+    );
+    Ok(())
+}
+
+fn cmd_e2e(m: &Matches) -> Result<()> {
+    let dir = match m.get("artifacts") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => find_artifact_dir().ok_or_else(|| {
+            Error::Artifact("no artifacts found — run `make artifacts` first".into())
+        })?,
+    };
+    let mut cfg = CoordinatorConfig::new(dir);
+    if let Some(p) = m.get_usize("partitions")? {
+        cfg.partitions = p;
+    }
+    if let Some(b) = m.get_usize("batches")? {
+        cfg.total_batches = b;
+    }
+    if let Some(mb) = m.get_usize("micro-batch")? {
+        cfg.micro_batch = mb;
+    }
+    cfg.self_check = !m.flag("no-self-check");
+
+    println!(
+        "e2e: {} partitions × {} micro-batches of {} images (self-check: {})",
+        cfg.partitions, cfg.total_batches, cfg.micro_batch, cfg.self_check
+    );
+    let report = Coordinator::new(cfg)?.run()?;
+    println!(
+        "processed {} images in {:.3} s → {:.1} img/s",
+        report.images, report.wall_seconds, report.throughput_ips
+    );
+    println!(
+        "metered traffic: {:.1} MB total; bandwidth mean {:.4} GB/s σ {:.4} (cov {:.3})",
+        report.total_traffic_bytes / 1e6,
+        report.bw.mean,
+        report.bw.std,
+        report.bw.cov()
+    );
+    println!("jobs per partition: {:?}", report.jobs_per_worker);
+    println!("logits checksum: {:.6}", report.logits_checksum);
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, matches) = app().parse(&argv)?;
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "exp" => cmd_exp(&matches),
+        "models" => cmd_models(),
+        "sweep" => cmd_sweep(&matches),
+        "tune" => cmd_tune(&matches),
+        "mixed" => cmd_mixed(&matches),
+        "e2e" => cmd_e2e(&matches),
+        _ => unreachable!("parser only returns known commands"),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(Error::Usage(msg)) => {
+            eprintln!("{msg}");
+            ExitCode::from(2)
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

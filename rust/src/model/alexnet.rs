@@ -1,0 +1,75 @@
+//! AlexNet (Krizhevsky et al. 2012, BVLC Caffe single-tower variant with
+//! grouped conv2/4/5) — used only for Fig 2: as the earliest ILSVRC
+//! winner it has by far the highest weight-traffic share (≈61 M params,
+//! dominated by the fully-connected layers).
+
+use super::graph::{Graph, GraphBuilder};
+use super::layer::{ConvSpec, LayerKind, PoolSpec};
+use super::tensor::TensorShape;
+
+pub fn alexnet() -> Graph {
+    let mut b = GraphBuilder::new("alexnet", TensorShape::new(3, 227, 227));
+
+    let c1 = b.then("conv1", LayerKind::Conv(ConvSpec::new(96, 11, 4, 0)), 0);
+    let r1 = b.then("relu1", LayerKind::Relu, c1);
+    let n1 = b.then("norm1", LayerKind::Lrn, r1);
+    let p1 = b.then("pool1", LayerKind::Pool(PoolSpec::max(3, 2)), n1);
+
+    let c2 = b.then("conv2", LayerKind::Conv(ConvSpec::new(256, 5, 1, 2).grouped(2)), p1);
+    let r2 = b.then("relu2", LayerKind::Relu, c2);
+    let n2 = b.then("norm2", LayerKind::Lrn, r2);
+    let p2 = b.then("pool2", LayerKind::Pool(PoolSpec::max(3, 2)), n2);
+
+    let c3 = b.then("conv3", LayerKind::Conv(ConvSpec::new(384, 3, 1, 1)), p2);
+    let r3 = b.then("relu3", LayerKind::Relu, c3);
+    let c4 = b.then("conv4", LayerKind::Conv(ConvSpec::new(384, 3, 1, 1).grouped(2)), r3);
+    let r4 = b.then("relu4", LayerKind::Relu, c4);
+    let c5 = b.then("conv5", LayerKind::Conv(ConvSpec::new(256, 3, 1, 1).grouped(2)), r4);
+    let r5 = b.then("relu5", LayerKind::Relu, c5);
+    let p5 = b.then("pool5", LayerKind::Pool(PoolSpec::max(3, 2)), r5);
+
+    let fc6 = b.then("fc6", LayerKind::FullyConnected { out_features: 4096 }, p5);
+    let r6 = b.then("relu6", LayerKind::Relu, fc6);
+    let d6 = b.then("drop6", LayerKind::Dropout, r6);
+    let fc7 = b.then("fc7", LayerKind::FullyConnected { out_features: 4096 }, d6);
+    let r7 = b.then("relu7", LayerKind::Relu, fc7);
+    let d7 = b.then("drop7", LayerKind::Dropout, r7);
+    let fc8 = b.then("fc8", LayerKind::FullyConnected { out_features: 1000 }, d7);
+    b.then("prob", LayerKind::Softmax, fc8);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count_matches_publication() {
+        // BVLC AlexNet: ≈61 M parameters.
+        let params = alexnet().param_elems() as f64;
+        assert!(
+            (params / 1e6 - 61.0).abs() < 1.0,
+            "params = {:.2} M",
+            params / 1e6
+        );
+    }
+
+    #[test]
+    fn feature_map_pipeline() {
+        let g = alexnet();
+        let find = |name: &str| g.layers().iter().find(|l| l.name == name).unwrap();
+        assert_eq!(find("conv1").out, TensorShape::new(96, 55, 55));
+        assert_eq!(find("pool1").out, TensorShape::new(96, 27, 27));
+        assert_eq!(find("conv2").out, TensorShape::new(256, 27, 27));
+        assert_eq!(find("pool2").out, TensorShape::new(256, 13, 13));
+        assert_eq!(find("pool5").out, TensorShape::new(256, 6, 6));
+        assert_eq!(find("fc6").out, TensorShape::flat(4096));
+    }
+
+    #[test]
+    fn flops_match_publication() {
+        // ≈0.72 GMACs → ≈1.45 GFLOPs.
+        let f = alexnet().flops_per_image();
+        assert!((1.3e9..1.7e9).contains(&f), "flops = {:.2} G", f / 1e9);
+    }
+}

@@ -1,0 +1,153 @@
+//! GoogLeNet (Szegedy et al. 2015) — 22 weight layers, 9 inception
+//! modules. The paper's most partition-friendly workload (+11.1% perf):
+//! its weights are tiny (≈7 M params) so the reuse loss from replicating
+//! them per partition is negligible.
+//!
+//! Auxiliary classifiers are omitted (they are training-only and the
+//! paper measures inference).
+
+use super::graph::{Graph, GraphBuilder, LayerId};
+use super::layer::{ConvSpec, LayerKind, PoolSpec};
+use super::tensor::TensorShape;
+
+/// Channel plan of one inception module:
+/// (1×1, 3×3 reduce, 3×3, 5×5 reduce, 5×5, pool proj).
+struct Inception {
+    name: &'static str,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    pp: usize,
+}
+
+const INCEPTIONS_3: [Inception; 2] = [
+    Inception { name: "3a", c1: 64, c3r: 96, c3: 128, c5r: 16, c5: 32, pp: 32 },
+    Inception { name: "3b", c1: 128, c3r: 128, c3: 192, c5r: 32, c5: 96, pp: 64 },
+];
+const INCEPTIONS_4: [Inception; 5] = [
+    Inception { name: "4a", c1: 192, c3r: 96, c3: 208, c5r: 16, c5: 48, pp: 64 },
+    Inception { name: "4b", c1: 160, c3r: 112, c3: 224, c5r: 24, c5: 64, pp: 64 },
+    Inception { name: "4c", c1: 128, c3r: 128, c3: 256, c5r: 24, c5: 64, pp: 64 },
+    Inception { name: "4d", c1: 112, c3r: 144, c3: 288, c5r: 32, c5: 64, pp: 64 },
+    Inception { name: "4e", c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pp: 128 },
+];
+const INCEPTIONS_5: [Inception; 2] = [
+    Inception { name: "5a", c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pp: 128 },
+    Inception { name: "5b", c1: 384, c3r: 192, c3: 384, c5r: 48, c5: 128, pp: 128 },
+];
+
+fn inception(b: &mut GraphBuilder, m: &Inception, input: LayerId) -> LayerId {
+    let nm = |s: &str| format!("inception_{}_{}", m.name, s);
+    // The input blob is consumed by four branches.
+    let split = b.then(nm("split"), LayerKind::Split { copies: 4 }, input);
+
+    // Branch 1: 1×1.
+    let b1 = b.then(nm("1x1"), LayerKind::Conv(ConvSpec::new(m.c1, 1, 1, 0)), split);
+    let b1 = b.then(nm("relu_1x1"), LayerKind::Relu, b1);
+
+    // Branch 2: 1×1 reduce → 3×3.
+    let b2 = b.then(nm("3x3_reduce"), LayerKind::Conv(ConvSpec::new(m.c3r, 1, 1, 0)), split);
+    let b2 = b.then(nm("relu_3x3_reduce"), LayerKind::Relu, b2);
+    let b2 = b.then(nm("3x3"), LayerKind::Conv(ConvSpec::new(m.c3, 3, 1, 1)), b2);
+    let b2 = b.then(nm("relu_3x3"), LayerKind::Relu, b2);
+
+    // Branch 3: 1×1 reduce → 5×5.
+    let b3 = b.then(nm("5x5_reduce"), LayerKind::Conv(ConvSpec::new(m.c5r, 1, 1, 0)), split);
+    let b3 = b.then(nm("relu_5x5_reduce"), LayerKind::Relu, b3);
+    let b3 = b.then(nm("5x5"), LayerKind::Conv(ConvSpec::new(m.c5, 5, 1, 2)), b3);
+    let b3 = b.then(nm("relu_5x5"), LayerKind::Relu, b3);
+
+    // Branch 4: 3×3 max pool (stride 1, pad 1) → 1×1 projection.
+    let b4 = b.then(nm("pool"), LayerKind::Pool(PoolSpec::max_padded(3, 1, 1)), split);
+    let b4 = b.then(nm("pool_proj"), LayerKind::Conv(ConvSpec::new(m.pp, 1, 1, 0)), b4);
+    let b4 = b.then(nm("relu_pool_proj"), LayerKind::Relu, b4);
+
+    b.add(nm("output"), LayerKind::Concat, &[b1, b2, b3, b4])
+}
+
+pub fn googlenet() -> Graph {
+    let mut b = GraphBuilder::new("googlenet", TensorShape::new(3, 224, 224));
+
+    // Stem.
+    let c1 = b.then("conv1_7x7_s2", LayerKind::Conv(ConvSpec::new(64, 7, 2, 3)), 0);
+    let c1 = b.then("conv1_relu", LayerKind::Relu, c1);
+    let p1 = b.then("pool1_3x3_s2", LayerKind::Pool(PoolSpec::max(3, 2)), c1);
+    let n1 = b.then("pool1_norm1", LayerKind::Lrn, p1);
+    let c2r = b.then("conv2_3x3_reduce", LayerKind::Conv(ConvSpec::new(64, 1, 1, 0)), n1);
+    let c2r = b.then("conv2_relu_reduce", LayerKind::Relu, c2r);
+    let c2 = b.then("conv2_3x3", LayerKind::Conv(ConvSpec::new(192, 3, 1, 1)), c2r);
+    let c2 = b.then("conv2_relu", LayerKind::Relu, c2);
+    let n2 = b.then("conv2_norm2", LayerKind::Lrn, c2);
+    let mut x = b.then("pool2_3x3_s2", LayerKind::Pool(PoolSpec::max(3, 2)), n2);
+
+    for m in &INCEPTIONS_3 {
+        x = inception(&mut b, m, x);
+    }
+    x = b.then("pool3_3x3_s2", LayerKind::Pool(PoolSpec::max(3, 2)), x);
+    for m in &INCEPTIONS_4 {
+        x = inception(&mut b, m, x);
+    }
+    x = b.then("pool4_3x3_s2", LayerKind::Pool(PoolSpec::max(3, 2)), x);
+    for m in &INCEPTIONS_5 {
+        x = inception(&mut b, m, x);
+    }
+
+    let pool = b.then("pool5_7x7_s1", LayerKind::Pool(PoolSpec::global_avg()), x);
+    let drop = b.then("pool5_drop", LayerKind::Dropout, pool);
+    let fc = b.then("loss3_classifier", LayerKind::FullyConnected { out_features: 1000 }, drop);
+    b.then("prob", LayerKind::Softmax, fc);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_22_weight_layers_on_depth_path() {
+        let g = googlenet();
+        let convs = g.count_kind(|k| matches!(k, LayerKind::Conv(_)));
+        let fcs = g.count_kind(|k| matches!(k, LayerKind::FullyConnected { .. }));
+        // 57 convs total; the canonical "22 layers deep" counts the
+        // longest weighted path: stem (3) + 9 modules × 2 + fc = 22.
+        assert_eq!(convs, 57);
+        assert_eq!(fcs, 1);
+        let depth = 3 + 9 * 2 + 1;
+        assert_eq!(depth, 22); // paper §4: "chosen to be ... 22"
+    }
+
+    #[test]
+    fn parameter_count_matches_publication() {
+        // ≈7.0 M params without the auxiliary heads.
+        let params = googlenet().param_elems() as f64;
+        assert!(
+            (6.5..7.5).contains(&(params / 1e6)),
+            "params = {:.2} M",
+            params / 1e6
+        );
+    }
+
+    #[test]
+    fn flops_match_publication() {
+        // ≈1.5 GMACs → ≈3 GFLOPs per image.
+        let f = googlenet().flops_per_image();
+        assert!((2.8e9..3.6e9).contains(&f), "flops = {:.2} G", f / 1e9);
+    }
+
+    #[test]
+    fn inception_shapes_chain_correctly() {
+        let g = googlenet();
+        let find = |name: &str| g.layers().iter().find(|l| l.name == name).unwrap();
+        // 3a output: 64+128+32+32 = 256 channels at 28×28.
+        assert_eq!(find("inception_3a_output").out, TensorShape::new(256, 28, 28));
+        // 3b output: 128+192+96+64 = 480.
+        assert_eq!(find("inception_3b_output").out, TensorShape::new(480, 28, 28));
+        // 4e output: 256+320+128+128 = 832 at 14×14.
+        assert_eq!(find("inception_4e_output").out, TensorShape::new(832, 14, 14));
+        // 5b output: 384+384+128+128 = 1024 at 7×7.
+        assert_eq!(find("inception_5b_output").out, TensorShape::new(1024, 7, 7));
+        assert_eq!(find("pool5_7x7_s1").out, TensorShape::flat(1024));
+    }
+}

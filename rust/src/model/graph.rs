@@ -1,0 +1,258 @@
+//! The model graph: a validated DAG of layers in topological order.
+
+use super::layer::{Layer, LayerKind};
+use super::tensor::TensorShape;
+use crate::error::{Error, Result};
+
+pub type LayerId = usize;
+
+/// A validated CNN graph. Layers are stored in topological order (builders
+/// add nodes after their producers, and validation re-checks this), so
+/// sequential iteration is a legal execution order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    layers: Vec<Layer>,
+}
+
+impl Graph {
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Input shapes of a layer (resolved from its producers).
+    pub fn in_shapes(&self, id: LayerId) -> Vec<TensorShape> {
+        self.layers[id]
+            .inputs
+            .iter()
+            .map(|&p| self.layers[p].out)
+            .collect()
+    }
+
+    /// Total learnable parameters (weights + biases + BN scale/shift).
+    pub fn param_elems(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                let in_shape = l.inputs.first().map(|&p| self.layers[p].out);
+                l.param_elems(in_shape)
+            })
+            .sum()
+    }
+
+    /// Total FLOPs for one image through the whole network.
+    pub fn flops_per_image(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.flops_per_image(&self.in_shapes(l.id)))
+            .sum()
+    }
+
+    /// Number of convolutional layers (the paper counts "50" for
+    /// ResNet-50 etc. including the FC layer — see builders' tests).
+    pub fn count_kind(&self, pred: impl Fn(&LayerKind) -> bool) -> usize {
+        self.layers.iter().filter(|l| pred(&l.kind)).count()
+    }
+
+    /// Consumers of each layer (adjacency in forward direction).
+    pub fn consumers(&self) -> Vec<Vec<LayerId>> {
+        let mut out = vec![Vec::new(); self.layers.len()];
+        for l in &self.layers {
+            for &p in &l.inputs {
+                out[p].push(l.id);
+            }
+        }
+        out
+    }
+
+    /// Structural validation: ids are dense and topologically ordered,
+    /// exactly one Input, all edges resolve, shapes re-infer identically.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(Error::InvalidGraph("empty graph".into()));
+        }
+        let mut inputs = 0;
+        for (idx, l) in self.layers.iter().enumerate() {
+            if l.id != idx {
+                return Err(Error::InvalidGraph(format!(
+                    "layer '{}' id {} != position {idx}",
+                    l.name, l.id
+                )));
+            }
+            match l.kind {
+                LayerKind::Input => {
+                    inputs += 1;
+                    if !l.inputs.is_empty() {
+                        return Err(Error::InvalidGraph("input layer has producers".into()));
+                    }
+                }
+                _ => {
+                    if l.inputs.is_empty() {
+                        return Err(Error::InvalidGraph(format!("layer '{}' has no inputs", l.name)));
+                    }
+                    for &p in &l.inputs {
+                        if p >= idx {
+                            return Err(Error::InvalidGraph(format!(
+                                "layer '{}' consumes later/self layer {p}",
+                                l.name
+                            )));
+                        }
+                    }
+                    let ins = self.in_shapes(idx);
+                    let re = Layer::infer_shape(&l.kind, &ins)?;
+                    if re != l.out {
+                        return Err(Error::InvalidGraph(format!(
+                            "layer '{}' stored shape {} != inferred {re}",
+                            l.name, l.out
+                        )));
+                    }
+                }
+            }
+        }
+        if inputs != 1 {
+            return Err(Error::InvalidGraph(format!("expected 1 input layer, found {inputs}")));
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder used by the model zoo.
+pub struct GraphBuilder {
+    name: String,
+    layers: Vec<Layer>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>, input: TensorShape) -> Self {
+        let mut b = Self { name: name.into(), layers: Vec::new() };
+        b.layers.push(Layer {
+            id: 0,
+            name: "input".to_string(),
+            kind: LayerKind::Input,
+            inputs: Vec::new(),
+            out: input,
+        });
+        b
+    }
+
+    /// Add a layer consuming `inputs`; returns its id.
+    pub fn add(&mut self, name: impl Into<String>, kind: LayerKind, inputs: &[LayerId]) -> LayerId {
+        let name: String = name.into();
+        let ins: Vec<TensorShape> = inputs.iter().map(|&p| self.layers[p].out).collect();
+        let out = Layer::infer_shape(&kind, &ins)
+            .unwrap_or_else(|e| panic!("building layer '{name}': {e}"));
+        let id = self.layers.len();
+        self.layers.push(Layer { id, name, kind, inputs: inputs.to_vec(), out });
+        id
+    }
+
+    /// Shorthand: single-input chain step.
+    pub fn then(&mut self, name: impl Into<String>, kind: LayerKind, input: LayerId) -> LayerId {
+        self.add(name, kind, &[input])
+    }
+
+    /// Conv → BN → ReLU block (the standard modern-CNN triplet).
+    pub fn conv_bn_relu(
+        &mut self,
+        base: &str,
+        spec: super::layer::ConvSpec,
+        input: LayerId,
+    ) -> LayerId {
+        let c = self.then(format!("{base}"), LayerKind::Conv(spec), input);
+        let b = self.then(format!("{base}_bn"), LayerKind::BatchNorm, c);
+        self.then(format!("{base}_relu"), LayerKind::Relu, b)
+    }
+
+    pub fn shape_of(&self, id: LayerId) -> TensorShape {
+        self.layers[id].out
+    }
+
+    pub fn finish(self) -> Graph {
+        let g = Graph { name: self.name, layers: self.layers };
+        g.validate().expect("builder produced invalid graph");
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{ConvSpec, PoolSpec};
+
+    fn small() -> Graph {
+        let mut b = GraphBuilder::new("small", TensorShape::new(3, 8, 8));
+        let c = b.then("conv", LayerKind::Conv(ConvSpec::new(4, 3, 1, 1)), 0);
+        let r = b.then("relu", LayerKind::Relu, c);
+        let s = b.then("split", LayerKind::Split { copies: 2 }, r);
+        let c2 = b.then("conv2", LayerKind::Conv(ConvSpec::new(4, 3, 1, 1)), s);
+        let add = b.add("add", LayerKind::EltwiseAdd, &[s, c2]);
+        let p = b.then("pool", LayerKind::Pool(PoolSpec::global_avg()), add);
+        let _fc = b.then("fc", LayerKind::FullyConnected { out_features: 10 }, p);
+        b.finish()
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = small();
+        assert_eq!(g.len(), 8);
+        g.validate().unwrap();
+        assert_eq!(g.layer(1).out, TensorShape::new(4, 8, 8));
+        assert_eq!(g.layers().last().unwrap().out, TensorShape::flat(10));
+    }
+
+    #[test]
+    fn consumers_are_inverted_edges() {
+        let g = small();
+        let cons = g.consumers();
+        // split (id 3) feeds conv2 (4) and add (5).
+        assert_eq!(cons[3], vec![4, 5]);
+        // final fc feeds nothing.
+        assert!(cons[g.len() - 1].is_empty());
+    }
+
+    #[test]
+    fn param_and_flop_totals_are_sums() {
+        let g = small();
+        // conv: 4*3*3*3+4; conv2: 4*4*3*3+4; fc: 4*10+10.
+        let expect = (4 * 3 * 3 * 3 + 4) + (4 * 4 * 3 * 3 + 4) + (4 * 10 + 10);
+        assert_eq!(g.param_elems(), expect);
+        assert!(g.flops_per_image() > 0.0);
+    }
+
+    #[test]
+    fn validation_catches_corruption() {
+        let g = small();
+        let mut bad = g.clone();
+        bad.layers[4].inputs = vec![6]; // forward edge
+        assert!(bad.validate().is_err());
+
+        let mut bad = g.clone();
+        bad.layers[1].out = TensorShape::new(9, 9, 9); // wrong shape
+        assert!(bad.validate().is_err());
+
+        let mut bad = g.clone();
+        bad.layers[2].id = 7; // id mismatch
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "building layer")]
+    fn builder_panics_on_shape_mismatch() {
+        let mut b = GraphBuilder::new("bad", TensorShape::new(3, 8, 8));
+        let c = b.then("conv", LayerKind::Conv(ConvSpec::new(4, 3, 1, 1)), 0);
+        // Eltwise of mismatched shapes panics at build time.
+        b.add("add", LayerKind::EltwiseAdd, &[0, c]);
+    }
+}

@@ -1,0 +1,367 @@
+//! Layer kinds, per-layer shape inference, FLOP and parameter accounting.
+
+use super::tensor::{conv_out, pool_out, TensorShape};
+use crate::error::{Error, Result};
+
+/// Convolution hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    /// Number of kernels K (output channels).
+    pub out_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Grouped convolution (AlexNet's two-tower conv2/4/5).
+    pub groups: usize,
+}
+
+impl ConvSpec {
+    pub fn new(out_ch: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Self { out_ch, kh: k, kw: k, stride, pad, groups: 1 }
+    }
+
+    pub fn grouped(mut self, groups: usize) -> Self {
+        self.groups = groups;
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Pooling hyper-parameters. `global` pools the full spatial extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSpec {
+    pub kind: PoolKind,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub global: bool,
+}
+
+impl PoolSpec {
+    pub fn max(k: usize, stride: usize) -> Self {
+        Self { kind: PoolKind::Max, kh: k, kw: k, stride, pad: 0, global: false }
+    }
+
+    pub fn max_padded(k: usize, stride: usize, pad: usize) -> Self {
+        Self { kind: PoolKind::Max, kh: k, kw: k, stride, pad, global: false }
+    }
+
+    pub fn avg(k: usize, stride: usize) -> Self {
+        Self { kind: PoolKind::Avg, kh: k, kw: k, stride, pad: 0, global: false }
+    }
+
+    pub fn global_avg() -> Self {
+        Self { kind: PoolKind::Avg, kh: 0, kw: 0, stride: 1, pad: 0, global: true }
+    }
+}
+
+/// All layer kinds needed by the five networks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Graph input (image).
+    Input,
+    Conv(ConvSpec),
+    Pool(PoolSpec),
+    /// Batch normalization (inference form: scale+shift per channel).
+    BatchNorm,
+    Relu,
+    /// Local response normalization (AlexNet / GoogLeNet).
+    Lrn,
+    /// Fully-connected / inner-product layer.
+    FullyConnected { out_features: usize },
+    /// Element-wise sum of two inputs (residual connections).
+    EltwiseAdd,
+    /// Channel concatenation (inception modules).
+    Concat,
+    /// Caffe-style split: duplicates its input blob for multiple
+    /// consumers. Compute-free but *not* traffic-free — the paper's Fig 1
+    /// explicitly shows BN and split functions causing bandwidth spikes.
+    Split { copies: usize },
+    Softmax,
+    /// Dropout is a no-op at inference; kept so graphs mirror the prototxt.
+    Dropout,
+}
+
+/// A node in the model graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    /// Indices of producer layers (empty only for Input).
+    pub inputs: Vec<usize>,
+    /// Inferred per-image output shape.
+    pub out: TensorShape,
+}
+
+impl Layer {
+    /// Shape inference given resolved input shapes.
+    pub fn infer_shape(kind: &LayerKind, ins: &[TensorShape]) -> Result<TensorShape> {
+        let one = |msg: &str| -> Result<TensorShape> {
+            if ins.len() == 1 {
+                Ok(ins[0])
+            } else {
+                Err(Error::InvalidGraph(format!("{msg} expects exactly 1 input, got {}", ins.len())))
+            }
+        };
+        match kind {
+            LayerKind::Input => Err(Error::InvalidGraph("input shape must be provided explicitly".into())),
+            LayerKind::Conv(c) => {
+                let x = one("conv")?;
+                if x.c % c.groups != 0 || c.out_ch % c.groups != 0 {
+                    return Err(Error::InvalidGraph(format!(
+                        "groups {} must divide in_ch {} and out_ch {}",
+                        c.groups, x.c, c.out_ch
+                    )));
+                }
+                Ok(TensorShape::new(
+                    c.out_ch,
+                    conv_out(x.h, c.kh, c.stride, c.pad),
+                    conv_out(x.w, c.kw, c.stride, c.pad),
+                ))
+            }
+            LayerKind::Pool(p) => {
+                let x = one("pool")?;
+                if p.global {
+                    Ok(TensorShape::flat(x.c))
+                } else {
+                    Ok(TensorShape::new(
+                        x.c,
+                        pool_out(x.h, p.kh, p.stride, p.pad),
+                        pool_out(x.w, p.kw, p.stride, p.pad),
+                    ))
+                }
+            }
+            LayerKind::BatchNorm => one("batchnorm"),
+            LayerKind::Relu => one("relu"),
+            LayerKind::Lrn => one("lrn"),
+            LayerKind::Softmax => one("softmax"),
+            LayerKind::Dropout => one("dropout"),
+            LayerKind::Split { .. } => one("split"),
+            LayerKind::FullyConnected { out_features } => {
+                let _ = one("fully_connected")?;
+                Ok(TensorShape::flat(*out_features))
+            }
+            LayerKind::EltwiseAdd => {
+                if ins.len() != 2 {
+                    return Err(Error::InvalidGraph(format!(
+                        "eltwise_add expects 2 inputs, got {}",
+                        ins.len()
+                    )));
+                }
+                if ins[0] != ins[1] {
+                    return Err(Error::InvalidGraph(format!(
+                        "eltwise_add shape mismatch: {} vs {}",
+                        ins[0], ins[1]
+                    )));
+                }
+                Ok(ins[0])
+            }
+            LayerKind::Concat => {
+                if ins.is_empty() {
+                    return Err(Error::InvalidGraph("concat needs inputs".into()));
+                }
+                let (h, w) = (ins[0].h, ins[0].w);
+                let mut c = 0;
+                for s in ins {
+                    if s.h != h || s.w != w {
+                        return Err(Error::InvalidGraph(format!(
+                            "concat spatial mismatch: {}x{} vs {}x{}",
+                            s.h, s.w, h, w
+                        )));
+                    }
+                    c += s.c;
+                }
+                Ok(TensorShape::new(c, h, w))
+            }
+        }
+    }
+
+    /// Learnable parameter count (inference view: BN folds to scale+shift).
+    pub fn param_elems(&self, in_shape: Option<TensorShape>) -> usize {
+        match &self.kind {
+            LayerKind::Conv(c) => {
+                let in_c = in_shape.expect("conv has input").c;
+                c.out_ch * (in_c / c.groups) * c.kh * c.kw + c.out_ch
+            }
+            LayerKind::FullyConnected { out_features } => {
+                let in_elems = in_shape.expect("fc has input").elems();
+                in_elems * out_features + out_features
+            }
+            LayerKind::BatchNorm => 2 * self.out.c,
+            _ => 0,
+        }
+    }
+
+    /// FLOPs to process ONE image through this layer (multiply-accumulate
+    /// counted as 2 FLOPs, the convention behind the paper's TFLOPS
+    /// numbers in Table 1).
+    pub fn flops_per_image(&self, in_shapes: &[TensorShape]) -> f64 {
+        match &self.kind {
+            LayerKind::Input => 0.0,
+            LayerKind::Conv(c) => {
+                let in_c = in_shapes[0].c as f64;
+                let outs = self.out.pixels() as f64;
+                2.0 * (c.out_ch as f64) * (in_c / c.groups as f64)
+                    * (c.kh * c.kw) as f64
+                    * outs
+            }
+            LayerKind::FullyConnected { out_features } => {
+                2.0 * in_shapes[0].elems() as f64 * *out_features as f64
+            }
+            LayerKind::Pool(p) => {
+                let window = if p.global {
+                    in_shapes[0].pixels()
+                } else {
+                    p.kh * p.kw
+                };
+                (self.out.elems() * window) as f64
+            }
+            // scale + shift per element
+            LayerKind::BatchNorm => 2.0 * self.out.elems() as f64,
+            LayerKind::Relu => self.out.elems() as f64,
+            // square, two scales, pow, div across the local window ≈ 5/elem
+            LayerKind::Lrn => 5.0 * self.out.elems() as f64,
+            LayerKind::EltwiseAdd => self.out.elems() as f64,
+            LayerKind::Softmax => 3.0 * self.out.elems() as f64,
+            // pure data movement
+            LayerKind::Concat | LayerKind::Split { .. } | LayerKind::Dropout => 0.0,
+        }
+    }
+
+    /// Activation elements read per image (sum over inputs).
+    ///
+    /// Zero for `Split` (see [`Self::output_elems`]), `ReLU` and
+    /// `Dropout`: ReLU runs as an MKL-DNN *post-op* fused into the
+    /// producing primitive's write-back (and as an in-place Caffe layer
+    /// otherwise), so it never re-streams the tensor through main
+    /// memory — which is why the paper's Fig 1 calls out BN and split,
+    /// but not ReLU, as distinct bandwidth phases.
+    pub fn input_elems(&self, in_shapes: &[TensorShape]) -> usize {
+        if matches!(
+            self.kind,
+            LayerKind::Split { .. } | LayerKind::Relu | LayerKind::Dropout
+        ) {
+            return 0;
+        }
+        in_shapes.iter().map(|s| s.elems()).sum()
+    }
+
+    /// Activation elements written per image.
+    ///
+    /// `Split` is **zero-copy at inference**: Caffe's Split layer shares
+    /// the underlying blob with every consumer in the forward pass (the
+    /// copies only materialize for backward gradients), so it
+    /// contributes no activation traffic here. Its `copies` count still
+    /// matters for the DRAM-footprint model, where each consumer's blob
+    /// handle pins the data.
+    pub fn output_elems(&self) -> usize {
+        match &self.kind {
+            LayerKind::Split { .. } | LayerKind::Relu | LayerKind::Dropout => 0,
+            _ => self.out.elems(),
+        }
+    }
+
+    /// Whether the reuse model should treat this as a compute-dense
+    /// (matmul-like) layer for efficiency selection.
+    pub fn is_compute_dense(&self) -> bool {
+        matches!(
+            self.kind,
+            LayerKind::Conv(_) | LayerKind::FullyConnected { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(kind: LayerKind, ins: &[TensorShape]) -> Layer {
+        let out = Layer::infer_shape(&kind, ins).unwrap();
+        Layer { id: 0, name: "t".into(), kind, inputs: vec![], out }
+    }
+
+    #[test]
+    fn conv_shape_params_flops() {
+        // ResNet-50 Conv2_1a from Table 1: 56x56x64 in, 1x1, 64 kernels.
+        let in_s = TensorShape::new(64, 56, 56);
+        let l = mk(LayerKind::Conv(ConvSpec::new(64, 1, 1, 0)), &[in_s]);
+        assert_eq!(l.out, TensorShape::new(64, 56, 56));
+        assert_eq!(l.param_elems(Some(in_s)), 64 * 64 + 64);
+        // 2*K*C*k*k*Ho*Wo = 2*64*64*1*1*3136 ≈ 25.7 MFLOP per image.
+        let f = l.flops_per_image(&[in_s]);
+        assert!((f - 2.0 * 64.0 * 64.0 * 3136.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn grouped_conv_divides_work() {
+        let in_s = TensorShape::new(96, 27, 27);
+        let full = mk(LayerKind::Conv(ConvSpec::new(256, 5, 1, 2)), &[in_s]);
+        let grouped = mk(LayerKind::Conv(ConvSpec::new(256, 5, 1, 2).grouped(2)), &[in_s]);
+        assert_eq!(grouped.out, full.out);
+        assert!((full.flops_per_image(&[in_s]) / grouped.flops_per_image(&[in_s]) - 2.0).abs() < 1e-9);
+        assert_eq!(full.param_elems(Some(in_s)) - 256, 2 * (grouped.param_elems(Some(in_s)) - 256));
+    }
+
+    #[test]
+    fn fc_params_match_vgg_fc6() {
+        // VGG fc6: 512*7*7 → 4096 = 102.76M weights.
+        let in_s = TensorShape::new(512, 7, 7);
+        let l = mk(LayerKind::FullyConnected { out_features: 4096 }, &[in_s]);
+        assert_eq!(l.param_elems(Some(in_s)), 512 * 7 * 7 * 4096 + 4096);
+        assert_eq!(l.out, TensorShape::flat(4096));
+    }
+
+    #[test]
+    fn eltwise_and_concat_rules() {
+        let a = TensorShape::new(64, 56, 56);
+        let b = TensorShape::new(32, 56, 56);
+        assert!(Layer::infer_shape(&LayerKind::EltwiseAdd, &[a, a]).is_ok());
+        assert!(Layer::infer_shape(&LayerKind::EltwiseAdd, &[a, b]).is_err());
+        assert!(Layer::infer_shape(&LayerKind::EltwiseAdd, &[a]).is_err());
+        let c = Layer::infer_shape(&LayerKind::Concat, &[a, b]).unwrap();
+        assert_eq!(c, TensorShape::new(96, 56, 56));
+        let bad = TensorShape::new(8, 28, 28);
+        assert!(Layer::infer_shape(&LayerKind::Concat, &[a, bad]).is_err());
+    }
+
+    #[test]
+    fn global_pool_flattens() {
+        let l = mk(
+            LayerKind::Pool(PoolSpec::global_avg()),
+            &[TensorShape::new(2048, 7, 7)],
+        );
+        assert_eq!(l.out, TensorShape::flat(2048));
+        assert!((l.flops_per_image(&[TensorShape::new(2048, 7, 7)]) - (2048 * 49) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn split_is_zero_copy_at_inference() {
+        let s = TensorShape::new(256, 56, 56);
+        let l = Layer {
+            id: 0,
+            name: "split".into(),
+            kind: LayerKind::Split { copies: 2 },
+            inputs: vec![],
+            out: s,
+        };
+        assert_eq!(l.output_elems(), 0);
+        assert_eq!(l.input_elems(&[s]), 0);
+        assert_eq!(l.flops_per_image(&[s]), 0.0);
+    }
+
+    #[test]
+    fn bn_params_are_two_per_channel() {
+        let s = TensorShape::new(256, 56, 56);
+        let l = mk(LayerKind::BatchNorm, &[s]);
+        assert_eq!(l.param_elems(Some(s)), 512);
+        assert_eq!(l.flops_per_image(&[s]), 2.0 * s.elems() as f64);
+    }
+}

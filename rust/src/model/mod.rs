@@ -1,0 +1,46 @@
+//! CNN model substrate: layer graphs, shape inference, FLOP/parameter
+//! accounting, and exact builders for the paper's workloads.
+//!
+//! The paper evaluates VGG-16, GoogLeNet and ResNet-50 (and Fig 2 also
+//! shows AlexNet-era ILSVRC winners); [`tiny_cnn`] is the small network
+//! used by the real-compute end-to-end path (its per-layer shapes match
+//! the AOT artifacts emitted by `python/compile/aot.py`).
+
+mod alexnet;
+mod googlenet;
+mod graph;
+mod layer;
+mod resnet;
+mod tensor;
+mod tiny;
+mod vgg;
+
+pub use alexnet::alexnet;
+pub use googlenet::googlenet;
+pub use graph::{Graph, GraphBuilder, LayerId};
+pub use layer::{ConvSpec, Layer, LayerKind, PoolKind, PoolSpec};
+pub use resnet::{resnet101, resnet152, resnet50};
+pub use tensor::TensorShape;
+pub use tiny::{stage_of as tiny_stage_of, tiny_cnn, STAGES as TINY_STAGES};
+
+use crate::error::Result;
+
+/// All models the experiment drivers know by name.
+pub fn by_name(name: &str) -> Result<Graph> {
+    match name {
+        "vgg16" | "vgg-16" => Ok(vgg16()),
+        "vgg19" | "vgg-19" => Ok(vgg19()),
+        "googlenet" => Ok(googlenet()),
+        "resnet50" | "resnet-50" => Ok(resnet50()),
+        "resnet101" | "resnet-101" => Ok(resnet101()),
+        "resnet152" | "resnet-152" => Ok(resnet152()),
+        "alexnet" => Ok(alexnet()),
+        "tiny" | "tiny_cnn" => Ok(tiny_cnn()),
+        other => Err(crate::error::Error::InvalidConfig(format!("unknown model '{other}'"))),
+    }
+}
+
+/// Names of the paper's three evaluation models (Fig 5 order).
+pub const PAPER_MODELS: [&str; 3] = ["vgg16", "googlenet", "resnet50"];
+
+pub use vgg::{vgg16, vgg19};

@@ -1,0 +1,218 @@
+//! ResNet-50 (He et al. 2016) — the paper's headline workload.
+//!
+//! conv1 (7×7/2) → max-pool → 4 stages of bottleneck blocks
+//! ([3, 4, 6, 3] repeats, expansion 4) → global average pool → fc-1000.
+//! Residual connections are modelled with explicit Caffe-style `Split`
+//! layers, because the paper's Fig 1 calls out BN **and split** functions
+//! as distinct bandwidth-demand phases between convolutions.
+
+use super::graph::{Graph, GraphBuilder, LayerId};
+use super::layer::{ConvSpec, LayerKind, PoolSpec};
+use super::tensor::TensorShape;
+
+/// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand, residual add.
+/// `stride` applies to the first 1×1 (Caffe/original arrangement).
+fn bottleneck(
+    b: &mut GraphBuilder,
+    base: &str,
+    input: LayerId,
+    mid: usize,
+    out_ch: usize,
+    stride: usize,
+    project: bool,
+) -> LayerId {
+    // The input blob feeds both the residual branch and the shortcut.
+    let split = b.then(format!("{base}_split"), LayerKind::Split { copies: 2 }, input);
+
+    let c1 = b.conv_bn_relu(&format!("{base}_1x1a"), ConvSpec::new(mid, 1, stride, 0), split);
+    let c2 = b.conv_bn_relu(&format!("{base}_3x3b"), ConvSpec::new(mid, 3, 1, 1), c1);
+    let c3 = b.then(format!("{base}_1x1c"), LayerKind::Conv(ConvSpec::new(out_ch, 1, 1, 0)), c2);
+    let c3bn = b.then(format!("{base}_1x1c_bn"), LayerKind::BatchNorm, c3);
+
+    let shortcut = if project {
+        let p = b.then(
+            format!("{base}_proj"),
+            LayerKind::Conv(ConvSpec::new(out_ch, 1, stride, 0)),
+            split,
+        );
+        b.then(format!("{base}_proj_bn"), LayerKind::BatchNorm, p)
+    } else {
+        split
+    };
+
+    let add = b.add(format!("{base}_add"), LayerKind::EltwiseAdd, &[shortcut, c3bn]);
+    b.then(format!("{base}_relu"), LayerKind::Relu, add)
+}
+
+/// Generic bottleneck ResNet builder; `reps` is the per-stage block
+/// count ([3,4,6,3] → ResNet-50, [3,4,23,3] → 101, [3,8,36,3] → 152).
+fn resnet_bottleneck(name: &str, reps: [usize; 4]) -> Graph {
+    let mut b = GraphBuilder::new(name, TensorShape::new(3, 224, 224));
+
+    // Stem.
+    let x = b.conv_bn_relu("conv1", ConvSpec::new(64, 7, 2, 3), 0);
+    // Caffe pools in ceil mode with no padding: (112 − 3)/2 ⌈⌉ + 1 = 56.
+    let mut x = b.then("pool1", LayerKind::Pool(PoolSpec::max(3, 2)), x);
+
+    // (stage, repeats, mid, out, first stride)
+    let stages: [(usize, usize, usize, usize, usize); 4] = [
+        (2, reps[0], 64, 256, 1),
+        (3, reps[1], 128, 512, 2),
+        (4, reps[2], 256, 1024, 2),
+        (5, reps[3], 512, 2048, 2),
+    ];
+
+    for (stage, reps, mid, out, s0) in stages {
+        for r in 0..reps {
+            // Blocks are named a, b, c, ... (b1, b2... past 'z' for the
+            // deep variants, Caffe-style).
+            let suffix = if r < 26 {
+                ((b'a' + r as u8) as char).to_string()
+            } else {
+                format!("b{}", r)
+            };
+            let base = format!("conv{stage}_{suffix}");
+            let stride = if r == 0 { s0 } else { 1 };
+            let project = r == 0;
+            x = bottleneck(&mut b, &base, x, mid, out, stride, project);
+        }
+    }
+
+    let pool = b.then("pool5", LayerKind::Pool(PoolSpec::global_avg()), x);
+    let fc = b.then("fc1000", LayerKind::FullyConnected { out_features: 1000 }, pool);
+    b.then("prob", LayerKind::Softmax, fc);
+    b.finish()
+}
+
+pub fn resnet50() -> Graph {
+    resnet_bottleneck("resnet50", [3, 4, 6, 3])
+}
+
+/// ResNet-101 — the deeper variant from the same paper (He et al. 2016);
+/// used by the generalization experiments.
+pub fn resnet101() -> Graph {
+    resnet_bottleneck("resnet101", [3, 4, 23, 3])
+}
+
+/// ResNet-152 — the deepest published variant.
+pub fn resnet152() -> Graph {
+    resnet_bottleneck("resnet152", [3, 8, 36, 3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_50_weight_layers() {
+        let g = resnet50();
+        let convs = g.count_kind(|k| matches!(k, LayerKind::Conv(_)));
+        let fcs = g.count_kind(|k| matches!(k, LayerKind::FullyConnected { .. }));
+        // 1 stem + (3+4+6+3) blocks × 3 convs + 4 projections = 53 convs,
+        // of which 49 are on the main path; +1 fc = the canonical "50".
+        assert_eq!(convs, 53);
+        assert_eq!(fcs, 1);
+        let main_path_convs = convs - 4; // minus projection shortcuts
+        assert_eq!(main_path_convs + fcs, 50);
+    }
+
+    #[test]
+    fn parameter_count_matches_publication() {
+        // ResNet-50: ≈25.56 M parameters (weights + BN scale/shift + fc).
+        let params = resnet50().param_elems() as f64;
+        assert!(
+            (params / 1e6 - 25.56).abs() < 0.6,
+            "params = {:.2} M",
+            params / 1e6
+        );
+    }
+
+    #[test]
+    fn flops_match_publication() {
+        // ≈3.86 GMACs → ≈7.7 GFLOPs conv/fc + ~0.4G of BN/ReLU/add/pool.
+        let f = resnet50().flops_per_image();
+        assert!(
+            (7.5e9..8.8e9).contains(&f),
+            "flops = {:.2} G",
+            f / 1e9
+        );
+    }
+
+    #[test]
+    fn table1_layer_shapes_are_present() {
+        // Table 1's rows name these exact shapes.
+        let g = resnet50();
+        let find = |name: &str| g.layers().iter().find(|l| l.name == name).unwrap();
+
+        // Pooling row: input 112x112x64 → output 56x56x64.
+        let pool1 = find("pool1");
+        assert_eq!(pool1.out, TensorShape::new(64, 56, 56));
+
+        // Conv2_1a: 56x56 input, 64 in-ch, 1x1, 64 kernels.
+        let c = find("conv2_a_1x1a");
+        assert_eq!(c.out, TensorShape::new(64, 56, 56));
+        assert_eq!(g.in_shapes(c.id)[0].c, 64);
+
+        // Conv2_2a: second block's 1x1a sees 256 input channels.
+        let c = find("conv2_b_1x1a");
+        assert_eq!(g.in_shapes(c.id)[0].c, 256);
+        assert_eq!(c.out, TensorShape::new(64, 56, 56));
+
+        // Conv3_2b: 28x28, 128 in, 3x3, 128 kernels.
+        let c = find("conv3_b_3x3b");
+        assert_eq!(c.out, TensorShape::new(128, 28, 28));
+        assert_eq!(g.in_shapes(c.id)[0].c, 128);
+
+        // Conv4_3a: 14x14, 1024 in, 1x1, 256 kernels.
+        let c = find("conv4_c_1x1a");
+        assert_eq!(g.in_shapes(c.id)[0].c, 1024);
+        assert_eq!(c.out, TensorShape::new(256, 14, 14));
+
+        // Conv5_3b: 7x7, 512 in, 3x3, 512 kernels.
+        let c = find("conv5_c_3x3b");
+        assert_eq!(g.in_shapes(c.id)[0].c, 512);
+        assert_eq!(c.out, TensorShape::new(512, 7, 7));
+    }
+
+    #[test]
+    fn deep_variants_match_published_sizes() {
+        // torchvision: ResNet-101 ≈ 44.55 M, ResNet-152 ≈ 60.19 M params.
+        let p101 = resnet101().param_elems() as f64 / 1e6;
+        assert!((p101 - 44.55).abs() < 1.0, "resnet101 = {p101:.2} M");
+        let p152 = resnet152().param_elems() as f64 / 1e6;
+        assert!((p152 - 60.19).abs() < 1.2, "resnet152 = {p152:.2} M");
+        // ≈7.8 GMACs → ≈15.7 GFLOPs for 101; ≈11.5 GMACs for 152.
+        let f101 = resnet101().flops_per_image() / 1e9;
+        assert!((14.5..17.5).contains(&f101), "resnet101 flops = {f101:.1} G");
+        let f152 = resnet152().flops_per_image() / 1e9;
+        assert!((21.5..25.5).contains(&f152), "resnet152 flops = {f152:.1} G");
+    }
+
+    #[test]
+    fn deep_variant_layer_counts() {
+        let convs101 = resnet101().count_kind(|k| matches!(k, LayerKind::Conv(_)));
+        // (3+4+23+3)×3 + 1 stem + 4 projections = 104.
+        assert_eq!(convs101, 104);
+        let convs152 = resnet152().count_kind(|k| matches!(k, LayerKind::Conv(_)));
+        // (3+8+36+3)×3 + 1 + 4 = 155.
+        assert_eq!(convs152, 155);
+        resnet101().validate().unwrap();
+        resnet152().validate().unwrap();
+    }
+
+    #[test]
+    fn stage_output_shapes() {
+        let g = resnet50();
+        let last = |prefix: &str| {
+            g.layers()
+                .iter()
+                .filter(|l| l.name.starts_with(prefix) && l.name.ends_with("_relu"))
+                .last()
+                .unwrap()
+        };
+        assert_eq!(last("conv2").out, TensorShape::new(256, 56, 56));
+        assert_eq!(last("conv3").out, TensorShape::new(512, 28, 28));
+        assert_eq!(last("conv4").out, TensorShape::new(1024, 14, 14));
+        assert_eq!(last("conv5").out, TensorShape::new(2048, 7, 7));
+    }
+}

@@ -1,0 +1,115 @@
+//! Per-image activation tensor shapes (channels × height × width).
+//!
+//! Batch is *not* part of the shape: the partitioning study varies batch
+//! per partition, so batch multiplicity is applied by the reuse model.
+
+use std::fmt;
+
+/// Shape of one image's activation tensor in CHW layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorShape {
+    pub const fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+
+    /// Flat vector shape (fully-connected activations).
+    pub const fn flat(c: usize) -> Self {
+        Self { c, h: 1, w: 1 }
+    }
+
+    /// Total number of elements.
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Spatial positions.
+    pub fn pixels(&self) -> usize {
+        self.h * self.w
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.h == 1 && self.w == 1
+    }
+}
+
+impl fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// Output spatial size of a convolution-style window op (floor mode,
+/// Caffe's convolution rule).
+pub fn conv_out(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(stride > 0);
+    assert!(
+        input + 2 * pad >= kernel,
+        "window {kernel} larger than padded input {input}+2*{pad}"
+    );
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+/// Output spatial size of a pooling op (ceil mode, Caffe's pooling rule —
+/// this is what makes GoogLeNet's 112→56→28→14→7 chain come out right).
+pub fn pool_out(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(stride > 0);
+    assert!(input + 2 * pad >= kernel);
+    let mut out = (input + 2 * pad - kernel).div_ceil(stride) + 1;
+    // Caffe clips the last window so it starts inside the (padded) input.
+    if pad > 0 && (out - 1) * stride >= input + pad {
+        out -= 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elems_and_display() {
+        let s = TensorShape::new(64, 56, 56);
+        assert_eq!(s.elems(), 64 * 56 * 56);
+        assert_eq!(s.pixels(), 3136);
+        assert_eq!(format!("{s}"), "64x56x56");
+        assert!(TensorShape::flat(1000).is_flat());
+    }
+
+    #[test]
+    fn conv_out_matches_known_layers() {
+        // ResNet-50 conv1: 224, 7x7, stride 2, pad 3 → 112.
+        assert_eq!(conv_out(224, 7, 2, 3), 112);
+        // VGG 3x3 pad 1 stride 1 preserves size.
+        assert_eq!(conv_out(224, 3, 1, 1), 224);
+        // 1x1 preserves.
+        assert_eq!(conv_out(56, 1, 1, 0), 56);
+        // AlexNet conv1: 227, 11x11, stride 4 → 55.
+        assert_eq!(conv_out(227, 11, 4, 0), 55);
+    }
+
+    #[test]
+    fn pool_out_matches_known_layers() {
+        // GoogLeNet/ResNet pool after conv1: 112, 3x3, stride 2 (ceil) → 56.
+        assert_eq!(pool_out(112, 3, 2, 0), 56);
+        // 56 → 28 → 14 → 7 chain with 3x3/2 ceil.
+        assert_eq!(pool_out(56, 3, 2, 0), 28);
+        assert_eq!(pool_out(28, 3, 2, 0), 14);
+        assert_eq!(pool_out(14, 3, 2, 0), 7);
+        // VGG 2x2 stride 2: 224 → 112.
+        assert_eq!(pool_out(224, 2, 2, 0), 112);
+        // AlexNet 55 → 27 with 3x3/2.
+        assert_eq!(pool_out(55, 3, 2, 0), 27);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than padded input")]
+    fn oversized_window_panics() {
+        conv_out(3, 7, 1, 0);
+    }
+}

@@ -1,0 +1,104 @@
+//! TinyCNN — the small ResNet-style network driven end-to-end through the
+//! real-compute path (Pallas kernel → JAX layer → AOT HLO → PJRT runtime
+//! → partitioned coordinator).
+//!
+//! Its five *stages* correspond one-to-one to the AOT artifacts emitted by
+//! `python/compile/aot.py` (see [`STAGES`]); the rust graph here is the
+//! analytic twin used for traffic accounting. Keep both sides in sync.
+
+use super::graph::{Graph, GraphBuilder, LayerId};
+use super::layer::{ConvSpec, LayerKind, PoolSpec};
+use super::tensor::TensorShape;
+
+/// Stage names in execution order; `aot.py` emits `tiny_<stage>.hlo.txt`
+/// for each and the coordinator runs them in this order.
+pub const STAGES: [&str; 5] = ["stem", "block1", "down", "block2", "head"];
+
+/// Input shape (CIFAR-like).
+pub const INPUT: TensorShape = TensorShape::new(3, 32, 32);
+
+/// Number of classes.
+pub const CLASSES: usize = 10;
+
+fn res_block(b: &mut GraphBuilder, base: &str, input: LayerId, ch: usize) -> LayerId {
+    let split = b.then(format!("{base}_split"), LayerKind::Split { copies: 2 }, input);
+    let c1 = b.conv_bn_relu(&format!("{base}_conv1"), ConvSpec::new(ch, 3, 1, 1), split);
+    let c2 = b.then(format!("{base}_conv2"), LayerKind::Conv(ConvSpec::new(ch, 3, 1, 1)), c1);
+    let c2 = b.then(format!("{base}_conv2_bn"), LayerKind::BatchNorm, c2);
+    let add = b.add(format!("{base}_add"), LayerKind::EltwiseAdd, &[split, c2]);
+    b.then(format!("{base}_relu"), LayerKind::Relu, add)
+}
+
+pub fn tiny_cnn() -> Graph {
+    let mut b = GraphBuilder::new("tiny_cnn", INPUT);
+    // stage: stem
+    let x = b.conv_bn_relu("stem_conv", ConvSpec::new(16, 3, 1, 1), 0);
+    // stage: block1
+    let x = res_block(&mut b, "block1", x, 16);
+    // stage: down
+    let x = b.conv_bn_relu("down_conv", ConvSpec::new(32, 3, 2, 1), x);
+    // stage: block2
+    let x = res_block(&mut b, "block2", x, 32);
+    // stage: head
+    let p = b.then("head_pool", LayerKind::Pool(PoolSpec::global_avg()), x);
+    let fc = b.then("head_fc", LayerKind::FullyConnected { out_features: CLASSES }, p);
+    b.then("prob", LayerKind::Softmax, fc);
+    b.finish()
+}
+
+/// Which stage each layer belongs to, by name prefix — used when mapping
+/// analytic phases onto artifact executions.
+pub fn stage_of(layer_name: &str) -> Option<&'static str> {
+    STAGES
+        .iter()
+        .find(|s| {
+            layer_name.starts_with(&format!("{s}_"))
+                || layer_name == format!("{s}_conv")
+                || layer_name.starts_with("prob") && **s == "head"
+        })
+        .copied()
+        .or(if layer_name.starts_with("stem") {
+            Some("stem")
+        } else if layer_name.starts_with("prob") {
+            Some("head")
+        } else {
+            None
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_chain_to_classifier() {
+        let g = tiny_cnn();
+        let find = |name: &str| g.layers().iter().find(|l| l.name == name).unwrap();
+        assert_eq!(find("stem_conv").out, TensorShape::new(16, 32, 32));
+        assert_eq!(find("block1_relu").out, TensorShape::new(16, 32, 32));
+        assert_eq!(find("down_conv").out, TensorShape::new(32, 16, 16));
+        assert_eq!(find("block2_relu").out, TensorShape::new(32, 16, 16));
+        assert_eq!(find("head_pool").out, TensorShape::flat(32));
+        assert_eq!(find("head_fc").out, TensorShape::flat(CLASSES));
+    }
+
+    #[test]
+    fn is_small_enough_for_interpret_mode() {
+        let g = tiny_cnn();
+        // Well under a second of interpret-mode compute per image.
+        assert!(g.flops_per_image() < 50e6, "flops = {}", g.flops_per_image());
+        assert!(g.param_elems() < 50_000, "params = {}", g.param_elems());
+    }
+
+    #[test]
+    fn every_layer_maps_to_a_stage() {
+        let g = tiny_cnn();
+        for l in g.layers().iter().skip(1) {
+            assert!(
+                stage_of(&l.name).is_some(),
+                "layer '{}' has no stage",
+                l.name
+            );
+        }
+    }
+}

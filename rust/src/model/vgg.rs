@@ -1,0 +1,102 @@
+//! VGG-16 (Simonyan & Zisserman 2014) — configuration D.
+//!
+//! 13 convolutional layers (all 3×3, pad 1, stride 1) + 5 max-pools +
+//! 3 fully-connected layers. The paper uses it as the weight-heaviest
+//! workload: ≈138 M parameters, most of them in fc6 — which is why its
+//! DRAM footprint saturates at 8 partitions (paper §4).
+
+use super::graph::{Graph, GraphBuilder};
+use super::layer::{ConvSpec, LayerKind, PoolSpec};
+use super::tensor::TensorShape;
+
+pub fn vgg16() -> Graph {
+    vgg("vgg16", [(1, 64, 2), (2, 128, 2), (3, 256, 3), (4, 512, 3), (5, 512, 3)])
+}
+
+/// VGG-19 (configuration E): four convs in blocks 3–5.
+pub fn vgg19() -> Graph {
+    vgg("vgg19", [(1, 64, 2), (2, 128, 2), (3, 256, 4), (4, 512, 4), (5, 512, 4)])
+}
+
+fn vgg(name: &str, blocks: [(usize, usize, usize); 5]) -> Graph {
+    let mut b = GraphBuilder::new(name, TensorShape::new(3, 224, 224));
+    let mut x = 0;
+
+    for (blk, ch, n) in blocks {
+        for i in 1..=n {
+            let c = b.then(
+                format!("conv{blk}_{i}"),
+                LayerKind::Conv(ConvSpec::new(ch, 3, 1, 1)),
+                x,
+            );
+            x = b.then(format!("relu{blk}_{i}"), LayerKind::Relu, c);
+        }
+        x = b.then(format!("pool{blk}"), LayerKind::Pool(PoolSpec::max(2, 2)), x);
+    }
+
+    // Classifier.
+    for (i, out) in [(6usize, 4096usize), (7, 4096)] {
+        let fc = b.then(format!("fc{i}"), LayerKind::FullyConnected { out_features: out }, x);
+        let r = b.then(format!("relu{i}"), LayerKind::Relu, fc);
+        x = b.then(format!("drop{i}"), LayerKind::Dropout, r);
+    }
+    let fc8 = b.then("fc8", LayerKind::FullyConnected { out_features: 1000 }, x);
+    b.then("prob", LayerKind::Softmax, fc8);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn has_16_weight_layers() {
+        let g = vgg16();
+        let convs = g.count_kind(|k| matches!(k, LayerKind::Conv(_)));
+        let fcs = g.count_kind(|k| matches!(k, LayerKind::FullyConnected { .. }));
+        assert_eq!(convs, 13);
+        assert_eq!(fcs, 3);
+        // "the numbers of layers were chosen to be 16" (paper §4)
+        assert_eq!(convs + fcs, 16);
+    }
+
+    #[test]
+    fn parameter_count_matches_publication() {
+        // VGG-16: 138.36 M parameters.
+        let params = vgg16().param_elems() as f64;
+        assert!(
+            (params / 1e6 - 138.36).abs() < 0.5,
+            "params = {:.2} M",
+            params / 1e6
+        );
+    }
+
+    #[test]
+    fn flops_match_publication() {
+        // ≈15.5 GMACs → ≈30.9 GFLOPs per image at 224×224 (+ small eltwise ops).
+        let f = vgg16().flops_per_image();
+        assert!((f / 1e9 - 30.96).abs() < 0.5, "flops = {:.2} G", f / 1e9);
+    }
+
+    #[test]
+    fn vgg19_matches_publication() {
+        // VGG-19: 143.67 M params, 16 convs + 3 FCs.
+        let g = vgg19();
+        let params = g.param_elems() as f64 / 1e6;
+        assert!((params - 143.67).abs() < 0.5, "params = {params:.2} M");
+        assert_eq!(g.count_kind(|k| matches!(k, LayerKind::Conv(_))), 16);
+        // ≈19.6 GMACs → ≈39.3 GFLOPs.
+        let f = g.flops_per_image() / 1e9;
+        assert!((38.0..40.5).contains(&f), "flops = {f:.1} G");
+    }
+
+    #[test]
+    fn spatial_pipeline_is_correct() {
+        let g = vgg16();
+        // After the five pools the map is 512x7x7.
+        let pool5 = g.layers().iter().find(|l| l.name == "pool5").unwrap();
+        assert_eq!(pool5.out, TensorShape::new(512, 7, 7));
+        assert_eq!(g.layers().last().unwrap().out, TensorShape::flat(1000));
+    }
+}

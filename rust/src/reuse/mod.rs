@@ -1,0 +1,16 @@
+//! Analytical loop-blocking / data-reuse model.
+//!
+//! This is the substitute for MKL-DNN's blocked convolution schedules and
+//! for the systematic blocking analysis of Yang et al. (the paper's
+//! reference [16]): given a layer, a synchronous core group, a batch and
+//! an on-chip capacity share, it predicts how many bytes must cross the
+//! main-memory interface and how many FLOPs are executed — i.e. it turns
+//! each CNN layer into an execution [`Phase`] the simulator can run.
+
+mod blocking;
+mod phase;
+mod traffic;
+
+pub use blocking::{Blocking, BlockingOptimizer, Schedule};
+pub use phase::{Phase, PhaseClass, PhaseCompiler};
+pub use traffic::{model_weight_bytes, LayerTraffic, TrafficModel};

@@ -1,0 +1,239 @@
+//! Layer → execution-phase conversion.
+//!
+//! A [`Phase`] is the atom the simulator executes: a chunk of work with a
+//! total FLOP count, a total main-memory byte count, and a compute class
+//! that selects the achievable fraction of peak FLOPs. One partition
+//! processing one batch executes the phase list in order (CNN layers are
+//! strictly sequential — each consumes its predecessor's output).
+
+use super::traffic::TrafficModel;
+use crate::config::AcceleratorConfig;
+use crate::model::{Graph, LayerKind};
+use crate::util::units::{Bytes, Flops, FlopsPerS, Seconds};
+
+/// How efficiently a phase uses the cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseClass {
+    /// Matmul-like kernels (conv, FC): run near the conv efficiency knob.
+    ComputeDense,
+    /// Streaming element-wise / pooling / normalization / copy work.
+    MemoryBound,
+}
+
+/// One schedulable unit of work for a partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    /// Layer name (for traces and Table 1 rows).
+    pub name: String,
+    /// Index of the source layer in the graph.
+    pub layer_id: usize,
+    pub class: PhaseClass,
+    /// Total FLOPs over the partition's batch.
+    pub flops: Flops,
+    /// Total main-memory bytes over the partition's batch.
+    pub bytes: Bytes,
+}
+
+impl Phase {
+    /// Pure compute time on `cores` at the class's efficiency — the
+    /// phase's duration if memory bandwidth were infinite.
+    pub fn compute_time(&self, accel: &AcceleratorConfig, cores: usize) -> Seconds {
+        let eff = match self.class {
+            PhaseClass::ComputeDense => accel.conv_efficiency,
+            PhaseClass::MemoryBound => accel.elementwise_efficiency,
+        };
+        let rate = FlopsPerS(accel.core_flops.0 * cores as f64 * eff);
+        if self.flops.0 == 0.0 {
+            Seconds(0.0)
+        } else {
+            rate.time_for(self.flops)
+        }
+    }
+
+    /// Bandwidth this phase wants in order to run at full compute speed.
+    pub fn bandwidth_demand(&self, accel: &AcceleratorConfig, cores: usize) -> f64 {
+        let t = self.compute_time(accel, cores);
+        if t.0 <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.bytes.0 / t.0
+        }
+    }
+}
+
+/// Compiles a graph into the phase list for one partition configuration.
+#[derive(Debug, Clone)]
+pub struct PhaseCompiler {
+    pub accel: AcceleratorConfig,
+    /// Cores in the (synchronous) partition.
+    pub cores: usize,
+    /// Images per partition-batch.
+    pub batch: usize,
+    /// Multiplier on weight traffic (1.0 = modelled; ≠1 only in the
+    /// weight-share sensitivity ablation).
+    pub weight_scale: f64,
+}
+
+impl PhaseCompiler {
+    pub fn new(accel: &AcceleratorConfig, cores: usize, batch: usize) -> Self {
+        Self { accel: accel.clone(), cores, batch, weight_scale: 1.0 }
+    }
+
+    /// Scale the weight-traffic component (ablation knob).
+    pub fn with_weight_scale(mut self, scale: f64) -> Self {
+        self.weight_scale = scale;
+        self
+    }
+
+    /// Full-machine synchronous baseline (no partitioning): all cores,
+    /// batch = cores (paper: one image per core per weight loading).
+    pub fn synchronous(accel: &AcceleratorConfig) -> Self {
+        Self::new(accel, accel.cores, accel.cores)
+    }
+
+    pub fn compile(&self, graph: &Graph) -> Vec<Phase> {
+        let model = TrafficModel::new(&self.accel, self.cores);
+        let mut phases = Vec::with_capacity(graph.len());
+        for layer in graph.layers() {
+            if matches!(layer.kind, LayerKind::Input) {
+                continue;
+            }
+            let t = model.layer_traffic(graph, layer, self.batch);
+            let in_shapes = graph.in_shapes(layer.id);
+            let flops = layer.flops_per_image(&in_shapes) * self.batch as f64;
+            let class = if layer.is_compute_dense() {
+                PhaseClass::ComputeDense
+            } else {
+                PhaseClass::MemoryBound
+            };
+            phases.push(Phase {
+                name: layer.name.clone(),
+                layer_id: layer.id,
+                class,
+                flops: Flops(flops),
+                bytes: Bytes(
+                    t.weights.0 * self.weight_scale + t.inputs.0 + t.outputs.0,
+                ),
+            });
+        }
+        phases
+    }
+
+    /// Lower bound on one batch's makespan: max of the compute-only time
+    /// and the memory-only time (the roofline).
+    pub fn roofline_time(&self, phases: &[Phase]) -> Seconds {
+        let compute: f64 = phases
+            .iter()
+            .map(|p| p.compute_time(&self.accel, self.cores).0)
+            .sum();
+        let bytes: f64 = phases.iter().map(|p| p.bytes.0).sum();
+        Seconds(compute.max(bytes / self.accel.mem_bw.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet50;
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    #[test]
+    fn compiles_every_non_input_layer() {
+        let g = resnet50();
+        let phases = PhaseCompiler::synchronous(&knl()).compile(&g);
+        assert_eq!(phases.len(), g.len() - 1);
+        // Fused/aliased layers (ReLU, Split, Dropout) are traffic-free;
+        // everything else must move bytes.
+        for p in &phases {
+            let fused = p.name.ends_with("_relu")
+                || p.name.contains("relu")
+                || p.name.ends_with("_split")
+                || p.name.contains("drop");
+            if !fused {
+                assert!(p.bytes.0 > 0.0, "{} moved no bytes", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_phases_are_compute_dense_and_others_not() {
+        let g = resnet50();
+        let phases = PhaseCompiler::synchronous(&knl()).compile(&g);
+        let conv = phases.iter().find(|p| p.name == "conv2_a_3x3b").unwrap();
+        assert_eq!(conv.class, PhaseClass::ComputeDense);
+        let bn = phases.iter().find(|p| p.name == "conv2_a_3x3b_bn").unwrap();
+        assert_eq!(bn.class, PhaseClass::MemoryBound);
+        // BN moves bytes but does trivial compute → extreme bandwidth demand.
+        assert!(bn.bandwidth_demand(&knl(), 64) > conv.bandwidth_demand(&knl(), 64));
+    }
+
+    #[test]
+    fn bandwidth_demand_fluctuates_across_layers() {
+        // The premise of the paper (Fig 1): demand varies wildly by layer.
+        let g = resnet50();
+        let accel = knl();
+        let phases = PhaseCompiler::synchronous(&accel).compile(&g);
+        let demands: Vec<f64> = phases
+            .iter()
+            .map(|p| p.bandwidth_demand(&accel, 64).min(2e12))
+            .collect();
+        let max = demands.iter().cloned().fold(0.0, f64::max);
+        let min = demands.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            max / min > 10.0,
+            "expected >10x fluctuation, got {max:.2e}/{min:.2e}"
+        );
+    }
+
+    #[test]
+    fn table1_conv_demands_are_in_paper_range() {
+        // Coarse calibration check: the named Table-1 convs should demand
+        // bandwidth in the tens-to-hundreds of GB/s at full-machine batch.
+        let g = resnet50();
+        let accel = knl();
+        let pc = PhaseCompiler::synchronous(&accel);
+        let phases = pc.compile(&g);
+        for (name, lo, hi) in [
+            ("conv2_a_1x1a", 100.0, 320.0),  // paper: 174 GB/s
+            ("conv3_b_3x3b", 20.0, 120.0),   // paper: 55 GB/s
+            ("conv5_c_3x3b", 5.0, 60.0),     // paper: 15 GB/s
+        ] {
+            let p = phases.iter().find(|p| p.name == name).unwrap();
+            let d = p.bandwidth_demand(&accel, 64) / 1e9;
+            assert!(
+                (lo..hi).contains(&d),
+                "{name}: demand {d:.1} GB/s outside [{lo}, {hi}]"
+            );
+        }
+    }
+
+    #[test]
+    fn roofline_is_max_of_compute_and_memory() {
+        let g = resnet50();
+        let accel = knl();
+        let pc = PhaseCompiler::synchronous(&accel);
+        let phases = pc.compile(&g);
+        let t = pc.roofline_time(&phases);
+        let compute: f64 = phases.iter().map(|p| p.compute_time(&accel, 64).0).sum();
+        let mem = phases.iter().map(|p| p.bytes.0).sum::<f64>() / accel.mem_bw.0;
+        assert!((t.0 - compute.max(mem)).abs() < 1e-12);
+        assert!(t.0 > 0.0);
+    }
+
+    #[test]
+    fn smaller_batch_scales_activation_but_not_weight_traffic() {
+        let g = resnet50();
+        let accel = knl();
+        let full = PhaseCompiler::new(&accel, 64, 64).compile(&g);
+        let half = PhaseCompiler::new(&accel, 64, 32).compile(&g);
+        let conv_full = full.iter().find(|p| p.name == "conv2_a_3x3b").unwrap();
+        let conv_half = half.iter().find(|p| p.name == "conv2_a_3x3b").unwrap();
+        // Flops halve exactly; bytes shrink by less (weights constant).
+        assert!((conv_full.flops.0 / conv_half.flops.0 - 2.0).abs() < 1e-9);
+        let ratio = conv_full.bytes.0 / conv_half.bytes.0;
+        assert!(ratio < 2.0 && ratio > 1.5, "ratio = {ratio}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Per-layer main-memory traffic accounting.
+
+use super::blocking::{Blocking, BlockingOptimizer};
+use crate::config::AcceleratorConfig;
+use crate::model::{Graph, Layer};
+use crate::util::units::Bytes;
+
+/// Main-memory traffic of one layer processing one partition-batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerTraffic {
+    /// Kernel weights streamed from main memory (already multiplied by
+    /// the blocking's weight passes).
+    pub weights: Bytes,
+    /// Input activations read (already multiplied by the re-read factor).
+    pub inputs: Bytes,
+    /// Output activations written.
+    pub outputs: Bytes,
+}
+
+impl LayerTraffic {
+    pub fn total(&self) -> Bytes {
+        self.weights + self.inputs + self.outputs
+    }
+
+    /// Weight share of total traffic — the quantity Fig 2 plots.
+    pub fn weight_ratio(&self) -> f64 {
+        let t = self.total().0;
+        if t == 0.0 {
+            0.0
+        } else {
+            self.weights.0 / t
+        }
+    }
+}
+
+/// Traffic model bound to an accelerator and a partition size.
+#[derive(Debug, Clone)]
+pub struct TrafficModel {
+    pub optimizer: BlockingOptimizer,
+    pub elem_bytes: f64,
+}
+
+impl TrafficModel {
+    pub fn new(accel: &AcceleratorConfig, partition_cores: usize) -> Self {
+        Self {
+            optimizer: BlockingOptimizer::for_partition(accel, partition_cores),
+            elem_bytes: accel.elem_bytes,
+        }
+    }
+
+    /// Traffic for `layer` over a batch of `batch` images, with the
+    /// blocking the optimizer picks.
+    pub fn layer_traffic(&self, graph: &Graph, layer: &Layer, batch: usize) -> LayerTraffic {
+        let in_shapes = graph.in_shapes(layer.id);
+        let blocking = self.optimizer.choose(layer, &in_shapes, batch);
+        self.layer_traffic_with(layer, &in_shapes, batch, &blocking)
+    }
+
+    /// Traffic under an explicit blocking (used by ablations).
+    pub fn layer_traffic_with(
+        &self,
+        layer: &Layer,
+        in_shapes: &[crate::model::TensorShape],
+        batch: usize,
+        blocking: &Blocking,
+    ) -> LayerTraffic {
+        let w = layer.param_elems(in_shapes.first().copied()) as f64 * self.elem_bytes;
+        let i = layer.input_elems(in_shapes) as f64 * self.elem_bytes;
+        let o = layer.output_elems() as f64 * self.elem_bytes;
+        LayerTraffic {
+            weights: Bytes(w * blocking.weight_passes),
+            inputs: Bytes(i * blocking.kappa_in * batch as f64),
+            outputs: Bytes(o * batch as f64),
+        }
+    }
+
+    /// Whole-network traffic for a batch: per-layer breakdown plus total.
+    pub fn network_traffic(&self, graph: &Graph, batch: usize) -> (Vec<LayerTraffic>, LayerTraffic) {
+        let mut per_layer = Vec::with_capacity(graph.len());
+        let mut total = LayerTraffic { weights: Bytes::ZERO, inputs: Bytes::ZERO, outputs: Bytes::ZERO };
+        for layer in graph.layers() {
+            let t = if matches!(layer.kind, crate::model::LayerKind::Input) {
+                LayerTraffic { weights: Bytes::ZERO, inputs: Bytes::ZERO, outputs: Bytes::ZERO }
+            } else {
+                self.layer_traffic(graph, layer, batch)
+            };
+            total.weights += t.weights;
+            total.inputs += t.inputs;
+            total.outputs += t.outputs;
+            per_layer.push(t);
+        }
+        (per_layer, total)
+    }
+}
+
+/// Total weight bytes of a model (one copy) — the quantity that
+/// replicates per partition and fills DRAM (paper §4's VGG-16 limit).
+pub fn model_weight_bytes(graph: &Graph, elem_bytes: f64) -> Bytes {
+    let mut total = 0.0;
+    for layer in graph.layers() {
+        let in_shape = layer.inputs.first().map(|&p| graph.layer(p).out);
+        total += layer.param_elems(in_shape) as f64 * elem_bytes;
+    }
+    Bytes(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{googlenet, resnet50, vgg16};
+
+    fn knl_model() -> TrafficModel {
+        TrafficModel::new(&AcceleratorConfig::knl_7210(), 64)
+    }
+
+    #[test]
+    fn model_weight_bytes_match_param_counts() {
+        let g = vgg16();
+        let w = model_weight_bytes(&g, 4.0);
+        // 138.36 M params × 4 B ≈ 553 MB.
+        assert!((w.0 / 1e6 - 553.4).abs() < 3.0, "w = {} MB", w.0 / 1e6);
+
+        let r = model_weight_bytes(&resnet50(), 4.0);
+        assert!((r.0 / 1e6 - 102.0).abs() < 3.0, "r = {} MB", r.0 / 1e6);
+
+        let gn = model_weight_bytes(&googlenet(), 4.0);
+        assert!(gn.0 / 1e6 < 30.0, "gn = {} MB", gn.0 / 1e6);
+    }
+
+    #[test]
+    fn one_by_one_conv_traffic_is_compulsory() {
+        // Conv2_1a analog: 64→64 1×1 at 56×56, batch 64.
+        let g = resnet50();
+        let layer = g.layers().iter().find(|l| l.name == "conv2_a_1x1a").unwrap();
+        let t = knl_model().layer_traffic(&g, layer, 64);
+        let img_bytes = 64.0 * 56.0 * 56.0 * 4.0;
+        assert!((t.inputs.0 - 64.0 * img_bytes).abs() < 1.0);
+        assert!((t.outputs.0 - 64.0 * img_bytes).abs() < 1.0);
+        // Weights once: 64×64×4 + bias.
+        assert!(t.weights.0 < 20_000.0);
+    }
+
+    #[test]
+    fn weight_ratio_declines_across_ilsvrc_winners() {
+        // The Fig 2 trend: newer models have smaller weight-traffic share.
+        let m = knl_model();
+        let ratio = |g: &Graph| {
+            let (_, total) = m.network_traffic(g, 64);
+            total.weight_ratio()
+        };
+        let alex = ratio(&crate::model::alexnet());
+        let vgg = ratio(&vgg16());
+        let goog = ratio(&googlenet());
+        let res = ratio(&resnet50());
+        assert!(alex > vgg, "alex {alex} vs vgg {vgg}");
+        assert!(vgg > res, "vgg {vgg} vs res {res}");
+        assert!(res > goog, "res {res} vs goog {goog}");
+        assert!(alex > 0.15, "alexnet should be weight-dominated: {alex}");
+        assert!(goog < 0.05, "googlenet should be activation-dominated: {goog}");
+    }
+
+    #[test]
+    fn smaller_partitions_pay_more_weight_traffic_per_image() {
+        // The paper's core tradeoff: per-image weight traffic grows as the
+        // partition (and its batch) shrinks.
+        let accel = AcceleratorConfig::knl_7210();
+        let g = resnet50();
+        let per_image_weights = |cores: usize, batch: usize| {
+            let m = TrafficModel::new(&accel, cores);
+            let (_, total) = m.network_traffic(&g, batch);
+            total.weights.0 / batch as f64
+        };
+        let sync = per_image_weights(64, 64);
+        let quarter = per_image_weights(16, 16);
+        assert!(
+            quarter > 3.0 * sync,
+            "16-core partition per-image weight traffic {quarter} should be ≈4× sync {sync}"
+        );
+    }
+
+    #[test]
+    fn network_totals_are_sums() {
+        let m = knl_model();
+        let g = resnet50();
+        let (per_layer, total) = m.network_traffic(&g, 8);
+        let sum: f64 = per_layer.iter().map(|t| t.total().0).sum();
+        assert!((sum - total.total().0).abs() < 1e-3);
+        assert_eq!(per_layer.len(), g.len());
+    }
+}

@@ -1,0 +1,133 @@
+//! The PJRT CPU client and compiled-executable cache.
+
+use super::manifest::{Manifest, StageMeta};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// One compiled stage: executable plus its metadata.
+pub struct StageExecutable {
+    pub meta: StageMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl StageExecutable {
+    /// Execute on a flat f32 input (row-major, shape per `meta`).
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.meta.input_elems() {
+            return Err(Error::Xla(format!(
+                "stage '{}' expects {} input elems, got {}",
+                self.meta.name,
+                self.meta.input_elems(),
+                input.len()
+            )));
+        }
+        let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = out.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        if v.len() != self.meta.output_elems() {
+            return Err(Error::Xla(format!(
+                "stage '{}' produced {} elems, expected {}",
+                self.meta.name,
+                v.len(),
+                self.meta.output_elems()
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Run the manifest's deterministic probe and verify the output
+    /// statistics — catches artifact/runtime skew right after compile.
+    pub fn self_check(&self) -> Result<()> {
+        let probe = Manifest::probe_input(&self.meta);
+        let y = self.run(&probe)?;
+        let mean = y.iter().map(|&v| v as f64).sum::<f64>() / y.len() as f64;
+        let check = &self.meta.check;
+        let tol = check.tolerance.max(1e-6);
+        if (mean - check.output_mean).abs() > tol {
+            return Err(Error::Artifact(format!(
+                "stage '{}' self-check failed: output mean {mean} vs expected {} (tol {tol})",
+                self.meta.name, check.output_mean
+            )));
+        }
+        for (i, (&got, &want)) in y.iter().zip(check.first8.iter()).enumerate() {
+            if (got as f64 - want).abs() > tol {
+                return Err(Error::Artifact(format!(
+                    "stage '{}' self-check failed at elem {i}: {got} vs {want}",
+                    self.meta.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A PJRT CPU client owning the compiled executables of one pipeline.
+///
+/// Each coordinator worker constructs its **own** `RuntimeClient` —
+/// mirroring the paper's setup of one independent framework instance per
+/// partition — so executions never share mutable state across threads.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, usize), StageExecutable>,
+}
+
+impl RuntimeClient {
+    /// Create a CPU client and eagerly compile the pipeline for `batch`.
+    pub fn new(manifest: &Manifest, batch: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut rt = Self { client, manifest: manifest.clone(), cache: HashMap::new() };
+        let names: Vec<String> = rt.manifest.stage_order.clone();
+        for name in names {
+            rt.compile_stage(&name, batch)?;
+        }
+        Ok(rt)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) one stage artifact.
+    pub fn compile_stage(&mut self, name: &str, batch: usize) -> Result<&StageExecutable> {
+        let key = (name.to_string(), batch);
+        if !self.cache.contains_key(&key) {
+            let meta = self.manifest.stage(name, batch)?.clone();
+            let path = self.manifest.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(key.clone(), StageExecutable { meta, exe });
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Fetch a previously compiled stage.
+    pub fn stage(&self, name: &str, batch: usize) -> Result<&StageExecutable> {
+        self.cache
+            .get(&(name.to_string(), batch))
+            .ok_or_else(|| Error::Artifact(format!("stage '{name}'@{batch} not compiled")))
+    }
+
+    /// Run a full pipeline pass: image batch in, logits out.
+    pub fn forward(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let order = &self.manifest.stage_order;
+        let mut x = input.to_vec();
+        for name in order {
+            x = self.stage(name, batch)?.run(&x)?;
+        }
+        Ok(x)
+    }
+
+    /// Self-check every compiled stage against its manifest vector.
+    pub fn self_check_all(&self) -> Result<()> {
+        for exe in self.cache.values() {
+            exe.self_check()?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,289 @@
+//! Artifact manifest: the contract between `aot.py` and the runtime.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Self-check vector for one artifact (deterministic probe input →
+/// expected output statistics).
+#[derive(Debug, Clone)]
+pub struct CheckVector {
+    pub output_mean: f64,
+    pub output_std: f64,
+    pub first8: Vec<f64>,
+    pub tolerance: f64,
+}
+
+/// Metadata for one compiled stage artifact.
+#[derive(Debug, Clone)]
+pub struct StageMeta {
+    pub name: String,
+    pub batch: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub flops: f64,
+    /// Parameters baked into this stage's HLO (for weight-traffic
+    /// metering in the coordinator).
+    pub param_elems: usize,
+    pub check: CheckVector,
+}
+
+impl StageMeta {
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Activation bytes this stage streams (in + out, fp32) — used by the
+    /// coordinator's traffic meter.
+    pub fn activation_bytes(&self) -> f64 {
+        (self.input_elems() + self.output_elems()) as f64 * 4.0
+    }
+
+    /// Bytes one execution moves: activations plus one weight read.
+    pub fn traffic_bytes(&self) -> f64 {
+        self.activation_bytes() + self.param_elems as f64 * 4.0
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            j.req_arr(key)?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| Error::json(0, format!("bad {key}"))))
+                .collect()
+        };
+        let check = j.req("check")?;
+        Ok(Self {
+            name: j.req_str("name")?.to_string(),
+            batch: j.req_usize("batch")?,
+            file: j.req_str("file")?.to_string(),
+            input_shape: shape("input_shape")?,
+            output_shape: shape("output_shape")?,
+            flops: j.req_f64("flops")?,
+            param_elems: j.req_usize("param_elems")?,
+            check: CheckVector {
+                output_mean: check.req_f64("output_mean")?,
+                output_std: check.req_f64("output_std")?,
+                first8: check
+                    .req_arr("first8")?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or_else(|| Error::json(0, "bad first8")))
+                    .collect::<Result<_>>()?,
+                tolerance: check.req_f64("tolerance")?,
+            },
+        })
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub seed: u64,
+    pub param_count: usize,
+    pub stage_order: Vec<String>,
+    pub batches: Vec<usize>,
+    pub stages: Vec<StageMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let version = j.req_usize("version")?;
+        if version != 2 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (want 2)"
+            )));
+        }
+        let stage_order = j
+            .req_arr("stage_order")?
+            .iter()
+            .map(|v| v.as_str().map(String::from).ok_or_else(|| Error::json(0, "bad stage_order")))
+            .collect::<Result<Vec<_>>>()?;
+        let batches = j
+            .req_arr("batches")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::json(0, "bad batches")))
+            .collect::<Result<Vec<_>>>()?;
+        let stages = j
+            .req_arr("stages")?
+            .iter()
+            .map(StageMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let m = Self {
+            dir: dir.to_path_buf(),
+            model: j.req_str("model")?.to_string(),
+            seed: j.req("seed")?.as_u64().unwrap_or(0),
+            param_count: j.req_usize("param_count")?,
+            stage_order,
+            batches,
+            stages,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural checks: every (stage, batch) combination exists, files
+    /// exist on disk, shapes chain stage-to-stage.
+    pub fn validate(&self) -> Result<()> {
+        for &b in &self.batches {
+            let mut prev: Option<&StageMeta> = None;
+            for name in &self.stage_order {
+                let s = self.stage(name, b)?;
+                if !self.dir.join(&s.file).exists() {
+                    return Err(Error::Artifact(format!("missing artifact file {}", s.file)));
+                }
+                if s.input_shape.first() != Some(&b) {
+                    return Err(Error::Artifact(format!(
+                        "{name}@{b}: leading dim {:?} != batch",
+                        s.input_shape
+                    )));
+                }
+                if let Some(p) = prev {
+                    if p.output_shape != s.input_shape {
+                        return Err(Error::Artifact(format!(
+                            "shape chain broken: {}→{} ({:?} vs {:?})",
+                            p.name, s.name, p.output_shape, s.input_shape
+                        )));
+                    }
+                }
+                prev = Some(s);
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up a stage by name and batch.
+    pub fn stage(&self, name: &str, batch: usize) -> Result<&StageMeta> {
+        self.stages
+            .iter()
+            .find(|s| s.name == name && s.batch == batch)
+            .ok_or_else(|| Error::Artifact(format!("no artifact for stage '{name}' batch {batch}")))
+    }
+
+    /// Pipeline in execution order for one batch size.
+    pub fn pipeline(&self, batch: usize) -> Result<Vec<&StageMeta>> {
+        self.stage_order.iter().map(|n| self.stage(n, batch)).collect()
+    }
+
+    /// Total FLOPs for one micro-batch through the full pipeline.
+    pub fn pipeline_flops(&self, batch: usize) -> Result<f64> {
+        Ok(self.pipeline(batch)?.iter().map(|s| s.flops).sum())
+    }
+
+    /// The deterministic probe input for a stage (must match
+    /// `aot.probe_input`: cos(idx * 0.7311) * 0.5).
+    pub fn probe_input(meta: &StageMeta) -> Vec<f32> {
+        let n: usize = meta.input_elems();
+        (0..n).map(|i| ((i as f32) * 0.7311).cos() * 0.5).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that need real artifacts live in rust/tests/ (integration);
+    /// here we test parsing against a synthetic manifest.
+    fn synthetic(dir: &Path) -> Manifest {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "HloModule y").unwrap();
+        let text = r#"{
+          "version": 2, "model": "tiny_cnn", "seed": 0, "layout": "NHWC",
+          "param_count": 123, "stage_order": ["a", "b"], "batches": [2],
+          "stages": [
+            {"name": "a", "batch": 2, "file": "a.hlo.txt",
+             "input_shape": [2, 4, 4, 3], "output_shape": [2, 4, 4, 8],
+             "dtype": "f32", "flops": 100.0, "param_elems": 40, "hlo_sha256": "x",
+             "check": {"output_mean": 0.1, "output_std": 0.2,
+                        "first8": [1, 2, 3, 4, 5, 6, 7, 8], "tolerance": 1e-4}},
+            {"name": "b", "batch": 2, "file": "b.hlo.txt",
+             "input_shape": [2, 4, 4, 8], "output_shape": [2, 10],
+             "dtype": "f32", "flops": 50.0, "param_elems": 10, "hlo_sha256": "y",
+             "check": {"output_mean": 0.0, "output_std": 1.0,
+                        "first8": [0, 0, 0, 0, 0, 0, 0, 0], "tolerance": 1e-4}}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ts_manifest_{name}"))
+    }
+
+    #[test]
+    fn parses_and_validates_synthetic_manifest() {
+        let dir = tmp("ok");
+        let m = synthetic(&dir);
+        assert_eq!(m.model, "tiny_cnn");
+        assert_eq!(m.stage_order, vec!["a", "b"]);
+        let a = m.stage("a", 2).unwrap();
+        assert_eq!(a.input_elems(), 2 * 4 * 4 * 3);
+        assert_eq!(a.activation_bytes(), ((96 + 256) * 4) as f64);
+        let pipe = m.pipeline(2).unwrap();
+        assert_eq!(pipe.len(), 2);
+        assert_eq!(m.pipeline_flops(2).unwrap(), 150.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_detected() {
+        let dir = tmp("missing");
+        let _ = synthetic(&dir);
+        std::fs::remove_file(dir.join("b.hlo.txt")).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing artifact"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn broken_shape_chain_is_detected() {
+        let dir = tmp("chain");
+        let _ = synthetic(&dir);
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .unwrap()
+            .replace("[2, 4, 4, 8], \"output_shape\": [2, 10]", "[2, 9, 9, 9], \"output_shape\": [2, 10]");
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("shape chain"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn probe_matches_python_formula() {
+        let meta = StageMeta {
+            name: "a".into(),
+            batch: 1,
+            file: "f".into(),
+            input_shape: vec![1, 2, 2, 1],
+            output_shape: vec![1, 2],
+            flops: 1.0,
+            param_elems: 0,
+            check: CheckVector { output_mean: 0.0, output_std: 0.0, first8: vec![], tolerance: 1e-4 },
+        };
+        let p = Manifest::probe_input(&meta);
+        assert_eq!(p.len(), 4);
+        assert!((p[0] - 0.5).abs() < 1e-6); // cos(0)·0.5
+        assert!((p[1] - (0.7311f32.cos() * 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_dir_has_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,33 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python is build-time only — after `make artifacts` the binary is
+//! self-contained: `HloModuleProto::from_text_file` → `client.compile`
+//! → `execute`, per /opt/xla-example/load_hlo.
+
+mod client;
+mod manifest;
+
+pub use client::{RuntimeClient, StageExecutable};
+pub use manifest::{CheckVector, Manifest, StageMeta};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$TRAFFICSHAPE_ARTIFACTS`, else
+/// `./artifacts`, else `../artifacts` (for tests run from subdirs).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("TRAFFICSHAPE_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for cand in [DEFAULT_ARTIFACT_DIR, "../artifacts", "../../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}

@@ -1,0 +1,199 @@
+//! Adaptive partition-count selection — the knob the paper leaves to the
+//! operator ("the degree of partitioning determines a tradeoff") turned
+//! into a controller.
+//!
+//! Two modes:
+//! * [`AdaptivePartitioner::select`] — exhaustive offline auto-tune:
+//!   probe every feasible candidate and return the scored ranking.
+//! * [`AdaptivePartitioner::select_online`] — hill-climbing with a probe
+//!   budget: double the partition count while throughput improves by
+//!   more than a threshold; models a deployment-time controller that
+//!   cannot afford a full sweep.
+
+use super::experiment::PartitionExperiment;
+use super::scheduler::StaggerPolicy;
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+
+/// Score of one probed candidate.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub partitions: usize,
+    /// Relative performance vs the synchronous baseline (1.0 = parity).
+    pub relative_performance: f64,
+    pub std_reduction: f64,
+}
+
+/// Decision returned by the controller.
+#[derive(Debug, Clone)]
+pub struct AdaptiveDecision {
+    pub best: Candidate,
+    /// All feasible probes in the order evaluated.
+    pub probes: Vec<Candidate>,
+    /// Candidates skipped for DRAM infeasibility.
+    pub skipped: Vec<usize>,
+}
+
+/// The controller.
+#[derive(Debug, Clone)]
+pub struct AdaptivePartitioner {
+    accel: AcceleratorConfig,
+    graph: Graph,
+    /// Candidate partition counts in ascending order.
+    pub candidates: Vec<usize>,
+    /// Steady-state batches per probe (probe fidelity/cost knob).
+    pub probe_batches: usize,
+    /// Minimum relative improvement for the online climber to keep going.
+    pub min_gain_step: f64,
+}
+
+impl AdaptivePartitioner {
+    pub fn new(accel: &AcceleratorConfig, graph: &Graph) -> Self {
+        let mut candidates: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
+            .into_iter()
+            .filter(|&n| accel.cores % n == 0 && n <= accel.cores)
+            .collect();
+        candidates.sort_unstable();
+        Self {
+            accel: accel.clone(),
+            graph: graph.clone(),
+            candidates,
+            probe_batches: 4,
+            min_gain_step: 0.01,
+        }
+    }
+
+    fn probe(&self, baseline: &super::analysis::ShapingAnalysis, n: usize) -> Result<Candidate> {
+        let report = PartitionExperiment::new(&self.accel, &self.graph)
+            .partitions(n)
+            .steady_batches(self.probe_batches)
+            .stagger(StaggerPolicy::UniformPhase)
+            .run_against(baseline)?;
+        Ok(Candidate {
+            partitions: n,
+            relative_performance: report.relative_performance,
+            std_reduction: report.std_reduction,
+        })
+    }
+
+    fn baseline(&self) -> Result<super::analysis::ShapingAnalysis> {
+        PartitionExperiment::new(&self.accel, &self.graph)
+            .steady_batches(self.probe_batches)
+            .run_baseline()
+    }
+
+    /// Exhaustive auto-tune over all feasible candidates.
+    pub fn select(&self) -> Result<AdaptiveDecision> {
+        let baseline = self.baseline()?;
+        let mut probes = vec![Candidate {
+            partitions: 1,
+            relative_performance: 1.0,
+            std_reduction: 0.0,
+        }];
+        let mut skipped = Vec::new();
+        for &n in &self.candidates {
+            if n == 1 {
+                continue;
+            }
+            match self.probe(&baseline, n) {
+                Ok(c) => probes.push(c),
+                Err(Error::InfeasiblePartitioning(_)) => skipped.push(n),
+                Err(e) => return Err(e),
+            }
+        }
+        let best = *probes
+            .iter()
+            .max_by(|a, b| {
+                a.relative_performance
+                    .partial_cmp(&b.relative_performance)
+                    .unwrap()
+            })
+            .expect("probes never empty");
+        Ok(AdaptiveDecision { best, probes, skipped })
+    }
+
+    /// Hill-climb: keep doubling while each step improves by at least
+    /// `min_gain_step`. Probes O(log n) candidates instead of all.
+    pub fn select_online(&self) -> Result<AdaptiveDecision> {
+        let baseline = self.baseline()?;
+        let mut probes = vec![Candidate {
+            partitions: 1,
+            relative_performance: 1.0,
+            std_reduction: 0.0,
+        }];
+        let mut skipped = Vec::new();
+        let mut best = probes[0];
+        for &n in &self.candidates {
+            if n == 1 {
+                continue;
+            }
+            match self.probe(&baseline, n) {
+                Ok(c) => {
+                    probes.push(c);
+                    if c.relative_performance >= best.relative_performance + self.min_gain_step {
+                        best = c;
+                    } else {
+                        break; // improvement stalled — stop climbing
+                    }
+                }
+                Err(Error::InfeasiblePartitioning(_)) => {
+                    skipped.push(n);
+                    break; // larger n only gets more infeasible
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(AdaptiveDecision { best, probes, skipped })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{resnet50, vgg16};
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    #[test]
+    fn offline_tuner_picks_partitioning_for_resnet() {
+        let d = AdaptivePartitioner::new(&knl(), &resnet50()).select().unwrap();
+        assert!(d.best.partitions > 1, "controller must discover the win");
+        assert!(d.best.relative_performance > 1.05);
+        // Probes include the baseline.
+        assert!(d.probes.iter().any(|c| c.partitions == 1));
+    }
+
+    #[test]
+    fn tuner_respects_dram_for_vgg() {
+        let d = AdaptivePartitioner::new(&knl(), &vgg16()).select().unwrap();
+        assert!(d.skipped.contains(&16), "VGG@16 must be skipped: {:?}", d.skipped);
+        assert!(d.best.partitions <= 8);
+    }
+
+    #[test]
+    fn unlimited_bandwidth_keeps_sync() {
+        // No bottleneck → nothing to shape → best stays at 1 partition.
+        let accel = AcceleratorConfig::knl_unlimited_bw();
+        let d = AdaptivePartitioner::new(&accel, &resnet50()).select().unwrap();
+        assert_eq!(d.best.partitions, 1, "probes: {:?}", d.probes);
+    }
+
+    #[test]
+    fn online_matches_offline_within_a_step() {
+        let p = AdaptivePartitioner::new(&knl(), &resnet50());
+        let off = p.select().unwrap();
+        let on = p.select_online().unwrap();
+        // Hill climbing may stop one doubling early but must capture
+        // most of the available gain.
+        assert!(
+            on.best.relative_performance >= 1.0 + 0.6 * (off.best.relative_performance - 1.0),
+            "online {:?} vs offline {:?}",
+            on.best,
+            off.best
+        );
+        assert!(on.probes.len() <= off.probes.len());
+    }
+}

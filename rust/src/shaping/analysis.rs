@@ -1,0 +1,118 @@
+//! Traffic-shaping analysis of a simulation outcome.
+
+use crate::sim::SimOutcome;
+use crate::util::stats::Summary;
+
+/// The paper's bandwidth statistics for one run (computed over the
+/// profiler-style sampled series, like the hardware counters they used).
+#[derive(Debug, Clone, Copy)]
+pub struct ShapingAnalysis {
+    /// Summary of the sampled aggregate bandwidth (GB/s).
+    pub bw: Summary,
+    /// Makespan in seconds.
+    pub makespan: f64,
+    /// Images processed per second.
+    pub throughput: f64,
+    /// Fraction of time the memory pool was ≥95% utilized.
+    pub saturated_frac: f64,
+}
+
+impl ShapingAnalysis {
+    pub fn of(outcome: &SimOutcome, samples: usize, total_images: usize, peak_gbps: f64) -> Self {
+        let gbps = outcome.trace.sampled_gbps(samples);
+        let bw = Summary::of(&gbps);
+        let makespan = outcome.makespan.0;
+        let sat = gbps.iter().filter(|&&g| g >= peak_gbps * 0.95).count() as f64
+            / gbps.len().max(1) as f64;
+        Self {
+            bw,
+            makespan,
+            throughput: if makespan > 0.0 { total_images as f64 / makespan } else { 0.0 },
+            saturated_frac: sat,
+        }
+    }
+
+    /// σ(BW) reduction of `self` (partitioned) vs `base` (sync), as a
+    /// fraction (0.20 = "reduced by 20.0%" in the paper's wording).
+    pub fn std_reduction_vs(&self, base: &ShapingAnalysis) -> f64 {
+        if base.bw.std <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.bw.std / base.bw.std
+        }
+    }
+
+    /// Mean-BW increase vs `base` as a fraction (0.152 = "+15.2%").
+    pub fn avg_increase_vs(&self, base: &ShapingAnalysis) -> f64 {
+        if base.bw.mean <= 0.0 {
+            0.0
+        } else {
+            self.bw.mean / base.bw.mean - 1.0
+        }
+    }
+
+    /// Relative performance vs `base` (1.08 = "+8.0%").
+    pub fn relative_performance_vs(&self, base: &ShapingAnalysis) -> f64 {
+        if base.throughput <= 0.0 {
+            0.0
+        } else {
+            self.throughput / base.throughput
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::reuse::{Phase, PhaseClass};
+    use crate::sim::{SimEngine, Workload};
+    use crate::util::units::{Bytes, Flops};
+
+    fn toy_outcome(bytes: f64) -> SimOutcome {
+        let mut a = AcceleratorConfig::knl_7210();
+        a.cores = 2;
+        a.core_flops = crate::util::units::FlopsPerS(1.0);
+        a.mem_bw = crate::util::units::BytesPerS(100.0);
+        a.conv_efficiency = 1.0;
+        let ph = Phase {
+            name: "p".into(),
+            layer_id: 0,
+            class: PhaseClass::ComputeDense,
+            flops: Flops(2.0),
+            bytes: Bytes(bytes),
+        };
+        let w = Workload::new("w", 2, vec![ph], 1);
+        SimEngine::new(&a).run(&[w]).unwrap()
+    }
+
+    #[test]
+    fn computes_throughput_and_saturation() {
+        // 2 cores × 1 FLOP/s, 2 FLOPs → 1 s; 100 bytes → demand 100 B/s
+        // = peak → saturated the whole run.
+        let out = toy_outcome(100.0);
+        let a = ShapingAnalysis::of(&out, 16, 4, 100.0 / 1e9);
+        assert!((a.makespan - 1.0).abs() < 1e-9);
+        assert!((a.throughput - 4.0).abs() < 1e-9);
+        assert!((a.saturated_frac - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comparisons_have_paper_sign_conventions() {
+        let base = ShapingAnalysis {
+            bw: Summary { count: 10, mean: 100.0, std: 50.0, min: 0.0, max: 200.0 },
+            makespan: 2.0,
+            throughput: 32.0,
+            saturated_frac: 0.5,
+        };
+        let shaped = ShapingAnalysis {
+            bw: Summary { count: 10, mean: 115.0, std: 32.0, min: 50.0, max: 150.0 },
+            makespan: 1.85,
+            throughput: 34.6,
+            saturated_frac: 0.2,
+        };
+        assert!((shaped.std_reduction_vs(&base) - 0.36).abs() < 1e-9);
+        assert!((shaped.avg_increase_vs(&base) - 0.15).abs() < 1e-9);
+        assert!((shaped.relative_performance_vs(&base) - 34.6 / 32.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,30 @@
+//! Statistical memory traffic shaping by partitioning compute units —
+//! the paper's contribution.
+//!
+//! * [`PartitionPlan`] divides the machine's cores into `n` equal
+//!   synchronous groups, each assigned `total_batch / n` images.
+//! * [`StaggerPolicy`] decides how the asynchronous partitions are
+//!   de-phased relative to each other (the paper lets them drift; in the
+//!   deterministic fluid model symmetric partitions would stay in
+//!   lockstep, so the steady-state asynchrony is injected explicitly).
+//! * [`PartitionExperiment`] runs baseline-vs-partitioned simulations and
+//!   produces the paper's Fig-5 metrics: relative performance, σ(BW)
+//!   reduction and mean-BW increase.
+//! * [`TradeoffModel`] is the closed-form account of the two opposing
+//!   effects (reuse loss vs shaping gain).
+
+mod adaptive;
+mod analysis;
+mod experiment;
+mod mixed;
+mod partitioner;
+mod scheduler;
+mod tradeoff;
+
+pub use adaptive::{AdaptiveDecision, AdaptivePartitioner, Candidate};
+pub use analysis::ShapingAnalysis;
+pub use experiment::{PartitionExperiment, ShapingReport};
+pub use mixed::{proportional_cores, MixedReport, MixedWorkloadExperiment, Tenant};
+pub use partitioner::PartitionPlan;
+pub use scheduler::{build_workloads, StaggerPolicy};
+pub use tradeoff::TradeoffModel;

@@ -1,0 +1,97 @@
+//! Dividing compute units into synchronous partitions.
+
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::sim::DramModel;
+
+/// A validated partitioning of the machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionPlan {
+    /// Number of partitions n.
+    pub partitions: usize,
+    /// Cores per partition (machine cores / n, exact division enforced).
+    pub cores_per_partition: usize,
+    /// Images per partition-batch (total batch / n, exact division
+    /// enforced — the paper keeps 64 images in flight machine-wide).
+    pub batch_per_partition: usize,
+}
+
+impl PartitionPlan {
+    /// Build a plan for `n` partitions with the paper's invariant:
+    /// total in-flight images == machine cores (one image per core).
+    pub fn new(accel: &AcceleratorConfig, n: usize) -> Result<Self> {
+        Self::with_total_batch(accel, n, accel.cores)
+    }
+
+    /// Build a plan with an explicit machine-wide batch.
+    pub fn with_total_batch(accel: &AcceleratorConfig, n: usize, total_batch: usize) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::InfeasiblePartitioning("0 partitions".into()));
+        }
+        if accel.cores % n != 0 {
+            return Err(Error::InfeasiblePartitioning(format!(
+                "{} cores not divisible into {n} partitions",
+                accel.cores
+            )));
+        }
+        if total_batch % n != 0 {
+            return Err(Error::InfeasiblePartitioning(format!(
+                "batch {total_batch} not divisible into {n} partitions"
+            )));
+        }
+        Ok(Self {
+            partitions: n,
+            cores_per_partition: accel.cores / n,
+            batch_per_partition: total_batch / n,
+        })
+    }
+
+    /// Total images in flight machine-wide.
+    pub fn total_batch(&self) -> usize {
+        self.partitions * self.batch_per_partition
+    }
+
+    /// Check the DRAM capacity constraint for this plan (the rule that
+    /// caps VGG-16 at 8 partitions in the paper).
+    pub fn check_capacity(&self, accel: &AcceleratorConfig, graph: &Graph) -> Result<()> {
+        DramModel::new(accel).check(graph, self.partitions, self.total_batch())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{resnet50, vgg16};
+
+    #[test]
+    fn divides_cores_and_batch_evenly() {
+        let accel = AcceleratorConfig::knl_7210();
+        for n in [1, 2, 4, 8, 16, 32, 64] {
+            let p = PartitionPlan::new(&accel, n).unwrap();
+            assert_eq!(p.cores_per_partition * n, 64);
+            assert_eq!(p.batch_per_partition * n, 64);
+            assert_eq!(p.total_batch(), 64);
+        }
+    }
+
+    #[test]
+    fn rejects_non_divisors() {
+        let accel = AcceleratorConfig::knl_7210();
+        assert!(PartitionPlan::new(&accel, 0).is_err());
+        assert!(PartitionPlan::new(&accel, 3).is_err());
+        assert!(PartitionPlan::new(&accel, 5).is_err());
+        // 128 partitions of a 64-core machine: batch divides, cores don't.
+        assert!(PartitionPlan::new(&accel, 128).is_err());
+    }
+
+    #[test]
+    fn capacity_check_delegates_to_dram_model() {
+        let accel = AcceleratorConfig::knl_7210();
+        let p8 = PartitionPlan::new(&accel, 8).unwrap();
+        let p16 = PartitionPlan::new(&accel, 16).unwrap();
+        assert!(p8.check_capacity(&accel, &vgg16()).is_ok());
+        assert!(p16.check_capacity(&accel, &vgg16()).is_err());
+        assert!(p16.check_capacity(&accel, &resnet50()).is_ok());
+    }
+}

@@ -1,0 +1,152 @@
+//! Asynchronous partition scheduling: turning a plan into workloads.
+
+use super::partitioner::PartitionPlan;
+use crate::config::AcceleratorConfig;
+use crate::model::Graph;
+use crate::reuse::PhaseCompiler;
+use crate::sim::Workload;
+use crate::util::rng::Xoshiro256StarStar;
+use crate::util::units::Seconds;
+
+/// How the partitions are de-phased against each other.
+///
+/// The paper simply launches independent instances and lets them drift.
+/// In a deterministic fluid simulation, identical partitions launched
+/// together stay in lockstep forever (perfect symmetry), so the
+/// steady-state asynchrony the hardware reaches must be injected:
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StaggerPolicy {
+    /// No de-phasing: partitions run in lockstep. This isolates the pure
+    /// reuse-loss cost of partitioning — used by the stagger ablation.
+    None,
+    /// Uniform layer offset: partition `i` starts `i/n` of the way
+    /// through the phase program. The steady-state the paper's
+    /// asynchronous partitions reach; the default.
+    UniformPhase,
+    /// Random start delays up to one batch time (seeded) — models the
+    /// transient right after launch.
+    RandomDelay { seed: u64 },
+}
+
+impl StaggerPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StaggerPolicy::None => "none",
+            StaggerPolicy::UniformPhase => "uniform_phase",
+            StaggerPolicy::RandomDelay { .. } => "random_delay",
+        }
+    }
+}
+
+/// Build the per-partition workloads for `plan` running `graph`.
+///
+/// Every partition gets the same phase program (compiled for its core
+/// count and batch share) repeated `repeats` times, de-phased per
+/// `policy`.
+pub fn build_workloads(
+    accel: &AcceleratorConfig,
+    graph: &Graph,
+    plan: &PartitionPlan,
+    repeats: usize,
+    policy: StaggerPolicy,
+) -> Vec<Workload> {
+    let compiler = PhaseCompiler::new(accel, plan.cores_per_partition, plan.batch_per_partition);
+    let phases = compiler.compile(graph);
+    let n = plan.partitions;
+    let mut rng = match policy {
+        StaggerPolicy::RandomDelay { seed } => Some(Xoshiro256StarStar::seed_from_u64(seed)),
+        _ => None,
+    };
+
+    // One batch's duration at the roofline — scale for random delays.
+    let batch_time = compiler.roofline_time(&phases).0;
+
+    (0..n)
+        .map(|i| {
+            let mut w = Workload::new(
+                format!("{}/p{}of{}", graph.name, i, n),
+                plan.cores_per_partition,
+                phases.clone(),
+                repeats,
+            );
+            match policy {
+                StaggerPolicy::None => {}
+                StaggerPolicy::UniformPhase => {
+                    let offset = (i * phases.len()) / n;
+                    w = w.with_start_phase(offset);
+                }
+                StaggerPolicy::RandomDelay { .. } => {
+                    let d = rng.as_mut().unwrap().range_f64(0.0, batch_time);
+                    w = w.with_start_delay(Seconds(d));
+                }
+            }
+            w
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet50;
+
+    fn setup(n: usize, policy: StaggerPolicy) -> Vec<Workload> {
+        let accel = AcceleratorConfig::knl_7210();
+        let plan = PartitionPlan::new(&accel, n).unwrap();
+        build_workloads(&accel, &resnet50(), &plan, 3, policy)
+    }
+
+    #[test]
+    fn builds_one_workload_per_partition() {
+        let ws = setup(4, StaggerPolicy::UniformPhase);
+        assert_eq!(ws.len(), 4);
+        for w in &ws {
+            assert_eq!(w.cores, 16);
+            assert_eq!(w.repeats, 3);
+            assert!(!w.phases.is_empty());
+        }
+    }
+
+    #[test]
+    fn uniform_phase_spreads_offsets() {
+        let ws = setup(4, StaggerPolicy::UniformPhase);
+        let offsets: Vec<usize> = ws.iter().map(|w| w.start_phase).collect();
+        let plen = ws[0].phases.len();
+        assert_eq!(offsets[0], 0);
+        // Strictly increasing, spanning the program.
+        for w in offsets.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(*offsets.last().unwrap() >= plen * 3 / 4);
+    }
+
+    #[test]
+    fn none_policy_is_lockstep() {
+        let ws = setup(4, StaggerPolicy::None);
+        assert!(ws.iter().all(|w| w.start_phase == 0 && w.start_delay.0 == 0.0));
+    }
+
+    #[test]
+    fn random_delay_is_seeded_and_bounded() {
+        let a = setup(8, StaggerPolicy::RandomDelay { seed: 7 });
+        let b = setup(8, StaggerPolicy::RandomDelay { seed: 7 });
+        let c = setup(8, StaggerPolicy::RandomDelay { seed: 8 });
+        let delays = |ws: &[Workload]| ws.iter().map(|w| w.start_delay.0).collect::<Vec<_>>();
+        assert_eq!(delays(&a), delays(&b), "same seed, same delays");
+        assert_ne!(delays(&a), delays(&c), "different seed, different delays");
+        assert!(delays(&a).iter().all(|&d| d >= 0.0));
+    }
+
+    #[test]
+    fn workload_totals_scale_with_partitioning() {
+        // Total flops machine-wide are partition-count invariant;
+        // total bytes grow (weight replication).
+        let sync: f64 = setup(1, StaggerPolicy::None).iter().map(|w| w.total_flops()).sum();
+        let split: f64 = setup(8, StaggerPolicy::None).iter().map(|w| w.total_flops()).sum();
+        assert!((sync / split - 1.0).abs() < 1e-9, "flops invariant");
+
+        let sync_b: f64 = setup(1, StaggerPolicy::None).iter().map(|w| w.total_bytes()).sum();
+        let split_b: f64 = setup(8, StaggerPolicy::None).iter().map(|w| w.total_bytes()).sum();
+        assert!(split_b > sync_b, "partitioning must add weight traffic");
+    }
+}

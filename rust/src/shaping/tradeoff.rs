@@ -1,0 +1,145 @@
+//! Closed-form account of the partitioning tradeoff.
+//!
+//! Partitioning n-ways has two opposing effects on the makespan of a
+//! machine-wide batch:
+//!
+//! * **reuse loss** — weight traffic multiplies by n (each partition
+//!   loads its own copy), raising the memory-time lower bound;
+//! * **shaping gain** — de-phased partitions overlap compute-heavy and
+//!   memory-heavy layers, moving the schedule from the *sum of per-phase
+//!   maxima* toward the *maximum of the sums* (the roofline).
+//!
+//! The model below bounds both effects analytically; the simulator
+//! interpolates between them. The ablation bench sweeps the weight-share
+//! knob to find the crossover where partitioning stops paying — the
+//! paper's claim is that modern lean CNNs sit well on the winning side
+//! (Fig 2 trend).
+
+use crate::config::AcceleratorConfig;
+use crate::model::Graph;
+use crate::reuse::PhaseCompiler;
+
+/// Analytic bounds for one (model, n) point.
+#[derive(Debug, Clone, Copy)]
+pub struct TradeoffBounds {
+    /// Makespan lower bound for the synchronous baseline: Σ_phases
+    /// max(compute, memory) — phases serialize their bottlenecks.
+    pub sync_lower_s: f64,
+    /// Roofline bound with n-way weight replication: max(Σcompute,
+    /// Σbytes(n)/BW) — what perfect shaping would achieve.
+    pub shaped_roofline_s: f64,
+    /// Extra weight bytes per machine-batch caused by replication.
+    pub extra_weight_bytes: f64,
+    /// Predicted best-case relative performance (sync_lower /
+    /// shaped_roofline, ≥ actual gain).
+    pub best_case_gain: f64,
+}
+
+/// The tradeoff evaluator.
+#[derive(Debug, Clone)]
+pub struct TradeoffModel {
+    pub accel: AcceleratorConfig,
+}
+
+impl TradeoffModel {
+    pub fn new(accel: &AcceleratorConfig) -> Self {
+        Self { accel: accel.clone() }
+    }
+
+    /// Evaluate the bounds for `graph` at `n` partitions.
+    pub fn bounds(&self, graph: &Graph, n: usize) -> TradeoffBounds {
+        let accel = &self.accel;
+
+        // Synchronous baseline: whole machine, batch = cores.
+        let sync = PhaseCompiler::synchronous(accel);
+        let sync_phases = sync.compile(graph);
+        let sync_lower_s: f64 = sync_phases
+            .iter()
+            .map(|p| {
+                let tc = p.compute_time(accel, accel.cores).0;
+                let tm = p.bytes.0 / accel.mem_bw.0;
+                tc.max(tm)
+            })
+            .sum();
+        let sync_bytes: f64 = sync_phases.iter().map(|p| p.bytes.0).sum();
+
+        // Partitioned: per-partition phases, n of them running the same
+        // machine-wide image count.
+        let part = PhaseCompiler::new(accel, accel.cores / n.max(1), accel.cores / n.max(1));
+        let part_phases = part.compile(graph);
+        let part_bytes_total: f64 =
+            part_phases.iter().map(|p| p.bytes.0).sum::<f64>() * n as f64;
+        let part_compute_total: f64 = part_phases
+            .iter()
+            .map(|p| p.compute_time(accel, accel.cores / n.max(1)).0)
+            .sum();
+        // n partitions run concurrently → wall compute time is one
+        // partition's serial compute (they don't share cores).
+        let shaped_roofline_s = part_compute_total.max(part_bytes_total / accel.mem_bw.0);
+
+        TradeoffBounds {
+            sync_lower_s,
+            shaped_roofline_s,
+            extra_weight_bytes: (part_bytes_total - sync_bytes).max(0.0),
+            best_case_gain: if shaped_roofline_s > 0.0 {
+                sync_lower_s / shaped_roofline_s
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Does the analytic model predict partitioning can pay at all?
+    pub fn predicts_gain(&self, graph: &Graph, n: usize) -> bool {
+        self.bounds(graph, n).best_case_gain > 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{googlenet, resnet50, vgg16};
+
+    fn model() -> TradeoffModel {
+        TradeoffModel::new(&AcceleratorConfig::knl_7210())
+    }
+
+    #[test]
+    fn replication_cost_scales_with_n() {
+        let m = model();
+        let g = resnet50();
+        let b2 = m.bounds(&g, 2).extra_weight_bytes;
+        let b8 = m.bounds(&g, 8).extra_weight_bytes;
+        assert!(b8 > 3.0 * b2, "8-way extra {b8} should dwarf 2-way {b2}");
+    }
+
+    #[test]
+    fn paper_models_predict_gain_at_4() {
+        let m = model();
+        for g in [vgg16(), googlenet(), resnet50()] {
+            assert!(
+                m.predicts_gain(&g, 4),
+                "{} should have headroom at n=4",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn vgg_has_least_headroom() {
+        // The weight-heaviest model keeps the least best-case gain.
+        let m = model();
+        let v = m.bounds(&vgg16(), 4).best_case_gain;
+        let g = m.bounds(&googlenet(), 4).best_case_gain;
+        assert!(g > v, "googlenet {g} vs vgg {v}");
+    }
+
+    #[test]
+    fn sync_lower_bound_dominates_roofline_at_n1() {
+        // With n=1 there is no replication; the sum-of-maxima bound is
+        // always ≥ the roofline.
+        let m = model();
+        let b = m.bounds(&resnet50(), 1);
+        assert!(b.sync_lower_s >= b.shaped_roofline_s * 0.999);
+    }
+}

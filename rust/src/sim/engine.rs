@@ -1,0 +1,501 @@
+//! The fluid discrete-event engine.
+//!
+//! Invariants enforced (and checked by `SimOutcome::validate`):
+//! * conservation — every byte a workload declares is moved exactly once;
+//! * feasibility — allocated bandwidth never exceeds the peak;
+//! * work conservation — when any phase is bandwidth-starved the pool is
+//!   fully used (max–min property);
+//! * monotone progress — time strictly advances across events.
+
+use super::memory::max_min_allocate_into;
+use super::trace::BandwidthTrace;
+use super::workload::{PartitionState, Workload};
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::util::units::Seconds;
+
+/// Result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Completion time of the whole machine (last partition).
+    pub makespan: Seconds,
+    /// Completion time per partition.
+    pub finish_times: Vec<Seconds>,
+    /// Exact bandwidth trace.
+    pub trace: BandwidthTrace,
+    /// Total bytes moved (== Σ workload bytes).
+    pub total_bytes: f64,
+    /// Total FLOPs executed.
+    pub total_flops: f64,
+    /// Declared totals, for validation.
+    declared_bytes: f64,
+    declared_flops: f64,
+    peak_bw: f64,
+}
+
+impl SimOutcome {
+    /// Achieved aggregate FLOP/s over the makespan.
+    pub fn achieved_flops(&self) -> f64 {
+        if self.makespan.0 > 0.0 {
+            self.total_flops / self.makespan.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Average bandwidth over the makespan (B/s).
+    pub fn avg_bandwidth(&self) -> f64 {
+        if self.makespan.0 > 0.0 {
+            self.total_bytes / self.makespan.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Post-run invariant checks; returns an error describing the first
+    /// violation. Cheap — called by every experiment driver.
+    pub fn validate(&self) -> Result<()> {
+        let tol = 1e-6 * self.declared_bytes.max(1.0);
+        if (self.total_bytes - self.declared_bytes).abs() > tol {
+            return Err(Error::SimInvariant(format!(
+                "byte conservation violated: moved {} vs declared {}",
+                self.total_bytes, self.declared_bytes
+            )));
+        }
+        let ftol = 1e-6 * self.declared_flops.max(1.0);
+        if (self.total_flops - self.declared_flops).abs() > ftol {
+            return Err(Error::SimInvariant(format!(
+                "flop conservation violated: {} vs {}",
+                self.total_flops, self.declared_flops
+            )));
+        }
+        let traced = self.trace.total_bytes();
+        if (traced - self.declared_bytes).abs() > tol {
+            return Err(Error::SimInvariant(format!(
+                "trace integral {} != declared bytes {}",
+                traced, self.declared_bytes
+            )));
+        }
+        for (t0, t1, bw) in self.trace.total.segments() {
+            if bw > self.peak_bw * (1.0 + 1e-9) {
+                return Err(Error::SimInvariant(format!(
+                    "allocated bw {bw} exceeds peak {} in [{t0}, {t1})",
+                    self.peak_bw
+                )));
+            }
+        }
+        for (i, f) in self.finish_times.iter().enumerate() {
+            if f.0 > self.makespan.0 + 1e-9 {
+                return Err(Error::SimInvariant(format!(
+                    "partition {i} finished after makespan"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The simulator. Construct once per accelerator config; `run` is pure.
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    pub accel: AcceleratorConfig,
+    /// Safety valve: abort after this many events (a run that needs more
+    /// is a bug, not a workload).
+    pub max_events: usize,
+    /// Record per-partition bandwidth series in addition to the
+    /// aggregate (off by default: the aggregate is all the paper's
+    /// metrics need, and the split costs ~n× more trace pushes).
+    pub record_per_partition: bool,
+}
+
+impl SimEngine {
+    pub fn new(accel: &AcceleratorConfig) -> Self {
+        Self { accel: accel.clone(), max_events: 50_000_000, record_per_partition: false }
+    }
+
+    /// Enable per-partition trace recording.
+    pub fn with_partition_traces(mut self) -> Self {
+        self.record_per_partition = true;
+        self
+    }
+
+    /// Run the workloads to completion and return the outcome.
+    pub fn run(&self, workloads: &[Workload]) -> Result<SimOutcome> {
+        if workloads.is_empty() {
+            return Err(Error::InvalidConfig("no workloads".into()));
+        }
+        let total_cores: usize = workloads.iter().map(|w| w.cores).sum();
+        if total_cores > self.accel.cores {
+            return Err(Error::InvalidConfig(format!(
+                "workloads use {total_cores} cores > machine {}",
+                self.accel.cores
+            )));
+        }
+
+        let n = workloads.len();
+        let mut states: Vec<PartitionState> = workloads
+            .iter()
+            .map(|w| PartitionState::new(w.start_delay.0))
+            .collect();
+        // Skip degenerate empty programs.
+        for (s, w) in states.iter_mut().zip(workloads) {
+            if w.total_steps() == 0 {
+                s.finished_at = Some(0.0);
+            }
+        }
+
+        let peak = self.accel.mem_bw.0;
+        let mut trace = if self.record_per_partition {
+            BandwidthTrace::new(n)
+        } else {
+            BandwidthTrace::total_only()
+        };
+        let mut now = 0.0f64;
+        let mut events = 0usize;
+
+        // Per-phase characterization is constant for a workload (core
+        // count is fixed), so compute it once instead of per event:
+        // (full_rate = 1/tc, demand = bytes/tc, bytes, flops).
+        struct PhaseInfo {
+            full_rate: f64,
+            demand: f64,
+            bytes: f64,
+            flops: f64,
+        }
+        let infos: Vec<Vec<PhaseInfo>> = workloads
+            .iter()
+            .map(|w| {
+                w.phases
+                    .iter()
+                    .map(|ph| {
+                        let tc = ph.compute_time(&self.accel, w.cores).0;
+                        if tc <= 0.0 {
+                            PhaseInfo {
+                                full_rate: f64::INFINITY,
+                                demand: if ph.bytes.0 > 0.0 { f64::INFINITY } else { 0.0 },
+                                bytes: ph.bytes.0,
+                                flops: ph.flops.0,
+                            }
+                        } else {
+                            PhaseInfo {
+                                full_rate: 1.0 / tc,
+                                demand: ph.bytes.0 / tc,
+                                bytes: ph.bytes.0,
+                                flops: ph.flops.0,
+                            }
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let info_at = |i: usize, step: usize| -> &PhaseInfo {
+            let w = &workloads[i];
+            &infos[i][(w.start_phase + step) % w.phases.len()]
+        };
+
+        // Scratch buffers reused across events (hot loop).
+        let mut demand = vec![0.0f64; n];
+        let mut full_rate = vec![0.0f64; n]; // 1/tc of current phase
+        let mut bw_used = vec![0.0f64; n];
+        let mut alloc: Vec<f64> = Vec::with_capacity(n);
+        let mut order_scratch: Vec<usize> = Vec::with_capacity(n);
+
+        while states.iter().any(|s| !s.done()) {
+            events += 1;
+            if events > self.max_events {
+                return Err(Error::SimInvariant(format!(
+                    "exceeded {} events — runaway simulation",
+                    self.max_events
+                )));
+            }
+
+            // Characterize each running phase (cached).
+            for i in 0..n {
+                demand[i] = 0.0;
+                full_rate[i] = 0.0;
+                let s = &states[i];
+                if s.done() || s.ready_at > now {
+                    continue;
+                }
+                let pi = info_at(i, s.step);
+                full_rate[i] = pi.full_rate;
+                demand[i] = pi.demand;
+            }
+
+            max_min_allocate_into(peak, &demand, &mut order_scratch, &mut alloc);
+
+            // Progress rate (fraction of phase per second) per partition.
+            let mut next_dt = f64::INFINITY;
+            for i in 0..n {
+                let s = &states[i];
+                if s.done() {
+                    bw_used[i] = 0.0;
+                    continue;
+                }
+                if s.ready_at > now {
+                    bw_used[i] = 0.0;
+                    next_dt = next_dt.min(s.ready_at - now);
+                    continue;
+                }
+                let pi = info_at(i, s.step);
+                let rate = if pi.bytes <= 0.0 {
+                    // No memory traffic: compute-bound at full speed.
+                    if full_rate[i].is_finite() { full_rate[i] } else { f64::INFINITY }
+                } else if full_rate[i].is_finite() {
+                    // Roofline: min(compute rate, allocated-bw rate).
+                    full_rate[i].min(alloc[i] / pi.bytes)
+                } else {
+                    alloc[i] / pi.bytes
+                };
+                bw_used[i] = if pi.bytes > 0.0 { rate * pi.bytes } else { 0.0 };
+                debug_assert!(bw_used[i] <= alloc[i] * (1.0 + 1e-9) || demand[i] == 0.0);
+                if rate.is_infinite() {
+                    // Instantaneous phase (no flops, no bytes): complete now.
+                    next_dt = 0.0;
+                } else if rate > 0.0 {
+                    next_dt = next_dt.min(s.remaining_frac / rate);
+                }
+            }
+
+            if next_dt.is_infinite() {
+                return Err(Error::SimInvariant(
+                    "deadlock: nothing can progress".into(),
+                ));
+            }
+
+            let t1 = now + next_dt;
+            trace.record(now, t1, &bw_used);
+
+            // Advance everyone by next_dt, completing phases that hit zero.
+            for i in 0..n {
+                let w = &workloads[i];
+                // Split borrow: compute phase info before mutating state.
+                let (rate, phase_bytes, phase_flops) = {
+                    let s = &states[i];
+                    // Partitions that were not running in [now, t1) make
+                    // no progress (they become ready exactly at an event).
+                    if s.done() || s.ready_at > now {
+                        continue;
+                    }
+                    let pi = info_at(i, s.step);
+                    let rate = if pi.bytes <= 0.0 {
+                        full_rate[i]
+                    } else if full_rate[i].is_finite() {
+                        full_rate[i].min(alloc[i] / pi.bytes)
+                    } else {
+                        alloc[i] / pi.bytes
+                    };
+                    (rate, pi.bytes, pi.flops)
+                };
+                let s = &mut states[i];
+                let progressed = if rate.is_infinite() {
+                    s.remaining_frac
+                } else {
+                    (rate * next_dt).min(s.remaining_frac)
+                };
+                s.bytes_moved += progressed * phase_bytes;
+                s.flops_done += progressed * phase_flops;
+                s.remaining_frac -= progressed;
+                if s.remaining_frac <= 1e-12 {
+                    s.step += 1;
+                    s.remaining_frac = 1.0;
+                    if s.step >= w.total_steps() {
+                        s.finished_at = Some(t1);
+                    }
+                }
+            }
+
+            now = t1;
+        }
+
+        let finish_times: Vec<Seconds> = states
+            .iter()
+            .map(|s| Seconds(s.finished_at.unwrap_or(now)))
+            .collect();
+        let makespan = Seconds(finish_times.iter().map(|t| t.0).fold(0.0, f64::max));
+        let declared_bytes: f64 = workloads.iter().map(|w| w.total_bytes()).sum();
+        let declared_flops: f64 = workloads.iter().map(|w| w.total_flops()).sum();
+        let outcome = SimOutcome {
+            makespan,
+            finish_times,
+            total_bytes: states.iter().map(|s| s.bytes_moved).sum(),
+            total_flops: states.iter().map(|s| s.flops_done).sum(),
+            trace,
+            declared_bytes,
+            declared_flops,
+            peak_bw: peak,
+        };
+        outcome.validate()?;
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reuse::{Phase, PhaseClass};
+    use crate::util::units::{Bytes, Flops};
+
+    /// An accelerator with round numbers: 1 GFLOP/s per core at eff 1.0,
+    /// 100 B/s of memory bandwidth.
+    fn toy() -> AcceleratorConfig {
+        let mut a = AcceleratorConfig::knl_7210();
+        a.cores = 4;
+        a.core_flops = crate::util::units::FlopsPerS(1.0);
+        a.mem_bw = crate::util::units::BytesPerS(100.0);
+        a.conv_efficiency = 1.0;
+        a.elementwise_efficiency = 1.0;
+        a
+    }
+
+    fn phase(flops: f64, bytes: f64) -> Phase {
+        Phase {
+            name: format!("f{flops}b{bytes}"),
+            layer_id: 0,
+            class: PhaseClass::ComputeDense,
+            flops: Flops(flops),
+            bytes: Bytes(bytes),
+        }
+    }
+
+    #[test]
+    fn single_compute_bound_phase() {
+        // 2 cores × 1 FLOP/s, 10 FLOPs, 50 bytes → tc = 5 s,
+        // demand = 10 B/s < 100 peak → finishes at 5 s.
+        let accel = toy();
+        let w = Workload::new("p", 2, vec![phase(10.0, 50.0)], 1);
+        let out = SimEngine::new(&accel).run(&[w]).unwrap();
+        assert!((out.makespan.0 - 5.0).abs() < 1e-9);
+        assert!((out.total_bytes - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_bandwidth_bound_phase() {
+        // tc = 1 s but 1000 bytes need 10 s at peak 100 B/s.
+        let accel = toy();
+        let w = Workload::new("p", 1, vec![phase(1.0, 1000.0)], 1);
+        let out = SimEngine::new(&accel).run(&[w]).unwrap();
+        assert!((out.makespan.0 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_partitions_contend_fairly() {
+        // Each: tc = 1 s, 100 bytes → each demands 100 B/s, pool 100
+        // → each gets 50 → both take 2 s.
+        let accel = toy();
+        let w1 = Workload::new("a", 1, vec![phase(1.0, 100.0)], 1);
+        let w2 = Workload::new("b", 1, vec![phase(1.0, 100.0)], 1);
+        let out = SimEngine::new(&accel).run(&[w1, w2]).unwrap();
+        assert!((out.makespan.0 - 2.0).abs() < 1e-9);
+        // Pool saturated the whole time (sampled series is in GB/s).
+        let s = out.trace.sampled_summary(10);
+        assert!((s.mean - 100.0 / 1e9).abs() < 1e-15);
+        assert!(s.std.abs() < 1e-15);
+    }
+
+    #[test]
+    fn asymmetric_demands_water_fill() {
+        // P1 demands 30 B/s for 10 s (300 B); P2 demands 1000 B/s
+        // (tc=1s, 1000 B). Alloc: p1 30, p2 70 → p2 bw-bound.
+        let accel = toy();
+        let w1 = Workload::new("small", 1, vec![phase(10.0, 300.0)], 1);
+        let w2 = Workload::new("big", 1, vec![phase(1.0, 1000.0)], 1);
+        let out = SimEngine::new(&accel).run(&[w1, w2]).unwrap();
+        // P1 finishes at 10 s unimpeded.
+        assert!((out.finish_times[0].0 - 10.0).abs() < 1e-9);
+        // P2: 10 s at 70 B/s = 700 B, then 300 B at full 100 B/s → 13 s.
+        assert!((out.finish_times[1].0 - 13.0).abs() < 1e-9, "{:?}", out.finish_times);
+        out.validate().unwrap();
+    }
+
+    #[test]
+    fn start_delay_shifts_execution() {
+        let accel = toy();
+        let w = Workload::new("p", 1, vec![phase(1.0, 10.0)], 1)
+            .with_start_delay(Seconds(2.0));
+        let out = SimEngine::new(&accel).run(&[w]).unwrap();
+        assert!((out.makespan.0 - 3.0).abs() < 1e-9);
+        // Nothing moves in [0,2).
+        assert!(out.trace.total.at(1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeats_and_start_phase() {
+        let accel = toy();
+        let phases = vec![phase(1.0, 0.0), phase(2.0, 0.0)];
+        let w = Workload::new("p", 1, phases, 2).with_start_phase(1);
+        let out = SimEngine::new(&accel).run(&[w]).unwrap();
+        // Steps: b(2s), a(1s), b(2s), a(1s) = 6 s on 1 core.
+        assert!((out.makespan.0 - 6.0).abs() < 1e-9);
+        assert!((out.total_flops - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_compute_phase_is_pure_copy() {
+        let accel = toy();
+        let w = Workload::new("copy", 1, vec![phase(0.0, 200.0)], 1);
+        let out = SimEngine::new(&accel).run(&[w]).unwrap();
+        assert!((out.makespan.0 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smoothing_two_staggered_partitions_beats_sync() {
+        // Program alternates a bw-hungry phase and a compute phase.
+        // In-phase partitions collide on the hungry phase; anti-phase
+        // partitions interleave → shorter makespan. This is Fig 3 of the
+        // paper as a unit test.
+        let accel = toy();
+        let hungry = phase(1.0, 200.0); // wants 200 B/s
+        let quiet = phase(2.0, 10.0); // wants 5 B/s
+        let prog = vec![hungry.clone(), quiet.clone()];
+        let sync = [
+            Workload::new("a", 1, prog.clone(), 4),
+            Workload::new("b", 1, prog.clone(), 4),
+        ];
+        let staggered = [
+            Workload::new("a", 1, prog.clone(), 4),
+            Workload::new("b", 1, prog.clone(), 4).with_start_phase(1),
+        ];
+        let engine = SimEngine::new(&accel);
+        let t_sync = engine.run(&sync).unwrap();
+        let t_stag = engine.run(&staggered).unwrap();
+        assert!(
+            t_stag.makespan.0 < t_sync.makespan.0 * 0.95,
+            "staggered {} should beat sync {}",
+            t_stag.makespan.0,
+            t_sync.makespan.0
+        );
+        // And the bandwidth series must be smoother (lower σ).
+        let s_sync = t_sync.trace.sampled_summary(64);
+        let s_stag = t_stag.trace.sampled_summary(64);
+        assert!(s_stag.std < s_sync.std);
+    }
+
+    #[test]
+    fn rejects_core_oversubscription() {
+        let accel = toy(); // 4 cores
+        let w1 = Workload::new("a", 3, vec![phase(1.0, 1.0)], 1);
+        let w2 = Workload::new("b", 2, vec![phase(1.0, 1.0)], 1);
+        assert!(SimEngine::new(&accel).run(&[w1, w2]).is_err());
+    }
+
+    #[test]
+    fn conservation_holds_for_messy_workloads() {
+        let accel = toy();
+        let mut progs = Vec::new();
+        for i in 0..4 {
+            let phases: Vec<Phase> = (0..7)
+                .map(|k| phase((i + k) as f64 % 3.0, ((k * 37 + i * 11) % 50) as f64))
+                .collect();
+            progs.push(
+                Workload::new(format!("p{i}"), 1, phases, 3)
+                    .with_start_phase(i * 2)
+                    .with_start_delay(Seconds(i as f64 * 0.1)),
+            );
+        }
+        let out = SimEngine::new(&accel).run(&progs).unwrap();
+        out.validate().unwrap();
+        let declared: f64 = progs.iter().map(|w| w.total_bytes()).sum();
+        assert!((out.total_bytes - declared).abs() < 1e-6 * declared.max(1.0));
+    }
+}

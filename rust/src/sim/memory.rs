@@ -1,0 +1,112 @@
+//! Max–min fair bandwidth allocation (water-filling).
+//!
+//! The memory controller serves all running phases; none can use more
+//! than its demand, and the remainder is split fairly. This models a
+//! fair round-robin memory scheduler — the paper's MCDRAM behaves this
+//! way at the macroscopic timescale of layer phases.
+
+/// Allocate `peak` among `demands` max–min fairly. `f64::INFINITY`
+/// demands are legal (pure copy phases) and share the residual equally.
+/// Returns one allocation per demand; allocations never exceed demands
+/// and sum to `min(peak, Σdemands)` (up to rounding).
+pub fn max_min_allocate(peak: f64, demands: &[f64]) -> Vec<f64> {
+    let mut alloc = vec![0.0; demands.len()];
+    let mut order = Vec::new();
+    max_min_allocate_into(peak, demands, &mut order, &mut alloc);
+    alloc
+}
+
+/// Allocation into caller-provided buffers — the simulator's hot loop
+/// calls this once per event, so it must not allocate. `order` is a
+/// scratch index buffer reused across calls; `alloc` is resized to match
+/// `demands`.
+pub fn max_min_allocate_into(
+    peak: f64,
+    demands: &[f64],
+    order: &mut Vec<usize>,
+    alloc: &mut Vec<f64>,
+) {
+    assert!(peak >= 0.0);
+    let n = demands.len();
+    alloc.clear();
+    alloc.resize(n, 0.0);
+    if n == 0 || peak == 0.0 {
+        return;
+    }
+    debug_assert!(demands.iter().all(|&d| d >= 0.0), "negative demand");
+
+    // Water-filling: repeatedly satisfy the smallest unsatisfied demand
+    // if the equal share covers it.
+    order.clear();
+    order.extend(0..n);
+    order.sort_unstable_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+
+    let mut remaining = peak;
+    let mut left = n;
+    for &i in order.iter() {
+        let share = remaining / left as f64;
+        let give = demands[i].min(share);
+        alloc[i] = give;
+        remaining -= give;
+        left -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total(v: &[f64]) -> f64 {
+        v.iter().sum()
+    }
+
+    #[test]
+    fn under_subscription_gives_everyone_their_demand() {
+        let a = max_min_allocate(400.0, &[100.0, 50.0, 200.0]);
+        assert_eq!(a, vec![100.0, 50.0, 200.0]);
+    }
+
+    #[test]
+    fn over_subscription_is_fair() {
+        // Demands 300/300 on peak 400 → 200 each.
+        let a = max_min_allocate(400.0, &[300.0, 300.0]);
+        assert_eq!(a, vec![200.0, 200.0]);
+        // Small demand fully served, big ones split the rest.
+        let a = max_min_allocate(400.0, &[50.0, 500.0, 500.0]);
+        assert!((a[0] - 50.0).abs() < 1e-9);
+        assert!((a[1] - 175.0).abs() < 1e-9);
+        assert!((a[2] - 175.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_demands_share_residual() {
+        let a = max_min_allocate(300.0, &[100.0, f64::INFINITY, f64::INFINITY]);
+        assert!((a[0] - 100.0).abs() < 1e-9);
+        assert!((a[1] - 100.0).abs() < 1e-9);
+        assert!((a[2] - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_exceeds_peak_or_demand() {
+        let demands = [10.0, 0.0, 95.0, 400.0, 1e12];
+        let a = max_min_allocate(123.0, &demands);
+        assert!(total(&a) <= 123.0 + 1e-6);
+        for (x, d) in a.iter().zip(&demands) {
+            assert!(x <= d, "alloc {x} > demand {d}");
+            assert!(*x >= 0.0);
+        }
+    }
+
+    #[test]
+    fn saturated_pool_is_fully_used() {
+        let a = max_min_allocate(100.0, &[80.0, 80.0]);
+        assert!((total(&a) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_zero_cases() {
+        assert!(max_min_allocate(100.0, &[]).is_empty());
+        assert_eq!(max_min_allocate(0.0, &[5.0]), vec![0.0]);
+        assert_eq!(max_min_allocate(100.0, &[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+}

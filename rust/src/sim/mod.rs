@@ -1,0 +1,23 @@
+//! Fluid-flow discrete-event simulator of a manycore accelerator whose
+//! partitions contend for one shared main-memory bandwidth pool.
+//!
+//! This is the substitute substrate for the paper's Intel KNL testbed.
+//! The model: each partition executes its phase list sequentially; a
+//! phase running on `c` cores has a compute-limited duration and a byte
+//! volume, hence a bandwidth *demand*; the memory system allocates the
+//! shared peak bandwidth max–min fairly among the running phases; a
+//! phase whose allocation is below its demand slows down proportionally
+//! (the roofline in fluid form). Between phase-completion events all
+//! rates are constant, so the event-driven simulation is exact.
+
+mod dram;
+mod engine;
+mod memory;
+mod trace;
+mod workload;
+
+pub use dram::{DramModel, Footprint};
+pub use engine::{SimEngine, SimOutcome};
+pub use memory::max_min_allocate;
+pub use trace::BandwidthTrace;
+pub use workload::{PartitionState, Workload};

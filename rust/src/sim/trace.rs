@@ -1,0 +1,113 @@
+//! Bandwidth trace recording.
+//!
+//! The engine appends one segment per inter-event interval: total
+//! bandwidth in use and (optionally) the per-partition split. Profiler
+//! emulation (fixed-period sampling as on the paper's testbed) is a
+//! resample of the exact piecewise-constant series.
+
+use crate::util::stats::{StepSeries, Summary};
+
+/// Exact bandwidth-over-time record of one simulation.
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    /// Aggregate bandwidth at the memory controller (B/s over seconds).
+    pub total: StepSeries,
+    /// Per-partition bandwidth (same breakpoints as `total`).
+    pub per_partition: Vec<StepSeries>,
+}
+
+impl BandwidthTrace {
+    pub fn new(partitions: usize) -> Self {
+        Self {
+            total: StepSeries::new(),
+            per_partition: vec![StepSeries::new(); partitions],
+        }
+    }
+
+    /// Aggregate-only trace — the simulator hot loop's default. Skipping
+    /// the per-partition series cuts the per-event recording cost by
+    /// ~n× (see EXPERIMENTS.md §Perf); enable the full trace only when
+    /// an analysis actually needs the split.
+    pub fn total_only() -> Self {
+        Self { total: StepSeries::new(), per_partition: Vec::new() }
+    }
+
+    /// Record one inter-event interval.
+    pub fn record(&mut self, t0: f64, t1: f64, per_partition_bw: &[f64]) {
+        if t1 <= t0 {
+            return;
+        }
+        let total: f64 = per_partition_bw.iter().sum();
+        self.total.push(t0, t1, total);
+        if !self.per_partition.is_empty() {
+            debug_assert_eq!(per_partition_bw.len(), self.per_partition.len());
+            for (series, &bw) in self.per_partition.iter_mut().zip(per_partition_bw) {
+                series.push(t0, t1, bw);
+            }
+        }
+    }
+
+    /// Total bytes moved (∫ total bw dt).
+    pub fn total_bytes(&self) -> f64 {
+        self.total.integral()
+    }
+
+    /// Profiler-style sampled series in GB/s.
+    pub fn sampled_gbps(&self, samples: usize) -> Vec<f64> {
+        self.total
+            .resample(samples)
+            .into_iter()
+            .map(|b| b / 1e9)
+            .collect()
+    }
+
+    /// Summary statistics over the sampled series — the paper's
+    /// mean/σ-of-bandwidth metrics (Figs 4–6) are computed exactly here.
+    pub fn sampled_summary(&self, samples: usize) -> Summary {
+        Summary::of(&self.sampled_gbps(samples))
+    }
+
+    /// Duration covered by the trace.
+    pub fn duration(&self) -> f64 {
+        self.total.end() - self.total.start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_integrates() {
+        let mut tr = BandwidthTrace::new(2);
+        tr.record(0.0, 1.0, &[100e9, 50e9]);
+        tr.record(1.0, 3.0, &[10e9, 0.0]);
+        assert!((tr.total_bytes() - (150e9 + 20e9)).abs() < 1.0);
+        assert!((tr.duration() - 3.0).abs() < 1e-12);
+        // Per-partition integrals.
+        assert!((tr.per_partition[0].integral() - 120e9).abs() < 1.0);
+        assert!((tr.per_partition[1].integral() - 50e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn sampling_conserves_and_summarizes() {
+        let mut tr = BandwidthTrace::new(1);
+        tr.record(0.0, 1.0, &[200e9]);
+        tr.record(1.0, 2.0, &[0.0]);
+        let s = tr.sampled_gbps(4);
+        assert_eq!(s.len(), 4);
+        assert!((s[0] - 200.0).abs() < 1e-9);
+        assert!((s[3] - 0.0).abs() < 1e-9);
+        let sum = tr.sampled_summary(4);
+        assert!((sum.mean - 100.0).abs() < 1e-9);
+        assert!(sum.std > 0.0);
+    }
+
+    #[test]
+    fn zero_length_intervals_ignored() {
+        let mut tr = BandwidthTrace::new(1);
+        tr.record(0.0, 0.0, &[5.0]);
+        tr.record(0.0, 1.0, &[5.0]);
+        assert!((tr.total_bytes() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,138 @@
+//! Partition workloads: the phase program one partition executes.
+
+use crate::reuse::Phase;
+use crate::util::units::Seconds;
+
+/// The program of one partition: its phase list executed `repeats` times
+/// (steady-state batches), optionally starting mid-program and/or after a
+/// delay — the stagger knobs the shaping scheduler uses.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    /// Cores in this partition (sets phase compute times).
+    pub cores: usize,
+    /// Phase list for ONE batch.
+    pub phases: Vec<Phase>,
+    /// Number of batches processed back-to-back.
+    pub repeats: usize,
+    /// Index into `phases` at which the FIRST batch starts (wraps; the
+    /// partition still executes `repeats × phases.len()` phases total).
+    /// Models partitions being on different layers at t=0.
+    pub start_phase: usize,
+    /// Idle delay before the partition starts.
+    pub start_delay: Seconds,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, cores: usize, phases: Vec<Phase>, repeats: usize) -> Self {
+        Self {
+            name: name.into(),
+            cores,
+            phases,
+            repeats,
+            start_phase: 0,
+            start_delay: Seconds(0.0),
+        }
+    }
+
+    pub fn with_start_phase(mut self, idx: usize) -> Self {
+        self.start_phase = idx;
+        self
+    }
+
+    pub fn with_start_delay(mut self, d: Seconds) -> Self {
+        self.start_delay = d;
+        self
+    }
+
+    /// Total phases executed over the whole run.
+    pub fn total_steps(&self) -> usize {
+        self.phases.len() * self.repeats
+    }
+
+    /// Phase executed at step `k` (0-based, after applying start offset).
+    pub fn phase_at(&self, k: usize) -> &Phase {
+        &self.phases[(self.start_phase + k) % self.phases.len()]
+    }
+
+    /// Total bytes this workload will move.
+    pub fn total_bytes(&self) -> f64 {
+        self.phases.iter().map(|p| p.bytes.0).sum::<f64>() * self.repeats as f64
+    }
+
+    /// Total FLOPs this workload will execute.
+    pub fn total_flops(&self) -> f64 {
+        self.phases.iter().map(|p| p.flops.0).sum::<f64>() * self.repeats as f64
+    }
+}
+
+/// Live execution state of one partition inside the engine.
+#[derive(Debug, Clone)]
+pub struct PartitionState {
+    /// Next step index (0..total_steps).
+    pub step: usize,
+    /// Fraction of the current phase still to execute, in [0, 1].
+    pub remaining_frac: f64,
+    /// Simulation time at which this partition may start.
+    pub ready_at: f64,
+    /// Completion time (set when the program finishes).
+    pub finished_at: Option<f64>,
+    /// Bytes actually moved so far (conservation accounting).
+    pub bytes_moved: f64,
+    /// FLOPs actually executed so far.
+    pub flops_done: f64,
+}
+
+impl PartitionState {
+    pub fn new(start_delay: f64) -> Self {
+        Self {
+            step: 0,
+            remaining_frac: 1.0,
+            ready_at: start_delay,
+            finished_at: None,
+            bytes_moved: 0.0,
+            flops_done: 0.0,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.finished_at.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reuse::{Phase, PhaseClass};
+    use crate::util::units::{Bytes, Flops};
+
+    fn phase(name: &str, flops: f64, bytes: f64) -> Phase {
+        Phase {
+            name: name.into(),
+            layer_id: 0,
+            class: PhaseClass::ComputeDense,
+            flops: Flops(flops),
+            bytes: Bytes(bytes),
+        }
+    }
+
+    #[test]
+    fn totals_and_wrapping() {
+        let w = Workload::new("p0", 32, vec![phase("a", 10.0, 1.0), phase("b", 20.0, 2.0)], 3)
+            .with_start_phase(1);
+        assert_eq!(w.total_steps(), 6);
+        assert_eq!(w.phase_at(0).name, "b");
+        assert_eq!(w.phase_at(1).name, "a");
+        assert_eq!(w.phase_at(2).name, "b");
+        assert!((w.total_bytes() - 9.0).abs() < 1e-12);
+        assert!((w.total_flops() - 90.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn state_starts_pending() {
+        let s = PartitionState::new(0.5);
+        assert!(!s.done());
+        assert_eq!(s.ready_at, 0.5);
+        assert_eq!(s.remaining_frac, 1.0);
+    }
+}

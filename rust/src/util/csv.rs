@@ -1,0 +1,157 @@
+//! Tiny CSV writer for figure data exports.
+//!
+//! Every experiment driver dumps the series behind its figure as CSV so
+//! the plots can be regenerated with any external tool; this keeps the
+//! rust side dependency-free.
+
+use crate::error::Result;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// In-memory CSV document with a fixed header.
+#[derive(Debug, Clone)]
+pub struct CsvWriter {
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
+        Self { columns: columns.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of display-formatted cells; panics on arity mismatch
+    /// (a bug in the experiment driver, never user input).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "csv row arity {} != header arity {}",
+            cells.len(),
+            self.columns.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Convenience for all-numeric rows.
+    pub fn row_f64(&mut self, cells: &[f64]) -> &mut Self {
+        self.row(cells.iter().map(|x| format_float(*x)).collect())
+    }
+
+    /// Row beginning with a label followed by numbers.
+    pub fn row_labeled(&mut self, label: &str, cells: &[f64]) -> &mut Self {
+        let mut v = vec![label.to_string()];
+        v.extend(cells.iter().map(|x| format_float(*x)));
+        self.row(v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        writeln_row(&mut out, &self.columns);
+        for r in &self.rows {
+            writeln_row(&mut out, r);
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+fn writeln_row<S: AsRef<str>>(out: &mut String, cells: &[S]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let c = c.as_ref();
+        if c.contains(',') || c.contains('"') || c.contains('\n') {
+            out.push('"');
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+/// Float formatting that keeps CSV compact but lossless enough for plots.
+pub fn format_float(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let ax = x.abs();
+    let mut s = String::new();
+    if ax >= 1e6 || ax < 1e-4 {
+        let _ = write!(s, "{x:.6e}");
+    } else {
+        let _ = write!(s, "{x:.6}");
+        // Trim trailing zeros (but keep at least one digit).
+        while s.ends_with('0') {
+            s.pop();
+        }
+        if s.ends_with('.') {
+            s.pop();
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut w = CsvWriter::new(vec!["t", "gbps"]);
+        w.row_f64(&[0.0, 254.5]).row_f64(&[0.034, 120.0]);
+        let s = w.to_string();
+        assert_eq!(s, "t,gbps\n0,254.5\n0.034,120\n");
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut w = CsvWriter::new(vec!["name", "v"]);
+        w.row(vec!["a,b".into(), "say \"hi\"".into()]);
+        let s = w.to_string();
+        assert!(s.contains("\"a,b\""));
+        assert!(s.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(vec!["a", "b"]);
+        w.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(format_float(0.0), "0");
+        assert_eq!(format_float(1.5), "1.5");
+        assert_eq!(format_float(254.0), "254");
+        assert!(format_float(1.23e9).contains('e'));
+        assert!(format_float(3.2e-7).contains('e'));
+    }
+
+    #[test]
+    fn labeled_rows() {
+        let mut w = CsvWriter::new(vec!["model", "gain"]);
+        w.row_labeled("resnet50", &[1.08]);
+        assert!(w.to_string().contains("resnet50,1.08"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation substrates built from scratch for the offline environment:
+//! deterministic PRNG, statistics, unit newtypes, JSON, CSV, ASCII tables
+//! and a small property-testing harness.
+
+pub mod csv;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

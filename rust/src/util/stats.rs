@@ -1,0 +1,484 @@
+//! Descriptive statistics and time-series helpers.
+//!
+//! The paper's evaluation is entirely statistical: mean and standard
+//! deviation of a bandwidth time series (Figs 4–6), relative performance
+//! (Fig 5), and coefficient-of-variation style smoothing metrics. This
+//! module provides those plus the resampling used to bin simulator traces
+//! into fixed-width sampling windows like the hardware profiler the paper
+//! used.
+
+/// One-pass summary of a sample (Welford's algorithm for numerical safety).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    /// Population standard deviation (the paper reports σ of the sampled
+    /// bandwidth series, a full population of samples, not an estimate).
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        let mut acc = Welford::new();
+        for &x in xs {
+            acc.push(x);
+        }
+        acc.summary()
+    }
+
+    /// Coefficient of variation σ/μ — the scale-free burstiness measure we
+    /// use when comparing traces with different average levels.
+    pub fn cov(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+
+    /// Peak-to-average ratio, the quantity traffic shaping shrinks.
+    pub fn peak_to_avg(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.max / self.mean
+        }
+    }
+}
+
+/// Streaming mean/variance accumulator (Welford).
+#[derive(Debug, Clone)]
+pub struct Welford {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Welford {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn summary(&self) -> Summary {
+        if self.n == 0 {
+            return Summary { count: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
+        Summary {
+            count: self.n,
+            mean: self.mean,
+            std: self.variance().sqrt(),
+            min: self.min,
+            max: self.max,
+        }
+    }
+}
+
+/// Percentile by linear interpolation between closest ranks
+/// (the "exclusive" definition used by numpy's default).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p), "p out of range: {p}");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Sort a copy and take a percentile; convenience for small samples.
+pub fn percentile_of(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&v, p)
+}
+
+/// A piecewise-constant time series: value `v[i]` holds on `[t[i], t[i+1])`.
+/// This is exactly what the fluid simulator emits (bandwidth is constant
+/// between events), and what we re-bin into profiler-style samples.
+#[derive(Debug, Clone, Default)]
+pub struct StepSeries {
+    /// Breakpoints, strictly increasing; `times.len() == values.len() + 1`.
+    times: Vec<f64>,
+    values: Vec<f64>,
+}
+
+impl StepSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a segment `[t0, t1)` with constant value `v`. Segments must
+    /// be contiguous and non-decreasing in time; zero-length segments are
+    /// dropped.
+    pub fn push(&mut self, t0: f64, t1: f64, v: f64) {
+        assert!(t1 >= t0, "segment ends before it starts: [{t0}, {t1})");
+        if t1 == t0 {
+            return;
+        }
+        if let Some(&last) = self.times.last() {
+            assert!(
+                (t0 - last).abs() < 1e-9 * t1.abs().max(1.0),
+                "non-contiguous segment: expected start {last}, got {t0}"
+            );
+            self.times.push(t1);
+        } else {
+            self.times.push(t0);
+            self.times.push(t1);
+        }
+        self.values.push(v);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn start(&self) -> f64 {
+        *self.times.first().unwrap_or(&0.0)
+    }
+
+    pub fn end(&self) -> f64 {
+        *self.times.last().unwrap_or(&0.0)
+    }
+
+    pub fn segments(&self) -> impl Iterator<Item = (f64, f64, f64)> + '_ {
+        (0..self.values.len()).map(|i| (self.times[i], self.times[i + 1], self.values[i]))
+    }
+
+    /// Time integral ∫v dt — for a bandwidth series this is total bytes.
+    pub fn integral(&self) -> f64 {
+        self.segments().map(|(t0, t1, v)| (t1 - t0) * v).sum()
+    }
+
+    /// Time-weighted mean value.
+    pub fn time_mean(&self) -> f64 {
+        let dur = self.end() - self.start();
+        if dur <= 0.0 {
+            0.0
+        } else {
+            self.integral() / dur
+        }
+    }
+
+    /// Re-bin into `n` equal windows over `[start, end)`, averaging within
+    /// each window — this models a hardware profiler sampling at a fixed
+    /// period, which is how the paper's Fig 1/6 traces were captured.
+    pub fn resample(&self, n: usize) -> Vec<f64> {
+        assert!(n > 0);
+        if self.is_empty() {
+            return vec![0.0; n];
+        }
+        let t0 = self.start();
+        let t1 = self.end();
+        let w = (t1 - t0) / n as f64;
+        let mut bins = vec![0.0f64; n];
+        for (s0, s1, v) in self.segments() {
+            // Distribute v*(overlap) into each bin the segment covers.
+            let first = (((s0 - t0) / w).floor() as isize).clamp(0, n as isize - 1) as usize;
+            let last = (((s1 - t0) / w).ceil() as isize).clamp(1, n as isize) as usize;
+            for (b, bin) in bins.iter_mut().enumerate().take(last).skip(first) {
+                let b0 = t0 + b as f64 * w;
+                let b1 = b0 + w;
+                let overlap = (s1.min(b1) - s0.max(b0)).max(0.0);
+                *bin += v * overlap;
+            }
+        }
+        for b in &mut bins {
+            *b /= w;
+        }
+        bins
+    }
+
+    /// Point-evaluate at time `t` (0 outside the domain).
+    pub fn at(&self, t: f64) -> f64 {
+        if self.is_empty() || t < self.start() || t >= self.end() {
+            return 0.0;
+        }
+        // Binary search for the segment containing t.
+        let idx = match self.times.binary_search_by(|x| x.partial_cmp(&t).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        self.values[idx.min(self.values.len() - 1)]
+    }
+
+    /// Pointwise sum of several series over their combined span (treating
+    /// each as 0 outside its domain). Used to aggregate per-partition
+    /// bandwidth into the total the memory controller sees.
+    pub fn sum(series: &[&StepSeries]) -> StepSeries {
+        let mut cuts: Vec<f64> = series
+            .iter()
+            .flat_map(|s| s.times.iter().copied())
+            .collect();
+        cuts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        cuts.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        let mut out = StepSeries::new();
+        for w in cuts.windows(2) {
+            let (t0, t1) = (w[0], w[1]);
+            let mid = 0.5 * (t0 + t1);
+            let v: f64 = series.iter().map(|s| s.at(mid)).sum();
+            out.push(t0, t1, v);
+        }
+        out
+    }
+}
+
+/// Simple fixed-width histogram for distribution reporting.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[b.min(last)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bin centers, for CSV export.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + (i as f64 + 0.5) * w)
+            .collect()
+    }
+}
+
+/// Lag-`k` autocorrelation of a sample (biased estimator, the common
+/// time-series form). Traffic shaping shows up as a drop in short-lag
+/// autocorrelation: the sync baseline's long saturated/idle runs are
+/// highly self-similar, while shuffled partition traffic decorrelates.
+pub fn autocorrelation(xs: &[f64], lag: usize) -> f64 {
+    if xs.len() <= lag || xs.len() < 2 {
+        return 0.0;
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let denom: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    let num: f64 = (0..n - lag)
+        .map(|i| (xs[i] - mean) * (xs[i + lag] - mean))
+        .sum();
+    num / denom
+}
+
+/// Exponentially-weighted moving average, used by the live traffic meter.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12); // classic example: σ = 2
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+        assert!((s.cov() - 0.4).abs() < 1e-12);
+        assert!((s.peak_to_avg() - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_is_stable_for_large_offsets() {
+        let base = 1e9;
+        let xs: Vec<f64> = (0..1000).map(|i| base + (i % 10) as f64).collect();
+        let s = Summary::of(&xs);
+        assert!((s.mean - (base + 4.5)).abs() < 1e-3);
+        assert!((s.std - 2.8722813232690143).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile_of(&[3.0, 1.0, 2.0], 50.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_series_integral_and_mean() {
+        let mut s = StepSeries::new();
+        s.push(0.0, 1.0, 10.0);
+        s.push(1.0, 3.0, 4.0);
+        assert!((s.integral() - 18.0).abs() < 1e-12);
+        assert!((s.time_mean() - 6.0).abs() < 1e-12);
+        assert_eq!(s.at(0.5), 10.0);
+        assert_eq!(s.at(2.0), 4.0);
+        assert_eq!(s.at(3.0), 0.0); // right-open
+    }
+
+    #[test]
+    fn resample_conserves_integral() {
+        let mut s = StepSeries::new();
+        s.push(0.0, 0.7, 5.0);
+        s.push(0.7, 2.0, 1.0);
+        s.push(2.0, 4.0, 8.0);
+        for n in [1, 2, 3, 7, 64] {
+            let bins = s.resample(n);
+            let w = (s.end() - s.start()) / n as f64;
+            let total: f64 = bins.iter().map(|v| v * w).sum();
+            assert!(
+                (total - s.integral()).abs() < 1e-9,
+                "n={n}: {total} vs {}",
+                s.integral()
+            );
+        }
+    }
+
+    #[test]
+    fn sum_of_series_is_pointwise() {
+        let mut a = StepSeries::new();
+        a.push(0.0, 2.0, 1.0);
+        let mut b = StepSeries::new();
+        b.push(1.0, 3.0, 2.0);
+        let s = StepSeries::sum(&[&a, &b]);
+        assert!((s.at(0.5) - 1.0).abs() < 1e-12);
+        assert!((s.at(1.5) - 3.0).abs() < 1e-12);
+        assert!((s.at(2.5) - 2.0).abs() < 1e-12);
+        assert!((s.integral() - (2.0 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_length_segments_are_dropped() {
+        let mut s = StepSeries::new();
+        s.push(0.0, 0.0, 99.0);
+        s.push(0.0, 1.0, 2.0);
+        assert!((s.integral() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 5.0, 9.99, -1.0, 10.0, 25.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 7);
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[5], 1);
+        assert_eq!(h.counts()[9], 1);
+        assert_eq!(h.centers().len(), 10);
+        assert!((h.centers()[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn autocorrelation_basics() {
+        // Constant series: zero variance → defined as 0.
+        assert_eq!(autocorrelation(&[5.0; 10], 1), 0.0);
+        // Strong period-2 alternation: lag-1 ≈ −1, lag-2 ≈ +1.
+        let alt: Vec<f64> = (0..100).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        assert!(autocorrelation(&alt, 1) < -0.9);
+        assert!(autocorrelation(&alt, 2) > 0.9);
+        // Lag 0 is exactly 1 for any non-constant series.
+        assert!((autocorrelation(&alt, 0) - 1.0).abs() < 1e-12);
+        // Degenerate lengths.
+        assert_eq!(autocorrelation(&[1.0], 1), 0.0);
+        assert_eq!(autocorrelation(&[], 0), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_input() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..200 {
+            e.push(7.0);
+        }
+        assert!((e.value().unwrap() - 7.0).abs() < 1e-9);
+    }
+}

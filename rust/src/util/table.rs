@@ -1,0 +1,140 @@
+//! ASCII table rendering for paper-style output.
+//!
+//! Experiment drivers print their results as aligned tables matching the
+//! layout of the paper's Table 1 / Fig 5 summaries, so a reader can diff
+//! paper-vs-measured at a glance.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple monospace table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        let headers: Vec<String> = headers.into_iter().map(Into::into).collect();
+        let aligns = vec![Align::Right; headers.len()];
+        Self { headers, aligns, rows: Vec::new(), title: None }
+    }
+
+    pub fn title(mut self, t: impl Into<String>) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    /// Set alignment per column (defaults to Right; first column commonly Left).
+    pub fn aligns(mut self, aligns: Vec<Align>) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns;
+        self
+    }
+
+    pub fn left_first(mut self) -> Self {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "table row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&render_row(&self.headers, &widths, &vec![Align::Left; ncol]));
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render_row(row, &widths, &self.aligns));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+fn render_row(cells: &[String], widths: &[usize], aligns: &[Align]) -> String {
+    let mut s = String::from("|");
+    for ((c, w), a) in cells.iter().zip(widths).zip(aligns) {
+        let pad = w - c.chars().count();
+        match a {
+            Align::Left => {
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+            }
+            Align::Right => {
+                s.push_str(&" ".repeat(pad + 1));
+                s.push_str(c);
+                s.push(' ');
+            }
+        }
+        s.push('|');
+    }
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new(vec!["layer", "BW (GB/s)", "FLOPS"])
+            .title("Table 1")
+            .left_first();
+        t.row(vec!["Pooling", "254", "0.6T"]);
+        t.row(vec!["Conv2_1a", "174", "2.9T"]);
+        let s = t.render();
+        assert!(s.starts_with("Table 1\n+"));
+        assert!(s.contains("| Pooling "));
+        assert!(s.contains(" 254 |"));
+        // All lines same width.
+        let lens: Vec<usize> =
+            s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only"]);
+    }
+}

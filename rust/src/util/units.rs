@@ -1,0 +1,299 @@
+//! Strongly-typed physical quantities.
+//!
+//! The traffic-shaping math constantly mixes bytes, FLOPs, seconds and
+//! GB/s; newtype wrappers catch unit bugs at compile time and centralize
+//! the formatting used in tables and logs.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+macro_rules! quantity {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(pub f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+
+            #[inline]
+            pub fn value(self) -> f64 {
+                self.0
+            }
+
+            pub fn max(self, other: Self) -> Self {
+                $name(self.0.max(other.0))
+            }
+
+            pub fn min(self, other: Self) -> Self {
+                $name(self.0.min(other.0))
+            }
+        }
+
+        impl Add for $name {
+            type Output = Self;
+            #[inline]
+            fn add(self, rhs: Self) -> Self {
+                $name(self.0 + rhs.0)
+            }
+        }
+
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: Self) {
+                self.0 += rhs.0;
+            }
+        }
+
+        impl Sub for $name {
+            type Output = Self;
+            #[inline]
+            fn sub(self, rhs: Self) -> Self {
+                $name(self.0 - rhs.0)
+            }
+        }
+
+        impl Mul<f64> for $name {
+            type Output = Self;
+            #[inline]
+            fn mul(self, k: f64) -> Self {
+                $name(self.0 * k)
+            }
+        }
+
+        impl Div<f64> for $name {
+            type Output = Self;
+            #[inline]
+            fn div(self, k: f64) -> Self {
+                $name(self.0 / k)
+            }
+        }
+
+        /// Dimensionless ratio of two like quantities.
+        impl Div for $name {
+            type Output = f64;
+            #[inline]
+            fn div(self, rhs: Self) -> f64 {
+                self.0 / rhs.0
+            }
+        }
+
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+                $name(iter.map(|x| x.0).sum())
+            }
+        }
+    };
+}
+
+quantity!(
+    /// A quantity of data in bytes.
+    Bytes
+);
+quantity!(
+    /// A count of floating-point operations.
+    Flops
+);
+quantity!(
+    /// A duration in seconds.
+    Seconds
+);
+quantity!(
+    /// A data rate in bytes per second (stored in B/s; display in GB/s).
+    BytesPerS
+);
+quantity!(
+    /// A compute rate in FLOP/s.
+    FlopsPerS
+);
+
+/// Convenience alias used pervasively in reports: GB/s as a display unit.
+pub type GbPerS = BytesPerS;
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+/// Decimal giga, used for GB/s and GFLOPS as in the paper.
+pub const GIGA: f64 = 1e9;
+pub const TERA: f64 = 1e12;
+
+impl Bytes {
+    pub fn from_mib(m: f64) -> Self {
+        Bytes(m * MIB)
+    }
+
+    pub fn from_gib(g: f64) -> Self {
+        Bytes(g * GIB)
+    }
+
+    pub fn mib(self) -> f64 {
+        self.0 / MIB
+    }
+
+    pub fn gib(self) -> f64 {
+        self.0 / GIB
+    }
+
+    /// Rate over a duration.
+    pub fn per(self, t: Seconds) -> BytesPerS {
+        BytesPerS(self.0 / t.0)
+    }
+}
+
+impl Flops {
+    pub fn from_tera(t: f64) -> Self {
+        Flops(t * TERA)
+    }
+
+    pub fn tera(self) -> f64 {
+        self.0 / TERA
+    }
+
+    pub fn per(self, t: Seconds) -> FlopsPerS {
+        FlopsPerS(self.0 / t.0)
+    }
+}
+
+impl BytesPerS {
+    pub fn from_gb(gb: f64) -> Self {
+        BytesPerS(gb * GIGA)
+    }
+
+    pub fn gb(self) -> f64 {
+        self.0 / GIGA
+    }
+
+    /// Time to move `b` bytes at this rate.
+    pub fn time_for(self, b: Bytes) -> Seconds {
+        Seconds(b.0 / self.0)
+    }
+}
+
+impl FlopsPerS {
+    pub fn from_tera(t: f64) -> Self {
+        FlopsPerS(t * TERA)
+    }
+
+    pub fn from_giga(g: f64) -> Self {
+        FlopsPerS(g * GIGA)
+    }
+
+    pub fn tera(self) -> f64 {
+        self.0 / TERA
+    }
+
+    /// Time to execute `f` FLOPs at this rate.
+    pub fn time_for(self, f: Flops) -> Seconds {
+        Seconds(f.0 / self.0)
+    }
+}
+
+impl Seconds {
+    pub fn from_ms(ms: f64) -> Self {
+        Seconds(ms / 1e3)
+    }
+
+    pub fn ms(self) -> f64 {
+        self.0 * 1e3
+    }
+
+    pub fn us(self) -> f64 {
+        self.0 * 1e6
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0;
+        if b >= GIB {
+            write!(f, "{:.2} GiB", b / GIB)
+        } else if b >= MIB {
+            write!(f, "{:.2} MiB", b / MIB)
+        } else if b >= KIB {
+            write!(f, "{:.2} KiB", b / KIB)
+        } else {
+            write!(f, "{b:.0} B")
+        }
+    }
+}
+
+impl fmt::Display for Flops {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let x = self.0;
+        if x >= TERA {
+            write!(f, "{:.2} TFLOP", x / TERA)
+        } else if x >= GIGA {
+            write!(f, "{:.2} GFLOP", x / GIGA)
+        } else {
+            write!(f, "{:.3e} FLOP", x)
+        }
+    }
+}
+
+impl fmt::Display for BytesPerS {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1} GB/s", self.gb())
+    }
+}
+
+impl fmt::Display for FlopsPerS {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.2} TFLOPS", self.tera())
+    }
+}
+
+impl fmt::Display for Seconds {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1.0 {
+            write!(f, "{:.3} s", self.0)
+        } else if self.0 >= 1e-3 {
+            write!(f, "{:.3} ms", self.ms())
+        } else {
+            write!(f, "{:.1} µs", self.us())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_and_ratios() {
+        let a = Bytes::from_mib(512.0);
+        let b = Bytes::from_mib(512.0);
+        assert_eq!((a + b).gib(), 1.0);
+        assert!((a / b - 1.0).abs() < 1e-12);
+        assert_eq!((a * 2.0).mib(), 1024.0);
+        assert_eq!((a / 2.0).mib(), 256.0);
+    }
+
+    #[test]
+    fn rate_time_round_trip() {
+        let bw = BytesPerS::from_gb(400.0);
+        let bytes = Bytes(400e9);
+        let t = bw.time_for(bytes);
+        assert!((t.0 - 1.0).abs() < 1e-12);
+        assert!((bytes.per(t).gb() - 400.0).abs() < 1e-9);
+
+        let rate = FlopsPerS::from_tera(6.0);
+        let work = Flops::from_tera(3.0);
+        assert!((rate.time_for(work).0 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_picks_sane_units() {
+        assert_eq!(format!("{}", Bytes(512.0)), "512 B");
+        assert_eq!(format!("{}", Bytes::from_mib(3.0)), "3.00 MiB");
+        assert_eq!(format!("{}", BytesPerS::from_gb(254.3)), "254.3 GB/s");
+        assert_eq!(format!("{}", Flops::from_tera(2.9)), "2.90 TFLOP");
+        assert_eq!(format!("{}", Seconds(0.0123)), "12.300 ms");
+    }
+
+    #[test]
+    fn sum_works() {
+        let total: Bytes = [Bytes(1.0), Bytes(2.0), Bytes(3.0)].into_iter().sum();
+        assert_eq!(total.0, 6.0);
+    }
+}

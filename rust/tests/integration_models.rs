@@ -1,0 +1,108 @@
+//! Cross-module integration: model zoo × traffic model × DRAM model.
+
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::{self, LayerKind};
+use trafficshape::reuse::{model_weight_bytes, PhaseCompiler, TrafficModel};
+use trafficshape::sim::DramModel;
+
+#[test]
+fn zoo_is_complete_and_valid() {
+    for name in ["alexnet", "vgg16", "googlenet", "resnet50", "tiny"] {
+        let g = model::by_name(name).unwrap();
+        g.validate().unwrap();
+        assert!(g.flops_per_image() > 0.0);
+        assert!(g.param_elems() > 0);
+    }
+    assert!(model::by_name("lenet").is_err());
+}
+
+#[test]
+fn published_parameter_counts() {
+    // (model, params in millions, tolerance)
+    for (name, want, tol) in [
+        ("alexnet", 61.0, 1.0),
+        ("vgg16", 138.36, 0.5),
+        ("googlenet", 7.0, 0.5),
+        ("resnet50", 25.56, 0.6),
+    ] {
+        let g = model::by_name(name).unwrap();
+        let got = g.param_elems() as f64 / 1e6;
+        assert!((got - want).abs() < tol, "{name}: {got:.2} M vs {want} M");
+    }
+}
+
+#[test]
+fn every_paper_model_compiles_to_phases_everywhere() {
+    let accel = AcceleratorConfig::knl_7210();
+    for name in model::PAPER_MODELS {
+        let g = model::by_name(name).unwrap();
+        for cores in [4, 8, 16, 32, 64] {
+            let phases = PhaseCompiler::new(&accel, cores, cores).compile(&g);
+            assert_eq!(phases.len(), g.len() - 1, "{name}@{cores}");
+            let mut moved = 0usize;
+            for p in &phases {
+                assert!(p.bytes.0 >= 0.0, "{name}/{}: negative bytes", p.name);
+                assert!(p.bytes.0.is_finite() && p.flops.0.is_finite());
+                if p.bytes.0 > 0.0 {
+                    moved += 1;
+                }
+            }
+            // Fused ReLU/split/dropout phases are traffic-free, but the
+            // bulk of the network must move bytes.
+            assert!(moved * 2 >= phases.len(), "{name}@{cores}: too few traffic phases");
+        }
+    }
+}
+
+#[test]
+fn weight_bytes_anchor_dram_feasibility() {
+    // The chain that produces the paper's "VGG up to 8 partitions" rule.
+    let accel = AcceleratorConfig::knl_7210();
+    let dram = DramModel::new(&accel);
+    let vgg = model::vgg16();
+    let w = model_weight_bytes(&vgg, accel.elem_bytes);
+    // VGG-16 weights ≈ 553 MB → 16 copies ≈ 8.8 GB, over half of MCDRAM.
+    assert!(w.0 > 0.5e9);
+    assert!(!dram.feasible(&vgg, 16, 64));
+    assert!(dram.feasible(&vgg, 8, 64));
+}
+
+#[test]
+fn split_layers_exist_in_residual_models_only() {
+    let has_split = |g: &trafficshape::model::Graph| {
+        g.count_kind(|k| matches!(k, LayerKind::Split { .. })) > 0
+    };
+    assert!(has_split(&model::resnet50()));
+    assert!(has_split(&model::googlenet())); // inception fan-out
+    assert!(has_split(&model::tiny_cnn()));
+    assert!(!has_split(&model::vgg16()));
+    assert!(!has_split(&model::alexnet()));
+}
+
+#[test]
+fn traffic_model_is_deterministic() {
+    let accel = AcceleratorConfig::knl_7210();
+    let g = model::resnet50();
+    let m = TrafficModel::new(&accel, 64);
+    let (a, ta) = m.network_traffic(&g, 64);
+    let (b, tb) = m.network_traffic(&g, 64);
+    assert_eq!(a.len(), b.len());
+    assert_eq!(ta.total().0, tb.total().0);
+}
+
+#[test]
+fn tiny_cnn_matches_python_twin_param_count() {
+    // python/tests/test_model.py asserts the same closed-form number.
+    let g = model::tiny_cnn();
+    let expected = (3 * 3 * 3 * 16 + 16 + 32)
+        + 2 * (3 * 3 * 16 * 16 + 16 + 32)
+        + (3 * 3 * 16 * 32 + 32 + 64)
+        + 2 * (3 * 3 * 32 * 32 + 32 + 64)
+        + (32 * 10 + 10);
+    // rust counts conv bias + BN(2C); python folds bias into BN shift:
+    // python total = rust total − Σ conv biases.
+    let conv_biases = 16 + 16 + 16 + 32 + 32 + 32;
+    assert_eq!(g.param_elems(), expected);
+    let python_twin = 28_698; // from python/tests/test_model.py closed form
+    assert_eq!(expected - conv_biases, python_twin);
+}

@@ -1,0 +1,116 @@
+//! Runtime + coordinator integration over the REAL artifacts.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with
+//! a loud message) if the artifact directory is missing so `cargo test`
+//! stays usable in a fresh checkout.
+
+use trafficshape::coordinator::{Coordinator, CoordinatorConfig};
+use trafficshape::runtime::{find_artifact_dir, Manifest, RuntimeClient};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = find_artifact_dir();
+    if dir.is_none() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+    }
+    dir
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.model, "tiny_cnn");
+    // Stage order is the contract between aot.py and the rust twin.
+    assert_eq!(m.stage_order, trafficshape::model::TINY_STAGES.to_vec());
+    // Every analytic layer maps into one of the artifact stages.
+    let g = trafficshape::model::tiny_cnn();
+    for layer in g.layers().iter().skip(1) {
+        assert!(
+            trafficshape::model::tiny_stage_of(&layer.name).is_some(),
+            "layer {} has no stage",
+            layer.name
+        );
+    }
+    assert!(m.batches.contains(&1) && m.batches.contains(&8));
+    assert_eq!(m.stages.len(), 10);
+    // Param accounting matches the rust tiny_cnn twin (minus conv biases
+    // which python folds into the BN shift).
+    let per_stage: usize = m.stages.iter().filter(|s| s.batch == 1).map(|s| s.param_elems).sum();
+    assert_eq!(per_stage, m.param_count);
+}
+
+#[test]
+fn every_stage_passes_numeric_self_check() {
+    // THE composition proof: Pallas kernel → JAX stage → HLO text →
+    // PJRT compile → execute reproduces jax's own numbers.
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for &batch in &[1usize, 8] {
+        let rt = RuntimeClient::new(&m, batch).unwrap();
+        rt.self_check_all().unwrap();
+    }
+}
+
+#[test]
+fn full_pipeline_forward_produces_logits() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let rt = RuntimeClient::new(&m, 1).unwrap();
+    let input: Vec<f32> = (0..3 * 32 * 32).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let logits = rt.forward(1, &input).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // Deterministic.
+    let logits2 = rt.forward(1, &input).unwrap();
+    assert_eq!(logits, logits2);
+}
+
+#[test]
+fn coordinator_runs_and_balances() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.partitions = 2;
+    cfg.total_batches = 4;
+    cfg.micro_batch = 8;
+    cfg.self_check = false;
+    let report = Coordinator::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.images, 32);
+    assert_eq!(report.jobs_per_worker, vec![2, 2]);
+    assert!(report.throughput_ips > 0.0);
+    assert!(report.total_traffic_bytes > 0.0);
+    assert!(report.bw.mean >= 0.0);
+}
+
+#[test]
+fn coordinator_checksum_invariant_across_partitions() {
+    // Same seed → same images → identical total logits, independent of
+    // how work is partitioned.
+    let Some(dir) = artifacts() else { return };
+    let mut sums = Vec::new();
+    for parts in [1usize, 2] {
+        let mut cfg = CoordinatorConfig::new(dir.clone());
+        cfg.partitions = parts;
+        cfg.total_batches = 4;
+        cfg.micro_batch = 8;
+        cfg.self_check = false;
+        cfg.seed = 7;
+        let r = Coordinator::new(cfg).unwrap().run().unwrap();
+        sums.push(r.logits_checksum);
+    }
+    let delta = (sums[0] - sums[1]).abs();
+    assert!(
+        delta < 1e-6 * sums[0].abs().max(1.0),
+        "checksums differ: {sums:?}"
+    );
+}
+
+#[test]
+fn coordinator_rejects_bad_config() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    cfg.micro_batch = 3; // not an AOT'd batch size
+    assert!(Coordinator::new(cfg).is_err());
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.partitions = 0;
+    assert!(Coordinator::new(cfg).is_err());
+}

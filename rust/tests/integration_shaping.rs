@@ -1,0 +1,143 @@
+//! Shaping-layer integration: the paper's evaluation shape end-to-end.
+
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::{googlenet, resnet50, vgg16};
+use trafficshape::shaping::{PartitionExperiment, PartitionPlan, StaggerPolicy, TradeoffModel};
+
+fn knl() -> AcceleratorConfig {
+    AcceleratorConfig::knl_7210()
+}
+
+#[test]
+fn headline_gains_in_plausible_bands() {
+    // Paper best gains: VGG +3.9%, GoogLeNet +11.1%, ResNet-50 +8.0%.
+    // The simulator substitute must land the same ordering with gains in
+    // a generous band around the paper's numbers.
+    let cases = [
+        ("vgg16", vgg16(), vec![2usize, 4, 8], 0.5, 12.0),
+        ("googlenet", googlenet(), vec![2, 4, 8, 16], 2.0, 30.0),
+        ("resnet50", resnet50(), vec![2, 4, 8, 16], 1.0, 25.0),
+    ];
+    let mut best = std::collections::HashMap::new();
+    for (name, graph, parts, lo_pct, hi_pct) in cases {
+        let mut best_gain = 0.0f64;
+        for n in parts {
+            let r = PartitionExperiment::new(&knl(), &graph)
+                .partitions(n)
+                .steady_batches(5)
+                .run()
+                .unwrap();
+            best_gain = best_gain.max((r.relative_performance - 1.0) * 100.0);
+        }
+        assert!(
+            (lo_pct..hi_pct).contains(&best_gain),
+            "{name}: best gain {best_gain:.1}% outside [{lo_pct}, {hi_pct}]%"
+        );
+        best.insert(name, best_gain);
+    }
+    assert!(best["googlenet"] > best["vgg16"]);
+    assert!(best["resnet50"] > best["vgg16"]);
+}
+
+#[test]
+fn sigma_reduction_monotone_in_partitions_for_resnet() {
+    // Fig 5: σ(BW) falls as n grows.
+    let g = resnet50();
+    let mut last = 0.0;
+    for n in [2, 4, 8, 16] {
+        let r = PartitionExperiment::new(&knl(), &g)
+            .partitions(n)
+            .steady_batches(4)
+            .run()
+            .unwrap();
+        assert!(
+            r.std_reduction >= last - 0.05,
+            "σ reduction regressed at n={n}: {} after {last}",
+            r.std_reduction
+        );
+        last = last.max(r.std_reduction);
+    }
+    assert!(last > 0.2, "16 partitions should cut σ by >20%: {last}");
+}
+
+#[test]
+fn paper_feasibility_matrix() {
+    let accel = knl();
+    // (model, n, feasible?)
+    let cases = [
+        ("vgg16", 8usize, true),
+        ("vgg16", 16, false),
+        ("googlenet", 16, true),
+        ("resnet50", 16, true),
+    ];
+    for (name, n, want) in cases {
+        let g = trafficshape::model::by_name(name).unwrap();
+        let plan = PartitionPlan::new(&accel, n).unwrap();
+        assert_eq!(
+            plan.check_capacity(&accel, &g).is_ok(),
+            want,
+            "{name}@{n}"
+        );
+    }
+}
+
+#[test]
+fn analytic_bounds_bracket_simulated_gain() {
+    // TradeoffModel.best_case_gain is an upper bound on the simulated
+    // relative performance.
+    let accel = knl();
+    let g = resnet50();
+    let tm = TradeoffModel::new(&accel);
+    for n in [2usize, 4, 8] {
+        let bound = tm.bounds(&g, n).best_case_gain;
+        let sim = PartitionExperiment::new(&accel, &g)
+            .partitions(n)
+            .steady_batches(4)
+            .run()
+            .unwrap()
+            .relative_performance;
+        assert!(
+            sim <= bound * 1.02,
+            "n={n}: simulated {sim:.3} exceeds analytic bound {bound:.3}"
+        );
+    }
+}
+
+#[test]
+fn random_delay_stagger_also_shapes() {
+    let g = resnet50();
+    let r = PartitionExperiment::new(&knl(), &g)
+        .partitions(4)
+        .steady_batches(5)
+        .stagger(StaggerPolicy::RandomDelay { seed: 7 })
+        .run()
+        .unwrap();
+    assert!(r.std_reduction > 0.0);
+    // RandomDelay pays its startup idle inside the measured window (up
+    // to one batch of skew over 5 batches), so allow that bias; the
+    // steady-state shaping must still keep throughput near baseline.
+    assert!(
+        r.relative_performance > 0.90,
+        "relative perf {}",
+        r.relative_performance
+    );
+}
+
+#[test]
+fn unlimited_bandwidth_removes_the_effect() {
+    // Fig 3(a): with unlimited BW the sync schedule is already optimal —
+    // partitioning can only add weight traffic, so the gain vanishes
+    // (relative perf ≤ ~1).
+    let accel = AcceleratorConfig::knl_unlimited_bw();
+    let g = resnet50();
+    let r = PartitionExperiment::new(&accel, &g)
+        .partitions(4)
+        .steady_batches(4)
+        .run()
+        .unwrap();
+    assert!(
+        r.relative_performance <= 1.005,
+        "no BW bottleneck → no shaping win, got {:.4}",
+        r.relative_performance
+    );
+}

@@ -1,0 +1,146 @@
+//! Simulator integration: analytically solvable workloads end-to-end.
+
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::resnet50;
+use trafficshape::reuse::{Phase, PhaseClass, PhaseCompiler};
+use trafficshape::sim::{SimEngine, Workload};
+use trafficshape::util::units::{Bytes, Flops, FlopsPerS, BytesPerS, Seconds};
+
+fn toy_accel(cores: usize, flops_per_core: f64, bw: f64) -> AcceleratorConfig {
+    let mut a = AcceleratorConfig::knl_7210();
+    a.cores = cores;
+    a.core_flops = FlopsPerS(flops_per_core);
+    a.mem_bw = BytesPerS(bw);
+    a.conv_efficiency = 1.0;
+    a.elementwise_efficiency = 1.0;
+    a
+}
+
+fn phase(flops: f64, bytes: f64) -> Phase {
+    Phase {
+        name: format!("f{flops}b{bytes}"),
+        layer_id: 0,
+        class: PhaseClass::ComputeDense,
+        flops: Flops(flops),
+        bytes: Bytes(bytes),
+    }
+}
+
+#[test]
+fn closed_form_two_partition_schedule() {
+    // Machine: 2 cores × 1 FLOP/s, bandwidth 10 B/s.
+    // Program: A(2 flops, 0 B) then B(1 flop, 15 B) per partition.
+    // Partition on 1 core: A takes 2 s; B: tc = 1 s, wants 15 B/s.
+    //
+    // Lockstep: both run A [0,2), then both B demand 15 → alloc 5 each →
+    //   B takes 3 s → makespan 5.
+    // Anti-phase (p2 starts at B): p2's B alone gets 10 B/s → 1.5 s;
+    //   overlap windows make both finish strictly earlier than 5.
+    let accel = toy_accel(2, 1.0, 10.0);
+    let prog = vec![phase(2.0, 0.0), phase(1.0, 15.0)];
+    let engine = SimEngine::new(&accel);
+
+    let lock = engine
+        .run(&[
+            Workload::new("a", 1, prog.clone(), 1),
+            Workload::new("b", 1, prog.clone(), 1),
+        ])
+        .unwrap();
+    assert!((lock.makespan.0 - 5.0).abs() < 1e-9, "{}", lock.makespan.0);
+
+    let anti = engine
+        .run(&[
+            Workload::new("a", 1, prog.clone(), 1),
+            Workload::new("b", 1, prog.clone(), 1).with_start_phase(1),
+        ])
+        .unwrap();
+    assert!(anti.makespan.0 < 5.0 - 1e-9, "{}", anti.makespan.0);
+    anti.validate().unwrap();
+}
+
+#[test]
+fn makespan_monotone_in_bandwidth() {
+    // More bandwidth never hurts.
+    let g = resnet50();
+    let mut last = f64::INFINITY;
+    for bw in [100e9, 200e9, 400e9, 800e9] {
+        let mut accel = AcceleratorConfig::knl_7210();
+        accel.mem_bw = BytesPerS(bw);
+        let phases = PhaseCompiler::synchronous(&accel).compile(&g);
+        let w = Workload::new("sync", accel.cores, phases, 2);
+        let out = SimEngine::new(&accel).run(&[w]).unwrap();
+        assert!(
+            out.makespan.0 <= last + 1e-9,
+            "bw {bw}: makespan {} > previous {last}",
+            out.makespan.0
+        );
+        last = out.makespan.0;
+    }
+}
+
+#[test]
+fn unlimited_bandwidth_hits_compute_roofline() {
+    let accel = AcceleratorConfig::knl_unlimited_bw();
+    let g = resnet50();
+    let compiler = PhaseCompiler::synchronous(&accel);
+    let phases = compiler.compile(&g);
+    let compute_time: f64 = phases
+        .iter()
+        .map(|p| p.compute_time(&accel, accel.cores).0)
+        .sum();
+    let w = Workload::new("sync", accel.cores, phases, 1);
+    let out = SimEngine::new(&accel).run(&[w]).unwrap();
+    assert!(
+        (out.makespan.0 - compute_time).abs() < 1e-6 * compute_time,
+        "{} vs {}",
+        out.makespan.0,
+        compute_time
+    );
+}
+
+#[test]
+fn start_delays_serialize_execution() {
+    // Two partitions with delays long enough to never overlap behave
+    // like solo runs.
+    let accel = toy_accel(2, 1.0, 10.0);
+    let prog = vec![phase(1.0, 5.0)]; // solo: 1 s (demand 5 < 10)
+    let out = SimEngine::new(&accel)
+        .run(&[
+            Workload::new("a", 1, prog.clone(), 1),
+            Workload::new("b", 1, prog.clone(), 1).with_start_delay(Seconds(10.0)),
+        ])
+        .unwrap();
+    assert!((out.finish_times[0].0 - 1.0).abs() < 1e-9);
+    assert!((out.finish_times[1].0 - 11.0).abs() < 1e-9);
+}
+
+#[test]
+fn resnet_sync_run_satisfies_all_invariants() {
+    let accel = AcceleratorConfig::knl_7210();
+    let g = resnet50();
+    let phases = PhaseCompiler::synchronous(&accel).compile(&g);
+    let declared_bytes: f64 = phases.iter().map(|p| p.bytes.0).sum::<f64>() * 3.0;
+    let w = Workload::new("sync", accel.cores, phases, 3);
+    let out = SimEngine::new(&accel).run(&[w]).unwrap();
+    out.validate().unwrap();
+    assert!((out.total_bytes - declared_bytes).abs() < 1e-6 * declared_bytes);
+    // Achieved FLOPS must be below peak.
+    assert!(out.achieved_flops() < accel.peak_flops().0);
+    // Average bandwidth below peak.
+    assert!(out.avg_bandwidth() < accel.mem_bw.0);
+}
+
+#[test]
+fn heterogeneous_partitions_are_legal() {
+    // Partitions of different core counts (not used by the paper but the
+    // engine must not assume symmetry).
+    let accel = toy_accel(8, 1.0, 100.0);
+    let out = SimEngine::new(&accel)
+        .run(&[
+            Workload::new("big", 6, vec![phase(6.0, 10.0)], 2),
+            Workload::new("small", 2, vec![phase(2.0, 10.0)], 2),
+        ])
+        .unwrap();
+    out.validate().unwrap();
+    assert!(out.makespan.0 > 0.0);
+}

@@ -1,0 +1,237 @@
+//! Property tests over the simulator/shaping invariants, using the
+//! in-tree proptest-lite harness (seeded, shrinking).
+
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::reuse::{Phase, PhaseClass};
+use trafficshape::sim::{max_min_allocate, SimEngine, Workload};
+use trafficshape::util::proptest_lite::{check, no_shrink, shrink_vec, Config};
+use trafficshape::util::rng::Xoshiro256StarStar;
+use trafficshape::util::units::{Bytes, BytesPerS, Flops, FlopsPerS, Seconds};
+
+fn toy_accel(cores: usize) -> AcceleratorConfig {
+    let mut a = AcceleratorConfig::knl_7210();
+    a.cores = cores;
+    a.core_flops = FlopsPerS(1.0);
+    a.mem_bw = BytesPerS(50.0);
+    a.conv_efficiency = 1.0;
+    a.elementwise_efficiency = 1.0;
+    a
+}
+
+fn phase(flops: f64, bytes: f64) -> Phase {
+    Phase {
+        name: String::new(),
+        layer_id: 0,
+        class: PhaseClass::ComputeDense,
+        flops: Flops(flops),
+        bytes: Bytes(bytes),
+    }
+}
+
+/// Random phase program: up to 8 phases of mixed compute/memory weight.
+fn gen_program(rng: &mut Xoshiro256StarStar) -> Vec<(f64, f64)> {
+    let n = rng.range_u64(1, 8) as usize;
+    (0..n)
+        .map(|_| {
+            let flops = rng.range_f64(0.0, 20.0);
+            let bytes = rng.range_f64(0.0, 200.0);
+            (flops, bytes)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_max_min_allocation_feasible_and_fair() {
+    check(
+        &Config { cases: 200, seed: 0xA11C, max_shrink_steps: 100 },
+        "max-min allocation feasibility",
+        |rng| {
+            let n = rng.range_u64(1, 12) as usize;
+            let peak = rng.range_f64(1.0, 500.0);
+            let demands: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.next_f64() < 0.1 {
+                        f64::INFINITY
+                    } else {
+                        rng.range_f64(0.0, 300.0)
+                    }
+                })
+                .collect();
+            (peak, demands)
+        },
+        no_shrink,
+        |(peak, demands)| {
+            let alloc = max_min_allocate(*peak, demands);
+            let total: f64 = alloc.iter().sum();
+            if total > peak * (1.0 + 1e-9) {
+                return Err(format!("total {total} > peak {peak}"));
+            }
+            for (a, d) in alloc.iter().zip(demands) {
+                if *a > *d + 1e-9 {
+                    return Err(format!("alloc {a} > demand {d}"));
+                }
+                if *a < 0.0 {
+                    return Err("negative allocation".into());
+                }
+            }
+            // Work conservation: if any demand unmet, pool is saturated.
+            let unmet = alloc.iter().zip(demands).any(|(a, d)| a + 1e-9 < *d);
+            if unmet && total < peak - 1e-6 {
+                return Err(format!("unmet demand but pool not saturated: {total} < {peak}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_byte_and_flop_conservation() {
+    check(
+        &Config { cases: 60, seed: 0xBEEF, max_shrink_steps: 200 },
+        "simulation conserves bytes and flops",
+        gen_program,
+        shrink_vec,
+        |prog| {
+            if prog.is_empty() {
+                return Ok(());
+            }
+            let accel = toy_accel(4);
+            let phases: Vec<Phase> = prog.iter().map(|&(f, b)| phase(f, b)).collect();
+            let workloads = [
+                Workload::new("a", 2, phases.clone(), 2),
+                Workload::new("b", 2, phases.clone(), 2).with_start_phase(1),
+            ];
+            let out = SimEngine::new(&accel)
+                .run(&workloads)
+                .map_err(|e| e.to_string())?;
+            out.validate().map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn prop_determinism() {
+    check(
+        &Config { cases: 30, seed: 0xD00D, max_shrink_steps: 50 },
+        "same workload → identical outcome",
+        gen_program,
+        shrink_vec,
+        |prog| {
+            if prog.is_empty() {
+                return Ok(());
+            }
+            let accel = toy_accel(2);
+            let phases: Vec<Phase> = prog.iter().map(|&(f, b)| phase(f, b)).collect();
+            let w = || [Workload::new("a", 1, phases.clone(), 2)];
+            let o1 = SimEngine::new(&accel).run(&w()).map_err(|e| e.to_string())?;
+            let o2 = SimEngine::new(&accel).run(&w()).map_err(|e| e.to_string())?;
+            if (o1.makespan.0 - o2.makespan.0).abs() > 0.0 {
+                return Err(format!("makespans differ: {} vs {}", o1.makespan.0, o2.makespan.0));
+            }
+            if (o1.total_bytes - o2.total_bytes).abs() > 0.0 {
+                return Err("byte totals differ".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_makespan_monotone_in_peak_bandwidth() {
+    check(
+        &Config { cases: 40, seed: 0xCAFE, max_shrink_steps: 100 },
+        "more bandwidth never slows the machine",
+        gen_program,
+        shrink_vec,
+        |prog| {
+            if prog.is_empty() {
+                return Ok(());
+            }
+            let phases: Vec<Phase> = prog.iter().map(|&(f, b)| phase(f, b)).collect();
+            let mut last = f64::INFINITY;
+            for bw in [10.0, 30.0, 90.0, 270.0] {
+                let mut accel = toy_accel(4);
+                accel.mem_bw = BytesPerS(bw);
+                let workloads = [
+                    Workload::new("a", 2, phases.clone(), 1),
+                    Workload::new("b", 2, phases.clone(), 1),
+                ];
+                let out = SimEngine::new(&accel)
+                    .run(&workloads)
+                    .map_err(|e| e.to_string())?;
+                if out.makespan.0 > last * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "bw {bw}: makespan {} > previous {last}",
+                        out.makespan.0
+                    ));
+                }
+                last = out.makespan.0;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_start_delay_shifts_but_preserves_work() {
+    check(
+        &Config { cases: 40, seed: 0xF00D, max_shrink_steps: 100 },
+        "delay shifts completion, conserves work",
+        |rng| {
+            let prog = gen_program(rng);
+            let delay = rng.range_f64(0.0, 5.0);
+            (prog, delay)
+        },
+        no_shrink,
+        |(prog, delay)| {
+            if prog.is_empty() {
+                return Ok(());
+            }
+            let accel = toy_accel(2);
+            let phases: Vec<Phase> = prog.iter().map(|&(f, b)| phase(f, b)).collect();
+            let base = SimEngine::new(&accel)
+                .run(&[Workload::new("a", 2, phases.clone(), 1)])
+                .map_err(|e| e.to_string())?;
+            let delayed = SimEngine::new(&accel)
+                .run(&[Workload::new("a", 2, phases.clone(), 1)
+                    .with_start_delay(Seconds(*delay))])
+                .map_err(|e| e.to_string())?;
+            let want = base.makespan.0 + delay;
+            if (delayed.makespan.0 - want).abs() > 1e-6 * want.max(1.0) {
+                return Err(format!(
+                    "delayed makespan {} != base+delay {want}",
+                    delayed.makespan.0
+                ));
+            }
+            if (delayed.total_bytes - base.total_bytes).abs() > 1e-9 {
+                return Err("bytes changed under delay".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partition_count_preserves_total_flops() {
+    // Machine-wide FLOPs are invariant to how cores are partitioned
+    // (weight *bytes* grow, compute does not).
+    use trafficshape::model::resnet50;
+    use trafficshape::shaping::{build_workloads, PartitionPlan, StaggerPolicy};
+    let accel = AcceleratorConfig::knl_7210();
+    let g = resnet50();
+    let flops_at = |n: usize| -> f64 {
+        let plan = PartitionPlan::new(&accel, n).unwrap();
+        build_workloads(&accel, &g, &plan, 2, StaggerPolicy::UniformPhase)
+            .iter()
+            .map(|w| w.total_flops())
+            .sum()
+    };
+    let base = flops_at(1);
+    for n in [2, 4, 8, 16, 32] {
+        let f = flops_at(n);
+        assert!(
+            (f / base - 1.0).abs() < 1e-9,
+            "n={n}: total flops {f} != baseline {base}"
+        );
+    }
+}
