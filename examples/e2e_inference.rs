@@ -55,8 +55,8 @@ fn main() -> std::process::ExitCode {
         let total_batches = m.get_usize("batches")?.unwrap();
         let micro_batch = m.get_usize("micro-batch")?.unwrap();
 
-        let mut table =
-            Table::new(vec!["partitions", "images", "img/s", "traffic MB", "BW mean MB/s", "BW cov"]);
+        let cols = vec!["partitions", "images", "img/s", "traffic MB", "BW mean MB/s", "BW cov"];
+        let mut table = Table::new(cols);
         let mut checksums = Vec::new();
         let mut parts = 1;
         while parts <= max_parts {

@@ -1,22 +1,26 @@
-//! Partition sweep over any model set — a configurable Fig-5.
+//! Partition sweep over any model set — a configurable, parallel Fig-5.
+//!
+//! Scenarios (models × partition counts × bandwidth scales) fan out
+//! across worker threads; the ranked report is byte-identical whatever
+//! `--threads` is set to.
 //!
 //! ```bash
 //! cargo run --release --example partition_sweep -- \
-//!     --models resnet50,googlenet --partitions 1,2,4,8,16 --batches 6
+//!     --models resnet50,googlenet --partitions 1,2,4,8,16 \
+//!     --bw-scales 1.0,0.75 --batches 6 --threads 0
 //! ```
 
 use trafficshape::cli::CommandSpec;
 use trafficshape::config::AcceleratorConfig;
-use trafficshape::error::Error;
-use trafficshape::model;
-use trafficshape::shaping::PartitionExperiment;
-use trafficshape::util::table::Table;
+use trafficshape::sweep::{SweepGrid, SweepRunner, DEFAULT_SWEEP_MODELS};
 
 fn main() -> std::process::ExitCode {
-    let spec = CommandSpec::new("partition_sweep", "sweep partition counts over models")
-        .opt("models", "LIST", Some("resnet50"), "comma-separated model names")
+    let spec = CommandSpec::new("partition_sweep", "parallel sweep of partition scenarios")
+        .opt("models", "LIST", None, "comma-separated model names (default: 5-model zoo)")
         .opt("partitions", "LIST", Some("1,2,4,8,16"), "partition counts")
+        .opt("bw-scales", "LIST", Some("1.0"), "memory-bandwidth multipliers")
         .opt("batches", "N", Some("6"), "steady-state batches")
+        .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
         .opt("accel", "NAME", Some("knl_7210"), "accelerator preset");
     let args: Vec<String> = std::env::args().skip(1).collect();
     let m = match spec.parse(&args) {
@@ -29,39 +33,32 @@ fn main() -> std::process::ExitCode {
 
     let run = || -> trafficshape::error::Result<()> {
         let accel = AcceleratorConfig::preset(m.get("accel").unwrap())?;
-        let batches = m.get_usize("batches")?.unwrap();
-        let parts = m.get_usize_list("partitions")?.unwrap();
-        let models = m.get_str_list("models").unwrap();
-
-        let mut t = Table::new(vec!["model", "n", "rel perf", "σ reduction", "avg BW gain"])
-            .left_first();
-        for name in &models {
-            let graph = model::by_name(name)?;
-            for &n in &parts {
-                if n == 1 {
-                    continue;
-                }
-                match PartitionExperiment::new(&accel, &graph)
-                    .partitions(n)
-                    .steady_batches(batches)
-                    .run()
-                {
-                    Ok(r) => t.row(vec![
-                        name.clone(),
-                        n.to_string(),
-                        format!("{:+.1}%", (r.relative_performance - 1.0) * 100.0),
-                        format!("{:+.1}%", r.std_reduction * 100.0),
-                        format!("{:+.1}%", r.avg_bw_increase * 100.0),
-                    ]),
-                    Err(Error::InfeasiblePartitioning(why)) => {
-                        eprintln!("skip {name}@{n}: {why}");
-                        t.row(vec![name.clone(), n.to_string(), "DRAM".into(), "-".into(), "-".into()])
-                    }
-                    Err(e) => return Err(e),
-                };
-            }
+        let models = m
+            .get_str_list("models")
+            .unwrap_or_else(|| DEFAULT_SWEEP_MODELS.iter().map(|s| s.to_string()).collect());
+        let grid = SweepGrid::new(&accel)
+            .models(models)
+            .partitions(m.get_usize_list("partitions")?.unwrap())
+            .bandwidth_scales(m.get_f64_list("bw-scales")?.unwrap())
+            .steady_batches(m.get_usize("batches")?.unwrap());
+        let total = grid.len();
+        let runner = SweepRunner::new(grid).threads(m.get_usize("threads")?.unwrap());
+        let workers = runner.effective_threads();
+        let report = runner.run()?;
+        print!("{}", report.render());
+        for (s, why) in report.infeasible_reasons() {
+            eprintln!("note: {}: {why}", s.label());
         }
-        print!("{}", t.title("partition sweep").render());
+        println!(
+            "{total} scenarios ({} completed, {} DRAM-infeasible) on {workers} worker thread(s)",
+            report.completed_count(),
+            report.infeasible_count(),
+        );
+        if let Some(best) = report.best() {
+            let gain =
+                best.metrics().map(|x| (x.relative_performance - 1.0) * 100.0).unwrap_or(0.0);
+            println!("→ best: {} ({gain:+.1}%)", best.scenario.label());
+        }
         Ok(())
     };
     match run() {

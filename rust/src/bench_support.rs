@@ -148,7 +148,9 @@ mod tests {
     #[test]
     fn throughput_annotation() {
         let mut b = Bencher::new(0, 2);
-        b.bench_throughput("t", 100.0, "img/s", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        b.bench_throughput("t", 100.0, "img/s", || {
+            std::thread::sleep(std::time::Duration::from_millis(1))
+        });
         let (v, unit) = b.results()[0].throughput.unwrap();
         assert!(v > 0.0 && v < 200_000.0);
         assert_eq!(unit, "img/s");

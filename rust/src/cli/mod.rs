@@ -103,7 +103,9 @@ impl CommandSpec {
                     .flags
                     .iter()
                     .find(|f| f.name == name)
-                    .ok_or_else(|| Error::Usage(format!("unknown flag --{name}\n\n{}", self.usage())))?;
+                    .ok_or_else(|| {
+                        Error::Usage(format!("unknown flag --{name}\n\n{}", self.usage()))
+                    })?;
                 match spec.value {
                     None => {
                         if inline.is_some() {
@@ -173,18 +175,25 @@ impl Matches {
 
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
         self.get(name)
-            .map(|s| s.parse::<usize>().map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{s}'"))))
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{s}'")))
+            })
             .transpose()
     }
 
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         self.get(name)
-            .map(|s| s.parse::<f64>().map_err(|_| Error::Usage(format!("--{name} expects a number, got '{s}'"))))
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| Error::Usage(format!("--{name} expects a number, got '{s}'")))
+            })
             .transpose()
     }
 
-    /// Parse a comma-separated list like `1,2,4,8`.
-    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+    /// Shared comma-separated list parser; `kind` names the element type
+    /// in the usage error ("integers", "numbers").
+    fn get_list<T: std::str::FromStr>(&self, name: &str, kind: &str) -> Result<Option<Vec<T>>> {
         match self.get(name) {
             None => Ok(None),
             Some(s) => {
@@ -194,13 +203,25 @@ impl Matches {
                     if piece.is_empty() {
                         continue;
                     }
-                    out.push(piece.parse::<usize>().map_err(|_| {
-                        Error::Usage(format!("--{name} expects comma-separated integers, got '{piece}'"))
+                    out.push(piece.parse::<T>().map_err(|_| {
+                        Error::Usage(format!(
+                            "--{name} expects comma-separated {kind}, got '{piece}'"
+                        ))
                     })?);
                 }
                 Ok(Some(out))
             }
         }
+    }
+
+    /// Parse a comma-separated list like `1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        self.get_list(name, "integers")
+    }
+
+    /// Parse a comma-separated list like `1.0,0.75,0.5`.
+    pub fn get_f64_list(&self, name: &str) -> Result<Option<Vec<f64>>> {
+        self.get_list(name, "numbers")
     }
 
     pub fn get_str_list(&self, name: &str) -> Option<Vec<String>> {
@@ -226,7 +247,10 @@ pub struct App {
 
 impl App {
     pub fn usage(&self) -> String {
-        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        let mut s = format!(
+            "{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name
+        );
         for c in &self.commands {
             s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
         }
@@ -246,7 +270,9 @@ impl App {
             .commands
             .iter()
             .find(|c| c.name == cmd_name)
-            .ok_or_else(|| Error::Usage(format!("unknown command '{cmd_name}'\n\n{}", self.usage())))?;
+            .ok_or_else(|| {
+                Error::Usage(format!("unknown command '{cmd_name}'\n\n{}", self.usage()))
+            })?;
         let matches = spec.parse(&argv[1..])?;
         Ok((cmd_name.clone(), matches))
     }
@@ -301,6 +327,17 @@ mod tests {
         assert!(msg.contains("OPTIONS"));
         assert!(msg.contains("--partitions"));
         assert!(msg.contains("[default: 1,2,4]"));
+    }
+
+    #[test]
+    fn f64_lists_parse_and_diagnose() {
+        let spec = CommandSpec::new("s", "t").opt("scales", "LIST", Some("1.0,0.75"), "bw scales");
+        let m = spec.parse(&args(&[])).unwrap();
+        assert_eq!(m.get_f64_list("scales").unwrap().unwrap(), vec![1.0, 0.75]);
+        let m = spec.parse(&args(&["--scales", "2, 0.5,"])).unwrap();
+        assert_eq!(m.get_f64_list("scales").unwrap().unwrap(), vec![2.0, 0.5]);
+        let m = spec.parse(&args(&["--scales", "1.0,abc"])).unwrap();
+        assert!(m.get_f64_list("scales").unwrap_err().to_string().contains("numbers"));
     }
 
     #[test]

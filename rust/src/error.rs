@@ -1,54 +1,83 @@
 //! Library-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (the offline crate set has no
+//! `thiserror`); the messages match the derive-style prefixes the rest of
+//! the crate and its tests expect.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes surfaced by the trafficshape library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A CNN graph failed validation (dangling edge, shape mismatch, ...).
-    #[error("invalid model graph: {0}")]
     InvalidGraph(String),
 
     /// Configuration rejected (out-of-range knob, unknown preset, ...).
-    #[error("invalid configuration: {0}")]
     InvalidConfig(String),
 
     /// Requested partitioning is infeasible (cores not divisible, DRAM
     /// capacity exceeded, ...). Mirrors the paper's "VGG-16 only up to
     /// 8 partitions" DRAM constraint.
-    #[error("infeasible partitioning: {0}")]
     InfeasiblePartitioning(String),
 
     /// The simulator detected an internal inconsistency (conservation
     /// violation, negative time, ...). Always a bug, never user error.
-    #[error("simulator invariant violated: {0}")]
     SimInvariant(String),
 
     /// JSON parse error from the hand-rolled parser in [`crate::util::json`].
-    #[error("json error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
     /// CLI usage error; carries the message shown to the user.
-    #[error("usage: {0}")]
     Usage(String),
 
     /// Artifact store problems (missing manifest, hash mismatch, ...).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA runtime failures, wrapped from the `xla` crate.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Coordinator-level failures (worker panicked, channel closed, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidGraph(m) => write!(f, "invalid model graph: {m}"),
+            Error::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            Error::InfeasiblePartitioning(m) => write!(f, "infeasible partitioning: {m}"),
+            Error::SimInvariant(m) => write!(f, "simulator invariant violated: {m}"),
+            Error::Json { offset, message } => {
+                write!(f, "json error at byte {offset}: {message}")
+            }
+            Error::Usage(m) => write!(f, "usage: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            // Transparent: io errors display as themselves.
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -81,5 +110,15 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn io_display_is_transparent_and_sourced() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let msg = io.to_string();
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), msg);
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::Usage("x".into())).is_none());
     }
 }

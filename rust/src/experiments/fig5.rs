@@ -7,9 +7,9 @@
 //!   ResNet-50 +8.0%,      −36.2%,   +15.2%
 
 use crate::config::ExperimentConfig;
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::model;
-use crate::shaping::PartitionExperiment;
+use crate::sweep::{ScenarioStatus, SweepGrid, SweepRunner};
 use crate::util::csv::CsvWriter;
 use crate::util::table::Table;
 
@@ -95,41 +95,38 @@ pub fn run_fig5(cfg: &ExperimentConfig) -> Result<Fig5Result> {
 }
 
 pub fn run_fig5_for_models(cfg: &ExperimentConfig, models: &[&str]) -> Result<Fig5Result> {
-    let mut rows = Vec::new();
-    for &name in models {
-        let graph = model::by_name(name)?;
-        // The synchronous baseline is shared by every sweep point.
-        let baseline = PartitionExperiment::new(&cfg.accelerator, &graph)
-            .steady_batches(cfg.steady_batches)
-            .trace_samples(cfg.trace_samples)
-            .run_baseline()?;
-        for &n in &cfg.partitions {
-            if n == 1 {
-                continue; // the baseline itself
-            }
-            let exp = PartitionExperiment::new(&cfg.accelerator, &graph)
-                .partitions(n)
-                .steady_batches(cfg.steady_batches)
-                .trace_samples(cfg.trace_samples);
-            match exp.run_against(&baseline) {
-                Ok(report) => rows.push(Fig5Row {
-                    model: name.to_string(),
-                    partitions: n,
-                    relative_performance: Some(report.relative_performance),
-                    std_reduction: Some(report.std_reduction),
-                    avg_bw_increase: Some(report.avg_bw_increase),
-                }),
-                Err(Error::InfeasiblePartitioning(_)) => rows.push(Fig5Row {
-                    model: name.to_string(),
-                    partitions: n,
-                    relative_performance: None,
-                    std_reduction: None,
-                    avg_bw_increase: None,
-                }),
-                Err(e) => return Err(e),
-            }
-        }
-    }
+    // Fig 5 is a partition sweep, so it rides the parallel sweep engine:
+    // the grid enumerates model-major with shared per-model baselines
+    // (exactly the old serial loop), and the worker pool fans the points
+    // out with deterministic, grid-ordered aggregation.
+    let grid = SweepGrid::new(&cfg.accelerator)
+        .models(models.to_vec())
+        .partitions(cfg.partitions.clone())
+        .steady_batches(cfg.steady_batches)
+        .trace_samples(cfg.trace_samples);
+    let report = SweepRunner::new(grid).run()?;
+
+    let rows = report
+        .outcomes
+        .iter()
+        .filter(|o| o.scenario.partitions != 1) // n = 1 is the baseline itself
+        .map(|o| match &o.status {
+            ScenarioStatus::Completed(m) => Fig5Row {
+                model: o.scenario.model.clone(),
+                partitions: o.scenario.partitions,
+                relative_performance: Some(m.relative_performance),
+                std_reduction: Some(m.std_reduction),
+                avg_bw_increase: Some(m.avg_bw_increase),
+            },
+            ScenarioStatus::Infeasible(_) => Fig5Row {
+                model: o.scenario.model.clone(),
+                partitions: o.scenario.partitions,
+                relative_performance: None,
+                std_reduction: None,
+                avg_bw_increase: None,
+            },
+        })
+        .collect();
     Ok(Fig5Result { rows })
 }
 

@@ -38,7 +38,28 @@ pub fn list_experiments() -> Vec<(&'static str, &'static str)> {
         ("fig5", "partition sweep: relative perf, σ, mean BW × 3 models"),
         ("fig6", "BW traces for 1/4/16 partitions, ResNet-50"),
         ("table1", "per-layer BW and achieved FLOPS, ResNet-50"),
+        ("sweep", "parallel grid: 5 models × partitions × bandwidth, ranked"),
     ]
+}
+
+/// The `sweep` experiment driver: the full model zoo × the configured
+/// partition counts × two bandwidth points, run on the parallel sweep
+/// engine (one worker per available core).
+fn run_sweep(cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
+    use crate::sweep::{SweepGrid, SweepRunner};
+    let grid = SweepGrid::new(&cfg.accelerator)
+        .partitions(cfg.partitions.clone())
+        .bandwidth_scales(vec![1.0, 0.75])
+        .steady_batches(cfg.steady_batches)
+        .trace_samples(cfg.trace_samples);
+    let report = SweepRunner::new(grid).run()?;
+    Ok(ExperimentOutput {
+        id: "sweep",
+        title: "Sweep — model zoo × partitions × bandwidth (parallel)",
+        rendered: report.render(),
+        csv: vec![("sweep_grid.csv".into(), report.to_csv())],
+        summary: report.summary_json(),
+    })
 }
 
 /// Run one experiment by id.
@@ -167,6 +188,7 @@ pub fn run_by_id(id: &str, cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
                 summary,
             })
         }
+        "sweep" => run_sweep(cfg),
         other => Err(Error::Usage(format!(
             "unknown experiment '{other}'; available: {}",
             list_experiments()
@@ -188,8 +210,8 @@ mod tests {
         cfg.steady_batches = 2;
         cfg.trace_samples = 64;
         for (id, _) in list_experiments() {
-            if id == "fig5" {
-                continue; // exercised by its own (slower) test
+            if id == "fig5" || id == "sweep" {
+                continue; // exercised by their own (slower) tests
             }
             let out = run_by_id(id, &cfg).unwrap();
             assert_eq!(out.id, id);

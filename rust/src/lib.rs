@@ -23,6 +23,9 @@
 //!   main-memory bandwidth pool (the KNL + MCDRAM substitute substrate).
 //! * [`shaping`] — the paper's contribution: compute-unit partitioning,
 //!   asynchronous scheduling policies and traffic-shaping analysis.
+//! * [`sweep`] — parallel scenario-sweep engine: grids of
+//!   models × partitions × bandwidth configs fanned out across worker
+//!   threads and aggregated into a ranked report.
 //! * [`runtime`] / [`coordinator`] — the real-execution path: a PJRT CPU
 //!   client loads AOT-compiled HLO artifacts (JAX + Pallas, build-time
 //!   Python) and partition worker threads run them with live traffic
@@ -55,6 +58,7 @@ pub mod reuse;
 pub mod runtime;
 pub mod shaping;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 
 pub mod bench_support;
@@ -71,6 +75,7 @@ pub mod prelude {
         PartitionExperiment, PartitionPlan, ShapingAnalysis, StaggerPolicy,
     };
     pub use crate::sim::{BandwidthTrace, SimEngine, SimOutcome, Workload};
+    pub use crate::sweep::{SweepGrid, SweepReport, SweepRunner};
     pub use crate::util::stats::Summary;
     pub use crate::util::units::{Bytes, Flops, GbPerS, Seconds};
 }

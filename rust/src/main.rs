@@ -4,7 +4,7 @@
 //!   list                      list reproducible experiments
 //!   exp <id|all>              run experiment drivers, write CSV/JSON
 //!   models                    print the model zoo inventory
-//!   sweep                     custom partition sweep
+//!   sweep                     parallel scenario sweep (models × partitions × bandwidth)
 //!   e2e                       real-compute coordinator run (PJRT)
 
 use std::process::ExitCode;
@@ -15,7 +15,7 @@ use trafficshape::error::{Error, Result};
 use trafficshape::experiments::{list_experiments, run_by_id};
 use trafficshape::model;
 use trafficshape::runtime::find_artifact_dir;
-use trafficshape::shaping::PartitionExperiment;
+use trafficshape::sweep::{SweepGrid, SweepRunner};
 use trafficshape::util::table::Table;
 
 fn app() -> App {
@@ -31,10 +31,13 @@ fn app() -> App {
                 .opt("samples", "N", Some("400"), "trace samples")
                 .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
             CommandSpec::new("models", "print the model zoo inventory"),
-            CommandSpec::new("sweep", "custom partition sweep")
-                .opt("models", "LIST", Some("resnet50"), "comma-separated model names")
+            CommandSpec::new("sweep", "parallel scenario sweep (models × partitions × bandwidth)")
+                .opt("models", "LIST", None, "comma-separated model names (default: 5-model zoo)")
                 .opt("partitions", "LIST", Some("1,2,4,8,16"), "partition counts")
+                .opt("bw-scales", "LIST", Some("1.0,0.75"), "memory-bandwidth multipliers")
                 .opt("batches", "N", Some("6"), "steady-state batches")
+                .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
+                .opt("out", "DIR", None, "also write the grid CSV to this directory")
                 .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
             CommandSpec::new("tune", "auto-select the partition count for a model")
                 .opt("model", "NAME", Some("resnet50"), "model name")
@@ -102,7 +105,9 @@ fn cmd_exp(m: &Matches) -> Result<()> {
 fn cmd_models() -> Result<()> {
     let mut t = Table::new(vec!["model", "layers", "params (M)", "GFLOP/img", "weights (MB)"])
         .left_first();
-    for name in ["alexnet", "vgg16", "vgg19", "googlenet", "resnet50", "resnet101", "resnet152", "tiny"] {
+    let zoo =
+        ["alexnet", "vgg16", "vgg19", "googlenet", "resnet50", "resnet101", "resnet152", "tiny"];
+    for name in zoo {
         let g = model::by_name(name)?;
         t.row(vec![
             g.name.clone(),
@@ -119,41 +124,43 @@ fn cmd_models() -> Result<()> {
 fn cmd_sweep(m: &Matches) -> Result<()> {
     let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
     let batches = m.get_usize("batches")?.unwrap_or(6);
+    let threads = m.get_usize("threads")?.unwrap_or(0);
     let parts = m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4, 8, 16]);
-    let models = m
-        .get_str_list("models")
-        .unwrap_or_else(|| vec!["resnet50".to_string()]);
+    let scales = m.get_f64_list("bw-scales")?.unwrap_or_else(|| vec![1.0, 0.75]);
+    let models = m.get_str_list("models").unwrap_or_else(|| {
+        trafficshape::sweep::DEFAULT_SWEEP_MODELS.iter().map(|s| s.to_string()).collect()
+    });
 
-    let mut t = Table::new(vec!["model", "n", "rel perf", "σ reduction", "avg BW gain"])
-        .left_first();
-    for name in &models {
-        let graph = model::by_name(name)?;
-        for &n in &parts {
-            if n == 1 {
-                continue;
-            }
-            let row = PartitionExperiment::new(&accel, &graph)
-                .partitions(n)
-                .steady_batches(batches)
-                .run();
-            match row {
-                Ok(r) => t.row(vec![
-                    name.clone(),
-                    n.to_string(),
-                    format!("{:+.1}%", (r.relative_performance - 1.0) * 100.0),
-                    format!("{:+.1}%", r.std_reduction * 100.0),
-                    format!("{:+.1}%", r.avg_bw_increase * 100.0),
-                ]),
-                Err(Error::InfeasiblePartitioning(why)) => {
-                    t.row(vec![name.clone(), n.to_string(), "DRAM".into(), "-".into(), "-".into()]);
-                    eprintln!("note: {why}");
-                    continue;
-                }
-                Err(e) => return Err(e),
-            };
-        }
+    let grid = SweepGrid::new(&accel)
+        .models(models)
+        .partitions(parts)
+        .bandwidth_scales(scales)
+        .steady_batches(batches);
+    let total = grid.len();
+    let runner = SweepRunner::new(grid).threads(threads);
+    let workers = runner.effective_threads();
+    let report = runner.run()?;
+
+    print!("{}", report.render());
+    for (s, why) in report.infeasible_reasons() {
+        eprintln!("note: {}: {why}", s.label());
     }
-    print!("{}", t.render());
+    println!(
+        "{total} scenarios ({} completed, {} DRAM-infeasible) on {workers} worker thread(s)",
+        report.completed_count(),
+        report.infeasible_count(),
+    );
+    if let Some(best) = report.best() {
+        let gain = best.metrics().map(|x| (x.relative_performance - 1.0) * 100.0).unwrap_or(0.0);
+        println!("→ best: {} ({gain:+.1}%)", best.scenario.label());
+    }
+    if let Some(dir) = m.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        report.to_csv().write_to(&dir.join("sweep_grid.csv"))?;
+        std::fs::write(dir.join("sweep_summary.json"), report.summary_json().to_string_pretty())?;
+        println!("wrote {}/sweep_grid.csv", dir.display());
+    }
     Ok(())
 }
 

@@ -100,7 +100,10 @@ impl Graph {
                 }
                 _ => {
                     if l.inputs.is_empty() {
-                        return Err(Error::InvalidGraph(format!("layer '{}' has no inputs", l.name)));
+                        return Err(Error::InvalidGraph(format!(
+                            "layer '{}' has no inputs",
+                            l.name
+                        )));
                     }
                     for &p in &l.inputs {
                         if p >= idx {
@@ -170,7 +173,7 @@ impl GraphBuilder {
         spec: super::layer::ConvSpec,
         input: LayerId,
     ) -> LayerId {
-        let c = self.then(format!("{base}"), LayerKind::Conv(spec), input);
+        let c = self.then(base.to_string(), LayerKind::Conv(spec), input);
         let b = self.then(format!("{base}_bn"), LayerKind::BatchNorm, c);
         self.then(format!("{base}_relu"), LayerKind::Relu, b)
     }

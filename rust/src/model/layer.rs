@@ -108,11 +108,16 @@ impl Layer {
             if ins.len() == 1 {
                 Ok(ins[0])
             } else {
-                Err(Error::InvalidGraph(format!("{msg} expects exactly 1 input, got {}", ins.len())))
+                Err(Error::InvalidGraph(format!(
+                    "{msg} expects exactly 1 input, got {}",
+                    ins.len()
+                )))
             }
         };
         match kind {
-            LayerKind::Input => Err(Error::InvalidGraph("input shape must be provided explicitly".into())),
+            LayerKind::Input => {
+                Err(Error::InvalidGraph("input shape must be provided explicitly".into()))
+            }
             LayerKind::Conv(c) => {
                 let x = one("conv")?;
                 if x.c % c.groups != 0 || c.out_ch % c.groups != 0 {
@@ -306,7 +311,8 @@ mod tests {
         let full = mk(LayerKind::Conv(ConvSpec::new(256, 5, 1, 2)), &[in_s]);
         let grouped = mk(LayerKind::Conv(ConvSpec::new(256, 5, 1, 2).grouped(2)), &[in_s]);
         assert_eq!(grouped.out, full.out);
-        assert!((full.flops_per_image(&[in_s]) / grouped.flops_per_image(&[in_s]) - 2.0).abs() < 1e-9);
+        let ratio = full.flops_per_image(&[in_s]) / grouped.flops_per_image(&[in_s]);
+        assert!((ratio - 2.0).abs() < 1e-9);
         assert_eq!(full.param_elems(Some(in_s)) - 256, 2 * (grouped.param_elems(Some(in_s)) - 256));
     }
 
@@ -339,7 +345,8 @@ mod tests {
             &[TensorShape::new(2048, 7, 7)],
         );
         assert_eq!(l.out, TensorShape::flat(2048));
-        assert!((l.flops_per_image(&[TensorShape::new(2048, 7, 7)]) - (2048 * 49) as f64).abs() < 1.0);
+        let f = l.flops_per_image(&[TensorShape::new(2048, 7, 7)]);
+        assert!((f - (2048 * 49) as f64).abs() < 1.0);
     }
 
     #[test]

@@ -207,7 +207,7 @@ mod tests {
             g.layers()
                 .iter()
                 .filter(|l| l.name.starts_with(prefix) && l.name.ends_with("_relu"))
-                .last()
+                .next_back()
                 .unwrap()
         };
         assert_eq!(last("conv2").out, TensorShape::new(256, 56, 56));

@@ -53,8 +53,8 @@ pub fn stage_of(layer_name: &str) -> Option<&'static str> {
         .iter()
         .find(|s| {
             layer_name.starts_with(&format!("{s}_"))
-                || layer_name == format!("{s}_conv")
-                || layer_name.starts_with("prob") && **s == "head"
+                || layer_name.strip_prefix(**s) == Some("_conv")
+                || (layer_name.starts_with("prob") && **s == "head")
         })
         .copied()
         .or(if layer_name.starts_with("stem") {

@@ -75,12 +75,17 @@ impl TrafficModel {
     }
 
     /// Whole-network traffic for a batch: per-layer breakdown plus total.
-    pub fn network_traffic(&self, graph: &Graph, batch: usize) -> (Vec<LayerTraffic>, LayerTraffic) {
+    pub fn network_traffic(
+        &self,
+        graph: &Graph,
+        batch: usize,
+    ) -> (Vec<LayerTraffic>, LayerTraffic) {
+        let zero = LayerTraffic { weights: Bytes::ZERO, inputs: Bytes::ZERO, outputs: Bytes::ZERO };
         let mut per_layer = Vec::with_capacity(graph.len());
-        let mut total = LayerTraffic { weights: Bytes::ZERO, inputs: Bytes::ZERO, outputs: Bytes::ZERO };
+        let mut total = zero;
         for layer in graph.layers() {
             let t = if matches!(layer.kind, crate::model::LayerKind::Input) {
-                LayerTraffic { weights: Bytes::ZERO, inputs: Bytes::ZERO, outputs: Bytes::ZERO }
+                zero
             } else {
                 self.layer_traffic(graph, layer, batch)
             };

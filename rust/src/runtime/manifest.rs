@@ -256,7 +256,10 @@ mod tests {
         let _ = synthetic(&dir);
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .unwrap()
-            .replace("[2, 4, 4, 8], \"output_shape\": [2, 10]", "[2, 9, 9, 9], \"output_shape\": [2, 10]");
+            .replace(
+                "[2, 4, 4, 8], \"output_shape\": [2, 10]",
+                "[2, 9, 9, 9], \"output_shape\": [2, 10]",
+            );
         std::fs::write(dir.join("manifest.json"), text).unwrap();
         let err = Manifest::load(&dir).unwrap_err();
         assert!(err.to_string().contains("shape chain"), "{err}");
@@ -273,7 +276,12 @@ mod tests {
             output_shape: vec![1, 2],
             flops: 1.0,
             param_elems: 0,
-            check: CheckVector { output_mean: 0.0, output_std: 0.0, first8: vec![], tolerance: 1e-4 },
+            check: CheckVector {
+                output_mean: 0.0,
+                output_std: 0.0,
+                first8: vec![],
+                tolerance: 1e-4,
+            },
         };
         let p = Manifest::probe_input(&meta);
         assert_eq!(p.len(), 4);

@@ -25,6 +25,13 @@ pub struct ShapingReport {
 }
 
 impl ShapingReport {
+    /// Coefficient of variation (σ/μ) of the shaped bandwidth series —
+    /// the scale-free traffic-smoothness metric the sweep engine ranks
+    /// and reports alongside relative performance.
+    pub fn smoothness_cov(&self) -> f64 {
+        self.shaped.bw.cov()
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("model", self.model.as_str())
@@ -99,7 +106,8 @@ impl PartitionExperiment {
         if self.enforce_capacity {
             plan.check_capacity(&self.accel, &self.graph)?;
         }
-        let workloads = build_workloads(&self.accel, &self.graph, &plan, self.steady_batches, policy);
+        let workloads =
+            build_workloads(&self.accel, &self.graph, &plan, self.steady_batches, policy);
         SimEngine::new(&self.accel).run(&workloads)
     }
 

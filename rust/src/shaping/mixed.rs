@@ -136,7 +136,8 @@ impl MixedWorkloadExperiment {
             let batch = self.accel.cores; // full-machine batch
             let full_batches = images.div_ceil(batch);
             let phases = PhaseCompiler::synchronous(&self.accel).compile(&t.graph);
-            let w = Workload::new(format!("{}/sync", t.graph.name), self.accel.cores, phases, full_batches);
+            let name = format!("{}/sync", t.graph.name);
+            let w = Workload::new(name, self.accel.cores, phases, full_batches);
             timeshared += engine.run(&[w])?.makespan.0;
         }
 

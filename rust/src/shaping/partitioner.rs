@@ -25,7 +25,11 @@ impl PartitionPlan {
     }
 
     /// Build a plan with an explicit machine-wide batch.
-    pub fn with_total_batch(accel: &AcceleratorConfig, n: usize, total_batch: usize) -> Result<Self> {
+    pub fn with_total_batch(
+        accel: &AcceleratorConfig,
+        n: usize,
+        total_batch: usize,
+    ) -> Result<Self> {
         if n == 0 {
             return Err(Error::InfeasiblePartitioning("0 partitions".into()));
         }

@@ -118,7 +118,12 @@ impl DramModel {
     }
 
     /// Largest feasible partition count from a candidate list.
-    pub fn max_feasible(&self, graph: &Graph, candidates: &[usize], total_batch: usize) -> Option<usize> {
+    pub fn max_feasible(
+        &self,
+        graph: &Graph,
+        candidates: &[usize],
+        total_batch: usize,
+    ) -> Option<usize> {
         candidates
             .iter()
             .copied()

@@ -1,0 +1,210 @@
+//! Scenario grids: the cartesian product of models × partition counts ×
+//! bandwidth configurations a sweep explores.
+
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::util::units::BytesPerS;
+
+/// The model zoo a default sweep covers (the paper's three evaluation
+/// networks plus AlexNet and the e2e TinyCNN).
+pub const DEFAULT_SWEEP_MODELS: [&str; 5] = ["vgg16", "googlenet", "resnet50", "alexnet", "tiny"];
+
+/// One point of the sweep grid. `id` is the point's index in the grid's
+/// enumeration order and the key that makes parallel execution
+/// order-independent: results are always reported in `id` order, no
+/// matter which worker thread computed them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub id: usize,
+    pub model: String,
+    pub partitions: usize,
+    /// Multiplier on the accelerator's sustained memory bandwidth —
+    /// sweeping it explores how the shaping win moves with the
+    /// compute/bandwidth balance (cf. the unlimited-BW ablation).
+    pub bandwidth_scale: f64,
+    pub steady_batches: usize,
+}
+
+impl Scenario {
+    /// Human-readable tag used in reports and logs.
+    pub fn label(&self) -> String {
+        format!("{}@{}p/bw{:.2}x", self.model, self.partitions, self.bandwidth_scale)
+    }
+
+    /// The accelerator this scenario runs on: `base` with the bandwidth
+    /// knob scaled.
+    pub fn accel(&self, base: &AcceleratorConfig) -> AcceleratorConfig {
+        let mut a = base.clone();
+        a.mem_bw = BytesPerS(base.mem_bw.0 * self.bandwidth_scale);
+        a
+    }
+}
+
+/// Builder for a sweep grid. `scenarios()` enumerates the cartesian
+/// product model-major, then bandwidth scale, then partition count — the
+/// order every report uses.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub accel: AcceleratorConfig,
+    pub models: Vec<String>,
+    pub partitions: Vec<usize>,
+    pub bandwidth_scales: Vec<f64>,
+    pub steady_batches: usize,
+    pub trace_samples: usize,
+}
+
+impl SweepGrid {
+    pub fn new(accel: &AcceleratorConfig) -> Self {
+        Self {
+            accel: accel.clone(),
+            models: DEFAULT_SWEEP_MODELS.iter().map(|s| s.to_string()).collect(),
+            partitions: vec![1, 2, 4, 8, 16],
+            bandwidth_scales: vec![1.0],
+            steady_batches: 6,
+            trace_samples: 400,
+        }
+    }
+
+    pub fn models<S: Into<String>>(mut self, models: Vec<S>) -> Self {
+        self.models = models.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn partitions(mut self, partitions: Vec<usize>) -> Self {
+        self.partitions = partitions;
+        self
+    }
+
+    pub fn bandwidth_scales(mut self, scales: Vec<f64>) -> Self {
+        self.bandwidth_scales = scales;
+        self
+    }
+
+    pub fn steady_batches(mut self, batches: usize) -> Self {
+        self.steady_batches = batches;
+        self
+    }
+
+    pub fn trace_samples(mut self, samples: usize) -> Self {
+        self.trace_samples = samples;
+        self
+    }
+
+    /// Number of scenarios the grid enumerates.
+    pub fn len(&self) -> usize {
+        self.models.len() * self.bandwidth_scales.len() * self.partitions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.accel.validate()?;
+        if self.models.is_empty() {
+            return Err(Error::InvalidConfig("sweep grid has no models".into()));
+        }
+        if self.partitions.is_empty() {
+            return Err(Error::InvalidConfig("sweep grid has no partition counts".into()));
+        }
+        if self.bandwidth_scales.is_empty() {
+            return Err(Error::InvalidConfig("sweep grid has no bandwidth scales".into()));
+        }
+        for m in &self.models {
+            crate::model::by_name(m)?;
+        }
+        for &s in &self.bandwidth_scales {
+            if !(s.is_finite() && s > 0.0) {
+                return Err(Error::InvalidConfig(format!("bandwidth scale {s} must be > 0")));
+            }
+        }
+        for &n in &self.partitions {
+            if n == 0 {
+                return Err(Error::InvalidConfig("partition count 0 in sweep grid".into()));
+            }
+        }
+        if self.steady_batches == 0 {
+            return Err(Error::InvalidConfig("steady_batches must be > 0".into()));
+        }
+        if self.trace_samples == 0 {
+            return Err(Error::InvalidConfig("trace_samples must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Enumerate all scenarios in report order.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut id = 0;
+        for model in &self.models {
+            for &scale in &self.bandwidth_scales {
+                for &n in &self.partitions {
+                    out.push(Scenario {
+                        id,
+                        model: model.clone(),
+                        partitions: n,
+                        bandwidth_scale: scale,
+                        steady_batches: self.steady_batches,
+                    });
+                    id += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    #[test]
+    fn default_grid_covers_the_zoo() {
+        let g = SweepGrid::new(&knl());
+        assert_eq!(g.len(), 5 * 5);
+        g.validate().unwrap();
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), g.len());
+        // Ids are the enumeration order.
+        for (i, s) in sc.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+        // Model-major: first block is all-vgg16.
+        assert!(sc[..5].iter().all(|s| s.model == "vgg16"));
+        assert_eq!(sc[0].partitions, 1);
+        assert_eq!(sc[4].partitions, 16);
+    }
+
+    #[test]
+    fn bandwidth_scale_modifies_accel_only() {
+        let s = Scenario {
+            id: 0,
+            model: "resnet50".into(),
+            partitions: 2,
+            bandwidth_scale: 0.5,
+            steady_batches: 4,
+        };
+        let base = knl();
+        let a = s.accel(&base);
+        assert!((a.mem_bw.0 - base.mem_bw.0 * 0.5).abs() < 1e-6);
+        assert_eq!(a.cores, base.cores);
+        assert!(s.label().contains("resnet50@2p"));
+    }
+
+    #[test]
+    fn validation_rejects_bad_grids() {
+        assert!(SweepGrid::new(&knl()).models(Vec::<String>::new()).validate().is_err());
+        assert!(SweepGrid::new(&knl()).models(vec!["not_a_model"]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).partitions(vec![]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).partitions(vec![0]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).bandwidth_scales(vec![-1.0]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).bandwidth_scales(vec![]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).steady_batches(0).validate().is_err());
+        assert!(SweepGrid::new(&knl()).trace_samples(0).validate().is_err());
+        SweepGrid::new(&knl()).validate().unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! Parallel scenario-sweep engine.
+//!
+//! The paper's evaluation — and every ROADMAP direction built on it — is
+//! a design-space sweep: networks × partition counts × bandwidth
+//! configurations. This module turns that into a first-class subsystem:
+//!
+//! * [`SweepGrid`] enumerates the cartesian product of scenarios;
+//! * [`SweepRunner`] fans them out across `std::thread` workers (the
+//!   fluid simulator is pure, so scenarios are embarrassingly parallel)
+//!   with per-(model, bandwidth) baselines computed once and shared;
+//! * [`SweepReport`] aggregates the outcomes into a ranked table with
+//!   relative-performance and traffic-smoothness (coefficient of
+//!   variation) columns, plus CSV/JSON exports.
+//!
+//! Results are byte-identical for 1 vs N worker threads: outcomes are
+//! keyed by scenario id and reassembled in grid order.
+//!
+//! ```no_run
+//! use trafficshape::config::AcceleratorConfig;
+//! use trafficshape::sweep::{SweepGrid, SweepRunner};
+//!
+//! let grid = SweepGrid::new(&AcceleratorConfig::knl_7210())
+//!     .models(vec!["resnet50", "googlenet"])
+//!     .partitions(vec![1, 2, 4, 8, 16])
+//!     .bandwidth_scales(vec![1.0, 0.75]);
+//! let report = SweepRunner::new(grid).run().unwrap();
+//! print!("{}", report.render());
+//! ```
+
+mod grid;
+mod report;
+mod runner;
+
+pub use grid::{Scenario, SweepGrid, DEFAULT_SWEEP_MODELS};
+pub use report::{ScenarioOutcome, ScenarioStatus, SweepMetrics, SweepReport};
+pub use runner::SweepRunner;

@@ -1,0 +1,339 @@
+//! Aggregated sweep results: per-scenario metrics, ranking, rendering.
+
+use super::grid::Scenario;
+use crate::shaping::{ShapingAnalysis, ShapingReport};
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::cmp::Ordering;
+
+/// The paper's comparison metrics for one completed scenario, plus the
+/// traffic-smoothness (coefficient-of-variation) columns the ranked
+/// report sorts and displays.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepMetrics {
+    /// throughput(n)/throughput(1) on the same accelerator config.
+    pub relative_performance: f64,
+    /// 1 − σ_n/σ_1 of the sampled bandwidth series.
+    pub std_reduction: f64,
+    /// mean_n/mean_1 − 1 of the sampled bandwidth series.
+    pub avg_bw_increase: f64,
+    /// σ/μ of the shaped bandwidth series — lower is smoother traffic.
+    pub smoothness_cov: f64,
+    /// σ/μ of the synchronous baseline's series, for reference.
+    pub baseline_cov: f64,
+    pub bw_mean_gbps: f64,
+    pub bw_std_gbps: f64,
+    pub makespan_s: f64,
+    pub throughput_ips: f64,
+}
+
+impl SweepMetrics {
+    /// Metrics of a shaped run relative to its baseline.
+    pub fn from_report(report: &ShapingReport) -> Self {
+        Self {
+            relative_performance: report.relative_performance,
+            std_reduction: report.std_reduction,
+            avg_bw_increase: report.avg_bw_increase,
+            smoothness_cov: report.smoothness_cov(),
+            baseline_cov: report.baseline.bw.cov(),
+            bw_mean_gbps: report.shaped.bw.mean,
+            bw_std_gbps: report.shaped.bw.std,
+            makespan_s: report.shaped.makespan,
+            throughput_ips: report.shaped.throughput,
+        }
+    }
+
+    /// Metrics of the synchronous baseline itself (the n = 1 grid row).
+    pub fn baseline_row(baseline: &ShapingAnalysis) -> Self {
+        Self {
+            relative_performance: 1.0,
+            std_reduction: 0.0,
+            avg_bw_increase: 0.0,
+            smoothness_cov: baseline.bw.cov(),
+            baseline_cov: baseline.bw.cov(),
+            bw_mean_gbps: baseline.bw.mean,
+            bw_std_gbps: baseline.bw.std,
+            makespan_s: baseline.makespan,
+            throughput_ips: baseline.throughput,
+        }
+    }
+}
+
+/// What happened to one scenario.
+#[derive(Debug, Clone)]
+pub enum ScenarioStatus {
+    Completed(SweepMetrics),
+    /// DRAM-infeasible point (the paper's VGG-16-beyond-8 wall) with the
+    /// capacity model's explanation.
+    Infeasible(String),
+}
+
+/// One scenario plus its result.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub scenario: Scenario,
+    pub status: ScenarioStatus,
+}
+
+impl ScenarioOutcome {
+    pub fn metrics(&self) -> Option<&SweepMetrics> {
+        match &self.status {
+            ScenarioStatus::Completed(m) => Some(m),
+            ScenarioStatus::Infeasible(_) => None,
+        }
+    }
+}
+
+/// The aggregated result of one sweep run. `outcomes` is in scenario-id
+/// order regardless of how many worker threads produced it, so renders
+/// and CSV exports are byte-identical across thread counts.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub outcomes: Vec<ScenarioOutcome>,
+}
+
+impl SweepReport {
+    /// Completed outcomes ranked by relative performance (best first,
+    /// scenario id as the deterministic tie-breaker), then infeasible
+    /// outcomes in id order.
+    pub fn ranked(&self) -> Vec<&ScenarioOutcome> {
+        let mut out: Vec<&ScenarioOutcome> = self.outcomes.iter().collect();
+        out.sort_by(|a, b| match (a.metrics(), b.metrics()) {
+            (Some(ma), Some(mb)) => mb
+                .relative_performance
+                .partial_cmp(&ma.relative_performance)
+                .unwrap_or(Ordering::Equal)
+                .then(a.scenario.id.cmp(&b.scenario.id)),
+            (Some(_), None) => Ordering::Less,
+            (None, Some(_)) => Ordering::Greater,
+            (None, None) => a.scenario.id.cmp(&b.scenario.id),
+        });
+        out
+    }
+
+    /// The best completed scenario, if any completed at all.
+    pub fn best(&self) -> Option<&ScenarioOutcome> {
+        self.ranked().into_iter().find(|o| o.metrics().is_some())
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.metrics().is_some()).count()
+    }
+
+    pub fn infeasible_count(&self) -> usize {
+        self.outcomes.len() - self.completed_count()
+    }
+
+    /// Infeasible scenarios with the capacity model's explanation, in
+    /// grid order — callers print these as `note:` lines so the DRAM
+    /// breakdown (weights/activations/workspace) stays visible.
+    pub fn infeasible_reasons(&self) -> Vec<(&Scenario, &str)> {
+        self.outcomes
+            .iter()
+            .filter_map(|o| match &o.status {
+                ScenarioStatus::Infeasible(why) => Some((&o.scenario, why.as_str())),
+                ScenarioStatus::Completed(_) => None,
+            })
+            .collect()
+    }
+
+    /// Ranked ASCII table (the `sweep` CLI's output).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "#",
+            "model",
+            "n",
+            "bw",
+            "rel perf",
+            "σ reduction",
+            "avg BW gain",
+            "cov",
+            "sync cov",
+        ])
+        .left_first();
+        for (rank, o) in self.ranked().iter().enumerate() {
+            let s = &o.scenario;
+            match o.metrics() {
+                Some(m) => t.row(vec![
+                    (rank + 1).to_string(),
+                    s.model.clone(),
+                    s.partitions.to_string(),
+                    format!("{:.2}x", s.bandwidth_scale),
+                    format!("{:+.1}%", (m.relative_performance - 1.0) * 100.0),
+                    format!("{:+.1}%", m.std_reduction * 100.0),
+                    format!("{:+.1}%", m.avg_bw_increase * 100.0),
+                    format!("{:.3}", m.smoothness_cov),
+                    format!("{:.3}", m.baseline_cov),
+                ]),
+                None => t.row(vec![
+                    "-".to_string(),
+                    s.model.clone(),
+                    s.partitions.to_string(),
+                    format!("{:.2}x", s.bandwidth_scale),
+                    "DRAM".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]),
+            };
+        }
+        t.title("scenario sweep — ranked by relative performance vs synchronous baseline")
+            .render()
+    }
+
+    /// Full per-scenario export in grid (id) order.
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec![
+            "id",
+            "model",
+            "partitions",
+            "bandwidth_scale",
+            "steady_batches",
+            "status",
+            "relative_performance",
+            "std_reduction",
+            "avg_bw_increase",
+            "smoothness_cov",
+            "baseline_cov",
+            "bw_mean_gbps",
+            "bw_std_gbps",
+            "makespan_s",
+            "throughput_ips",
+            "reason",
+        ]);
+        let f = crate::util::csv::format_float;
+        for o in &self.outcomes {
+            let s = &o.scenario;
+            let head = vec![
+                s.id.to_string(),
+                s.model.clone(),
+                s.partitions.to_string(),
+                f(s.bandwidth_scale),
+                s.steady_batches.to_string(),
+            ];
+            let tail = match &o.status {
+                ScenarioStatus::Completed(m) => vec![
+                    "ok".to_string(),
+                    f(m.relative_performance),
+                    f(m.std_reduction),
+                    f(m.avg_bw_increase),
+                    f(m.smoothness_cov),
+                    f(m.baseline_cov),
+                    f(m.bw_mean_gbps),
+                    f(m.bw_std_gbps),
+                    f(m.makespan_s),
+                    f(m.throughput_ips),
+                    String::new(),
+                ],
+                ScenarioStatus::Infeasible(why) => {
+                    let mut v = vec!["dram_infeasible".to_string()];
+                    v.extend((0..9).map(|_| String::new()));
+                    v.push(why.clone());
+                    v
+                }
+            };
+            w.row(head.into_iter().chain(tail).collect());
+        }
+        w
+    }
+
+    /// Summary for result files: counts plus the best point per model.
+    pub fn summary_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("scenarios", self.outcomes.len())
+            .with("completed", self.completed_count())
+            .with("dram_infeasible", self.infeasible_count());
+        if let Some(best) = self.best() {
+            j.set(
+                "best",
+                Json::obj()
+                    .with("label", best.scenario.label())
+                    .with(
+                        "relative_performance",
+                        best.metrics().map(|m| m.relative_performance).unwrap_or(0.0),
+                    ),
+            );
+        }
+        for o in self.ranked() {
+            if let Some(m) = o.metrics() {
+                let key = format!("best_gain_{}", o.scenario.model);
+                if j.get(&key).is_none() {
+                    j.set(&key, m.relative_performance);
+                }
+            }
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(rel: f64) -> SweepMetrics {
+        SweepMetrics {
+            relative_performance: rel,
+            std_reduction: 0.1,
+            avg_bw_increase: 0.05,
+            smoothness_cov: 0.2,
+            baseline_cov: 0.5,
+            bw_mean_gbps: 200.0,
+            bw_std_gbps: 40.0,
+            makespan_s: 1.0,
+            throughput_ips: 64.0,
+        }
+    }
+
+    fn outcome(id: usize, rel: Option<f64>) -> ScenarioOutcome {
+        ScenarioOutcome {
+            scenario: Scenario {
+                id,
+                model: "resnet50".into(),
+                partitions: 2,
+                bandwidth_scale: 1.0,
+                steady_batches: 4,
+            },
+            status: match rel {
+                Some(r) => ScenarioStatus::Completed(metrics(r)),
+                None => ScenarioStatus::Infeasible("over capacity".into()),
+            },
+        }
+    }
+
+    #[test]
+    fn ranking_sorts_best_first_and_infeasible_last() {
+        let r = SweepReport {
+            outcomes: vec![
+                outcome(0, Some(1.02)),
+                outcome(1, None),
+                outcome(2, Some(1.10)),
+                outcome(3, Some(1.10)),
+            ],
+        };
+        let ranked = r.ranked();
+        assert_eq!(ranked[0].scenario.id, 2, "highest gain first, id breaks the tie");
+        assert_eq!(ranked[1].scenario.id, 3);
+        assert_eq!(ranked[2].scenario.id, 0);
+        assert_eq!(ranked[3].scenario.id, 1, "infeasible sinks to the bottom");
+        assert_eq!(r.best().unwrap().scenario.id, 2);
+        assert_eq!(r.completed_count(), 3);
+        assert_eq!(r.infeasible_count(), 1);
+    }
+
+    #[test]
+    fn render_and_csv_cover_all_rows() {
+        let r = SweepReport { outcomes: vec![outcome(0, Some(1.05)), outcome(1, None)] };
+        let text = r.render();
+        assert!(text.contains("ranked by relative performance"));
+        assert!(text.contains("+5.0%"));
+        assert!(text.contains("DRAM"));
+        let csv = r.to_csv().to_string();
+        assert_eq!(csv.lines().count(), 3); // header + 2 rows
+        assert!(csv.contains("dram_infeasible"));
+        let j = r.summary_json();
+        assert_eq!(j.req_usize("scenarios").unwrap(), 2);
+        assert!(j.req_f64("best_gain_resnet50").unwrap() > 1.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Parallel sweep execution.
+//!
+//! The fluid simulator is pure and `Send`-friendly, and every sweep
+//! scenario is independent, so a grid is embarrassingly parallel. The
+//! runner fans scenarios out over a pool of `std::thread` workers in two
+//! phases:
+//!
+//! 1. **baselines** — one synchronous (n = 1) run per distinct
+//!    (model, bandwidth-scale) pair, shared by every partition count of
+//!    that pair (the same optimization `fig5` used serially);
+//! 2. **scenarios** — each grid point runs against its precomputed
+//!    baseline.
+//!
+//! Determinism: workers pull indices from an atomic counter but write
+//! results into per-index slots, and the report is assembled in index
+//! order — so the aggregated output is byte-identical whether the pool
+//! has 1 thread or N. Errors are deterministic too: the error attached
+//! to the lowest index wins.
+
+use super::grid::{Scenario, SweepGrid};
+use super::report::{ScenarioOutcome, ScenarioStatus, SweepMetrics, SweepReport};
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::shaping::{PartitionExperiment, ShapingAnalysis};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+/// Deterministic parallel map: applies `f` to every item on `threads`
+/// workers and returns the results in item order. The first error in
+/// item order (not completion order) is the one reported.
+fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> Result<R> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = threads.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().expect("sweep slot poisoned") = Some(r);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for slot in slots {
+        match slot.into_inner().expect("sweep slot poisoned") {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(e)) => return Err(e),
+            None => {
+                return Err(Error::SimInvariant(
+                    "sweep worker pool dropped a scenario".into(),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Runs a [`SweepGrid`] across a worker pool and aggregates the ranked
+/// [`SweepReport`].
+#[derive(Debug, Clone)]
+pub struct SweepRunner {
+    grid: SweepGrid,
+    threads: usize,
+}
+
+impl SweepRunner {
+    pub fn new(grid: SweepGrid) -> Self {
+        Self { grid, threads: 0 }
+    }
+
+    /// Worker thread count; 0 (the default) uses the host's available
+    /// parallelism.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// The pool size `run` will actually use.
+    pub fn effective_threads(&self) -> usize {
+        let hw = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let t = if self.threads == 0 { hw } else { self.threads };
+        t.clamp(1, self.grid.len().max(1))
+    }
+
+    fn experiment(&self, scenario: &Scenario, graph: &Graph) -> PartitionExperiment {
+        PartitionExperiment::new(&scenario.accel(&self.grid.accel), graph)
+            .partitions(scenario.partitions)
+            .steady_batches(scenario.steady_batches)
+            .trace_samples(self.grid.trace_samples)
+    }
+
+    /// Execute the full grid and aggregate the report.
+    pub fn run(&self) -> Result<SweepReport> {
+        self.grid.validate()?;
+        let threads = self.effective_threads();
+
+        // Graphs are immutable once built; resolve each model once and
+        // share references across the pool.
+        let mut graphs: BTreeMap<String, Graph> = BTreeMap::new();
+        for m in &self.grid.models {
+            graphs.insert(m.clone(), crate::model::by_name(m)?);
+        }
+
+        // Phase 1: one synchronous baseline per (model, bandwidth scale).
+        let mut keys: Vec<(String, f64)> = Vec::new();
+        for m in &self.grid.models {
+            for &s in &self.grid.bandwidth_scales {
+                keys.push((m.clone(), s));
+            }
+        }
+        let baselines_vec = parallel_map(&keys, threads, |(model, scale)| {
+            let probe = Scenario {
+                id: 0,
+                model: model.clone(),
+                partitions: 1,
+                bandwidth_scale: *scale,
+                steady_batches: self.grid.steady_batches,
+            };
+            self.experiment(&probe, &graphs[model]).run_baseline()
+        })?;
+        let baselines: BTreeMap<(String, u64), ShapingAnalysis> = keys
+            .iter()
+            .zip(baselines_vec)
+            .map(|((m, s), b)| ((m.clone(), s.to_bits()), b))
+            .collect();
+
+        // Phase 2: every scenario against its shared baseline.
+        let scenarios = self.grid.scenarios();
+        let statuses = parallel_map(&scenarios, threads, |sc| {
+            let baseline = &baselines[&(sc.model.clone(), sc.bandwidth_scale.to_bits())];
+            if sc.partitions == 1 {
+                return Ok(ScenarioStatus::Completed(SweepMetrics::baseline_row(baseline)));
+            }
+            match self.experiment(sc, &graphs[&sc.model]).run_against(baseline) {
+                Ok(report) => Ok(ScenarioStatus::Completed(SweepMetrics::from_report(&report))),
+                Err(Error::InfeasiblePartitioning(why)) => Ok(ScenarioStatus::Infeasible(why)),
+                Err(e) => Err(e),
+            }
+        })?;
+
+        let outcomes = scenarios
+            .into_iter()
+            .zip(statuses)
+            .map(|(scenario, status)| ScenarioOutcome { scenario, status })
+            .collect();
+        Ok(SweepReport { outcomes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+
+    #[test]
+    fn parallel_map_preserves_order_and_first_error() {
+        let items: Vec<usize> = (0..37).collect();
+        let doubled = parallel_map(&items, 8, |&x| Ok(x * 2)).unwrap();
+        assert_eq!(doubled, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+
+        // The error on the smallest index wins, regardless of scheduling.
+        let err = parallel_map(&items, 8, |&x| {
+            if x % 10 == 3 {
+                Err(Error::InvalidConfig(format!("boom {x}")))
+            } else {
+                Ok(x)
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("boom 3"), "{err}");
+
+        assert!(parallel_map::<usize, usize, _>(&[], 4, |&x| Ok(x)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn effective_threads_is_clamped_to_grid() {
+        let grid = SweepGrid::new(&AcceleratorConfig::knl_7210())
+            .models(vec!["tiny"])
+            .partitions(vec![1, 2])
+            .bandwidth_scales(vec![1.0]);
+        let runner = SweepRunner::new(grid).threads(64);
+        assert_eq!(runner.effective_threads(), 2);
+    }
+
+    #[test]
+    fn tiny_grid_runs_and_reports() {
+        let grid = SweepGrid::new(&AcceleratorConfig::knl_7210())
+            .models(vec!["tiny"])
+            .partitions(vec![1, 2, 4])
+            .bandwidth_scales(vec![1.0])
+            .steady_batches(2)
+            .trace_samples(64);
+        let report = SweepRunner::new(grid).threads(2).run().unwrap();
+        assert_eq!(report.outcomes.len(), 3);
+        assert_eq!(report.completed_count(), 3);
+        // The n = 1 row is the baseline itself.
+        let base = report.outcomes[0].metrics().unwrap();
+        assert!((base.relative_performance - 1.0).abs() < 1e-12);
+        assert_eq!(base.smoothness_cov, base.baseline_cov);
+    }
+}

@@ -54,21 +54,24 @@ impl CsvWriter {
         self.rows.is_empty()
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        writeln_row(&mut out, &self.columns);
-        for r in &self.rows {
-            writeln_row(&mut out, r);
-        }
-        out
-    }
-
     pub fn write_to(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         std::fs::write(path, self.to_string())?;
         Ok(())
+    }
+}
+
+/// Renders the document (callers use the blanket `.to_string()`).
+impl std::fmt::Display for CsvWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        writeln_row(&mut out, &self.columns);
+        for r in &self.rows {
+            writeln_row(&mut out, r);
+        }
+        f.write_str(&out)
     }
 }
 

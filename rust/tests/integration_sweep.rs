@@ -1,0 +1,155 @@
+//! Sweep-engine integration: parallel execution must be indistinguishable
+//! from serial execution, and the aggregated report must reproduce the
+//! paper's qualitative claims.
+
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::sweep::{ScenarioStatus, SweepGrid, SweepRunner};
+
+fn knl() -> AcceleratorConfig {
+    AcceleratorConfig::knl_7210()
+}
+
+fn small_grid() -> SweepGrid {
+    SweepGrid::new(&knl())
+        .models(vec!["resnet50", "googlenet"])
+        .partitions(vec![1, 2, 4])
+        .bandwidth_scales(vec![1.0, 0.75])
+        .steady_batches(3)
+        .trace_samples(128)
+}
+
+#[test]
+fn report_is_byte_identical_across_thread_counts() {
+    // The acceptance bar: same seed/grid ⇒ identical aggregated report
+    // for 1 vs N worker threads (rendered table, CSV and JSON summary).
+    let serial = SweepRunner::new(small_grid()).threads(1).run().unwrap();
+    for threads in [2, 4, 8] {
+        let parallel = SweepRunner::new(small_grid()).threads(threads).run().unwrap();
+        assert_eq!(
+            serial.render(),
+            parallel.render(),
+            "render differs at {threads} threads"
+        );
+        assert_eq!(
+            serial.to_csv().to_string(),
+            parallel.to_csv().to_string(),
+            "csv differs at {threads} threads"
+        );
+        assert_eq!(
+            serial.summary_json().to_string_pretty(),
+            parallel.summary_json().to_string_pretty(),
+            "summary differs at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn two_partition_resnet50_beats_synchronous_baseline() {
+    // Smoke test for the paper's headline direction: splitting ResNet-50
+    // into 2 asynchronous partitions must beat the sync baseline.
+    let grid = SweepGrid::new(&knl())
+        .models(vec!["resnet50"])
+        .partitions(vec![1, 2])
+        .bandwidth_scales(vec![1.0])
+        .steady_batches(4)
+        .trace_samples(128);
+    let report = SweepRunner::new(grid).run().unwrap();
+    assert_eq!(report.outcomes.len(), 2);
+    let baseline = report.outcomes[0].metrics().unwrap();
+    let shaped = report.outcomes[1].metrics().unwrap();
+    assert!((baseline.relative_performance - 1.0).abs() < 1e-12);
+    assert!(
+        shaped.relative_performance > 1.0,
+        "2-partition ResNet-50 must beat sync: {}",
+        shaped.relative_performance
+    );
+    assert!(shaped.std_reduction > 0.0, "σ must shrink");
+    assert!(
+        shaped.smoothness_cov < baseline.smoothness_cov,
+        "shaped cov {} must be smoother than sync cov {}",
+        shaped.smoothness_cov,
+        baseline.smoothness_cov
+    );
+    // And the ranked report puts the shaped point first.
+    assert_eq!(report.best().unwrap().scenario.partitions, 2);
+}
+
+#[test]
+fn dram_infeasible_points_are_reported_not_fatal() {
+    // Paper §4: VGG-16 at 16 partitions exceeds MCDRAM.
+    let grid = SweepGrid::new(&knl())
+        .models(vec!["vgg16"])
+        .partitions(vec![8, 16])
+        .bandwidth_scales(vec![1.0])
+        .steady_batches(2)
+        .trace_samples(64);
+    let report = SweepRunner::new(grid).run().unwrap();
+    assert!(matches!(report.outcomes[0].status, ScenarioStatus::Completed(_)));
+    match &report.outcomes[1].status {
+        ScenarioStatus::Infeasible(why) => assert!(why.contains("vgg16"), "{why}"),
+        other => panic!("vgg16@16 should be DRAM-infeasible, got {other:?}"),
+    }
+    assert_eq!(report.completed_count(), 1);
+    assert_eq!(report.infeasible_count(), 1);
+    // Infeasible rows render as DRAM and export as dram_infeasible.
+    assert!(report.render().contains("DRAM"));
+    assert!(report.to_csv().to_string().contains("dram_infeasible"));
+}
+
+#[test]
+fn ranked_order_is_descending_in_relative_performance() {
+    let report = SweepRunner::new(small_grid()).run().unwrap();
+    let ranked = report.ranked();
+    let gains: Vec<f64> = ranked
+        .iter()
+        .filter_map(|o| o.metrics().map(|m| m.relative_performance))
+        .collect();
+    assert!(!gains.is_empty());
+    for w in gains.windows(2) {
+        assert!(w[0] >= w[1], "ranking not descending: {w:?}");
+    }
+    // Every grid point appears exactly once in the ranking.
+    assert_eq!(ranked.len(), report.outcomes.len());
+}
+
+#[test]
+fn bandwidth_scales_sweep_distinct_configs() {
+    // The bandwidth axis must actually change the simulated machine:
+    // the same (model, n) point at 0.75x bandwidth has a different
+    // baseline mean-BW level, and partitioning still pays at both points
+    // (ResNet-50 is bandwidth-bound either way).
+    let grid = SweepGrid::new(&knl())
+        .models(vec!["resnet50"])
+        .partitions(vec![1, 4])
+        .bandwidth_scales(vec![1.0, 0.75])
+        .steady_batches(3)
+        .trace_samples(128);
+    let report = SweepRunner::new(grid).run().unwrap();
+    assert_eq!(report.outcomes.len(), 4);
+    let at = |n: usize, scale: f64| {
+        report
+            .outcomes
+            .iter()
+            .find(|o| o.scenario.partitions == n && o.scenario.bandwidth_scale == scale)
+            .and_then(|o| o.metrics())
+            .copied()
+            .unwrap()
+    };
+    let full = at(4, 1.0);
+    let starved = at(4, 0.75);
+    assert!(full.relative_performance > 1.0, "full-bw gain {}", full.relative_performance);
+    assert!(
+        starved.relative_performance > 1.0,
+        "starved-bw gain {}",
+        starved.relative_performance
+    );
+    // The two bandwidth points are genuinely different machines.
+    let base_full = at(1, 1.0);
+    let base_starved = at(1, 0.75);
+    assert!(
+        base_starved.makespan_s > base_full.makespan_s,
+        "less bandwidth must lengthen the sync baseline: {} vs {}",
+        base_starved.makespan_s,
+        base_full.makespan_s
+    );
+}

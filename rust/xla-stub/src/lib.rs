@@ -1,0 +1,128 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The trafficshape runtime (`runtime::client`) is written against the
+//! real `xla` crate's API: `PjRtClient::cpu()` → `compile` → `execute`.
+//! That crate links libxla, which is unavailable in the offline build
+//! environment, so this stub provides the same surface with every entry
+//! point returning a descriptive error at runtime. The simulator,
+//! shaping, sweep and experiment layers never touch it; only the
+//! `e2e`/coordinator path does, and it reports
+//! "xla backend not available" instead of failing to link.
+//!
+//! To enable real execution, point the `xla` dependency of the
+//! `trafficshape` crate at the actual bindings — no call-site changes
+//! are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`: a message, Display + std::error.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error(
+            "xla backend not available: trafficshape was built against the offline \
+             xla stub (swap rust/xla-stub for the real bindings to run e2e)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (tensor value). All conversions fail in the stub.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// The PJRT client. `cpu()` is the stub's single point of failure: every
+/// downstream call site is unreachable once construction errors.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module proto (text form).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla backend not available"));
+    }
+}
