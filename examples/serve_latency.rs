@@ -1,0 +1,73 @@
+//! Serving latency under open-loop request traffic — the closed-the-loop
+//! scenario: seeded Poisson (or bursty MMPP) arrivals feed per-partition
+//! dynamic-batching queues, and every point of the throughput–latency
+//! curve runs on the fluid engine so partitions contend for bandwidth
+//! mid-burst.
+//!
+//! ```bash
+//! cargo run --release --example serve_latency -- \
+//!     --model resnet50 --partitions 1,2,4 --duration 0.5 --seed 42 \
+//!     --arrival bursty --burstiness 6
+//! ```
+
+use trafficshape::cli::CommandSpec;
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model;
+use trafficshape::serve::{roofline_capacity_ips, ArrivalKind, ServeExperiment};
+
+fn main() -> std::process::ExitCode {
+    let spec = CommandSpec::new("serve_latency", "throughput-latency curves for served requests")
+        .opt("model", "NAME", Some("resnet50"), "model name")
+        .opt("partitions", "LIST", Some("1,2,4"), "partition counts")
+        .opt("rate", "LIST", None, "arrival rates in img/s (default: auto vs capacity)")
+        .opt("duration", "S", Some("0.5"), "arrival window in seconds")
+        .opt("seed", "N", Some("42"), "arrival-stream rng seed")
+        .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
+        .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
+        .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
+        .opt("accel", "NAME", Some("knl_7210"), "accelerator preset");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let m = match spec.parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return std::process::ExitCode::from(2);
+        }
+    };
+
+    let run = || -> trafficshape::error::Result<()> {
+        let accel = AcceleratorConfig::preset(m.get("accel").unwrap())?;
+        let graph = model::by_name(m.get("model").unwrap())?;
+        let burstiness = m.get_f64("burstiness")?.unwrap();
+        let arrival = ArrivalKind::from_name(m.get("arrival").unwrap(), burstiness)?;
+        let cap = roofline_capacity_ips(&accel, &graph);
+        println!("{}: synchronous roofline capacity ≈ {cap:.0} img/s", graph.name);
+
+        let mut exp = ServeExperiment::new(&accel, &graph)
+            .partitions(m.get_usize_list("partitions")?.unwrap())
+            .arrival(arrival)
+            .duration(m.get_f64("duration")?.unwrap())
+            .seed(m.get_usize("seed")?.unwrap() as u64)
+            .threads(m.get_usize("threads")?.unwrap());
+        if let Some(rates) = m.get_f64_list("rate")? {
+            exp = exp.rates(rates);
+        }
+        let curve = exp.run()?;
+        print!("{}", curve.render());
+        if let Some(best) = curve.best_at_peak() {
+            let o = best.outcome().expect("best point is completed");
+            println!(
+                "→ at peak load, {} partition(s) give p99 {:.1} ms at {:.0} img/s",
+                best.partitions, o.latency.p99_ms, o.throughput_ips
+            );
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => std::process::ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::ExitCode::FAILURE
+        }
+    }
+}

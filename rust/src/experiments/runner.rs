@@ -39,6 +39,7 @@ pub fn list_experiments() -> Vec<(&'static str, &'static str)> {
         ("fig6", "BW traces for 1/4/16 partitions, ResNet-50"),
         ("table1", "per-layer BW and achieved FLOPS, ResNet-50"),
         ("sweep", "parallel grid: 5 models × partitions × bandwidth, ranked"),
+        ("serve", "request serving: p50/p95/p99 latency vs arrival rate, ResNet-50"),
     ]
 }
 
@@ -59,6 +60,28 @@ fn run_sweep(cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
         rendered: report.render(),
         csv: vec![("sweep_grid.csv".into(), report.to_csv())],
         summary: report.summary_json(),
+    })
+}
+
+/// The `serve` experiment driver: the closed-the-loop serving scenario.
+/// ResNet-50 behind Poisson arrivals at 0.5×/0.8×/1.1× the synchronous
+/// roofline capacity, for 1/2/4 partitions — the throughput–latency
+/// curve that shows where asynchronous partitions win on p99.
+fn run_serve(cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
+    use crate::serve::ServeExperiment;
+    let graph = crate::model::by_name("resnet50")?;
+    let curve = ServeExperiment::new(&cfg.accelerator, &graph)
+        .partitions(vec![1, 2, 4])
+        .duration(0.25)
+        .seed(cfg.seed)
+        .trace_samples(cfg.trace_samples)
+        .run()?;
+    Ok(ExperimentOutput {
+        id: "serve",
+        title: "Serve — request latency over asynchronous partitions",
+        rendered: curve.render(),
+        csv: vec![("serve_curve.csv".into(), curve.to_csv())],
+        summary: curve.summary_json(),
     })
 }
 
@@ -189,6 +212,7 @@ pub fn run_by_id(id: &str, cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
             })
         }
         "sweep" => run_sweep(cfg),
+        "serve" => run_serve(cfg),
         other => Err(Error::Usage(format!(
             "unknown experiment '{other}'; available: {}",
             list_experiments()

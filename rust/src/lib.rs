@@ -23,9 +23,14 @@
 //!   main-memory bandwidth pool (the KNL + MCDRAM substitute substrate).
 //! * [`shaping`] — the paper's contribution: compute-unit partitioning,
 //!   asynchronous scheduling policies and traffic-shaping analysis.
+//! * [`serve`] — closed-the-loop serving: seeded open-loop arrivals
+//!   (Poisson/MMPP), per-partition admission + dynamic batching, and
+//!   latency percentiles / throughput–latency tradeoff curves driven
+//!   through the fluid engine's dynamic mode.
 //! * [`sweep`] — parallel scenario-sweep engine: grids of
-//!   models × partitions × bandwidth configs fanned out across worker
-//!   threads and aggregated into a ranked report.
+//!   models × partitions × stagger policies × arrival rates × bandwidth
+//!   configs fanned out across worker threads and aggregated into a
+//!   ranked report.
 //! * [`runtime`] / [`coordinator`] — the real-execution path: a PJRT CPU
 //!   client loads AOT-compiled HLO artifacts (JAX + Pallas, build-time
 //!   Python) and partition worker threads run them with live traffic
@@ -56,6 +61,7 @@ pub mod experiments;
 pub mod model;
 pub mod reuse;
 pub mod runtime;
+pub mod serve;
 pub mod shaping;
 pub mod sim;
 pub mod sweep;
@@ -71,9 +77,11 @@ pub mod prelude {
         alexnet, googlenet, resnet50, tiny_cnn, vgg16, Graph, Layer, LayerKind, TensorShape,
     };
     pub use crate::reuse::{BlockingOptimizer, LayerTraffic, Phase, PhaseCompiler};
-    pub use crate::shaping::{
-        PartitionExperiment, PartitionPlan, ShapingAnalysis, StaggerPolicy,
+    pub use crate::serve::{
+        ArrivalProcess, DispatchPolicy, LatencyStats, ServeCurve, ServeExperiment, ServeOutcome,
+        ServeSimulator,
     };
+    pub use crate::shaping::{PartitionExperiment, PartitionPlan, ShapingAnalysis, StaggerPolicy};
     pub use crate::sim::{BandwidthTrace, SimEngine, SimOutcome, Workload};
     pub use crate::sweep::{SweepGrid, SweepReport, SweepRunner};
     pub use crate::util::stats::Summary;

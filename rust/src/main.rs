@@ -5,6 +5,7 @@
 //!   exp <id|all>              run experiment drivers, write CSV/JSON
 //!   models                    print the model zoo inventory
 //!   sweep                     parallel scenario sweep (models × partitions × bandwidth)
+//!   serve                     open-loop serving: latency percentiles vs arrival rate
 //!   e2e                       real-compute coordinator run (PJRT)
 
 use std::process::ExitCode;
@@ -15,6 +16,8 @@ use trafficshape::error::{Error, Result};
 use trafficshape::experiments::{list_experiments, run_by_id};
 use trafficshape::model;
 use trafficshape::runtime::find_artifact_dir;
+use trafficshape::serve::{ArrivalKind, DispatchPolicy, ServeExperiment};
+use trafficshape::shaping::StaggerPolicy;
 use trafficshape::sweep::{SweepGrid, SweepRunner};
 use trafficshape::util::table::Table;
 
@@ -35,9 +38,27 @@ fn app() -> App {
                 .opt("models", "LIST", None, "comma-separated model names (default: 5-model zoo)")
                 .opt("partitions", "LIST", Some("1,2,4,8,16"), "partition counts")
                 .opt("bw-scales", "LIST", Some("1.0,0.75"), "memory-bandwidth multipliers")
+                .opt("rates", "LIST", Some("0"), "arrival rates (img/s; 0 = offline batch mode)")
+                .opt("staggers", "LIST", Some("uniform_phase"), "stagger policies to sweep")
+                .opt("serve-duration", "S", Some("0.25"), "arrival window for serve rows")
+                .opt("seed", "N", Some("42"), "serve arrival-stream seed")
                 .opt("batches", "N", Some("6"), "steady-state batches")
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
                 .opt("out", "DIR", None, "also write the grid CSV to this directory")
+                .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
+            CommandSpec::new("serve", "open-loop serving: latency percentiles vs arrival rate")
+                .opt("model", "NAME", Some("resnet50"), "model name")
+                .opt("partitions", "LIST", Some("1,2,4"), "partition counts")
+                .opt("rate", "LIST", None, "arrival rates in img/s (default: auto vs capacity)")
+                .opt("duration", "S", Some("0.5"), "arrival window in seconds")
+                .opt("seed", "N", Some("42"), "arrival-stream rng seed")
+                .opt("policy", "NAME", Some("shortest_queue"), "round_robin|shortest_queue")
+                .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
+                .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
+                .opt("stagger", "NAME", Some("uniform_phase"), "none|uniform_phase|random_delay")
+                .opt("samples", "N", Some("400"), "trace samples")
+                .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
+                .opt("out", "DIR", None, "also write serve_curve.csv + serve_summary.json here")
                 .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
             CommandSpec::new("tune", "auto-select the partition count for a model")
                 .opt("model", "NAME", Some("resnet50"), "model name")
@@ -127,6 +148,14 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
     let threads = m.get_usize("threads")?.unwrap_or(0);
     let parts = m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4, 8, 16]);
     let scales = m.get_f64_list("bw-scales")?.unwrap_or_else(|| vec![1.0, 0.75]);
+    let rates = m.get_f64_list("rates")?.unwrap_or_else(|| vec![0.0]);
+    let seed = m.get_usize("seed")?.unwrap_or(42) as u64;
+    let staggers = m
+        .get_str_list("staggers")
+        .unwrap_or_else(|| vec!["uniform_phase".to_string()])
+        .iter()
+        .map(|s| StaggerPolicy::from_name(s, seed))
+        .collect::<Result<Vec<_>>>()?;
     let models = m.get_str_list("models").unwrap_or_else(|| {
         trafficshape::sweep::DEFAULT_SWEEP_MODELS.iter().map(|s| s.to_string()).collect()
     });
@@ -135,6 +164,10 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
         .models(models)
         .partitions(parts)
         .bandwidth_scales(scales)
+        .stagger_policies(staggers)
+        .arrival_rates(rates)
+        .serve_duration(m.get_f64("serve-duration")?.unwrap_or(0.25))
+        .serve_seed(seed)
         .steady_batches(batches);
     let total = grid.len();
     let runner = SweepRunner::new(grid).threads(threads);
@@ -160,6 +193,47 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
         report.to_csv().write_to(&dir.join("sweep_grid.csv"))?;
         std::fs::write(dir.join("sweep_summary.json"), report.summary_json().to_string_pretty())?;
         println!("wrote {}/sweep_grid.csv", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(m: &Matches) -> Result<()> {
+    let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
+    let graph = model::by_name(m.get("model").unwrap_or("resnet50"))?;
+    let seed = m.get_usize("seed")?.unwrap_or(42) as u64;
+    let burstiness = m.get_f64("burstiness")?.unwrap_or(4.0);
+    let arrival = ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?;
+    let policy = DispatchPolicy::from_name(m.get("policy").unwrap_or("shortest_queue"))?;
+    let stagger = StaggerPolicy::from_name(m.get("stagger").unwrap_or("uniform_phase"), seed)?;
+
+    let mut exp = ServeExperiment::new(&accel, &graph)
+        .partitions(m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4]))
+        .arrival(arrival)
+        .duration(m.get_f64("duration")?.unwrap_or(0.5))
+        .seed(seed)
+        .policy(policy)
+        .stagger(stagger)
+        .trace_samples(m.get_usize("samples")?.unwrap_or(400))
+        .threads(m.get_usize("threads")?.unwrap_or(0));
+    if let Some(rates) = m.get_f64_list("rate")? {
+        exp = exp.rates(rates);
+    }
+    let curve = exp.run()?;
+
+    print!("{}", curve.render());
+    if let Some(best) = curve.best_at_peak() {
+        let o = best.outcome().expect("best point is completed");
+        println!(
+            "→ at peak rate {:.0} img/s: {} partition(s) hit p99 {:.1} ms ({:.0} img/s served)",
+            best.rate, best.partitions, o.latency.p99_ms, o.throughput_ips
+        );
+    }
+    if let Some(dir) = m.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        curve.to_csv().write_to(&dir.join("serve_curve.csv"))?;
+        std::fs::write(dir.join("serve_summary.json"), curve.summary_json().to_string_pretty())?;
+        println!("wrote {}/serve_curve.csv", dir.display());
     }
     Ok(())
 }
@@ -267,6 +341,7 @@ fn run() -> Result<()> {
         "exp" => cmd_exp(&matches),
         "models" => cmd_models(),
         "sweep" => cmd_sweep(&matches),
+        "serve" => cmd_serve(&matches),
         "tune" => cmd_tune(&matches),
         "mixed" => cmd_mixed(&matches),
         "e2e" => cmd_e2e(&matches),

@@ -1,0 +1,203 @@
+//! Open-loop request arrival processes.
+//!
+//! Serving workloads are driven by *exogenous* arrivals: requests show up
+//! whether or not the accelerator is keeping up (open loop), which is
+//! what exposes tail latency under bursts. Two seeded generators:
+//!
+//! * [`ArrivalProcess::Poisson`] — the classic memoryless stream;
+//! * [`ArrivalProcess::Mmpp`] — a 2-state Markov-modulated Poisson
+//!   process (calm/burst), the standard bursty-traffic model. The
+//!   [`ArrivalProcess::bursty`] constructor parameterizes it by a single
+//!   burstiness ratio while keeping the long-run mean rate fixed, so
+//!   Poisson and bursty runs at the same `--rate` are load-comparable.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Xoshiro256StarStar;
+
+/// A stochastic arrival process with a known long-run mean rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// 2-state MMPP: Poisson at `rate_calm` while calm and `rate_burst`
+    /// while bursting; state dwell times are exponential with the given
+    /// means. Long-run mean rate is the dwell-weighted average.
+    Mmpp { rate_calm: f64, rate_burst: f64, mean_calm_s: f64, mean_burst_s: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rate: f64) -> Self {
+        ArrivalProcess::Poisson { rate }
+    }
+
+    /// Bursty MMPP with long-run mean `rate`: bursts run at
+    /// `burstiness × rate`, calm periods at `rate / burstiness`, and the
+    /// calm dwell is `burstiness × mean_burst_s` so the stationary burst
+    /// fraction is `1/(burstiness + 1)` — which makes the mean exactly
+    /// `rate` for any `burstiness > 1`.
+    pub fn bursty(rate: f64, burstiness: f64, mean_burst_s: f64) -> Self {
+        ArrivalProcess::Mmpp {
+            rate_calm: rate / burstiness,
+            rate_burst: rate * burstiness,
+            mean_calm_s: mean_burst_s * burstiness,
+            mean_burst_s,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Mmpp { .. } => "mmpp",
+        }
+    }
+
+    /// Long-run mean arrival rate (requests/second).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Mmpp { rate_calm, rate_burst, mean_calm_s, mean_burst_s } => {
+                let dwell = mean_calm_s + mean_burst_s;
+                (rate_calm * mean_calm_s + rate_burst * mean_burst_s) / dwell
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let pos = |x: f64, what: &str| {
+            if x.is_finite() && x > 0.0 {
+                Ok(())
+            } else {
+                Err(Error::InvalidConfig(format!("arrival {what} must be finite and > 0: {x}")))
+            }
+        };
+        match *self {
+            ArrivalProcess::Poisson { rate } => pos(rate, "rate"),
+            ArrivalProcess::Mmpp { rate_calm, rate_burst, mean_calm_s, mean_burst_s } => {
+                pos(rate_calm, "calm rate")?;
+                pos(rate_burst, "burst rate")?;
+                pos(mean_calm_s, "calm dwell")?;
+                pos(mean_burst_s, "burst dwell")
+            }
+        }
+    }
+
+    /// Generate the sorted arrival times in `[0, duration)` for one seed.
+    /// Deterministic: same `(process, duration, seed)` ⇒ same stream.
+    pub fn generate(&self, duration: f64, seed: u64) -> Result<Vec<f64>> {
+        self.validate()?;
+        if !(duration.is_finite() && duration > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "arrival duration must be finite and > 0: {duration}"
+            )));
+        }
+        // −mean·ln(1−u), u ∈ [0, 1) so the argument stays in (0, 1].
+        fn exp(rng: &mut Xoshiro256StarStar, mean: f64) -> f64 {
+            -mean * (1.0 - rng.next_f64()).ln()
+        }
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        let mut out = Vec::new();
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = exp(&mut rng, 1.0 / rate);
+                while t < duration {
+                    out.push(t);
+                    t += exp(&mut rng, 1.0 / rate);
+                }
+            }
+            ArrivalProcess::Mmpp { rate_calm, rate_burst, mean_calm_s, mean_burst_s } => {
+                let mut t = 0.0f64;
+                let mut bursting = false;
+                let mut state_end = exp(&mut rng, mean_calm_s);
+                while t < duration {
+                    let rate = if bursting { rate_burst } else { rate_calm };
+                    let candidate = t + exp(&mut rng, 1.0 / rate);
+                    if candidate >= state_end {
+                        // Memorylessness lets us jump to the switch point
+                        // and redraw in the new state.
+                        t = state_end;
+                        bursting = !bursting;
+                        let dwell = if bursting { mean_burst_s } else { mean_calm_s };
+                        state_end = t + exp(&mut rng, dwell);
+                    } else {
+                        t = candidate;
+                        if t < duration {
+                            out.push(t);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_matches_rate_and_is_sorted() {
+        let p = ArrivalProcess::poisson(1000.0);
+        let a = p.generate(10.0, 42).unwrap();
+        // ~10k arrivals; 5σ ≈ 500.
+        assert!((a.len() as f64 - 10_000.0).abs() < 500.0, "{}", a.len());
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.iter().all(|&t| (0.0..10.0).contains(&t)));
+        assert!((p.mean_rate() - 1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let p = ArrivalProcess::poisson(500.0);
+        assert_eq!(p.generate(2.0, 7).unwrap(), p.generate(2.0, 7).unwrap());
+        assert_ne!(p.generate(2.0, 7).unwrap(), p.generate(2.0, 8).unwrap());
+    }
+
+    #[test]
+    fn bursty_keeps_the_mean_rate() {
+        for b in [2.0, 4.0, 8.0] {
+            let p = ArrivalProcess::bursty(400.0, b, 0.05);
+            assert!((p.mean_rate() - 400.0).abs() < 1e-9, "b={b}: {}", p.mean_rate());
+            // Empirically too, over a long window (loose 5% bound).
+            let a = p.generate(200.0, 3).unwrap();
+            let emp = a.len() as f64 / 200.0;
+            assert!((emp / 400.0 - 1.0).abs() < 0.05, "b={b}: empirical {emp}");
+        }
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // Variance of per-window counts: MMPP must exceed Poisson (for
+        // which variance ≈ mean).
+        let windows = 200usize;
+        let dur = 20.0;
+        let counts = |p: &ArrivalProcess| {
+            let mut c = vec![0f64; windows];
+            for t in p.generate(dur, 11).unwrap() {
+                let w = ((t / dur * windows as f64) as usize).min(windows - 1);
+                c[w] += 1.0;
+            }
+            c
+        };
+        let var = |c: &[f64]| {
+            let m = c.iter().sum::<f64>() / c.len() as f64;
+            c.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / c.len() as f64
+        };
+        let v_poisson = var(&counts(&ArrivalProcess::poisson(300.0)));
+        let v_bursty = var(&counts(&ArrivalProcess::bursty(300.0, 6.0, 0.2)));
+        assert!(
+            v_bursty > 2.0 * v_poisson,
+            "bursty var {v_bursty} should dwarf poisson var {v_poisson}"
+        );
+    }
+
+    #[test]
+    fn invalid_parameters_are_rejected() {
+        assert!(ArrivalProcess::poisson(0.0).generate(1.0, 1).is_err());
+        assert!(ArrivalProcess::poisson(-5.0).validate().is_err());
+        assert!(ArrivalProcess::poisson(f64::INFINITY).validate().is_err());
+        assert!(ArrivalProcess::bursty(100.0, 0.0, 0.1).validate().is_err());
+        assert!(ArrivalProcess::poisson(100.0).generate(0.0, 1).is_err());
+        assert!(ArrivalProcess::poisson(100.0).generate(f64::NAN, 1).is_err());
+    }
+}

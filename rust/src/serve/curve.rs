@@ -1,0 +1,457 @@
+//! Throughput–latency tradeoff curves: a grid of serving runs.
+//!
+//! The serving question is never "one point" — it's *how does tail
+//! latency move with offered load, and where does each partition count
+//! fall over?* [`ServeExperiment`] fans the (arrival rate × partition
+//! count) grid out across worker threads (each point is an independent,
+//! pure simulation) and aggregates a deterministic, rate-major
+//! [`ServeCurve`]: byte-identical for 1 vs N threads, like the sweep
+//! engine it borrows its worker pool from.
+
+use super::arrival::ArrivalProcess;
+use super::queue::DispatchPolicy;
+use super::simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::shaping::StaggerPolicy;
+use crate::sweep::parallel_map;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Which arrival-process family a curve sweeps (the per-point process is
+/// instantiated at each grid rate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    Poisson,
+    /// MMPP via [`ArrivalProcess::bursty`].
+    Bursty { burstiness: f64, mean_burst_s: f64 },
+}
+
+impl ArrivalKind {
+    pub fn process(&self, rate: f64) -> ArrivalProcess {
+        match *self {
+            ArrivalKind::Poisson => ArrivalProcess::poisson(rate),
+            ArrivalKind::Bursty { burstiness, mean_burst_s } => {
+                ArrivalProcess::bursty(rate, burstiness, mean_burst_s)
+            }
+        }
+    }
+
+    pub fn from_name(name: &str, burstiness: f64) -> Result<Self> {
+        match name {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "bursty" | "mmpp" => {
+                Ok(ArrivalKind::Bursty { burstiness, mean_burst_s: DEFAULT_MEAN_BURST_S })
+            }
+            other => Err(Error::Usage(format!("unknown arrival kind '{other}' (poisson|bursty)"))),
+        }
+    }
+}
+
+/// Default burst dwell: long enough to span several batches.
+pub const DEFAULT_MEAN_BURST_S: f64 = 0.05;
+
+/// One grid point's result.
+#[derive(Debug, Clone)]
+pub enum ServePointStatus {
+    Completed(ServeOutcome),
+    /// Partitioning infeasible at this point (non-divisor n, DRAM cap).
+    Infeasible(String),
+}
+
+/// One (rate, partition count) grid point.
+#[derive(Debug, Clone)]
+pub struct ServePoint {
+    pub rate: f64,
+    pub partitions: usize,
+    pub status: ServePointStatus,
+}
+
+impl ServePoint {
+    pub fn outcome(&self) -> Option<&ServeOutcome> {
+        match &self.status {
+            ServePointStatus::Completed(o) => Some(o),
+            ServePointStatus::Infeasible(_) => None,
+        }
+    }
+}
+
+/// Builder for a serve grid run.
+#[derive(Debug, Clone)]
+pub struct ServeExperiment {
+    accel: AcceleratorConfig,
+    graph: Graph,
+    partitions: Vec<usize>,
+    rates: Vec<f64>,
+    arrival: ArrivalKind,
+    duration_s: f64,
+    seed: u64,
+    policy: DispatchPolicy,
+    stagger: StaggerPolicy,
+    trace_samples: usize,
+    threads: usize,
+}
+
+impl ServeExperiment {
+    pub fn new(accel: &AcceleratorConfig, graph: &Graph) -> Self {
+        Self {
+            accel: accel.clone(),
+            graph: graph.clone(),
+            partitions: vec![1, 2, 4],
+            rates: Vec::new(),
+            arrival: ArrivalKind::Poisson,
+            duration_s: 0.5,
+            seed: 42,
+            policy: DispatchPolicy::ShortestQueue,
+            stagger: StaggerPolicy::UniformPhase,
+            trace_samples: 400,
+            threads: 0,
+        }
+    }
+
+    pub fn partitions(mut self, ns: Vec<usize>) -> Self {
+        self.partitions = ns;
+        self
+    }
+
+    /// Arrival rates to sweep; empty (the default) auto-calibrates to
+    /// 0.5×, 0.8× and 1.1× the synchronous roofline capacity, bracketing
+    /// the knee of the throughput–latency curve.
+    pub fn rates(mut self, rates: Vec<f64>) -> Self {
+        self.rates = rates;
+        self
+    }
+
+    pub fn arrival(mut self, kind: ArrivalKind) -> Self {
+        self.arrival = kind;
+        self
+    }
+
+    pub fn duration(mut self, s: f64) -> Self {
+        self.duration_s = s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn policy(mut self, p: DispatchPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn stagger(mut self, s: StaggerPolicy) -> Self {
+        self.stagger = s;
+        self
+    }
+
+    pub fn trace_samples(mut self, s: usize) -> Self {
+        self.trace_samples = s;
+        self
+    }
+
+    /// Worker threads; 0 (default) uses the host's available parallelism.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// The rates the run will actually use.
+    pub fn effective_rates(&self) -> Vec<f64> {
+        if self.rates.is_empty() {
+            let cap = roofline_capacity_ips(&self.accel, &self.graph);
+            vec![0.5 * cap, 0.8 * cap, 1.1 * cap]
+        } else {
+            self.rates.clone()
+        }
+    }
+
+    /// Run the grid and assemble the rate-major curve.
+    pub fn run(&self) -> Result<ServeCurve> {
+        if self.partitions.is_empty() {
+            return Err(Error::InvalidConfig("serve grid has no partition counts".into()));
+        }
+        let rates = self.effective_rates();
+        if rates.is_empty() {
+            return Err(Error::InvalidConfig("serve grid has no arrival rates".into()));
+        }
+        let mut points: Vec<(f64, usize)> = Vec::new();
+        for &r in &rates {
+            for &n in &self.partitions {
+                points.push((r, n));
+            }
+        }
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        let statuses = parallel_map(&points, threads, |&(rate, n)| {
+            let sim = ServeSimulator::new(&self.accel, &self.graph)
+                .partitions(n)
+                .arrival(self.arrival.process(rate))
+                .duration(self.duration_s)
+                .seed(self.seed)
+                .policy(self.policy)
+                .stagger(self.stagger)
+                .trace_samples(self.trace_samples);
+            match sim.run() {
+                Ok(out) => Ok(ServePointStatus::Completed(out)),
+                Err(Error::InfeasiblePartitioning(why)) => Ok(ServePointStatus::Infeasible(why)),
+                Err(e) => Err(e),
+            }
+        })?;
+        let points = points
+            .into_iter()
+            .zip(statuses)
+            .map(|((rate, partitions), status)| ServePoint { rate, partitions, status })
+            .collect();
+        Ok(ServeCurve {
+            model: self.graph.name.clone(),
+            arrival: self.arrival.process(1.0),
+            points,
+        })
+    }
+}
+
+/// Aggregated serve grid: points in rate-major grid order, so renders and
+/// exports are byte-identical across thread counts.
+#[derive(Debug, Clone)]
+pub struct ServeCurve {
+    pub model: String,
+    /// Template process (rate 1.0) — names the arrival family in reports.
+    pub arrival: ArrivalProcess,
+    pub points: Vec<ServePoint>,
+}
+
+impl ServeCurve {
+    /// Completed outcome at a grid point, if it completed.
+    pub fn at(&self, rate: f64, partitions: usize) -> Option<&ServeOutcome> {
+        self.points
+            .iter()
+            .find(|p| p.rate == rate && p.partitions == partitions)
+            .and_then(|p| p.outcome())
+    }
+
+    /// The completed point with the lowest p99 at the highest rate.
+    pub fn best_at_peak(&self) -> Option<&ServePoint> {
+        let peak = self.points.iter().map(|p| p.rate).fold(f64::NEG_INFINITY, f64::max);
+        self.points
+            .iter()
+            .filter(|p| p.rate == peak && p.outcome().is_some())
+            .min_by(|a, b| {
+                let pa = a.outcome().unwrap().latency.p99_ms;
+                let pb = b.outcome().unwrap().latency.p99_ms;
+                pa.partial_cmp(&pb).unwrap().then(a.partitions.cmp(&b.partitions))
+            })
+    }
+
+    /// Throughput–latency table (the `serve` CLI's output).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "rate",
+            "n",
+            "req",
+            "batch",
+            "thr (img/s)",
+            "p50 ms",
+            "p95 ms",
+            "p99 ms",
+            "BW GB/s",
+            "cov",
+        ]);
+        for p in &self.points {
+            match p.outcome() {
+                Some(o) => t.row(vec![
+                    format!("{:.0}", p.rate),
+                    p.partitions.to_string(),
+                    o.requests.to_string(),
+                    format!("{:.1}", o.mean_batch),
+                    format!("{:.0}", o.throughput_ips),
+                    format!("{:.1}", o.latency.p50_ms),
+                    format!("{:.1}", o.latency.p95_ms),
+                    format!("{:.1}", o.latency.p99_ms),
+                    format!("{:.1}", o.bw.mean),
+                    format!("{:.3}", o.bw.cov()),
+                ]),
+                None => t.row(vec![
+                    format!("{:.0}", p.rate),
+                    p.partitions.to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "infeasible".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]),
+            };
+        }
+        t.title(&format!(
+            "serve {} — {} arrivals, latency percentiles per (rate, partitions)",
+            self.model,
+            self.arrival.name()
+        ))
+        .render()
+    }
+
+    /// Full per-point export in grid (rate-major) order.
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec![
+            "rate",
+            "partitions",
+            "status",
+            "requests",
+            "batches",
+            "mean_batch",
+            "queue_peak",
+            "makespan_s",
+            "throughput_ips",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "mean_ms",
+            "max_ms",
+            "bw_mean_gbps",
+            "bw_std_gbps",
+            "reason",
+        ]);
+        let f = crate::util::csv::format_float;
+        for p in &self.points {
+            let head = vec![f(p.rate), p.partitions.to_string()];
+            let tail = match &p.status {
+                ServePointStatus::Completed(o) => vec![
+                    "ok".to_string(),
+                    o.requests.to_string(),
+                    o.batches.to_string(),
+                    f(o.mean_batch),
+                    o.queue_peak.to_string(),
+                    f(o.makespan_s),
+                    f(o.throughput_ips),
+                    f(o.latency.p50_ms),
+                    f(o.latency.p95_ms),
+                    f(o.latency.p99_ms),
+                    f(o.latency.mean_ms),
+                    f(o.latency.max_ms),
+                    f(o.bw.mean),
+                    f(o.bw.std),
+                    String::new(),
+                ],
+                ServePointStatus::Infeasible(why) => {
+                    let mut v = vec!["infeasible".to_string()];
+                    v.extend((0..13).map(|_| String::new()));
+                    v.push(why.clone());
+                    v
+                }
+            };
+            w.row(head.into_iter().chain(tail).collect());
+        }
+        w
+    }
+
+    /// Summary for result files.
+    pub fn summary_json(&self) -> Json {
+        let completed = self.points.iter().filter(|p| p.outcome().is_some()).count();
+        let mut j = Json::obj()
+            .with("model", self.model.as_str())
+            .with("arrival", self.arrival.name())
+            .with("points", self.points.len())
+            .with("completed", completed)
+            .with("infeasible", self.points.len() - completed);
+        if let Some(best) = self.best_at_peak() {
+            let o = best.outcome().unwrap();
+            j.set(
+                "best_at_peak",
+                Json::obj()
+                    .with("rate", best.rate)
+                    .with("partitions", best.partitions)
+                    .with("p99_ms", o.latency.p99_ms)
+                    .with("throughput_ips", o.throughput_ips),
+            );
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tiny_cnn;
+
+    fn curve() -> ServeCurve {
+        let accel = AcceleratorConfig::knl_7210();
+        ServeExperiment::new(&accel, &tiny_cnn())
+            .partitions(vec![1, 2, 3])
+            .rates(vec![2000.0, 4000.0])
+            .duration(0.01)
+            .seed(5)
+            .trace_samples(32)
+            .threads(2)
+            .run()
+            .unwrap()
+    }
+
+    #[test]
+    fn grid_runs_rate_major_with_infeasible_points() {
+        let c = curve();
+        assert_eq!(c.points.len(), 6);
+        assert_eq!(c.points[0].rate, 2000.0);
+        assert_eq!(c.points[0].partitions, 1);
+        assert_eq!(c.points[3].rate, 4000.0);
+        // n = 3 doesn't divide 64 cores → infeasible, not fatal.
+        assert!(c.points[2].outcome().is_none());
+        assert!(c.at(2000.0, 2).is_some());
+        assert!(c.best_at_peak().is_some());
+        assert_eq!(c.best_at_peak().unwrap().rate, 4000.0);
+    }
+
+    #[test]
+    fn render_and_exports_cover_all_points() {
+        let c = curve();
+        let text = c.render();
+        assert!(text.contains("p99 ms"));
+        assert!(text.contains("infeasible"));
+        let csv = c.to_csv().to_string();
+        assert_eq!(csv.lines().count(), 7); // header + 6 points
+        assert!(csv.starts_with("rate,partitions,status"));
+        let j = c.summary_json();
+        assert_eq!(j.req_usize("points").unwrap(), 6);
+        assert_eq!(j.req_usize("infeasible").unwrap(), 2);
+        assert!(j.get("best_at_peak").is_some());
+    }
+
+    #[test]
+    fn auto_rates_bracket_roofline_capacity() {
+        let accel = AcceleratorConfig::knl_7210();
+        let e = ServeExperiment::new(&accel, &tiny_cnn());
+        let rates = e.effective_rates();
+        assert_eq!(rates.len(), 3);
+        let cap = roofline_capacity_ips(&accel, &tiny_cnn());
+        assert!(rates[0] < cap && rates[2] > cap);
+        assert!(rates.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn curve_is_byte_identical_across_thread_counts() {
+        let accel = AcceleratorConfig::knl_7210();
+        let run = |threads| {
+            ServeExperiment::new(&accel, &tiny_cnn())
+                .partitions(vec![1, 2])
+                .rates(vec![3000.0])
+                .duration(0.01)
+                .threads(threads)
+                .run()
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.to_csv().to_string(), b.to_csv().to_string());
+        assert_eq!(a.summary_json().to_string_pretty(), b.summary_json().to_string_pretty());
+    }
+}

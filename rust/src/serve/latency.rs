@@ -1,0 +1,111 @@
+//! Request-latency recording and percentile statistics.
+//!
+//! Serving quality is a tail story: the paper's makespan/σ metrics say
+//! nothing about the p99 a user sees when bursts pile onto a queue. The
+//! recorder collects per-request sojourn times (arrival → batch
+//! completion) and reduces them to the p50/p95/p99 summary every serve
+//! report, sweep column and CLI table uses.
+
+use crate::util::stats::{percentile, Summary};
+
+/// Percentile summary of one run's request latencies (milliseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    /// The all-zero summary of an empty run.
+    pub fn zero() -> Self {
+        Self { count: 0, mean_ms: 0.0, p50_ms: 0.0, p95_ms: 0.0, p99_ms: 0.0, max_ms: 0.0 }
+    }
+}
+
+/// Accumulates per-request sojourn times.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    /// Sojourn times in seconds, in completion-record order.
+    samples_s: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request served: admitted at `arrival_s`, its batch
+    /// finished at `finish_s`. Clamps tiny negative float noise to 0.
+    pub fn record(&mut self, arrival_s: f64, finish_s: f64) {
+        debug_assert!(finish_s >= arrival_s - 1e-9, "finish {finish_s} < arrival {arrival_s}");
+        self.samples_s.push((finish_s - arrival_s).max(0.0));
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_s.is_empty()
+    }
+
+    /// Reduce to the percentile summary (sorts a copy; O(n log n)).
+    pub fn stats(&self) -> LatencyStats {
+        if self.samples_s.is_empty() {
+            return LatencyStats::zero();
+        }
+        let mut sorted = self.samples_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = Summary::of(&sorted);
+        LatencyStats {
+            count: s.count,
+            mean_ms: s.mean * 1e3,
+            p50_ms: percentile(&sorted, 50.0) * 1e3,
+            p95_ms: percentile(&sorted, 95.0) * 1e3,
+            p99_ms: percentile(&sorted, 99.0) * 1e3,
+            max_ms: s.max * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_recorder_is_all_zero() {
+        let r = LatencyRecorder::new();
+        assert!(r.is_empty());
+        assert_eq!(r.stats(), LatencyStats::zero());
+    }
+
+    #[test]
+    fn percentiles_match_closed_form() {
+        let mut r = LatencyRecorder::new();
+        // Latencies 1..=100 ms, recorded out of order.
+        for i in (1..=100).rev() {
+            r.record(0.0, i as f64 * 1e-3);
+        }
+        let s = r.stats();
+        assert_eq!(s.count, 100);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert!((s.p50_ms - 50.5).abs() < 1e-9);
+        assert!((s.p95_ms - 95.05).abs() < 1e-9);
+        assert!((s.p99_ms - 99.01).abs() < 1e-9);
+        assert!((s.max_ms - 100.0).abs() < 1e-9);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms && s.p99_ms <= s.max_ms);
+    }
+
+    #[test]
+    fn sojourn_is_finish_minus_arrival() {
+        let mut r = LatencyRecorder::new();
+        r.record(1.5, 1.75);
+        let s = r.stats();
+        assert_eq!(s.count, 1);
+        assert!((s.p99_ms - 250.0).abs() < 1e-9);
+    }
+}

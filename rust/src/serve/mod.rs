@@ -1,0 +1,32 @@
+//! Closed-the-loop serving: request traffic over asynchronous partitions.
+//!
+//! The paper evaluates fixed offline batches; this subsystem puts the
+//! same partitioned machine behind a request queue, where statistical
+//! traffic shaping has to pay off in **tail latency**, not just makespan:
+//!
+//! * [`ArrivalProcess`] — seeded open-loop arrivals: Poisson, or bursty
+//!   2-state MMPP at the same long-run mean rate;
+//! * [`DispatchPolicy`] / [`ServeController`] — per-partition admission
+//!   queues with dynamic batching, compiled into exact-batch-size phase
+//!   programs by the reuse model's [`crate::reuse::PhaseCompiler`];
+//! * [`ServeSimulator`] — drives the queues through the fluid engine's
+//!   dynamic mode ([`crate::sim::SimEngine::run_dynamic`]), so bandwidth
+//!   contention between partitions mid-burst shapes every service time;
+//! * [`LatencyRecorder`] / [`LatencyStats`] — per-request sojourn times
+//!   reduced to p50/p95/p99;
+//! * [`ServeExperiment`] / [`ServeCurve`] — parallel (rate × partitions)
+//!   grids producing deterministic throughput–latency tradeoff curves.
+
+mod arrival;
+mod curve;
+mod latency;
+mod queue;
+mod simulator;
+
+pub use arrival::ArrivalProcess;
+pub use curve::{
+    ArrivalKind, ServeCurve, ServeExperiment, ServePoint, ServePointStatus, DEFAULT_MEAN_BURST_S,
+};
+pub use latency::{LatencyRecorder, LatencyStats};
+pub use queue::{BatchRecord, DispatchPolicy, ServeController};
+pub use simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};

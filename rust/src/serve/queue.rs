@@ -1,0 +1,315 @@
+//! Request admission, routing and dynamic batching.
+//!
+//! The [`ServeController`] is the glue between an arrival stream and the
+//! fluid engine's dynamic mode: it implements [`WorkSource`], so each
+//! partition *pulls* its next batch whenever it goes idle. Arrivals are
+//! admitted lazily (every request with arrival time ≤ now joins a queue,
+//! in arrival order), routed per [`DispatchPolicy`], and batched
+//! dynamically — an idle partition takes `min(queue length, max_batch)`
+//! requests and runs the phase program compiled for exactly that batch
+//! size, so small batches pay their true (weight-heavy) traffic cost.
+
+use crate::error::{Error, Result};
+use crate::reuse::Phase;
+use crate::sim::{DynJob, DynNext, WorkSource};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// How arriving requests are routed to partition queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Cycle through partitions in arrival order.
+    RoundRobin,
+    /// Join the shortest queue (ties broken by lowest partition id).
+    ShortestQueue,
+}
+
+impl DispatchPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round_robin",
+            DispatchPolicy::ShortestQueue => "shortest_queue",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "round_robin" | "rr" => Ok(DispatchPolicy::RoundRobin),
+            "shortest_queue" | "jsq" => Ok(DispatchPolicy::ShortestQueue),
+            other => Err(Error::Usage(format!(
+                "unknown dispatch policy '{other}' (round_robin|shortest_queue)"
+            ))),
+        }
+    }
+}
+
+/// One dispatched batch: which requests it carried and when it left.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    /// Indices into the arrival stream.
+    pub requests: Vec<usize>,
+    pub partition: usize,
+    pub dispatched_at: f64,
+}
+
+/// The serving work source: per-partition queues over a shared arrival
+/// stream, with start gates implementing the deployment-time stagger.
+pub struct ServeController<'a> {
+    arrivals: &'a [f64],
+    /// `programs[b - 1]` is the phase program for a batch of `b` images
+    /// (shared — every dispatch of size `b` hands out the same `Arc`).
+    programs: &'a [Arc<Vec<Phase>>],
+    max_batch: usize,
+    policy: DispatchPolicy,
+    /// Partition `i` may not dispatch its first batch before `gates[i]`.
+    gates: Vec<f64>,
+    queues: Vec<VecDeque<usize>>,
+    next_arrival: usize,
+    rr_next: usize,
+    /// Batch `b` was dispatched as engine job id `b`.
+    batches: Vec<BatchRecord>,
+    queue_peak: usize,
+}
+
+impl<'a> ServeController<'a> {
+    pub fn new(
+        arrivals: &'a [f64],
+        programs: &'a [Arc<Vec<Phase>>],
+        policy: DispatchPolicy,
+        gates: Vec<f64>,
+    ) -> Self {
+        let n = gates.len();
+        Self {
+            arrivals,
+            programs,
+            max_batch: programs.len(),
+            policy,
+            gates,
+            queues: vec![VecDeque::new(); n],
+            next_arrival: 0,
+            rr_next: 0,
+            batches: Vec::new(),
+            queue_peak: 0,
+        }
+    }
+
+    /// Admit every arrival with time ≤ `now` into a queue, in order.
+    /// Routing only considers partitions whose start gate has opened
+    /// (parking work behind a closed gate while open partitions idle
+    /// would charge the stagger transient to request latency); if every
+    /// gate is still closed, the earliest-opening partition takes it.
+    fn admit_until(&mut self, now: f64) {
+        let n = self.queues.len();
+        let open = |gates: &[f64], i: usize| gates[i] <= now;
+        while self.next_arrival < self.arrivals.len() && self.arrivals[self.next_arrival] <= now {
+            let any_open = (0..n).any(|i| open(&self.gates, i));
+            let target = if !any_open {
+                let mut best = 0;
+                for i in 1..n {
+                    if self.gates[i] < self.gates[best] {
+                        best = i;
+                    }
+                }
+                best
+            } else {
+                match self.policy {
+                    DispatchPolicy::RoundRobin => {
+                        let mut t = self.rr_next;
+                        while !open(&self.gates, t) {
+                            t = (t + 1) % n;
+                        }
+                        self.rr_next = (t + 1) % n;
+                        t
+                    }
+                    DispatchPolicy::ShortestQueue => {
+                        let mut best: Option<usize> = None;
+                        for i in 0..n {
+                            if !open(&self.gates, i) {
+                                continue;
+                            }
+                            let better = match best {
+                                None => true,
+                                Some(b) => self.queues[i].len() < self.queues[b].len(),
+                            };
+                            if better {
+                                best = Some(i);
+                            }
+                        }
+                        best.expect("an open partition exists")
+                    }
+                }
+            };
+            self.queues[target].push_back(self.next_arrival);
+            self.queue_peak = self.queue_peak.max(self.queues[target].len());
+            self.next_arrival += 1;
+        }
+    }
+
+    /// Dispatched batches so far (index == engine job id).
+    pub fn batches(&self) -> &[BatchRecord] {
+        &self.batches
+    }
+
+    /// Deepest any per-partition queue ever got.
+    pub fn queue_peak(&self) -> usize {
+        self.queue_peak
+    }
+
+    /// Requests not yet dispatched (admitted or still in the stream).
+    pub fn pending(&self) -> usize {
+        let queued: usize = self.queues.iter().map(|q| q.len()).sum();
+        queued + (self.arrivals.len() - self.next_arrival)
+    }
+}
+
+impl WorkSource for ServeController<'_> {
+    fn next(&mut self, partition: usize, now: f64) -> DynNext {
+        if now < self.gates[partition] {
+            return DynNext::IdleUntil(self.gates[partition]);
+        }
+        self.admit_until(now);
+        let q = &mut self.queues[partition];
+        if !q.is_empty() {
+            let take = q.len().min(self.max_batch);
+            let requests: Vec<usize> = q.drain(..take).collect();
+            let id = self.batches.len() as u64;
+            let phases = self.programs[take - 1].clone();
+            self.batches.push(BatchRecord { requests, partition, dispatched_at: now });
+            return DynNext::Job(DynJob { id, phases });
+        }
+        if self.next_arrival < self.arrivals.len() {
+            // Queue is empty but the stream is not: wake at the next
+            // arrival (it may be routed elsewhere — then we just idle
+            // again, deterministically).
+            DynNext::IdleUntil(self.arrivals[self.next_arrival])
+        } else {
+            DynNext::Finished
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reuse::PhaseClass;
+    use crate::util::units::{Bytes, Flops};
+
+    fn programs(max_batch: usize) -> Vec<Arc<Vec<Phase>>> {
+        (1..=max_batch)
+            .map(|b| {
+                Arc::new(vec![Phase {
+                    name: format!("b{b}"),
+                    layer_id: 0,
+                    class: PhaseClass::ComputeDense,
+                    flops: Flops(b as f64),
+                    bytes: Bytes(b as f64),
+                }])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [DispatchPolicy::RoundRobin, DispatchPolicy::ShortestQueue] {
+            assert_eq!(DispatchPolicy::from_name(p.name()).unwrap(), p);
+        }
+        assert_eq!(DispatchPolicy::from_name("jsq").unwrap(), DispatchPolicy::ShortestQueue);
+        assert!(DispatchPolicy::from_name("fifo").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_and_batches_dynamically() {
+        let arrivals = [0.0, 0.1, 0.2, 0.3, 0.4];
+        let progs = programs(4);
+        let mut c =
+            ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0, 0.0]);
+        // At t = 0.25, arrivals 0..=2 admitted: RR puts 0,2 on p0; 1 on p1.
+        match c.next(0, 0.25) {
+            DynNext::Job(j) => {
+                assert_eq!(j.id, 0);
+                // Batch of 2 runs the batch-2 program.
+                assert_eq!(j.phases[0].name, "b2");
+            }
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(c.batches()[0].requests, vec![0, 2]);
+        match c.next(1, 0.25) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        // Queues drained; stream continues → idle until arrival 3.
+        match c.next(0, 0.25) {
+            DynNext::IdleUntil(t) => assert!((t - 0.3).abs() < 1e-12),
+            other => panic!("expected idle, got {other:?}"),
+        }
+        assert_eq!(c.pending(), 2);
+    }
+
+    #[test]
+    fn shortest_queue_balances() {
+        let arrivals = [0.0, 0.0, 0.0, 0.0];
+        let progs = programs(8);
+        let mut c =
+            ServeController::new(&arrivals, &progs, DispatchPolicy::ShortestQueue, vec![0.0; 2]);
+        match c.next(0, 0.0) {
+            // JSQ alternates 0,1,0,1 → partition 0 holds requests 0 and 2.
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(c.batches()[0].requests, vec![0, 2]);
+        match c.next(1, 0.0) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        // Everything dispatched → finished.
+        assert!(matches!(c.next(0, 1.0), DynNext::Finished));
+        assert_eq!(c.queue_peak(), 2);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn max_batch_caps_a_deep_queue() {
+        let arrivals: Vec<f64> = (0..10).map(|i| i as f64 * 1e-3).collect();
+        let progs = programs(4);
+        let mut c = ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0]);
+        match c.next(0, 1.0) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b4"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(c.batches()[0].requests, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn stagger_gates_delay_first_dispatch() {
+        let arrivals = [0.0, 0.1];
+        let progs = programs(2);
+        let mut c =
+            ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0, 0.5]);
+        assert!(matches!(c.next(1, 0.0), DynNext::IdleUntil(t) if (t - 0.5).abs() < 1e-12));
+        // After its gate the partition serves normally.
+        assert!(matches!(c.next(1, 0.5), DynNext::Job(_)));
+    }
+
+    #[test]
+    fn routing_skips_closed_gates() {
+        // Requests admitted while a partition's gate is still closed must
+        // not park behind it — both go to the open partition.
+        let arrivals = [0.0, 0.001];
+        let progs = programs(4);
+        let mut c =
+            ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0, 10.0]);
+        match c.next(0, 0.01) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected a 2-request batch, got {other:?}"),
+        }
+        assert_eq!(c.batches()[0].requests, vec![0, 1]);
+        // A still-gated partition neither admits nor serves; the first
+        // open poller picks the request up.
+        let arrivals = [0.0];
+        let mut c =
+            ServeController::new(&arrivals, &progs, DispatchPolicy::ShortestQueue, vec![5.0, 2.0]);
+        assert!(matches!(c.next(0, 0.0), DynNext::IdleUntil(t) if (t - 5.0).abs() < 1e-12));
+        assert!(matches!(c.next(1, 2.0), DynNext::Job(_)));
+        assert_eq!(c.batches()[0].partition, 1);
+    }
+}

@@ -1,0 +1,350 @@
+//! The closed-the-loop serving simulator.
+//!
+//! One run: a seeded arrival stream over `[0, duration)` feeds the
+//! [`ServeController`]'s per-partition queues; every idle partition pulls
+//! a dynamically-sized batch, whose phase program (compiled by
+//! [`PhaseCompiler`] for exactly that batch size) executes on the fluid
+//! engine's dynamic mode — so bandwidth contention between partitions
+//! mid-burst shapes every service time. The run drains the whole stream
+//! (open loop: nothing is dropped) and reports per-request latency
+//! percentiles, throughput and traffic statistics.
+
+use super::arrival::ArrivalProcess;
+use super::latency::{LatencyRecorder, LatencyStats};
+use super::queue::{DispatchPolicy, ServeController};
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::reuse::{Phase, PhaseCompiler};
+use crate::shaping::{PartitionPlan, StaggerPolicy};
+use crate::sim::{BandwidthTrace, SimEngine};
+use crate::util::rng::Xoshiro256StarStar;
+use crate::util::stats::Summary;
+use std::sync::Arc;
+
+/// Result of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub partitions: usize,
+    /// Configured long-run mean arrival rate (requests/s).
+    pub arrival_rate: f64,
+    /// Requests generated — all of them are served (open loop, no drops).
+    pub requests: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Mean dispatched batch size (requests / batches).
+    pub mean_batch: f64,
+    /// Deepest any partition queue ever got.
+    pub queue_peak: usize,
+    /// Completion time of the last batch.
+    pub makespan_s: f64,
+    /// Served requests per second over the makespan.
+    pub throughput_ips: f64,
+    pub latency: LatencyStats,
+    /// Sampled aggregate bandwidth summary (GB/s).
+    pub bw: Summary,
+    pub total_bytes: f64,
+    /// Exact bandwidth trace, for plotting and deeper analysis.
+    pub trace: BandwidthTrace,
+}
+
+impl ServeOutcome {
+    fn empty(partitions: usize, arrival_rate: f64) -> Self {
+        Self {
+            partitions,
+            arrival_rate,
+            requests: 0,
+            batches: 0,
+            mean_batch: 0.0,
+            queue_peak: 0,
+            makespan_s: 0.0,
+            throughput_ips: 0.0,
+            latency: LatencyStats::zero(),
+            bw: Summary::of(&[]),
+            total_bytes: 0.0,
+            trace: BandwidthTrace::total_only(),
+        }
+    }
+}
+
+/// Builder for one serving run — the serve analogue of
+/// [`crate::shaping::PartitionExperiment`].
+#[derive(Debug, Clone)]
+pub struct ServeSimulator {
+    accel: AcceleratorConfig,
+    graph: Graph,
+    partitions: usize,
+    arrival: ArrivalProcess,
+    duration_s: f64,
+    seed: u64,
+    policy: DispatchPolicy,
+    stagger: StaggerPolicy,
+    max_batch: usize,
+    trace_samples: usize,
+    enforce_capacity: bool,
+}
+
+impl ServeSimulator {
+    pub fn new(accel: &AcceleratorConfig, graph: &Graph) -> Self {
+        Self {
+            accel: accel.clone(),
+            graph: graph.clone(),
+            partitions: 4,
+            arrival: ArrivalProcess::poisson(100.0),
+            duration_s: 0.5,
+            seed: 42,
+            policy: DispatchPolicy::ShortestQueue,
+            stagger: StaggerPolicy::UniformPhase,
+            max_batch: 0,
+            trace_samples: 400,
+            enforce_capacity: true,
+        }
+    }
+
+    pub fn partitions(mut self, n: usize) -> Self {
+        self.partitions = n;
+        self
+    }
+
+    pub fn arrival(mut self, a: ArrivalProcess) -> Self {
+        self.arrival = a;
+        self
+    }
+
+    /// Arrival window length in seconds (the run itself continues until
+    /// the last admitted request drains).
+    pub fn duration(mut self, s: f64) -> Self {
+        self.duration_s = s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn policy(mut self, p: DispatchPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// How partition start times are de-phased. In serving, stagger is a
+    /// *start gate*: partition `i` may not dispatch its first batch
+    /// before its offset — the deployment-time analogue of the offline
+    /// scheduler's phase offsets (symmetric partitions launched together
+    /// would otherwise stay near-lockstep and forfeit the shaping win).
+    pub fn stagger(mut self, s: StaggerPolicy) -> Self {
+        self.stagger = s;
+        self
+    }
+
+    /// Cap on dynamic batch size (0 = the partition's full batch share,
+    /// `cores / n` images, the paper's one-image-per-core invariant).
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.max_batch = b;
+        self
+    }
+
+    pub fn trace_samples(mut self, s: usize) -> Self {
+        self.trace_samples = s;
+        self
+    }
+
+    /// Skip the DRAM feasibility check (ablations only).
+    pub fn ignore_capacity(mut self) -> Self {
+        self.enforce_capacity = false;
+        self
+    }
+
+    /// Start gates for the configured stagger policy, spread over one
+    /// full-batch roofline time.
+    fn gates(&self, batch_time: f64) -> Vec<f64> {
+        let n = self.partitions;
+        match self.stagger {
+            StaggerPolicy::None => vec![0.0; n],
+            StaggerPolicy::UniformPhase => {
+                (0..n).map(|i| i as f64 * batch_time / n as f64).collect()
+            }
+            StaggerPolicy::RandomDelay { seed } => {
+                let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+                (0..n).map(|_| rng.range_f64(0.0, batch_time)).collect()
+            }
+        }
+    }
+
+    /// Run the serving simulation to drain and aggregate the outcome.
+    pub fn run(&self) -> Result<ServeOutcome> {
+        let plan = PartitionPlan::new(&self.accel, self.partitions)?;
+        if self.enforce_capacity {
+            plan.check_capacity(&self.accel, &self.graph)?;
+        }
+        let cap = plan.batch_per_partition;
+        let max_batch = if self.max_batch == 0 { cap } else { self.max_batch.clamp(1, cap) };
+
+        let arrivals = self.arrival.generate(self.duration_s, self.seed)?;
+        let rate = self.arrival.mean_rate();
+        if arrivals.is_empty() {
+            return Ok(ServeOutcome::empty(self.partitions, rate));
+        }
+
+        // One compiled program per batch size (shared via Arc: a batch
+        // dispatch is a refcount bump): dynamic batching dispatches the
+        // exact-size program, so under-filled batches pay their true
+        // per-image weight-traffic premium.
+        let programs: Vec<Arc<Vec<Phase>>> = (1..=max_batch)
+            .map(|b| {
+                let pc = PhaseCompiler::new(&self.accel, plan.cores_per_partition, b);
+                Arc::new(pc.compile(&self.graph))
+            })
+            .collect();
+        let full = PhaseCompiler::new(&self.accel, plan.cores_per_partition, max_batch);
+        let batch_time = full.roofline_time(&programs[max_batch - 1]).0;
+
+        let mut controller =
+            ServeController::new(&arrivals, &programs, self.policy, self.gates(batch_time));
+        let cores = vec![plan.cores_per_partition; self.partitions];
+        let out = SimEngine::new(&self.accel).run_dynamic(&cores, &mut controller)?;
+
+        // Map batch completions back to per-request latencies.
+        let mut recorder = LatencyRecorder::new();
+        let batches = controller.batches();
+        let mut served = 0usize;
+        for job in &out.jobs {
+            let batch = &batches[job.id as usize];
+            for &r in &batch.requests {
+                recorder.record(arrivals[r], job.finished_at);
+            }
+            served += batch.requests.len();
+        }
+        if served != arrivals.len() || controller.pending() != 0 {
+            return Err(Error::SimInvariant(format!(
+                "serve run dropped requests: {served} served of {}",
+                arrivals.len()
+            )));
+        }
+
+        let makespan = out.makespan.0;
+        Ok(ServeOutcome {
+            partitions: self.partitions,
+            arrival_rate: rate,
+            requests: arrivals.len(),
+            batches: out.jobs.len(),
+            mean_batch: arrivals.len() as f64 / out.jobs.len().max(1) as f64,
+            queue_peak: controller.queue_peak(),
+            makespan_s: makespan,
+            throughput_ips: if makespan > 0.0 { served as f64 / makespan } else { 0.0 },
+            latency: recorder.stats(),
+            bw: out.trace.sampled_summary(self.trace_samples),
+            total_bytes: out.total_bytes,
+            trace: out.trace,
+        })
+    }
+}
+
+/// Synchronous full-machine roofline capacity in images/second — the
+/// reference point serve rates are usually quoted against (1.0 ≈ the
+/// 1-partition machine's best sustainable throughput).
+pub fn roofline_capacity_ips(accel: &AcceleratorConfig, graph: &Graph) -> f64 {
+    let compiler = PhaseCompiler::synchronous(accel);
+    let phases = compiler.compile(graph);
+    let t = compiler.roofline_time(&phases).0;
+    if t > 0.0 {
+        accel.cores as f64 / t
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tiny_cnn;
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    fn sim(rate: f64, n: usize) -> ServeSimulator {
+        ServeSimulator::new(&knl(), &tiny_cnn())
+            .partitions(n)
+            .arrival(ArrivalProcess::poisson(rate))
+            .duration(0.02)
+            .seed(9)
+            .trace_samples(64)
+    }
+
+    #[test]
+    fn drains_every_request_and_reports() {
+        let out = sim(2000.0, 2).run().unwrap();
+        assert!(out.requests > 10, "want a real stream, got {}", out.requests);
+        assert_eq!(out.latency.count, out.requests);
+        assert!(out.batches > 0 && out.batches <= out.requests);
+        assert!(out.mean_batch >= 1.0);
+        assert!(out.makespan_s > 0.0);
+        assert!(out.throughput_ips > 0.0);
+        assert!(out.latency.p50_ms > 0.0);
+        assert!(out.latency.p50_ms <= out.latency.p99_ms);
+        assert!(out.total_bytes > 0.0);
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_different_seed_is_not() {
+        let a = sim(3000.0, 2).run().unwrap();
+        let b = sim(3000.0, 2).run().unwrap();
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        let c = sim(3000.0, 2).seed(10).run().unwrap();
+        assert!(a.requests != c.requests || a.latency != c.latency);
+    }
+
+    #[test]
+    fn capacity_and_plan_errors_surface() {
+        // 3 partitions don't divide 64 cores.
+        assert!(sim(1000.0, 3).run().is_err());
+        // VGG-16 at 16 partitions is DRAM-infeasible.
+        let e = ServeSimulator::new(&knl(), &crate::model::vgg16())
+            .partitions(16)
+            .arrival(ArrivalProcess::poisson(100.0))
+            .duration(0.01)
+            .run();
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn roofline_capacity_is_positive_and_sane() {
+        let cap = roofline_capacity_ips(&knl(), &crate::model::resnet50());
+        // The KNL serves ResNet-50 somewhere in the hundreds of img/s.
+        assert!(cap > 100.0 && cap < 10_000.0, "capacity {cap}");
+    }
+
+    #[test]
+    fn higher_rate_means_bigger_batches() {
+        // Sparse arrivals (1 ms apart ≫ tiny-CNN service time) serve
+        // batch-1; a nanosecond-spaced flood must batch up toward the
+        // 64-image cap.
+        let lo = sim(1000.0, 1).duration(0.01).run().unwrap();
+        let hi = sim(1e8, 1).duration(1e-4).run().unwrap();
+        assert!((lo.mean_batch - 1.0).abs() < 1e-9, "sparse batches: {}", lo.mean_batch);
+        assert!(
+            hi.mean_batch > 4.0 * lo.mean_batch,
+            "overload should batch up: {} vs {}",
+            hi.mean_batch,
+            lo.mean_batch
+        );
+    }
+
+    #[test]
+    fn stagger_gates_match_policy() {
+        let s = sim(500.0, 4);
+        assert_eq!(s.clone().stagger(StaggerPolicy::None).gates(1.0), vec![0.0; 4]);
+        let uni = s.clone().stagger(StaggerPolicy::UniformPhase).gates(0.8);
+        assert_eq!(uni.len(), 4);
+        assert_eq!(uni[0], 0.0);
+        assert!((uni[3] - 0.6).abs() < 1e-12);
+        let r1 = s.clone().stagger(StaggerPolicy::RandomDelay { seed: 5 }).gates(1.0);
+        let r2 = s.stagger(StaggerPolicy::RandomDelay { seed: 5 }).gates(1.0);
+        assert_eq!(r1, r2);
+        assert!(r1.iter().all(|&g| (0.0..1.0).contains(&g)));
+    }
+}

@@ -36,6 +36,19 @@ impl StaggerPolicy {
             StaggerPolicy::RandomDelay { .. } => "random_delay",
         }
     }
+
+    /// Parse a CLI/grid policy name; `seed` feeds the random-delay
+    /// variant (ignored by the deterministic policies).
+    pub fn from_name(name: &str, seed: u64) -> crate::error::Result<Self> {
+        match name {
+            "none" | "lockstep" => Ok(StaggerPolicy::None),
+            "uniform_phase" | "uniform" => Ok(StaggerPolicy::UniformPhase),
+            "random_delay" | "random" => Ok(StaggerPolicy::RandomDelay { seed }),
+            other => Err(crate::error::Error::Usage(format!(
+                "unknown stagger policy '{other}' (none|uniform_phase|random_delay)"
+            ))),
+        }
+    }
 }
 
 /// Build the per-partition workloads for `plan` running `graph`.
@@ -135,6 +148,18 @@ mod tests {
         assert_eq!(delays(&a), delays(&b), "same seed, same delays");
         assert_ne!(delays(&a), delays(&c), "different seed, different delays");
         assert!(delays(&a).iter().all(|&d| d >= 0.0));
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [
+            StaggerPolicy::None,
+            StaggerPolicy::UniformPhase,
+            StaggerPolicy::RandomDelay { seed: 3 },
+        ] {
+            assert_eq!(StaggerPolicy::from_name(p.name(), 3).unwrap(), p);
+        }
+        assert!(StaggerPolicy::from_name("zigzag", 0).is_err());
     }
 
     #[test]

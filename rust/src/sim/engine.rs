@@ -12,7 +12,57 @@ use super::trace::BandwidthTrace;
 use super::workload::{PartitionState, Workload};
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
+use crate::reuse::Phase;
 use crate::util::units::Seconds;
+use std::sync::Arc;
+
+/// Per-phase characterization at a fixed core count, computed once per
+/// phase instead of per event: `full_rate` is 1/tc (fraction of the phase
+/// per second at unthrottled compute speed) and `demand` the bandwidth
+/// that sustains it.
+struct PhaseInfo {
+    full_rate: f64,
+    demand: f64,
+    bytes: f64,
+    flops: f64,
+}
+
+impl PhaseInfo {
+    fn of(ph: &Phase, accel: &AcceleratorConfig, cores: usize) -> Self {
+        let tc = ph.compute_time(accel, cores).0;
+        if tc <= 0.0 {
+            Self {
+                full_rate: f64::INFINITY,
+                demand: if ph.bytes.0 > 0.0 { f64::INFINITY } else { 0.0 },
+                bytes: ph.bytes.0,
+                flops: ph.flops.0,
+            }
+        } else {
+            Self {
+                full_rate: 1.0 / tc,
+                demand: ph.bytes.0 / tc,
+                bytes: ph.bytes.0,
+                flops: ph.flops.0,
+            }
+        }
+    }
+}
+
+/// Progress rate (fraction of the phase per second) under an allocation —
+/// the roofline: min(compute rate, allocated-bandwidth rate).
+fn phase_rate(pi: &PhaseInfo, alloc: f64) -> f64 {
+    if pi.bytes <= 0.0 {
+        if pi.full_rate.is_finite() {
+            pi.full_rate
+        } else {
+            f64::INFINITY
+        }
+    } else if pi.full_rate.is_finite() {
+        pi.full_rate.min(alloc / pi.bytes)
+    } else {
+        alloc / pi.bytes
+    }
+}
 
 /// Result of one simulation run.
 #[derive(Debug, Clone)]
@@ -154,39 +204,10 @@ impl SimEngine {
         let mut events = 0usize;
 
         // Per-phase characterization is constant for a workload (core
-        // count is fixed), so compute it once instead of per event:
-        // (full_rate = 1/tc, demand = bytes/tc, bytes, flops).
-        struct PhaseInfo {
-            full_rate: f64,
-            demand: f64,
-            bytes: f64,
-            flops: f64,
-        }
+        // count is fixed), so compute it once instead of per event.
         let infos: Vec<Vec<PhaseInfo>> = workloads
             .iter()
-            .map(|w| {
-                w.phases
-                    .iter()
-                    .map(|ph| {
-                        let tc = ph.compute_time(&self.accel, w.cores).0;
-                        if tc <= 0.0 {
-                            PhaseInfo {
-                                full_rate: f64::INFINITY,
-                                demand: if ph.bytes.0 > 0.0 { f64::INFINITY } else { 0.0 },
-                                bytes: ph.bytes.0,
-                                flops: ph.flops.0,
-                            }
-                        } else {
-                            PhaseInfo {
-                                full_rate: 1.0 / tc,
-                                demand: ph.bytes.0 / tc,
-                                bytes: ph.bytes.0,
-                                flops: ph.flops.0,
-                            }
-                        }
-                    })
-                    .collect()
-            })
+            .map(|w| w.phases.iter().map(|ph| PhaseInfo::of(ph, &self.accel, w.cores)).collect())
             .collect();
         let info_at = |i: usize, step: usize| -> &PhaseInfo {
             let w = &workloads[i];
@@ -195,7 +216,6 @@ impl SimEngine {
 
         // Scratch buffers reused across events (hot loop).
         let mut demand = vec![0.0f64; n];
-        let mut full_rate = vec![0.0f64; n]; // 1/tc of current phase
         let mut bw_used = vec![0.0f64; n];
         let mut alloc: Vec<f64> = Vec::with_capacity(n);
         let mut order_scratch: Vec<usize> = Vec::with_capacity(n);
@@ -212,14 +232,11 @@ impl SimEngine {
             // Characterize each running phase (cached).
             for i in 0..n {
                 demand[i] = 0.0;
-                full_rate[i] = 0.0;
                 let s = &states[i];
                 if s.done() || s.ready_at > now {
                     continue;
                 }
-                let pi = info_at(i, s.step);
-                full_rate[i] = pi.full_rate;
-                demand[i] = pi.demand;
+                demand[i] = info_at(i, s.step).demand;
             }
 
             max_min_allocate_into(peak, &demand, &mut order_scratch, &mut alloc);
@@ -238,15 +255,7 @@ impl SimEngine {
                     continue;
                 }
                 let pi = info_at(i, s.step);
-                let rate = if pi.bytes <= 0.0 {
-                    // No memory traffic: compute-bound at full speed.
-                    if full_rate[i].is_finite() { full_rate[i] } else { f64::INFINITY }
-                } else if full_rate[i].is_finite() {
-                    // Roofline: min(compute rate, allocated-bw rate).
-                    full_rate[i].min(alloc[i] / pi.bytes)
-                } else {
-                    alloc[i] / pi.bytes
-                };
+                let rate = phase_rate(pi, alloc[i]);
                 bw_used[i] = if pi.bytes > 0.0 { rate * pi.bytes } else { 0.0 };
                 debug_assert!(bw_used[i] <= alloc[i] * (1.0 + 1e-9) || demand[i] == 0.0);
                 if rate.is_infinite() {
@@ -278,14 +287,7 @@ impl SimEngine {
                         continue;
                     }
                     let pi = info_at(i, s.step);
-                    let rate = if pi.bytes <= 0.0 {
-                        full_rate[i]
-                    } else if full_rate[i].is_finite() {
-                        full_rate[i].min(alloc[i] / pi.bytes)
-                    } else {
-                        alloc[i] / pi.bytes
-                    };
-                    (rate, pi.bytes, pi.flops)
+                    (phase_rate(pi, alloc[i]), pi.bytes, pi.flops)
                 };
                 let s = &mut states[i];
                 let progressed = if rate.is_infinite() {
@@ -327,6 +329,370 @@ impl SimEngine {
         };
         outcome.validate()?;
         Ok(outcome)
+    }
+
+    /// Run a **dynamically dispatched** simulation: instead of fixed
+    /// workloads, each partition pulls jobs (phase programs) from a
+    /// [`WorkSource`] whenever it is idle — the serving-scenario mode.
+    /// Bandwidth contention between partitions is resolved by the same
+    /// max–min fluid allocation as [`SimEngine::run`], so mid-burst
+    /// interference between asynchronous partitions is captured exactly.
+    pub fn run_dynamic(
+        &self,
+        partition_cores: &[usize],
+        source: &mut dyn WorkSource,
+    ) -> Result<DynOutcome> {
+        let n = partition_cores.len();
+        if n == 0 {
+            return Err(Error::InvalidConfig("no partitions".into()));
+        }
+        let total_cores: usize = partition_cores.iter().sum();
+        if total_cores > self.accel.cores {
+            return Err(Error::InvalidConfig(format!(
+                "partitions use {total_cores} cores > machine {}",
+                self.accel.cores
+            )));
+        }
+
+        struct Running {
+            id: u64,
+            /// Index into the characterization cache.
+            program: usize,
+            step: usize,
+            remaining_frac: f64,
+            started_at: f64,
+            bytes: f64,
+            flops: f64,
+        }
+
+        /// Per-(program, cores) characterization, computed once even when
+        /// a source dispatches the same compiled program thousands of
+        /// times. Holding the `Arc` keeps its address stable, so the
+        /// pointer is a valid identity key for the run's lifetime.
+        struct CachedProgram {
+            key: (usize, usize),
+            _program: Arc<Vec<Phase>>,
+            infos: Vec<PhaseInfo>,
+            bytes: f64,
+            flops: f64,
+        }
+
+        let peak = self.accel.mem_bw.0;
+        let mut trace = if self.record_per_partition {
+            BandwidthTrace::new(n)
+        } else {
+            BandwidthTrace::total_only()
+        };
+        let mut running: Vec<Option<Running>> = (0..n).map(|_| None).collect();
+        let mut cache: Vec<CachedProgram> = Vec::new();
+        let mut idle_until = vec![0.0f64; n];
+        let mut done = vec![false; n];
+        let mut jobs: Vec<JobRecord> = Vec::new();
+        let mut moved_bytes = 0.0f64;
+        let mut done_flops = 0.0f64;
+        let mut declared_bytes = 0.0f64;
+        let mut declared_flops = 0.0f64;
+        let mut now = 0.0f64;
+        let mut events = 0usize;
+
+        let mut demand = vec![0.0f64; n];
+        let mut bw_used = vec![0.0f64; n];
+        let mut alloc: Vec<f64> = Vec::with_capacity(n);
+        let mut order_scratch: Vec<usize> = Vec::with_capacity(n);
+
+        loop {
+            // Offer work to every idle partition (a source may hand back a
+            // zero-phase job, which completes instantly — keep polling).
+            for i in 0..n {
+                while running[i].is_none() && !done[i] && idle_until[i] <= now {
+                    events += 1;
+                    if events > self.max_events {
+                        return Err(Error::SimInvariant(format!(
+                            "exceeded {} events — runaway dynamic simulation",
+                            self.max_events
+                        )));
+                    }
+                    match source.next(i, now) {
+                        DynNext::Job(job) => {
+                            let key = (Arc::as_ptr(&job.phases) as usize, partition_cores[i]);
+                            let program = match cache.iter().position(|c| c.key == key) {
+                                Some(idx) => idx,
+                                None => {
+                                    let cores = partition_cores[i];
+                                    let infos: Vec<PhaseInfo> = job
+                                        .phases
+                                        .iter()
+                                        .map(|ph| PhaseInfo::of(ph, &self.accel, cores))
+                                        .collect();
+                                    cache.push(CachedProgram {
+                                        key,
+                                        bytes: infos.iter().map(|pi| pi.bytes).sum(),
+                                        flops: infos.iter().map(|pi| pi.flops).sum(),
+                                        infos,
+                                        _program: job.phases.clone(),
+                                    });
+                                    cache.len() - 1
+                                }
+                            };
+                            let (bytes, flops) = (cache[program].bytes, cache[program].flops);
+                            declared_bytes += bytes;
+                            declared_flops += flops;
+                            if cache[program].infos.is_empty() {
+                                jobs.push(JobRecord {
+                                    partition: i,
+                                    id: job.id,
+                                    started_at: now,
+                                    finished_at: now,
+                                    bytes: 0.0,
+                                    flops: 0.0,
+                                });
+                            } else {
+                                running[i] = Some(Running {
+                                    id: job.id,
+                                    program,
+                                    step: 0,
+                                    remaining_frac: 1.0,
+                                    started_at: now,
+                                    bytes,
+                                    flops,
+                                });
+                            }
+                        }
+                        DynNext::IdleUntil(t) => {
+                            if t.is_nan() || t <= now {
+                                return Err(Error::SimInvariant(format!(
+                                    "work source idled partition {i} into the past: \
+                                     {t} <= {now}"
+                                )));
+                            }
+                            idle_until[i] = t;
+                        }
+                        DynNext::Finished => done[i] = true,
+                    }
+                }
+            }
+
+            if running.iter().all(|r| r.is_none()) && done.iter().all(|&d| d) {
+                break;
+            }
+
+            events += 1;
+            if events > self.max_events {
+                return Err(Error::SimInvariant(format!(
+                    "exceeded {} events — runaway dynamic simulation",
+                    self.max_events
+                )));
+            }
+
+            for i in 0..n {
+                demand[i] = match &running[i] {
+                    Some(r) => cache[r.program].infos[r.step].demand,
+                    None => 0.0,
+                };
+            }
+            max_min_allocate_into(peak, &demand, &mut order_scratch, &mut alloc);
+
+            // Next event: earliest phase completion or idle wake-up. Track
+            // the binding wake-up's absolute time so we can land on it
+            // exactly (floating-point: now + (w - now) need not equal w).
+            let mut next_dt = f64::INFINITY;
+            let mut wake_at: Option<f64> = None;
+            for i in 0..n {
+                match &running[i] {
+                    Some(r) => {
+                        let pi = &cache[r.program].infos[r.step];
+                        let rate = phase_rate(pi, alloc[i]);
+                        bw_used[i] = if pi.bytes > 0.0 { rate * pi.bytes } else { 0.0 };
+                        if rate.is_infinite() {
+                            next_dt = 0.0;
+                        } else if rate > 0.0 {
+                            next_dt = next_dt.min(r.remaining_frac / rate);
+                        }
+                    }
+                    None => {
+                        bw_used[i] = 0.0;
+                        if !done[i] && idle_until[i] > now {
+                            let dt = idle_until[i] - now;
+                            if dt <= next_dt {
+                                next_dt = dt;
+                                wake_at = Some(idle_until[i]);
+                            }
+                        }
+                    }
+                }
+            }
+            if next_dt.is_infinite() {
+                return Err(Error::SimInvariant(
+                    "dynamic deadlock: nothing can progress".into(),
+                ));
+            }
+            let t1 = match wake_at {
+                Some(w) if w - now <= next_dt => w,
+                _ => now + next_dt,
+            };
+            let dt = t1 - now;
+            trace.record(now, t1, &bw_used);
+
+            for i in 0..n {
+                let Some(r) = running[i].as_mut() else { continue };
+                let pi = &cache[r.program].infos[r.step];
+                let rate = phase_rate(pi, alloc[i]);
+                let progressed = if rate.is_infinite() {
+                    r.remaining_frac
+                } else {
+                    (rate * dt).min(r.remaining_frac)
+                };
+                moved_bytes += progressed * pi.bytes;
+                done_flops += progressed * pi.flops;
+                let phase_count = cache[r.program].infos.len();
+                r.remaining_frac -= progressed;
+                if r.remaining_frac <= 1e-12 {
+                    r.step += 1;
+                    r.remaining_frac = 1.0;
+                    if r.step >= phase_count {
+                        jobs.push(JobRecord {
+                            partition: i,
+                            id: r.id,
+                            started_at: r.started_at,
+                            finished_at: t1,
+                            bytes: r.bytes,
+                            flops: r.flops,
+                        });
+                        running[i] = None;
+                    }
+                }
+            }
+
+            now = t1;
+        }
+
+        let makespan = Seconds(jobs.iter().map(|j| j.finished_at).fold(0.0, f64::max));
+        let outcome = DynOutcome {
+            makespan,
+            trace,
+            jobs,
+            total_bytes: moved_bytes,
+            total_flops: done_flops,
+            declared_bytes,
+            declared_flops,
+            peak_bw: peak,
+        };
+        outcome.validate()?;
+        Ok(outcome)
+    }
+}
+
+/// A phase program dispatched at runtime by a [`WorkSource`] — e.g. one
+/// dynamically-formed batch of inference requests.
+#[derive(Debug, Clone)]
+pub struct DynJob {
+    /// Caller-chosen identifier echoed back in the [`JobRecord`].
+    pub id: u64,
+    /// Phase list executed once, in order. Shared: sources dispatch the
+    /// same compiled program thousands of times, so handing out an `Arc`
+    /// keeps the per-batch cost at a refcount bump.
+    pub phases: Arc<Vec<Phase>>,
+}
+
+/// What a [`WorkSource`] answers when an idle partition asks for work.
+#[derive(Debug, Clone)]
+pub enum DynNext {
+    /// Start this job immediately.
+    Job(DynJob),
+    /// Nothing to run yet; ask again at this absolute time (must be
+    /// strictly greater than the current simulation time).
+    IdleUntil(f64),
+    /// This partition will never receive work again.
+    Finished,
+}
+
+/// Pull-based job source for [`SimEngine::run_dynamic`]. The engine calls
+/// `next` whenever partition `partition` is idle at simulation time `now`;
+/// implementations must be deterministic for reproducible runs.
+pub trait WorkSource {
+    fn next(&mut self, partition: usize, now: f64) -> DynNext;
+}
+
+/// Completion record of one dynamically dispatched job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobRecord {
+    pub partition: usize,
+    pub id: u64,
+    pub started_at: f64,
+    pub finished_at: f64,
+    pub bytes: f64,
+    pub flops: f64,
+}
+
+/// Result of one dynamically dispatched run.
+#[derive(Debug, Clone)]
+pub struct DynOutcome {
+    /// Completion time of the last job (0 if no job ever ran).
+    pub makespan: Seconds,
+    /// Exact bandwidth trace.
+    pub trace: BandwidthTrace,
+    /// Completion records in completion order (ties: partition order).
+    pub jobs: Vec<JobRecord>,
+    /// Total bytes moved (== Σ dispatched job bytes).
+    pub total_bytes: f64,
+    /// Total FLOPs executed.
+    pub total_flops: f64,
+    declared_bytes: f64,
+    declared_flops: f64,
+    peak_bw: f64,
+}
+
+impl DynOutcome {
+    /// Post-run invariant checks, mirroring [`SimOutcome::validate`]:
+    /// byte/FLOP conservation against everything the source dispatched,
+    /// trace consistency, bandwidth feasibility, monotone job times.
+    pub fn validate(&self) -> Result<()> {
+        let tol = 1e-6 * self.declared_bytes.max(1.0);
+        if (self.total_bytes - self.declared_bytes).abs() > tol {
+            return Err(Error::SimInvariant(format!(
+                "byte conservation violated: moved {} vs dispatched {}",
+                self.total_bytes, self.declared_bytes
+            )));
+        }
+        let ftol = 1e-6 * self.declared_flops.max(1.0);
+        if (self.total_flops - self.declared_flops).abs() > ftol {
+            return Err(Error::SimInvariant(format!(
+                "flop conservation violated: {} vs {}",
+                self.total_flops, self.declared_flops
+            )));
+        }
+        let traced = self.trace.total_bytes();
+        if (traced - self.declared_bytes).abs() > tol {
+            return Err(Error::SimInvariant(format!(
+                "trace integral {} != dispatched bytes {}",
+                traced, self.declared_bytes
+            )));
+        }
+        for (t0, t1, bw) in self.trace.total.segments() {
+            if bw > self.peak_bw * (1.0 + 1e-9) {
+                return Err(Error::SimInvariant(format!(
+                    "allocated bw {bw} exceeds peak {} in [{t0}, {t1})",
+                    self.peak_bw
+                )));
+            }
+        }
+        for j in &self.jobs {
+            if j.finished_at < j.started_at {
+                return Err(Error::SimInvariant(format!(
+                    "job {} finished before it started",
+                    j.id
+                )));
+            }
+            if j.finished_at > self.makespan.0 + 1e-9 {
+                return Err(Error::SimInvariant(format!("job {} finished after makespan", j.id)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Completion records of one partition, in execution order.
+    pub fn jobs_of(&self, partition: usize) -> Vec<&JobRecord> {
+        self.jobs.iter().filter(|j| j.partition == partition).collect()
     }
 }
 
@@ -497,5 +863,118 @@ mod tests {
         out.validate().unwrap();
         let declared: f64 = progs.iter().map(|w| w.total_bytes()).sum();
         assert!((out.total_bytes - declared).abs() < 1e-6 * declared.max(1.0));
+    }
+
+    /// One partition's scripted feed: (release time, job program) pairs
+    /// handed out in order once `now` reaches the release time.
+    type Feed = Vec<(f64, Vec<Phase>)>;
+
+    struct Script {
+        queues: Vec<Feed>,
+        cursor: Vec<usize>,
+        next_id: u64,
+    }
+
+    impl Script {
+        fn new(queues: Vec<Feed>) -> Self {
+            let cursor = vec![0; queues.len()];
+            Self { queues, cursor, next_id: 0 }
+        }
+    }
+
+    impl WorkSource for Script {
+        fn next(&mut self, partition: usize, now: f64) -> DynNext {
+            let k = self.cursor[partition];
+            match self.queues[partition].get(k) {
+                None => DynNext::Finished,
+                Some((release, phases)) => {
+                    if *release > now {
+                        DynNext::IdleUntil(*release)
+                    } else {
+                        self.cursor[partition] += 1;
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        DynNext::Job(DynJob { id, phases: Arc::new(phases.clone()) })
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_single_job_matches_static_run() {
+        // Same 10-FLOP/50-byte phase as `single_compute_bound_phase`.
+        let accel = toy();
+        let mut src = Script::new(vec![vec![(0.0, vec![phase(10.0, 50.0)])]]);
+        let out = SimEngine::new(&accel).run_dynamic(&[2], &mut src).unwrap();
+        assert!((out.makespan.0 - 5.0).abs() < 1e-9);
+        assert_eq!(out.jobs.len(), 1);
+        assert!((out.jobs[0].finished_at - 5.0).abs() < 1e-9);
+        assert!((out.total_bytes - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dynamic_release_times_gate_dispatch() {
+        // Job 2 is released at t = 10, after job 1 ends at 5 → the
+        // partition idles in between and finishes at 15.
+        let accel = toy();
+        let prog = vec![phase(10.0, 50.0)];
+        let mut src = Script::new(vec![vec![(0.0, prog.clone()), (10.0, prog)]]);
+        let out = SimEngine::new(&accel).run_dynamic(&[2], &mut src).unwrap();
+        assert_eq!(out.jobs.len(), 2);
+        assert!((out.jobs[1].started_at - 10.0).abs() < 1e-9, "{:?}", out.jobs);
+        assert!((out.makespan.0 - 15.0).abs() < 1e-9);
+        // Nothing moves while idle.
+        assert!(out.trace.total.at(7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_partitions_contend_fairly() {
+        // Mirror of `two_partitions_contend_fairly`: each job demands the
+        // whole pool, so both take 2 s.
+        let accel = toy();
+        let prog = vec![phase(1.0, 100.0)];
+        let mut src = Script::new(vec![vec![(0.0, prog.clone())], vec![(0.0, prog)]]);
+        let out = SimEngine::new(&accel).run_dynamic(&[1, 1], &mut src).unwrap();
+        assert!((out.makespan.0 - 2.0).abs() < 1e-9);
+        assert_eq!(out.jobs.len(), 2);
+        assert_eq!(out.jobs_of(0).len(), 1);
+    }
+
+    #[test]
+    fn dynamic_zero_phase_job_completes_instantly() {
+        let accel = toy();
+        let mut src = Script::new(vec![vec![(0.0, vec![]), (1.0, vec![phase(2.0, 0.0)])]]);
+        let out = SimEngine::new(&accel).run_dynamic(&[1], &mut src).unwrap();
+        assert_eq!(out.jobs.len(), 2);
+        assert_eq!(out.jobs[0].started_at, out.jobs[0].finished_at);
+        // Second job: released at 1, 2 FLOPs on 1 core → ends at 3.
+        assert!((out.makespan.0 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dynamic_rejects_past_idle_and_oversubscription() {
+        let accel = toy();
+        struct Bad;
+        impl WorkSource for Bad {
+            fn next(&mut self, _: usize, now: f64) -> DynNext {
+                DynNext::IdleUntil(now - 1.0)
+            }
+        }
+        assert!(SimEngine::new(&accel).run_dynamic(&[1], &mut Bad).is_err());
+        let mut src = Script::new(vec![vec![], vec![]]);
+        assert!(SimEngine::new(&accel).run_dynamic(&[3, 2], &mut src).is_err());
+        let mut src = Script::new(vec![]);
+        assert!(SimEngine::new(&accel).run_dynamic(&[], &mut src).is_err());
+    }
+
+    #[test]
+    fn dynamic_empty_source_yields_empty_outcome() {
+        let accel = toy();
+        let mut src = Script::new(vec![vec![], vec![]]);
+        let out = SimEngine::new(&accel).run_dynamic(&[1, 1], &mut src).unwrap();
+        assert_eq!(out.jobs.len(), 0);
+        assert_eq!(out.makespan.0, 0.0);
+        assert_eq!(out.total_bytes, 0.0);
     }
 }

@@ -17,7 +17,7 @@ mod trace;
 mod workload;
 
 pub use dram::{DramModel, Footprint};
-pub use engine::{SimEngine, SimOutcome};
+pub use engine::{DynJob, DynNext, DynOutcome, JobRecord, SimEngine, SimOutcome, WorkSource};
 pub use memory::max_min_allocate;
 pub use trace::BandwidthTrace;
 pub use workload::{PartitionState, Workload};

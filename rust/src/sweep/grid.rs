@@ -1,8 +1,10 @@
-//! Scenario grids: the cartesian product of models × partition counts ×
-//! bandwidth configurations a sweep explores.
+//! Scenario grids: the cartesian product of models × bandwidth
+//! configurations × stagger policies × arrival rates × partition counts a
+//! sweep explores.
 
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
+use crate::shaping::StaggerPolicy;
 use crate::util::units::BytesPerS;
 
 /// The model zoo a default sweep covers (the paper's three evaluation
@@ -22,13 +24,31 @@ pub struct Scenario {
     /// sweeping it explores how the shaping win moves with the
     /// compute/bandwidth balance (cf. the unlimited-BW ablation).
     pub bandwidth_scale: f64,
+    /// How the asynchronous partitions are de-phased (offline rows) or
+    /// start-gated (serve rows).
+    pub stagger: StaggerPolicy,
+    /// Offered load in requests/second; 0.0 means the offline
+    /// fixed-batch mode (the paper's original experiment).
+    pub arrival_rate: f64,
     pub steady_batches: usize,
 }
 
 impl Scenario {
+    /// Whether this point is a serving run (vs the offline batch mode).
+    pub fn is_serve(&self) -> bool {
+        self.arrival_rate > 0.0
+    }
+
     /// Human-readable tag used in reports and logs.
     pub fn label(&self) -> String {
-        format!("{}@{}p/bw{:.2}x", self.model, self.partitions, self.bandwidth_scale)
+        let mut s = format!("{}@{}p/bw{:.2}x", self.model, self.partitions, self.bandwidth_scale);
+        if self.stagger != StaggerPolicy::UniformPhase {
+            s.push_str(&format!("/{}", self.stagger.name()));
+        }
+        if self.is_serve() {
+            s.push_str(&format!("/λ{:.0}", self.arrival_rate));
+        }
+        s
     }
 
     /// The accelerator this scenario runs on: `base` with the bandwidth
@@ -41,15 +61,25 @@ impl Scenario {
 }
 
 /// Builder for a sweep grid. `scenarios()` enumerates the cartesian
-/// product model-major, then bandwidth scale, then partition count — the
-/// order every report uses.
+/// product model-major, then bandwidth scale, then stagger policy, then
+/// arrival rate, then partition count — the order every report uses.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub accel: AcceleratorConfig,
     pub models: Vec<String>,
     pub partitions: Vec<usize>,
     pub bandwidth_scales: Vec<f64>,
+    /// Stagger policies to sweep; defaults to the paper's steady-state
+    /// [`StaggerPolicy::UniformPhase`] only.
+    pub stagger_policies: Vec<StaggerPolicy>,
+    /// Arrival-rate axis; 0.0 (the default sole entry) is the offline
+    /// batch mode, any positive rate adds a serving scenario.
+    pub arrival_rates: Vec<f64>,
     pub steady_batches: usize,
+    /// Arrival window for serve scenarios (seconds).
+    pub serve_duration_s: f64,
+    /// Seed for serve scenarios' arrival streams.
+    pub serve_seed: u64,
     pub trace_samples: usize,
 }
 
@@ -60,7 +90,11 @@ impl SweepGrid {
             models: DEFAULT_SWEEP_MODELS.iter().map(|s| s.to_string()).collect(),
             partitions: vec![1, 2, 4, 8, 16],
             bandwidth_scales: vec![1.0],
+            stagger_policies: vec![StaggerPolicy::UniformPhase],
+            arrival_rates: vec![0.0],
             steady_batches: 6,
+            serve_duration_s: 0.25,
+            serve_seed: 42,
             trace_samples: 400,
         }
     }
@@ -80,8 +114,28 @@ impl SweepGrid {
         self
     }
 
+    pub fn stagger_policies(mut self, policies: Vec<StaggerPolicy>) -> Self {
+        self.stagger_policies = policies;
+        self
+    }
+
+    pub fn arrival_rates(mut self, rates: Vec<f64>) -> Self {
+        self.arrival_rates = rates;
+        self
+    }
+
     pub fn steady_batches(mut self, batches: usize) -> Self {
         self.steady_batches = batches;
+        self
+    }
+
+    pub fn serve_duration(mut self, seconds: f64) -> Self {
+        self.serve_duration_s = seconds;
+        self
+    }
+
+    pub fn serve_seed(mut self, seed: u64) -> Self {
+        self.serve_seed = seed;
         self
     }
 
@@ -92,7 +146,11 @@ impl SweepGrid {
 
     /// Number of scenarios the grid enumerates.
     pub fn len(&self) -> usize {
-        self.models.len() * self.bandwidth_scales.len() * self.partitions.len()
+        self.models.len()
+            * self.bandwidth_scales.len()
+            * self.stagger_policies.len()
+            * self.arrival_rates.len()
+            * self.partitions.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -110,12 +168,25 @@ impl SweepGrid {
         if self.bandwidth_scales.is_empty() {
             return Err(Error::InvalidConfig("sweep grid has no bandwidth scales".into()));
         }
+        if self.stagger_policies.is_empty() {
+            return Err(Error::InvalidConfig("sweep grid has no stagger policies".into()));
+        }
+        if self.arrival_rates.is_empty() {
+            return Err(Error::InvalidConfig("sweep grid has no arrival rates".into()));
+        }
         for m in &self.models {
             crate::model::by_name(m)?;
         }
         for &s in &self.bandwidth_scales {
             if !(s.is_finite() && s > 0.0) {
                 return Err(Error::InvalidConfig(format!("bandwidth scale {s} must be > 0")));
+            }
+        }
+        for &r in &self.arrival_rates {
+            if !(r.is_finite() && r >= 0.0) {
+                return Err(Error::InvalidConfig(format!(
+                    "arrival rate {r} must be ≥ 0 (0 = offline batch mode)"
+                )));
             }
         }
         for &n in &self.partitions {
@@ -125,6 +196,12 @@ impl SweepGrid {
         }
         if self.steady_batches == 0 {
             return Err(Error::InvalidConfig("steady_batches must be > 0".into()));
+        }
+        if !(self.serve_duration_s.is_finite() && self.serve_duration_s > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "serve duration {} must be > 0",
+                self.serve_duration_s
+            )));
         }
         if self.trace_samples == 0 {
             return Err(Error::InvalidConfig("trace_samples must be > 0".into()));
@@ -138,15 +215,21 @@ impl SweepGrid {
         let mut id = 0;
         for model in &self.models {
             for &scale in &self.bandwidth_scales {
-                for &n in &self.partitions {
-                    out.push(Scenario {
-                        id,
-                        model: model.clone(),
-                        partitions: n,
-                        bandwidth_scale: scale,
-                        steady_batches: self.steady_batches,
-                    });
-                    id += 1;
+                for &stagger in &self.stagger_policies {
+                    for &rate in &self.arrival_rates {
+                        for &n in &self.partitions {
+                            out.push(Scenario {
+                                id,
+                                model: model.clone(),
+                                partitions: n,
+                                bandwidth_scale: scale,
+                                stagger,
+                                arrival_rate: rate,
+                                steady_batches: self.steady_batches,
+                            });
+                            id += 1;
+                        }
+                    }
                 }
             }
         }
@@ -173,10 +256,32 @@ mod tests {
         for (i, s) in sc.iter().enumerate() {
             assert_eq!(s.id, i);
         }
-        // Model-major: first block is all-vgg16.
-        assert!(sc[..5].iter().all(|s| s.model == "vgg16"));
+        // Model-major: first block is all-vgg16, offline by default.
+        assert!(sc[..5].iter().all(|s| s.model == "vgg16" && !s.is_serve()));
         assert_eq!(sc[0].partitions, 1);
         assert_eq!(sc[4].partitions, 16);
+    }
+
+    #[test]
+    fn stagger_and_rate_axes_multiply_the_grid() {
+        let g = SweepGrid::new(&knl())
+            .models(vec!["resnet50"])
+            .partitions(vec![1, 4])
+            .stagger_policies(vec![StaggerPolicy::None, StaggerPolicy::UniformPhase])
+            .arrival_rates(vec![0.0, 500.0]);
+        assert_eq!(g.len(), 8); // 1 model × 1 bw × 2 staggers × 2 rates × 2 ns
+        g.validate().unwrap();
+        let sc = g.scenarios();
+        // Stagger-major over rate over partitions.
+        assert_eq!(sc[0].stagger, StaggerPolicy::None);
+        assert!(!sc[0].is_serve());
+        assert!(sc[2].is_serve());
+        assert_eq!(sc[2].arrival_rate, 500.0);
+        assert_eq!(sc[4].stagger, StaggerPolicy::UniformPhase);
+        // Serve + non-default-stagger rows advertise it in the label.
+        assert!(sc[2].label().contains("/none"));
+        assert!(sc[2].label().contains("/λ500"));
+        assert!(!sc[4].label().contains("/uniform_phase"));
     }
 
     #[test]
@@ -186,6 +291,8 @@ mod tests {
             model: "resnet50".into(),
             partitions: 2,
             bandwidth_scale: 0.5,
+            stagger: StaggerPolicy::UniformPhase,
+            arrival_rate: 0.0,
             steady_batches: 4,
         };
         let base = knl();
@@ -203,6 +310,11 @@ mod tests {
         assert!(SweepGrid::new(&knl()).partitions(vec![0]).validate().is_err());
         assert!(SweepGrid::new(&knl()).bandwidth_scales(vec![-1.0]).validate().is_err());
         assert!(SweepGrid::new(&knl()).bandwidth_scales(vec![]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).stagger_policies(vec![]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).arrival_rates(vec![]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).arrival_rates(vec![-2.0]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).arrival_rates(vec![f64::NAN]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).serve_duration(0.0).validate().is_err());
         assert!(SweepGrid::new(&knl()).steady_batches(0).validate().is_err());
         assert!(SweepGrid::new(&knl()).trace_samples(0).validate().is_err());
         SweepGrid::new(&knl()).validate().unwrap();

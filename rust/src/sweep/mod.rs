@@ -4,13 +4,17 @@
 //! a design-space sweep: networks × partition counts × bandwidth
 //! configurations. This module turns that into a first-class subsystem:
 //!
-//! * [`SweepGrid`] enumerates the cartesian product of scenarios;
+//! * [`SweepGrid`] enumerates the cartesian product of scenarios —
+//!   models × bandwidth scales × stagger policies × arrival rates ×
+//!   partition counts, where a positive arrival rate turns the point
+//!   into a serving run (see [`crate::serve`]);
 //! * [`SweepRunner`] fans them out across `std::thread` workers (the
 //!   fluid simulator is pure, so scenarios are embarrassingly parallel)
-//!   with per-(model, bandwidth) baselines computed once and shared;
+//!   with per-(model, bandwidth, rate) baselines computed once and
+//!   shared;
 //! * [`SweepReport`] aggregates the outcomes into a ranked table with
-//!   relative-performance and traffic-smoothness (coefficient of
-//!   variation) columns, plus CSV/JSON exports.
+//!   relative-performance, traffic-smoothness (coefficient of
+//!   variation) and p50/p95/p99 latency columns, plus CSV/JSON exports.
 //!
 //! Results are byte-identical for 1 vs N worker threads: outcomes are
 //! keyed by scenario id and reassembled in grid order.
@@ -33,4 +37,5 @@ mod runner;
 
 pub use grid::{Scenario, SweepGrid, DEFAULT_SWEEP_MODELS};
 pub use report::{ScenarioOutcome, ScenarioStatus, SweepMetrics, SweepReport};
+pub(crate) use runner::parallel_map;
 pub use runner::SweepRunner;

@@ -1,6 +1,7 @@
 //! Aggregated sweep results: per-scenario metrics, ranking, rendering.
 
 use super::grid::Scenario;
+use crate::serve::ServeOutcome;
 use crate::shaping::{ShapingAnalysis, ShapingReport};
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
@@ -8,11 +9,12 @@ use crate::util::table::Table;
 use std::cmp::Ordering;
 
 /// The paper's comparison metrics for one completed scenario, plus the
-/// traffic-smoothness (coefficient-of-variation) columns the ranked
-/// report sorts and displays.
+/// traffic-smoothness (coefficient-of-variation) columns and — for
+/// serving scenarios — the request-latency percentiles.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SweepMetrics {
-    /// throughput(n)/throughput(1) on the same accelerator config.
+    /// throughput(n)/throughput(1) on the same accelerator config (and,
+    /// for serve rows, the same arrival stream).
     pub relative_performance: f64,
     /// 1 − σ_n/σ_1 of the sampled bandwidth series.
     pub std_reduction: f64,
@@ -26,10 +28,14 @@ pub struct SweepMetrics {
     pub bw_std_gbps: f64,
     pub makespan_s: f64,
     pub throughput_ips: f64,
+    /// Latency percentiles — `Some` only for serving scenarios.
+    pub p50_ms: Option<f64>,
+    pub p95_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
 }
 
 impl SweepMetrics {
-    /// Metrics of a shaped run relative to its baseline.
+    /// Metrics of a shaped offline run relative to its baseline.
     pub fn from_report(report: &ShapingReport) -> Self {
         Self {
             relative_performance: report.relative_performance,
@@ -41,10 +47,13 @@ impl SweepMetrics {
             bw_std_gbps: report.shaped.bw.std,
             makespan_s: report.shaped.makespan,
             throughput_ips: report.shaped.throughput,
+            p50_ms: None,
+            p95_ms: None,
+            p99_ms: None,
         }
     }
 
-    /// Metrics of the synchronous baseline itself (the n = 1 grid row).
+    /// Metrics of the synchronous offline baseline itself (n = 1).
     pub fn baseline_row(baseline: &ShapingAnalysis) -> Self {
         Self {
             relative_performance: 1.0,
@@ -56,6 +65,46 @@ impl SweepMetrics {
             bw_std_gbps: baseline.bw.std,
             makespan_s: baseline.makespan,
             throughput_ips: baseline.throughput,
+            p50_ms: None,
+            p95_ms: None,
+            p99_ms: None,
+        }
+    }
+
+    /// Metrics of a serving run relative to its 1-partition serve
+    /// baseline at the same arrival stream.
+    pub fn from_serve(out: &ServeOutcome, base: &ServeOutcome) -> Self {
+        Self {
+            relative_performance: if base.throughput_ips > 0.0 {
+                out.throughput_ips / base.throughput_ips
+            } else {
+                0.0
+            },
+            std_reduction: if base.bw.std > 0.0 { 1.0 - out.bw.std / base.bw.std } else { 0.0 },
+            avg_bw_increase: if base.bw.mean > 0.0 {
+                out.bw.mean / base.bw.mean - 1.0
+            } else {
+                0.0
+            },
+            smoothness_cov: out.bw.cov(),
+            baseline_cov: base.bw.cov(),
+            bw_mean_gbps: out.bw.mean,
+            bw_std_gbps: out.bw.std,
+            makespan_s: out.makespan_s,
+            throughput_ips: out.throughput_ips,
+            p50_ms: Some(out.latency.p50_ms),
+            p95_ms: Some(out.latency.p95_ms),
+            p99_ms: Some(out.latency.p99_ms),
+        }
+    }
+
+    /// Metrics of the 1-partition serve baseline itself.
+    pub fn serve_baseline_row(base: &ServeOutcome) -> Self {
+        Self {
+            relative_performance: 1.0,
+            std_reduction: 0.0,
+            avg_bw_increase: 0.0,
+            ..Self::from_serve(base, base)
         }
     }
 }
@@ -125,6 +174,11 @@ impl SweepReport {
         self.outcomes.len() - self.completed_count()
     }
 
+    /// Serving scenarios in the report (rows with latency percentiles).
+    pub fn serve_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.scenario.is_serve()).count()
+    }
+
     /// Infeasible scenarios with the capacity model's explanation, in
     /// grid order — callers print these as `note:` lines so the DRAM
     /// breakdown (weights/activations/workspace) stays visible.
@@ -145,33 +199,46 @@ impl SweepReport {
             "model",
             "n",
             "bw",
+            "stagger",
+            "λ img/s",
             "rel perf",
             "σ reduction",
             "avg BW gain",
             "cov",
             "sync cov",
+            "p99 ms",
         ])
         .left_first();
         for (rank, o) in self.ranked().iter().enumerate() {
             let s = &o.scenario;
+            let rate = if s.is_serve() { format!("{:.0}", s.arrival_rate) } else { "-".into() };
             match o.metrics() {
                 Some(m) => t.row(vec![
                     (rank + 1).to_string(),
                     s.model.clone(),
                     s.partitions.to_string(),
                     format!("{:.2}x", s.bandwidth_scale),
+                    s.stagger.name().to_string(),
+                    rate,
                     format!("{:+.1}%", (m.relative_performance - 1.0) * 100.0),
                     format!("{:+.1}%", m.std_reduction * 100.0),
                     format!("{:+.1}%", m.avg_bw_increase * 100.0),
                     format!("{:.3}", m.smoothness_cov),
                     format!("{:.3}", m.baseline_cov),
+                    match m.p99_ms {
+                        Some(p) => format!("{p:.1}"),
+                        None => "-".to_string(),
+                    },
                 ]),
                 None => t.row(vec![
                     "-".to_string(),
                     s.model.clone(),
                     s.partitions.to_string(),
                     format!("{:.2}x", s.bandwidth_scale),
+                    s.stagger.name().to_string(),
+                    rate,
                     "DRAM".to_string(),
+                    "-".to_string(),
                     "-".to_string(),
                     "-".to_string(),
                     "-".to_string(),
@@ -190,6 +257,8 @@ impl SweepReport {
             "model",
             "partitions",
             "bandwidth_scale",
+            "stagger",
+            "arrival_rate",
             "steady_batches",
             "status",
             "relative_performance",
@@ -201,9 +270,13 @@ impl SweepReport {
             "bw_std_gbps",
             "makespan_s",
             "throughput_ips",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
             "reason",
         ]);
         let f = crate::util::csv::format_float;
+        let opt = |v: Option<f64>| v.map(f).unwrap_or_default();
         for o in &self.outcomes {
             let s = &o.scenario;
             let head = vec![
@@ -211,6 +284,8 @@ impl SweepReport {
                 s.model.clone(),
                 s.partitions.to_string(),
                 f(s.bandwidth_scale),
+                s.stagger.name().to_string(),
+                f(s.arrival_rate),
                 s.steady_batches.to_string(),
             ];
             let tail = match &o.status {
@@ -225,11 +300,14 @@ impl SweepReport {
                     f(m.bw_std_gbps),
                     f(m.makespan_s),
                     f(m.throughput_ips),
+                    opt(m.p50_ms),
+                    opt(m.p95_ms),
+                    opt(m.p99_ms),
                     String::new(),
                 ],
                 ScenarioStatus::Infeasible(why) => {
                     let mut v = vec!["dram_infeasible".to_string()];
-                    v.extend((0..9).map(|_| String::new()));
+                    v.extend((0..12).map(|_| String::new()));
                     v.push(why.clone());
                     v
                 }
@@ -244,7 +322,8 @@ impl SweepReport {
         let mut j = Json::obj()
             .with("scenarios", self.outcomes.len())
             .with("completed", self.completed_count())
-            .with("dram_infeasible", self.infeasible_count());
+            .with("dram_infeasible", self.infeasible_count())
+            .with("serve_scenarios", self.serve_count());
         if let Some(best) = self.best() {
             j.set(
                 "best",
@@ -271,6 +350,7 @@ impl SweepReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::shaping::StaggerPolicy;
 
     fn metrics(rel: f64) -> SweepMetrics {
         SweepMetrics {
@@ -283,6 +363,9 @@ mod tests {
             bw_std_gbps: 40.0,
             makespan_s: 1.0,
             throughput_ips: 64.0,
+            p50_ms: None,
+            p95_ms: None,
+            p99_ms: None,
         }
     }
 
@@ -293,6 +376,8 @@ mod tests {
                 model: "resnet50".into(),
                 partitions: 2,
                 bandwidth_scale: 1.0,
+                stagger: StaggerPolicy::UniformPhase,
+                arrival_rate: 0.0,
                 steady_batches: 4,
             },
             status: match rel {
@@ -300,6 +385,17 @@ mod tests {
                 None => ScenarioStatus::Infeasible("over capacity".into()),
             },
         }
+    }
+
+    fn serve_outcome(id: usize, p99: f64) -> ScenarioOutcome {
+        let mut o = outcome(id, Some(1.04));
+        o.scenario.arrival_rate = 500.0;
+        if let ScenarioStatus::Completed(m) = &mut o.status {
+            m.p50_ms = Some(p99 / 4.0);
+            m.p95_ms = Some(p99 / 2.0);
+            m.p99_ms = Some(p99);
+        }
+        o
     }
 
     #[test]
@@ -329,11 +425,69 @@ mod tests {
         assert!(text.contains("ranked by relative performance"));
         assert!(text.contains("+5.0%"));
         assert!(text.contains("DRAM"));
+        assert!(text.contains("p99 ms"));
         let csv = r.to_csv().to_string();
         assert_eq!(csv.lines().count(), 3); // header + 2 rows
         assert!(csv.contains("dram_infeasible"));
+        assert!(csv.contains(",stagger,arrival_rate,"));
         let j = r.summary_json();
         assert_eq!(j.req_usize("scenarios").unwrap(), 2);
+        assert_eq!(j.req_usize("serve_scenarios").unwrap(), 0);
         assert!(j.req_f64("best_gain_resnet50").unwrap() > 1.0);
+    }
+
+    #[test]
+    fn serve_rows_carry_latency_columns() {
+        let r = SweepReport { outcomes: vec![serve_outcome(0, 80.0), outcome(1, Some(1.02))] };
+        assert_eq!(r.serve_count(), 1);
+        let text = r.render();
+        assert!(text.contains("80.0"));
+        // The grid axes show up as columns: stagger name + arrival rate.
+        assert!(text.contains("uniform_phase"));
+        assert!(text.contains("500"));
+        let csv = r.to_csv().to_string();
+        // The serve row exports percentiles; the offline row leaves the
+        // latency cells empty.
+        assert!(csv.contains(",20,40,80,"));
+        assert!(csv.contains(",uniform_phase,500,"));
+        let j = r.summary_json();
+        assert_eq!(j.req_usize("serve_scenarios").unwrap(), 1);
+    }
+
+    #[test]
+    fn serve_metrics_compare_against_baseline() {
+        use crate::serve::{LatencyStats, ServeOutcome};
+        use crate::sim::BandwidthTrace;
+        use crate::util::stats::Summary;
+        let mk = |thr: f64, std: f64, p99: f64| ServeOutcome {
+            partitions: 1,
+            arrival_rate: 100.0,
+            requests: 10,
+            batches: 10,
+            mean_batch: 1.0,
+            queue_peak: 3,
+            makespan_s: 1.0,
+            throughput_ips: thr,
+            latency: LatencyStats {
+                count: 10,
+                mean_ms: p99 / 2.0,
+                p50_ms: p99 / 4.0,
+                p95_ms: p99 / 2.0,
+                p99_ms: p99,
+                max_ms: p99,
+            },
+            bw: Summary { count: 8, mean: 100.0, std, min: 0.0, max: 200.0 },
+            total_bytes: 1e9,
+            trace: BandwidthTrace::total_only(),
+        };
+        let base = mk(100.0, 50.0, 80.0);
+        let shaped = mk(108.0, 40.0, 50.0);
+        let m = SweepMetrics::from_serve(&shaped, &base);
+        assert!((m.relative_performance - 1.08).abs() < 1e-12);
+        assert!((m.std_reduction - 0.2).abs() < 1e-12);
+        assert_eq!(m.p99_ms, Some(50.0));
+        let b = SweepMetrics::serve_baseline_row(&base);
+        assert_eq!(b.relative_performance, 1.0);
+        assert_eq!(b.p99_ms, Some(80.0));
     }
 }

@@ -5,9 +5,11 @@
 //! runner fans scenarios out over a pool of `std::thread` workers in two
 //! phases:
 //!
-//! 1. **baselines** — one synchronous (n = 1) run per distinct
-//!    (model, bandwidth-scale) pair, shared by every partition count of
-//!    that pair (the same optimization `fig5` used serially);
+//! 1. **baselines** — one 1-partition run per distinct
+//!    (model, bandwidth-scale, arrival-rate) triple: the synchronous
+//!    offline baseline for rate 0, the unpartitioned serving run for
+//!    positive rates — shared by every partition count and stagger
+//!    policy of that triple;
 //! 2. **scenarios** — each grid point runs against its precomputed
 //!    baseline.
 //!
@@ -21,7 +23,8 @@ use super::grid::{Scenario, SweepGrid};
 use super::report::{ScenarioOutcome, ScenarioStatus, SweepMetrics, SweepReport};
 use crate::error::{Error, Result};
 use crate::model::Graph;
-use crate::shaping::{PartitionExperiment, ShapingAnalysis};
+use crate::serve::{ArrivalProcess, ServeOutcome, ServeSimulator};
+use crate::shaping::{PartitionExperiment, ShapingAnalysis, StaggerPolicy};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -29,8 +32,9 @@ use std::thread;
 
 /// Deterministic parallel map: applies `f` to every item on `threads`
 /// workers and returns the results in item order. The first error in
-/// item order (not completion order) is the one reported.
-fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Result<Vec<R>>
+/// item order (not completion order) is the one reported. Shared by the
+/// sweep runner and the serve-curve experiment.
+pub(crate) fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Result<Vec<R>>
 where
     T: Sync,
     R: Send,
@@ -70,6 +74,13 @@ where
     Ok(out)
 }
 
+/// A precomputed 1-partition baseline: offline shaping analysis for
+/// batch-mode scenarios, a full serving outcome for serve scenarios.
+enum Baseline {
+    Offline(ShapingAnalysis),
+    Serve(Box<ServeOutcome>),
+}
+
 /// Runs a [`SweepGrid`] across a worker pool and aggregates the ranked
 /// [`SweepReport`].
 #[derive(Debug, Clone)]
@@ -102,6 +113,17 @@ impl SweepRunner {
             .partitions(scenario.partitions)
             .steady_batches(scenario.steady_batches)
             .trace_samples(self.grid.trace_samples)
+            .stagger(scenario.stagger)
+    }
+
+    fn serve_sim(&self, scenario: &Scenario, graph: &Graph) -> ServeSimulator {
+        ServeSimulator::new(&scenario.accel(&self.grid.accel), graph)
+            .partitions(scenario.partitions)
+            .arrival(ArrivalProcess::poisson(scenario.arrival_rate))
+            .duration(self.grid.serve_duration_s)
+            .seed(self.grid.serve_seed)
+            .stagger(scenario.stagger)
+            .trace_samples(self.grid.trace_samples)
     }
 
     /// Execute the full grid and aggregate the report.
@@ -116,40 +138,88 @@ impl SweepRunner {
             graphs.insert(m.clone(), crate::model::by_name(m)?);
         }
 
-        // Phase 1: one synchronous baseline per (model, bandwidth scale).
-        let mut keys: Vec<(String, f64)> = Vec::new();
+        // Phase 1: one 1-partition baseline per distinct
+        // (model, bandwidth scale, arrival rate).
+        let mut keys: Vec<(String, f64, f64)> = Vec::new();
         for m in &self.grid.models {
             for &s in &self.grid.bandwidth_scales {
-                keys.push((m.clone(), s));
+                for &r in &self.grid.arrival_rates {
+                    // Dedup by bit pattern — the same key the baseline
+                    // map uses (f64 == would merge 0.0 and -0.0 here but
+                    // not there).
+                    let dup = keys.iter().any(|(km, ks, kr)| {
+                        km == m && ks.to_bits() == s.to_bits() && kr.to_bits() == r.to_bits()
+                    });
+                    if !dup {
+                        keys.push((m.clone(), s, r));
+                    }
+                }
             }
         }
-        let baselines_vec = parallel_map(&keys, threads, |(model, scale)| {
+        let baselines_vec = parallel_map(&keys, threads, |(model, scale, rate)| {
             let probe = Scenario {
                 id: 0,
                 model: model.clone(),
                 partitions: 1,
                 bandwidth_scale: *scale,
+                stagger: StaggerPolicy::None,
+                arrival_rate: *rate,
                 steady_batches: self.grid.steady_batches,
             };
-            self.experiment(&probe, &graphs[model]).run_baseline()
+            if probe.is_serve() {
+                let out = self.serve_sim(&probe, &graphs[model]).run()?;
+                Ok(Baseline::Serve(Box::new(out)))
+            } else {
+                Ok(Baseline::Offline(self.experiment(&probe, &graphs[model]).run_baseline()?))
+            }
         })?;
-        let baselines: BTreeMap<(String, u64), ShapingAnalysis> = keys
+        let baselines: BTreeMap<(String, u64, u64), Baseline> = keys
             .iter()
             .zip(baselines_vec)
-            .map(|((m, s), b)| ((m.clone(), s.to_bits()), b))
+            .map(|((m, s, r), b)| ((m.clone(), s.to_bits(), r.to_bits()), b))
             .collect();
 
         // Phase 2: every scenario against its shared baseline.
         let scenarios = self.grid.scenarios();
         let statuses = parallel_map(&scenarios, threads, |sc| {
-            let baseline = &baselines[&(sc.model.clone(), sc.bandwidth_scale.to_bits())];
-            if sc.partitions == 1 {
-                return Ok(ScenarioStatus::Completed(SweepMetrics::baseline_row(baseline)));
-            }
-            match self.experiment(sc, &graphs[&sc.model]).run_against(baseline) {
-                Ok(report) => Ok(ScenarioStatus::Completed(SweepMetrics::from_report(&report))),
-                Err(Error::InfeasiblePartitioning(why)) => Ok(ScenarioStatus::Infeasible(why)),
-                Err(e) => Err(e),
+            let key = (sc.model.clone(), sc.bandwidth_scale.to_bits(), sc.arrival_rate.to_bits());
+            // A 1-partition scenario IS its baseline only when the stagger
+            // is a no-op at n = 1 (None/UniformPhase both degenerate to no
+            // offset; RandomDelay still delays the single partition).
+            let is_own_baseline = sc.partitions == 1
+                && !matches!(sc.stagger, StaggerPolicy::RandomDelay { .. });
+            match (&baselines[&key], sc.is_serve()) {
+                (Baseline::Serve(base), true) => {
+                    if is_own_baseline {
+                        return Ok(ScenarioStatus::Completed(SweepMetrics::serve_baseline_row(
+                            base,
+                        )));
+                    }
+                    match self.serve_sim(sc, &graphs[&sc.model]).run() {
+                        Ok(out) => {
+                            Ok(ScenarioStatus::Completed(SweepMetrics::from_serve(&out, base)))
+                        }
+                        Err(Error::InfeasiblePartitioning(why)) => {
+                            Ok(ScenarioStatus::Infeasible(why))
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+                (Baseline::Offline(base), false) => {
+                    if is_own_baseline {
+                        return Ok(ScenarioStatus::Completed(SweepMetrics::baseline_row(base)));
+                    }
+                    match self.experiment(sc, &graphs[&sc.model]).run_against(base) {
+                        Ok(report) => {
+                            Ok(ScenarioStatus::Completed(SweepMetrics::from_report(&report)))
+                        }
+                        Err(Error::InfeasiblePartitioning(why)) => {
+                            Ok(ScenarioStatus::Infeasible(why))
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+                _ => Err(Error::SimInvariant("sweep baseline kind mismatch".into())),
             }
         })?;
 
@@ -208,9 +278,42 @@ mod tests {
         let report = SweepRunner::new(grid).threads(2).run().unwrap();
         assert_eq!(report.outcomes.len(), 3);
         assert_eq!(report.completed_count(), 3);
+        assert_eq!(report.serve_count(), 0);
         // The n = 1 row is the baseline itself.
         let base = report.outcomes[0].metrics().unwrap();
         assert!((base.relative_performance - 1.0).abs() < 1e-12);
         assert_eq!(base.smoothness_cov, base.baseline_cov);
+        assert_eq!(base.p99_ms, None);
+    }
+
+    #[test]
+    fn mixed_offline_and_serve_grid_runs() {
+        let grid = SweepGrid::new(&AcceleratorConfig::knl_7210())
+            .models(vec!["tiny"])
+            .partitions(vec![1, 2])
+            .bandwidth_scales(vec![1.0])
+            .arrival_rates(vec![0.0, 5000.0])
+            .steady_batches(2)
+            .serve_duration(0.01)
+            .trace_samples(32);
+        let report = SweepRunner::new(grid).threads(2).run().unwrap();
+        assert_eq!(report.outcomes.len(), 4);
+        assert_eq!(report.completed_count(), 4);
+        assert_eq!(report.serve_count(), 2);
+        // Offline rows have no latency columns; serve rows do.
+        for o in &report.outcomes {
+            let m = o.metrics().unwrap();
+            assert_eq!(o.scenario.is_serve(), m.p99_ms.is_some(), "{}", o.scenario.label());
+            if o.scenario.is_serve() {
+                assert!(m.p99_ms.unwrap() > 0.0);
+            }
+        }
+        // The serve n = 1 row is its own baseline.
+        let serve_base = report
+            .outcomes
+            .iter()
+            .find(|o| o.scenario.is_serve() && o.scenario.partitions == 1)
+            .unwrap();
+        assert!((serve_base.metrics().unwrap().relative_performance - 1.0).abs() < 1e-12);
     }
 }

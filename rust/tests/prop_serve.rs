@@ -1,0 +1,231 @@
+//! Property tests over the dynamic (serving) engine mode and the serve
+//! pipeline, using the in-tree proptest-lite harness: byte conservation,
+//! bandwidth feasibility and monotone event/job times under randomized
+//! request workloads, plus seed-determinism of the latency percentiles.
+
+use std::sync::Arc;
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::tiny_cnn;
+use trafficshape::reuse::{Phase, PhaseClass};
+use trafficshape::serve::{ArrivalProcess, ServeSimulator};
+use trafficshape::sim::{DynJob, DynNext, SimEngine, WorkSource};
+use trafficshape::util::proptest_lite::{check, no_shrink, shrink_vec, Config};
+use trafficshape::util::rng::Xoshiro256StarStar;
+use trafficshape::util::units::{Bytes, BytesPerS, Flops, FlopsPerS};
+
+fn toy_accel(cores: usize) -> AcceleratorConfig {
+    let mut a = AcceleratorConfig::knl_7210();
+    a.cores = cores;
+    a.core_flops = FlopsPerS(1.0);
+    a.mem_bw = BytesPerS(50.0);
+    a.conv_efficiency = 1.0;
+    a.elementwise_efficiency = 1.0;
+    a
+}
+
+fn phase(flops: f64, bytes: f64) -> Phase {
+    Phase {
+        name: String::new(),
+        layer_id: 0,
+        class: PhaseClass::ComputeDense,
+        flops: Flops(flops),
+        bytes: Bytes(bytes),
+    }
+}
+
+/// One scripted request stream per partition: (release time, program).
+type PartitionScript = Vec<(f64, Vec<(f64, f64)>)>;
+
+/// Pull-based source replaying per-partition scripts in order.
+struct ScriptSource {
+    scripts: Vec<PartitionScript>,
+    cursor: Vec<usize>,
+    next_id: u64,
+}
+
+impl ScriptSource {
+    fn new(scripts: Vec<PartitionScript>) -> Self {
+        let cursor = vec![0; scripts.len()];
+        Self { scripts, cursor, next_id: 0 }
+    }
+}
+
+impl WorkSource for ScriptSource {
+    fn next(&mut self, partition: usize, now: f64) -> DynNext {
+        let k = self.cursor[partition];
+        match self.scripts[partition].get(k) {
+            None => DynNext::Finished,
+            Some((release, prog)) => {
+                if *release > now {
+                    DynNext::IdleUntil(*release)
+                } else {
+                    self.cursor[partition] += 1;
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    let phases = prog.iter().map(|&(f, b)| phase(f, b)).collect();
+                    DynNext::Job(DynJob { id, phases: Arc::new(phases) })
+                }
+            }
+        }
+    }
+}
+
+/// Random scripts: 1–3 partitions, each 0–5 jobs of 1–4 phases with
+/// mixed compute/memory weight and release times in [0, 2).
+fn gen_scripts(rng: &mut Xoshiro256StarStar) -> Vec<PartitionScript> {
+    let parts = rng.range_u64(1, 3) as usize;
+    (0..parts)
+        .map(|_| {
+            let jobs = rng.range_u64(0, 5) as usize;
+            let mut t = 0.0;
+            (0..jobs)
+                .map(|_| {
+                    t += rng.range_f64(0.0, 1.0);
+                    let phases = (0..rng.range_u64(1, 4))
+                        .map(|_| (rng.range_f64(0.0, 10.0), rng.range_f64(0.0, 100.0)))
+                        .collect();
+                    (t, phases)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_dynamic_runs_conserve_and_stay_feasible() {
+    check(
+        &Config { cases: 60, seed: 0x5EED, max_shrink_steps: 100 },
+        "dynamic serve runs conserve bytes and respect peak bandwidth",
+        gen_scripts,
+        shrink_vec,
+        |scripts| {
+            if scripts.is_empty() {
+                return Ok(());
+            }
+            let accel = toy_accel(4);
+            let cores = vec![1usize; scripts.len()];
+            let total_jobs: usize = scripts.iter().map(|s| s.len()).sum();
+            let mut src = ScriptSource::new(scripts.clone());
+            let out = SimEngine::new(&accel)
+                .run_dynamic(&cores, &mut src)
+                .map_err(|e| e.to_string())?;
+            out.validate().map_err(|e| e.to_string())?;
+            if out.jobs.len() != total_jobs {
+                return Err(format!("{} jobs recorded of {total_jobs}", out.jobs.len()));
+            }
+            // Bandwidth feasibility + monotone event time, segment by
+            // segment.
+            let mut prev_end = f64::NEG_INFINITY;
+            for (t0, t1, bw) in out.trace.total.segments() {
+                if t1 <= t0 {
+                    return Err(format!("non-monotone segment [{t0}, {t1})"));
+                }
+                if t0 < prev_end - 1e-12 {
+                    return Err(format!("segment overlaps previous end {prev_end}: {t0}"));
+                }
+                prev_end = t1;
+                if bw > accel.mem_bw.0 * (1.0 + 1e-9) {
+                    return Err(format!("bw {bw} exceeds peak in [{t0}, {t1})"));
+                }
+            }
+            // Per-partition job records must be sequential and gated by
+            // their release times.
+            for (p, script) in scripts.iter().enumerate() {
+                let jobs = out.jobs_of(p);
+                let mut prev_finish = 0.0f64;
+                for (k, job) in jobs.iter().enumerate() {
+                    if job.finished_at < job.started_at {
+                        return Err(format!("job {} runs backwards", job.id));
+                    }
+                    if job.started_at + 1e-9 < prev_finish {
+                        return Err(format!(
+                            "partition {p} job {k} starts before its predecessor ends"
+                        ));
+                    }
+                    if job.started_at + 1e-9 < script[k].0 {
+                        return Err(format!("partition {p} job {k} started before release"));
+                    }
+                    prev_finish = job.finished_at;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_serve_percentiles_are_seed_deterministic() {
+    check(
+        &Config { cases: 12, seed: 0xD1CE, max_shrink_steps: 0 },
+        "serve latency percentiles are a pure function of the seed",
+        |rng| {
+            let rate = rng.range_f64(500.0, 8000.0);
+            let partitions = [1usize, 2, 4][rng.next_below(3) as usize];
+            let seed = rng.next_u64();
+            (rate, partitions, seed)
+        },
+        no_shrink,
+        |&(rate, partitions, seed)| {
+            let accel = AcceleratorConfig::knl_7210();
+            let graph = tiny_cnn();
+            let run = || {
+                ServeSimulator::new(&accel, &graph)
+                    .partitions(partitions)
+                    .arrival(ArrivalProcess::poisson(rate))
+                    .duration(0.02)
+                    .seed(seed)
+                    .trace_samples(32)
+                    .run()
+                    .map_err(|e| e.to_string())
+            };
+            let a = run()?;
+            let b = run()?;
+            if a.latency != b.latency {
+                return Err(format!("latency differs: {:?} vs {:?}", a.latency, b.latency));
+            }
+            if a.requests != b.requests || a.makespan_s != b.makespan_s {
+                return Err("stream or makespan differs across identical runs".into());
+            }
+            // Ordering sanity on every random configuration.
+            let l = &a.latency;
+            if l.p50_ms > l.p95_ms || l.p95_ms > l.p99_ms || l.p99_ms > l.max_ms {
+                return Err(format!("percentiles out of order: {l:?}"));
+            }
+            if l.count != a.requests {
+                return Err(format!("{} latencies for {} requests", l.count, a.requests));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_serve_drains_every_request() {
+    check(
+        &Config { cases: 10, seed: 0xFEED, max_shrink_steps: 0 },
+        "open-loop serving never drops a request",
+        |rng| (rng.range_f64(1000.0, 20_000.0), rng.next_u64()),
+        no_shrink,
+        |&(rate, seed)| {
+            let accel = AcceleratorConfig::knl_7210();
+            let out = ServeSimulator::new(&accel, &tiny_cnn())
+                .partitions(2)
+                .arrival(ArrivalProcess::poisson(rate))
+                .duration(0.01)
+                .seed(seed)
+                .trace_samples(16)
+                .run()
+                .map_err(|e| e.to_string())?;
+            if out.latency.count != out.requests {
+                return Err(format!("served {} of {}", out.latency.count, out.requests));
+            }
+            if out.requests > 0 && out.makespan_s <= 0.0 {
+                return Err("served requests but zero makespan".into());
+            }
+            if out.mean_batch < 1.0 && out.requests > 0 {
+                return Err(format!("mean batch {} < 1", out.mean_batch));
+            }
+            Ok(())
+        },
+    );
+}
