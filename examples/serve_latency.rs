@@ -24,6 +24,9 @@ fn main() -> std::process::ExitCode {
         .opt("seed", "N", Some("42"), "arrival-stream rng seed")
         .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
         .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
+        .opt("queue-cap", "N", Some("0"), "per-partition queue bound (0 = unbounded)")
+        .opt("slo-ms", "MS", Some("0"), "latency deadline; stale work is shed (0 = none)")
+        .opt("batch-timeout", "MS", Some("0"), "hold under-filled batches (0 = on idle)")
         .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
         .opt("accel", "NAME", Some("knl_7210"), "accelerator preset");
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -36,29 +39,35 @@ fn main() -> std::process::ExitCode {
     };
 
     let run = || -> trafficshape::error::Result<()> {
-        let accel = AcceleratorConfig::preset(m.get("accel").unwrap())?;
-        let graph = model::by_name(m.get("model").unwrap())?;
-        let burstiness = m.get_f64("burstiness")?.unwrap();
-        let arrival = ArrivalKind::from_name(m.get("arrival").unwrap(), burstiness)?;
+        let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
+        let graph = model::by_name(m.get("model").unwrap_or("resnet50"))?;
+        let burstiness = m.get_f64("burstiness")?.unwrap_or(4.0);
+        let arrival = ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?;
         let cap = roofline_capacity_ips(&accel, &graph);
         println!("{}: synchronous roofline capacity ≈ {cap:.0} img/s", graph.name);
 
         let mut exp = ServeExperiment::new(&accel, &graph)
-            .partitions(m.get_usize_list("partitions")?.unwrap())
+            .partitions(m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4]))
             .arrival(arrival)
-            .duration(m.get_f64("duration")?.unwrap())
-            .seed(m.get_usize("seed")?.unwrap() as u64)
-            .threads(m.get_usize("threads")?.unwrap());
+            .duration(m.get_f64("duration")?.unwrap_or(0.5))
+            .seed(m.get_usize("seed")?.unwrap_or(42) as u64)
+            .queue_cap(m.get_usize("queue-cap")?.unwrap_or(0))
+            .slo_ms(m.get_f64("slo-ms")?.unwrap_or(0.0))
+            .batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
+            .threads(m.get_usize("threads")?.unwrap_or(0));
         if let Some(rates) = m.get_f64_list("rate")? {
             exp = exp.rates(rates);
         }
         let curve = exp.run()?;
         print!("{}", curve.render());
-        if let Some(best) = curve.best_at_peak() {
-            let o = best.outcome().expect("best point is completed");
+        if let Some(o) = curve.best_at_peak().and_then(|best| best.outcome()) {
             println!(
-                "→ at peak load, {} partition(s) give p99 {:.1} ms at {:.0} img/s",
-                best.partitions, o.latency.p99_ms, o.throughput_ips
+                "→ at peak load, {} partition(s) give p99 {:.1} ms at {:.0} img/s \
+                 ({:.1}% dropped)",
+                o.partitions,
+                o.latency.p99_ms,
+                o.throughput_ips,
+                o.drop_rate * 100.0
             );
         }
         Ok(())

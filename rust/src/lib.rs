@@ -78,8 +78,8 @@ pub mod prelude {
     };
     pub use crate::reuse::{BlockingOptimizer, LayerTraffic, Phase, PhaseCompiler};
     pub use crate::serve::{
-        ArrivalProcess, DispatchPolicy, LatencyStats, ServeCurve, ServeExperiment, ServeOutcome,
-        ServeSimulator,
+        ArrivalProcess, BatchPolicy, DispatchPolicy, LatencyStats, QueueConfig, ServeCurve,
+        ServeExperiment, ServeOutcome, ServeSimulator,
     };
     pub use crate::shaping::{PartitionExperiment, PartitionPlan, ShapingAnalysis, StaggerPolicy};
     pub use crate::sim::{BandwidthTrace, SimEngine, SimOutcome, Workload};

@@ -42,6 +42,9 @@ fn app() -> App {
                 .opt("staggers", "LIST", Some("uniform_phase"), "stagger policies to sweep")
                 .opt("serve-duration", "S", Some("0.25"), "arrival window for serve rows")
                 .opt("seed", "N", Some("42"), "serve arrival-stream seed")
+                .opt("queue-cap", "N", Some("0"), "serve rows: queue bound (0 = unbounded)")
+                .opt("slo-ms", "MS", Some("0"), "serve rows: latency deadline (0 = none)")
+                .opt("batch-timeout", "MS", Some("0"), "serve rows: batch hold (0 = on idle)")
                 .opt("batches", "N", Some("6"), "steady-state batches")
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
                 .opt("out", "DIR", None, "also write the grid CSV to this directory")
@@ -56,6 +59,9 @@ fn app() -> App {
                 .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
                 .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
                 .opt("stagger", "NAME", Some("uniform_phase"), "none|uniform_phase|random_delay")
+                .opt("queue-cap", "N", Some("0"), "per-partition queue bound (0 = unbounded)")
+                .opt("slo-ms", "MS", Some("0"), "latency deadline; stale work is shed (0 = none)")
+                .opt("batch-timeout", "MS", Some("0"), "hold under-filled batches (0 = on idle)")
                 .opt("samples", "N", Some("400"), "trace samples")
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
                 .opt("out", "DIR", None, "also write serve_curve.csv + serve_summary.json here")
@@ -168,6 +174,9 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
         .arrival_rates(rates)
         .serve_duration(m.get_f64("serve-duration")?.unwrap_or(0.25))
         .serve_seed(seed)
+        .serve_queue_cap(m.get_usize("queue-cap")?.unwrap_or(0))
+        .serve_slo_ms(m.get_f64("slo-ms")?.unwrap_or(0.0))
+        .serve_batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
         .steady_batches(batches);
     let total = grid.len();
     let runner = SweepRunner::new(grid).threads(threads);
@@ -213,6 +222,9 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         .seed(seed)
         .policy(policy)
         .stagger(stagger)
+        .queue_cap(m.get_usize("queue-cap")?.unwrap_or(0))
+        .slo_ms(m.get_f64("slo-ms")?.unwrap_or(0.0))
+        .batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
         .trace_samples(m.get_usize("samples")?.unwrap_or(400))
         .threads(m.get_usize("threads")?.unwrap_or(0));
     if let Some(rates) = m.get_f64_list("rate")? {
@@ -221,11 +233,15 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     let curve = exp.run()?;
 
     print!("{}", curve.render());
-    if let Some(best) = curve.best_at_peak() {
-        let o = best.outcome().expect("best point is completed");
+    if let Some(o) = curve.best_at_peak().and_then(|best| best.outcome()) {
         println!(
-            "→ at peak rate {:.0} img/s: {} partition(s) hit p99 {:.1} ms ({:.0} img/s served)",
-            best.rate, best.partitions, o.latency.p99_ms, o.throughput_ips
+            "→ at peak rate {:.0} img/s: {} partition(s) hit p99 {:.1} ms \
+             ({:.0} img/s served, {:.1}% dropped)",
+            o.arrival_rate,
+            o.partitions,
+            o.latency.p99_ms,
+            o.throughput_ips,
+            o.drop_rate * 100.0
         );
     }
     if let Some(dir) = m.get("out") {

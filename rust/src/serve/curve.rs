@@ -90,6 +90,9 @@ pub struct ServeExperiment {
     seed: u64,
     policy: DispatchPolicy,
     stagger: StaggerPolicy,
+    queue_cap: usize,
+    slo_ms: f64,
+    batch_timeout_ms: f64,
     trace_samples: usize,
     threads: usize,
 }
@@ -106,6 +109,9 @@ impl ServeExperiment {
             seed: 42,
             policy: DispatchPolicy::ShortestQueue,
             stagger: StaggerPolicy::UniformPhase,
+            queue_cap: 0,
+            slo_ms: 0.0,
+            batch_timeout_ms: 0.0,
             trace_samples: 400,
             threads: 0,
         }
@@ -146,6 +152,24 @@ impl ServeExperiment {
 
     pub fn stagger(mut self, s: StaggerPolicy) -> Self {
         self.stagger = s;
+        self
+    }
+
+    /// Per-partition queue bound for every grid point (0 = unbounded).
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Per-request latency deadline in milliseconds (0 = none).
+    pub fn slo_ms(mut self, ms: f64) -> Self {
+        self.slo_ms = ms;
+        self
+    }
+
+    /// Batch hold timeout in milliseconds (0 = dispatch on idle).
+    pub fn batch_timeout_ms(mut self, ms: f64) -> Self {
+        self.batch_timeout_ms = ms;
         self
     }
 
@@ -198,6 +222,9 @@ impl ServeExperiment {
                 .seed(self.seed)
                 .policy(self.policy)
                 .stagger(self.stagger)
+                .queue_cap(self.queue_cap)
+                .slo_ms(self.slo_ms)
+                .batch_timeout_ms(self.batch_timeout_ms)
                 .trace_samples(self.trace_samples);
             match sim.run() {
                 Ok(out) => Ok(ServePointStatus::Completed(out)),
@@ -242,12 +269,15 @@ impl ServeCurve {
         let peak = self.points.iter().map(|p| p.rate).fold(f64::NEG_INFINITY, f64::max);
         self.points
             .iter()
-            .filter(|p| p.rate == peak && p.outcome().is_some())
-            .min_by(|a, b| {
-                let pa = a.outcome().unwrap().latency.p99_ms;
-                let pb = b.outcome().unwrap().latency.p99_ms;
-                pa.partial_cmp(&pb).unwrap().then(a.partitions.cmp(&b.partitions))
+            .filter(|p| p.rate == peak)
+            .filter_map(|p| p.outcome().map(|o| (p, o)))
+            .min_by(|(pa, oa), (pb, ob)| {
+                oa.latency
+                    .p99_ms
+                    .total_cmp(&ob.latency.p99_ms)
+                    .then(pa.partitions.cmp(&pb.partitions))
             })
+            .map(|(p, _)| p)
     }
 
     /// Throughput–latency table (the `serve` CLI's output).
@@ -256,8 +286,10 @@ impl ServeCurve {
             "rate",
             "n",
             "req",
+            "drop %",
             "batch",
             "thr (img/s)",
+            "goodput",
             "p50 ms",
             "p95 ms",
             "p99 ms",
@@ -270,26 +302,28 @@ impl ServeCurve {
                     format!("{:.0}", p.rate),
                     p.partitions.to_string(),
                     o.requests.to_string(),
+                    format!("{:.1}", o.drop_rate * 100.0),
                     format!("{:.1}", o.mean_batch),
                     format!("{:.0}", o.throughput_ips),
+                    format!("{:.0}", o.goodput_ips),
                     format!("{:.1}", o.latency.p50_ms),
                     format!("{:.1}", o.latency.p95_ms),
                     format!("{:.1}", o.latency.p99_ms),
                     format!("{:.1}", o.bw.mean),
                     format!("{:.3}", o.bw.cov()),
                 ]),
-                None => t.row(vec![
-                    format!("{:.0}", p.rate),
-                    p.partitions.to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "infeasible".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                ]),
+                None => {
+                    let mut row = vec![
+                        format!("{:.0}", p.rate),
+                        p.partitions.to_string(),
+                        "-".to_string(),
+                        "-".to_string(),
+                        "-".to_string(),
+                        "infeasible".to_string(),
+                    ];
+                    row.extend((0..6).map(|_| "-".to_string()));
+                    t.row(row)
+                }
             };
         }
         t.title(&format!(
@@ -307,11 +341,15 @@ impl ServeCurve {
             "partitions",
             "status",
             "requests",
+            "served",
+            "dropped",
+            "drop_rate",
             "batches",
             "mean_batch",
             "queue_peak",
             "makespan_s",
             "throughput_ips",
+            "goodput_ips",
             "p50_ms",
             "p95_ms",
             "p99_ms",
@@ -328,11 +366,15 @@ impl ServeCurve {
                 ServePointStatus::Completed(o) => vec![
                     "ok".to_string(),
                     o.requests.to_string(),
+                    o.served.to_string(),
+                    o.dropped.to_string(),
+                    f(o.drop_rate),
                     o.batches.to_string(),
                     f(o.mean_batch),
                     o.queue_peak.to_string(),
                     f(o.makespan_s),
                     f(o.throughput_ips),
+                    f(o.goodput_ips),
                     f(o.latency.p50_ms),
                     f(o.latency.p95_ms),
                     f(o.latency.p99_ms),
@@ -344,7 +386,7 @@ impl ServeCurve {
                 ],
                 ServePointStatus::Infeasible(why) => {
                     let mut v = vec!["infeasible".to_string()];
-                    v.extend((0..13).map(|_| String::new()));
+                    v.extend((0..17).map(|_| String::new()));
                     v.push(why.clone());
                     v
                 }
@@ -364,15 +406,18 @@ impl ServeCurve {
             .with("completed", completed)
             .with("infeasible", self.points.len() - completed);
         if let Some(best) = self.best_at_peak() {
-            let o = best.outcome().unwrap();
-            j.set(
-                "best_at_peak",
-                Json::obj()
-                    .with("rate", best.rate)
-                    .with("partitions", best.partitions)
-                    .with("p99_ms", o.latency.p99_ms)
-                    .with("throughput_ips", o.throughput_ips),
-            );
+            if let Some(o) = best.outcome() {
+                j.set(
+                    "best_at_peak",
+                    Json::obj()
+                        .with("rate", best.rate)
+                        .with("partitions", best.partitions)
+                        .with("p99_ms", o.latency.p99_ms)
+                        .with("throughput_ips", o.throughput_ips)
+                        .with("goodput_ips", o.goodput_ips)
+                        .with("drop_rate", o.drop_rate),
+                );
+            }
         }
         j
     }
@@ -415,13 +460,41 @@ mod tests {
         let c = curve();
         let text = c.render();
         assert!(text.contains("p99 ms"));
+        assert!(text.contains("drop %"));
+        assert!(text.contains("goodput"));
         assert!(text.contains("infeasible"));
         let csv = c.to_csv().to_string();
         assert_eq!(csv.lines().count(), 7); // header + 6 points
         assert!(csv.starts_with("rate,partitions,status"));
+        assert!(csv.contains(",drop_rate,"));
+        assert!(csv.contains(",goodput_ips,"));
         let j = c.summary_json();
         assert_eq!(j.req_usize("points").unwrap(), 6);
         assert_eq!(j.req_usize("infeasible").unwrap(), 2);
+        assert!(j.get("best_at_peak").is_some());
+    }
+
+    #[test]
+    fn overload_grid_reports_drops_and_goodput() {
+        // A flood far above capacity with bounded queues + SLO: the grid
+        // must report load shedding, not just latency.
+        let accel = AcceleratorConfig::knl_7210();
+        let c = ServeExperiment::new(&accel, &tiny_cnn())
+            .partitions(vec![1])
+            .rates(vec![1e7])
+            .duration(5e-4)
+            .seed(9)
+            .queue_cap(8)
+            .slo_ms(50.0)
+            .trace_samples(16)
+            .threads(1)
+            .run()
+            .unwrap();
+        let o = c.at(1e7, 1).unwrap();
+        assert!(o.dropped > 0, "overload with a bounded queue must drop");
+        assert_eq!(o.served + o.dropped, o.requests);
+        assert!(o.goodput_ips <= o.throughput_ips + 1e-9);
+        let j = c.summary_json();
         assert!(j.get("best_at_peak").is_some());
     }
 

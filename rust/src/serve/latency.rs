@@ -1,17 +1,30 @@
-//! Request-latency recording and percentile statistics.
+//! Request-latency recording, drop accounting and percentile statistics.
 //!
 //! Serving quality is a tail story: the paper's makespan/σ metrics say
 //! nothing about the p99 a user sees when bursts pile onto a queue. The
 //! recorder collects per-request sojourn times (arrival → batch
 //! completion) and reduces them to the p50/p95/p99 summary every serve
-//! report, sweep column and CLI table uses.
+//! report, sweep column and CLI table uses. Under overload control it
+//! also counts what was *not* served: dropped requests and SLO misses,
+//! so goodput (served within deadline) is a first-class metric rather
+//! than an unbounded-latency artifact.
 
 use crate::util::stats::{percentile, Summary};
 
 /// Percentile summary of one run's request latencies (milliseconds).
+///
+/// `count` covers served requests only; `dropped` requests have no
+/// latency sample. When every request is dropped the percentile fields
+/// are the documented all-zero sentinel (never a panic).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencyStats {
+    /// Served requests (latency samples).
     pub count: usize,
+    /// Requests dropped by admission control or deadline shedding.
+    pub dropped: usize,
+    /// Served requests that met the SLO deadline (== `count` without an
+    /// SLO).
+    pub slo_hits: usize,
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -20,17 +33,47 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
-    /// The all-zero summary of an empty run.
+    /// The all-zero summary of an empty run — also the documented
+    /// sentinel when every request was dropped (percentiles of nothing).
     pub fn zero() -> Self {
-        Self { count: 0, mean_ms: 0.0, p50_ms: 0.0, p95_ms: 0.0, p99_ms: 0.0, max_ms: 0.0 }
+        Self {
+            count: 0,
+            dropped: 0,
+            slo_hits: 0,
+            mean_ms: 0.0,
+            p50_ms: 0.0,
+            p95_ms: 0.0,
+            p99_ms: 0.0,
+            max_ms: 0.0,
+        }
+    }
+
+    /// Requests that arrived: served + dropped.
+    pub fn arrived(&self) -> usize {
+        self.count + self.dropped
+    }
+
+    /// Fraction of arrivals that were dropped (0 when nothing arrived).
+    pub fn drop_rate(&self) -> f64 {
+        let arrived = self.arrived();
+        if arrived > 0 {
+            self.dropped as f64 / arrived as f64
+        } else {
+            0.0
+        }
     }
 }
 
-/// Accumulates per-request sojourn times.
+/// Accumulates per-request sojourn times and drop counts.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRecorder {
     /// Sojourn times in seconds, in completion-record order.
     samples_s: Vec<f64>,
+    /// Latency deadline for goodput accounting; `None` counts every
+    /// served request as an SLO hit.
+    slo_s: Option<f64>,
+    dropped: usize,
+    slo_hits: usize,
 }
 
 impl LatencyRecorder {
@@ -38,13 +81,28 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// A recorder that scores served requests against a deadline.
+    pub fn with_slo(slo_s: f64) -> Self {
+        Self { slo_s: Some(slo_s), ..Self::default() }
+    }
+
     /// Record one request served: admitted at `arrival_s`, its batch
     /// finished at `finish_s`. Clamps tiny negative float noise to 0.
     pub fn record(&mut self, arrival_s: f64, finish_s: f64) {
         debug_assert!(finish_s >= arrival_s - 1e-9, "finish {finish_s} < arrival {arrival_s}");
-        self.samples_s.push((finish_s - arrival_s).max(0.0));
+        let sojourn = (finish_s - arrival_s).max(0.0);
+        if self.slo_s.map_or(true, |slo| sojourn <= slo) {
+            self.slo_hits += 1;
+        }
+        self.samples_s.push(sojourn);
     }
 
+    /// Record requests that were dropped instead of served.
+    pub fn record_drops(&mut self, n: usize) {
+        self.dropped += n;
+    }
+
+    /// Served requests recorded so far.
     pub fn len(&self) -> usize {
         self.samples_s.len()
     }
@@ -54,15 +112,20 @@ impl LatencyRecorder {
     }
 
     /// Reduce to the percentile summary (sorts a copy; O(n log n)).
+    /// With zero served requests — e.g. every request dropped under
+    /// overload — the percentile fields are the zero sentinel and only
+    /// the drop count is populated; this never panics.
     pub fn stats(&self) -> LatencyStats {
         if self.samples_s.is_empty() {
-            return LatencyStats::zero();
+            return LatencyStats { dropped: self.dropped, ..LatencyStats::zero() };
         }
         let mut sorted = self.samples_s.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let s = Summary::of(&sorted);
         LatencyStats {
             count: s.count,
+            dropped: self.dropped,
+            slo_hits: self.slo_hits,
             mean_ms: s.mean * 1e3,
             p50_ms: percentile(&sorted, 50.0) * 1e3,
             p95_ms: percentile(&sorted, 95.0) * 1e3,
@@ -92,6 +155,8 @@ mod tests {
         }
         let s = r.stats();
         assert_eq!(s.count, 100);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.slo_hits, 100, "no SLO means every request hits it");
         assert!((s.mean_ms - 50.5).abs() < 1e-9);
         assert!((s.p50_ms - 50.5).abs() < 1e-9);
         assert!((s.p95_ms - 95.05).abs() < 1e-9);
@@ -107,5 +172,32 @@ mod tests {
         let s = r.stats();
         assert_eq!(s.count, 1);
         assert!((s.p99_ms - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_dropped_yields_the_zero_sentinel_not_a_panic() {
+        let mut r = LatencyRecorder::with_slo(0.01);
+        r.record_drops(7);
+        let s = r.stats();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.dropped, 7);
+        assert_eq!(s.arrived(), 7);
+        assert!((s.drop_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(s.p99_ms, 0.0, "documented sentinel for an all-dropped run");
+    }
+
+    #[test]
+    fn slo_hits_split_on_the_deadline() {
+        let mut r = LatencyRecorder::with_slo(0.1);
+        r.record(0.0, 0.05); // hit
+        r.record(0.0, 0.1); // exactly on the deadline: hit
+        r.record(0.0, 0.3); // miss (served late)
+        r.record_drops(2);
+        let s = r.stats();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.slo_hits, 2);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.arrived(), 5);
+        assert!((s.drop_rate() - 0.4).abs() < 1e-12);
     }
 }

@@ -6,16 +6,20 @@
 //!
 //! * [`ArrivalProcess`] — seeded open-loop arrivals: Poisson, or bursty
 //!   2-state MMPP at the same long-run mean rate;
-//! * [`DispatchPolicy`] / [`ServeController`] — per-partition admission
-//!   queues with dynamic batching, compiled into exact-batch-size phase
-//!   programs by the reuse model's [`crate::reuse::PhaseCompiler`];
+//! * [`DispatchPolicy`] / [`QueueConfig`] / [`ServeController`] —
+//!   per-partition admission queues with dynamic batching, compiled into
+//!   exact-batch-size phase programs by the reuse model's
+//!   [`crate::reuse::PhaseCompiler`]; overload is first-class: bounded
+//!   queues drop at admission, SLO deadlines shed stale work, and
+//!   [`BatchPolicy`] trades batch fill against hold latency;
 //! * [`ServeSimulator`] — drives the queues through the fluid engine's
 //!   dynamic mode ([`crate::sim::SimEngine::run_dynamic`]), so bandwidth
 //!   contention between partitions mid-burst shapes every service time;
 //! * [`LatencyRecorder`] / [`LatencyStats`] — per-request sojourn times
-//!   reduced to p50/p95/p99;
+//!   reduced to p50/p95/p99, plus drop and goodput accounting;
 //! * [`ServeExperiment`] / [`ServeCurve`] — parallel (rate × partitions)
-//!   grids producing deterministic throughput–latency tradeoff curves.
+//!   grids producing deterministic throughput–latency tradeoff curves
+//!   with drop-rate and goodput columns.
 
 mod arrival;
 mod curve;
@@ -28,5 +32,5 @@ pub use curve::{
     ArrivalKind, ServeCurve, ServeExperiment, ServePoint, ServePointStatus, DEFAULT_MEAN_BURST_S,
 };
 pub use latency::{LatencyRecorder, LatencyStats};
-pub use queue::{BatchRecord, DispatchPolicy, ServeController};
+pub use queue::{BatchPolicy, BatchRecord, DispatchPolicy, QueueConfig, ServeController};
 pub use simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};

@@ -1,4 +1,4 @@
-//! Request admission, routing and dynamic batching.
+//! Request admission, routing, dynamic batching and overload control.
 //!
 //! The [`ServeController`] is the glue between an arrival stream and the
 //! fluid engine's dynamic mode: it implements [`WorkSource`], so each
@@ -8,6 +8,21 @@
 //! dynamically — an idle partition takes `min(queue length, max_batch)`
 //! requests and runs the phase program compiled for exactly that batch
 //! size, so small batches pay their true (weight-heavy) traffic cost.
+//!
+//! Overload is first-class, not a latency artifact:
+//!
+//! * **bounded queues** — [`QueueConfig::queue_cap`] drops arrivals that
+//!   find every open partition full (admission control), so backlog
+//!   cannot grow without bound;
+//! * **SLO shedding** — with [`QueueConfig::slo_s`], queued requests that
+//!   have already missed their deadline are shed at dispatch time
+//!   instead of wasting a batch slot on a guaranteed SLO miss;
+//! * **batch timeouts** — [`BatchPolicy::DispatchOnDeadline`] holds an
+//!   under-filled batch while more work can still join in time, fixing
+//!   the under-batching of the dispatch-on-idle default at moderate load;
+//! * **burst-aware stagger** — with [`QueueConfig::rearm_idle_s`], the
+//!   start gates re-arm after a partition-wide lull, so a burst arriving
+//!   after a long idle gap still meets de-synchronized partitions.
 
 use crate::error::{Error, Result};
 use crate::reuse::Phase;
@@ -43,6 +58,83 @@ impl DispatchPolicy {
     }
 }
 
+/// When a partition with queued-but-few requests dispatches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    /// Dispatch whatever is queued the moment the partition frees up.
+    /// Simple, but under-batches at moderate load: a freshly idle
+    /// partition grabs a 1-request batch and pays the full weight-traffic
+    /// premium for it.
+    DispatchOnIdle,
+    /// Hold an under-filled batch while the stream can still deliver more
+    /// requests, dispatching once the batch fills or the oldest queued
+    /// request has waited `hold_s` — the deadline-style timeout batching
+    /// of serving systems like Clipper.
+    DispatchOnDeadline {
+        /// Longest a queued request may wait for co-batching (seconds).
+        hold_s: f64,
+    },
+}
+
+impl BatchPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicy::DispatchOnIdle => "dispatch_on_idle",
+            BatchPolicy::DispatchOnDeadline { .. } => "dispatch_on_deadline",
+        }
+    }
+
+    /// CLI mapping: a timeout of 0 ms is dispatch-on-idle, anything
+    /// positive holds batches up to that long.
+    pub fn from_timeout_ms(ms: f64) -> Result<Self> {
+        if !ms.is_finite() || ms < 0.0 {
+            return Err(Error::Usage(format!("batch timeout must be finite and >= 0 ms: {ms}")));
+        }
+        if ms == 0.0 {
+            Ok(BatchPolicy::DispatchOnIdle)
+        } else {
+            Ok(BatchPolicy::DispatchOnDeadline { hold_s: ms / 1e3 })
+        }
+    }
+}
+
+/// Everything that shapes how the controller queues and dispatches.
+#[derive(Debug, Clone)]
+pub struct QueueConfig {
+    /// How arrivals are routed to partition queues.
+    pub policy: DispatchPolicy,
+    /// Partition `i` may not dispatch its first batch before `gates[i]`
+    /// (the deployment-time stagger). Also the per-partition offsets
+    /// reused when gates re-arm after a lull.
+    pub gates: Vec<f64>,
+    /// Per-partition queue bound; `None` is the legacy unbounded queue.
+    pub queue_cap: Option<usize>,
+    /// Per-request latency deadline; queued requests already past it are
+    /// shed at dispatch time. `None` disables shedding.
+    pub slo_s: Option<f64>,
+    /// Batching timeout policy.
+    pub batch: BatchPolicy,
+    /// Re-arm the stagger gates when a burst arrives after a
+    /// partition-wide idle gap longer than this. `None` keeps the legacy
+    /// t = 0-only gates.
+    pub rearm_idle_s: Option<f64>,
+}
+
+impl QueueConfig {
+    /// The legacy open-loop configuration: unbounded queues, no SLO,
+    /// dispatch on idle, gates applied at t = 0 only.
+    pub fn new(policy: DispatchPolicy, gates: Vec<f64>) -> Self {
+        Self {
+            policy,
+            gates,
+            queue_cap: None,
+            slo_s: None,
+            batch: BatchPolicy::DispatchOnIdle,
+            rearm_idle_s: None,
+        }
+    }
+}
+
 /// One dispatched batch: which requests it carried and when it left.
 #[derive(Debug, Clone)]
 pub struct BatchRecord {
@@ -53,15 +145,16 @@ pub struct BatchRecord {
 }
 
 /// The serving work source: per-partition queues over a shared arrival
-/// stream, with start gates implementing the deployment-time stagger.
+/// stream, with start gates implementing the deployment-time stagger and
+/// the overload controls of [`QueueConfig`].
 pub struct ServeController<'a> {
     arrivals: &'a [f64],
     /// `programs[b - 1]` is the phase program for a batch of `b` images
     /// (shared — every dispatch of size `b` hands out the same `Arc`).
     programs: &'a [Arc<Vec<Phase>>],
     max_batch: usize,
-    policy: DispatchPolicy,
-    /// Partition `i` may not dispatch its first batch before `gates[i]`.
+    cfg: QueueConfig,
+    /// Live gates (re-armed copies of `cfg.gates` after lulls).
     gates: Vec<f64>,
     queues: Vec<VecDeque<usize>>,
     next_arrival: usize,
@@ -69,78 +162,133 @@ pub struct ServeController<'a> {
     /// Batch `b` was dispatched as engine job id `b`.
     batches: Vec<BatchRecord>,
     queue_peak: usize,
+    /// Arrivals rejected because every open partition's queue was full.
+    dropped_capacity: usize,
+    /// Queued requests shed because they had already missed the SLO.
+    dropped_deadline: usize,
+    /// Partition has a dispatched batch still in service (cleared on its
+    /// next poll — the engine polls the moment a partition goes idle).
+    in_flight: Vec<bool>,
+    /// Last time any partition dispatched or completed a batch (lull
+    /// detection for gate re-arm).
+    last_busy: f64,
 }
 
 impl<'a> ServeController<'a> {
-    pub fn new(
-        arrivals: &'a [f64],
-        programs: &'a [Arc<Vec<Phase>>],
-        policy: DispatchPolicy,
-        gates: Vec<f64>,
-    ) -> Self {
-        let n = gates.len();
+    pub fn new(arrivals: &'a [f64], programs: &'a [Arc<Vec<Phase>>], cfg: QueueConfig) -> Self {
+        let n = cfg.gates.len();
+        let gates = cfg.gates.clone();
         Self {
             arrivals,
             programs,
             max_batch: programs.len(),
-            policy,
+            cfg,
             gates,
             queues: vec![VecDeque::new(); n],
             next_arrival: 0,
             rr_next: 0,
             batches: Vec::new(),
             queue_peak: 0,
+            dropped_capacity: 0,
+            dropped_deadline: 0,
+            in_flight: vec![false; n],
+            last_busy: 0.0,
         }
     }
 
-    /// Admit every arrival with time ≤ `now` into a queue, in order.
+    fn has_room(&self, i: usize) -> bool {
+        self.cfg.queue_cap.map_or(true, |cap| self.queues[i].len() < cap)
+    }
+
+    fn is_open(&self, i: usize, now: f64) -> bool {
+        self.gates[i] <= now
+    }
+
+    /// Lowest-key partition among those passing `keep` (ties: lowest id).
+    fn argmin<K: PartialOrd>(
+        &self,
+        keep: impl Fn(&Self, usize) -> bool,
+        key: impl Fn(&Self, usize) -> K,
+    ) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.queues.len() {
+            if !keep(self, i) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => key(self, i) < key(self, b),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Route one arrival: the partition it should queue on, or `None`
+    /// when every candidate is at capacity (→ the request is dropped).
     /// Routing only considers partitions whose start gate has opened
     /// (parking work behind a closed gate while open partitions idle
     /// would charge the stagger transient to request latency); if every
     /// gate is still closed, the earliest-opening partition takes it.
-    fn admit_until(&mut self, now: f64) {
+    fn route(&mut self, now: f64) -> Option<usize> {
         let n = self.queues.len();
-        let open = |gates: &[f64], i: usize| gates[i] <= now;
+        if !(0..n).any(|i| self.is_open(i, now)) {
+            // Earliest-opening partition with room (ties: lowest id).
+            return self.argmin(|s, i| s.has_room(i), |s, i| s.gates[i]);
+        }
+        let preferred = match self.cfg.policy {
+            DispatchPolicy::RoundRobin => {
+                let mut t = self.rr_next;
+                while !self.is_open(t, now) {
+                    t = (t + 1) % n;
+                }
+                self.rr_next = (t + 1) % n;
+                t
+            }
+            DispatchPolicy::ShortestQueue => {
+                // An open partition exists; fall back to the round-robin
+                // cursor rather than panicking if it ever does not.
+                self.argmin(|s, i| s.is_open(i, now), |s, i| s.queues[i].len())
+                    .unwrap_or(self.rr_next)
+            }
+        };
+        if self.has_room(preferred) {
+            return Some(preferred);
+        }
+        // The policy's pick is full: fall back to the open partition with
+        // the shortest non-full queue (ties: lowest id), or drop.
+        self.argmin(|s, i| s.is_open(i, now) && s.has_room(i), |s, i| s.queues[i].len())
+    }
+
+    /// Admit every arrival with time ≤ `now` into a queue, in order,
+    /// dropping the ones that find every candidate queue full.
+    fn admit_until(&mut self, now: f64) {
         while self.next_arrival < self.arrivals.len() && self.arrivals[self.next_arrival] <= now {
-            let any_open = (0..n).any(|i| open(&self.gates, i));
-            let target = if !any_open {
-                let mut best = 0;
-                for i in 1..n {
-                    if self.gates[i] < self.gates[best] {
-                        best = i;
+            let at = self.arrivals[self.next_arrival];
+            // Burst-aware stagger: the first arrival after a
+            // partition-wide lull — nothing queued, nothing in service,
+            // and no dispatch or completion for longer than the gap —
+            // re-arms the start gates at its own epoch, so the burst
+            // meets de-synchronized partitions again.
+            if let Some(gap) = self.cfg.rearm_idle_s {
+                if at - self.last_busy > gap
+                    && self.in_flight.iter().all(|&busy| !busy)
+                    && self.queues.iter().all(|q| q.is_empty())
+                {
+                    for (g, base) in self.gates.iter_mut().zip(&self.cfg.gates) {
+                        *g = at + base;
                     }
                 }
-                best
-            } else {
-                match self.policy {
-                    DispatchPolicy::RoundRobin => {
-                        let mut t = self.rr_next;
-                        while !open(&self.gates, t) {
-                            t = (t + 1) % n;
-                        }
-                        self.rr_next = (t + 1) % n;
-                        t
-                    }
-                    DispatchPolicy::ShortestQueue => {
-                        let mut best: Option<usize> = None;
-                        for i in 0..n {
-                            if !open(&self.gates, i) {
-                                continue;
-                            }
-                            let better = match best {
-                                None => true,
-                                Some(b) => self.queues[i].len() < self.queues[b].len(),
-                            };
-                            if better {
-                                best = Some(i);
-                            }
-                        }
-                        best.expect("an open partition exists")
-                    }
+            }
+            match self.route(now) {
+                Some(target) => {
+                    self.queues[target].push_back(self.next_arrival);
+                    self.queue_peak = self.queue_peak.max(self.queues[target].len());
                 }
-            };
-            self.queues[target].push_back(self.next_arrival);
-            self.queue_peak = self.queue_peak.max(self.queues[target].len());
+                None => self.dropped_capacity += 1,
+            }
             self.next_arrival += 1;
         }
     }
@@ -150,12 +298,27 @@ impl<'a> ServeController<'a> {
         &self.batches
     }
 
-    /// Deepest any per-partition queue ever got.
+    /// Deepest any per-partition queue ever got (≤ the configured cap).
     pub fn queue_peak(&self) -> usize {
         self.queue_peak
     }
 
-    /// Requests not yet dispatched (admitted or still in the stream).
+    /// Arrivals rejected by the bounded queues.
+    pub fn dropped_capacity(&self) -> usize {
+        self.dropped_capacity
+    }
+
+    /// Queued requests shed after missing the SLO deadline.
+    pub fn dropped_deadline(&self) -> usize {
+        self.dropped_deadline
+    }
+
+    /// Every request this controller refused to serve.
+    pub fn dropped(&self) -> usize {
+        self.dropped_capacity + self.dropped_deadline
+    }
+
+    /// Requests not yet dispatched or dropped (admitted or in-stream).
     pub fn pending(&self) -> usize {
         let queued: usize = self.queues.iter().map(|q| q.len()).sum();
         queued + (self.arrivals.len() - self.next_arrival)
@@ -164,17 +327,62 @@ impl<'a> ServeController<'a> {
 
 impl WorkSource for ServeController<'_> {
     fn next(&mut self, partition: usize, now: f64) -> DynNext {
+        // A poll means the partition is idle: its dispatched batch (if
+        // any) completed — the engine polls the moment a job finishes,
+        // so `now` is the completion time.
+        if self.in_flight[partition] {
+            self.in_flight[partition] = false;
+            self.last_busy = self.last_busy.max(now);
+        }
         if now < self.gates[partition] {
             return DynNext::IdleUntil(self.gates[partition]);
         }
         self.admit_until(now);
-        let q = &mut self.queues[partition];
-        if !q.is_empty() {
-            let take = q.len().min(self.max_batch);
-            let requests: Vec<usize> = q.drain(..take).collect();
+        // Admission may have re-armed the gates — including this
+        // partition's own — so re-check before serving: dispatching now
+        // would collapse the re-armed stagger offset to zero.
+        if now < self.gates[partition] {
+            return DynNext::IdleUntil(self.gates[partition]);
+        }
+        // Shed queued requests that already missed their deadline —
+        // serving them would burn batch slots on guaranteed SLO misses.
+        if let Some(slo) = self.cfg.slo_s {
+            let q = &mut self.queues[partition];
+            while let Some(&r) = q.front() {
+                if self.arrivals[r] + slo <= now {
+                    q.pop_front();
+                    self.dropped_deadline += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        let q_len = self.queues[partition].len();
+        if q_len > 0 {
+            // Deadline batching: hold an under-filled batch while the
+            // stream can still deliver co-batchable requests in time. A
+            // bounded queue can never fill past its cap, so the fill
+            // target is the smaller of the two — holding for more would
+            // idle a dispatchable batch while admissions drop.
+            if let BatchPolicy::DispatchOnDeadline { hold_s } = self.cfg.batch {
+                let fill = self.cfg.queue_cap.map_or(self.max_batch, |c| c.min(self.max_batch));
+                if q_len < fill && self.next_arrival < self.arrivals.len() {
+                    let oldest = self.arrivals[self.queues[partition][0]];
+                    let force_at = oldest + hold_s;
+                    if now < force_at {
+                        // Wake at whichever comes first: the next arrival
+                        // (the batch may fill) or the hold deadline.
+                        return DynNext::IdleUntil(force_at.min(self.arrivals[self.next_arrival]));
+                    }
+                }
+            }
+            let take = q_len.min(self.max_batch);
+            let requests: Vec<usize> = self.queues[partition].drain(..take).collect();
             let id = self.batches.len() as u64;
             let phases = self.programs[take - 1].clone();
             self.batches.push(BatchRecord { requests, partition, dispatched_at: now });
+            self.in_flight[partition] = true;
+            self.last_busy = now;
             return DynNext::Job(DynJob { id, phases });
         }
         if self.next_arrival < self.arrivals.len() {
@@ -208,6 +416,10 @@ mod tests {
             .collect()
     }
 
+    fn cfg(policy: DispatchPolicy, gates: Vec<f64>) -> QueueConfig {
+        QueueConfig::new(policy, gates)
+    }
+
     #[test]
     fn policy_names_round_trip() {
         for p in [DispatchPolicy::RoundRobin, DispatchPolicy::ShortestQueue] {
@@ -218,11 +430,30 @@ mod tests {
     }
 
     #[test]
+    fn batch_policy_from_timeout() {
+        assert_eq!(BatchPolicy::from_timeout_ms(0.0).unwrap(), BatchPolicy::DispatchOnIdle);
+        assert_eq!(
+            BatchPolicy::from_timeout_ms(5.0).unwrap(),
+            BatchPolicy::DispatchOnDeadline { hold_s: 0.005 }
+        );
+        assert!(BatchPolicy::from_timeout_ms(-1.0).is_err());
+        assert!(BatchPolicy::from_timeout_ms(f64::NAN).is_err());
+        assert_eq!(BatchPolicy::DispatchOnIdle.name(), "dispatch_on_idle");
+        assert_eq!(
+            BatchPolicy::DispatchOnDeadline { hold_s: 0.01 }.name(),
+            "dispatch_on_deadline"
+        );
+    }
+
+    #[test]
     fn round_robin_cycles_and_batches_dynamically() {
         let arrivals = [0.0, 0.1, 0.2, 0.3, 0.4];
         let progs = programs(4);
-        let mut c =
-            ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0, 0.0]);
+        let mut c = ServeController::new(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::RoundRobin, vec![0.0, 0.0]),
+        );
         // At t = 0.25, arrivals 0..=2 admitted: RR puts 0,2 on p0; 1 on p1.
         match c.next(0, 0.25) {
             DynNext::Job(j) => {
@@ -243,14 +474,18 @@ mod tests {
             other => panic!("expected idle, got {other:?}"),
         }
         assert_eq!(c.pending(), 2);
+        assert_eq!(c.dropped(), 0);
     }
 
     #[test]
     fn shortest_queue_balances() {
         let arrivals = [0.0, 0.0, 0.0, 0.0];
         let progs = programs(8);
-        let mut c =
-            ServeController::new(&arrivals, &progs, DispatchPolicy::ShortestQueue, vec![0.0; 2]);
+        let mut c = ServeController::new(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::ShortestQueue, vec![0.0; 2]),
+        );
         match c.next(0, 0.0) {
             // JSQ alternates 0,1,0,1 → partition 0 holds requests 0 and 2.
             DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
@@ -271,7 +506,8 @@ mod tests {
     fn max_batch_caps_a_deep_queue() {
         let arrivals: Vec<f64> = (0..10).map(|i| i as f64 * 1e-3).collect();
         let progs = programs(4);
-        let mut c = ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0]);
+        let mut c =
+            ServeController::new(&arrivals, &progs, cfg(DispatchPolicy::RoundRobin, vec![0.0]));
         match c.next(0, 1.0) {
             DynNext::Job(j) => assert_eq!(j.phases[0].name, "b4"),
             other => panic!("expected job, got {other:?}"),
@@ -283,8 +519,11 @@ mod tests {
     fn stagger_gates_delay_first_dispatch() {
         let arrivals = [0.0, 0.1];
         let progs = programs(2);
-        let mut c =
-            ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0, 0.5]);
+        let mut c = ServeController::new(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::RoundRobin, vec![0.0, 0.5]),
+        );
         assert!(matches!(c.next(1, 0.0), DynNext::IdleUntil(t) if (t - 0.5).abs() < 1e-12));
         // After its gate the partition serves normally.
         assert!(matches!(c.next(1, 0.5), DynNext::Job(_)));
@@ -296,8 +535,11 @@ mod tests {
         // not park behind it — both go to the open partition.
         let arrivals = [0.0, 0.001];
         let progs = programs(4);
-        let mut c =
-            ServeController::new(&arrivals, &progs, DispatchPolicy::RoundRobin, vec![0.0, 10.0]);
+        let mut c = ServeController::new(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::RoundRobin, vec![0.0, 10.0]),
+        );
         match c.next(0, 0.01) {
             DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
             other => panic!("expected a 2-request batch, got {other:?}"),
@@ -306,10 +548,237 @@ mod tests {
         // A still-gated partition neither admits nor serves; the first
         // open poller picks the request up.
         let arrivals = [0.0];
-        let mut c =
-            ServeController::new(&arrivals, &progs, DispatchPolicy::ShortestQueue, vec![5.0, 2.0]);
+        let mut c = ServeController::new(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::ShortestQueue, vec![5.0, 2.0]),
+        );
         assert!(matches!(c.next(0, 0.0), DynNext::IdleUntil(t) if (t - 5.0).abs() < 1e-12));
         assert!(matches!(c.next(1, 2.0), DynNext::Job(_)));
         assert_eq!(c.batches()[0].partition, 1);
+    }
+
+    #[test]
+    fn bounded_queue_drops_when_full() {
+        // Cap 2, one partition, 5 simultaneous arrivals → 2 queued,
+        // 3 dropped, and the queue peak honors the cap.
+        let arrivals = [0.0; 5];
+        let progs = programs(8);
+        let mut c = QueueConfig::new(DispatchPolicy::ShortestQueue, vec![0.0]);
+        c.queue_cap = Some(2);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        match ctl.next(0, 0.0) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.dropped_capacity(), 3);
+        assert_eq!(ctl.dropped(), 3);
+        assert!(ctl.queue_peak() <= 2);
+        assert_eq!(ctl.pending(), 0);
+        assert!(matches!(ctl.next(0, 0.1), DynNext::Finished));
+    }
+
+    #[test]
+    fn full_round_robin_pick_falls_back_to_open_room() {
+        // RR's pick (p0) is at cap while p1 sits empty → the arrival
+        // spills to p1 instead of dropping.
+        let arrivals = [0.0, 0.0, 0.5];
+        let progs = programs(8);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0, 0.0]);
+        c.queue_cap = Some(1);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        // t = 0.2: RR queues req 0 → p0, req 1 → p1; p1 serves its own.
+        match ctl.next(1, 0.2) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[0].requests, vec![1]);
+        // t = 0.6: RR's cursor points at p0 (still full with req 0) →
+        // req 2 spills to the empty p1.
+        match ctl.next(1, 0.6) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[1].requests, vec![2]);
+        assert_eq!(ctl.dropped(), 0);
+        match ctl.next(0, 0.7) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.pending(), 0);
+    }
+
+    #[test]
+    fn slo_shedding_drops_stale_queued_requests() {
+        // Two arrivals at t = 0 with a 10 ms SLO; the partition only
+        // polls at t = 1 → both are stale and shed, nothing dispatches.
+        let arrivals = [0.0, 0.0, 0.9995];
+        let progs = programs(8);
+        let mut c = QueueConfig::new(DispatchPolicy::ShortestQueue, vec![0.0]);
+        c.slo_s = Some(0.01);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        match ctl.next(0, 1.0) {
+            // Only the fresh third arrival survives.
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[0].requests, vec![2]);
+        assert_eq!(ctl.dropped_deadline(), 2);
+        assert_eq!(ctl.dropped(), 2);
+    }
+
+    #[test]
+    fn dispatch_on_deadline_holds_for_fuller_batches() {
+        // One partition, arrivals 1 ms apart, 10 ms hold: on-idle would
+        // dispatch a 1-request batch at t = 0; on-deadline holds until
+        // the batch fills (or the oldest request has waited 10 ms).
+        let arrivals = [0.0, 0.001, 0.002, 0.003];
+        let progs = programs(3);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.batch = BatchPolicy::DispatchOnDeadline { hold_s: 0.01 };
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        // t = 0: one queued request, stream has more → hold until the
+        // next arrival.
+        assert!(matches!(ctl.next(0, 0.0), DynNext::IdleUntil(t) if (t - 0.001).abs() < 1e-12));
+        assert!(matches!(ctl.next(0, 0.001), DynNext::IdleUntil(t) if (t - 0.002).abs() < 1e-12));
+        // t = 0.002: three queued == max_batch → dispatch b3.
+        match ctl.next(0, 0.002) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b3"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[0].requests, vec![0, 1, 2]);
+        // Last request: stream exhausted → no point holding, dispatch.
+        match ctl.next(0, 0.004) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dispatch_on_deadline_forces_at_the_hold_deadline() {
+        // Second arrival is far away: the hold times out at
+        // oldest + hold_s and the 1-request batch goes out.
+        let arrivals = [0.0, 5.0];
+        let progs = programs(4);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.batch = BatchPolicy::DispatchOnDeadline { hold_s: 0.01 };
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        assert!(matches!(ctl.next(0, 0.0), DynNext::IdleUntil(t) if (t - 0.01).abs() < 1e-12));
+        match ctl.next(0, 0.01) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stagger_gates_rearm_after_a_lull() {
+        // Gates [0, 0.5], re-arm after 1 s of partition-wide idleness.
+        // A burst at t = 5 must see partition 1 gated until 5.5, not
+        // free-running in lockstep with partition 0.
+        let arrivals = [0.0, 5.0, 5.001, 5.002];
+        let progs = programs(8);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0, 0.5]);
+        c.rearm_idle_s = Some(1.0);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        assert!(matches!(ctl.next(0, 0.0), DynNext::Job(_)));
+        // Batch 0 completes at t = 0.01 (the engine polls on idle).
+        assert!(matches!(ctl.next(0, 0.01), DynNext::IdleUntil(t) if (t - 5.0).abs() < 1e-12));
+        // The burst: all three route to partition 0 (partition 1's gate
+        // re-armed to 5.5), which dispatches them as one batch.
+        match ctl.next(0, 5.01) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b3"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[1].requests, vec![1, 2, 3]);
+        // Partition 1 is gated until its re-armed offset.
+        assert!(matches!(ctl.next(1, 5.01), DynNext::IdleUntil(t) if (t - 5.5).abs() < 1e-12));
+        assert!(matches!(ctl.next(1, 5.5), DynNext::Finished));
+    }
+
+    #[test]
+    fn rearmed_gate_applies_to_the_polling_partition_too() {
+        // Every partition has a positive base offset (as random_delay
+        // stagger produces): the partition whose poll triggers the
+        // re-arm must honor its own re-armed gate, not dispatch at the
+        // burst instant.
+        let arrivals = [0.0, 5.0];
+        let progs = programs(4);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.25, 0.5]);
+        c.rearm_idle_s = Some(1.0);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        assert!(matches!(ctl.next(0, 0.3), DynNext::Job(_)));
+        // Batch 0 completes at t = 0.4.
+        assert!(matches!(ctl.next(0, 0.4), DynNext::IdleUntil(t) if (t - 5.0).abs() < 1e-12));
+        // The burst at t = 5 re-arms the gates to [5.25, 5.5]; the
+        // polling partition queues the request but waits for its own
+        // re-armed offset.
+        assert!(matches!(ctl.next(0, 5.2), DynNext::IdleUntil(t) if (t - 5.25).abs() < 1e-12));
+        match ctl.next(0, 5.25) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[1].requests, vec![1]);
+    }
+
+    #[test]
+    fn no_rearm_while_a_batch_is_still_in_service() {
+        // A long-running batch is not a lull: a late arrival must not
+        // re-arm the gates while partition 0 is still serving.
+        let arrivals = [0.0, 2.0, 2.1];
+        let progs = programs(8);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0, 0.5]);
+        c.rearm_idle_s = Some(1.0);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        assert!(matches!(ctl.next(0, 0.0), DynNext::Job(_)));
+        // Partition 0 has not polled since its t = 0 dispatch, so its
+        // batch is still in flight at t = 2.2 when partition 1 polls. A
+        // re-arm would gate partition 1 until 2.5 and route everything
+        // to partition 0; instead it serves its round-robin share.
+        match ctl.next(1, 2.2) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[1].requests, vec![1]);
+    }
+
+    #[test]
+    fn hold_target_respects_the_queue_cap() {
+        // queue_cap 2 < max_batch 4: once the queue is at cap the batch
+        // can never grow — dispatch instead of holding a dispatchable
+        // batch while admissions drop.
+        let arrivals = [0.0, 0.001, 0.002, 0.003];
+        let progs = programs(4);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.queue_cap = Some(2);
+        c.batch = BatchPolicy::DispatchOnDeadline { hold_s: 0.05 };
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        assert!(matches!(ctl.next(0, 0.0), DynNext::IdleUntil(t) if (t - 0.001).abs() < 1e-12));
+        match ctl.next(0, 0.001) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected a full-to-cap batch, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[0].requests, vec![0, 1]);
+        assert_eq!(ctl.dropped(), 0);
+    }
+
+    #[test]
+    fn no_rearm_without_a_lull_or_when_disabled() {
+        let arrivals = [0.0, 5.0];
+        let progs = programs(4);
+        // Disabled: partition 1's original 0.5 gate long open at t = 5.
+        let mut ctl = ServeController::new(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::RoundRobin, vec![0.0, 0.5]),
+        );
+        assert!(matches!(ctl.next(0, 0.0), DynNext::Job(_)));
+        assert!(matches!(ctl.next(1, 5.0), DynNext::Job(_)));
+        // Enabled but the gap is below the threshold: no re-arm either.
+        let arrivals = [0.0, 0.8];
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0, 0.5]);
+        c.rearm_idle_s = Some(1.0);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        assert!(matches!(ctl.next(0, 0.0), DynNext::Job(_)));
+        assert!(matches!(ctl.next(1, 0.8), DynNext::Job(_)));
     }
 }

@@ -5,13 +5,14 @@
 //! a dynamically-sized batch, whose phase program (compiled by
 //! [`PhaseCompiler`] for exactly that batch size) executes on the fluid
 //! engine's dynamic mode — so bandwidth contention between partitions
-//! mid-burst shapes every service time. The run drains the whole stream
-//! (open loop: nothing is dropped) and reports per-request latency
-//! percentiles, throughput and traffic statistics.
+//! mid-burst shapes every service time. By default the run drains the
+//! whole stream (open loop, nothing dropped); with a queue cap and/or an
+//! SLO deadline it becomes an overload experiment, reporting drops,
+//! goodput and the latency of what was actually served.
 
 use super::arrival::ArrivalProcess;
 use super::latency::{LatencyRecorder, LatencyStats};
-use super::queue::{DispatchPolicy, ServeController};
+use super::queue::{BatchPolicy, DispatchPolicy, QueueConfig, ServeController};
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
@@ -28,18 +29,27 @@ pub struct ServeOutcome {
     pub partitions: usize,
     /// Configured long-run mean arrival rate (requests/s).
     pub arrival_rate: f64,
-    /// Requests generated — all of them are served (open loop, no drops).
+    /// Requests generated (arrived). `served + dropped == requests`.
     pub requests: usize,
+    /// Requests that completed service.
+    pub served: usize,
+    /// Requests refused by the bounded queues or shed past the SLO.
+    pub dropped: usize,
+    /// `dropped / requests` (0 for an empty stream).
+    pub drop_rate: f64,
     /// Batches dispatched.
     pub batches: usize,
-    /// Mean dispatched batch size (requests / batches).
+    /// Mean dispatched batch size (served / batches).
     pub mean_batch: f64,
-    /// Deepest any partition queue ever got.
+    /// Deepest any partition queue ever got (≤ the configured cap).
     pub queue_peak: usize,
     /// Completion time of the last batch.
     pub makespan_s: f64,
     /// Served requests per second over the makespan.
     pub throughput_ips: f64,
+    /// SLO-hitting requests per second over the makespan (== throughput
+    /// when no SLO is configured).
+    pub goodput_ips: f64,
     pub latency: LatencyStats,
     /// Sampled aggregate bandwidth summary (GB/s).
     pub bw: Summary,
@@ -54,11 +64,15 @@ impl ServeOutcome {
             partitions,
             arrival_rate,
             requests: 0,
+            served: 0,
+            dropped: 0,
+            drop_rate: 0.0,
             batches: 0,
             mean_batch: 0.0,
             queue_peak: 0,
             makespan_s: 0.0,
             throughput_ips: 0.0,
+            goodput_ips: 0.0,
             latency: LatencyStats::zero(),
             bw: Summary::of(&[]),
             total_bytes: 0.0,
@@ -80,6 +94,10 @@ pub struct ServeSimulator {
     policy: DispatchPolicy,
     stagger: StaggerPolicy,
     max_batch: usize,
+    queue_cap: usize,
+    slo_ms: f64,
+    batch_timeout_ms: f64,
+    stagger_rearm: bool,
     trace_samples: usize,
     enforce_capacity: bool,
 }
@@ -96,6 +114,10 @@ impl ServeSimulator {
             policy: DispatchPolicy::ShortestQueue,
             stagger: StaggerPolicy::UniformPhase,
             max_batch: 0,
+            queue_cap: 0,
+            slo_ms: 0.0,
+            batch_timeout_ms: 0.0,
+            stagger_rearm: true,
             trace_samples: 400,
             enforce_capacity: true,
         }
@@ -145,6 +167,37 @@ impl ServeSimulator {
         self
     }
 
+    /// Bound each partition queue to this many waiting requests; arrivals
+    /// that find every open queue full are dropped (0 = unbounded, the
+    /// legacy open loop).
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Per-request latency deadline in milliseconds: queued requests
+    /// already past it are shed, and goodput counts only requests served
+    /// within it (0 = no deadline).
+    pub fn slo_ms(mut self, ms: f64) -> Self {
+        self.slo_ms = ms;
+        self
+    }
+
+    /// Hold under-filled batches up to this long so they can fill
+    /// (dispatch-on-deadline); 0 = dispatch-on-idle.
+    pub fn batch_timeout_ms(mut self, ms: f64) -> Self {
+        self.batch_timeout_ms = ms;
+        self
+    }
+
+    /// Re-arm the stagger start gates after a partition-wide idle gap
+    /// longer than one full-batch time (on by default; disable for the
+    /// legacy t = 0-only gates).
+    pub fn stagger_rearm(mut self, on: bool) -> Self {
+        self.stagger_rearm = on;
+        self
+    }
+
     pub fn trace_samples(mut self, s: usize) -> Self {
         self.trace_samples = s;
         self
@@ -170,6 +223,23 @@ impl ServeSimulator {
                 (0..n).map(|_| rng.range_f64(0.0, batch_time)).collect()
             }
         }
+    }
+
+    /// The queue configuration one run uses (gates spread over
+    /// `batch_time`, overload knobs translated from the builder).
+    fn queue_config(&self, batch_time: f64) -> Result<QueueConfig> {
+        if !(self.slo_ms.is_finite() && self.slo_ms >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "SLO must be finite and >= 0 ms: {}",
+                self.slo_ms
+            )));
+        }
+        let mut cfg = QueueConfig::new(self.policy, self.gates(batch_time));
+        cfg.queue_cap = (self.queue_cap > 0).then_some(self.queue_cap);
+        cfg.slo_s = if self.slo_ms > 0.0 { Some(self.slo_ms / 1e3) } else { None };
+        cfg.batch = BatchPolicy::from_timeout_ms(self.batch_timeout_ms)?;
+        cfg.rearm_idle_s = self.stagger_rearm.then_some(batch_time);
+        Ok(cfg)
     }
 
     /// Run the serving simulation to drain and aggregate the outcome.
@@ -200,40 +270,59 @@ impl ServeSimulator {
         let full = PhaseCompiler::new(&self.accel, plan.cores_per_partition, max_batch);
         let batch_time = full.roofline_time(&programs[max_batch - 1]).0;
 
-        let mut controller =
-            ServeController::new(&arrivals, &programs, self.policy, self.gates(batch_time));
+        let queue_cfg = self.queue_config(batch_time)?;
+        // The recorder's goodput deadline is the controller's shedding
+        // deadline — one source of truth.
+        let slo_s = queue_cfg.slo_s;
+        let mut controller = ServeController::new(&arrivals, &programs, queue_cfg);
         let cores = vec![plan.cores_per_partition; self.partitions];
         let out = SimEngine::new(&self.accel).run_dynamic(&cores, &mut controller)?;
 
         // Map batch completions back to per-request latencies.
-        let mut recorder = LatencyRecorder::new();
+        let mut recorder = match slo_s {
+            Some(s) => LatencyRecorder::with_slo(s),
+            None => LatencyRecorder::new(),
+        };
         let batches = controller.batches();
         let mut served = 0usize;
         for job in &out.jobs {
-            let batch = &batches[job.id as usize];
+            let Some(batch) = batches.get(job.id as usize) else {
+                return Err(Error::SimInvariant(format!(
+                    "engine job {} has no dispatched batch",
+                    job.id
+                )));
+            };
             for &r in &batch.requests {
                 recorder.record(arrivals[r], job.finished_at);
             }
             served += batch.requests.len();
         }
-        if served != arrivals.len() || controller.pending() != 0 {
+        let dropped = controller.dropped();
+        recorder.record_drops(dropped);
+        if served + dropped != arrivals.len() || controller.pending() != 0 {
             return Err(Error::SimInvariant(format!(
-                "serve run dropped requests: {served} served of {}",
+                "serve run lost requests: {served} served + {dropped} dropped of {}",
                 arrivals.len()
             )));
         }
 
+        let latency = recorder.stats();
         let makespan = out.makespan.0;
+        let per_s = |n: usize| if makespan > 0.0 { n as f64 / makespan } else { 0.0 };
         Ok(ServeOutcome {
             partitions: self.partitions,
             arrival_rate: rate,
             requests: arrivals.len(),
+            served,
+            dropped,
+            drop_rate: latency.drop_rate(),
             batches: out.jobs.len(),
-            mean_batch: arrivals.len() as f64 / out.jobs.len().max(1) as f64,
+            mean_batch: served as f64 / out.jobs.len().max(1) as f64,
             queue_peak: controller.queue_peak(),
             makespan_s: makespan,
-            throughput_ips: if makespan > 0.0 { served as f64 / makespan } else { 0.0 },
-            latency: recorder.stats(),
+            throughput_ips: per_s(served),
+            goodput_ips: per_s(latency.slo_hits),
+            latency,
             bw: out.trace.sampled_summary(self.trace_samples),
             total_bytes: out.total_bytes,
             trace: out.trace,
@@ -277,11 +366,18 @@ mod tests {
     fn drains_every_request_and_reports() {
         let out = sim(2000.0, 2).run().unwrap();
         assert!(out.requests > 10, "want a real stream, got {}", out.requests);
+        assert_eq!(out.served, out.requests, "unbounded queues drop nothing");
+        assert_eq!(out.dropped, 0);
+        assert_eq!(out.drop_rate, 0.0);
         assert_eq!(out.latency.count, out.requests);
         assert!(out.batches > 0 && out.batches <= out.requests);
         assert!(out.mean_batch >= 1.0);
         assert!(out.makespan_s > 0.0);
         assert!(out.throughput_ips > 0.0);
+        assert!(
+            (out.goodput_ips - out.throughput_ips).abs() < 1e-9,
+            "no SLO: goodput == throughput"
+        );
         assert!(out.latency.p50_ms > 0.0);
         assert!(out.latency.p50_ms <= out.latency.p99_ms);
         assert!(out.total_bytes > 0.0);
@@ -309,6 +405,9 @@ mod tests {
             .duration(0.01)
             .run();
         assert!(e.is_err());
+        // A non-finite SLO is rejected, not silently ignored.
+        assert!(sim(1000.0, 2).slo_ms(f64::NAN).run().is_err());
+        assert!(sim(1000.0, 2).batch_timeout_ms(-3.0).run().is_err());
     }
 
     #[test]
@@ -335,6 +434,46 @@ mod tests {
     }
 
     #[test]
+    fn bounded_queue_drops_and_caps_the_backlog() {
+        // A flood far above capacity: the unbounded run serves everything
+        // at enormous latency; the bounded + SLO run sheds load, keeps
+        // the queue at its cap and beats the unbounded p99 outright.
+        let flood = |s: ServeSimulator| s.duration(5e-4).run().unwrap();
+        let unbounded = flood(sim(1e7, 2));
+        let bounded = flood(sim(1e7, 2).queue_cap(8).slo_ms(50.0));
+        assert_eq!(unbounded.dropped, 0);
+        assert!(bounded.dropped > 0, "overload must shed load");
+        assert_eq!(bounded.served + bounded.dropped, bounded.requests);
+        assert!(bounded.queue_peak <= 8, "queue peak {} > cap", bounded.queue_peak);
+        assert!(bounded.drop_rate > 0.0 && bounded.drop_rate < 1.0);
+        assert!(
+            bounded.latency.p99_ms < unbounded.latency.p99_ms,
+            "bounded p99 {:.2} must beat unbounded {:.2}",
+            bounded.latency.p99_ms,
+            unbounded.latency.p99_ms
+        );
+        assert!(bounded.goodput_ips <= bounded.throughput_ips + 1e-9);
+    }
+
+    #[test]
+    fn batch_timeout_fills_batches_at_moderate_load() {
+        // Arrivals every ~1 ms against a ~µs service time: on-idle
+        // dispatches lonely batch-1 requests; a 20 ms hold (≫ any
+        // plausible interarrival gap in the window) co-batches them.
+        let lo = sim(1000.0, 1).duration(0.01);
+        let on_idle = lo.clone().run().unwrap();
+        let held = lo.batch_timeout_ms(20.0).run().unwrap();
+        assert!((on_idle.mean_batch - 1.0).abs() < 1e-9);
+        assert!(
+            held.mean_batch > on_idle.mean_batch,
+            "holding must batch up: {} vs {}",
+            held.mean_batch,
+            on_idle.mean_batch
+        );
+        assert_eq!(held.served, held.requests, "holding drops nothing");
+    }
+
+    #[test]
     fn stagger_gates_match_policy() {
         let s = sim(500.0, 4);
         assert_eq!(s.clone().stagger(StaggerPolicy::None).gates(1.0), vec![0.0; 4]);
@@ -346,5 +485,20 @@ mod tests {
         let r2 = s.stagger(StaggerPolicy::RandomDelay { seed: 5 }).gates(1.0);
         assert_eq!(r1, r2);
         assert!(r1.iter().all(|&g| (0.0..1.0).contains(&g)));
+    }
+
+    #[test]
+    fn queue_config_translates_the_builder_knobs() {
+        let s = sim(500.0, 2).queue_cap(16).slo_ms(25.0).batch_timeout_ms(2.0);
+        let cfg = s.queue_config(0.1).unwrap();
+        assert_eq!(cfg.queue_cap, Some(16));
+        assert_eq!(cfg.slo_s, Some(0.025));
+        assert_eq!(cfg.batch, BatchPolicy::DispatchOnDeadline { hold_s: 0.002 });
+        assert_eq!(cfg.rearm_idle_s, Some(0.1));
+        let legacy = sim(500.0, 2).stagger_rearm(false).queue_config(0.1).unwrap();
+        assert_eq!(legacy.queue_cap, None);
+        assert_eq!(legacy.slo_s, None);
+        assert_eq!(legacy.batch, BatchPolicy::DispatchOnIdle);
+        assert_eq!(legacy.rearm_idle_s, None);
     }
 }

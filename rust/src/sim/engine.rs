@@ -6,8 +6,15 @@
 //! * work conservation — when any phase is bandwidth-starved the pool is
 //!   fully used (max–min property);
 //! * monotone progress — time strictly advances across events.
+//!
+//! Both engine modes — the offline scheduler [`SimEngine::run`] and the
+//! serving mode [`SimEngine::run_dynamic`] — are thin drivers over the
+//! single fluid stepper in [`super::step`]: they own job bookkeeping
+//! (programs, queues, completion records) and delegate every
+//! characterize → allocate → pick-dt → advance event to it, so the
+//! offline figures and the serving results cannot drift apart.
 
-use super::memory::max_min_allocate_into;
+use super::step::{Activity, FluidStepper, PhaseInfo, SlotAdvance, StepSlots, StepTiming};
 use super::trace::BandwidthTrace;
 use super::workload::{PartitionState, Workload};
 use crate::config::AcceleratorConfig;
@@ -15,54 +22,6 @@ use crate::error::{Error, Result};
 use crate::reuse::Phase;
 use crate::util::units::Seconds;
 use std::sync::Arc;
-
-/// Per-phase characterization at a fixed core count, computed once per
-/// phase instead of per event: `full_rate` is 1/tc (fraction of the phase
-/// per second at unthrottled compute speed) and `demand` the bandwidth
-/// that sustains it.
-struct PhaseInfo {
-    full_rate: f64,
-    demand: f64,
-    bytes: f64,
-    flops: f64,
-}
-
-impl PhaseInfo {
-    fn of(ph: &Phase, accel: &AcceleratorConfig, cores: usize) -> Self {
-        let tc = ph.compute_time(accel, cores).0;
-        if tc <= 0.0 {
-            Self {
-                full_rate: f64::INFINITY,
-                demand: if ph.bytes.0 > 0.0 { f64::INFINITY } else { 0.0 },
-                bytes: ph.bytes.0,
-                flops: ph.flops.0,
-            }
-        } else {
-            Self {
-                full_rate: 1.0 / tc,
-                demand: ph.bytes.0 / tc,
-                bytes: ph.bytes.0,
-                flops: ph.flops.0,
-            }
-        }
-    }
-}
-
-/// Progress rate (fraction of the phase per second) under an allocation —
-/// the roofline: min(compute rate, allocated-bandwidth rate).
-fn phase_rate(pi: &PhaseInfo, alloc: f64) -> f64 {
-    if pi.bytes <= 0.0 {
-        if pi.full_rate.is_finite() {
-            pi.full_rate
-        } else {
-            f64::INFINITY
-        }
-    } else if pi.full_rate.is_finite() {
-        pi.full_rate.min(alloc / pi.bytes)
-    } else {
-        alloc / pi.bytes
-    }
-}
 
 /// Result of one simulation run.
 #[derive(Debug, Clone)]
@@ -158,6 +117,123 @@ pub struct SimEngine {
     pub record_per_partition: bool,
 }
 
+/// Driver state of [`SimEngine::run`]: fixed phase programs, one
+/// [`PartitionState`] per partition, start delays as release gates.
+struct OfflineSlots<'a> {
+    workloads: &'a [Workload],
+    /// Per-workload phase characterizations, indexed like `phases`.
+    infos: &'a [Vec<PhaseInfo>],
+    states: Vec<PartitionState>,
+}
+
+impl StepSlots for OfflineSlots<'_> {
+    fn activity(&self, slot: usize, now: f64) -> Activity<'_> {
+        let s = &self.states[slot];
+        if s.done() {
+            return Activity::Off;
+        }
+        if s.ready_at > now {
+            return Activity::SleepUntil(s.ready_at);
+        }
+        let w = &self.workloads[slot];
+        Activity::Run {
+            info: &self.infos[slot][(w.start_phase + s.step) % w.phases.len()],
+            remaining_frac: s.remaining_frac,
+        }
+    }
+
+    fn apply(&mut self, slot: usize, adv: &SlotAdvance, t1: f64) {
+        let s = &mut self.states[slot];
+        s.bytes_moved += adv.bytes;
+        s.flops_done += adv.flops;
+        s.remaining_frac = adv.remaining_frac;
+        if adv.completed {
+            s.step += 1;
+            s.remaining_frac = 1.0;
+            if s.step >= self.workloads[slot].total_steps() {
+                s.finished_at = Some(t1);
+            }
+        }
+    }
+}
+
+/// One in-flight dynamic job on a partition.
+struct Running {
+    id: u64,
+    /// Index into the characterization cache.
+    program: usize,
+    step: usize,
+    remaining_frac: f64,
+    started_at: f64,
+    bytes: f64,
+    flops: f64,
+}
+
+/// Per-(program, cores) characterization, computed once even when a
+/// source dispatches the same compiled program thousands of times.
+/// Holding the `Arc` keeps its address stable, so the pointer is a valid
+/// identity key for the run's lifetime.
+struct CachedProgram {
+    key: (usize, usize),
+    _program: Arc<Vec<Phase>>,
+    infos: Vec<PhaseInfo>,
+    bytes: f64,
+    flops: f64,
+}
+
+/// Driver state of [`SimEngine::run_dynamic`]: pull-dispatched jobs,
+/// per-partition idle gates, completion records and global conservation
+/// accumulators.
+struct ServingSlots {
+    running: Vec<Option<Running>>,
+    cache: Vec<CachedProgram>,
+    idle_until: Vec<f64>,
+    done: Vec<bool>,
+    jobs: Vec<JobRecord>,
+    moved_bytes: f64,
+    done_flops: f64,
+}
+
+impl StepSlots for ServingSlots {
+    fn activity(&self, slot: usize, now: f64) -> Activity<'_> {
+        match &self.running[slot] {
+            Some(r) => Activity::Run {
+                info: &self.cache[r.program].infos[r.step],
+                remaining_frac: r.remaining_frac,
+            },
+            None => {
+                if !self.done[slot] && self.idle_until[slot] > now {
+                    Activity::SleepUntil(self.idle_until[slot])
+                } else {
+                    Activity::Off
+                }
+            }
+        }
+    }
+
+    fn apply(&mut self, slot: usize, adv: &SlotAdvance, t1: f64) {
+        let Some(r) = self.running[slot].as_mut() else { return };
+        self.moved_bytes += adv.bytes;
+        self.done_flops += adv.flops;
+        r.remaining_frac = adv.remaining_frac;
+        if adv.completed {
+            r.step += 1;
+            r.remaining_frac = 1.0;
+            if r.step >= self.cache[r.program].infos.len() {
+                self.jobs.push(JobRecord {
+                    partition: slot,
+                    id: r.id,
+                    started_at: r.started_at,
+                    finished_at: t1,
+                    bytes: r.bytes,
+                    flops: r.flops,
+                });
+                self.running[slot] = None;
+            }
+        }
+    }
+}
+
 impl SimEngine {
     pub fn new(accel: &AcceleratorConfig) -> Self {
         Self { accel: accel.clone(), max_events: 50_000_000, record_per_partition: false }
@@ -209,18 +285,10 @@ impl SimEngine {
             .iter()
             .map(|w| w.phases.iter().map(|ph| PhaseInfo::of(ph, &self.accel, w.cores)).collect())
             .collect();
-        let info_at = |i: usize, step: usize| -> &PhaseInfo {
-            let w = &workloads[i];
-            &infos[i][(w.start_phase + step) % w.phases.len()]
-        };
 
-        // Scratch buffers reused across events (hot loop).
-        let mut demand = vec![0.0f64; n];
-        let mut bw_used = vec![0.0f64; n];
-        let mut alloc: Vec<f64> = Vec::with_capacity(n);
-        let mut order_scratch: Vec<usize> = Vec::with_capacity(n);
-
-        while states.iter().any(|s| !s.done()) {
+        let mut stepper = FluidStepper::new(peak, n, StepTiming::Offline);
+        let mut slots = OfflineSlots { workloads, infos: &infos, states };
+        while slots.states.iter().any(|s| !s.done()) {
             events += 1;
             if events > self.max_events {
                 return Err(Error::SimInvariant(format!(
@@ -228,87 +296,9 @@ impl SimEngine {
                     self.max_events
                 )));
             }
-
-            // Characterize each running phase (cached).
-            for i in 0..n {
-                demand[i] = 0.0;
-                let s = &states[i];
-                if s.done() || s.ready_at > now {
-                    continue;
-                }
-                demand[i] = info_at(i, s.step).demand;
-            }
-
-            max_min_allocate_into(peak, &demand, &mut order_scratch, &mut alloc);
-
-            // Progress rate (fraction of phase per second) per partition.
-            let mut next_dt = f64::INFINITY;
-            for i in 0..n {
-                let s = &states[i];
-                if s.done() {
-                    bw_used[i] = 0.0;
-                    continue;
-                }
-                if s.ready_at > now {
-                    bw_used[i] = 0.0;
-                    next_dt = next_dt.min(s.ready_at - now);
-                    continue;
-                }
-                let pi = info_at(i, s.step);
-                let rate = phase_rate(pi, alloc[i]);
-                bw_used[i] = if pi.bytes > 0.0 { rate * pi.bytes } else { 0.0 };
-                debug_assert!(bw_used[i] <= alloc[i] * (1.0 + 1e-9) || demand[i] == 0.0);
-                if rate.is_infinite() {
-                    // Instantaneous phase (no flops, no bytes): complete now.
-                    next_dt = 0.0;
-                } else if rate > 0.0 {
-                    next_dt = next_dt.min(s.remaining_frac / rate);
-                }
-            }
-
-            if next_dt.is_infinite() {
-                return Err(Error::SimInvariant(
-                    "deadlock: nothing can progress".into(),
-                ));
-            }
-
-            let t1 = now + next_dt;
-            trace.record(now, t1, &bw_used);
-
-            // Advance everyone by next_dt, completing phases that hit zero.
-            for i in 0..n {
-                let w = &workloads[i];
-                // Split borrow: compute phase info before mutating state.
-                let (rate, phase_bytes, phase_flops) = {
-                    let s = &states[i];
-                    // Partitions that were not running in [now, t1) make
-                    // no progress (they become ready exactly at an event).
-                    if s.done() || s.ready_at > now {
-                        continue;
-                    }
-                    let pi = info_at(i, s.step);
-                    (phase_rate(pi, alloc[i]), pi.bytes, pi.flops)
-                };
-                let s = &mut states[i];
-                let progressed = if rate.is_infinite() {
-                    s.remaining_frac
-                } else {
-                    (rate * next_dt).min(s.remaining_frac)
-                };
-                s.bytes_moved += progressed * phase_bytes;
-                s.flops_done += progressed * phase_flops;
-                s.remaining_frac -= progressed;
-                if s.remaining_frac <= 1e-12 {
-                    s.step += 1;
-                    s.remaining_frac = 1.0;
-                    if s.step >= w.total_steps() {
-                        s.finished_at = Some(t1);
-                    }
-                }
-            }
-
-            now = t1;
+            now = stepper.step(now, &mut slots, &mut trace)?;
         }
+        let states = slots.states;
 
         let finish_times: Vec<Seconds> = states
             .iter()
@@ -335,7 +325,7 @@ impl SimEngine {
     /// workloads, each partition pulls jobs (phase programs) from a
     /// [`WorkSource`] whenever it is idle — the serving-scenario mode.
     /// Bandwidth contention between partitions is resolved by the same
-    /// max–min fluid allocation as [`SimEngine::run`], so mid-burst
+    /// max–min fluid stepper as [`SimEngine::run`], so mid-burst
     /// interference between asynchronous partitions is captured exactly.
     pub fn run_dynamic(
         &self,
@@ -354,57 +344,33 @@ impl SimEngine {
             )));
         }
 
-        struct Running {
-            id: u64,
-            /// Index into the characterization cache.
-            program: usize,
-            step: usize,
-            remaining_frac: f64,
-            started_at: f64,
-            bytes: f64,
-            flops: f64,
-        }
-
-        /// Per-(program, cores) characterization, computed once even when
-        /// a source dispatches the same compiled program thousands of
-        /// times. Holding the `Arc` keeps its address stable, so the
-        /// pointer is a valid identity key for the run's lifetime.
-        struct CachedProgram {
-            key: (usize, usize),
-            _program: Arc<Vec<Phase>>,
-            infos: Vec<PhaseInfo>,
-            bytes: f64,
-            flops: f64,
-        }
-
         let peak = self.accel.mem_bw.0;
         let mut trace = if self.record_per_partition {
             BandwidthTrace::new(n)
         } else {
             BandwidthTrace::total_only()
         };
-        let mut running: Vec<Option<Running>> = (0..n).map(|_| None).collect();
-        let mut cache: Vec<CachedProgram> = Vec::new();
-        let mut idle_until = vec![0.0f64; n];
-        let mut done = vec![false; n];
-        let mut jobs: Vec<JobRecord> = Vec::new();
-        let mut moved_bytes = 0.0f64;
-        let mut done_flops = 0.0f64;
+        let mut sl = ServingSlots {
+            running: (0..n).map(|_| None).collect(),
+            cache: Vec::new(),
+            idle_until: vec![0.0f64; n],
+            done: vec![false; n],
+            jobs: Vec::new(),
+            moved_bytes: 0.0,
+            done_flops: 0.0,
+        };
         let mut declared_bytes = 0.0f64;
         let mut declared_flops = 0.0f64;
         let mut now = 0.0f64;
         let mut events = 0usize;
 
-        let mut demand = vec![0.0f64; n];
-        let mut bw_used = vec![0.0f64; n];
-        let mut alloc: Vec<f64> = Vec::with_capacity(n);
-        let mut order_scratch: Vec<usize> = Vec::with_capacity(n);
+        let mut stepper = FluidStepper::new(peak, n, StepTiming::Serving);
 
         loop {
             // Offer work to every idle partition (a source may hand back a
             // zero-phase job, which completes instantly — keep polling).
             for i in 0..n {
-                while running[i].is_none() && !done[i] && idle_until[i] <= now {
+                while sl.running[i].is_none() && !sl.done[i] && sl.idle_until[i] <= now {
                     events += 1;
                     if events > self.max_events {
                         return Err(Error::SimInvariant(format!(
@@ -415,7 +381,7 @@ impl SimEngine {
                     match source.next(i, now) {
                         DynNext::Job(job) => {
                             let key = (Arc::as_ptr(&job.phases) as usize, partition_cores[i]);
-                            let program = match cache.iter().position(|c| c.key == key) {
+                            let program = match sl.cache.iter().position(|c| c.key == key) {
                                 Some(idx) => idx,
                                 None => {
                                     let cores = partition_cores[i];
@@ -424,21 +390,21 @@ impl SimEngine {
                                         .iter()
                                         .map(|ph| PhaseInfo::of(ph, &self.accel, cores))
                                         .collect();
-                                    cache.push(CachedProgram {
+                                    sl.cache.push(CachedProgram {
                                         key,
                                         bytes: infos.iter().map(|pi| pi.bytes).sum(),
                                         flops: infos.iter().map(|pi| pi.flops).sum(),
                                         infos,
                                         _program: job.phases.clone(),
                                     });
-                                    cache.len() - 1
+                                    sl.cache.len() - 1
                                 }
                             };
-                            let (bytes, flops) = (cache[program].bytes, cache[program].flops);
+                            let (bytes, flops) = (sl.cache[program].bytes, sl.cache[program].flops);
                             declared_bytes += bytes;
                             declared_flops += flops;
-                            if cache[program].infos.is_empty() {
-                                jobs.push(JobRecord {
+                            if sl.cache[program].infos.is_empty() {
+                                sl.jobs.push(JobRecord {
                                     partition: i,
                                     id: job.id,
                                     started_at: now,
@@ -447,7 +413,7 @@ impl SimEngine {
                                     flops: 0.0,
                                 });
                             } else {
-                                running[i] = Some(Running {
+                                sl.running[i] = Some(Running {
                                     id: job.id,
                                     program,
                                     step: 0,
@@ -465,14 +431,14 @@ impl SimEngine {
                                      {t} <= {now}"
                                 )));
                             }
-                            idle_until[i] = t;
+                            sl.idle_until[i] = t;
                         }
-                        DynNext::Finished => done[i] = true,
+                        DynNext::Finished => sl.done[i] = true,
                     }
                 }
             }
 
-            if running.iter().all(|r| r.is_none()) && done.iter().all(|&d| d) {
+            if sl.running.iter().all(|r| r.is_none()) && sl.done.iter().all(|&d| d) {
                 break;
             }
 
@@ -484,95 +450,16 @@ impl SimEngine {
                 )));
             }
 
-            for i in 0..n {
-                demand[i] = match &running[i] {
-                    Some(r) => cache[r.program].infos[r.step].demand,
-                    None => 0.0,
-                };
-            }
-            max_min_allocate_into(peak, &demand, &mut order_scratch, &mut alloc);
-
-            // Next event: earliest phase completion or idle wake-up. Track
-            // the binding wake-up's absolute time so we can land on it
-            // exactly (floating-point: now + (w - now) need not equal w).
-            let mut next_dt = f64::INFINITY;
-            let mut wake_at: Option<f64> = None;
-            for i in 0..n {
-                match &running[i] {
-                    Some(r) => {
-                        let pi = &cache[r.program].infos[r.step];
-                        let rate = phase_rate(pi, alloc[i]);
-                        bw_used[i] = if pi.bytes > 0.0 { rate * pi.bytes } else { 0.0 };
-                        if rate.is_infinite() {
-                            next_dt = 0.0;
-                        } else if rate > 0.0 {
-                            next_dt = next_dt.min(r.remaining_frac / rate);
-                        }
-                    }
-                    None => {
-                        bw_used[i] = 0.0;
-                        if !done[i] && idle_until[i] > now {
-                            let dt = idle_until[i] - now;
-                            if dt <= next_dt {
-                                next_dt = dt;
-                                wake_at = Some(idle_until[i]);
-                            }
-                        }
-                    }
-                }
-            }
-            if next_dt.is_infinite() {
-                return Err(Error::SimInvariant(
-                    "dynamic deadlock: nothing can progress".into(),
-                ));
-            }
-            let t1 = match wake_at {
-                Some(w) if w - now <= next_dt => w,
-                _ => now + next_dt,
-            };
-            let dt = t1 - now;
-            trace.record(now, t1, &bw_used);
-
-            for i in 0..n {
-                let Some(r) = running[i].as_mut() else { continue };
-                let pi = &cache[r.program].infos[r.step];
-                let rate = phase_rate(pi, alloc[i]);
-                let progressed = if rate.is_infinite() {
-                    r.remaining_frac
-                } else {
-                    (rate * dt).min(r.remaining_frac)
-                };
-                moved_bytes += progressed * pi.bytes;
-                done_flops += progressed * pi.flops;
-                let phase_count = cache[r.program].infos.len();
-                r.remaining_frac -= progressed;
-                if r.remaining_frac <= 1e-12 {
-                    r.step += 1;
-                    r.remaining_frac = 1.0;
-                    if r.step >= phase_count {
-                        jobs.push(JobRecord {
-                            partition: i,
-                            id: r.id,
-                            started_at: r.started_at,
-                            finished_at: t1,
-                            bytes: r.bytes,
-                            flops: r.flops,
-                        });
-                        running[i] = None;
-                    }
-                }
-            }
-
-            now = t1;
+            now = stepper.step(now, &mut sl, &mut trace)?;
         }
 
-        let makespan = Seconds(jobs.iter().map(|j| j.finished_at).fold(0.0, f64::max));
+        let makespan = Seconds(sl.jobs.iter().map(|j| j.finished_at).fold(0.0, f64::max));
         let outcome = DynOutcome {
             makespan,
             trace,
-            jobs,
-            total_bytes: moved_bytes,
-            total_flops: done_flops,
+            jobs: sl.jobs,
+            total_bytes: sl.moved_bytes,
+            total_flops: sl.done_flops,
             declared_bytes,
             declared_flops,
             peak_bw: peak,
@@ -695,6 +582,10 @@ impl DynOutcome {
         self.jobs.iter().filter(|j| j.partition == partition).collect()
     }
 }
+
+#[cfg(test)]
+#[path = "engine_reference.rs"]
+mod reference;
 
 #[cfg(test)]
 mod tests {

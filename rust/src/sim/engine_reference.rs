@@ -1,0 +1,639 @@
+//! Pre-refactor reference implementations of the fluid engine, kept
+//! verbatim as golden fixtures for the stepper extraction.
+//!
+//! `run_reference` and `run_dynamic_reference` are the exact bodies of
+//! `SimEngine::run` / `SimEngine::run_dynamic` from before the physics
+//! was unified into [`super::super::step`]. The differential tests below
+//! drive both the live engine and these references over the same
+//! scenario battery and assert **bit-identical** outcomes — makespans,
+//! finish times, conservation totals, every trace segment and every job
+//! record — so the refactor provably changed nothing. Test-only code:
+//! compiled out of every non-test build.
+
+use super::super::memory::max_min_allocate_into;
+use super::super::step::{phase_rate, PhaseInfo};
+use super::*;
+
+/// Verbatim pre-refactor `SimEngine::run`.
+pub(super) fn run_reference(engine: &SimEngine, workloads: &[Workload]) -> Result<SimOutcome> {
+    if workloads.is_empty() {
+        return Err(Error::InvalidConfig("no workloads".into()));
+    }
+    let total_cores: usize = workloads.iter().map(|w| w.cores).sum();
+    if total_cores > engine.accel.cores {
+        return Err(Error::InvalidConfig(format!(
+            "workloads use {total_cores} cores > machine {}",
+            engine.accel.cores
+        )));
+    }
+
+    let n = workloads.len();
+    let mut states: Vec<PartitionState> =
+        workloads.iter().map(|w| PartitionState::new(w.start_delay.0)).collect();
+    for (s, w) in states.iter_mut().zip(workloads) {
+        if w.total_steps() == 0 {
+            s.finished_at = Some(0.0);
+        }
+    }
+
+    let peak = engine.accel.mem_bw.0;
+    let mut trace = if engine.record_per_partition {
+        BandwidthTrace::new(n)
+    } else {
+        BandwidthTrace::total_only()
+    };
+    let mut now = 0.0f64;
+    let mut events = 0usize;
+
+    let infos: Vec<Vec<PhaseInfo>> = workloads
+        .iter()
+        .map(|w| w.phases.iter().map(|ph| PhaseInfo::of(ph, &engine.accel, w.cores)).collect())
+        .collect();
+    let info_at = |i: usize, step: usize| -> &PhaseInfo {
+        let w = &workloads[i];
+        &infos[i][(w.start_phase + step) % w.phases.len()]
+    };
+
+    let mut demand = vec![0.0f64; n];
+    let mut bw_used = vec![0.0f64; n];
+    let mut alloc: Vec<f64> = Vec::with_capacity(n);
+    let mut order_scratch: Vec<usize> = Vec::with_capacity(n);
+
+    while states.iter().any(|s| !s.done()) {
+        events += 1;
+        if events > engine.max_events {
+            return Err(Error::SimInvariant(format!(
+                "exceeded {} events — runaway simulation",
+                engine.max_events
+            )));
+        }
+
+        for i in 0..n {
+            demand[i] = 0.0;
+            let s = &states[i];
+            if s.done() || s.ready_at > now {
+                continue;
+            }
+            demand[i] = info_at(i, s.step).demand;
+        }
+
+        max_min_allocate_into(peak, &demand, &mut order_scratch, &mut alloc);
+
+        let mut next_dt = f64::INFINITY;
+        for i in 0..n {
+            let s = &states[i];
+            if s.done() {
+                bw_used[i] = 0.0;
+                continue;
+            }
+            if s.ready_at > now {
+                bw_used[i] = 0.0;
+                next_dt = next_dt.min(s.ready_at - now);
+                continue;
+            }
+            let pi = info_at(i, s.step);
+            let rate = phase_rate(pi, alloc[i]);
+            bw_used[i] = if pi.bytes > 0.0 { rate * pi.bytes } else { 0.0 };
+            if rate.is_infinite() {
+                next_dt = 0.0;
+            } else if rate > 0.0 {
+                next_dt = next_dt.min(s.remaining_frac / rate);
+            }
+        }
+
+        if next_dt.is_infinite() {
+            return Err(Error::SimInvariant("deadlock: nothing can progress".into()));
+        }
+
+        let t1 = now + next_dt;
+        trace.record(now, t1, &bw_used);
+
+        for i in 0..n {
+            let w = &workloads[i];
+            let (rate, phase_bytes, phase_flops) = {
+                let s = &states[i];
+                if s.done() || s.ready_at > now {
+                    continue;
+                }
+                let pi = info_at(i, s.step);
+                (phase_rate(pi, alloc[i]), pi.bytes, pi.flops)
+            };
+            let s = &mut states[i];
+            let progressed = if rate.is_infinite() {
+                s.remaining_frac
+            } else {
+                (rate * next_dt).min(s.remaining_frac)
+            };
+            s.bytes_moved += progressed * phase_bytes;
+            s.flops_done += progressed * phase_flops;
+            s.remaining_frac -= progressed;
+            if s.remaining_frac <= 1e-12 {
+                s.step += 1;
+                s.remaining_frac = 1.0;
+                if s.step >= w.total_steps() {
+                    s.finished_at = Some(t1);
+                }
+            }
+        }
+
+        now = t1;
+    }
+
+    let finish_times: Vec<Seconds> =
+        states.iter().map(|s| Seconds(s.finished_at.unwrap_or(now))).collect();
+    let makespan = Seconds(finish_times.iter().map(|t| t.0).fold(0.0, f64::max));
+    let declared_bytes: f64 = workloads.iter().map(|w| w.total_bytes()).sum();
+    let declared_flops: f64 = workloads.iter().map(|w| w.total_flops()).sum();
+    let outcome = SimOutcome {
+        makespan,
+        finish_times,
+        total_bytes: states.iter().map(|s| s.bytes_moved).sum(),
+        total_flops: states.iter().map(|s| s.flops_done).sum(),
+        trace,
+        declared_bytes,
+        declared_flops,
+        peak_bw: peak,
+    };
+    outcome.validate()?;
+    Ok(outcome)
+}
+
+/// Verbatim pre-refactor `SimEngine::run_dynamic`.
+pub(super) fn run_dynamic_reference(
+    engine: &SimEngine,
+    partition_cores: &[usize],
+    source: &mut dyn WorkSource,
+) -> Result<DynOutcome> {
+    let n = partition_cores.len();
+    if n == 0 {
+        return Err(Error::InvalidConfig("no partitions".into()));
+    }
+    let total_cores: usize = partition_cores.iter().sum();
+    if total_cores > engine.accel.cores {
+        return Err(Error::InvalidConfig(format!(
+            "partitions use {total_cores} cores > machine {}",
+            engine.accel.cores
+        )));
+    }
+
+    struct Running {
+        id: u64,
+        program: usize,
+        step: usize,
+        remaining_frac: f64,
+        started_at: f64,
+        bytes: f64,
+        flops: f64,
+    }
+
+    struct CachedProgram {
+        key: (usize, usize),
+        _program: Arc<Vec<Phase>>,
+        infos: Vec<PhaseInfo>,
+        bytes: f64,
+        flops: f64,
+    }
+
+    let peak = engine.accel.mem_bw.0;
+    let mut trace = if engine.record_per_partition {
+        BandwidthTrace::new(n)
+    } else {
+        BandwidthTrace::total_only()
+    };
+    let mut running: Vec<Option<Running>> = (0..n).map(|_| None).collect();
+    let mut cache: Vec<CachedProgram> = Vec::new();
+    let mut idle_until = vec![0.0f64; n];
+    let mut done = vec![false; n];
+    let mut jobs: Vec<JobRecord> = Vec::new();
+    let mut moved_bytes = 0.0f64;
+    let mut done_flops = 0.0f64;
+    let mut declared_bytes = 0.0f64;
+    let mut declared_flops = 0.0f64;
+    let mut now = 0.0f64;
+    let mut events = 0usize;
+
+    let mut demand = vec![0.0f64; n];
+    let mut bw_used = vec![0.0f64; n];
+    let mut alloc: Vec<f64> = Vec::with_capacity(n);
+    let mut order_scratch: Vec<usize> = Vec::with_capacity(n);
+
+    loop {
+        for i in 0..n {
+            while running[i].is_none() && !done[i] && idle_until[i] <= now {
+                events += 1;
+                if events > engine.max_events {
+                    return Err(Error::SimInvariant(format!(
+                        "exceeded {} events — runaway dynamic simulation",
+                        engine.max_events
+                    )));
+                }
+                match source.next(i, now) {
+                    DynNext::Job(job) => {
+                        let key = (Arc::as_ptr(&job.phases) as usize, partition_cores[i]);
+                        let program = match cache.iter().position(|c| c.key == key) {
+                            Some(idx) => idx,
+                            None => {
+                                let cores = partition_cores[i];
+                                let infos: Vec<PhaseInfo> = job
+                                    .phases
+                                    .iter()
+                                    .map(|ph| PhaseInfo::of(ph, &engine.accel, cores))
+                                    .collect();
+                                cache.push(CachedProgram {
+                                    key,
+                                    bytes: infos.iter().map(|pi| pi.bytes).sum(),
+                                    flops: infos.iter().map(|pi| pi.flops).sum(),
+                                    infos,
+                                    _program: job.phases.clone(),
+                                });
+                                cache.len() - 1
+                            }
+                        };
+                        let (bytes, flops) = (cache[program].bytes, cache[program].flops);
+                        declared_bytes += bytes;
+                        declared_flops += flops;
+                        if cache[program].infos.is_empty() {
+                            jobs.push(JobRecord {
+                                partition: i,
+                                id: job.id,
+                                started_at: now,
+                                finished_at: now,
+                                bytes: 0.0,
+                                flops: 0.0,
+                            });
+                        } else {
+                            running[i] = Some(Running {
+                                id: job.id,
+                                program,
+                                step: 0,
+                                remaining_frac: 1.0,
+                                started_at: now,
+                                bytes,
+                                flops,
+                            });
+                        }
+                    }
+                    DynNext::IdleUntil(t) => {
+                        if t.is_nan() || t <= now {
+                            return Err(Error::SimInvariant(format!(
+                                "work source idled partition {i} into the past: {t} <= {now}"
+                            )));
+                        }
+                        idle_until[i] = t;
+                    }
+                    DynNext::Finished => done[i] = true,
+                }
+            }
+        }
+
+        if running.iter().all(|r| r.is_none()) && done.iter().all(|&d| d) {
+            break;
+        }
+
+        events += 1;
+        if events > engine.max_events {
+            return Err(Error::SimInvariant(format!(
+                "exceeded {} events — runaway dynamic simulation",
+                engine.max_events
+            )));
+        }
+
+        for i in 0..n {
+            demand[i] = match &running[i] {
+                Some(r) => cache[r.program].infos[r.step].demand,
+                None => 0.0,
+            };
+        }
+        max_min_allocate_into(peak, &demand, &mut order_scratch, &mut alloc);
+
+        let mut next_dt = f64::INFINITY;
+        let mut wake_at: Option<f64> = None;
+        for i in 0..n {
+            match &running[i] {
+                Some(r) => {
+                    let pi = &cache[r.program].infos[r.step];
+                    let rate = phase_rate(pi, alloc[i]);
+                    bw_used[i] = if pi.bytes > 0.0 { rate * pi.bytes } else { 0.0 };
+                    if rate.is_infinite() {
+                        next_dt = 0.0;
+                    } else if rate > 0.0 {
+                        next_dt = next_dt.min(r.remaining_frac / rate);
+                    }
+                }
+                None => {
+                    bw_used[i] = 0.0;
+                    if !done[i] && idle_until[i] > now {
+                        let dt = idle_until[i] - now;
+                        if dt <= next_dt {
+                            next_dt = dt;
+                            wake_at = Some(idle_until[i]);
+                        }
+                    }
+                }
+            }
+        }
+        if next_dt.is_infinite() {
+            return Err(Error::SimInvariant("dynamic deadlock: nothing can progress".into()));
+        }
+        let t1 = match wake_at {
+            Some(w) if w - now <= next_dt => w,
+            _ => now + next_dt,
+        };
+        let dt = t1 - now;
+        trace.record(now, t1, &bw_used);
+
+        for i in 0..n {
+            let Some(r) = running[i].as_mut() else { continue };
+            let pi = &cache[r.program].infos[r.step];
+            let rate = phase_rate(pi, alloc[i]);
+            let progressed = if rate.is_infinite() {
+                r.remaining_frac
+            } else {
+                (rate * dt).min(r.remaining_frac)
+            };
+            moved_bytes += progressed * pi.bytes;
+            done_flops += progressed * pi.flops;
+            let phase_count = cache[r.program].infos.len();
+            r.remaining_frac -= progressed;
+            if r.remaining_frac <= 1e-12 {
+                r.step += 1;
+                r.remaining_frac = 1.0;
+                if r.step >= phase_count {
+                    jobs.push(JobRecord {
+                        partition: i,
+                        id: r.id,
+                        started_at: r.started_at,
+                        finished_at: t1,
+                        bytes: r.bytes,
+                        flops: r.flops,
+                    });
+                    running[i] = None;
+                }
+            }
+        }
+
+        now = t1;
+    }
+
+    let makespan = Seconds(jobs.iter().map(|j| j.finished_at).fold(0.0, f64::max));
+    let outcome = DynOutcome {
+        makespan,
+        trace,
+        jobs,
+        total_bytes: moved_bytes,
+        total_flops: done_flops,
+        declared_bytes,
+        declared_flops,
+        peak_bw: peak,
+    };
+    outcome.validate()?;
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod differential {
+    use super::*;
+    use crate::reuse::{Phase, PhaseClass};
+    use crate::util::units::{Bytes, Flops};
+
+    fn toy() -> AcceleratorConfig {
+        let mut a = AcceleratorConfig::knl_7210();
+        a.cores = 8;
+        a.core_flops = crate::util::units::FlopsPerS(1.0);
+        a.mem_bw = crate::util::units::BytesPerS(100.0);
+        a.conv_efficiency = 1.0;
+        a.elementwise_efficiency = 1.0;
+        a
+    }
+
+    fn phase(flops: f64, bytes: f64) -> Phase {
+        Phase {
+            name: String::new(),
+            layer_id: 0,
+            class: PhaseClass::ComputeDense,
+            flops: Flops(flops),
+            bytes: Bytes(bytes),
+        }
+    }
+
+    /// Bit-level equality for floats: NaN-free simulations make `to_bits`
+    /// the strictest possible comparison.
+    fn assert_bits(a: f64, b: f64, what: &str) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} != {b}");
+    }
+
+    fn assert_traces_identical(a: &BandwidthTrace, b: &BandwidthTrace) {
+        let sa: Vec<_> = a.total.segments().collect();
+        let sb: Vec<_> = b.total.segments().collect();
+        assert_eq!(sa.len(), sb.len(), "segment count");
+        for (i, ((a0, a1, av), (b0, b1, bv))) in sa.iter().zip(&sb).enumerate() {
+            assert_bits(*a0, *b0, &format!("segment {i} start"));
+            assert_bits(*a1, *b1, &format!("segment {i} end"));
+            assert_bits(*av, *bv, &format!("segment {i} bw"));
+        }
+        assert_eq!(a.per_partition.len(), b.per_partition.len());
+        for (p, (pa, pb)) in a.per_partition.iter().zip(&b.per_partition).enumerate() {
+            let sa: Vec<_> = pa.segments().collect();
+            let sb: Vec<_> = pb.segments().collect();
+            assert_eq!(sa.len(), sb.len(), "partition {p} segment count");
+            for ((a0, a1, av), (b0, b1, bv)) in sa.iter().zip(&sb) {
+                assert_bits(*a0, *b0, "partition segment start");
+                assert_bits(*a1, *b1, "partition segment end");
+                assert_bits(*av, *bv, "partition segment bw");
+            }
+        }
+    }
+
+    fn assert_sim_identical(new: &SimOutcome, old: &SimOutcome) {
+        assert_bits(new.makespan.0, old.makespan.0, "makespan");
+        assert_eq!(new.finish_times.len(), old.finish_times.len());
+        for (i, (a, b)) in new.finish_times.iter().zip(&old.finish_times).enumerate() {
+            assert_bits(a.0, b.0, &format!("finish time {i}"));
+        }
+        assert_bits(new.total_bytes, old.total_bytes, "total bytes");
+        assert_bits(new.total_flops, old.total_flops, "total flops");
+        assert_bits(new.declared_bytes, old.declared_bytes, "declared bytes");
+        assert_bits(new.declared_flops, old.declared_flops, "declared flops");
+        assert_traces_identical(&new.trace, &old.trace);
+    }
+
+    fn assert_dyn_identical(new: &DynOutcome, old: &DynOutcome) {
+        assert_bits(new.makespan.0, old.makespan.0, "makespan");
+        assert_bits(new.total_bytes, old.total_bytes, "total bytes");
+        assert_bits(new.total_flops, old.total_flops, "total flops");
+        assert_bits(new.declared_bytes, old.declared_bytes, "declared bytes");
+        assert_bits(new.declared_flops, old.declared_flops, "declared flops");
+        assert_eq!(new.jobs.len(), old.jobs.len(), "job count");
+        for (i, (a, b)) in new.jobs.iter().zip(&old.jobs).enumerate() {
+            assert_eq!(a.partition, b.partition, "job {i} partition");
+            assert_eq!(a.id, b.id, "job {i} id");
+            assert_bits(a.started_at, b.started_at, &format!("job {i} start"));
+            assert_bits(a.finished_at, b.finished_at, &format!("job {i} finish"));
+            assert_bits(a.bytes, b.bytes, &format!("job {i} bytes"));
+            assert_bits(a.flops, b.flops, &format!("job {i} flops"));
+        }
+        assert_traces_identical(&new.trace, &old.trace);
+    }
+
+    /// The offline scenario battery: every structural feature the fluid
+    /// physics handles — contention, water-filling, start delays, start
+    /// phases, repeats, pure copies, instantaneous phases, messy mixes.
+    fn offline_scenarios() -> Vec<Vec<Workload>> {
+        let prog = vec![phase(1.0, 200.0), phase(2.0, 10.0)];
+        let mut messy = Vec::new();
+        for i in 0..4 {
+            let phases: Vec<Phase> = (0..7)
+                .map(|k| phase((i + k) as f64 % 3.0, ((k * 37 + i * 11) % 50) as f64))
+                .collect();
+            messy.push(
+                Workload::new(format!("p{i}"), 1, phases, 3)
+                    .with_start_phase(i * 2)
+                    .with_start_delay(Seconds(i as f64 * 0.1)),
+            );
+        }
+        vec![
+            vec![Workload::new("solo", 2, vec![phase(10.0, 50.0)], 1)],
+            vec![Workload::new("bw", 1, vec![phase(1.0, 1000.0)], 1)],
+            vec![
+                Workload::new("a", 1, vec![phase(1.0, 100.0)], 1),
+                Workload::new("b", 1, vec![phase(1.0, 100.0)], 1),
+            ],
+            vec![
+                Workload::new("small", 1, vec![phase(10.0, 300.0)], 1),
+                Workload::new("big", 1, vec![phase(1.0, 1000.0)], 1),
+            ],
+            vec![
+                Workload::new("a", 1, prog.clone(), 4),
+                Workload::new("b", 1, prog.clone(), 4).with_start_phase(1),
+            ],
+            vec![
+                Workload::new("late", 1, vec![phase(1.0, 10.0)], 2).with_start_delay(Seconds(2.0)),
+                Workload::new("latr", 1, vec![phase(0.5, 35.0)], 3).with_start_delay(Seconds(0.7)),
+                Workload::new("now", 1, vec![phase(3.0, 5.0)], 1),
+            ],
+            vec![Workload::new("copy", 1, vec![phase(0.0, 200.0)], 1)],
+            vec![Workload::new("instant", 1, vec![phase(0.0, 0.0), phase(1.0, 5.0)], 2)],
+            messy,
+        ]
+    }
+
+    #[test]
+    fn run_is_byte_identical_to_the_pre_refactor_engine() {
+        let engine = SimEngine::new(&toy());
+        for (k, ws) in offline_scenarios().into_iter().enumerate() {
+            let new = engine.run(&ws).unwrap_or_else(|e| panic!("scenario {k}: {e}"));
+            let old = run_reference(&engine, &ws).unwrap();
+            assert_sim_identical(&new, &old);
+        }
+    }
+
+    #[test]
+    fn run_with_partition_traces_is_byte_identical() {
+        let engine = SimEngine::new(&toy()).with_partition_traces();
+        for ws in offline_scenarios() {
+            let new = engine.run(&ws).unwrap();
+            let old = run_reference(&engine, &ws).unwrap();
+            assert_sim_identical(&new, &old);
+        }
+    }
+
+    /// Scripted work source: (release time, program) per partition, with
+    /// programs shared via `Arc` so the engine's characterization cache
+    /// is exercised exactly like a serving run.
+    struct Script {
+        queues: Vec<Vec<(f64, Arc<Vec<Phase>>)>>,
+        cursor: Vec<usize>,
+        next_id: u64,
+    }
+
+    impl Script {
+        fn new(queues: Vec<Vec<(f64, Arc<Vec<Phase>>)>>) -> Self {
+            let cursor = vec![0; queues.len()];
+            Self { queues, cursor, next_id: 0 }
+        }
+    }
+
+    impl WorkSource for Script {
+        fn next(&mut self, partition: usize, now: f64) -> DynNext {
+            let k = self.cursor[partition];
+            match self.queues[partition].get(k) {
+                None => DynNext::Finished,
+                Some((release, phases)) => {
+                    if *release > now {
+                        DynNext::IdleUntil(*release)
+                    } else {
+                        self.cursor[partition] += 1;
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        DynNext::Job(DynJob { id, phases: phases.clone() })
+                    }
+                }
+            }
+        }
+    }
+
+    fn dynamic_scenarios() -> Vec<Vec<Vec<(f64, Arc<Vec<Phase>>)>>> {
+        let solo = Arc::new(vec![phase(10.0, 50.0)]);
+        let greedy = Arc::new(vec![phase(1.0, 100.0)]);
+        let mixed = Arc::new(vec![phase(0.7, 33.0), phase(4.0, 2.0), phase(0.0, 60.0)]);
+        let empty: Arc<Vec<Phase>> = Arc::new(vec![]);
+        let instant = Arc::new(vec![phase(0.0, 0.0)]);
+        vec![
+            vec![vec![(0.0, solo.clone())]],
+            vec![vec![(0.0, solo.clone()), (10.0, solo.clone())]],
+            vec![vec![(0.0, greedy.clone())], vec![(0.0, greedy.clone())]],
+            vec![vec![(0.0, empty.clone()), (1.0, instant.clone()), (1.5, mixed.clone())]],
+            vec![
+                vec![(0.0, mixed.clone()), (0.3, greedy.clone()), (2.7, mixed.clone())],
+                vec![(0.13, greedy.clone()), (0.31, mixed.clone())],
+                vec![(1.9, solo.clone()), (2.0, empty.clone()), (2.1, greedy.clone())],
+            ],
+            vec![vec![], vec![(0.5, mixed.clone())]],
+            vec![vec![], vec![]],
+        ]
+    }
+
+    #[test]
+    fn run_dynamic_is_byte_identical_to_the_pre_refactor_engine() {
+        let engine = SimEngine::new(&toy());
+        for (k, feed) in dynamic_scenarios().into_iter().enumerate() {
+            let cores = vec![1usize; feed.len()];
+            let mut src_new = Script::new(feed.clone());
+            let mut src_old = Script::new(feed);
+            let new = engine
+                .run_dynamic(&cores, &mut src_new)
+                .unwrap_or_else(|e| panic!("scenario {k}: {e}"));
+            let old = run_dynamic_reference(&engine, &cores, &mut src_old).unwrap();
+            assert_dyn_identical(&new, &old);
+        }
+    }
+
+    #[test]
+    fn run_dynamic_with_partition_traces_is_byte_identical() {
+        let engine = SimEngine::new(&toy()).with_partition_traces();
+        for feed in dynamic_scenarios() {
+            if feed.is_empty() {
+                continue;
+            }
+            let cores = vec![1usize; feed.len()];
+            let mut src_new = Script::new(feed.clone());
+            let mut src_old = Script::new(feed);
+            let new = engine.run_dynamic(&cores, &mut src_new).unwrap();
+            let old = run_dynamic_reference(&engine, &cores, &mut src_old).unwrap();
+            assert_dyn_identical(&new, &old);
+        }
+    }
+
+    #[test]
+    fn reference_rejects_what_the_engine_rejects() {
+        let engine = SimEngine::new(&toy());
+        assert!(run_reference(&engine, &[]).is_err());
+        assert!(engine.run(&[]).is_err());
+        let over = vec![
+            Workload::new("a", 6, vec![phase(1.0, 1.0)], 1),
+            Workload::new("b", 6, vec![phase(1.0, 1.0)], 1),
+        ];
+        assert!(run_reference(&engine, &over).is_err());
+        assert!(engine.run(&over).is_err());
+    }
+}

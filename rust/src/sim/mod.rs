@@ -9,10 +9,15 @@
 //! phase whose allocation is below its demand slows down proportionally
 //! (the roofline in fluid form). Between phase-completion events all
 //! rates are constant, so the event-driven simulation is exact.
+//!
+//! The characterize → allocate → pick-dt → advance physics lives in one
+//! place only — the `step` module's fluid stepper — and both engine
+//! modes (`SimEngine::run`, `SimEngine::run_dynamic`) drive it.
 
 mod dram;
 mod engine;
 mod memory;
+mod step;
 mod trace;
 mod workload;
 

@@ -1,0 +1,261 @@
+//! The single per-event fluid stepper shared by both engine modes.
+//!
+//! The paper's statistical traffic shaping rests on one simulated
+//! physics — characterize each running phase's bandwidth demand,
+//! allocate the shared pool max–min fairly, pick the next event time,
+//! advance every phase through the interval — and both the offline
+//! scheduler ([`super::engine::SimEngine::run`]) and the serving mode
+//! ([`super::engine::SimEngine::run_dynamic`]) must agree on it exactly.
+//! This module is the only copy of that physics: the engines are thin
+//! drivers that present their job state through [`StepSlots`] and apply
+//! the per-slot progress the stepper hands back.
+
+use super::memory::max_min_allocate_into;
+use super::trace::BandwidthTrace;
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::reuse::Phase;
+
+/// A phase is complete once its remaining fraction drops to this.
+pub(crate) const PHASE_DONE_EPS: f64 = 1e-12;
+
+/// Per-phase characterization at a fixed core count, computed once per
+/// phase instead of per event: `full_rate` is 1/tc (fraction of the phase
+/// per second at unthrottled compute speed) and `demand` the bandwidth
+/// that sustains it.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PhaseInfo {
+    pub full_rate: f64,
+    pub demand: f64,
+    pub bytes: f64,
+    pub flops: f64,
+}
+
+impl PhaseInfo {
+    pub fn of(ph: &Phase, accel: &AcceleratorConfig, cores: usize) -> Self {
+        let tc = ph.compute_time(accel, cores).0;
+        if tc <= 0.0 {
+            Self {
+                full_rate: f64::INFINITY,
+                demand: if ph.bytes.0 > 0.0 { f64::INFINITY } else { 0.0 },
+                bytes: ph.bytes.0,
+                flops: ph.flops.0,
+            }
+        } else {
+            Self {
+                full_rate: 1.0 / tc,
+                demand: ph.bytes.0 / tc,
+                bytes: ph.bytes.0,
+                flops: ph.flops.0,
+            }
+        }
+    }
+}
+
+/// Progress rate (fraction of the phase per second) under an allocation —
+/// the roofline: min(compute rate, allocated-bandwidth rate).
+pub(crate) fn phase_rate(pi: &PhaseInfo, alloc: f64) -> f64 {
+    if pi.bytes <= 0.0 {
+        if pi.full_rate.is_finite() {
+            pi.full_rate
+        } else {
+            f64::INFINITY
+        }
+    } else if pi.full_rate.is_finite() {
+        pi.full_rate.min(alloc / pi.bytes)
+    } else {
+        alloc / pi.bytes
+    }
+}
+
+/// What one slot (partition) is doing at the start of an event.
+pub(crate) enum Activity<'a> {
+    /// Executing `info` with `remaining_frac` of the phase left.
+    Run { info: &'a PhaseInfo, remaining_frac: f64 },
+    /// Release-gated: idle until this absolute time (must be `> now`).
+    SleepUntil(f64),
+    /// Finished, or waiting on nothing the stepper should time.
+    Off,
+}
+
+/// One slot's progress over the stepped interval, handed back to the
+/// driver via [`StepSlots::apply`]. Only slots that were
+/// [`Activity::Run`] receive one.
+pub(crate) struct SlotAdvance {
+    /// Bytes moved by this slot over the interval.
+    pub bytes: f64,
+    /// FLOPs executed by this slot over the interval.
+    pub flops: f64,
+    /// The phase's remaining fraction after the interval.
+    pub remaining_frac: f64,
+    /// The phase ran to completion (driver advances to the next phase).
+    pub completed: bool,
+}
+
+/// How the stepper turns the selected inter-event dt into an interval.
+///
+/// The two variants advance the same physics; they differ only in
+/// floating-point bookkeeping at the interval boundary, preserved
+/// bit-for-bit from the engines this stepper was extracted out of (the
+/// differential tests in `engine_reference.rs` pin both):
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum StepTiming {
+    /// Offline mode: the event lands at `now + dt` and every phase
+    /// advances by the raw selected `dt`.
+    Offline,
+    /// Serving mode: when a sleep is the binding event the interval ends
+    /// *exactly* at the wake-up time (work sources compare `now` against
+    /// their own release times, and `now + (wake − now)` need not equal
+    /// `wake` in floating point), and phases advance by `t1 − now`.
+    Serving,
+}
+
+/// The driver's view of its job state, one slot per partition. The
+/// stepper queries [`activity`](Self::activity) for every slot at the
+/// start of the event and calls [`apply`](Self::apply) for every running
+/// slot once the interval is chosen.
+pub(crate) trait StepSlots {
+    fn activity(&self, slot: usize, now: f64) -> Activity<'_>;
+    fn apply(&mut self, slot: usize, adv: &SlotAdvance, t1: f64);
+}
+
+/// Per-slot scratch cached between the characterize and advance passes
+/// of one event (the state cannot change in between).
+enum Cached {
+    Run { info: PhaseInfo, remaining: f64, rate: f64 },
+    Sleep { until: f64 },
+    Off,
+}
+
+/// The fluid stepper: owns the hot-loop scratch buffers so a full run
+/// performs no per-event allocation.
+pub(crate) struct FluidStepper {
+    peak: f64,
+    timing: StepTiming,
+    demand: Vec<f64>,
+    bw_used: Vec<f64>,
+    alloc: Vec<f64>,
+    order: Vec<usize>,
+    cache: Vec<Cached>,
+}
+
+impl FluidStepper {
+    pub fn new(peak: f64, slots: usize, timing: StepTiming) -> Self {
+        Self {
+            peak,
+            timing,
+            demand: vec![0.0; slots],
+            bw_used: vec![0.0; slots],
+            alloc: Vec::with_capacity(slots),
+            order: Vec::with_capacity(slots),
+            cache: (0..slots).map(|_| Cached::Off).collect(),
+        }
+    }
+
+    /// Advance the simulation by one event: characterize → allocate →
+    /// pick dt → record the trace segment → advance every running slot.
+    /// Returns the event time `t1` (the caller's new `now`), or an error
+    /// when nothing can progress (a deadlocked driver is a bug).
+    pub fn step<S: StepSlots>(
+        &mut self,
+        now: f64,
+        slots: &mut S,
+        trace: &mut BandwidthTrace,
+    ) -> Result<f64> {
+        let n = self.cache.len();
+
+        // Characterize each running phase (drivers cache PhaseInfo per
+        // program, so this is a table lookup).
+        for i in 0..n {
+            match slots.activity(i, now) {
+                Activity::Run { info, remaining_frac } => {
+                    self.demand[i] = info.demand;
+                    self.cache[i] =
+                        Cached::Run { info: *info, remaining: remaining_frac, rate: 0.0 };
+                }
+                Activity::SleepUntil(until) => {
+                    debug_assert!(until > now, "sleep into the past: {until} <= {now}");
+                    self.demand[i] = 0.0;
+                    self.cache[i] = Cached::Sleep { until };
+                }
+                Activity::Off => {
+                    self.demand[i] = 0.0;
+                    self.cache[i] = Cached::Off;
+                }
+            }
+        }
+
+        max_min_allocate_into(self.peak, &self.demand, &mut self.order, &mut self.alloc);
+
+        // Next event: earliest phase completion or sleep wake-up. Track
+        // the binding wake-up's absolute time so serving mode can land on
+        // it exactly.
+        let mut next_dt = f64::INFINITY;
+        let mut wake_at: Option<f64> = None;
+        for i in 0..n {
+            match &mut self.cache[i] {
+                Cached::Run { info, remaining, rate } => {
+                    let r = phase_rate(info, self.alloc[i]);
+                    *rate = r;
+                    self.bw_used[i] = if info.bytes > 0.0 { r * info.bytes } else { 0.0 };
+                    debug_assert!(
+                        self.bw_used[i] <= self.alloc[i] * (1.0 + 1e-9) || self.demand[i] == 0.0
+                    );
+                    if r.is_infinite() {
+                        // Instantaneous phase (no flops, no bytes): complete now.
+                        next_dt = 0.0;
+                    } else if r > 0.0 {
+                        next_dt = next_dt.min(*remaining / r);
+                    }
+                }
+                Cached::Sleep { until } => {
+                    self.bw_used[i] = 0.0;
+                    let dt = *until - now;
+                    if dt <= next_dt {
+                        next_dt = dt;
+                        wake_at = Some(*until);
+                    }
+                }
+                Cached::Off => self.bw_used[i] = 0.0,
+            }
+        }
+        if next_dt.is_infinite() {
+            return Err(Error::SimInvariant(
+                "fluid deadlock: no runnable phase and no pending wake-up".into(),
+            ));
+        }
+
+        let (t1, dt) = match self.timing {
+            StepTiming::Offline => (now + next_dt, next_dt),
+            StepTiming::Serving => {
+                let t1 = match wake_at {
+                    Some(w) if w - now <= next_dt => w,
+                    _ => now + next_dt,
+                };
+                (t1, t1 - now)
+            }
+        };
+        trace.record(now, t1, &self.bw_used);
+
+        // Advance every running slot by dt, completing phases that hit
+        // zero; the driver owns all bookkeeping beyond the current phase.
+        for i in 0..n {
+            let Cached::Run { info, remaining, rate } = &self.cache[i] else { continue };
+            let progressed = if rate.is_infinite() {
+                *remaining
+            } else {
+                (rate * dt).min(*remaining)
+            };
+            let after = *remaining - progressed;
+            let adv = SlotAdvance {
+                bytes: progressed * info.bytes,
+                flops: progressed * info.flops,
+                remaining_frac: after,
+                completed: after <= PHASE_DONE_EPS,
+            };
+            slots.apply(i, &adv, t1);
+        }
+
+        Ok(t1)
+    }
+}

@@ -80,6 +80,12 @@ pub struct SweepGrid {
     pub serve_duration_s: f64,
     /// Seed for serve scenarios' arrival streams.
     pub serve_seed: u64,
+    /// Per-partition queue bound for serve scenarios (0 = unbounded).
+    pub serve_queue_cap: usize,
+    /// Per-request latency deadline for serve scenarios, ms (0 = none).
+    pub serve_slo_ms: f64,
+    /// Batch hold timeout for serve scenarios, ms (0 = dispatch on idle).
+    pub serve_batch_timeout_ms: f64,
     pub trace_samples: usize,
 }
 
@@ -95,6 +101,9 @@ impl SweepGrid {
             steady_batches: 6,
             serve_duration_s: 0.25,
             serve_seed: 42,
+            serve_queue_cap: 0,
+            serve_slo_ms: 0.0,
+            serve_batch_timeout_ms: 0.0,
             trace_samples: 400,
         }
     }
@@ -136,6 +145,24 @@ impl SweepGrid {
 
     pub fn serve_seed(mut self, seed: u64) -> Self {
         self.serve_seed = seed;
+        self
+    }
+
+    /// Bound each serve-scenario partition queue (0 = unbounded).
+    pub fn serve_queue_cap(mut self, cap: usize) -> Self {
+        self.serve_queue_cap = cap;
+        self
+    }
+
+    /// Latency deadline for serve scenarios in ms (0 = none).
+    pub fn serve_slo_ms(mut self, ms: f64) -> Self {
+        self.serve_slo_ms = ms;
+        self
+    }
+
+    /// Batch hold timeout for serve scenarios in ms (0 = on idle).
+    pub fn serve_batch_timeout_ms(mut self, ms: f64) -> Self {
+        self.serve_batch_timeout_ms = ms;
         self
     }
 
@@ -201,6 +228,18 @@ impl SweepGrid {
             return Err(Error::InvalidConfig(format!(
                 "serve duration {} must be > 0",
                 self.serve_duration_s
+            )));
+        }
+        if !(self.serve_slo_ms.is_finite() && self.serve_slo_ms >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "serve SLO {} must be finite and >= 0 ms",
+                self.serve_slo_ms
+            )));
+        }
+        if !(self.serve_batch_timeout_ms.is_finite() && self.serve_batch_timeout_ms >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "serve batch timeout {} must be finite and >= 0 ms",
+                self.serve_batch_timeout_ms
             )));
         }
         if self.trace_samples == 0 {
@@ -315,6 +354,9 @@ mod tests {
         assert!(SweepGrid::new(&knl()).arrival_rates(vec![-2.0]).validate().is_err());
         assert!(SweepGrid::new(&knl()).arrival_rates(vec![f64::NAN]).validate().is_err());
         assert!(SweepGrid::new(&knl()).serve_duration(0.0).validate().is_err());
+        assert!(SweepGrid::new(&knl()).serve_slo_ms(f64::NAN).validate().is_err());
+        assert!(SweepGrid::new(&knl()).serve_slo_ms(-1.0).validate().is_err());
+        assert!(SweepGrid::new(&knl()).serve_batch_timeout_ms(-2.0).validate().is_err());
         assert!(SweepGrid::new(&knl()).steady_batches(0).validate().is_err());
         assert!(SweepGrid::new(&knl()).trace_samples(0).validate().is_err());
         SweepGrid::new(&knl()).validate().unwrap();

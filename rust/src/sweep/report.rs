@@ -32,6 +32,9 @@ pub struct SweepMetrics {
     pub p50_ms: Option<f64>,
     pub p95_ms: Option<f64>,
     pub p99_ms: Option<f64>,
+    /// Overload accounting — `Some` only for serving scenarios.
+    pub drop_rate: Option<f64>,
+    pub goodput_ips: Option<f64>,
 }
 
 impl SweepMetrics {
@@ -50,6 +53,8 @@ impl SweepMetrics {
             p50_ms: None,
             p95_ms: None,
             p99_ms: None,
+            drop_rate: None,
+            goodput_ips: None,
         }
     }
 
@@ -68,6 +73,8 @@ impl SweepMetrics {
             p50_ms: None,
             p95_ms: None,
             p99_ms: None,
+            drop_rate: None,
+            goodput_ips: None,
         }
     }
 
@@ -95,6 +102,8 @@ impl SweepMetrics {
             p50_ms: Some(out.latency.p50_ms),
             p95_ms: Some(out.latency.p95_ms),
             p99_ms: Some(out.latency.p99_ms),
+            drop_rate: Some(out.drop_rate),
+            goodput_ips: Some(out.goodput_ips),
         }
     }
 
@@ -207,11 +216,13 @@ impl SweepReport {
             "cov",
             "sync cov",
             "p99 ms",
+            "drop %",
         ])
         .left_first();
         for (rank, o) in self.ranked().iter().enumerate() {
             let s = &o.scenario;
             let rate = if s.is_serve() { format!("{:.0}", s.arrival_rate) } else { "-".into() };
+            let opt = |v: Option<String>| v.unwrap_or_else(|| "-".to_string());
             match o.metrics() {
                 Some(m) => t.row(vec![
                     (rank + 1).to_string(),
@@ -225,10 +236,8 @@ impl SweepReport {
                     format!("{:+.1}%", m.avg_bw_increase * 100.0),
                     format!("{:.3}", m.smoothness_cov),
                     format!("{:.3}", m.baseline_cov),
-                    match m.p99_ms {
-                        Some(p) => format!("{p:.1}"),
-                        None => "-".to_string(),
-                    },
+                    opt(m.p99_ms.map(|p| format!("{p:.1}"))),
+                    opt(m.drop_rate.map(|d| format!("{:.1}", d * 100.0))),
                 ]),
                 None => t.row(vec![
                     "-".to_string(),
@@ -238,6 +247,7 @@ impl SweepReport {
                     s.stagger.name().to_string(),
                     rate,
                     "DRAM".to_string(),
+                    "-".to_string(),
                     "-".to_string(),
                     "-".to_string(),
                     "-".to_string(),
@@ -273,6 +283,8 @@ impl SweepReport {
             "p50_ms",
             "p95_ms",
             "p99_ms",
+            "drop_rate",
+            "goodput_ips",
             "reason",
         ]);
         let f = crate::util::csv::format_float;
@@ -303,11 +315,13 @@ impl SweepReport {
                     opt(m.p50_ms),
                     opt(m.p95_ms),
                     opt(m.p99_ms),
+                    opt(m.drop_rate),
+                    opt(m.goodput_ips),
                     String::new(),
                 ],
                 ScenarioStatus::Infeasible(why) => {
                     let mut v = vec!["dram_infeasible".to_string()];
-                    v.extend((0..12).map(|_| String::new()));
+                    v.extend((0..14).map(|_| String::new()));
                     v.push(why.clone());
                     v
                 }
@@ -366,6 +380,8 @@ mod tests {
             p50_ms: None,
             p95_ms: None,
             p99_ms: None,
+            drop_rate: None,
+            goodput_ips: None,
         }
     }
 
@@ -394,6 +410,8 @@ mod tests {
             m.p50_ms = Some(p99 / 4.0);
             m.p95_ms = Some(p99 / 2.0);
             m.p99_ms = Some(p99);
+            m.drop_rate = Some(0.25);
+            m.goodput_ips = Some(48.0);
         }
         o
     }
@@ -463,13 +481,19 @@ mod tests {
             partitions: 1,
             arrival_rate: 100.0,
             requests: 10,
-            batches: 10,
+            served: 9,
+            dropped: 1,
+            drop_rate: 0.1,
+            batches: 9,
             mean_batch: 1.0,
             queue_peak: 3,
             makespan_s: 1.0,
             throughput_ips: thr,
+            goodput_ips: thr * 0.9,
             latency: LatencyStats {
-                count: 10,
+                count: 9,
+                dropped: 1,
+                slo_hits: 8,
                 mean_ms: p99 / 2.0,
                 p50_ms: p99 / 4.0,
                 p95_ms: p99 / 2.0,
@@ -486,8 +510,11 @@ mod tests {
         assert!((m.relative_performance - 1.08).abs() < 1e-12);
         assert!((m.std_reduction - 0.2).abs() < 1e-12);
         assert_eq!(m.p99_ms, Some(50.0));
+        assert_eq!(m.drop_rate, Some(0.1));
+        assert_eq!(m.goodput_ips, Some(108.0 * 0.9));
         let b = SweepMetrics::serve_baseline_row(&base);
         assert_eq!(b.relative_performance, 1.0);
         assert_eq!(b.p99_ms, Some(80.0));
+        assert_eq!(b.drop_rate, Some(0.1));
     }
 }

@@ -123,6 +123,9 @@ impl SweepRunner {
             .duration(self.grid.serve_duration_s)
             .seed(self.grid.serve_seed)
             .stagger(scenario.stagger)
+            .queue_cap(self.grid.serve_queue_cap)
+            .slo_ms(self.grid.serve_slo_ms)
+            .batch_timeout_ms(self.grid.serve_batch_timeout_ms)
             .trace_samples(self.grid.trace_samples)
     }
 

@@ -156,3 +156,75 @@ fn serve_outcome_is_seed_deterministic() {
     let c = run(6);
     assert!(a.requests != c.requests || a.latency != c.latency, "seed must matter");
 }
+
+#[test]
+fn bounded_slo_run_sheds_load_and_beats_unbounded_p99() {
+    // The overload acceptance bar: at a fixed seed and a rate well above
+    // the synchronous capacity, the bounded-queue + SLO run must report
+    // nonzero drops and a strictly lower p99 than the legacy unbounded
+    // run — overload becomes a measured goodput/drop trade-off instead
+    // of an unbounded-latency artifact.
+    let accel = knl();
+    let graph = resnet50();
+    let capacity = sync_capacity_ips();
+    let rate = capacity * 2.0;
+    let duration = 400.0 / rate; // ≈ 400 requests at any calibration
+    let run = |sim: ServeSimulator| {
+        sim.partitions(2)
+            .arrival(ArrivalProcess::poisson(rate))
+            .duration(duration)
+            .seed(7)
+            .trace_samples(64)
+            .run()
+            .unwrap()
+    };
+    let unbounded = run(ServeSimulator::new(&accel, &graph));
+    let bounded = run(ServeSimulator::new(&accel, &graph).queue_cap(4).slo_ms(250.0));
+
+    // Same stream on both machines.
+    assert_eq!(unbounded.requests, bounded.requests);
+    assert!(unbounded.requests > 200, "want a heavy stream, got {}", unbounded.requests);
+    assert_eq!(unbounded.dropped, 0, "legacy run drops nothing");
+    assert_eq!(unbounded.served, unbounded.requests);
+
+    assert!(bounded.dropped > 0, "2x overload against cap 4 must shed load");
+    assert_eq!(bounded.served + bounded.dropped, bounded.requests);
+    assert_eq!(bounded.latency.count, bounded.served);
+    assert!(bounded.queue_peak <= 4, "queue peak {} over cap", bounded.queue_peak);
+    assert!(
+        bounded.latency.p99_ms < unbounded.latency.p99_ms,
+        "bounded p99 {:.1} ms must beat unbounded {:.1} ms",
+        bounded.latency.p99_ms,
+        unbounded.latency.p99_ms
+    );
+    assert!(bounded.goodput_ips <= bounded.throughput_ips + 1e-9);
+    assert!(bounded.drop_rate > 0.0 && bounded.drop_rate < 1.0);
+}
+
+#[test]
+fn overload_controls_keep_reports_deterministic() {
+    // The determinism bar extends to the overload path: bounded + SLO +
+    // batch-timeout runs must stay byte-identical for a fixed seed.
+    let accel = knl();
+    let graph = resnet50();
+    let run = || {
+        ServeSimulator::new(&accel, &graph)
+            .partitions(2)
+            .arrival(ArrivalProcess::poisson(sync_capacity_ips() * 1.5))
+            .duration(0.3)
+            .seed(21)
+            .queue_cap(6)
+            .slo_ms(150.0)
+            .batch_timeout_ms(2.0)
+            .trace_samples(64)
+            .run()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.latency, b.latency);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.total_bytes, b.total_bytes);
+}

@@ -229,3 +229,97 @@ fn prop_serve_drains_every_request() {
         },
     );
 }
+
+#[test]
+fn prop_overload_accounting_is_conserved() {
+    check(
+        &Config { cases: 14, seed: 0xCAFE, max_shrink_steps: 0 },
+        "served + dropped = arrived; goodput <= throughput; queue <= cap",
+        |rng| {
+            let rate = rng.range_f64(2000.0, 50_000.0);
+            let cap = rng.range_u64(1, 16) as usize;
+            let slo_ms = rng.range_f64(0.5, 50.0);
+            let timeout_ms = [0.0, rng.range_f64(0.1, 5.0)][rng.next_below(2) as usize];
+            (rate, cap, slo_ms, timeout_ms, rng.next_u64())
+        },
+        no_shrink,
+        |&(rate, cap, slo_ms, timeout_ms, seed)| {
+            let accel = AcceleratorConfig::knl_7210();
+            let out = ServeSimulator::new(&accel, &tiny_cnn())
+                .partitions(2)
+                .arrival(ArrivalProcess::poisson(rate))
+                .duration(0.01)
+                .seed(seed)
+                .queue_cap(cap)
+                .slo_ms(slo_ms)
+                .batch_timeout_ms(timeout_ms)
+                .trace_samples(16)
+                .run()
+                .map_err(|e| e.to_string())?;
+            if out.served + out.dropped != out.requests {
+                return Err(format!(
+                    "{} served + {} dropped != {} arrived",
+                    out.served, out.dropped, out.requests
+                ));
+            }
+            if out.latency.count != out.served {
+                return Err(format!("{} samples for {} served", out.latency.count, out.served));
+            }
+            if out.latency.dropped != out.dropped {
+                return Err("recorder and controller disagree on drops".into());
+            }
+            if out.queue_peak > cap {
+                return Err(format!("queue peak {} exceeds cap {cap}", out.queue_peak));
+            }
+            if out.goodput_ips > out.throughput_ips + 1e-9 {
+                return Err(format!(
+                    "goodput {} exceeds throughput {}",
+                    out.goodput_ips, out.throughput_ips
+                ));
+            }
+            if !(0.0..=1.0).contains(&out.drop_rate) {
+                return Err(format!("drop rate {} out of range", out.drop_rate));
+            }
+            if out.latency.slo_hits > out.served {
+                return Err("more SLO hits than served requests".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_unbounded_runs_never_drop() {
+    check(
+        &Config { cases: 8, seed: 0xB0A7, max_shrink_steps: 0 },
+        "without a cap or SLO every arrival is served, whatever the batching policy",
+        |rng| {
+            let rate = rng.range_f64(1000.0, 20_000.0);
+            let timeout_ms = [0.0, rng.range_f64(0.1, 10.0)][rng.next_below(2) as usize];
+            (rate, timeout_ms, rng.next_u64())
+        },
+        no_shrink,
+        |&(rate, timeout_ms, seed)| {
+            let accel = AcceleratorConfig::knl_7210();
+            let out = ServeSimulator::new(&accel, &tiny_cnn())
+                .partitions(2)
+                .arrival(ArrivalProcess::poisson(rate))
+                .duration(0.01)
+                .seed(seed)
+                .batch_timeout_ms(timeout_ms)
+                .trace_samples(16)
+                .run()
+                .map_err(|e| e.to_string())?;
+            if out.dropped != 0 {
+                return Err(format!("unbounded run dropped {}", out.dropped));
+            }
+            if out.served != out.requests {
+                return Err(format!("served {} of {}", out.served, out.requests));
+            }
+            if (out.goodput_ips - out.throughput_ips).abs() > 1e-9 {
+                return Err("no SLO: goodput must equal throughput".into());
+            }
+            Ok(())
+        },
+    );
+}
