@@ -8,12 +8,19 @@
 //! cargo run --release --example serve_latency -- \
 //!     --model resnet50 --partitions 1,2,4 --duration 0.5 --seed 42 \
 //!     --arrival bursty --burstiness 6
+//!
+//! # Adaptive re-partitioning under a step-load profile:
+//! cargo run --release --example serve_latency -- \
+//!     --model resnet50 --partitions 1,2,4 --adaptive \
+//!     --rate-profile 150:700:0.4 --duration 0.6
 //! ```
 
 use trafficshape::cli::CommandSpec;
 use trafficshape::config::AcceleratorConfig;
 use trafficshape::model;
-use trafficshape::serve::{roofline_capacity_ips, ArrivalKind, ServeExperiment};
+use trafficshape::serve::{
+    roofline_capacity_ips, AdaptiveConfig, ArrivalKind, ArrivalProcess, ServeExperiment,
+};
 
 fn main() -> std::process::ExitCode {
     let spec = CommandSpec::new("serve_latency", "throughput-latency curves for served requests")
@@ -24,6 +31,9 @@ fn main() -> std::process::ExitCode {
         .opt("seed", "N", Some("42"), "arrival-stream rng seed")
         .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
         .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
+        .opt("rate-profile", "L:H:P[:S]", None, "rate profile low:high:period[:step|ramp]")
+        .switch("adaptive", "add a runtime-repartitioning row (candidates = --partitions)")
+        .opt("epoch-ms", "MS", Some("50"), "adaptive: epoch (reconfig window) length")
         .opt("queue-cap", "N", Some("0"), "per-partition queue bound (0 = unbounded)")
         .opt("slo-ms", "MS", Some("0"), "latency deadline; stale work is shed (0 = none)")
         .opt("batch-timeout", "MS", Some("0"), "hold under-filled batches (0 = on idle)")
@@ -42,12 +52,17 @@ fn main() -> std::process::ExitCode {
         let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
         let graph = model::by_name(m.get("model").unwrap_or("resnet50"))?;
         let burstiness = m.get_f64("burstiness")?.unwrap_or(4.0);
-        let arrival = ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?;
+        let profile = m.get("rate-profile").map(ArrivalProcess::parse_profile).transpose()?;
+        let arrival = match &profile {
+            Some(p) => ArrivalKind::from_process(p).expect("parse_profile returns piecewise"),
+            None => ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?,
+        };
+        let partitions = m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4]);
         let cap = roofline_capacity_ips(&accel, &graph);
         println!("{}: synchronous roofline capacity ≈ {cap:.0} img/s", graph.name);
 
         let mut exp = ServeExperiment::new(&accel, &graph)
-            .partitions(m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4]))
+            .partitions(partitions.clone())
             .arrival(arrival)
             .duration(m.get_f64("duration")?.unwrap_or(0.5))
             .seed(m.get_usize("seed")?.unwrap_or(42) as u64)
@@ -55,8 +70,14 @@ fn main() -> std::process::ExitCode {
             .slo_ms(m.get_f64("slo-ms")?.unwrap_or(0.0))
             .batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
             .threads(m.get_usize("threads")?.unwrap_or(0));
+        if m.flag("adaptive") {
+            let epoch_s = m.get_f64("epoch-ms")?.unwrap_or(50.0) / 1e3;
+            exp = exp.adaptive(AdaptiveConfig::new(partitions).epoch_s(epoch_s));
+        }
         if let Some(rates) = m.get_f64_list("rate")? {
             exp = exp.rates(rates);
+        } else if let Some(p) = &profile {
+            exp = exp.rates(vec![p.mean_rate()]);
         }
         let curve = exp.run()?;
         print!("{}", curve.render());
@@ -68,6 +89,14 @@ fn main() -> std::process::ExitCode {
                 o.latency.p99_ms,
                 o.throughput_ips,
                 o.drop_rate * 100.0
+            );
+        }
+        if let Some(o) = curve.adaptive_at(curve.peak_rate()) {
+            println!(
+                "→ adaptive: {} reconfiguration(s), partitions {} — p99 {:.1} ms",
+                o.reconfigurations(),
+                o.trajectory_string(),
+                o.latency.p99_ms
             );
         }
         Ok(())

@@ -16,7 +16,9 @@ use trafficshape::error::{Error, Result};
 use trafficshape::experiments::{list_experiments, run_by_id};
 use trafficshape::model;
 use trafficshape::runtime::find_artifact_dir;
-use trafficshape::serve::{ArrivalKind, DispatchPolicy, ServeExperiment};
+use trafficshape::serve::{
+    AdaptiveConfig, ArrivalKind, ArrivalProcess, DispatchPolicy, ServeExperiment,
+};
 use trafficshape::shaping::StaggerPolicy;
 use trafficshape::sweep::{SweepGrid, SweepRunner};
 use trafficshape::util::table::Table;
@@ -42,8 +44,8 @@ fn app() -> App {
                 .opt("staggers", "LIST", Some("uniform_phase"), "stagger policies to sweep")
                 .opt("serve-duration", "S", Some("0.25"), "arrival window for serve rows")
                 .opt("seed", "N", Some("42"), "serve arrival-stream seed")
-                .opt("queue-cap", "N", Some("0"), "serve rows: queue bound (0 = unbounded)")
-                .opt("slo-ms", "MS", Some("0"), "serve rows: latency deadline (0 = none)")
+                .opt("queue-cap", "LIST", Some("0"), "serve rows: queue-bound axis (0 = unbounded)")
+                .opt("slo-ms", "LIST", Some("0"), "serve rows: latency-deadline axis (0 = none)")
                 .opt("batch-timeout", "MS", Some("0"), "serve rows: batch hold (0 = on idle)")
                 .opt("batches", "N", Some("6"), "steady-state batches")
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
@@ -58,10 +60,13 @@ fn app() -> App {
                 .opt("policy", "NAME", Some("shortest_queue"), "round_robin|shortest_queue")
                 .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
                 .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
+                .opt("rate-profile", "L:H:P[:S]", None, "rate profile low:high:period[:step|ramp]")
                 .opt("stagger", "NAME", Some("uniform_phase"), "none|uniform_phase|random_delay")
                 .opt("queue-cap", "N", Some("0"), "per-partition queue bound (0 = unbounded)")
                 .opt("slo-ms", "MS", Some("0"), "latency deadline; stale work is shed (0 = none)")
                 .opt("batch-timeout", "MS", Some("0"), "hold under-filled batches (0 = on idle)")
+                .switch("adaptive", "add a runtime-repartitioning row (candidates = --partitions)")
+                .opt("epoch-ms", "MS", Some("50"), "adaptive: epoch (reconfig window) length")
                 .opt("samples", "N", Some("400"), "trace samples")
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
                 .opt("out", "DIR", None, "also write serve_curve.csv + serve_summary.json here")
@@ -174,8 +179,8 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
         .arrival_rates(rates)
         .serve_duration(m.get_f64("serve-duration")?.unwrap_or(0.25))
         .serve_seed(seed)
-        .serve_queue_cap(m.get_usize("queue-cap")?.unwrap_or(0))
-        .serve_slo_ms(m.get_f64("slo-ms")?.unwrap_or(0.0))
+        .serve_queue_caps(m.get_usize_list("queue-cap")?.unwrap_or_else(|| vec![0]))
+        .serve_slo_ms_axis(m.get_f64_list("slo-ms")?.unwrap_or_else(|| vec![0.0]))
         .serve_batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
         .steady_batches(batches);
     let total = grid.len();
@@ -211,12 +216,19 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     let graph = model::by_name(m.get("model").unwrap_or("resnet50"))?;
     let seed = m.get_usize("seed")?.unwrap_or(42) as u64;
     let burstiness = m.get_f64("burstiness")?.unwrap_or(4.0);
-    let arrival = ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?;
+    // A rate profile overrides --arrival: the piecewise process IS the
+    // arrival model, and its mean becomes the default grid rate.
+    let profile = m.get("rate-profile").map(ArrivalProcess::parse_profile).transpose()?;
+    let arrival = match &profile {
+        Some(p) => ArrivalKind::from_process(p).expect("parse_profile returns piecewise"),
+        None => ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?,
+    };
     let policy = DispatchPolicy::from_name(m.get("policy").unwrap_or("shortest_queue"))?;
     let stagger = StaggerPolicy::from_name(m.get("stagger").unwrap_or("uniform_phase"), seed)?;
+    let partitions = m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4]);
 
     let mut exp = ServeExperiment::new(&accel, &graph)
-        .partitions(m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4]))
+        .partitions(partitions.clone())
         .arrival(arrival)
         .duration(m.get_f64("duration")?.unwrap_or(0.5))
         .seed(seed)
@@ -227,8 +239,14 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         .batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
         .trace_samples(m.get_usize("samples")?.unwrap_or(400))
         .threads(m.get_usize("threads")?.unwrap_or(0));
+    if m.flag("adaptive") {
+        let epoch_s = m.get_f64("epoch-ms")?.unwrap_or(50.0) / 1e3;
+        exp = exp.adaptive(AdaptiveConfig::new(partitions).epoch_s(epoch_s));
+    }
     if let Some(rates) = m.get_f64_list("rate")? {
         exp = exp.rates(rates);
+    } else if let Some(p) = &profile {
+        exp = exp.rates(vec![p.mean_rate()]);
     }
     let curve = exp.run()?;
 
@@ -242,6 +260,16 @@ fn cmd_serve(m: &Matches) -> Result<()> {
             o.latency.p99_ms,
             o.throughput_ips,
             o.drop_rate * 100.0
+        );
+    }
+    if let Some(o) = curve.adaptive_at(curve.peak_rate()) {
+        println!(
+            "→ adaptive: {} reconfiguration(s), partitions {} — p99 {:.1} ms, \
+             goodput {:.0} img/s",
+            o.reconfigurations(),
+            o.trajectory_string(),
+            o.latency.p99_ms,
+            o.goodput_ips
         );
     }
     if let Some(dir) = m.get("out") {

@@ -9,10 +9,45 @@
 //!   process (calm/burst), the standard bursty-traffic model. The
 //!   [`ArrivalProcess::bursty`] constructor parameterizes it by a single
 //!   burstiness ratio while keeping the long-run mean rate fixed, so
-//!   Poisson and bursty runs at the same `--rate` are load-comparable.
+//!   Poisson and bursty runs at the same `--rate` are load-comparable;
+//! * [`ArrivalProcess::Piecewise`] — a *deterministically* time-varying
+//!   Poisson rate (square-wave step or triangular ramp between a low and
+//!   a high level), the load profile adaptive re-partitioning is
+//!   demonstrated against. Sampled by thinning, so it stays
+//!   seed-deterministic like the others.
 
 use crate::error::{Error, Result};
 use crate::util::rng::Xoshiro256StarStar;
+
+/// Shape of a [`ArrivalProcess::Piecewise`] rate profile over one period.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RateShape {
+    /// Square wave: `rate_lo` for the first half period, `rate_hi` for
+    /// the second.
+    Step,
+    /// Triangle wave: linear `rate_lo → rate_hi` over the first half
+    /// period, back down over the second.
+    Ramp,
+}
+
+impl RateShape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RateShape::Step => "step",
+            RateShape::Ramp => "ramp",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "step" => Ok(RateShape::Step),
+            "ramp" => Ok(RateShape::Ramp),
+            other => {
+                Err(Error::Usage(format!("unknown rate-profile shape '{other}' (step|ramp)")))
+            }
+        }
+    }
+}
 
 /// A stochastic arrival process with a known long-run mean rate.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,6 +58,11 @@ pub enum ArrivalProcess {
     /// while bursting; state dwell times are exponential with the given
     /// means. Long-run mean rate is the dwell-weighted average.
     Mmpp { rate_calm: f64, rate_burst: f64, mean_calm_s: f64, mean_burst_s: f64 },
+    /// Inhomogeneous Poisson whose rate follows a deterministic periodic
+    /// profile between `rate_lo` and `rate_hi`. Both shapes spend equal
+    /// time on each side of the midpoint, so the long-run mean rate is
+    /// exactly `(rate_lo + rate_hi) / 2`.
+    Piecewise { rate_lo: f64, rate_hi: f64, period_s: f64, shape: RateShape },
 }
 
 impl ArrivalProcess {
@@ -44,10 +84,47 @@ impl ArrivalProcess {
         }
     }
 
+    /// Periodic step (square-wave) profile: `rate_lo` for half the
+    /// period, `rate_hi` for the other half; mean `(lo + hi) / 2`.
+    pub fn step_profile(rate_lo: f64, rate_hi: f64, period_s: f64) -> Self {
+        ArrivalProcess::Piecewise { rate_lo, rate_hi, period_s, shape: RateShape::Step }
+    }
+
+    /// Periodic triangular ramp between `rate_lo` and `rate_hi`; mean
+    /// `(lo + hi) / 2`.
+    pub fn ramp_profile(rate_lo: f64, rate_hi: f64, period_s: f64) -> Self {
+        ArrivalProcess::Piecewise { rate_lo, rate_hi, period_s, shape: RateShape::Ramp }
+    }
+
+    /// Parse the CLI `--rate-profile low:high:period[:step|ramp]` grammar
+    /// (rates in requests/s, period in seconds; shape defaults to step).
+    pub fn parse_profile(spec: &str) -> Result<Self> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() < 3 || parts.len() > 4 {
+            return Err(Error::Usage(format!(
+                "--rate-profile expects low:high:period[:step|ramp], got '{spec}'"
+            )));
+        }
+        let num = |s: &str, what: &str| -> Result<f64> {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| Error::Usage(format!("bad {what} '{s}' in rate profile '{spec}'")))
+        };
+        let lo = num(parts[0], "low rate")?;
+        let hi = num(parts[1], "high rate")?;
+        let period = num(parts[2], "period")?;
+        let shape =
+            if parts.len() == 4 { RateShape::from_name(parts[3].trim())? } else { RateShape::Step };
+        let p = ArrivalProcess::Piecewise { rate_lo: lo, rate_hi: hi, period_s: period, shape };
+        p.validate()?;
+        Ok(p)
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             ArrivalProcess::Poisson { .. } => "poisson",
             ArrivalProcess::Mmpp { .. } => "mmpp",
+            ArrivalProcess::Piecewise { .. } => "piecewise",
         }
     }
 
@@ -58,6 +135,36 @@ impl ArrivalProcess {
             ArrivalProcess::Mmpp { rate_calm, rate_burst, mean_calm_s, mean_burst_s } => {
                 let dwell = mean_calm_s + mean_burst_s;
                 (rate_calm * mean_calm_s + rate_burst * mean_burst_s) / dwell
+            }
+            // Both shapes are symmetric around the midpoint over a period.
+            ArrivalProcess::Piecewise { rate_lo, rate_hi, .. } => 0.5 * (rate_lo + rate_hi),
+        }
+    }
+
+    /// Instantaneous rate of a [`ArrivalProcess::Piecewise`] profile at
+    /// time `t` (the configured rate for the other variants).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Mmpp { .. } => self.mean_rate(),
+            ArrivalProcess::Piecewise { rate_lo, rate_hi, period_s, shape } => {
+                let x = (t / period_s).rem_euclid(1.0);
+                match shape {
+                    RateShape::Step => {
+                        if x < 0.5 {
+                            rate_lo
+                        } else {
+                            rate_hi
+                        }
+                    }
+                    RateShape::Ramp => {
+                        if x < 0.5 {
+                            rate_lo + (rate_hi - rate_lo) * 2.0 * x
+                        } else {
+                            rate_hi - (rate_hi - rate_lo) * (2.0 * x - 1.0)
+                        }
+                    }
+                }
             }
         }
     }
@@ -77,6 +184,11 @@ impl ArrivalProcess {
                 pos(rate_burst, "burst rate")?;
                 pos(mean_calm_s, "calm dwell")?;
                 pos(mean_burst_s, "burst dwell")
+            }
+            ArrivalProcess::Piecewise { rate_lo, rate_hi, period_s, .. } => {
+                pos(rate_lo, "low rate")?;
+                pos(rate_hi, "high rate")?;
+                pos(period_s, "profile period")
             }
         }
     }
@@ -123,6 +235,23 @@ impl ArrivalProcess {
                         if t < duration {
                             out.push(t);
                         }
+                    }
+                }
+            }
+            ArrivalProcess::Piecewise { rate_lo, rate_hi, .. } => {
+                // Thinning (Lewis–Shedler): draw candidates at the peak
+                // rate and accept each with probability rate(t)/peak —
+                // exact for any bounded profile, and seed-deterministic
+                // because both draws come from the same stream.
+                let peak = rate_lo.max(rate_hi);
+                let mut t = 0.0f64;
+                loop {
+                    t += exp(&mut rng, 1.0 / peak);
+                    if t >= duration {
+                        break;
+                    }
+                    if rng.next_f64() < self.rate_at(t) / peak {
+                        out.push(t);
                     }
                 }
             }
@@ -199,5 +328,58 @@ mod tests {
         assert!(ArrivalProcess::bursty(100.0, 0.0, 0.1).validate().is_err());
         assert!(ArrivalProcess::poisson(100.0).generate(0.0, 1).is_err());
         assert!(ArrivalProcess::poisson(100.0).generate(f64::NAN, 1).is_err());
+        assert!(ArrivalProcess::step_profile(0.0, 100.0, 1.0).validate().is_err());
+        assert!(ArrivalProcess::step_profile(10.0, 100.0, 0.0).validate().is_err());
+        assert!(ArrivalProcess::ramp_profile(10.0, f64::NAN, 1.0).validate().is_err());
+    }
+
+    #[test]
+    fn piecewise_rate_follows_the_profile() {
+        let step = ArrivalProcess::step_profile(100.0, 900.0, 2.0);
+        assert_eq!(step.name(), "piecewise");
+        assert!((step.mean_rate() - 500.0).abs() < 1e-12);
+        assert_eq!(step.rate_at(0.5), 100.0);
+        assert_eq!(step.rate_at(1.5), 900.0);
+        assert_eq!(step.rate_at(2.5), 100.0, "profile is periodic");
+        let ramp = ArrivalProcess::ramp_profile(100.0, 900.0, 2.0);
+        assert!((ramp.mean_rate() - 500.0).abs() < 1e-12);
+        assert_eq!(ramp.rate_at(0.0), 100.0);
+        assert!((ramp.rate_at(0.5) - 500.0).abs() < 1e-9);
+        assert!((ramp.rate_at(1.0) - 900.0).abs() < 1e-9);
+        assert!((ramp.rate_at(1.5) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn piecewise_generation_matches_the_mean_and_the_halves() {
+        // One 10 s period: low half ≈ 100/s × 5 s, high half ≈ 900/s × 5 s.
+        let p = ArrivalProcess::step_profile(100.0, 900.0, 10.0);
+        let a = p.generate(10.0, 17).unwrap();
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let low = a.iter().filter(|&&t| t < 5.0).count() as f64;
+        let high = a.len() as f64 - low;
+        // 5σ bounds: √500 ≈ 22, √4500 ≈ 67.
+        assert!((low - 500.0).abs() < 120.0, "low half {low}");
+        assert!((high - 4500.0).abs() < 340.0, "high half {high}");
+        // Mean-rate preservation over many periods (loose 5% bound).
+        let long = p.generate(100.0, 3).unwrap();
+        let emp = long.len() as f64 / 100.0;
+        assert!((emp / 500.0 - 1.0).abs() < 0.05, "empirical mean {emp}");
+        // Seed-deterministic like the other processes.
+        assert_eq!(p.generate(10.0, 17).unwrap(), a);
+        assert_ne!(p.generate(10.0, 18).unwrap(), a);
+    }
+
+    #[test]
+    fn rate_profile_parsing_round_trips_and_diagnoses() {
+        let p = ArrivalProcess::parse_profile("100:900:0.5").unwrap();
+        assert_eq!(p, ArrivalProcess::step_profile(100.0, 900.0, 0.5));
+        let p = ArrivalProcess::parse_profile("50:200:2:ramp").unwrap();
+        assert_eq!(p, ArrivalProcess::ramp_profile(50.0, 200.0, 2.0));
+        assert_eq!(RateShape::from_name("step").unwrap(), RateShape::Step);
+        assert_eq!(RateShape::Ramp.name(), "ramp");
+        assert!(ArrivalProcess::parse_profile("100:900").is_err());
+        assert!(ArrivalProcess::parse_profile("a:b:c").is_err());
+        assert!(ArrivalProcess::parse_profile("100:900:1:zigzag").is_err());
+        assert!(ArrivalProcess::parse_profile("0:900:1").is_err(), "rates must be > 0");
     }
 }

@@ -8,9 +8,10 @@
 //! [`ServeCurve`]: byte-identical for 1 vs N threads, like the sweep
 //! engine it borrows its worker pool from.
 
-use super::arrival::ArrivalProcess;
+use super::arrival::{ArrivalProcess, RateShape};
 use super::queue::DispatchPolicy;
 use super::simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};
+use super::topology::AdaptiveConfig;
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
@@ -27,6 +28,12 @@ pub enum ArrivalKind {
     Poisson,
     /// MMPP via [`ArrivalProcess::bursty`].
     Bursty { burstiness: f64, mean_burst_s: f64 },
+    /// Deterministic step/ramp rate profile via
+    /// [`ArrivalProcess::Piecewise`]. `rate_lo`/`rate_hi` give the
+    /// profile's *shape*; at each grid rate the pair is rescaled so the
+    /// long-run mean matches that rate, keeping profile points
+    /// load-comparable with the other kinds.
+    Piecewise { rate_lo: f64, rate_hi: f64, period_s: f64, shape: RateShape },
 }
 
 impl ArrivalKind {
@@ -36,6 +43,25 @@ impl ArrivalKind {
             ArrivalKind::Bursty { burstiness, mean_burst_s } => {
                 ArrivalProcess::bursty(rate, burstiness, mean_burst_s)
             }
+            ArrivalKind::Piecewise { rate_lo, rate_hi, period_s, shape } => {
+                let scale = rate / (0.5 * (rate_lo + rate_hi));
+                ArrivalProcess::Piecewise {
+                    rate_lo: rate_lo * scale,
+                    rate_hi: rate_hi * scale,
+                    period_s,
+                    shape,
+                }
+            }
+        }
+    }
+
+    /// The profile kind for a parsed `--rate-profile` process.
+    pub fn from_process(p: &ArrivalProcess) -> Option<Self> {
+        match *p {
+            ArrivalProcess::Piecewise { rate_lo, rate_hi, period_s, shape } => {
+                Some(ArrivalKind::Piecewise { rate_lo, rate_hi, period_s, shape })
+            }
+            _ => None,
         }
     }
 
@@ -65,7 +91,12 @@ pub enum ServePointStatus {
 #[derive(Debug, Clone)]
 pub struct ServePoint {
     pub rate: f64,
+    /// Static rows: the fixed partition count. Completed adaptive rows:
+    /// the count the controller actually started from (its smallest
+    /// feasible candidate); the outcome's trajectory tells the rest.
     pub partitions: usize,
+    /// Whether this row ran the adaptive (runtime-mutable) topology.
+    pub adaptive: bool,
     pub status: ServePointStatus,
 }
 
@@ -93,6 +124,7 @@ pub struct ServeExperiment {
     queue_cap: usize,
     slo_ms: f64,
     batch_timeout_ms: f64,
+    adaptive: Option<AdaptiveConfig>,
     trace_samples: usize,
     threads: usize,
 }
@@ -112,6 +144,7 @@ impl ServeExperiment {
             queue_cap: 0,
             slo_ms: 0.0,
             batch_timeout_ms: 0.0,
+            adaptive: None,
             trace_samples: 400,
             threads: 0,
         }
@@ -173,6 +206,14 @@ impl ServeExperiment {
         self
     }
 
+    /// Add one adaptive (runtime-mutable topology) row per rate next to
+    /// the static rows, with this controller configuration. An empty
+    /// candidate list inherits the grid's partition counts.
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
+    }
+
     pub fn trace_samples(mut self, s: usize) -> Self {
         self.trace_samples = s;
         self
@@ -203,10 +244,22 @@ impl ServeExperiment {
         if rates.is_empty() {
             return Err(Error::InvalidConfig("serve grid has no arrival rates".into()));
         }
-        let mut points: Vec<(f64, usize)> = Vec::new();
+        // Candidates of the adaptive row: explicit, or the grid's own
+        // partition axis.
+        let adaptive_cfg = self.adaptive.clone().map(|mut cfg| {
+            if cfg.candidates.is_empty() {
+                cfg.candidates = self.partitions.clone();
+            }
+            cfg
+        });
+        let mut points: Vec<(f64, usize, bool)> = Vec::new();
         for &r in &rates {
             for &n in &self.partitions {
-                points.push((r, n));
+                points.push((r, n, false));
+            }
+            if let Some(cfg) = &adaptive_cfg {
+                let start = cfg.candidates.iter().copied().min().unwrap_or(1);
+                points.push((r, start, true));
             }
         }
         let threads = if self.threads == 0 {
@@ -214,8 +267,8 @@ impl ServeExperiment {
         } else {
             self.threads
         };
-        let statuses = parallel_map(&points, threads, |&(rate, n)| {
-            let sim = ServeSimulator::new(&self.accel, &self.graph)
+        let statuses = parallel_map(&points, threads, |&(rate, n, adaptive)| {
+            let mut sim = ServeSimulator::new(&self.accel, &self.graph)
                 .partitions(n)
                 .arrival(self.arrival.process(rate))
                 .duration(self.duration_s)
@@ -226,6 +279,11 @@ impl ServeExperiment {
                 .slo_ms(self.slo_ms)
                 .batch_timeout_ms(self.batch_timeout_ms)
                 .trace_samples(self.trace_samples);
+            if adaptive {
+                if let Some(cfg) = adaptive_cfg.clone() {
+                    sim = sim.adaptive(cfg);
+                }
+            }
             match sim.run() {
                 Ok(out) => Ok(ServePointStatus::Completed(out)),
                 Err(Error::InfeasiblePartitioning(why)) => Ok(ServePointStatus::Infeasible(why)),
@@ -235,7 +293,18 @@ impl ServeExperiment {
         let points = points
             .into_iter()
             .zip(statuses)
-            .map(|((rate, partitions), status)| ServePoint { rate, partitions, status })
+            .map(|((rate, partitions, adaptive), status)| {
+                // The adaptive row's requested start may have been an
+                // infeasible candidate the run skipped; report the count
+                // the run actually started at.
+                let partitions = match (&status, adaptive) {
+                    (ServePointStatus::Completed(o), true) => {
+                        o.partition_trajectory().first().copied().unwrap_or(partitions)
+                    }
+                    _ => partitions,
+                };
+                ServePoint { rate, partitions, adaptive, status }
+            })
             .collect();
         Ok(ServeCurve {
             model: self.graph.name.clone(),
@@ -256,17 +325,30 @@ pub struct ServeCurve {
 }
 
 impl ServeCurve {
-    /// Completed outcome at a grid point, if it completed.
+    /// Completed outcome at a *static* grid point, if it completed.
     pub fn at(&self, rate: f64, partitions: usize) -> Option<&ServeOutcome> {
         self.points
             .iter()
-            .find(|p| p.rate == rate && p.partitions == partitions)
+            .find(|p| !p.adaptive && p.rate == rate && p.partitions == partitions)
             .and_then(|p| p.outcome())
+    }
+
+    /// Completed outcome of the adaptive row at a rate, if present.
+    pub fn adaptive_at(&self, rate: f64) -> Option<&ServeOutcome> {
+        self.points
+            .iter()
+            .find(|p| p.adaptive && p.rate == rate)
+            .and_then(|p| p.outcome())
+    }
+
+    /// The highest rate on the grid (`-inf` for an empty curve).
+    pub fn peak_rate(&self) -> f64 {
+        self.points.iter().map(|p| p.rate).fold(f64::NEG_INFINITY, f64::max)
     }
 
     /// The completed point with the lowest p99 at the highest rate.
     pub fn best_at_peak(&self) -> Option<&ServePoint> {
-        let peak = self.points.iter().map(|p| p.rate).fold(f64::NEG_INFINITY, f64::max);
+        let peak = self.peak_rate();
         self.points
             .iter()
             .filter(|p| p.rate == peak)
@@ -280,7 +362,9 @@ impl ServeCurve {
             .map(|(p, _)| p)
     }
 
-    /// Throughput–latency table (the `serve` CLI's output).
+    /// Throughput–latency table (the `serve` CLI's output). Adaptive
+    /// rows show their chosen-partition trajectory in the `n` column and
+    /// their reconfiguration count.
     pub fn render(&self) -> String {
         let mut t = Table::new(vec![
             "rate",
@@ -295,23 +379,34 @@ impl ServeCurve {
             "p99 ms",
             "BW GB/s",
             "cov",
+            "reconf",
         ]);
         for p in &self.points {
             match p.outcome() {
-                Some(o) => t.row(vec![
-                    format!("{:.0}", p.rate),
-                    p.partitions.to_string(),
-                    o.requests.to_string(),
-                    format!("{:.1}", o.drop_rate * 100.0),
-                    format!("{:.1}", o.mean_batch),
-                    format!("{:.0}", o.throughput_ips),
-                    format!("{:.0}", o.goodput_ips),
-                    format!("{:.1}", o.latency.p50_ms),
-                    format!("{:.1}", o.latency.p95_ms),
-                    format!("{:.1}", o.latency.p99_ms),
-                    format!("{:.1}", o.bw.mean),
-                    format!("{:.3}", o.bw.cov()),
-                ]),
+                Some(o) => {
+                    let n = if p.adaptive {
+                        format!("auto:{}", o.trajectory_string())
+                    } else {
+                        p.partitions.to_string()
+                    };
+                    let reconf =
+                        if p.adaptive { o.reconfigurations().to_string() } else { "-".into() };
+                    t.row(vec![
+                        format!("{:.0}", p.rate),
+                        n,
+                        o.requests.to_string(),
+                        format!("{:.1}", o.drop_rate * 100.0),
+                        format!("{:.1}", o.mean_batch),
+                        format!("{:.0}", o.throughput_ips),
+                        format!("{:.0}", o.goodput_ips),
+                        format!("{:.1}", o.latency.p50_ms),
+                        format!("{:.1}", o.latency.p95_ms),
+                        format!("{:.1}", o.latency.p99_ms),
+                        format!("{:.1}", o.bw.mean),
+                        format!("{:.3}", o.bw.cov()),
+                        reconf,
+                    ])
+                }
                 None => {
                     let mut row = vec![
                         format!("{:.0}", p.rate),
@@ -321,7 +416,7 @@ impl ServeCurve {
                         "-".to_string(),
                         "infeasible".to_string(),
                     ];
-                    row.extend((0..6).map(|_| "-".to_string()));
+                    row.extend((0..7).map(|_| "-".to_string()));
                     t.row(row)
                 }
             };
@@ -334,11 +429,15 @@ impl ServeCurve {
         .render()
     }
 
-    /// Full per-point export in grid (rate-major) order.
+    /// Full per-point export in grid (rate-major) order. Adaptive rows
+    /// populate the `mode`, `epochs`, `reconfigurations` and
+    /// `chosen_partitions` columns (static rows export their fixed count
+    /// and zero reconfigurations).
     pub fn to_csv(&self) -> CsvWriter {
         let mut w = CsvWriter::new(vec![
             "rate",
             "partitions",
+            "mode",
             "status",
             "requests",
             "served",
@@ -357,11 +456,15 @@ impl ServeCurve {
             "max_ms",
             "bw_mean_gbps",
             "bw_std_gbps",
+            "epochs",
+            "reconfigurations",
+            "chosen_partitions",
             "reason",
         ]);
         let f = crate::util::csv::format_float;
         for p in &self.points {
-            let head = vec![f(p.rate), p.partitions.to_string()];
+            let mode = if p.adaptive { "adaptive" } else { "static" };
+            let head = vec![f(p.rate), p.partitions.to_string(), mode.to_string()];
             let tail = match &p.status {
                 ServePointStatus::Completed(o) => vec![
                     "ok".to_string(),
@@ -382,11 +485,14 @@ impl ServeCurve {
                     f(o.latency.max_ms),
                     f(o.bw.mean),
                     f(o.bw.std),
+                    o.epochs.len().to_string(),
+                    o.reconfigurations().to_string(),
+                    o.trajectory_string(),
                     String::new(),
                 ],
                 ServePointStatus::Infeasible(why) => {
                     let mut v = vec!["infeasible".to_string()];
-                    v.extend((0..17).map(|_| String::new()));
+                    v.extend((0..20).map(|_| String::new()));
                     v.push(why.clone());
                     v
                 }
@@ -412,12 +518,24 @@ impl ServeCurve {
                     Json::obj()
                         .with("rate", best.rate)
                         .with("partitions", best.partitions)
+                        .with("adaptive", best.adaptive)
                         .with("p99_ms", o.latency.p99_ms)
                         .with("throughput_ips", o.throughput_ips)
                         .with("goodput_ips", o.goodput_ips)
                         .with("drop_rate", o.drop_rate),
                 );
             }
+        }
+        if let Some(o) = self.adaptive_at(self.peak_rate()) {
+            j.set(
+                "adaptive_at_peak",
+                Json::obj()
+                    .with("trajectory", o.trajectory_string())
+                    .with("reconfigurations", o.reconfigurations())
+                    .with("epochs", o.epochs.len())
+                    .with("p99_ms", o.latency.p99_ms)
+                    .with("goodput_ips", o.goodput_ips),
+            );
         }
         j
     }
@@ -462,16 +580,68 @@ mod tests {
         assert!(text.contains("p99 ms"));
         assert!(text.contains("drop %"));
         assert!(text.contains("goodput"));
+        assert!(text.contains("reconf"));
         assert!(text.contains("infeasible"));
         let csv = c.to_csv().to_string();
         assert_eq!(csv.lines().count(), 7); // header + 6 points
-        assert!(csv.starts_with("rate,partitions,status"));
+        assert!(csv.starts_with("rate,partitions,mode,status"));
         assert!(csv.contains(",drop_rate,"));
         assert!(csv.contains(",goodput_ips,"));
+        assert!(csv.contains(",reconfigurations,chosen_partitions,"));
+        assert!(csv.contains(",static,ok,"));
         let j = c.summary_json();
         assert_eq!(j.req_usize("points").unwrap(), 6);
         assert_eq!(j.req_usize("infeasible").unwrap(), 2);
         assert!(j.get("best_at_peak").is_some());
+        assert!(j.get("adaptive_at_peak").is_none(), "no adaptive row configured");
+    }
+
+    #[test]
+    fn adaptive_rows_ride_along_the_grid() {
+        let accel = AcceleratorConfig::knl_7210();
+        let c = ServeExperiment::new(&accel, &tiny_cnn())
+            .partitions(vec![1, 2])
+            .rates(vec![3000.0])
+            .duration(0.01)
+            .seed(5)
+            .trace_samples(16)
+            .threads(2)
+            .adaptive(AdaptiveConfig::new(vec![]).epoch_s(0.002))
+            .run()
+            .unwrap();
+        // 2 static points + 1 adaptive point.
+        assert_eq!(c.points.len(), 3);
+        assert!(c.points[2].adaptive);
+        assert_eq!(c.points[2].partitions, 1, "adaptive rows start at the smallest candidate");
+        let o = c.adaptive_at(3000.0).unwrap();
+        assert_eq!(o.served + o.dropped, o.requests);
+        assert!(!o.epochs.is_empty(), "the adaptive row must run the epoch loop");
+        // Static lookups skip the adaptive row.
+        assert_eq!(c.at(3000.0, 1).unwrap().reconfigurations(), 0);
+        let csv = c.to_csv().to_string();
+        assert!(csv.contains(",adaptive,ok,"));
+        let text = c.render();
+        assert!(text.contains("auto:"));
+        let j = c.summary_json();
+        assert!(j.get("adaptive_at_peak").is_some());
+
+        // Byte-identical across thread counts, adaptive row included.
+        let run = |threads| {
+            ServeExperiment::new(&accel, &tiny_cnn())
+                .partitions(vec![1, 2])
+                .rates(vec![3000.0])
+                .duration(0.01)
+                .seed(5)
+                .trace_samples(16)
+                .threads(threads)
+                .adaptive(AdaptiveConfig::new(vec![]).epoch_s(0.002))
+                .run()
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.to_csv().to_string(), b.to_csv().to_string());
     }
 
     #[test]

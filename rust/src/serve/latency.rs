@@ -116,16 +116,42 @@ impl LatencyRecorder {
     /// overload — the percentile fields are the zero sentinel and only
     /// the drop count is populated; this never panics.
     pub fn stats(&self) -> LatencyStats {
-        if self.samples_s.is_empty() {
-            return LatencyStats { dropped: self.dropped, ..LatencyStats::zero() };
+        Self::reduce(&self.samples_s, self.dropped, self.slo_hits)
+    }
+
+    /// Snapshot the recorder's position, so a later [`Self::stats_since`]
+    /// can reduce just the window recorded after it. The serving epoch
+    /// loop takes one mark per epoch: cumulative stats keep flowing from
+    /// [`Self::stats`] while each epoch also gets its own summary.
+    pub fn mark(&self) -> RecorderMark {
+        RecorderMark {
+            samples: self.samples_s.len(),
+            dropped: self.dropped,
+            slo_hits: self.slo_hits,
         }
-        let mut sorted = self.samples_s.clone();
+    }
+
+    /// Stats over only what was recorded since `mark` (same zero
+    /// sentinel rules as [`Self::stats`]).
+    pub fn stats_since(&self, mark: &RecorderMark) -> LatencyStats {
+        Self::reduce(
+            &self.samples_s[mark.samples..],
+            self.dropped - mark.dropped,
+            self.slo_hits - mark.slo_hits,
+        )
+    }
+
+    fn reduce(samples: &[f64], dropped: usize, slo_hits: usize) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats { dropped, ..LatencyStats::zero() };
+        }
+        let mut sorted = samples.to_vec();
         sorted.sort_by(f64::total_cmp);
         let s = Summary::of(&sorted);
         LatencyStats {
             count: s.count,
-            dropped: self.dropped,
-            slo_hits: self.slo_hits,
+            dropped,
+            slo_hits,
             mean_ms: s.mean * 1e3,
             p50_ms: percentile(&sorted, 50.0) * 1e3,
             p95_ms: percentile(&sorted, 95.0) * 1e3,
@@ -133,6 +159,15 @@ impl LatencyRecorder {
             max_ms: s.max * 1e3,
         }
     }
+}
+
+/// Opaque position snapshot of a [`LatencyRecorder`]; see
+/// [`LatencyRecorder::mark`].
+#[derive(Debug, Clone, Copy)]
+pub struct RecorderMark {
+    samples: usize,
+    dropped: usize,
+    slo_hits: usize,
 }
 
 #[cfg(test)]
@@ -184,6 +219,35 @@ mod tests {
         assert_eq!(s.arrived(), 7);
         assert!((s.drop_rate() - 1.0).abs() < 1e-12);
         assert_eq!(s.p99_ms, 0.0, "documented sentinel for an all-dropped run");
+    }
+
+    #[test]
+    fn marks_split_epochs_while_cumulative_stats_keep_flowing() {
+        let mut r = LatencyRecorder::with_slo(0.1);
+        r.record(0.0, 0.05);
+        r.record(0.0, 0.2); // SLO miss
+        r.record_drops(1);
+        let m1 = r.mark();
+        // Epoch 2: two fast requests, one drop.
+        r.record(1.0, 1.01);
+        r.record(1.0, 1.03);
+        r.record_drops(1);
+        let epoch2 = r.stats_since(&m1);
+        assert_eq!(epoch2.count, 2);
+        assert_eq!(epoch2.dropped, 1);
+        assert_eq!(epoch2.slo_hits, 2);
+        assert!((epoch2.max_ms - 30.0).abs() < 1e-9);
+        // Cumulative stats cover both epochs.
+        let all = r.stats();
+        assert_eq!(all.count, 4);
+        assert_eq!(all.dropped, 2);
+        assert_eq!(all.slo_hits, 3);
+        assert!((all.max_ms - 200.0).abs() < 1e-9);
+        // An empty window reduces to the zero sentinel.
+        let m2 = r.mark();
+        let empty = r.stats_since(&m2);
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.p99_ms, 0.0);
     }
 
     #[test]

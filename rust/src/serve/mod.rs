@@ -15,22 +15,33 @@
 //! * [`ServeSimulator`] — drives the queues through the fluid engine's
 //!   dynamic mode ([`crate::sim::SimEngine::run_dynamic`]), so bandwidth
 //!   contention between partitions mid-burst shapes every service time;
+//! * [`PartitionSet`] / [`AdaptiveConfig`] — the partition topology as a
+//!   runtime-mutable value: adaptive runs proceed in epochs and may
+//!   re-partition at epoch boundaries under time-varying load
+//!   ([`ArrivalProcess::Piecewise`] step/ramp profiles), migrating
+//!   queued work across topologies and logging [`ReconfigEvent`]s and
+//!   per-epoch [`EpochStats`];
 //! * [`LatencyRecorder`] / [`LatencyStats`] — per-request sojourn times
-//!   reduced to p50/p95/p99, plus drop and goodput accounting;
+//!   reduced to p50/p95/p99, plus drop and goodput accounting, with
+//!   per-epoch marks on top of the cumulative record;
 //! * [`ServeExperiment`] / [`ServeCurve`] — parallel (rate × partitions)
 //!   grids producing deterministic throughput–latency tradeoff curves
-//!   with drop-rate and goodput columns.
+//!   with drop-rate, goodput and reconfiguration columns.
 
 mod arrival;
 mod curve;
 mod latency;
 mod queue;
 mod simulator;
+mod topology;
 
-pub use arrival::ArrivalProcess;
+pub use arrival::{ArrivalProcess, RateShape};
 pub use curve::{
     ArrivalKind, ServeCurve, ServeExperiment, ServePoint, ServePointStatus, DEFAULT_MEAN_BURST_S,
 };
-pub use latency::{LatencyRecorder, LatencyStats};
-pub use queue::{BatchPolicy, BatchRecord, DispatchPolicy, QueueConfig, ServeController};
+pub use latency::{LatencyRecorder, LatencyStats, RecorderMark};
+pub use queue::{
+    BatchPolicy, BatchRecord, DispatchPolicy, EpochWindow, QueueConfig, ServeController,
+};
 pub use simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};
+pub use topology::{AdaptiveConfig, EpochStats, PartitionSet, ReconfigEvent};

@@ -22,13 +22,33 @@
 //!   the under-batching of the dispatch-on-idle default at moderate load;
 //! * **burst-aware stagger** — with [`QueueConfig::rearm_idle_s`], the
 //!   start gates re-arm after a partition-wide lull, so a burst arriving
-//!   after a long idle gap still meets de-synchronized partitions.
+//!   after a long idle gap still meets de-synchronized partitions. The
+//!   lull threshold adapts to the measured inter-dispatch gap
+//!   distribution (see [`QueueConfig::rearm_quantile`]), falling back to
+//!   the configured constant while too few gaps have been observed.
+//!
+//! The controller is also **epoch-aware**: [`EpochWindow`] scopes one
+//! controller to a slice of the arrival stream with an absolute start
+//! time and an optional dispatch horizon, and lets queued work carried
+//! over from a previous epoch be re-admitted against the (possibly
+//! different) topology's caps — the mechanism behind the serving loop's
+//! runtime re-partitioning.
 
 use crate::error::{Error, Result};
 use crate::reuse::Phase;
 use crate::sim::{DynJob, DynNext, WorkSource};
+use crate::util::stats::percentile_of;
 use std::collections::VecDeque;
+use std::ops::Range;
 use std::sync::Arc;
+
+/// Dispatch gaps retained for the adaptive re-arm threshold (a rolling
+/// window keeps the percentile cheap and recent).
+const REARM_GAP_WINDOW: usize = 64;
+
+/// Minimum observed gaps before the adaptive threshold replaces the
+/// configured constant (the "short program" fallback).
+const REARM_MIN_SAMPLES: usize = 8;
 
 /// How arriving requests are routed to partition queues.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -118,11 +138,25 @@ pub struct QueueConfig {
     /// partition-wide idle gap longer than this. `None` keeps the legacy
     /// t = 0-only gates.
     pub rearm_idle_s: Option<f64>,
+    /// Derive the re-arm threshold from the measured lull distribution:
+    /// once enough inter-dispatch gaps have been observed, the threshold
+    /// becomes `max(rearm_idle_s, 2 × quantile(gaps))`, so very short
+    /// programs (whose one-batch-time constant is smaller than routine
+    /// arrival gaps) don't re-arm on every lull. `None` keeps the fixed
+    /// constant.
+    pub rearm_quantile: Option<f64>,
+    /// Per-partition offsets applied when gates re-arm after a lull.
+    /// `None` reuses `gates` verbatim — correct in the legacy mode where
+    /// `gates` are offsets from t = 0. Epoch-scoped controllers receive
+    /// *absolute* gates, so they must supply the relative offsets here.
+    pub rearm_offsets: Option<Vec<f64>>,
 }
 
 impl QueueConfig {
     /// The legacy open-loop configuration: unbounded queues, no SLO,
-    /// dispatch on idle, gates applied at t = 0 only.
+    /// dispatch on idle, gates applied at t = 0 only. The adaptive
+    /// re-arm quantile defaults on, but is inert until `rearm_idle_s`
+    /// enables re-arming at all.
     pub fn new(policy: DispatchPolicy, gates: Vec<f64>) -> Self {
         Self {
             policy,
@@ -131,8 +165,31 @@ impl QueueConfig {
             slo_s: None,
             batch: BatchPolicy::DispatchOnIdle,
             rearm_idle_s: None,
+            rearm_quantile: Some(0.95),
+            rearm_offsets: None,
         }
     }
+}
+
+/// Scopes a [`ServeController`] to one serving **epoch**: a slice of the
+/// arrival stream, an absolute start time (the controller never acts
+/// before it — earlier instants were already simulated by previous
+/// epochs), an optional dispatch horizon (polls at or past it finish the
+/// epoch, leaving unserved work to be migrated), and the backlog carried
+/// in from the previous topology.
+#[derive(Debug, Clone, Default)]
+pub struct EpochWindow {
+    /// Absolute epoch start; polls before it idle until it.
+    pub start_s: f64,
+    /// Dispatch horizon: a poll at `now >= horizon` ends this epoch's
+    /// service. `None` runs to drain (the legacy single-epoch mode).
+    pub horizon_s: Option<f64>,
+    /// The epoch's slice of the arrival stream (indices).
+    pub stream: Range<usize>,
+    /// Request indices migrated from the previous epoch, re-admitted (in
+    /// order) against this topology's caps at construction; requests
+    /// that find every queue full are dropped.
+    pub carry: Vec<usize>,
 }
 
 /// One dispatched batch: which requests it carried and when it left.
@@ -158,6 +215,12 @@ pub struct ServeController<'a> {
     gates: Vec<f64>,
     queues: Vec<VecDeque<usize>>,
     next_arrival: usize,
+    /// One past the last arrival index this controller may admit.
+    stream_end: usize,
+    /// Absolute epoch start: the controller never dispatches before it.
+    start_s: f64,
+    /// Polls at or past this absolute time end the epoch.
+    horizon_s: Option<f64>,
     rr_next: usize,
     /// Batch `b` was dispatched as engine job id `b`.
     batches: Vec<BatchRecord>,
@@ -172,28 +235,70 @@ pub struct ServeController<'a> {
     /// Last time any partition dispatched or completed a batch (lull
     /// detection for gate re-arm).
     last_busy: f64,
+    /// Time of the most recent dispatch, for gap sampling.
+    last_dispatch: Option<f64>,
+    /// Rolling window of positive inter-dispatch gaps (lull distribution
+    /// the adaptive re-arm threshold is derived from).
+    gap_samples: Vec<f64>,
+    gap_cursor: usize,
 }
 
 impl<'a> ServeController<'a> {
     pub fn new(arrivals: &'a [f64], programs: &'a [Arc<Vec<Phase>>], cfg: QueueConfig) -> Self {
+        let window =
+            EpochWindow { start_s: 0.0, horizon_s: None, stream: 0..arrivals.len(), carry: vec![] };
+        Self::for_epoch(arrivals, programs, cfg, window)
+    }
+
+    /// An epoch-scoped controller: admits only `window.stream`, never
+    /// acts before `window.start_s`, stops dispatching at
+    /// `window.horizon_s`, and re-admits the carried-over backlog (in
+    /// order) against this topology's caps — the queue-migration half of
+    /// a runtime re-partition. Carried requests that find every queue
+    /// full are dropped, exactly like fresh arrivals.
+    pub fn for_epoch(
+        arrivals: &'a [f64],
+        programs: &'a [Arc<Vec<Phase>>],
+        cfg: QueueConfig,
+        window: EpochWindow,
+    ) -> Self {
         let n = cfg.gates.len();
         let gates = cfg.gates.clone();
-        Self {
+        let mut c = Self {
             arrivals,
             programs,
             max_batch: programs.len(),
             cfg,
             gates,
             queues: vec![VecDeque::new(); n],
-            next_arrival: 0,
+            next_arrival: window.stream.start,
+            stream_end: window.stream.end.min(arrivals.len()),
+            start_s: window.start_s,
+            horizon_s: window.horizon_s,
             rr_next: 0,
             batches: Vec::new(),
             queue_peak: 0,
             dropped_capacity: 0,
             dropped_deadline: 0,
             in_flight: vec![false; n],
-            last_busy: 0.0,
+            last_busy: window.start_s,
+            last_dispatch: None,
+            gap_samples: Vec::new(),
+            gap_cursor: 0,
+        };
+        // Migration ignores the (not yet open) stagger gates: the whole
+        // point is to spread the inherited backlog across the new
+        // topology's queues, and every gate opens within one batch time.
+        for &r in &window.carry {
+            match c.route(f64::INFINITY) {
+                Some(target) => {
+                    c.queues[target].push_back(r);
+                    c.queue_peak = c.queue_peak.max(c.queues[target].len());
+                }
+                None => c.dropped_capacity += 1,
+            }
         }
+        c
     }
 
     fn has_room(&self, i: usize) -> bool {
@@ -262,23 +367,72 @@ impl<'a> ServeController<'a> {
         self.argmin(|s, i| s.is_open(i, now) && s.has_room(i), |s, i| s.queues[i].len())
     }
 
+    /// The idle gap that re-arms the stagger gates: the configured
+    /// constant until enough inter-dispatch gaps have been observed, then
+    /// `max(constant, 2 × quantile of the measured gaps)` — an outlier
+    /// test against the run's own lull distribution, robust to programs
+    /// whose one-batch-time constant is shorter than routine arrival
+    /// spacing.
+    fn rearm_threshold(&self, base: f64) -> f64 {
+        self.derived_gap_cut().map_or(base, |cut| base.max(cut))
+    }
+
+    /// The outlier cut derived from the measured gap distribution
+    /// (`2 × quantile`), once enough routine gaps have been observed.
+    fn derived_gap_cut(&self) -> Option<f64> {
+        self.gap_cut(REARM_MIN_SAMPLES)
+    }
+
+    fn gap_cut(&self, min_samples: usize) -> Option<f64> {
+        match self.cfg.rearm_quantile {
+            Some(q) if self.gap_samples.len() >= min_samples.max(1) => {
+                Some(2.0 * percentile_of(&self.gap_samples, (q * 100.0).clamp(0.0, 100.0)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Record one inter-dispatch gap into the rolling sample window.
+    /// Gaps that themselves qualify as lulls are excluded — the sample
+    /// models *routine* spacing, and letting outliers in would ratchet
+    /// the outlier threshold up after every burst boundary. The
+    /// exclusion applies from the very first sample (not only once the
+    /// threshold goes live), so an early lull cannot poison the
+    /// bootstrap window.
+    fn record_dispatch_gap(&mut self, now: f64) {
+        if let Some(prev) = self.last_dispatch {
+            let gap = now - prev;
+            let lull = self.gap_cut(1).is_some_and(|cut| gap > cut);
+            if gap > 0.0 && !lull {
+                if self.gap_samples.len() < REARM_GAP_WINDOW {
+                    self.gap_samples.push(gap);
+                } else {
+                    self.gap_samples[self.gap_cursor] = gap;
+                    self.gap_cursor = (self.gap_cursor + 1) % REARM_GAP_WINDOW;
+                }
+            }
+        }
+        self.last_dispatch = Some(now);
+    }
+
     /// Admit every arrival with time ≤ `now` into a queue, in order,
     /// dropping the ones that find every candidate queue full.
     fn admit_until(&mut self, now: f64) {
-        while self.next_arrival < self.arrivals.len() && self.arrivals[self.next_arrival] <= now {
+        while self.next_arrival < self.stream_end && self.arrivals[self.next_arrival] <= now {
             let at = self.arrivals[self.next_arrival];
             // Burst-aware stagger: the first arrival after a
             // partition-wide lull — nothing queued, nothing in service,
             // and no dispatch or completion for longer than the gap —
             // re-arms the start gates at its own epoch, so the burst
             // meets de-synchronized partitions again.
-            if let Some(gap) = self.cfg.rearm_idle_s {
-                if at - self.last_busy > gap
+            if let Some(base) = self.cfg.rearm_idle_s {
+                if at - self.last_busy > self.rearm_threshold(base)
                     && self.in_flight.iter().all(|&busy| !busy)
                     && self.queues.iter().all(|q| q.is_empty())
                 {
-                    for (g, base) in self.gates.iter_mut().zip(&self.cfg.gates) {
-                        *g = at + base;
+                    let offs = self.cfg.rearm_offsets.as_deref().unwrap_or(&self.cfg.gates);
+                    for (g, off) in self.gates.iter_mut().zip(offs) {
+                        *g = at + off;
                     }
                 }
             }
@@ -321,7 +475,25 @@ impl<'a> ServeController<'a> {
     /// Requests not yet dispatched or dropped (admitted or in-stream).
     pub fn pending(&self) -> usize {
         let queued: usize = self.queues.iter().map(|q| q.len()).sum();
-        queued + (self.arrivals.len() - self.next_arrival)
+        queued + (self.stream_end - self.next_arrival)
+    }
+
+    /// Everything this epoch leaves unserved, in arrival order: queued
+    /// requests plus the stream tail it never admitted (a poll past the
+    /// horizon ends the epoch even with arrivals outstanding). This is
+    /// the backlog the next epoch's controller re-admits.
+    pub fn drain_remaining(&mut self) -> Vec<usize> {
+        let mut left: Vec<usize> = self.queues.iter_mut().flat_map(|q| q.drain(..)).collect();
+        left.extend(self.next_arrival..self.stream_end);
+        self.next_arrival = self.stream_end;
+        left.sort_unstable();
+        left
+    }
+
+    /// Live gate values (absolute times), for carrying lull re-arms
+    /// across epoch boundaries when the topology does not change.
+    pub fn live_gates(&self) -> &[f64] {
+        &self.gates
     }
 }
 
@@ -333,6 +505,16 @@ impl WorkSource for ServeController<'_> {
         if self.in_flight[partition] {
             self.in_flight[partition] = false;
             self.last_busy = self.last_busy.max(now);
+        }
+        // Epoch scoping: instants before `start_s` were simulated by
+        // previous epochs (each engine run restarts its clock at 0), and
+        // a poll at or past the horizon ends this epoch's dispatching —
+        // whatever is still queued or in-stream migrates to the next one.
+        if now < self.start_s {
+            return DynNext::IdleUntil(self.start_s);
+        }
+        if self.horizon_s.is_some_and(|h| now >= h) {
+            return DynNext::Finished;
         }
         if now < self.gates[partition] {
             return DynNext::IdleUntil(self.gates[partition]);
@@ -366,7 +548,7 @@ impl WorkSource for ServeController<'_> {
             // idle a dispatchable batch while admissions drop.
             if let BatchPolicy::DispatchOnDeadline { hold_s } = self.cfg.batch {
                 let fill = self.cfg.queue_cap.map_or(self.max_batch, |c| c.min(self.max_batch));
-                if q_len < fill && self.next_arrival < self.arrivals.len() {
+                if q_len < fill && self.next_arrival < self.stream_end {
                     let oldest = self.arrivals[self.queues[partition][0]];
                     let force_at = oldest + hold_s;
                     if now < force_at {
@@ -383,9 +565,10 @@ impl WorkSource for ServeController<'_> {
             self.batches.push(BatchRecord { requests, partition, dispatched_at: now });
             self.in_flight[partition] = true;
             self.last_busy = now;
+            self.record_dispatch_gap(now);
             return DynNext::Job(DynJob { id, phases });
         }
-        if self.next_arrival < self.arrivals.len() {
+        if self.next_arrival < self.stream_end {
             // Queue is empty but the stream is not: wake at the next
             // arrival (it may be routed elsewhere — then we just idle
             // again, deterministically).
@@ -759,6 +942,131 @@ mod tests {
         }
         assert_eq!(ctl.batches()[0].requests, vec![0, 1]);
         assert_eq!(ctl.dropped(), 0);
+    }
+
+    #[test]
+    fn adaptive_rearm_threshold_tracks_the_lull_distribution() {
+        // Nine dispatches 1 s apart teach the controller that ~1 s gaps
+        // are routine; the derived threshold becomes max(base, 2 × p95)
+        // = 2 s, so a 1.4 s pause (which the 0.1 s constant alone would
+        // call a lull) no longer re-arms the gates — only a > 2 s outlier
+        // does. The re-arm is observable through the live gate value.
+        let arrivals: Vec<f64> = (0..9).map(|i| i as f64).chain([10.4, 13.0]).collect();
+        let progs = programs(4);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.rearm_idle_s = Some(0.1);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        for t in 0..9 {
+            match ctl.next(0, t as f64) {
+                DynNext::Job(j) => assert_eq!(j.phases[0].name, "b1"),
+                other => panic!("expected routine dispatch at {t}, got {other:?}"),
+            }
+        }
+        // Completion poll at t = 9, then the 1.4 s pause to t = 10.4.
+        assert!(matches!(ctl.next(0, 9.0), DynNext::IdleUntil(t) if (t - 10.4).abs() < 1e-12));
+        assert!(matches!(ctl.next(0, 10.4), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], 0.0, "a 1.4 s gap is no outlier — no re-arm");
+        // Completion poll at 10.5, then the 2.5 s outlier to t = 13.
+        assert!(matches!(ctl.next(0, 10.5), DynNext::IdleUntil(t) if (t - 13.0).abs() < 1e-12));
+        assert!(matches!(ctl.next(0, 13.0), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], 13.0, "a 2.5 s outlier re-arms the gates");
+
+        // With the quantile disabled, the fixed 0.1 s constant calls the
+        // same 1.4 s pause a lull and re-arms.
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.rearm_idle_s = Some(0.1);
+        c.rearm_quantile = None;
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        for t in 0..9 {
+            assert!(matches!(ctl.next(0, t as f64), DynNext::Job(_)));
+        }
+        assert!(matches!(ctl.next(0, 9.0), DynNext::IdleUntil(_)));
+        assert!(matches!(ctl.next(0, 10.4), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], 10.4, "fixed threshold re-arms on 1.4 s");
+    }
+
+    #[test]
+    fn epoch_window_scopes_the_stream_and_horizon() {
+        // Arrivals 0..6; this epoch owns [2, 5) with a horizon at 1.0.
+        let arrivals = [0.0, 0.1, 0.3, 0.35, 0.4, 2.0];
+        let progs = programs(8);
+        let window = EpochWindow {
+            start_s: 0.25,
+            horizon_s: Some(1.0),
+            stream: 2..5,
+            carry: vec![0, 1],
+        };
+        let mut ctl = ServeController::for_epoch(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::RoundRobin, vec![0.25, 0.25]),
+            window,
+        );
+        // Carried requests were re-admitted across both queues.
+        assert_eq!(ctl.pending(), 5, "2 carried + 3 in-stream");
+        // Polls before the epoch start idle until it.
+        assert!(matches!(ctl.next(0, 0.0), DynNext::IdleUntil(t) if (t - 0.25).abs() < 1e-12));
+        // At the start, the carried backlog plus admitted arrivals serve.
+        match ctl.next(0, 0.4) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b3"),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        // RR spread: carry 0 → p0, carry 1 → p1, then arrivals 2, 3, 4
+        // alternate p0, p1, p0.
+        assert_eq!(ctl.batches()[0].requests, vec![0, 2, 4]);
+        match ctl.next(1, 0.45) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[1].requests, vec![1, 3]);
+        // Stream exhausted (index 5 belongs to the next epoch): finished.
+        assert!(matches!(ctl.next(0, 0.5), DynNext::Finished));
+        assert_eq!(ctl.pending(), 0);
+
+        // A poll past the horizon ends the epoch with work outstanding;
+        // the leftovers (queued + never admitted) migrate out in order.
+        // Partition 1's gate never opens, so everything routes to p0.
+        let window =
+            EpochWindow { start_s: 0.0, horizon_s: Some(0.32), stream: 0..5, carry: vec![] };
+        let mut ctl = ServeController::for_epoch(
+            &arrivals,
+            &progs,
+            cfg(DispatchPolicy::RoundRobin, vec![0.0, 10.0]),
+            window,
+        );
+        match ctl.next(0, 0.2) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        assert_eq!(ctl.batches()[0].requests, vec![0, 1]);
+        assert!(matches!(ctl.next(1, 0.4), DynNext::Finished));
+        assert_eq!(ctl.drain_remaining(), vec![2, 3, 4]);
+        assert_eq!(ctl.pending(), 0, "drain empties the epoch");
+    }
+
+    #[test]
+    fn epoch_migration_respects_the_new_caps() {
+        // Five carried requests into a 2-partition topology with cap 2:
+        // four queue (balanced), one is dropped by re-admission.
+        let arrivals = [0.0; 5];
+        let progs = programs(8);
+        let mut c = QueueConfig::new(DispatchPolicy::ShortestQueue, vec![0.0, 0.0]);
+        c.queue_cap = Some(2);
+        let window = EpochWindow {
+            start_s: 1.0,
+            horizon_s: None,
+            stream: 5..5,
+            carry: vec![0, 1, 2, 3, 4],
+        };
+        let mut ctl = ServeController::for_epoch(&arrivals, &progs, c, window);
+        assert_eq!(ctl.dropped_capacity(), 1, "cap 2 × 2 partitions holds only 4");
+        assert_eq!(ctl.queue_peak(), 2);
+        match ctl.next(0, 1.0) {
+            DynNext::Job(j) => assert_eq!(j.phases[0].name, "b2"),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        assert!(matches!(ctl.next(1, 1.0), DynNext::Job(_)));
+        assert_eq!(ctl.pending(), 0);
     }
 
     #[test]

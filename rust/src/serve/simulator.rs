@@ -3,29 +3,72 @@
 //! One run: a seeded arrival stream over `[0, duration)` feeds the
 //! [`ServeController`]'s per-partition queues; every idle partition pulls
 //! a dynamically-sized batch, whose phase program (compiled by
-//! [`PhaseCompiler`] for exactly that batch size) executes on the fluid
-//! engine's dynamic mode — so bandwidth contention between partitions
-//! mid-burst shapes every service time. By default the run drains the
-//! whole stream (open loop, nothing dropped); with a queue cap and/or an
-//! SLO deadline it becomes an overload experiment, reporting drops,
-//! goodput and the latency of what was actually served.
+//! [`crate::reuse::PhaseCompiler`] for exactly that batch size) executes
+//! on the fluid engine's dynamic mode — so bandwidth contention between
+//! partitions mid-burst shapes every service time. By default the run
+//! drains the whole stream (open loop, nothing dropped); with a queue cap
+//! and/or an SLO deadline it becomes an overload experiment, reporting
+//! drops, goodput and the latency of what was actually served.
+//!
+//! With [`ServeSimulator::adaptive`], the partition topology itself
+//! becomes runtime-mutable: the run proceeds in **epochs** over
+//! [`PartitionSet`]s, and at each epoch boundary — a safe drain point,
+//! all in-flight batches completed — a windowed hill-climber
+//! ([`crate::shaping::OnlineRepartitioner`]) may re-partition the
+//! machine, migrating the queued backlog into the new topology
+//! (re-admission against its caps, stagger gates re-armed) while latency
+//! accounting continues seamlessly across the switch.
 
 use super::arrival::ArrivalProcess;
 use super::latency::{LatencyRecorder, LatencyStats};
-use super::queue::{BatchPolicy, DispatchPolicy, QueueConfig, ServeController};
+use super::queue::{BatchPolicy, DispatchPolicy, EpochWindow, QueueConfig, ServeController};
+use super::topology::{AdaptiveConfig, EpochStats, PartitionSet, ReconfigEvent};
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
-use crate::reuse::{Phase, PhaseCompiler};
-use crate::shaping::{PartitionPlan, StaggerPolicy};
-use crate::sim::{BandwidthTrace, SimEngine};
+use crate::reuse::PhaseCompiler;
+use crate::shaping::{OnlineRepartitioner, StaggerPolicy, WindowSignals};
+use crate::sim::{BandwidthTrace, JobRecord, SimEngine};
 use crate::util::rng::Xoshiro256StarStar;
 use crate::util::stats::Summary;
-use std::sync::Arc;
+use std::collections::BTreeMap;
+
+/// Hard cap on adaptive epochs per run — a backstop against a stalled
+/// loop, far above anything a real configuration produces.
+const MAX_EPOCHS: usize = 1_000_000;
+
+/// Map one engine run's batch completions back to per-request latencies
+/// (shared by the fixed path and every adaptive epoch); returns how many
+/// requests completed service.
+fn fold_completions(
+    arrivals: &[f64],
+    controller: &ServeController<'_>,
+    jobs: &[JobRecord],
+    recorder: &mut LatencyRecorder,
+) -> Result<usize> {
+    let batches = controller.batches();
+    let mut served = 0usize;
+    for job in jobs {
+        let Some(batch) = batches.get(job.id as usize) else {
+            return Err(Error::SimInvariant(format!(
+                "engine job {} has no dispatched batch",
+                job.id
+            )));
+        };
+        for &r in &batch.requests {
+            recorder.record(arrivals[r], job.finished_at);
+        }
+        served += batch.requests.len();
+    }
+    Ok(served)
+}
 
 /// Result of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
+    /// Configured partition count — for adaptive runs, the count the
+    /// controller had selected when the run ended (see
+    /// [`Self::partition_trajectory`] for the full path).
     pub partitions: usize,
     /// Configured long-run mean arrival rate (requests/s).
     pub arrival_rate: f64,
@@ -56,6 +99,11 @@ pub struct ServeOutcome {
     pub total_bytes: f64,
     /// Exact bandwidth trace, for plotting and deeper analysis.
     pub trace: BandwidthTrace,
+    /// Per-epoch flight record of an adaptive run (empty for the fixed
+    /// single-topology path).
+    pub epochs: Vec<EpochStats>,
+    /// Online re-partitioning events, in order (empty for fixed runs).
+    pub reconfigs: Vec<ReconfigEvent>,
 }
 
 impl ServeOutcome {
@@ -77,7 +125,36 @@ impl ServeOutcome {
             bw: Summary::of(&[]),
             total_bytes: 0.0,
             trace: BandwidthTrace::total_only(),
+            epochs: Vec::new(),
+            reconfigs: Vec::new(),
         }
+    }
+
+    /// How many times the topology was reconfigured mid-run.
+    pub fn reconfigurations(&self) -> usize {
+        self.reconfigs.len()
+    }
+
+    /// The sequence of partition counts actually used, consecutive
+    /// duplicates collapsed (`[n]` for a fixed run).
+    pub fn partition_trajectory(&self) -> Vec<usize> {
+        if self.epochs.is_empty() {
+            return vec![self.partitions];
+        }
+        let mut out: Vec<usize> = Vec::new();
+        for e in &self.epochs {
+            if out.last() != Some(&e.partitions) {
+                out.push(e.partitions);
+            }
+        }
+        out
+    }
+
+    /// The trajectory as a compact `1>4>1`-style string (report column).
+    pub fn trajectory_string(&self) -> String {
+        let parts: Vec<String> =
+            self.partition_trajectory().iter().map(|n| n.to_string()).collect();
+        parts.join(">")
     }
 }
 
@@ -98,6 +175,8 @@ pub struct ServeSimulator {
     slo_ms: f64,
     batch_timeout_ms: f64,
     stagger_rearm: bool,
+    rearm_quantile: f64,
+    adaptive: Option<AdaptiveConfig>,
     trace_samples: usize,
     enforce_capacity: bool,
 }
@@ -118,6 +197,8 @@ impl ServeSimulator {
             slo_ms: 0.0,
             batch_timeout_ms: 0.0,
             stagger_rearm: true,
+            rearm_quantile: 0.95,
+            adaptive: None,
             trace_samples: 400,
             enforce_capacity: true,
         }
@@ -198,6 +279,24 @@ impl ServeSimulator {
         self
     }
 
+    /// Quantile of the measured inter-dispatch gap distribution the lull
+    /// threshold is derived from (`max(one batch time, 2 × quantile)`,
+    /// once enough gaps have been observed). Pass 0 to keep the fixed
+    /// one-batch-time constant only.
+    pub fn stagger_rearm_quantile(mut self, q: f64) -> Self {
+        self.rearm_quantile = q;
+        self
+    }
+
+    /// Make the partition topology runtime-mutable: run in epochs and
+    /// let the online controller re-partition at epoch boundaries. With
+    /// a single (feasible) candidate the run degenerates to the fixed
+    /// path, bit for bit.
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
+    }
+
     pub fn trace_samples(mut self, s: usize) -> Self {
         self.trace_samples = s;
         self
@@ -209,10 +308,11 @@ impl ServeSimulator {
         self
     }
 
-    /// Start gates for the configured stagger policy, spread over one
-    /// full-batch roofline time.
-    fn gates(&self, batch_time: f64) -> Vec<f64> {
-        let n = self.partitions;
+    /// Start-gate offsets for the configured stagger policy at an `n`
+    /// partition topology, spread over one full-batch roofline time.
+    /// Offsets are relative to the topology's install instant (t = 0 for
+    /// a fixed run).
+    fn gates_for(&self, n: usize, batch_time: f64) -> Vec<f64> {
         match self.stagger {
             StaggerPolicy::None => vec![0.0; n],
             StaggerPolicy::UniformPhase => {
@@ -225,78 +325,77 @@ impl ServeSimulator {
         }
     }
 
-    /// The queue configuration one run uses (gates spread over
-    /// `batch_time`, overload knobs translated from the builder).
-    fn queue_config(&self, batch_time: f64) -> Result<QueueConfig> {
+    /// The SLO knob, validated and converted to seconds.
+    fn slo_s(&self) -> Result<Option<f64>> {
         if !(self.slo_ms.is_finite() && self.slo_ms >= 0.0) {
             return Err(Error::InvalidConfig(format!(
                 "SLO must be finite and >= 0 ms: {}",
                 self.slo_ms
             )));
         }
-        let mut cfg = QueueConfig::new(self.policy, self.gates(batch_time));
+        Ok(if self.slo_ms > 0.0 { Some(self.slo_ms / 1e3) } else { None })
+    }
+
+    /// The queue configuration one (epoch of a) run uses: the given
+    /// gates, overload knobs translated from the builder, lull re-arm
+    /// spread over `batch_time`.
+    fn queue_config(&self, gates: Vec<f64>, batch_time: f64) -> Result<QueueConfig> {
+        if !(self.rearm_quantile.is_finite() && (0.0..1.0).contains(&self.rearm_quantile)) {
+            return Err(Error::InvalidConfig(format!(
+                "re-arm quantile must be in [0, 1): {}",
+                self.rearm_quantile
+            )));
+        }
+        let mut cfg = QueueConfig::new(self.policy, gates);
         cfg.queue_cap = (self.queue_cap > 0).then_some(self.queue_cap);
-        cfg.slo_s = if self.slo_ms > 0.0 { Some(self.slo_ms / 1e3) } else { None };
+        cfg.slo_s = self.slo_s()?;
         cfg.batch = BatchPolicy::from_timeout_ms(self.batch_timeout_ms)?;
         cfg.rearm_idle_s = self.stagger_rearm.then_some(batch_time);
+        cfg.rearm_quantile = (self.rearm_quantile > 0.0).then_some(self.rearm_quantile);
         Ok(cfg)
     }
 
-    /// Run the serving simulation to drain and aggregate the outcome.
+    /// Run the serving simulation to drain and aggregate the outcome —
+    /// through the fixed single-topology path, or, when
+    /// [`Self::adaptive`] configured candidates, the epoch loop with
+    /// online re-partitioning.
     pub fn run(&self) -> Result<ServeOutcome> {
-        let plan = PartitionPlan::new(&self.accel, self.partitions)?;
-        if self.enforce_capacity {
-            plan.check_capacity(&self.accel, &self.graph)?;
+        match &self.adaptive {
+            Some(cfg) => self.run_adaptive(cfg),
+            None => self.run_fixed(self.partitions),
         }
-        let cap = plan.batch_per_partition;
-        let max_batch = if self.max_batch == 0 { cap } else { self.max_batch.clamp(1, cap) };
+    }
+
+    /// The fixed-topology serving run (one epoch spanning everything).
+    fn run_fixed(&self, partitions: usize) -> Result<ServeOutcome> {
+        let set = PartitionSet::build(
+            &self.accel,
+            &self.graph,
+            partitions,
+            self.max_batch,
+            self.enforce_capacity,
+        )?;
 
         let arrivals = self.arrival.generate(self.duration_s, self.seed)?;
         let rate = self.arrival.mean_rate();
         if arrivals.is_empty() {
-            return Ok(ServeOutcome::empty(self.partitions, rate));
+            return Ok(ServeOutcome::empty(partitions, rate));
         }
 
-        // One compiled program per batch size (shared via Arc: a batch
-        // dispatch is a refcount bump): dynamic batching dispatches the
-        // exact-size program, so under-filled batches pay their true
-        // per-image weight-traffic premium.
-        let programs: Vec<Arc<Vec<Phase>>> = (1..=max_batch)
-            .map(|b| {
-                let pc = PhaseCompiler::new(&self.accel, plan.cores_per_partition, b);
-                Arc::new(pc.compile(&self.graph))
-            })
-            .collect();
-        let full = PhaseCompiler::new(&self.accel, plan.cores_per_partition, max_batch);
-        let batch_time = full.roofline_time(&programs[max_batch - 1]).0;
-
-        let queue_cfg = self.queue_config(batch_time)?;
+        let gates = self.gates_for(partitions, set.batch_time_s);
+        let queue_cfg = self.queue_config(gates, set.batch_time_s)?;
         // The recorder's goodput deadline is the controller's shedding
         // deadline — one source of truth.
         let slo_s = queue_cfg.slo_s;
-        let mut controller = ServeController::new(&arrivals, &programs, queue_cfg);
-        let cores = vec![plan.cores_per_partition; self.partitions];
-        let out = SimEngine::new(&self.accel).run_dynamic(&cores, &mut controller)?;
+        let mut controller = ServeController::new(&arrivals, set.programs(), queue_cfg);
+        let out = SimEngine::new(&self.accel).run_dynamic(&set.cores(), &mut controller)?;
 
         // Map batch completions back to per-request latencies.
         let mut recorder = match slo_s {
             Some(s) => LatencyRecorder::with_slo(s),
             None => LatencyRecorder::new(),
         };
-        let batches = controller.batches();
-        let mut served = 0usize;
-        for job in &out.jobs {
-            let Some(batch) = batches.get(job.id as usize) else {
-                return Err(Error::SimInvariant(format!(
-                    "engine job {} has no dispatched batch",
-                    job.id
-                )));
-            };
-            for &r in &batch.requests {
-                recorder.record(arrivals[r], job.finished_at);
-            }
-            served += batch.requests.len();
-        }
+        let served = fold_completions(&arrivals, &controller, &out.jobs, &mut recorder)?;
         let dropped = controller.dropped();
         recorder.record_drops(dropped);
         if served + dropped != arrivals.len() || controller.pending() != 0 {
@@ -310,7 +409,7 @@ impl ServeSimulator {
         let makespan = out.makespan.0;
         let per_s = |n: usize| if makespan > 0.0 { n as f64 / makespan } else { 0.0 };
         Ok(ServeOutcome {
-            partitions: self.partitions,
+            partitions,
             arrival_rate: rate,
             requests: arrivals.len(),
             served,
@@ -326,6 +425,231 @@ impl ServeSimulator {
             bw: out.trace.sampled_summary(self.trace_samples),
             total_bytes: out.total_bytes,
             trace: out.trace,
+            epochs: Vec::new(),
+            reconfigs: Vec::new(),
+        })
+    }
+
+    /// The epoch loop: run the stream in fixed-length observation
+    /// windows, and at each boundary — once every in-flight batch of the
+    /// old topology has drained — let the windowed hill-climber switch
+    /// [`PartitionSet`]s, migrating the queued backlog into the new
+    /// topology's queues.
+    fn run_adaptive(&self, cfg: &AdaptiveConfig) -> Result<ServeOutcome> {
+        cfg.validate()?;
+        // Resolve the feasible candidate topologies once; infeasible
+        // counts (non-divisors, DRAM) are skipped, not fatal.
+        let mut cands = cfg.candidates.clone();
+        cands.sort_unstable();
+        cands.dedup();
+        let mut sets: BTreeMap<usize, PartitionSet> = BTreeMap::new();
+        for &n in &cands {
+            let built = PartitionSet::build(
+                &self.accel,
+                &self.graph,
+                n,
+                self.max_batch,
+                self.enforce_capacity,
+            );
+            match built {
+                Ok(ps) => {
+                    sets.insert(n, ps);
+                }
+                Err(Error::InfeasiblePartitioning(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        let feasible: Vec<usize> = sets.keys().copied().collect();
+        if feasible.is_empty() {
+            return Err(Error::InfeasiblePartitioning(format!(
+                "no feasible adaptive candidate among {:?} for {}",
+                cands, self.graph.name
+            )));
+        }
+        if feasible.len() == 1 {
+            // A single candidate can never reconfigure: the adaptive
+            // loop degenerates to the fixed-topology run, bit for bit.
+            return self.run_fixed(feasible[0]);
+        }
+
+        let arrivals = self.arrival.generate(self.duration_s, self.seed)?;
+        let rate = self.arrival.mean_rate();
+        if arrivals.is_empty() {
+            return Ok(ServeOutcome::empty(feasible[0], rate));
+        }
+
+        let slo_s = self.slo_s()?;
+        let mut climber = OnlineRepartitioner::new(feasible, cfg.min_gain_step, cfg.low_util)?;
+        let engine = SimEngine::new(&self.accel);
+        let mut recorder = match slo_s {
+            Some(s) => LatencyRecorder::with_slo(s),
+            None => LatencyRecorder::new(),
+        };
+        let mut trace = BandwidthTrace::total_only();
+        let mut epochs: Vec<EpochStats> = Vec::new();
+        let mut reconfigs: Vec<ReconfigEvent> = Vec::new();
+        let mut carry: Vec<usize> = Vec::new();
+        let mut cursor = 0usize;
+        let mut start = 0.0f64;
+        let mut served_total = 0usize;
+        let mut dropped_total = 0usize;
+        let mut batches_total = 0usize;
+        let mut queue_peak = 0usize;
+        let mut makespan = 0.0f64;
+        let mut total_bytes = 0.0f64;
+        // Gates are armed (absolute) when a topology is installed and
+        // persist across epochs — re-spreading them at every boundary
+        // would keep re-staggering a steady topology.
+        let mut gates = self.gates_for(climber.current(), sets[&climber.current()].batch_time_s);
+
+        while cursor < arrivals.len() || !carry.is_empty() {
+            if epochs.len() >= MAX_EPOCHS {
+                return Err(Error::SimInvariant(format!(
+                    "adaptive serve exceeded {MAX_EPOCHS} epochs — stalled loop"
+                )));
+            }
+            let n = climber.current();
+            let set = &sets[&n];
+            // The next epoch boundary strictly after this epoch's start.
+            // A degenerate epoch length below the float resolution of
+            // `start` cannot advance by addition — fall back to the next
+            // representable instant so the loop always makes progress.
+            let mut horizon = (start / cfg.epoch_s).floor() * cfg.epoch_s + cfg.epoch_s;
+            if horizon <= start {
+                horizon = start + cfg.epoch_s;
+            }
+            if horizon <= start {
+                horizon = f64::from_bits(start.to_bits() + 1);
+            }
+            let upper = arrivals.partition_point(|&a| a < horizon);
+            let arrived = upper - cursor;
+            let carried_in = carry.len();
+
+            let mut queue_cfg = self.queue_config(gates.clone(), set.batch_time_s)?;
+            queue_cfg.rearm_offsets = Some(self.gates_for(n, set.batch_time_s));
+            let window = EpochWindow {
+                start_s: start,
+                horizon_s: Some(horizon),
+                stream: cursor..upper,
+                carry: std::mem::take(&mut carry),
+            };
+            let mut controller =
+                ServeController::for_epoch(&arrivals, set.programs(), queue_cfg, window);
+            let out = engine.run_dynamic(&set.cores(), &mut controller)?;
+
+            // Fold completions into the continuous latency record.
+            let mark = recorder.mark();
+            let served_e = fold_completions(&arrivals, &controller, &out.jobs, &mut recorder)?;
+            let dropped_e = controller.dropped();
+            recorder.record_drops(dropped_e);
+            carry = controller.drain_remaining();
+            if carried_in + arrived != served_e + dropped_e + carry.len() {
+                return Err(Error::SimInvariant(format!(
+                    "epoch {} lost requests: {carried_in} carried + {arrived} arrived vs \
+                     {served_e} served + {dropped_e} dropped + {} left",
+                    epochs.len(),
+                    carry.len()
+                )));
+            }
+            // Keep any in-epoch lull re-arms of the gates.
+            gates = controller.live_gates().to_vec();
+
+            let end = horizon.max(out.makespan.0);
+            let busy: f64 = out.jobs.iter().map(|j| j.finished_at - j.started_at).sum();
+            let util = if end > start {
+                (busy / (n as f64 * (end - start))).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            // Trim idle padding past the boundary (a hold-timer wake can
+            // schedule events beyond the horizon) so the stitched trace
+            // never shadows the next epoch's activity, then append.
+            let mut epoch_trace = out.trace;
+            epoch_trace.truncate_to(end);
+            trace.append_clipped(&epoch_trace);
+            total_bytes += out.total_bytes;
+            served_total += served_e;
+            dropped_total += dropped_e;
+            batches_total += out.jobs.len();
+            queue_peak = queue_peak.max(controller.queue_peak());
+            makespan = makespan.max(out.makespan.0);
+            let stats = EpochStats {
+                index: epochs.len(),
+                partitions: n,
+                start_s: start,
+                end_s: end,
+                arrived,
+                carried_in,
+                served: served_e,
+                dropped: dropped_e,
+                carried_out: carry.len(),
+                batches: out.jobs.len(),
+                queue_peak: controller.queue_peak(),
+                utilization: util,
+                latency: recorder.stats_since(&mark),
+            };
+            let signals = WindowSignals {
+                window_s: end - stats.start_s,
+                arrived,
+                served: served_e,
+                dropped: dropped_e,
+                backlog_in: carried_in,
+                backlog_out: carry.len(),
+                p99_ms: stats.latency.p99_ms,
+                utilization: util,
+            };
+            epochs.push(stats);
+            cursor = upper;
+            start = end;
+
+            // Observe the window; a decision re-partitions at the (now
+            // drained) boundary and re-arms the new topology's gates.
+            // Once the stream and backlog are exhausted there is nothing
+            // left to serve, so no decision is taken.
+            if cursor >= arrivals.len() && carry.is_empty() {
+                break;
+            }
+            if let Some(to) = climber.observe(&signals) {
+                reconfigs.push(ReconfigEvent {
+                    epoch: epochs.len() - 1,
+                    at_s: start,
+                    from_partitions: n,
+                    to_partitions: to,
+                    migrated: carry.len(),
+                });
+                let bt = sets[&to].batch_time_s;
+                gates = self.gates_for(to, bt).into_iter().map(|o| start + o).collect();
+            }
+        }
+
+        if served_total + dropped_total != arrivals.len() {
+            return Err(Error::SimInvariant(format!(
+                "adaptive serve lost requests: {served_total} served + {dropped_total} dropped \
+                 of {}",
+                arrivals.len()
+            )));
+        }
+        let latency = recorder.stats();
+        let per_s = |k: usize| if makespan > 0.0 { k as f64 / makespan } else { 0.0 };
+        Ok(ServeOutcome {
+            partitions: climber.current(),
+            arrival_rate: rate,
+            requests: arrivals.len(),
+            served: served_total,
+            dropped: dropped_total,
+            drop_rate: latency.drop_rate(),
+            batches: batches_total,
+            mean_batch: served_total as f64 / batches_total.max(1) as f64,
+            queue_peak,
+            makespan_s: makespan,
+            throughput_ips: per_s(served_total),
+            goodput_ips: per_s(latency.slo_hits),
+            latency,
+            bw: trace.sampled_summary(self.trace_samples),
+            total_bytes,
+            trace,
+            epochs,
+            reconfigs,
         })
     }
 }
@@ -476,13 +800,17 @@ mod tests {
     #[test]
     fn stagger_gates_match_policy() {
         let s = sim(500.0, 4);
-        assert_eq!(s.clone().stagger(StaggerPolicy::None).gates(1.0), vec![0.0; 4]);
-        let uni = s.clone().stagger(StaggerPolicy::UniformPhase).gates(0.8);
+        assert_eq!(s.clone().stagger(StaggerPolicy::None).gates_for(4, 1.0), vec![0.0; 4]);
+        let uni = s.clone().stagger(StaggerPolicy::UniformPhase).gates_for(4, 0.8);
         assert_eq!(uni.len(), 4);
         assert_eq!(uni[0], 0.0);
         assert!((uni[3] - 0.6).abs() < 1e-12);
-        let r1 = s.clone().stagger(StaggerPolicy::RandomDelay { seed: 5 }).gates(1.0);
-        let r2 = s.stagger(StaggerPolicy::RandomDelay { seed: 5 }).gates(1.0);
+        // The topology argument, not the builder's partition count,
+        // sizes the gate vector (the adaptive loop re-spreads per
+        // candidate).
+        assert_eq!(s.clone().stagger(StaggerPolicy::UniformPhase).gates_for(2, 0.8).len(), 2);
+        let r1 = s.clone().stagger(StaggerPolicy::RandomDelay { seed: 5 }).gates_for(4, 1.0);
+        let r2 = s.stagger(StaggerPolicy::RandomDelay { seed: 5 }).gates_for(4, 1.0);
         assert_eq!(r1, r2);
         assert!(r1.iter().all(|&g| (0.0..1.0).contains(&g)));
     }
@@ -490,15 +818,108 @@ mod tests {
     #[test]
     fn queue_config_translates_the_builder_knobs() {
         let s = sim(500.0, 2).queue_cap(16).slo_ms(25.0).batch_timeout_ms(2.0);
-        let cfg = s.queue_config(0.1).unwrap();
+        let cfg = s.queue_config(vec![0.0, 0.05], 0.1).unwrap();
+        assert_eq!(cfg.gates, vec![0.0, 0.05]);
         assert_eq!(cfg.queue_cap, Some(16));
         assert_eq!(cfg.slo_s, Some(0.025));
         assert_eq!(cfg.batch, BatchPolicy::DispatchOnDeadline { hold_s: 0.002 });
         assert_eq!(cfg.rearm_idle_s, Some(0.1));
-        let legacy = sim(500.0, 2).stagger_rearm(false).queue_config(0.1).unwrap();
+        assert_eq!(cfg.rearm_quantile, Some(0.95));
+        assert_eq!(cfg.rearm_offsets, None, "fixed path keeps the legacy offsets");
+        let legacy = sim(500.0, 2)
+            .stagger_rearm(false)
+            .stagger_rearm_quantile(0.0)
+            .queue_config(vec![0.0, 0.05], 0.1)
+            .unwrap();
         assert_eq!(legacy.queue_cap, None);
         assert_eq!(legacy.slo_s, None);
         assert_eq!(legacy.batch, BatchPolicy::DispatchOnIdle);
         assert_eq!(legacy.rearm_idle_s, None);
+        assert_eq!(legacy.rearm_quantile, None);
+        assert!(sim(500.0, 2).stagger_rearm_quantile(1.5).queue_config(vec![0.0], 0.1).is_err());
+    }
+
+    #[test]
+    fn adaptive_single_candidate_matches_fixed_bit_for_bit() {
+        // One candidate can never reconfigure: the adaptive entry point
+        // must reproduce the fixed-partition outcome exactly.
+        let fixed = sim(3000.0, 2).run().unwrap();
+        let adaptive = sim(3000.0, 2).adaptive(AdaptiveConfig::new(vec![2])).run().unwrap();
+        assert_eq!(adaptive.latency, fixed.latency);
+        assert_eq!(adaptive.served, fixed.served);
+        assert_eq!(adaptive.dropped, fixed.dropped);
+        assert_eq!(adaptive.batches, fixed.batches);
+        assert_eq!(adaptive.queue_peak, fixed.queue_peak);
+        assert_eq!(adaptive.makespan_s, fixed.makespan_s);
+        assert_eq!(adaptive.total_bytes, fixed.total_bytes);
+        assert_eq!(adaptive.bw, fixed.bw);
+        assert_eq!(adaptive.reconfigurations(), 0);
+        assert_eq!(adaptive.partition_trajectory(), vec![2]);
+        // Infeasible candidates are skipped, so {2, 3} degenerates to
+        // the same fixed run; an all-infeasible list errors.
+        let skipped = sim(3000.0, 2).adaptive(AdaptiveConfig::new(vec![2, 3])).run().unwrap();
+        assert_eq!(skipped.latency, fixed.latency);
+        assert_eq!(skipped.makespan_s, fixed.makespan_s);
+        assert!(sim(3000.0, 2).adaptive(AdaptiveConfig::new(vec![3, 5])).run().is_err());
+    }
+
+    #[test]
+    fn adaptive_epochs_conserve_requests_and_reconfigure_under_steps() {
+        // A step profile far beyond the 1-partition tiny-CNN capacity in
+        // its high phase: the controller must reconfigure at least once,
+        // and every request must land in exactly one of served/dropped —
+        // per epoch and cumulatively.
+        let out = ServeSimulator::new(&knl(), &tiny_cnn())
+            .partitions(1)
+            .arrival(ArrivalProcess::step_profile(2000.0, 2e7, 0.002))
+            .duration(0.003)
+            .seed(9)
+            .trace_samples(32)
+            .adaptive(AdaptiveConfig::new(vec![1, 2, 4]).epoch_s(0.0004))
+            .run()
+            .unwrap();
+        assert!(out.requests > 100, "want a real stream, got {}", out.requests);
+        assert_eq!(out.served + out.dropped, out.requests);
+        assert_eq!(out.served, out.latency.count);
+        assert!(!out.epochs.is_empty());
+        let mut arrived = 0;
+        for (i, e) in out.epochs.iter().enumerate() {
+            assert!(e.is_conserving(), "epoch {i} leaks requests: {e:?}");
+            assert_eq!(e.index, i);
+            assert!(e.end_s >= e.start_s);
+            assert!((0.0..=1.0).contains(&e.utilization));
+            arrived += e.arrived;
+            if i + 1 < out.epochs.len() {
+                assert_eq!(e.carried_out, out.epochs[i + 1].carried_in, "backlog chain breaks");
+            } else {
+                assert_eq!(e.carried_out, 0, "the run must drain");
+            }
+        }
+        assert_eq!(arrived, out.requests, "every arrival belongs to exactly one epoch");
+        assert_eq!(out.epochs.iter().map(|e| e.served).sum::<usize>(), out.served);
+        assert_eq!(out.epochs.iter().map(|e| e.dropped).sum::<usize>(), out.dropped);
+        assert!(
+            out.reconfigurations() >= 1,
+            "a 1000x rate step must trigger re-partitioning: {:?}",
+            out.partition_trajectory()
+        );
+        assert_eq!(out.partition_trajectory().len(), out.reconfigurations() + 1);
+        for r in &out.reconfigs {
+            assert_ne!(r.from_partitions, r.to_partitions);
+            assert!(r.epoch < out.epochs.len());
+        }
+        // Determinism of the whole adaptive path.
+        let again = ServeSimulator::new(&knl(), &tiny_cnn())
+            .partitions(1)
+            .arrival(ArrivalProcess::step_profile(2000.0, 2e7, 0.002))
+            .duration(0.003)
+            .seed(9)
+            .trace_samples(32)
+            .adaptive(AdaptiveConfig::new(vec![1, 2, 4]).epoch_s(0.0004))
+            .run()
+            .unwrap();
+        assert_eq!(again.latency, out.latency);
+        assert_eq!(again.makespan_s, out.makespan_s);
+        assert_eq!(again.reconfigs, out.reconfigs);
     }
 }

@@ -1,0 +1,277 @@
+//! Runtime-mutable partition topology.
+//!
+//! The paper fixes the degree of partitioning up front; this module makes
+//! it a first-class runtime value. A [`PartitionSet`] is one *installed*
+//! topology — the validated plan, the per-batch-size compiled phase
+//! programs, and the full-batch roofline time the stagger gates are
+//! spread over. The serving loop keeps one `PartitionSet` per candidate
+//! count and switches between them at epoch boundaries (safe drain
+//! points), guided by the windowed hill-climber in
+//! [`crate::shaping::OnlineRepartitioner`]; [`AdaptiveConfig`] carries
+//! that loop's knobs, and [`EpochStats`]/[`ReconfigEvent`] are its
+//! published flight record.
+
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::reuse::{Phase, PhaseCompiler};
+use crate::shaping::PartitionPlan;
+use std::sync::Arc;
+
+/// One installed partition topology: the plan plus everything the
+/// serving queues need to dispatch onto it.
+#[derive(Debug, Clone)]
+pub struct PartitionSet {
+    /// Partition count `n`.
+    pub partitions: usize,
+    /// Cores per partition (`machine cores / n`).
+    pub cores_per_partition: usize,
+    /// Largest dispatchable batch (≤ the plan's per-partition share).
+    pub max_batch: usize,
+    /// Roofline time of one full `max_batch` on one partition — the span
+    /// stagger gates are spread over and the default lull threshold.
+    pub batch_time_s: f64,
+    /// `programs[b - 1]` is the phase program compiled for exactly a
+    /// batch of `b` images (shared: a dispatch is a refcount bump).
+    programs: Vec<Arc<Vec<Phase>>>,
+}
+
+impl PartitionSet {
+    /// Build (and validate) the topology for `n` partitions.
+    /// `max_batch_cap` limits the dynamic batch size (0 = the partition's
+    /// full batch share, the paper's one-image-per-core invariant);
+    /// `enforce_capacity` applies the DRAM feasibility check.
+    pub fn build(
+        accel: &AcceleratorConfig,
+        graph: &Graph,
+        n: usize,
+        max_batch_cap: usize,
+        enforce_capacity: bool,
+    ) -> Result<Self> {
+        let plan = PartitionPlan::new(accel, n)?;
+        if enforce_capacity {
+            plan.check_capacity(accel, graph)?;
+        }
+        let cap = plan.batch_per_partition;
+        let max_batch = if max_batch_cap == 0 { cap } else { max_batch_cap.clamp(1, cap) };
+        // One compiled program per batch size, so under-filled batches
+        // pay their true per-image weight-traffic premium.
+        let programs: Vec<Arc<Vec<Phase>>> = (1..=max_batch)
+            .map(|b| {
+                let pc = PhaseCompiler::new(accel, plan.cores_per_partition, b);
+                Arc::new(pc.compile(graph))
+            })
+            .collect();
+        let full = PhaseCompiler::new(accel, plan.cores_per_partition, max_batch);
+        let batch_time_s = full.roofline_time(&programs[max_batch - 1]).0;
+        Ok(Self {
+            partitions: n,
+            cores_per_partition: plan.cores_per_partition,
+            max_batch,
+            batch_time_s,
+            programs,
+        })
+    }
+
+    /// The per-batch-size program table (`programs()[b - 1]` runs `b`
+    /// images).
+    pub fn programs(&self) -> &[Arc<Vec<Phase>>] {
+        &self.programs
+    }
+
+    /// Core counts per partition, as the dynamic engine expects them.
+    pub fn cores(&self) -> Vec<usize> {
+        vec![self.cores_per_partition; self.partitions]
+    }
+}
+
+/// Knobs of the adaptive (epoch-based) serving loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Partition counts the controller may choose between. Candidates
+    /// that are infeasible on the target machine/model (non-divisor
+    /// counts, DRAM capacity) are skipped at run start; at least one
+    /// must survive.
+    pub candidates: Vec<usize>,
+    /// Epoch (observation window) length in seconds. Reconfiguration is
+    /// only possible at epoch boundaries, so this is the controller's
+    /// reaction time.
+    pub epoch_s: f64,
+    /// Minimum relative score improvement for an up-step to be kept
+    /// (see [`crate::shaping::OnlineRepartitioner`]).
+    pub min_gain_step: f64,
+    /// Utilization below which an otherwise calm epoch steps down.
+    pub low_util: f64,
+}
+
+impl AdaptiveConfig {
+    /// Defaults: 50 ms epochs, 5% minimum confirmed gain, step down
+    /// under 35% utilization.
+    pub fn new(candidates: Vec<usize>) -> Self {
+        Self { candidates, epoch_s: 0.05, min_gain_step: 0.05, low_util: 0.35 }
+    }
+
+    pub fn epoch_s(mut self, s: f64) -> Self {
+        self.epoch_s = s;
+        self
+    }
+
+    pub fn min_gain_step(mut self, g: f64) -> Self {
+        self.min_gain_step = g;
+        self
+    }
+
+    pub fn low_util(mut self, u: f64) -> Self {
+        self.low_util = u;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.candidates.is_empty() {
+            return Err(Error::InvalidConfig("adaptive serving needs candidates".into()));
+        }
+        if !(self.epoch_s.is_finite() && self.epoch_s > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "adaptive epoch must be finite and > 0 s: {}",
+                self.epoch_s
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Flight record of one serving epoch: what arrived, what was served or
+/// dropped, what migrated onward, and how the topology performed.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    /// Epoch index (0-based).
+    pub index: usize,
+    /// Partition count the epoch ran at.
+    pub partitions: usize,
+    /// Absolute start of the epoch's dispatch window.
+    pub start_s: f64,
+    /// Absolute end: the boundary, or the drain of the last in-flight
+    /// batch if that came later.
+    pub end_s: f64,
+    /// New stream arrivals that entered during this epoch.
+    pub arrived: usize,
+    /// Backlog migrated in from the previous epoch.
+    pub carried_in: usize,
+    /// Requests whose service completed in this epoch.
+    pub served: usize,
+    /// Requests dropped at (re-)admission or shed past the SLO.
+    pub dropped: usize,
+    /// Backlog migrated out to the next epoch.
+    pub carried_out: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Deepest queue within the epoch.
+    pub queue_peak: usize,
+    /// Busy fraction of the epoch's partitions, in `[0, 1]`.
+    pub utilization: f64,
+    /// Latency summary of the requests served in this epoch.
+    pub latency: crate::serve::LatencyStats,
+}
+
+impl EpochStats {
+    /// Conservation over the epoch:
+    /// `carried_in + arrived == served + dropped + carried_out`.
+    pub fn is_conserving(&self) -> bool {
+        self.carried_in + self.arrived == self.served + self.dropped + self.carried_out
+    }
+}
+
+/// One online re-partitioning decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigEvent {
+    /// Epoch whose observation triggered the move.
+    pub epoch: usize,
+    /// Absolute time the new topology took effect (the next epoch's
+    /// start — all in-flight batches of the old topology had drained).
+    pub at_s: f64,
+    pub from_partitions: usize,
+    pub to_partitions: usize,
+    /// Requests migrated into the new topology.
+    pub migrated: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{tiny_cnn, vgg16};
+    use crate::serve::LatencyStats;
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    #[test]
+    fn partition_set_compiles_one_program_per_batch_size() {
+        let ps = PartitionSet::build(&knl(), &tiny_cnn(), 4, 0, true).unwrap();
+        assert_eq!(ps.partitions, 4);
+        assert_eq!(ps.cores_per_partition, 16);
+        assert_eq!(ps.max_batch, 16, "64-core machine / 4 partitions");
+        assert_eq!(ps.programs().len(), 16);
+        assert_eq!(ps.cores(), vec![16; 4]);
+        assert!(ps.batch_time_s > 0.0);
+        // A capped batch shrinks the table but not below one image.
+        let capped = PartitionSet::build(&knl(), &tiny_cnn(), 4, 3, true).unwrap();
+        assert_eq!(capped.max_batch, 3);
+        assert_eq!(capped.programs().len(), 3);
+        // Bigger batches move more bytes.
+        let b1: f64 = ps.programs()[0].iter().map(|p| p.bytes.0).sum();
+        let b16: f64 = ps.programs()[15].iter().map(|p| p.bytes.0).sum();
+        assert!(b16 > b1);
+    }
+
+    #[test]
+    fn partition_set_surfaces_infeasibility() {
+        // Non-divisor partition count.
+        assert!(matches!(
+            PartitionSet::build(&knl(), &tiny_cnn(), 3, 0, true),
+            Err(Error::InfeasiblePartitioning(_))
+        ));
+        // DRAM-infeasible (VGG-16 at 16 partitions)…
+        assert!(matches!(
+            PartitionSet::build(&knl(), &vgg16(), 16, 0, true),
+            Err(Error::InfeasiblePartitioning(_))
+        ));
+        // …unless the capacity check is waived.
+        assert!(PartitionSet::build(&knl(), &vgg16(), 16, 0, false).is_ok());
+    }
+
+    #[test]
+    fn adaptive_config_validates() {
+        let c = AdaptiveConfig::new(vec![1, 2, 4]);
+        c.validate().unwrap();
+        assert_eq!(c.epoch_s, 0.05);
+        let c = AdaptiveConfig::new(vec![1, 4]).epoch_s(0.01).min_gain_step(0.1).low_util(0.2);
+        assert_eq!(c.epoch_s, 0.01);
+        c.validate().unwrap();
+        assert!(AdaptiveConfig::new(vec![]).validate().is_err());
+        assert!(AdaptiveConfig::new(vec![1]).epoch_s(0.0).validate().is_err());
+        assert!(AdaptiveConfig::new(vec![1]).epoch_s(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn epoch_stats_conservation_check() {
+        let mut e = EpochStats {
+            index: 0,
+            partitions: 2,
+            start_s: 0.0,
+            end_s: 0.05,
+            arrived: 10,
+            carried_in: 3,
+            served: 8,
+            dropped: 1,
+            carried_out: 4,
+            batches: 2,
+            queue_peak: 5,
+            utilization: 0.8,
+            latency: LatencyStats::zero(),
+        };
+        assert!(e.is_conserving());
+        e.served = 9;
+        assert!(!e.is_conserving());
+    }
+}

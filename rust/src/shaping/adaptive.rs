@@ -2,13 +2,19 @@
 //! operator ("the degree of partitioning determines a tradeoff") turned
 //! into a controller.
 //!
-//! Two modes:
+//! Three modes:
 //! * [`AdaptivePartitioner::select`] — exhaustive offline auto-tune:
 //!   probe every feasible candidate and return the scored ranking.
 //! * [`AdaptivePartitioner::select_online`] — hill-climbing with a probe
 //!   budget: double the partition count while throughput improves by
 //!   more than a threshold; models a deployment-time controller that
 //!   cannot afford a full sweep.
+//! * [`OnlineRepartitioner`] — the *windowed* online mode: instead of
+//!   offline probes it scores [`WindowSignals`] observed from a live
+//!   serving run (queue growth, drops, utilization, completion rate) and
+//!   hill-climbs the candidate list one step per window. The serving
+//!   epoch loop ([`crate::serve::ServeSimulator`]) feeds it one window
+//!   per epoch and reconfigures the partition topology when it moves.
 
 use super::experiment::PartitionExperiment;
 use super::scheduler::StaggerPolicy;
@@ -148,6 +154,161 @@ impl AdaptivePartitioner {
     }
 }
 
+/// Serving metrics observed over one time window (epoch), the online
+/// controller's only input — no offline probes, no model knowledge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSignals {
+    /// Window length in seconds.
+    pub window_s: f64,
+    /// New arrivals that entered during the window.
+    pub arrived: usize,
+    /// Requests whose service completed during the window.
+    pub served: usize,
+    /// Requests dropped (admission) or shed (deadline) during the window.
+    pub dropped: usize,
+    /// Backlog (queued, unserved) at the start of the window.
+    pub backlog_in: usize,
+    /// Backlog at the end of the window.
+    pub backlog_out: usize,
+    /// p99 latency of the requests served in the window (ms, 0 if none).
+    pub p99_ms: f64,
+    /// Busy fraction of the partitions over the window, in `[0, 1]`.
+    pub utilization: f64,
+}
+
+impl WindowSignals {
+    /// Scalar objective the climber maximizes: net completion rate,
+    /// penalized by queue growth and by shed work —
+    /// `(served − 2·dropped − Δbacklog) / window`. The drop penalty is
+    /// doubled deliberately: under the epoch conservation law
+    /// (`Δbacklog = arrived − served − dropped`) a single penalty would
+    /// cancel against the growth term, leaving a topology that sheds
+    /// 500 requests indistinguishable from one that queues them for
+    /// later service. Comparable across windows at similar offered load;
+    /// the climber only ever compares adjacent windows.
+    pub fn score(&self) -> f64 {
+        if self.window_s <= 0.0 {
+            return 0.0;
+        }
+        let growth = self.backlog_out as f64 - self.backlog_in as f64;
+        (self.served as f64 - 2.0 * self.dropped as f64 - growth) / self.window_s
+    }
+
+    /// The window showed overload pressure: anything was dropped, or the
+    /// backlog grew by more than noise (an eighth of the arrivals).
+    pub fn pressured(&self) -> bool {
+        let growth = self.backlog_out as isize - self.backlog_in as isize;
+        self.dropped > 0 || growth > (self.arrived / 8).max(1) as isize
+    }
+
+    /// The window left the machine demonstrably under-used: no backlog,
+    /// no drops, and busy less than `low_util` of the time.
+    pub fn idle(&self, low_util: f64) -> bool {
+        self.backlog_out == 0 && self.dropped == 0 && self.utilization < low_util
+    }
+}
+
+/// Windowed online hill-climber over a partition-count candidate list.
+///
+/// One decision per window, three deterministic rules (in order):
+/// 1. **pressure up** — an overloaded window steps to the next larger
+///    candidate (unless that exact climb already failed since the last
+///    idle window);
+/// 2. **failed-climb revert** — if the previous window's step *up* did
+///    not improve the score by at least `min_gain_step` (relative), step
+///    back down and remember the failure: the extra partitions' reuse
+///    loss wasn't paying for itself;
+/// 3. **idle down** — an under-utilized window steps to the next smaller
+///    candidate (larger batches, better weight reuse).
+///
+/// The failure memory is cleared by any idle window, so a later load
+/// surge may retry the climb.
+#[derive(Debug, Clone)]
+pub struct OnlineRepartitioner {
+    candidates: Vec<usize>,
+    min_gain_step: f64,
+    low_util: f64,
+    cursor: usize,
+    /// Previous window: (cursor at that window, its score).
+    prev: Option<(usize, f64)>,
+    /// Cursor a step up from which last regressed the score.
+    failed_up_from: Option<usize>,
+    /// Windows to hold still after a revert.
+    hold: usize,
+}
+
+impl OnlineRepartitioner {
+    /// `candidates` must be non-empty; it is sorted and deduplicated.
+    /// The climber starts at the smallest candidate.
+    pub fn new(mut candidates: Vec<usize>, min_gain_step: f64, low_util: f64) -> Result<Self> {
+        candidates.sort_unstable();
+        candidates.dedup();
+        if candidates.is_empty() || candidates[0] == 0 {
+            return Err(Error::InvalidConfig("online repartitioner needs candidates >= 1".into()));
+        }
+        if !(min_gain_step.is_finite() && min_gain_step >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "min gain step must be finite and >= 0: {min_gain_step}"
+            )));
+        }
+        if !(0.0..=1.0).contains(&low_util) {
+            return Err(Error::InvalidConfig(format!(
+                "low-utilization threshold must be in [0, 1]: {low_util}"
+            )));
+        }
+        Ok(Self {
+            candidates,
+            min_gain_step,
+            low_util,
+            cursor: 0,
+            prev: None,
+            failed_up_from: None,
+            hold: 0,
+        })
+    }
+
+    /// The partition count currently selected.
+    pub fn current(&self) -> usize {
+        self.candidates[self.cursor]
+    }
+
+    /// The candidate list (sorted, deduplicated).
+    pub fn candidates(&self) -> &[usize] {
+        &self.candidates
+    }
+
+    /// Observe one window; returns `Some(new partition count)` when the
+    /// controller decides to reconfigure, `None` to keep the topology.
+    pub fn observe(&mut self, w: &WindowSignals) -> Option<usize> {
+        let score = w.score();
+        let went_up = self.prev.map_or(false, |(c, _)| self.cursor > c);
+        let before = self.cursor;
+        if w.idle(self.low_util) {
+            self.failed_up_from = None;
+        }
+        if self.hold > 0 {
+            self.hold -= 1;
+        } else if w.pressured()
+            && self.cursor + 1 < self.candidates.len()
+            && self.failed_up_from != Some(self.cursor)
+        {
+            self.cursor += 1;
+        } else if went_up {
+            // Confirm the climb: it must clear the gain threshold.
+            let (_, prev_score) = self.prev.expect("went_up requires prev");
+            if score < prev_score + self.min_gain_step * prev_score.abs().max(1.0) {
+                self.cursor -= 1;
+                self.failed_up_from = Some(self.cursor);
+                self.hold = 1;
+            }
+        } else if w.idle(self.low_util) && self.cursor > 0 {
+            self.cursor -= 1;
+        }
+        self.prev = Some((before, score));
+        (self.cursor != before).then(|| self.candidates[self.cursor])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +340,81 @@ mod tests {
         let accel = AcceleratorConfig::knl_unlimited_bw();
         let d = AdaptivePartitioner::new(&accel, &resnet50()).select().unwrap();
         assert_eq!(d.best.partitions, 1, "probes: {:?}", d.probes);
+    }
+
+    fn window(arrived: usize, served: usize, b_in: usize, b_out: usize) -> WindowSignals {
+        WindowSignals {
+            window_s: 1.0,
+            arrived,
+            served,
+            dropped: 0,
+            backlog_in: b_in,
+            backlog_out: b_out,
+            p99_ms: 1.0,
+            utilization: (served as f64 / 100.0).min(1.0),
+        }
+    }
+
+    #[test]
+    fn windowed_climber_steps_up_under_pressure_and_down_when_idle() {
+        let mut c = OnlineRepartitioner::new(vec![4, 1, 4], 0.05, 0.35).unwrap();
+        assert_eq!(c.candidates(), &[1, 4], "sorted and deduplicated");
+        assert_eq!(c.current(), 1);
+        // Calm low-load windows at the smallest candidate: no move.
+        assert_eq!(c.observe(&window(20, 20, 0, 0)), None);
+        assert_eq!(c.current(), 1);
+        // Overload: backlog grows by far more than arrived/8 → step up.
+        assert_eq!(c.observe(&window(120, 60, 0, 60)), Some(4));
+        // The climb pays off (score rises 0 → 40): stays up.
+        assert_eq!(c.observe(&window(120, 110, 60, 70)), None);
+        assert_eq!(c.current(), 4);
+        // Load falls away and the backlog drains: drain window is busy
+        // (high utilization), so no step down yet.
+        let drain = WindowSignals { utilization: 0.9, ..window(10, 80, 70, 0) };
+        assert_eq!(c.observe(&drain), None);
+        // A genuinely idle window steps back down.
+        assert_eq!(c.observe(&window(10, 10, 0, 0)), Some(1));
+        assert_eq!(c.current(), 1);
+    }
+
+    #[test]
+    fn windowed_climber_reverts_a_climb_that_does_not_pay() {
+        let mut c = OnlineRepartitioner::new(vec![1, 2], 0.05, 0.35).unwrap();
+        // Pressure forces a probe up...
+        assert_eq!(c.observe(&window(100, 50, 0, 50)), Some(2));
+        // ...but the bigger topology scores no better (score 0 → 0):
+        // revert and remember the failed climb.
+        assert_eq!(c.observe(&window(100, 50, 50, 100)), Some(1));
+        // Hold window: no decision even under pressure.
+        assert_eq!(c.observe(&window(100, 50, 100, 150)), None);
+        // Still pressured, but this climb already failed: no retry.
+        assert_eq!(c.observe(&window(100, 50, 150, 200)), None);
+        assert_eq!(c.current(), 1);
+        // The backlog drains (busy, not idle yet), then a genuinely idle
+        // window clears the failure memory...
+        assert_eq!(c.observe(&window(5, 205, 200, 0)), None);
+        assert_eq!(c.observe(&window(5, 5, 0, 0)), None);
+        // ...so the next surge may probe again.
+        assert_eq!(c.observe(&window(100, 50, 0, 50)), Some(2));
+    }
+
+    #[test]
+    fn windowed_climber_signals_and_validation() {
+        let w = window(80, 40, 10, 50);
+        assert!((w.score() - 0.0).abs() < 1e-12, "40 served − 40 growth");
+        assert!(w.pressured());
+        assert!(!w.idle(0.35), "a growing backlog is not idle");
+        let calm = window(20, 20, 0, 0);
+        assert!(!calm.pressured());
+        assert!(calm.idle(0.35));
+        assert!(!calm.idle(0.1), "utilization threshold is respected");
+        let dropping = WindowSignals { dropped: 1, ..calm };
+        assert!(dropping.pressured(), "any drop is pressure");
+        assert_eq!(WindowSignals { window_s: 0.0, ..calm }.score(), 0.0);
+        assert!(OnlineRepartitioner::new(vec![], 0.05, 0.35).is_err());
+        assert!(OnlineRepartitioner::new(vec![0, 2], 0.05, 0.35).is_err());
+        assert!(OnlineRepartitioner::new(vec![1], f64::NAN, 0.35).is_err());
+        assert!(OnlineRepartitioner::new(vec![1], 0.05, 1.5).is_err());
     }
 
     #[test]

@@ -21,7 +21,9 @@ mod partitioner;
 mod scheduler;
 mod tradeoff;
 
-pub use adaptive::{AdaptiveDecision, AdaptivePartitioner, Candidate};
+pub use adaptive::{
+    AdaptiveDecision, AdaptivePartitioner, Candidate, OnlineRepartitioner, WindowSignals,
+};
 pub use analysis::ShapingAnalysis;
 pub use experiment::{PartitionExperiment, ShapingReport};
 pub use mixed::{proportional_cores, MixedReport, MixedWorkloadExperiment, Tenant};

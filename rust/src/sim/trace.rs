@@ -71,6 +71,45 @@ impl BandwidthTrace {
     pub fn duration(&self) -> f64 {
         self.total.end() - self.total.start()
     }
+
+    /// Drop everything recorded at or after `t` (epoch stitching trims
+    /// trailing idle padding — e.g. a batch-hold wake scheduled past the
+    /// epoch boundary — so it cannot shadow the next epoch's activity).
+    pub fn truncate_to(&mut self, t: f64) {
+        self.total.truncate_to(t);
+        for s in &mut self.per_partition {
+            s.truncate_to(t);
+        }
+    }
+
+    /// Append another trace recorded over the *same absolute timeline*,
+    /// clipping away the prefix this trace already covers. The serving
+    /// epoch loop records each epoch in its own engine run (always
+    /// starting at t = 0 with zero-bandwidth idle segments up to the
+    /// epoch's first activity); stitching them back together yields the
+    /// continuous whole-run series. Per-partition series are not merged —
+    /// epochs may have different partition counts — so the result is
+    /// aggregate-only.
+    pub fn append_clipped(&mut self, other: &BandwidthTrace) {
+        debug_assert!(
+            self.per_partition.is_empty(),
+            "append_clipped is aggregate-only (epochs may differ in partition count)"
+        );
+        let mut end = if self.total.is_empty() { other.total.start() } else { self.total.end() };
+        for (t0, t1, v) in other.total.segments() {
+            if t1 <= end {
+                continue;
+            }
+            let t0 = t0.max(end);
+            // Bridge any gap (an epoch whose trace starts after the
+            // previous one ended is idle in between).
+            if t0 > end {
+                self.total.push(end, t0, 0.0);
+            }
+            self.total.push(t0, t1, v);
+            end = t1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +140,37 @@ mod tests {
         let sum = tr.sampled_summary(4);
         assert!((sum.mean - 100.0).abs() < 1e-9);
         assert!(sum.std > 0.0);
+    }
+
+    #[test]
+    fn append_clipped_stitches_epoch_traces() {
+        // Epoch 1 covers [0, 2); epoch 2 was recorded from t = 0 too
+        // (idle until its first dispatch at t = 3) and overlaps the
+        // prefix — the merge keeps epoch 1 verbatim, clips the overlap,
+        // and bridges the [2, 3) gap with zero bandwidth.
+        let mut a = BandwidthTrace::total_only();
+        a.record(0.0, 2.0, &[10.0]);
+        let mut b = BandwidthTrace::total_only();
+        b.record(0.0, 3.0, &[0.0]);
+        b.record(3.0, 5.0, &[4.0]);
+        a.append_clipped(&b);
+        assert!((a.total_bytes() - (20.0 + 8.0)).abs() < 1e-9);
+        assert!((a.duration() - 5.0).abs() < 1e-12);
+        assert_eq!(a.total.at(1.0), 10.0);
+        assert_eq!(a.total.at(2.5), 0.0);
+        assert_eq!(a.total.at(4.0), 4.0);
+
+        // An epoch entirely inside the covered prefix adds nothing.
+        let mut c = BandwidthTrace::total_only();
+        c.record(0.0, 1.0, &[99.0]);
+        a.append_clipped(&c);
+        assert!((a.duration() - 5.0).abs() < 1e-12);
+
+        // Appending into an empty trace copies the other verbatim.
+        let mut d = BandwidthTrace::total_only();
+        d.append_clipped(&b);
+        assert!((d.total_bytes() - 8.0).abs() < 1e-9);
+        assert_eq!(d.total.at(3.5), 4.0);
     }
 
     #[test]

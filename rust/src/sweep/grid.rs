@@ -30,6 +30,11 @@ pub struct Scenario {
     /// Offered load in requests/second; 0.0 means the offline
     /// fixed-batch mode (the paper's original experiment).
     pub arrival_rate: f64,
+    /// Serve rows: per-partition queue bound (0 = unbounded). Always 0
+    /// for offline rows — the axis only multiplies serving scenarios.
+    pub queue_cap: usize,
+    /// Serve rows: latency deadline in ms (0 = none). Always 0 offline.
+    pub slo_ms: f64,
     pub steady_batches: usize,
 }
 
@@ -47,6 +52,12 @@ impl Scenario {
         }
         if self.is_serve() {
             s.push_str(&format!("/λ{:.0}", self.arrival_rate));
+            if self.queue_cap > 0 {
+                s.push_str(&format!("/cap{}", self.queue_cap));
+            }
+            if self.slo_ms > 0.0 {
+                s.push_str(&format!("/slo{:.0}", self.slo_ms));
+            }
         }
         s
     }
@@ -80,10 +91,13 @@ pub struct SweepGrid {
     pub serve_duration_s: f64,
     /// Seed for serve scenarios' arrival streams.
     pub serve_seed: u64,
-    /// Per-partition queue bound for serve scenarios (0 = unbounded).
-    pub serve_queue_cap: usize,
-    /// Per-request latency deadline for serve scenarios, ms (0 = none).
-    pub serve_slo_ms: f64,
+    /// Queue-bound axis for serve scenarios (0 = unbounded). Like the
+    /// other axes this multiplies the grid — a cap × SLO sub-grid per
+    /// (model, bw, stagger, rate) charts the goodput/drop trade-off
+    /// surface. Offline rows ignore it.
+    pub serve_queue_caps: Vec<usize>,
+    /// Latency-deadline axis for serve scenarios, ms (0 = none).
+    pub serve_slo_ms: Vec<f64>,
     /// Batch hold timeout for serve scenarios, ms (0 = dispatch on idle).
     pub serve_batch_timeout_ms: f64,
     pub trace_samples: usize,
@@ -101,8 +115,8 @@ impl SweepGrid {
             steady_batches: 6,
             serve_duration_s: 0.25,
             serve_seed: 42,
-            serve_queue_cap: 0,
-            serve_slo_ms: 0.0,
+            serve_queue_caps: vec![0],
+            serve_slo_ms: vec![0.0],
             serve_batch_timeout_ms: 0.0,
             trace_samples: 400,
         }
@@ -148,14 +162,29 @@ impl SweepGrid {
         self
     }
 
-    /// Bound each serve-scenario partition queue (0 = unbounded).
+    /// Bound each serve-scenario partition queue (0 = unbounded) —
+    /// single-value convenience over [`Self::serve_queue_caps`].
     pub fn serve_queue_cap(mut self, cap: usize) -> Self {
-        self.serve_queue_cap = cap;
+        self.serve_queue_caps = vec![cap];
         self
     }
 
-    /// Latency deadline for serve scenarios in ms (0 = none).
+    /// The queue-bound *axis*: one serve scenario per cap (0 = unbounded).
+    pub fn serve_queue_caps(mut self, caps: Vec<usize>) -> Self {
+        self.serve_queue_caps = caps;
+        self
+    }
+
+    /// Latency deadline for serve scenarios in ms (0 = none) —
+    /// single-value convenience over [`Self::serve_slo_ms_axis`].
     pub fn serve_slo_ms(mut self, ms: f64) -> Self {
+        self.serve_slo_ms = vec![ms];
+        self
+    }
+
+    /// The latency-deadline *axis*: one serve scenario per SLO (ms,
+    /// 0 = none).
+    pub fn serve_slo_ms_axis(mut self, ms: Vec<f64>) -> Self {
         self.serve_slo_ms = ms;
         self
     }
@@ -171,12 +200,18 @@ impl SweepGrid {
         self
     }
 
-    /// Number of scenarios the grid enumerates.
+    /// Number of scenarios the grid enumerates. The cap × SLO sub-grid
+    /// applies to serving rates only — offline rows (rate 0) have no
+    /// queues to bound.
     pub fn len(&self) -> usize {
+        let serve_rates = self.arrival_rates.iter().filter(|&&r| r > 0.0).count();
+        let offline_rates = self.arrival_rates.len() - serve_rates;
+        let per_rate = offline_rates
+            + serve_rates * self.serve_queue_caps.len().max(1) * self.serve_slo_ms.len().max(1);
         self.models.len()
             * self.bandwidth_scales.len()
             * self.stagger_policies.len()
-            * self.arrival_rates.len()
+            * per_rate
             * self.partitions.len()
     }
 
@@ -230,11 +265,18 @@ impl SweepGrid {
                 self.serve_duration_s
             )));
         }
-        if !(self.serve_slo_ms.is_finite() && self.serve_slo_ms >= 0.0) {
-            return Err(Error::InvalidConfig(format!(
-                "serve SLO {} must be finite and >= 0 ms",
-                self.serve_slo_ms
-            )));
+        if self.serve_queue_caps.is_empty() {
+            return Err(Error::InvalidConfig("sweep grid has no serve queue caps".into()));
+        }
+        if self.serve_slo_ms.is_empty() {
+            return Err(Error::InvalidConfig("sweep grid has no serve SLOs".into()));
+        }
+        for &ms in &self.serve_slo_ms {
+            if !(ms.is_finite() && ms >= 0.0) {
+                return Err(Error::InvalidConfig(format!(
+                    "serve SLO {ms} must be finite and >= 0 ms"
+                )));
+            }
         }
         if !(self.serve_batch_timeout_ms.is_finite() && self.serve_batch_timeout_ms >= 0.0) {
             return Err(Error::InvalidConfig(format!(
@@ -248,7 +290,9 @@ impl SweepGrid {
         Ok(())
     }
 
-    /// Enumerate all scenarios in report order.
+    /// Enumerate all scenarios in report order. Serving rates fan out
+    /// over the cap × SLO sub-grid (cap-major, then SLO, then partition
+    /// count); offline rows carry the 0/0 sentinel.
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         let mut id = 0;
@@ -256,17 +300,29 @@ impl SweepGrid {
             for &scale in &self.bandwidth_scales {
                 for &stagger in &self.stagger_policies {
                     for &rate in &self.arrival_rates {
-                        for &n in &self.partitions {
-                            out.push(Scenario {
-                                id,
-                                model: model.clone(),
-                                partitions: n,
-                                bandwidth_scale: scale,
-                                stagger,
-                                arrival_rate: rate,
-                                steady_batches: self.steady_batches,
-                            });
-                            id += 1;
+                        let combos: Vec<(usize, f64)> = if rate > 0.0 {
+                            self.serve_queue_caps
+                                .iter()
+                                .flat_map(|&c| self.serve_slo_ms.iter().map(move |&s| (c, s)))
+                                .collect()
+                        } else {
+                            vec![(0, 0.0)]
+                        };
+                        for (cap, slo) in combos {
+                            for &n in &self.partitions {
+                                out.push(Scenario {
+                                    id,
+                                    model: model.clone(),
+                                    partitions: n,
+                                    bandwidth_scale: scale,
+                                    stagger,
+                                    arrival_rate: rate,
+                                    queue_cap: cap,
+                                    slo_ms: slo,
+                                    steady_batches: self.steady_batches,
+                                });
+                                id += 1;
+                            }
                         }
                     }
                 }
@@ -324,6 +380,45 @@ mod tests {
     }
 
     #[test]
+    fn serve_cap_and_slo_axes_multiply_serving_rows_only() {
+        let g = SweepGrid::new(&knl())
+            .models(vec!["resnet50"])
+            .partitions(vec![1, 2])
+            .arrival_rates(vec![0.0, 500.0])
+            .serve_queue_caps(vec![0, 8])
+            .serve_slo_ms_axis(vec![0.0, 50.0]);
+        // Offline: 2 rows; serve: 2 caps × 2 SLOs × 2 ns = 8 rows.
+        assert_eq!(g.len(), 10);
+        g.validate().unwrap();
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), 10);
+        for (i, s) in sc.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+        // Offline rows carry the 0/0 sentinel.
+        assert!(sc[..2].iter().all(|s| !s.is_serve() && s.queue_cap == 0 && s.slo_ms == 0.0));
+        // Serve rows: cap-major, then SLO, then partitions.
+        assert_eq!((sc[2].queue_cap, sc[2].slo_ms, sc[2].partitions), (0, 0.0, 1));
+        assert_eq!((sc[3].queue_cap, sc[3].slo_ms, sc[3].partitions), (0, 0.0, 2));
+        assert_eq!((sc[4].queue_cap, sc[4].slo_ms), (0, 50.0));
+        assert_eq!((sc[6].queue_cap, sc[6].slo_ms), (8, 0.0));
+        assert_eq!((sc[8].queue_cap, sc[8].slo_ms), (8, 50.0));
+        // Labels advertise the overload knobs on serve rows only.
+        assert!(sc[8].label().contains("/cap8"));
+        assert!(sc[8].label().contains("/slo50"));
+        assert!(!sc[2].label().contains("/cap"));
+        // The single-value builders stay usable.
+        let single = SweepGrid::new(&knl()).serve_queue_cap(4).serve_slo_ms(25.0);
+        assert_eq!(single.serve_queue_caps, vec![4]);
+        assert_eq!(single.serve_slo_ms, vec![25.0]);
+        // Validation rejects empty or malformed axes.
+        assert!(SweepGrid::new(&knl()).serve_queue_caps(vec![]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).serve_slo_ms_axis(vec![]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).serve_slo_ms_axis(vec![-1.0]).validate().is_err());
+        assert!(SweepGrid::new(&knl()).serve_slo_ms_axis(vec![f64::NAN]).validate().is_err());
+    }
+
+    #[test]
     fn bandwidth_scale_modifies_accel_only() {
         let s = Scenario {
             id: 0,
@@ -332,6 +427,8 @@ mod tests {
             bandwidth_scale: 0.5,
             stagger: StaggerPolicy::UniformPhase,
             arrival_rate: 0.0,
+            queue_cap: 0,
+            slo_ms: 0.0,
             steady_batches: 4,
         };
         let base = knl();

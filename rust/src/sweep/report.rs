@@ -210,6 +210,7 @@ impl SweepReport {
             "bw",
             "stagger",
             "λ img/s",
+            "cap/slo",
             "rel perf",
             "σ reduction",
             "avg BW gain",
@@ -222,6 +223,11 @@ impl SweepReport {
         for (rank, o) in self.ranked().iter().enumerate() {
             let s = &o.scenario;
             let rate = if s.is_serve() { format!("{:.0}", s.arrival_rate) } else { "-".into() };
+            let cap_slo = if s.is_serve() && (s.queue_cap > 0 || s.slo_ms > 0.0) {
+                format!("{}/{:.0}", s.queue_cap, s.slo_ms)
+            } else {
+                "-".to_string()
+            };
             let opt = |v: Option<String>| v.unwrap_or_else(|| "-".to_string());
             match o.metrics() {
                 Some(m) => t.row(vec![
@@ -231,6 +237,7 @@ impl SweepReport {
                     format!("{:.2}x", s.bandwidth_scale),
                     s.stagger.name().to_string(),
                     rate,
+                    cap_slo,
                     format!("{:+.1}%", (m.relative_performance - 1.0) * 100.0),
                     format!("{:+.1}%", m.std_reduction * 100.0),
                     format!("{:+.1}%", m.avg_bw_increase * 100.0),
@@ -246,6 +253,7 @@ impl SweepReport {
                     format!("{:.2}x", s.bandwidth_scale),
                     s.stagger.name().to_string(),
                     rate,
+                    cap_slo,
                     "DRAM".to_string(),
                     "-".to_string(),
                     "-".to_string(),
@@ -269,6 +277,8 @@ impl SweepReport {
             "bandwidth_scale",
             "stagger",
             "arrival_rate",
+            "queue_cap",
+            "slo_ms",
             "steady_batches",
             "status",
             "relative_performance",
@@ -298,6 +308,8 @@ impl SweepReport {
                 f(s.bandwidth_scale),
                 s.stagger.name().to_string(),
                 f(s.arrival_rate),
+                s.queue_cap.to_string(),
+                f(s.slo_ms),
                 s.steady_batches.to_string(),
             ];
             let tail = match &o.status {
@@ -394,6 +406,8 @@ mod tests {
                 bandwidth_scale: 1.0,
                 stagger: StaggerPolicy::UniformPhase,
                 arrival_rate: 0.0,
+                queue_cap: 0,
+                slo_ms: 0.0,
                 steady_batches: 4,
             },
             status: match rel {
@@ -503,6 +517,8 @@ mod tests {
             bw: Summary { count: 8, mean: 100.0, std, min: 0.0, max: 200.0 },
             total_bytes: 1e9,
             trace: BandwidthTrace::total_only(),
+            epochs: Vec::new(),
+            reconfigs: Vec::new(),
         };
         let base = mk(100.0, 50.0, 80.0);
         let shaped = mk(108.0, 40.0, 50.0);

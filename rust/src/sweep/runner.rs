@@ -6,10 +6,10 @@
 //! phases:
 //!
 //! 1. **baselines** — one 1-partition run per distinct
-//!    (model, bandwidth-scale, arrival-rate) triple: the synchronous
-//!    offline baseline for rate 0, the unpartitioned serving run for
-//!    positive rates — shared by every partition count and stagger
-//!    policy of that triple;
+//!    (model, bandwidth-scale, arrival-rate, queue-cap, SLO) tuple: the
+//!    synchronous offline baseline for rate 0, the unpartitioned serving
+//!    run for positive rates — shared by every partition count and
+//!    stagger policy of that tuple;
 //! 2. **scenarios** — each grid point runs against its precomputed
 //!    baseline.
 //!
@@ -25,7 +25,7 @@ use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::serve::{ArrivalProcess, ServeOutcome, ServeSimulator};
 use crate::shaping::{PartitionExperiment, ShapingAnalysis, StaggerPolicy};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread;
@@ -123,8 +123,8 @@ impl SweepRunner {
             .duration(self.grid.serve_duration_s)
             .seed(self.grid.serve_seed)
             .stagger(scenario.stagger)
-            .queue_cap(self.grid.serve_queue_cap)
-            .slo_ms(self.grid.serve_slo_ms)
+            .queue_cap(scenario.queue_cap)
+            .slo_ms(scenario.slo_ms)
             .batch_timeout_ms(self.grid.serve_batch_timeout_ms)
             .trace_samples(self.grid.trace_samples)
     }
@@ -142,24 +142,33 @@ impl SweepRunner {
         }
 
         // Phase 1: one 1-partition baseline per distinct
-        // (model, bandwidth scale, arrival rate).
-        let mut keys: Vec<(String, f64, f64)> = Vec::new();
-        for m in &self.grid.models {
-            for &s in &self.grid.bandwidth_scales {
-                for &r in &self.grid.arrival_rates {
-                    // Dedup by bit pattern — the same key the baseline
-                    // map uses (f64 == would merge 0.0 and -0.0 here but
-                    // not there).
-                    let dup = keys.iter().any(|(km, ks, kr)| {
-                        km == m && ks.to_bits() == s.to_bits() && kr.to_bits() == r.to_bits()
-                    });
-                    if !dup {
-                        keys.push((m.clone(), s, r));
-                    }
-                }
+        // (model, bandwidth scale, arrival rate, queue cap, SLO) — the
+        // overload knobs shape the baseline run too, so each cap × SLO
+        // sub-grid point compares against its own 1-partition machine.
+        type Key = (String, u64, u64, usize, u64);
+        // Dedup by bit pattern — the same key the baseline map uses
+        // (f64 == would merge 0.0 and -0.0 here but not there).
+        let mut seen: BTreeSet<Key> = BTreeSet::new();
+        let mut keys: Vec<(String, f64, f64, usize, f64)> = Vec::new();
+        for sc in self.grid.scenarios() {
+            let key = (
+                sc.model.clone(),
+                sc.bandwidth_scale.to_bits(),
+                sc.arrival_rate.to_bits(),
+                sc.queue_cap,
+                sc.slo_ms.to_bits(),
+            );
+            if seen.insert(key) {
+                keys.push((
+                    sc.model,
+                    sc.bandwidth_scale,
+                    sc.arrival_rate,
+                    sc.queue_cap,
+                    sc.slo_ms,
+                ));
             }
         }
-        let baselines_vec = parallel_map(&keys, threads, |(model, scale, rate)| {
+        let baselines_vec = parallel_map(&keys, threads, |(model, scale, rate, cap, slo)| {
             let probe = Scenario {
                 id: 0,
                 model: model.clone(),
@@ -167,6 +176,8 @@ impl SweepRunner {
                 bandwidth_scale: *scale,
                 stagger: StaggerPolicy::None,
                 arrival_rate: *rate,
+                queue_cap: *cap,
+                slo_ms: *slo,
                 steady_batches: self.grid.steady_batches,
             };
             if probe.is_serve() {
@@ -176,16 +187,22 @@ impl SweepRunner {
                 Ok(Baseline::Offline(self.experiment(&probe, &graphs[model]).run_baseline()?))
             }
         })?;
-        let baselines: BTreeMap<(String, u64, u64), Baseline> = keys
+        let baselines: BTreeMap<Key, Baseline> = keys
             .iter()
             .zip(baselines_vec)
-            .map(|((m, s, r), b)| ((m.clone(), s.to_bits(), r.to_bits()), b))
+            .map(|((m, s, r, c, d), b)| ((m.clone(), s.to_bits(), r.to_bits(), *c, d.to_bits()), b))
             .collect();
 
         // Phase 2: every scenario against its shared baseline.
         let scenarios = self.grid.scenarios();
         let statuses = parallel_map(&scenarios, threads, |sc| {
-            let key = (sc.model.clone(), sc.bandwidth_scale.to_bits(), sc.arrival_rate.to_bits());
+            let key = (
+                sc.model.clone(),
+                sc.bandwidth_scale.to_bits(),
+                sc.arrival_rate.to_bits(),
+                sc.queue_cap,
+                sc.slo_ms.to_bits(),
+            );
             // A 1-partition scenario IS its baseline only when the stagger
             // is a no-op at n = 1 (None/UniformPhase both degenerate to no
             // offset; RandomDelay still delays the single partition).

@@ -232,6 +232,33 @@ impl StepSeries {
         bins
     }
 
+    /// Drop everything at or after `t`: segments fully past it are
+    /// removed, the one straddling it is clipped. No-op when `t` is past
+    /// the end.
+    pub fn truncate_to(&mut self, t: f64) {
+        if self.is_empty() || t >= self.end() {
+            return;
+        }
+        if t <= self.start() {
+            self.times.clear();
+            self.values.clear();
+            return;
+        }
+        while let (Some(&last), Some(_)) = (self.times.last(), self.values.last()) {
+            let seg_start = self.times[self.times.len() - 2];
+            if last <= t {
+                break;
+            }
+            if seg_start >= t {
+                self.times.pop();
+                self.values.pop();
+            } else {
+                *self.times.last_mut().expect("non-empty") = t;
+                break;
+            }
+        }
+    }
+
     /// Point-evaluate at time `t` (0 outside the domain).
     pub fn at(&self, t: f64) -> f64 {
         if self.is_empty() || t < self.start() || t >= self.end() {
@@ -434,6 +461,35 @@ mod tests {
         assert!((s.at(1.5) - 3.0).abs() < 1e-12);
         assert!((s.at(2.5) - 2.0).abs() < 1e-12);
         assert!((s.integral() - (2.0 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncate_to_clips_and_drops() {
+        let mut s = StepSeries::new();
+        s.push(0.0, 1.0, 5.0);
+        s.push(1.0, 2.0, 3.0);
+        s.push(2.0, 4.0, 0.0);
+        // Clip inside the trailing segment.
+        let mut a = s.clone();
+        a.truncate_to(3.0);
+        assert!((a.end() - 3.0).abs() < 1e-12);
+        assert!((a.integral() - 8.0).abs() < 1e-12);
+        // Drop a whole segment and clip the one before.
+        let mut b = s.clone();
+        b.truncate_to(1.5);
+        assert!((b.end() - 1.5).abs() < 1e-12);
+        assert!((b.integral() - 6.5).abs() < 1e-12);
+        // Exactly on a boundary keeps everything before it.
+        let mut c = s.clone();
+        c.truncate_to(2.0);
+        assert!((c.end() - 2.0).abs() < 1e-12);
+        // Past the end: no-op; at or before the start: empties.
+        let mut d = s.clone();
+        d.truncate_to(9.0);
+        assert!((d.end() - 4.0).abs() < 1e-12);
+        let mut e = s.clone();
+        e.truncate_to(0.0);
+        assert!(e.is_empty());
     }
 
     #[test]

@@ -5,7 +5,9 @@
 
 use trafficshape::config::AcceleratorConfig;
 use trafficshape::model::resnet50;
-use trafficshape::serve::{ArrivalKind, ArrivalProcess, ServeExperiment, ServeSimulator};
+use trafficshape::serve::{
+    AdaptiveConfig, ArrivalKind, ArrivalProcess, RateShape, ServeExperiment, ServeSimulator,
+};
 use trafficshape::shaping::PartitionExperiment;
 
 fn knl() -> AcceleratorConfig {
@@ -199,6 +201,170 @@ fn bounded_slo_run_sheds_load_and_beats_unbounded_p99() {
     );
     assert!(bounded.goodput_ips <= bounded.throughput_ips + 1e-9);
     assert!(bounded.drop_rate > 0.0 && bounded.drop_rate < 1.0);
+}
+
+#[test]
+fn adaptive_repartitioning_reconfigures_and_competes_under_step_load() {
+    // The runtime-mutable-topology acceptance bar: under a low→high→low
+    // step rate profile (low phases far below the synchronous capacity,
+    // the high phase far above it), the adaptive run must (a) actually
+    // re-partition at least once, (b) strictly beat the worst static
+    // partition count on BOTH p99 and goodput, and (c) match (within
+    // 10%) or beat the best static count on p99 OR goodput — it pays at
+    // most a one-epoch reaction penalty for not knowing the load curve
+    // in advance.
+    let accel = knl();
+    let graph = resnet50();
+    let capacity = sync_capacity_ips();
+    let period = 240.0 / capacity; // low [0, P/2), high [P/2, P), low [P, 1.5P)
+    let profile = ArrivalProcess::step_profile(0.2 * capacity, 3.0 * capacity, period);
+    let duration = 1.5 * period;
+    let epoch = period / 8.0;
+    let base = |partitions: usize| {
+        ServeSimulator::new(&accel, &graph)
+            .partitions(partitions)
+            .arrival(profile)
+            .duration(duration)
+            .seed(7)
+            .trace_samples(64)
+    };
+    let s1 = base(1).run().unwrap();
+    let s4 = base(4).run().unwrap();
+    // A 2% confirmed-gain threshold: the paper's ~8% partitioned
+    // throughput gain must clear it comfortably, so the climb sticks.
+    let controller = AdaptiveConfig::new(vec![1, 4]).epoch_s(epoch).min_gain_step(0.02);
+    let adaptive = base(1).adaptive(controller).run().unwrap();
+
+    // Same stream everywhere; nothing dropped (unbounded queues), so
+    // conservation is exact across every reconfiguration.
+    assert_eq!(adaptive.requests, s1.requests);
+    assert_eq!(adaptive.requests, s4.requests);
+    assert!(adaptive.requests > 300, "want a heavy stream, got {}", adaptive.requests);
+    assert_eq!(adaptive.served + adaptive.dropped, adaptive.requests);
+    assert_eq!(adaptive.served, adaptive.requests, "unbounded adaptive run drops nothing");
+    for e in &adaptive.epochs {
+        assert!(e.is_conserving(), "epoch leaks requests: {e:?}");
+    }
+
+    // (a) The step must trigger online re-partitioning, and the high
+    // phase must be met with more partitions than the low start.
+    assert!(
+        adaptive.reconfigurations() >= 1,
+        "step load must reconfigure; trajectory {:?}",
+        adaptive.partition_trajectory()
+    );
+    assert!(
+        adaptive.partition_trajectory().contains(&4),
+        "the overloaded phase must climb to 4 partitions: {:?}",
+        adaptive.partition_trajectory()
+    );
+
+    // (b) Strictly better than the worst static choice on both axes.
+    let worst_p99 = s1.latency.p99_ms.max(s4.latency.p99_ms);
+    let worst_goodput = s1.goodput_ips.min(s4.goodput_ips);
+    assert!(
+        adaptive.latency.p99_ms < worst_p99,
+        "adaptive p99 {:.1} ms must beat the worst static {:.1} ms",
+        adaptive.latency.p99_ms,
+        worst_p99
+    );
+    assert!(
+        adaptive.goodput_ips > worst_goodput,
+        "adaptive goodput {:.0} must beat the worst static {:.0}",
+        adaptive.goodput_ips,
+        worst_goodput
+    );
+
+    // (c) And competitive with the best static choice on at least one.
+    let best_p99 = s1.latency.p99_ms.min(s4.latency.p99_ms);
+    let best_goodput = s1.goodput_ips.max(s4.goodput_ips);
+    assert!(
+        adaptive.latency.p99_ms <= 1.10 * best_p99 || adaptive.goodput_ips >= 0.90 * best_goodput,
+        "adaptive (p99 {:.1} ms, goodput {:.0}) must match the best static \
+         (p99 {:.1} ms, goodput {:.0}) within 10% on one axis",
+        adaptive.latency.p99_ms,
+        adaptive.goodput_ips,
+        best_p99,
+        best_goodput
+    );
+}
+
+#[test]
+fn adaptive_single_candidate_reproduces_the_fixed_outcome_exactly() {
+    // With one candidate the controller can never reconfigure, so the
+    // adaptive entry point must be indistinguishable from the fixed
+    // path — same latencies, same makespan, same trace bytes.
+    let accel = knl();
+    let graph = resnet50();
+    let rate = sync_capacity_ips() * 0.8;
+    let run = |adaptive: bool| {
+        let sim = ServeSimulator::new(&accel, &graph)
+            .partitions(2)
+            .arrival(ArrivalProcess::poisson(rate))
+            .duration(0.2)
+            .seed(13)
+            .trace_samples(64);
+        let sim = if adaptive { sim.adaptive(AdaptiveConfig::new(vec![2])) } else { sim };
+        sim.run().unwrap()
+    };
+    let fixed = run(false);
+    let adaptive = run(true);
+    assert_eq!(adaptive.partitions, fixed.partitions);
+    assert_eq!(adaptive.requests, fixed.requests);
+    assert_eq!(adaptive.served, fixed.served);
+    assert_eq!(adaptive.dropped, fixed.dropped);
+    assert_eq!(adaptive.batches, fixed.batches);
+    assert_eq!(adaptive.queue_peak, fixed.queue_peak);
+    assert_eq!(adaptive.latency, fixed.latency);
+    assert_eq!(adaptive.makespan_s, fixed.makespan_s);
+    assert_eq!(adaptive.throughput_ips, fixed.throughput_ips);
+    assert_eq!(adaptive.goodput_ips, fixed.goodput_ips);
+    assert_eq!(adaptive.total_bytes, fixed.total_bytes);
+    assert_eq!(adaptive.bw, fixed.bw);
+    assert_eq!(adaptive.reconfigurations(), 0);
+    assert_eq!(adaptive.partition_trajectory(), vec![2]);
+}
+
+#[test]
+fn adaptive_serve_grid_is_deterministic_across_thread_counts() {
+    // The determinism bar extends to adaptive rows in the serve grid:
+    // --threads 1 and --threads N must render byte-identical reports.
+    let accel = knl();
+    let graph = resnet50();
+    let capacity = sync_capacity_ips();
+    let run = |threads: usize| {
+        ServeExperiment::new(&accel, &graph)
+            .partitions(vec![1, 2])
+            .rates(vec![capacity * 0.9])
+            .arrival(ArrivalKind::Piecewise {
+                rate_lo: 0.3,
+                rate_hi: 1.5,
+                period_s: 0.1,
+                shape: RateShape::Step,
+            })
+            .duration(0.15)
+            .seed(42)
+            .trace_samples(64)
+            .threads(threads)
+            .adaptive(AdaptiveConfig::new(vec![1, 2]).epoch_s(0.025))
+            .run()
+            .unwrap()
+    };
+    let serial = run(1);
+    for threads in [2, 4] {
+        let parallel = run(threads);
+        assert_eq!(serial.render(), parallel.render(), "render differs at {threads} threads");
+        assert_eq!(
+            serial.to_csv().to_string(),
+            parallel.to_csv().to_string(),
+            "csv differs at {threads} threads"
+        );
+        assert_eq!(
+            serial.summary_json().to_string_pretty(),
+            parallel.summary_json().to_string_pretty(),
+            "summary differs at {threads} threads"
+        );
+    }
 }
 
 #[test]

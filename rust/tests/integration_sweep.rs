@@ -97,6 +97,61 @@ fn dram_infeasible_points_are_reported_not_fatal() {
 }
 
 #[test]
+fn cap_and_slo_axes_chart_the_overload_surface() {
+    // A cap × SLO sub-grid over an overloaded serve rate: every serve
+    // row must appear once per (cap, SLO) pair, each against its own
+    // matching 1-partition baseline, and the bounded+SLO points must
+    // shed load while the unbounded point drains everything.
+    let grid = SweepGrid::new(&knl())
+        .models(vec!["tiny"])
+        .partitions(vec![1, 2])
+        .bandwidth_scales(vec![1.0])
+        .arrival_rates(vec![2e7])
+        .serve_queue_caps(vec![0, 8])
+        .serve_slo_ms_axis(vec![0.0, 5.0])
+        .serve_duration(5e-4)
+        .serve_seed(9)
+        .steady_batches(2)
+        .trace_samples(16);
+    assert_eq!(grid.len(), 8); // 2 caps × 2 SLOs × 2 partition counts
+    let report = SweepRunner::new(grid).threads(2).run().unwrap();
+    assert_eq!(report.outcomes.len(), 8);
+    assert_eq!(report.completed_count(), 8);
+    assert_eq!(report.serve_count(), 8);
+    let at = |cap: usize, slo: f64, n: usize| {
+        report
+            .outcomes
+            .iter()
+            .find(|o| {
+                let s = &o.scenario;
+                s.queue_cap == cap && s.slo_ms == slo && s.partitions == n
+            })
+            .and_then(|o| o.metrics())
+            .copied()
+            .unwrap()
+    };
+    // Unbounded, no SLO: nothing dropped.
+    let open = at(0, 0.0, 2);
+    assert_eq!(open.drop_rate, Some(0.0));
+    // Bounded + SLO at 2e7 req/s: must shed.
+    let tight = at(8, 5.0, 2);
+    assert!(tight.drop_rate.unwrap() > 0.0, "overload against cap 8 must drop");
+    assert!(tight.goodput_ips.unwrap() <= tight.throughput_ips + 1e-9);
+    // Every n = 1 row is its own baseline (per cap × SLO pair).
+    for &(cap, slo) in &[(0usize, 0.0), (0, 5.0), (8, 0.0), (8, 5.0)] {
+        let base = at(cap, slo, 1);
+        assert!(
+            (base.relative_performance - 1.0).abs() < 1e-12,
+            "cap {cap}/slo {slo} baseline row should be its own baseline"
+        );
+    }
+    // The overload knobs flow into the CSV columns.
+    let csv = report.to_csv().to_string();
+    assert!(csv.starts_with("id,model,partitions,bandwidth_scale,stagger,arrival_rate,queue_cap"));
+    assert!(csv.contains(",8,5,"), "cap/slo values must be exported");
+}
+
+#[test]
 fn ranked_order_is_descending_in_relative_performance() {
     let report = SweepRunner::new(small_grid()).run().unwrap();
     let ranked = report.ranked();

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use trafficshape::config::AcceleratorConfig;
 use trafficshape::model::tiny_cnn;
 use trafficshape::reuse::{Phase, PhaseClass};
-use trafficshape::serve::{ArrivalProcess, ServeSimulator};
+use trafficshape::serve::{AdaptiveConfig, ArrivalProcess, ServeSimulator};
 use trafficshape::sim::{DynJob, DynNext, SimEngine, WorkSource};
 use trafficshape::util::proptest_lite::{check, no_shrink, shrink_vec, Config};
 use trafficshape::util::rng::Xoshiro256StarStar;
@@ -282,6 +282,91 @@ fn prop_overload_accounting_is_conserved() {
             }
             if out.latency.slo_hits > out.served {
                 return Err("more SLO hits than served requests".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adaptive_reconfigurations_conserve_requests() {
+    check(
+        &Config { cases: 12, seed: 0xA11, max_shrink_steps: 0 },
+        "across online re-partitioning: served + dropped = arrived (per epoch, per run), \
+         goodput <= throughput, queue peak <= cap, backlog chains across epochs",
+        |rng| {
+            let lo = rng.range_f64(1000.0, 5000.0);
+            let hi = rng.range_f64(1e5, 2e7);
+            let cap = [0usize, rng.range_u64(1, 32) as usize][rng.next_below(2) as usize];
+            let slo_ms = [0.0, rng.range_f64(0.5, 50.0)][rng.next_below(2) as usize];
+            (lo, hi, cap, slo_ms, rng.next_u64())
+        },
+        no_shrink,
+        |&(lo, hi, cap, slo_ms, seed)| {
+            let accel = AcceleratorConfig::knl_7210();
+            let out = ServeSimulator::new(&accel, &tiny_cnn())
+                .partitions(1)
+                .arrival(ArrivalProcess::step_profile(lo, hi, 0.002))
+                .duration(0.003)
+                .seed(seed)
+                .queue_cap(cap)
+                .slo_ms(slo_ms)
+                .trace_samples(16)
+                .adaptive(AdaptiveConfig::new(vec![1, 2, 4]).epoch_s(0.0005))
+                .run()
+                .map_err(|e| e.to_string())?;
+            if out.served + out.dropped != out.requests {
+                return Err(format!(
+                    "{} served + {} dropped != {} arrived",
+                    out.served, out.dropped, out.requests
+                ));
+            }
+            if out.latency.count != out.served || out.latency.dropped != out.dropped {
+                return Err("recorder and epoch loop disagree".into());
+            }
+            if cap > 0 && out.queue_peak > cap {
+                return Err(format!("queue peak {} exceeds cap {cap}", out.queue_peak));
+            }
+            if out.goodput_ips > out.throughput_ips + 1e-9 {
+                return Err(format!(
+                    "goodput {} exceeds throughput {}",
+                    out.goodput_ips, out.throughput_ips
+                ));
+            }
+            if out.epochs.is_empty() {
+                return Err("adaptive run recorded no epochs".into());
+            }
+            let mut prev_out = 0usize;
+            let mut arrived = 0usize;
+            let (mut served, mut dropped) = (0usize, 0usize);
+            for (i, e) in out.epochs.iter().enumerate() {
+                if !e.is_conserving() {
+                    return Err(format!("epoch {i} leaks requests: {e:?}"));
+                }
+                if i > 0 && e.carried_in != prev_out {
+                    return Err(format!("backlog chain breaks at epoch {i}"));
+                }
+                if !(0.0..=1.0).contains(&e.utilization) {
+                    return Err(format!("utilization {} out of range", e.utilization));
+                }
+                prev_out = e.carried_out;
+                arrived += e.arrived;
+                served += e.served;
+                dropped += e.dropped;
+            }
+            if prev_out != 0 {
+                return Err("the final epoch left a backlog".into());
+            }
+            if arrived != out.requests || served != out.served || dropped != out.dropped {
+                return Err("epoch totals disagree with the run totals".into());
+            }
+            // The trajectory is consistent with the event log.
+            if out.partition_trajectory().len() != out.reconfigurations() + 1 {
+                return Err(format!(
+                    "trajectory {:?} vs {} reconfigurations",
+                    out.partition_trajectory(),
+                    out.reconfigurations()
+                ));
             }
             Ok(())
         },
