@@ -40,6 +40,7 @@ pub fn list_experiments() -> Vec<(&'static str, &'static str)> {
         ("table1", "per-layer BW and achieved FLOPS, ResNet-50"),
         ("sweep", "parallel grid: 5 models × partitions × bandwidth, ranked"),
         ("serve", "request serving: p50/p95/p99 latency vs arrival rate, ResNet-50"),
+        ("serve_mixed", "multi-tenant serving: ResNet-50 + VGG-16 co-scheduled vs time-shared"),
     ]
 }
 
@@ -81,6 +82,38 @@ fn run_serve(cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
         title: "Serve — request latency over asynchronous partitions",
         rendered: curve.render(),
         csv: vec![("serve_curve.csv".into(), curve.to_csv())],
+        summary: curve.summary_json(),
+    })
+}
+
+/// The `serve_mixed` experiment driver: two heterogeneous tenants
+/// (VGG-16 + ResNet-50) with FLOP-proportional core shares, each offered
+/// ~60% of its slice's share of the model's roofline capacity —
+/// co-scheduled on machine slices vs time-sharing the whole machine, at
+/// identical offered load, with per-tenant and aggregate rows.
+fn run_serve_mixed(cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
+    use crate::serve::{roofline_capacity_ips, ArrivalProcess, ServeExperiment, TenantSpec};
+    let vgg = crate::model::by_name("vgg16")?;
+    let res = crate::model::by_name("resnet50")?;
+    let (wv, wr) = (vgg.flops_per_image(), res.flops_per_image());
+    let (fv, fr) = (wv / (wv + wr), wr / (wv + wr));
+    let rate_v = 0.6 * roofline_capacity_ips(&cfg.accelerator, &vgg) * fv;
+    let rate_r = 0.6 * roofline_capacity_ips(&cfg.accelerator, &res) * fr;
+    let specs = vec![
+        TenantSpec::new(vgg, wv, ArrivalProcess::poisson(rate_v)),
+        TenantSpec::new(res.clone(), wr, ArrivalProcess::poisson(rate_r)),
+    ];
+    let curve = ServeExperiment::new(&cfg.accelerator, &res)
+        .tenants(specs)
+        .duration(0.25)
+        .seed(cfg.seed)
+        .trace_samples(cfg.trace_samples)
+        .run()?;
+    Ok(ExperimentOutput {
+        id: "serve_mixed",
+        title: "Serve mixed — co-scheduled tenants vs time sharing",
+        rendered: curve.render(),
+        csv: vec![("serve_tenants.csv".into(), curve.to_csv())],
         summary: curve.summary_json(),
     })
 }
@@ -213,6 +246,7 @@ pub fn run_by_id(id: &str, cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
         }
         "sweep" => run_sweep(cfg),
         "serve" => run_serve(cfg),
+        "serve_mixed" => run_serve_mixed(cfg),
         other => Err(Error::Usage(format!(
             "unknown experiment '{other}'; available: {}",
             list_experiments()

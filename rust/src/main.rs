@@ -17,7 +17,8 @@ use trafficshape::experiments::{list_experiments, run_by_id};
 use trafficshape::model;
 use trafficshape::runtime::find_artifact_dir;
 use trafficshape::serve::{
-    AdaptiveConfig, ArrivalKind, ArrivalProcess, DispatchPolicy, ServeExperiment,
+    AdaptiveConfig, ArrivalKind, ArrivalProcess, DispatchPolicy, ServeExperiment, TenantMode,
+    TenantSpec,
 };
 use trafficshape::shaping::StaggerPolicy;
 use trafficshape::sweep::{SweepGrid, SweepRunner};
@@ -47,6 +48,12 @@ fn app() -> App {
                 .opt("queue-cap", "LIST", Some("0"), "serve rows: queue-bound axis (0 = unbounded)")
                 .opt("slo-ms", "LIST", Some("0"), "serve rows: latency-deadline axis (0 = none)")
                 .opt("batch-timeout", "MS", Some("0"), "serve rows: batch hold (0 = on idle)")
+                .opt(
+                    "mixed-tenants",
+                    "SPECS",
+                    None,
+                    "mixed-tenant scenarios: model:share:rate,... (';' separates scenarios)",
+                )
                 .opt("batches", "N", Some("6"), "steady-state batches")
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
                 .opt("out", "DIR", None, "also write the grid CSV to this directory")
@@ -67,6 +74,10 @@ fn app() -> App {
                 .opt("batch-timeout", "MS", Some("0"), "hold under-filled batches (0 = on idle)")
                 .switch("adaptive", "add a runtime-repartitioning row (candidates = --partitions)")
                 .opt("epoch-ms", "MS", Some("50"), "adaptive: epoch (reconfig window) length")
+                .opt("tenants", "LIST", None, "multi-tenant mode: model:share:rate,...")
+                .opt("tenant-partitions", "N", Some("1"), "tenants: partitions per slice")
+                .opt("quantum-ms", "MS", Some("5"), "tenants: quantum / rebalance window")
+                .switch("rebalance", "tenants: move cores between slices at epoch ends")
                 .opt("samples", "N", Some("400"), "trace samples")
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
                 .opt("out", "DIR", None, "also write serve_curve.csv + serve_summary.json here")
@@ -183,6 +194,14 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
         .serve_slo_ms_axis(m.get_f64_list("slo-ms")?.unwrap_or_else(|| vec![0.0]))
         .serve_batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
         .steady_batches(batches);
+    // Mixed-tenant scenarios: ';' separates scenario specs (',' already
+    // separates the tenants within one spec).
+    let grid = match m.get("mixed-tenants") {
+        Some(specs) => grid.mixed_tenants(
+            specs.split(';').map(str::trim).filter(|s| !s.is_empty()).collect::<Vec<_>>(),
+        ),
+        None => grid,
+    };
     let total = grid.len();
     let runner = SweepRunner::new(grid).threads(threads);
     let workers = runner.effective_threads();
@@ -248,9 +267,58 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     } else if let Some(p) = &profile {
         exp = exp.rates(vec![p.mean_rate()]);
     }
+    // Multi-tenant mode: each tenant brings its own model/share/rate;
+    // the machine-wide --queue-cap/--slo-ms apply per tenant.
+    if let Some(spec) = m.get("tenants") {
+        // Tenants replace the (rate × partitions) grid outright — reject
+        // knobs that would otherwise be silently ignored. Defaulted
+        // flags cannot be told apart from explicit ones, so non-default
+        // values are the signal.
+        let non_default_arrival = m.get("arrival").is_some_and(|a| a != "poisson");
+        let non_default_parts = m.get("partitions").is_some_and(|p| p != "1,2,4");
+        if m.flag("adaptive")
+            || m.get("rate-profile").is_some()
+            || m.get("rate").is_some()
+            || non_default_arrival
+            || non_default_parts
+        {
+            return Err(Error::Usage(
+                "--tenants is its own serving mode: drop --adaptive/--rate/--rate-profile/\
+                 --arrival/--partitions (each tenant carries its own Poisson rate in \
+                 model:share:rate; use --tenant-partitions for per-slice partitioning)"
+                    .into(),
+            ));
+        }
+        let mut specs = TenantSpec::parse_list(spec)?;
+        let cap = m.get_usize("queue-cap")?.unwrap_or(0);
+        let slo = m.get_f64("slo-ms")?.unwrap_or(0.0);
+        let per_tenant = m.get_usize("tenant-partitions")?.unwrap_or(1);
+        for t in &mut specs {
+            t.queue_cap = cap;
+            t.slo_ms = slo;
+            t.partitions = per_tenant;
+        }
+        exp = exp
+            .tenants(specs)
+            .tenant_epoch_ms(m.get_f64("quantum-ms")?.unwrap_or(5.0))
+            .tenant_rebalance(m.flag("rebalance"));
+    }
     let curve = exp.run()?;
 
     print!("{}", curve.render());
+    let co = curve.tenant_aggregate(TenantMode::Coscheduled);
+    let ts = curve.tenant_aggregate(TenantMode::TimeShared);
+    if let (Some(co), Some(ts)) = (co, ts) {
+        println!(
+            "→ tenants at {:.0} img/s offered: co-scheduled p99 {:.1} ms / goodput {:.0} \
+             vs time-shared p99 {:.1} ms / goodput {:.0}",
+            co.arrival_rate,
+            co.latency.p99_ms,
+            co.goodput_ips,
+            ts.latency.p99_ms,
+            ts.goodput_ips
+        );
+    }
     if let Some(o) = curve.best_at_peak().and_then(|best| best.outcome()) {
         println!(
             "→ at peak rate {:.0} img/s: {} partition(s) hit p99 {:.1} ms \

@@ -11,6 +11,7 @@
 use super::arrival::{ArrivalProcess, RateShape};
 use super::queue::DispatchPolicy;
 use super::simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};
+use super::tenant::{MultiTenantSimulator, TenantMode, TenantSpec};
 use super::topology::AdaptiveConfig;
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
@@ -87,6 +88,30 @@ pub enum ServePointStatus {
     Infeasible(String),
 }
 
+/// Identity of a multi-tenant row: which tenant (or the machine-level
+/// aggregate) under which sharing discipline.
+#[derive(Debug, Clone)]
+pub struct TenantRow {
+    /// `t0`, `t1`, ... in spec order, or `aggregate` for the machine row.
+    pub tag: String,
+    /// The row's model (`mixed` for the aggregate).
+    pub model: String,
+    /// The tenant's final core share (whole machine on aggregate rows).
+    pub cores: usize,
+    /// The sharing discipline the row was measured under.
+    pub mode: TenantMode,
+    /// Core re-balance moves during the run — the multi-tenant mode's
+    /// reconfiguration accounting (machine-level count, repeated on
+    /// every row of the mode).
+    pub rebalances: usize,
+}
+
+impl TenantRow {
+    pub fn is_aggregate(&self) -> bool {
+        self.tag == "aggregate"
+    }
+}
+
 /// One (rate, partition count) grid point.
 #[derive(Debug, Clone)]
 pub struct ServePoint {
@@ -97,6 +122,9 @@ pub struct ServePoint {
     pub partitions: usize,
     /// Whether this row ran the adaptive (runtime-mutable) topology.
     pub adaptive: bool,
+    /// Multi-tenant rows: who this row belongs to (`None` for the
+    /// classic single-model grid).
+    pub tenant: Option<TenantRow>,
     pub status: ServePointStatus,
 }
 
@@ -125,6 +153,10 @@ pub struct ServeExperiment {
     slo_ms: f64,
     batch_timeout_ms: f64,
     adaptive: Option<AdaptiveConfig>,
+    tenants: Vec<TenantSpec>,
+    tenant_epoch_s: f64,
+    tenant_rebalance: bool,
+    compare_time_sharing: bool,
     trace_samples: usize,
     threads: usize,
 }
@@ -145,6 +177,10 @@ impl ServeExperiment {
             slo_ms: 0.0,
             batch_timeout_ms: 0.0,
             adaptive: None,
+            tenants: Vec::new(),
+            tenant_epoch_s: 0.005,
+            tenant_rebalance: false,
+            compare_time_sharing: true,
             trace_samples: 400,
             threads: 0,
         }
@@ -214,6 +250,39 @@ impl ServeExperiment {
         self
     }
 
+    /// Switch the experiment to **multi-tenant** mode: instead of the
+    /// (rate × partitions) grid, run these tenants through
+    /// [`MultiTenantSimulator`] and report per-tenant + aggregate rows —
+    /// co-scheduled, and (by default) the time-shared baseline at
+    /// identical offered load next to it. The grid's `partitions`/`rates`
+    /// axes are ignored in this mode (each tenant carries its own rate);
+    /// the experiment's `queue_cap`/`slo_ms` knobs apply to every tenant
+    /// that did not set its own.
+    pub fn tenants(mut self, specs: Vec<TenantSpec>) -> Self {
+        self.tenants = specs;
+        self
+    }
+
+    /// Multi-tenant epoch: the time-sharing quantum and the co-scheduled
+    /// re-balance window, in milliseconds.
+    pub fn tenant_epoch_ms(mut self, ms: f64) -> Self {
+        self.tenant_epoch_s = ms / 1e3;
+        self
+    }
+
+    /// Re-balance cores between co-scheduled tenants at epoch boundaries.
+    pub fn tenant_rebalance(mut self, on: bool) -> Self {
+        self.tenant_rebalance = on;
+        self
+    }
+
+    /// Also run (and report) the time-shared baseline next to the
+    /// co-scheduled rows (on by default in multi-tenant mode).
+    pub fn compare_time_sharing(mut self, on: bool) -> Self {
+        self.compare_time_sharing = on;
+        self
+    }
+
     pub fn trace_samples(mut self, s: usize) -> Self {
         self.trace_samples = s;
         self
@@ -235,8 +304,99 @@ impl ServeExperiment {
         }
     }
 
+    fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+
+    /// Multi-tenant mode: one co-scheduled run (plus, by default, the
+    /// time-shared baseline at identical offered load), reported as an
+    /// aggregate row followed by per-tenant rows per mode.
+    fn run_tenants(&self) -> Result<ServeCurve> {
+        let modes: Vec<TenantMode> = if self.compare_time_sharing {
+            vec![TenantMode::Coscheduled, TenantMode::TimeShared]
+        } else {
+            vec![TenantMode::Coscheduled]
+        };
+        // The experiment-level overload knobs apply to every tenant that
+        // did not set its own (so `.queue_cap(..)`/`.slo_ms(..)` work in
+        // tenant mode exactly like the CLI's machine-wide flags).
+        let mut specs = self.tenants.clone();
+        for t in &mut specs {
+            if t.queue_cap == 0 {
+                t.queue_cap = self.queue_cap;
+            }
+            if t.slo_ms == 0.0 {
+                t.slo_ms = self.slo_ms;
+            }
+        }
+        let outs = parallel_map(&modes, self.effective_threads(), |&mode| {
+            MultiTenantSimulator::new(&self.accel, specs.clone())
+                .duration(self.duration_s)
+                .seed(self.seed)
+                .policy(self.policy)
+                .stagger(self.stagger)
+                .batch_timeout_ms(self.batch_timeout_ms)
+                .mode(mode)
+                .epoch(self.tenant_epoch_s)
+                .rebalance(self.tenant_rebalance && mode == TenantMode::Coscheduled)
+                .trace_samples(self.trace_samples)
+                .run()
+        })?;
+        let mut points = Vec::new();
+        for out in outs {
+            let offered = out.offered_rate();
+            let rebalances = out.rebalances.len();
+            points.push(ServePoint {
+                rate: offered,
+                partitions: out.aggregate.partitions,
+                adaptive: false,
+                tenant: Some(TenantRow {
+                    tag: "aggregate".into(),
+                    model: "mixed".into(),
+                    // The machine itself — NOT the sum of per-tenant
+                    // grants, which double-counts in time-shared mode
+                    // (every tenant is granted the whole machine there).
+                    cores: self.accel.cores,
+                    mode: out.mode,
+                    rebalances,
+                }),
+                status: ServePointStatus::Completed(out.aggregate),
+            });
+            for t in out.tenants {
+                points.push(ServePoint {
+                    rate: t.outcome.arrival_rate,
+                    partitions: t.outcome.partitions,
+                    adaptive: false,
+                    tenant: Some(TenantRow {
+                        tag: t.tag,
+                        model: t.model,
+                        cores: t.cores,
+                        mode: out.mode,
+                        rebalances,
+                    }),
+                    status: ServePointStatus::Completed(t.outcome),
+                });
+            }
+        }
+        let model = self
+            .tenants
+            .iter()
+            .map(|t| t.graph.name.as_str())
+            .collect::<Vec<_>>()
+            .join("+");
+        let total_rate: f64 = self.tenants.iter().map(|t| t.arrival.mean_rate()).sum();
+        Ok(ServeCurve { model, arrival: ArrivalProcess::poisson(total_rate.max(1.0)), points })
+    }
+
     /// Run the grid and assemble the rate-major curve.
     pub fn run(&self) -> Result<ServeCurve> {
+        if !self.tenants.is_empty() {
+            return self.run_tenants();
+        }
         if self.partitions.is_empty() {
             return Err(Error::InvalidConfig("serve grid has no partition counts".into()));
         }
@@ -262,11 +422,7 @@ impl ServeExperiment {
                 points.push((r, start, true));
             }
         }
-        let threads = if self.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            self.threads
-        };
+        let threads = self.effective_threads();
         let statuses = parallel_map(&points, threads, |&(rate, n, adaptive)| {
             let mut sim = ServeSimulator::new(&self.accel, &self.graph)
                 .partitions(n)
@@ -303,7 +459,7 @@ impl ServeExperiment {
                     }
                     _ => partitions,
                 };
-                ServePoint { rate, partitions, adaptive, status }
+                ServePoint { rate, partitions, adaptive, tenant: None, status }
             })
             .collect();
         Ok(ServeCurve {
@@ -329,7 +485,9 @@ impl ServeCurve {
     pub fn at(&self, rate: f64, partitions: usize) -> Option<&ServeOutcome> {
         self.points
             .iter()
-            .find(|p| !p.adaptive && p.rate == rate && p.partitions == partitions)
+            .find(|p| {
+                !p.adaptive && p.tenant.is_none() && p.rate == rate && p.partitions == partitions
+            })
             .and_then(|p| p.outcome())
     }
 
@@ -337,8 +495,32 @@ impl ServeCurve {
     pub fn adaptive_at(&self, rate: f64) -> Option<&ServeOutcome> {
         self.points
             .iter()
-            .find(|p| p.adaptive && p.rate == rate)
+            .find(|p| p.adaptive && p.tenant.is_none() && p.rate == rate)
             .and_then(|p| p.outcome())
+    }
+
+    /// The machine-level aggregate outcome of a multi-tenant mode, if
+    /// this curve has tenant rows for it.
+    pub fn tenant_aggregate(&self, mode: TenantMode) -> Option<&ServeOutcome> {
+        self.points
+            .iter()
+            .find(|p| p.tenant.as_ref().is_some_and(|t| t.is_aggregate() && t.mode == mode))
+            .and_then(|p| p.outcome())
+    }
+
+    /// Per-tenant completed outcomes of a multi-tenant mode, in spec
+    /// order (aggregate row excluded).
+    pub fn tenant_rows(&self, mode: TenantMode) -> Vec<(&TenantRow, &ServeOutcome)> {
+        self.points
+            .iter()
+            .filter_map(|p| {
+                let t = p.tenant.as_ref()?;
+                if t.is_aggregate() || t.mode != mode {
+                    return None;
+                }
+                Some((t, p.outcome()?))
+            })
+            .collect()
     }
 
     /// The highest rate on the grid (`-inf` for an empty curve).
@@ -347,11 +529,13 @@ impl ServeCurve {
     }
 
     /// The completed point with the lowest p99 at the highest rate.
+    /// Multi-tenant curves compare their aggregate rows (per-tenant rows
+    /// are not whole-machine points).
     pub fn best_at_peak(&self) -> Option<&ServePoint> {
         let peak = self.peak_rate();
         self.points
             .iter()
-            .filter(|p| p.rate == peak)
+            .filter(|p| p.rate == peak && p.tenant.as_ref().map_or(true, |t| t.is_aggregate()))
             .filter_map(|p| p.outcome().map(|o| (p, o)))
             .min_by(|(pa, oa), (pb, ob)| {
                 oa.latency
@@ -369,6 +553,7 @@ impl ServeCurve {
         let mut t = Table::new(vec![
             "rate",
             "n",
+            "tenant",
             "req",
             "drop %",
             "batch",
@@ -382,6 +567,13 @@ impl ServeCurve {
             "reconf",
         ]);
         for p in &self.points {
+            // Multi-tenant rows label themselves `mode/model@cores`
+            // (`mode/all` for the machine aggregate).
+            let tenant = match &p.tenant {
+                Some(tr) if tr.is_aggregate() => format!("{}/all", tr.mode.name()),
+                Some(tr) => format!("{}/{}@{}c", tr.mode.name(), tr.model, tr.cores),
+                None => "-".to_string(),
+            };
             match p.outcome() {
                 Some(o) => {
                     let n = if p.adaptive {
@@ -389,11 +581,17 @@ impl ServeCurve {
                     } else {
                         p.partitions.to_string()
                     };
-                    let reconf =
-                        if p.adaptive { o.reconfigurations().to_string() } else { "-".into() };
+                    // Adaptive rows count topology reconfigurations;
+                    // multi-tenant rows count core re-balance moves.
+                    let reconf = match &p.tenant {
+                        Some(tr) => tr.rebalances.to_string(),
+                        None if p.adaptive => o.reconfigurations().to_string(),
+                        None => "-".into(),
+                    };
                     t.row(vec![
                         format!("{:.0}", p.rate),
                         n,
+                        tenant,
                         o.requests.to_string(),
                         format!("{:.1}", o.drop_rate * 100.0),
                         format!("{:.1}", o.mean_batch),
@@ -411,6 +609,7 @@ impl ServeCurve {
                     let mut row = vec![
                         format!("{:.0}", p.rate),
                         p.partitions.to_string(),
+                        tenant,
                         "-".to_string(),
                         "-".to_string(),
                         "-".to_string(),
@@ -459,12 +658,25 @@ impl ServeCurve {
             "epochs",
             "reconfigurations",
             "chosen_partitions",
+            "tenant",
+            "tenant_model",
+            "tenant_cores",
             "reason",
         ]);
         let f = crate::util::csv::format_float;
         for p in &self.points {
-            let mode = if p.adaptive { "adaptive" } else { "static" };
+            // Multi-tenant rows report their sharing discipline in the
+            // mode column (`cosched`/`timeshared`).
+            let mode = match &p.tenant {
+                Some(tr) => tr.mode.name(),
+                None if p.adaptive => "adaptive",
+                None => "static",
+            };
             let head = vec![f(p.rate), p.partitions.to_string(), mode.to_string()];
+            let (tenant, tenant_model, tenant_cores) = match &p.tenant {
+                Some(tr) => (tr.tag.clone(), tr.model.clone(), tr.cores.to_string()),
+                None => (String::new(), self.model.clone(), String::new()),
+            };
             let tail = match &p.status {
                 ServePointStatus::Completed(o) => vec![
                     "ok".to_string(),
@@ -486,13 +698,22 @@ impl ServeCurve {
                     f(o.bw.mean),
                     f(o.bw.std),
                     o.epochs.len().to_string(),
-                    o.reconfigurations().to_string(),
+                    match &p.tenant {
+                        Some(tr) => tr.rebalances.to_string(),
+                        None => o.reconfigurations().to_string(),
+                    },
                     o.trajectory_string(),
+                    tenant,
+                    tenant_model,
+                    tenant_cores,
                     String::new(),
                 ],
                 ServePointStatus::Infeasible(why) => {
                     let mut v = vec!["infeasible".to_string()];
                     v.extend((0..20).map(|_| String::new()));
+                    v.push(tenant);
+                    v.push(tenant_model);
+                    v.push(tenant_cores);
                     v.push(why.clone());
                     v
                 }
@@ -536,6 +757,39 @@ impl ServeCurve {
                     .with("p99_ms", o.latency.p99_ms)
                     .with("goodput_ips", o.goodput_ips),
             );
+        }
+        // Multi-tenant curves: one aggregate summary per sharing mode,
+        // so co-scheduling vs time-sharing is one JSON diff away.
+        let mut modes: Vec<TenantMode> = Vec::new();
+        for t in self.points.iter().filter_map(|p| p.tenant.as_ref()) {
+            if t.is_aggregate() && !modes.contains(&t.mode) {
+                modes.push(t.mode);
+            }
+        }
+        if !modes.is_empty() {
+            let mut tm = Json::obj();
+            for mode in modes {
+                let moves = self
+                    .points
+                    .iter()
+                    .filter_map(|p| p.tenant.as_ref())
+                    .find(|t| t.is_aggregate() && t.mode == mode)
+                    .map(|t| t.rebalances)
+                    .unwrap_or(0);
+                if let Some(o) = self.tenant_aggregate(mode) {
+                    tm.set(
+                        mode.name(),
+                        Json::obj()
+                            .with("requests", o.requests)
+                            .with("p99_ms", o.latency.p99_ms)
+                            .with("throughput_ips", o.throughput_ips)
+                            .with("goodput_ips", o.goodput_ips)
+                            .with("drop_rate", o.drop_rate)
+                            .with("rebalances", moves),
+                    );
+                }
+            }
+            j.set("tenant_modes", tm);
         }
         j
     }
@@ -642,6 +896,61 @@ mod tests {
         let b = run(4);
         assert_eq!(a.render(), b.render());
         assert_eq!(a.to_csv().to_string(), b.to_csv().to_string());
+    }
+
+    #[test]
+    fn tenant_rows_report_per_tenant_and_aggregate() {
+        let accel = AcceleratorConfig::knl_7210();
+        let specs = || {
+            vec![
+                TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(2000.0)),
+                TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(2000.0)),
+            ]
+        };
+        let run = |threads: usize| {
+            ServeExperiment::new(&accel, &tiny_cnn())
+                .tenants(specs())
+                .duration(0.01)
+                .seed(5)
+                .trace_samples(16)
+                .tenant_epoch_ms(2.0)
+                .threads(threads)
+                .run()
+                .unwrap()
+        };
+        let c = run(2);
+        // Two modes × (1 aggregate + 2 tenants) = 6 rows.
+        assert_eq!(c.points.len(), 6);
+        assert_eq!(c.model, "tiny+tiny");
+        let co = c.tenant_aggregate(TenantMode::Coscheduled).unwrap();
+        let ts = c.tenant_aggregate(TenantMode::TimeShared).unwrap();
+        assert_eq!(co.requests, ts.requests, "identical offered load across modes");
+        assert_eq!(co.served + co.dropped, co.requests);
+        assert_eq!(c.tenant_rows(TenantMode::Coscheduled).len(), 2);
+        assert_eq!(c.tenant_rows(TenantMode::TimeShared).len(), 2);
+        // Classic lookups skip tenant rows entirely.
+        assert!(c.at(co.arrival_rate, co.partitions).is_none());
+        assert!(c.best_at_peak().is_some(), "aggregates compete at the peak");
+        let text = c.render();
+        assert!(text.contains("tenant"));
+        assert!(text.contains("cosched/all"));
+        assert!(text.contains("timeshared/all"));
+        assert!(text.contains("cosched/tiny@32c"));
+        let csv = c.to_csv().to_string();
+        assert_eq!(csv.lines().count(), 7); // header + 6 rows
+        assert!(csv.contains(",tenant,tenant_model,tenant_cores,"));
+        assert!(csv.contains(",cosched,ok,"));
+        assert!(csv.contains(",timeshared,ok,"));
+        assert!(csv.contains(",aggregate,mixed,"));
+        assert!(csv.contains(",t0,tiny,32,"));
+        let j = c.summary_json();
+        assert!(j.get("tenant_modes").is_some());
+        // Byte-identical across thread counts, tenant rows included.
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.to_csv().to_string(), b.to_csv().to_string());
+        assert_eq!(a.summary_json().to_string_pretty(), b.summary_json().to_string_pretty());
     }
 
     #[test]

@@ -102,6 +102,17 @@ impl LatencyRecorder {
         self.dropped += n;
     }
 
+    /// Merge another recorder's samples and counters into this one — the
+    /// multi-tenant *aggregate* view: machine-level percentiles reduce
+    /// over the union of all tenants' sojourn samples, while drops and
+    /// SLO hits are summed as scored (each tenant judges its own SLO, so
+    /// the aggregate recorder's own deadline, if any, is not re-applied).
+    pub fn absorb(&mut self, other: &LatencyRecorder) {
+        self.samples_s.extend_from_slice(&other.samples_s);
+        self.dropped += other.dropped;
+        self.slo_hits += other.slo_hits;
+    }
+
     /// Served requests recorded so far.
     pub fn len(&self) -> usize {
         self.samples_s.len()
@@ -248,6 +259,25 @@ mod tests {
         let empty = r.stats_since(&m2);
         assert_eq!(empty.count, 0);
         assert_eq!(empty.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn absorb_merges_samples_and_counters() {
+        let mut a = LatencyRecorder::with_slo(0.1);
+        a.record(0.0, 0.05); // hit
+        a.record_drops(1);
+        let mut b = LatencyRecorder::with_slo(0.01);
+        b.record(0.0, 0.2); // miss by b's own (tighter) deadline
+        b.record_drops(2);
+        let mut agg = LatencyRecorder::new();
+        agg.absorb(&a);
+        agg.absorb(&b);
+        let s = agg.stats();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.dropped, 3);
+        assert_eq!(s.slo_hits, 1, "per-tenant SLO verdicts carry over as scored");
+        assert!((s.max_ms - 200.0).abs() < 1e-9);
+        assert!((s.p50_ms - 125.0).abs() < 1e-9);
     }
 
     #[test]

@@ -26,22 +26,33 @@
 //!   per-epoch marks on top of the cumulative record;
 //! * [`ServeExperiment`] / [`ServeCurve`] — parallel (rate × partitions)
 //!   grids producing deterministic throughput–latency tradeoff curves
-//!   with drop-rate, goodput and reconfiguration columns.
+//!   with drop-rate, goodput and reconfiguration columns;
+//! * [`TenantSpec`] / [`MultiTenantSimulator`] — multi-tenant serving:
+//!   several models share the machine, each tenant on its own
+//!   [`PartitionSet`] slice with its own arrival stream, queue cap and
+//!   SLO — co-scheduled (optionally re-balancing cores at epoch
+//!   boundaries) or time-shared, with per-tenant and aggregate latency
+//!   accounting.
 
 mod arrival;
 mod curve;
 mod latency;
 mod queue;
 mod simulator;
+mod tenant;
 mod topology;
 
 pub use arrival::{ArrivalProcess, RateShape};
 pub use curve::{
-    ArrivalKind, ServeCurve, ServeExperiment, ServePoint, ServePointStatus, DEFAULT_MEAN_BURST_S,
+    ArrivalKind, ServeCurve, ServeExperiment, ServePoint, ServePointStatus, TenantRow,
+    DEFAULT_MEAN_BURST_S,
 };
 pub use latency::{LatencyRecorder, LatencyStats, RecorderMark};
 pub use queue::{
     BatchPolicy, BatchRecord, DispatchPolicy, EpochWindow, QueueConfig, ServeController,
 };
 pub use simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};
+pub use tenant::{
+    MultiTenantOutcome, MultiTenantSimulator, RebalanceEvent, TenantMode, TenantOutcome, TenantSpec,
+};
 pub use topology::{AdaptiveConfig, EpochStats, PartitionSet, ReconfigEvent};

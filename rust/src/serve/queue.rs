@@ -190,6 +190,14 @@ pub struct EpochWindow {
     /// order) against this topology's caps at construction; requests
     /// that find every queue full are dropped.
     pub carry: Vec<usize>,
+    /// The previous epoch's rolling inter-dispatch gap window in
+    /// chronological order (see [`ServeController::gap_state`]), so the
+    /// adaptive re-arm threshold keeps learning across epoch boundaries
+    /// instead of restarting its bootstrap every epoch.
+    pub gap_carry: Vec<f64>,
+    /// The previous epoch's last dispatch instant (absolute), so the
+    /// first dispatch of this epoch still contributes a gap sample.
+    pub last_dispatch: Option<f64>,
 }
 
 /// One dispatched batch: which requests it carried and when it left.
@@ -245,8 +253,7 @@ pub struct ServeController<'a> {
 
 impl<'a> ServeController<'a> {
     pub fn new(arrivals: &'a [f64], programs: &'a [Arc<Vec<Phase>>], cfg: QueueConfig) -> Self {
-        let window =
-            EpochWindow { start_s: 0.0, horizon_s: None, stream: 0..arrivals.len(), carry: vec![] };
+        let window = EpochWindow { stream: 0..arrivals.len(), ..EpochWindow::default() };
         Self::for_epoch(arrivals, programs, cfg, window)
     }
 
@@ -264,6 +271,12 @@ impl<'a> ServeController<'a> {
     ) -> Self {
         let n = cfg.gates.len();
         let gates = cfg.gates.clone();
+        // Inherit the previous epoch's rolling gap window (chronological,
+        // so the next overwrite at cursor 0 still evicts the oldest).
+        let mut gap_samples = window.gap_carry;
+        if gap_samples.len() > REARM_GAP_WINDOW {
+            gap_samples.drain(..gap_samples.len() - REARM_GAP_WINDOW);
+        }
         let mut c = Self {
             arrivals,
             programs,
@@ -282,8 +295,8 @@ impl<'a> ServeController<'a> {
             dropped_deadline: 0,
             in_flight: vec![false; n],
             last_busy: window.start_s,
-            last_dispatch: None,
-            gap_samples: Vec::new(),
+            last_dispatch: window.last_dispatch,
+            gap_samples,
             gap_cursor: 0,
         };
         // Migration ignores the (not yet open) stagger gates: the whole
@@ -393,26 +406,57 @@ impl<'a> ServeController<'a> {
     }
 
     /// Record one inter-dispatch gap into the rolling sample window.
-    /// Gaps that themselves qualify as lulls are excluded — the sample
-    /// models *routine* spacing, and letting outliers in would ratchet
-    /// the outlier threshold up after every burst boundary. The
-    /// exclusion applies from the very first sample (not only once the
-    /// threshold goes live), so an early lull cannot poison the
-    /// bootstrap window.
+    /// Gaps past the current outlier cut are **winsorized** (clipped to
+    /// the cut) rather than dropped: the sample models *routine* spacing,
+    /// so a single burst boundary contributes at most one cut-sized
+    /// sample (1/64 of the window — it cannot ratchet the threshold),
+    /// while a *persistent* upward shift in the routine spacing keeps
+    /// feeding cut-sized samples until the quantile (and with it the
+    /// threshold) climbs to the new regime. Outright exclusion — the old
+    /// behavior — froze the threshold at start-of-run behavior the
+    /// moment the distribution shifted past it. While the window is
+    /// still empty there is no measured cut yet, so the very first
+    /// sample clips against the configured constant instead — an early
+    /// lull cannot poison the bootstrap window, and a genuinely slower
+    /// routine rhythm still ratchets the cut up geometrically within a
+    /// few dispatches. The ratchet is bounded: if lulls of size ~L
+    /// *recur* often enough to reach the quantile (> 1 in 20 dispatches
+    /// at p95), clipped samples grow the cut only until it passes L —
+    /// from then on those gaps enter raw and the cut stabilizes near
+    /// 2 × L. That is deliberate: a pause the process takes every few
+    /// batches is its routine rhythm (re-staggering on every such
+    /// boundary would charge gate delays to every burst), while a
+    /// genuine outage beyond twice that rhythm still re-arms.
     fn record_dispatch_gap(&mut self, now: f64) {
         if let Some(prev) = self.last_dispatch {
             let gap = now - prev;
-            let lull = self.gap_cut(1).is_some_and(|cut| gap > cut);
-            if gap > 0.0 && !lull {
+            if gap > 0.0 {
+                let sample = match self.gap_cut(1).or(self.cfg.rearm_idle_s) {
+                    Some(cut) if gap > cut => cut,
+                    _ => gap,
+                };
                 if self.gap_samples.len() < REARM_GAP_WINDOW {
-                    self.gap_samples.push(gap);
+                    self.gap_samples.push(sample);
                 } else {
-                    self.gap_samples[self.gap_cursor] = gap;
+                    self.gap_samples[self.gap_cursor] = sample;
                     self.gap_cursor = (self.gap_cursor + 1) % REARM_GAP_WINDOW;
                 }
             }
         }
         self.last_dispatch = Some(now);
+    }
+
+    /// The rolling gap window in chronological order plus the last
+    /// dispatch instant — the re-arm state an epoch boundary carries into
+    /// the next epoch's controller (gates persist via
+    /// [`Self::live_gates`]; without this the samples reset every epoch
+    /// and short epochs never reach the bootstrap count, pinning the
+    /// threshold to the constant fallback).
+    pub fn gap_state(&self) -> (Vec<f64>, Option<f64>) {
+        let mut samples = self.gap_samples.clone();
+        // Once the ring is full the oldest sample sits at the cursor.
+        samples.rotate_left(self.gap_cursor);
+        (samples, self.last_dispatch)
     }
 
     /// Admit every arrival with time ≤ `now` into a queue, in order,
@@ -949,9 +993,12 @@ mod tests {
         // Nine dispatches 1 s apart teach the controller that ~1 s gaps
         // are routine; the derived threshold becomes max(base, 2 × p95)
         // = 2 s, so a 1.4 s pause (which the 0.1 s constant alone would
-        // call a lull) no longer re-arms the gates — only a > 2 s outlier
-        // does. The re-arm is observable through the live gate value.
-        let arrivals: Vec<f64> = (0..9).map(|i| i as f64).chain([10.4, 13.0]).collect();
+        // call a lull) no longer re-arms the gates — only a clear outlier
+        // does. The 10.4 dispatch's own 2.4 s gap is winsorized into the
+        // window at the 2 s cut, nudging the cut to 3.2 s, so the final
+        // outlier probe is a 4.5 s pause. The re-arm is observable
+        // through the live gate value.
+        let arrivals: Vec<f64> = (0..9).map(|i| i as f64).chain([10.4, 15.0]).collect();
         let progs = programs(4);
         let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
         c.rearm_idle_s = Some(0.1);
@@ -966,10 +1013,10 @@ mod tests {
         assert!(matches!(ctl.next(0, 9.0), DynNext::IdleUntil(t) if (t - 10.4).abs() < 1e-12));
         assert!(matches!(ctl.next(0, 10.4), DynNext::Job(_)));
         assert_eq!(ctl.live_gates()[0], 0.0, "a 1.4 s gap is no outlier — no re-arm");
-        // Completion poll at 10.5, then the 2.5 s outlier to t = 13.
-        assert!(matches!(ctl.next(0, 10.5), DynNext::IdleUntil(t) if (t - 13.0).abs() < 1e-12));
-        assert!(matches!(ctl.next(0, 13.0), DynNext::Job(_)));
-        assert_eq!(ctl.live_gates()[0], 13.0, "a 2.5 s outlier re-arms the gates");
+        // Completion poll at 10.5, then the 4.5 s outlier to t = 15.
+        assert!(matches!(ctl.next(0, 10.5), DynNext::IdleUntil(t) if (t - 15.0).abs() < 1e-12));
+        assert!(matches!(ctl.next(0, 15.0), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], 15.0, "a 4.5 s outlier re-arms the gates");
 
         // With the quantile disabled, the fixed 0.1 s constant calls the
         // same 1.4 s pause a lull and re-arms.
@@ -986,6 +1033,119 @@ mod tests {
     }
 
     #[test]
+    fn rolling_gap_window_tracks_a_late_distribution_shift() {
+        // Regression: the 64-sample gap window must actually roll. Phase
+        // one teaches ~1 s routine gaps (outlier cut 2 × p95 = 2 s), so a
+        // ~3 s pause re-arms the gates. Phase two shifts the routine
+        // spacing to 1.8 s; once the window has rolled over, the cut is
+        // 3.6 s and the *same* ~3 s pause is no longer an outlier. A
+        // frozen window (the old exclude-outliers bug kept it pinned at
+        // start-of-run behavior) would re-arm on both pauses.
+        let mut arrivals: Vec<f64> = (0..=65).map(|i| i as f64).collect();
+        let probe1 = 68.0;
+        arrivals.push(probe1);
+        for j in 1..=80 {
+            arrivals.push(probe1 + 1.8 * j as f64);
+        }
+        let probe2 = probe1 + 1.8 * 80.0 + 3.0; // 215.0
+        arrivals.push(probe2);
+        let progs = programs(4);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.rearm_idle_s = Some(0.1);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        for t in 0..=65 {
+            assert!(matches!(ctl.next(0, t as f64), DynNext::Job(_)), "routine dispatch {t}");
+        }
+        // Completion poll, then the first ~3 s pause: still an outlier
+        // against the 1 s regime — the gates re-arm at the burst instant.
+        assert!(matches!(ctl.next(0, 65.1), DynNext::IdleUntil(t) if (t - probe1).abs() < 1e-9));
+        assert!(matches!(ctl.next(0, probe1), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], probe1, "pre-shift: a ~3 s pause is a lull — re-arm");
+        for j in 1..=80 {
+            let t = probe1 + 1.8 * j as f64;
+            assert!(matches!(ctl.next(0, t), DynNext::Job(_)), "shifted dispatch {j}");
+        }
+        // The same pause after the shift: the rolled window calls 1.8 s
+        // routine, the cut is now 3.6 s, and the gates stay put.
+        let poll = probe1 + 1.8 * 80.0 + 0.1;
+        assert!(matches!(ctl.next(0, poll), DynNext::IdleUntil(t) if (t - probe2).abs() < 1e-9));
+        assert!(matches!(ctl.next(0, probe2), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], probe1, "post-shift: the threshold must have moved");
+    }
+
+    #[test]
+    fn gap_window_carries_across_epoch_boundaries() {
+        // An epoch-scoped controller seeded with the previous epoch's gap
+        // window starts with the adaptive threshold already live: a 1.5 s
+        // pause (a lull by the 0.1 s constant, routine by the carried
+        // 2 × p95 = 2 s cut) must NOT re-arm. Without the carry, short
+        // epochs never reach the 8-sample bootstrap and always fall back
+        // to the constant.
+        let arrivals = [12.0];
+        let progs = programs(4);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.rearm_idle_s = Some(0.1);
+        let window = EpochWindow {
+            start_s: 10.5,
+            horizon_s: None,
+            stream: 0..1,
+            carry: vec![],
+            gap_carry: vec![1.0; 8],
+            last_dispatch: Some(10.0),
+        };
+        let mut ctl = ServeController::for_epoch(&arrivals, &progs, c.clone(), window);
+        assert!(matches!(ctl.next(0, 12.0), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], 0.0, "carried samples keep the 1.5 s pause routine");
+        // The cross-boundary gap (12.0 − 10.0, clipped at the 2 s cut)
+        // itself lands in the rolling window.
+        let (samples, last) = ctl.gap_state();
+        assert_eq!(samples.len(), 9);
+        assert!((samples[8] - 2.0).abs() < 1e-12, "winsorized at the cut: {samples:?}");
+        assert_eq!(last, Some(12.0));
+
+        // The identical epoch without the carry re-arms on the constant.
+        let window =
+            EpochWindow { start_s: 10.5, horizon_s: None, stream: 0..1, ..EpochWindow::default() };
+        let mut ctl = ServeController::for_epoch(&arrivals, &progs, c, window);
+        assert!(matches!(ctl.next(0, 12.0), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], 12.0, "no carry: the constant calls 1.5 s a lull");
+    }
+
+    #[test]
+    fn early_lull_cannot_poison_the_bootstrap_window() {
+        // The very first inter-dispatch gap is a 100 s lull; the routine
+        // rhythm that follows is 2 s. The bootstrap sample clips against
+        // the configured constant (1 s), so the derived cut settles near
+        // the routine spacing (2 × p95 ≈ 4 s) and a later genuine ~10 s
+        // lull still re-arms the gates. Recording the 100 s gap raw
+        // would have pushed the cut past 100 s and disarmed re-arming
+        // for the rest of the window.
+        let mut arrivals: Vec<f64> = vec![0.0];
+        for j in 0..8 {
+            arrivals.push(100.0 + 2.0 * j as f64); // 100, 102, ..., 114
+        }
+        arrivals.push(126.0);
+        let progs = programs(4);
+        let mut c = QueueConfig::new(DispatchPolicy::RoundRobin, vec![0.0]);
+        c.rearm_idle_s = Some(1.0);
+        let mut ctl = ServeController::new(&arrivals, &progs, c);
+        assert!(matches!(ctl.next(0, 0.0), DynNext::Job(_)));
+        for j in 0..8 {
+            let t = 100.0 + 2.0 * j as f64;
+            assert!(matches!(ctl.next(0, t), DynNext::Job(_)), "dispatch at {t}");
+        }
+        let (samples, _) = ctl.gap_state();
+        assert_eq!(samples.len(), 8, "nine dispatches record eight gaps");
+        assert!((samples[0] - 1.0).abs() < 1e-12, "lull clipped at the constant: {samples:?}");
+        assert!(samples.iter().all(|&g| g <= 2.0 + 1e-12), "no outlier in the window");
+        // Completion poll, then the genuine lull: 126 − 114.1 ≈ 11.9 s
+        // clears the ~4 s derived cut and re-arms.
+        assert!(matches!(ctl.next(0, 114.1), DynNext::IdleUntil(t) if (t - 126.0).abs() < 1e-9));
+        assert!(matches!(ctl.next(0, 126.0), DynNext::Job(_)));
+        assert_eq!(ctl.live_gates()[0], 126.0, "a genuine lull must still re-arm");
+    }
+
+    #[test]
     fn epoch_window_scopes_the_stream_and_horizon() {
         // Arrivals 0..6; this epoch owns [2, 5) with a horizon at 1.0.
         let arrivals = [0.0, 0.1, 0.3, 0.35, 0.4, 2.0];
@@ -995,6 +1155,7 @@ mod tests {
             horizon_s: Some(1.0),
             stream: 2..5,
             carry: vec![0, 1],
+            ..EpochWindow::default()
         };
         let mut ctl = ServeController::for_epoch(
             &arrivals,
@@ -1026,8 +1187,12 @@ mod tests {
         // A poll past the horizon ends the epoch with work outstanding;
         // the leftovers (queued + never admitted) migrate out in order.
         // Partition 1's gate never opens, so everything routes to p0.
-        let window =
-            EpochWindow { start_s: 0.0, horizon_s: Some(0.32), stream: 0..5, carry: vec![] };
+        let window = EpochWindow {
+            start_s: 0.0,
+            horizon_s: Some(0.32),
+            stream: 0..5,
+            ..EpochWindow::default()
+        };
         let mut ctl = ServeController::for_epoch(
             &arrivals,
             &progs,
@@ -1057,6 +1222,7 @@ mod tests {
             horizon_s: None,
             stream: 5..5,
             carry: vec![0, 1, 2, 3, 4],
+            ..EpochWindow::default()
         };
         let mut ctl = ServeController::for_epoch(&arrivals, &progs, c, window);
         assert_eq!(ctl.dropped_capacity(), 1, "cap 2 × 2 partitions holds only 4");

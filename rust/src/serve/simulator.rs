@@ -22,7 +22,9 @@
 use super::arrival::ArrivalProcess;
 use super::latency::{LatencyRecorder, LatencyStats};
 use super::queue::{BatchPolicy, DispatchPolicy, EpochWindow, QueueConfig, ServeController};
-use super::topology::{AdaptiveConfig, EpochStats, PartitionSet, ReconfigEvent};
+use super::topology::{
+    next_epoch_horizon, AdaptiveConfig, EpochStats, PartitionSet, ReconfigEvent, MAX_EPOCHS,
+};
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
@@ -32,10 +34,6 @@ use crate::sim::{BandwidthTrace, JobRecord, SimEngine};
 use crate::util::rng::Xoshiro256StarStar;
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
-
-/// Hard cap on adaptive epochs per run — a backstop against a stalled
-/// loop, far above anything a real configuration produces.
-const MAX_EPOCHS: usize = 1_000_000;
 
 /// Map one engine run's batch completions back to per-request latencies
 /// (shared by the fixed path and every adaptive epoch); returns how many
@@ -313,16 +311,7 @@ impl ServeSimulator {
     /// Offsets are relative to the topology's install instant (t = 0 for
     /// a fixed run).
     fn gates_for(&self, n: usize, batch_time: f64) -> Vec<f64> {
-        match self.stagger {
-            StaggerPolicy::None => vec![0.0; n],
-            StaggerPolicy::UniformPhase => {
-                (0..n).map(|i| i as f64 * batch_time / n as f64).collect()
-            }
-            StaggerPolicy::RandomDelay { seed } => {
-                let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
-                (0..n).map(|_| rng.range_f64(0.0, batch_time)).collect()
-            }
-        }
+        stagger_gates(self.stagger, n, batch_time)
     }
 
     /// The SLO knob, validated and converted to seconds.
@@ -489,6 +478,13 @@ impl ServeSimulator {
         let mut epochs: Vec<EpochStats> = Vec::new();
         let mut reconfigs: Vec<ReconfigEvent> = Vec::new();
         let mut carry: Vec<usize> = Vec::new();
+        // The lull re-arm state that survives epoch boundaries alongside
+        // the live gates: the rolling inter-dispatch gap window and the
+        // last dispatch instant (without them, short epochs never reach
+        // the 8-sample bootstrap and the adaptive threshold stays pinned
+        // to the constant fallback).
+        let mut gap_carry: Vec<f64> = Vec::new();
+        let mut last_dispatch: Option<f64> = None;
         let mut cursor = 0usize;
         let mut start = 0.0f64;
         let mut served_total = 0usize;
@@ -510,17 +506,7 @@ impl ServeSimulator {
             }
             let n = climber.current();
             let set = &sets[&n];
-            // The next epoch boundary strictly after this epoch's start.
-            // A degenerate epoch length below the float resolution of
-            // `start` cannot advance by addition — fall back to the next
-            // representable instant so the loop always makes progress.
-            let mut horizon = (start / cfg.epoch_s).floor() * cfg.epoch_s + cfg.epoch_s;
-            if horizon <= start {
-                horizon = start + cfg.epoch_s;
-            }
-            if horizon <= start {
-                horizon = f64::from_bits(start.to_bits() + 1);
-            }
+            let horizon = next_epoch_horizon(start, cfg.epoch_s);
             let upper = arrivals.partition_point(|&a| a < horizon);
             let arrived = upper - cursor;
             let carried_in = carry.len();
@@ -532,6 +518,8 @@ impl ServeSimulator {
                 horizon_s: Some(horizon),
                 stream: cursor..upper,
                 carry: std::mem::take(&mut carry),
+                gap_carry: std::mem::take(&mut gap_carry),
+                last_dispatch,
             };
             let mut controller =
                 ServeController::for_epoch(&arrivals, set.programs(), queue_cfg, window);
@@ -551,8 +539,10 @@ impl ServeSimulator {
                     carry.len()
                 )));
             }
-            // Keep any in-epoch lull re-arms of the gates.
+            // Keep any in-epoch lull re-arms of the gates, and the gap
+            // distribution the re-arm threshold is derived from.
             gates = controller.live_gates().to_vec();
+            (gap_carry, last_dispatch) = controller.gap_state();
 
             let end = horizon.max(out.makespan.0);
             let busy: f64 = out.jobs.iter().map(|j| j.finished_at - j.started_at).sum();
@@ -651,6 +641,21 @@ impl ServeSimulator {
             epochs,
             reconfigs,
         })
+    }
+}
+
+/// Start-gate offsets for a stagger policy over `n` partitions, spread
+/// over one full-batch roofline time — shared by the single-tenant
+/// simulator and the multi-tenant slices (offsets are relative to the
+/// topology's install instant).
+pub(super) fn stagger_gates(stagger: StaggerPolicy, n: usize, batch_time: f64) -> Vec<f64> {
+    match stagger {
+        StaggerPolicy::None => vec![0.0; n],
+        StaggerPolicy::UniformPhase => (0..n).map(|i| i as f64 * batch_time / n as f64).collect(),
+        StaggerPolicy::RandomDelay { seed } => {
+            let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+            (0..n).map(|_| rng.range_f64(0.0, batch_time)).collect()
+        }
     }
 }
 

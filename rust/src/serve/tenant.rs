@@ -1,0 +1,1230 @@
+//! Multi-tenant serving: several CNNs, one machine, one memory system.
+//!
+//! The offline mixed-tenancy experiment ([`crate::shaping::mixed`])
+//! showed that co-scheduling partitions running *different* models
+//! shapes traffic structurally — complementary compute/memory mixes
+//! interleave where identical partitions must be de-phased statistically.
+//! This module serves that scenario end-to-end: each tenant brings its
+//! own model, arrival stream, queue cap and SLO, owns a **slice** of the
+//! machine as its own [`PartitionSet`], and every tenant's batches
+//! contend for the shared memory bandwidth inside one fluid-engine run.
+//!
+//! Two machine-sharing disciplines, directly comparable at identical
+//! offered load:
+//!
+//! * [`TenantMode::Coscheduled`] — spatial sharing: all tenants run
+//!   concurrently, each on [`crate::shaping::weighted_cores`] of the
+//!   machine (the serving edition of the fixed
+//!   [`crate::shaping::proportional_cores`] split — pass
+//!   FLOP-proportional shares to size slices to per-tenant work).
+//!   Optionally the run proceeds in epochs and **re-balances** cores
+//!   between tenants at epoch boundaries via the adaptive serving loop's
+//!   drain/migrate path: when one tenant's backlog grows while another
+//!   idles, a core block moves from the idle slice to the backlogged one
+//!   and the queued work is re-admitted against the new topologies.
+//! * [`TenantMode::TimeShared`] — temporal sharing, the conventional
+//!   baseline: one tenant at a time owns the whole machine for one
+//!   quantum (epoch), round-robin; streams of inactive tenants buffer
+//!   (their backlog carries forward and is re-admitted — against the
+//!   tenant's own caps — when its quantum starts).
+//!
+//! Per-tenant accounting is first-class: each tenant has its own
+//! [`LatencyRecorder`] with per-epoch marks, and per-tenant conservation
+//! (`carried_in + arrived == served + dropped + carried_out`) is
+//! enforced as a [`crate::error::Error::SimInvariant`] every epoch.
+
+use super::arrival::ArrivalProcess;
+use super::latency::{LatencyRecorder, LatencyStats};
+use super::queue::{BatchPolicy, DispatchPolicy, EpochWindow, QueueConfig, ServeController};
+use super::simulator::{stagger_gates, ServeOutcome};
+use super::topology::{next_epoch_horizon, EpochStats, PartitionSet, MAX_EPOCHS};
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::shaping::{weighted_cores, StaggerPolicy};
+use crate::sim::{BandwidthTrace, DynJob, DynNext, SimEngine, WorkSource};
+use crate::util::stats::{StepSeries, Summary};
+
+/// Utilization below which a tenant with no backlog qualifies as a
+/// re-balance donor.
+const REBALANCE_LOW_UTIL: f64 = 0.5;
+
+/// How the tenants share the machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantMode {
+    /// Spatial sharing: every tenant runs concurrently on its core slice.
+    Coscheduled,
+    /// Temporal sharing: tenants take whole-machine turns, one quantum
+    /// (epoch) each, round-robin.
+    TimeShared,
+}
+
+impl TenantMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantMode::Coscheduled => "cosched",
+            TenantMode::TimeShared => "timeshared",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "cosched" | "coscheduled" => Ok(TenantMode::Coscheduled),
+            "timeshared" | "time_shared" | "ts" => Ok(TenantMode::TimeShared),
+            other => {
+                Err(Error::Usage(format!("unknown tenant mode '{other}' (cosched|timeshared)")))
+            }
+        }
+    }
+}
+
+/// One serving tenant: a model, its claim on the machine, and its own
+/// traffic and overload knobs.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub graph: Graph,
+    /// Relative core-share weight (e.g. `0.6`); shares are normalized
+    /// across tenants and turned into whole cores by
+    /// [`crate::shaping::weighted_cores`].
+    pub share: f64,
+    /// Asynchronous partitions *within* this tenant's slice (default 1:
+    /// the tenant is one synchronous partition, and the traffic shaping
+    /// between tenants is structural).
+    pub partitions: usize,
+    /// The tenant's own open-loop arrival stream.
+    pub arrival: ArrivalProcess,
+    /// Per-partition queue bound (0 = unbounded).
+    pub queue_cap: usize,
+    /// Latency deadline in ms (0 = none); shedding and goodput both use
+    /// this tenant-local deadline.
+    pub slo_ms: f64,
+}
+
+impl TenantSpec {
+    pub fn new(graph: Graph, share: f64, arrival: ArrivalProcess) -> Self {
+        Self { graph, share, partitions: 1, arrival, queue_cap: 0, slo_ms: 0.0 }
+    }
+
+    pub fn partitions(mut self, n: usize) -> Self {
+        self.partitions = n;
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    pub fn slo_ms(mut self, ms: f64) -> Self {
+        self.slo_ms = ms;
+        self
+    }
+
+    /// Parse the CLI `model:share:rate[,model:share:rate...]` grammar
+    /// (share = relative core weight, rate = Poisson arrivals/s).
+    pub fn parse_list(spec: &str) -> Result<Vec<TenantSpec>> {
+        let mut out = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() != 3 {
+                return Err(Error::Usage(format!(
+                    "tenant '{part}' must be model:share:rate (e.g. resnet50:0.6:300)"
+                )));
+            }
+            let graph = crate::model::by_name(fields[0].trim())?;
+            let num = |s: &str, what: &str| -> Result<f64> {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| Error::Usage(format!("bad tenant {what} '{s}' in '{part}'")))
+            };
+            let share = num(fields[1], "share")?;
+            let rate = num(fields[2], "rate")?;
+            let t = TenantSpec::new(graph, share, ArrivalProcess::poisson(rate));
+            t.validate()?;
+            out.push(t);
+        }
+        if out.is_empty() {
+            return Err(Error::Usage(format!("no tenants in '{spec}'")));
+        }
+        Ok(out)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.share.is_finite() && self.share > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "tenant {} share must be finite and > 0: {}",
+                self.graph.name, self.share
+            )));
+        }
+        if self.partitions == 0 {
+            return Err(Error::InvalidConfig(format!(
+                "tenant {} needs at least one partition",
+                self.graph.name
+            )));
+        }
+        if !(self.slo_ms.is_finite() && self.slo_ms >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "tenant {} SLO must be finite and >= 0 ms: {}",
+                self.graph.name, self.slo_ms
+            )));
+        }
+        self.arrival.validate()
+    }
+}
+
+/// One core move between tenants at an epoch boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebalanceEvent {
+    /// Epoch whose observation triggered the move.
+    pub epoch: usize,
+    /// Absolute time the new split took effect.
+    pub at_s: f64,
+    pub from_tenant: usize,
+    pub to_tenant: usize,
+    pub cores_moved: usize,
+    /// Backlogged requests the receiving tenant migrated into its grown
+    /// slice.
+    pub migrated: usize,
+}
+
+/// One tenant's share of a multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    /// Stable row tag (`t0`, `t1`, ... in spec order).
+    pub tag: String,
+    /// The tenant's model name.
+    pub model: String,
+    /// Final core share (after any re-balancing; the whole machine in
+    /// time-shared mode — each tenant owns it during its quantum).
+    pub cores: usize,
+    /// The tenant's serving statistics. `partitions`/`epochs` are the
+    /// tenant's own; `makespan_s` (and the rates derived from it) use the
+    /// machine-level clock so tenants are comparable; `trace` is empty
+    /// (per-tenant bandwidth is summarized in `bw` where available — the
+    /// single-window co-scheduled run; zero otherwise).
+    pub outcome: ServeOutcome,
+}
+
+/// Result of one multi-tenant serving run.
+#[derive(Debug, Clone)]
+pub struct MultiTenantOutcome {
+    pub mode: TenantMode,
+    /// Per-tenant rows, in spec order.
+    pub tenants: Vec<TenantOutcome>,
+    /// Machine-level aggregate: request/served/dropped/batch counters
+    /// sum over tenants, percentiles reduce over the union of all
+    /// sojourn samples, the bandwidth trace is the stitched machine
+    /// series, and `queue_peak` keeps its per-partition meaning (the
+    /// deepest any single partition queue got, across all tenants —
+    /// directly comparable with the single-tenant column).
+    pub aggregate: ServeOutcome,
+    /// Core moves between tenants, in order (always empty unless
+    /// co-scheduled with re-balancing enabled).
+    pub rebalances: Vec<RebalanceEvent>,
+}
+
+impl MultiTenantOutcome {
+    /// Total offered rate (sum of the tenants' long-run mean rates).
+    pub fn offered_rate(&self) -> f64 {
+        self.tenants.iter().map(|t| t.outcome.arrival_rate).sum()
+    }
+}
+
+/// Per-tenant seed derivation: distinct deterministic streams from one
+/// run seed (golden-ratio stride, stable across runs and thread counts).
+fn tenant_seed(seed: u64, tenant: usize) -> u64 {
+    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(tenant as u64 + 1)
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// The multi-tenant work source: one epoch-scoped [`ServeController`]
+/// per active tenant behind a global partition map, re-tagging job ids so
+/// every engine job maps back to exactly one (tenant, batch).
+struct MtController<'a> {
+    subs: Vec<ServeController<'a>>,
+    /// Global partition -> (sub index, the sub's local partition).
+    map: Vec<(usize, usize)>,
+    /// Global job id -> (sub index, the sub's local batch id).
+    batch_map: Vec<(usize, u64)>,
+}
+
+impl WorkSource for MtController<'_> {
+    fn next(&mut self, partition: usize, now: f64) -> DynNext {
+        let (s, local) = self.map[partition];
+        match self.subs[s].next(local, now) {
+            DynNext::Job(job) => {
+                let gid = self.batch_map.len() as u64;
+                self.batch_map.push((s, job.id));
+                DynNext::Job(DynJob { id: gid, phases: job.phases })
+            }
+            other => other,
+        }
+    }
+}
+
+/// Accumulators one tenant carries across epochs.
+#[derive(Debug, Default)]
+struct TenantState {
+    cursor: usize,
+    carry: Vec<usize>,
+    gap_carry: Vec<f64>,
+    last_dispatch: Option<f64>,
+    /// Live (absolute) gates carried across epochs while the slice is
+    /// stable; re-armed on install and on re-balance.
+    gates: Vec<f64>,
+    served: usize,
+    dropped: usize,
+    batches: usize,
+    queue_peak: usize,
+    total_bytes: f64,
+    epochs: Vec<EpochStats>,
+}
+
+/// Per-tenant fold of one engine window.
+struct FoldedWindow {
+    stream_arrived: usize,
+    carried_in: usize,
+    served: usize,
+    dropped: usize,
+    batches: usize,
+    queue_peak: usize,
+    busy_s: f64,
+    bytes: f64,
+    carry: Vec<usize>,
+    gap_carry: Vec<f64>,
+    last_dispatch: Option<f64>,
+    gates: Vec<f64>,
+    latency: LatencyStats,
+}
+
+/// Machine-level results of one engine window.
+struct EngineWindow {
+    makespan: f64,
+    trace: BandwidthTrace,
+    total_bytes: f64,
+}
+
+/// Builder for one multi-tenant serving run — the tenancy analogue of
+/// [`super::ServeSimulator`].
+#[derive(Debug, Clone)]
+pub struct MultiTenantSimulator {
+    accel: AcceleratorConfig,
+    tenants: Vec<TenantSpec>,
+    duration_s: f64,
+    seed: u64,
+    policy: DispatchPolicy,
+    stagger: StaggerPolicy,
+    batch_timeout_ms: f64,
+    stagger_rearm: bool,
+    rearm_quantile: f64,
+    mode: TenantMode,
+    /// Epoch length: the re-balance window (co-scheduled) or the
+    /// time-sharing quantum.
+    epoch_s: f64,
+    rebalance: bool,
+    trace_samples: usize,
+    enforce_capacity: bool,
+}
+
+impl MultiTenantSimulator {
+    pub fn new(accel: &AcceleratorConfig, tenants: Vec<TenantSpec>) -> Self {
+        Self {
+            accel: accel.clone(),
+            tenants,
+            duration_s: 0.5,
+            seed: 42,
+            policy: DispatchPolicy::ShortestQueue,
+            stagger: StaggerPolicy::UniformPhase,
+            batch_timeout_ms: 0.0,
+            stagger_rearm: true,
+            rearm_quantile: 0.95,
+            mode: TenantMode::Coscheduled,
+            epoch_s: 0.005,
+            rebalance: false,
+            trace_samples: 400,
+            enforce_capacity: true,
+        }
+    }
+
+    pub fn duration(mut self, s: f64) -> Self {
+        self.duration_s = s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn policy(mut self, p: DispatchPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn stagger(mut self, s: StaggerPolicy) -> Self {
+        self.stagger = s;
+        self
+    }
+
+    pub fn batch_timeout_ms(mut self, ms: f64) -> Self {
+        self.batch_timeout_ms = ms;
+        self
+    }
+
+    pub fn stagger_rearm(mut self, on: bool) -> Self {
+        self.stagger_rearm = on;
+        self
+    }
+
+    pub fn stagger_rearm_quantile(mut self, q: f64) -> Self {
+        self.rearm_quantile = q;
+        self
+    }
+
+    pub fn mode(mut self, mode: TenantMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Epoch length in seconds: the time-sharing quantum, and the
+    /// observation window for co-scheduled re-balancing.
+    pub fn epoch(mut self, s: f64) -> Self {
+        self.epoch_s = s;
+        self
+    }
+
+    /// Re-balance cores between co-scheduled tenants at epoch boundaries
+    /// (at most one core-block move per boundary): a tenant whose backlog
+    /// grew receives a block from a tenant that ended the epoch drained
+    /// and under-utilized.
+    pub fn rebalance(mut self, on: bool) -> Self {
+        self.rebalance = on;
+        self
+    }
+
+    pub fn trace_samples(mut self, s: usize) -> Self {
+        self.trace_samples = s;
+        self
+    }
+
+    /// Skip the DRAM feasibility check (ablations only).
+    pub fn ignore_capacity(mut self) -> Self {
+        self.enforce_capacity = false;
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(Error::InvalidConfig("multi-tenant serving needs tenants".into()));
+        }
+        if self.tenants.len() > self.accel.cores {
+            return Err(Error::InvalidConfig(format!(
+                "{} tenants cannot each get >= 1 of {} cores",
+                self.tenants.len(),
+                self.accel.cores
+            )));
+        }
+        for t in &self.tenants {
+            t.validate()?;
+        }
+        if !(self.epoch_s.is_finite() && self.epoch_s > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "tenant epoch must be finite and > 0 s: {}",
+                self.epoch_s
+            )));
+        }
+        if !(self.rearm_quantile.is_finite() && (0.0..1.0).contains(&self.rearm_quantile)) {
+            return Err(Error::InvalidConfig(format!(
+                "re-arm quantile must be in [0, 1): {}",
+                self.rearm_quantile
+            )));
+        }
+        Ok(())
+    }
+
+    /// The fixed [`weighted_cores`] split of the machine over the tenant
+    /// shares.
+    pub fn core_split(&self) -> Vec<usize> {
+        let weights: Vec<f64> = self.tenants.iter().map(|t| t.share).collect();
+        weighted_cores(self.accel.cores, &weights)
+    }
+
+    fn slice_set(&self, tenant: usize, cores: usize) -> Result<PartitionSet> {
+        let t = &self.tenants[tenant];
+        PartitionSet::build_slice(
+            &self.accel,
+            &t.graph,
+            cores,
+            t.partitions,
+            0,
+            self.enforce_capacity,
+        )
+    }
+
+    /// Per-tenant queue configuration over the given absolute gates.
+    fn queue_cfg(&self, tenant: usize, gates: Vec<f64>, batch_time: f64) -> Result<QueueConfig> {
+        let t = &self.tenants[tenant];
+        let n = gates.len();
+        let mut cfg = QueueConfig::new(self.policy, gates);
+        cfg.queue_cap = (t.queue_cap > 0).then_some(t.queue_cap);
+        cfg.slo_s = (t.slo_ms > 0.0).then_some(t.slo_ms / 1e3);
+        cfg.batch = BatchPolicy::from_timeout_ms(self.batch_timeout_ms)?;
+        cfg.rearm_idle_s = self.stagger_rearm.then_some(batch_time);
+        cfg.rearm_quantile = (self.rearm_quantile > 0.0).then_some(self.rearm_quantile);
+        // Gates are absolute here, so lull re-arms need the relative
+        // offsets spelled out.
+        cfg.rearm_offsets = Some(stagger_gates(self.stagger, n, batch_time));
+        Ok(cfg)
+    }
+
+    /// Run to drain and aggregate per-tenant + machine-level outcomes.
+    pub fn run(&self) -> Result<MultiTenantOutcome> {
+        self.validate()?;
+        let k = self.tenants.len();
+        let arrivals: Vec<Vec<f64>> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| t.arrival.generate(self.duration_s, tenant_seed(self.seed, i)))
+            .collect::<Result<_>>()?;
+
+        // The installed topologies: per-tenant slices (co-scheduled) or
+        // one whole-machine set per tenant (time-shared quanta).
+        let mut cores = self.core_split();
+        if self.mode == TenantMode::TimeShared {
+            for c in &mut cores {
+                *c = self.accel.cores;
+            }
+        }
+        let mut sets: Vec<PartitionSet> = Vec::with_capacity(k);
+        for (i, &c) in cores.iter().enumerate() {
+            sets.push(self.slice_set(i, c)?);
+        }
+
+        // A single engine window suffices when nothing can change
+        // mid-run; epochs exist to re-balance or to take quantum turns.
+        let single_window = self.mode == TenantMode::Coscheduled && !self.rebalance;
+        let mut state: Vec<TenantState> = (0..k)
+            .map(|i| TenantState {
+                gates: stagger_gates(self.stagger, sets[i].partitions, sets[i].batch_time_s),
+                ..TenantState::default()
+            })
+            .collect();
+        let mut recorders: Vec<LatencyRecorder> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                if t.slo_ms > 0.0 {
+                    LatencyRecorder::with_slo(t.slo_ms / 1e3)
+                } else {
+                    LatencyRecorder::new()
+                }
+            })
+            .collect();
+
+        let mut trace = BandwidthTrace::total_only();
+        let mut tenant_bw: Vec<Summary> = vec![Summary::of(&[]); k];
+        let mut rebalances: Vec<RebalanceEvent> = Vec::new();
+        let mut start = 0.0f64;
+        let mut epoch = 0usize;
+        let mut makespan = 0.0f64;
+        let mut total_bytes = 0.0f64;
+        let mut agg_queue_peak = 0usize;
+
+        loop {
+            if epoch >= MAX_EPOCHS {
+                return Err(Error::SimInvariant(format!(
+                    "multi-tenant serve exceeded {MAX_EPOCHS} epochs — stalled loop"
+                )));
+            }
+            // The window horizon: unbounded for the single run, else the
+            // next epoch boundary strictly after `start` (shared with
+            // the adaptive serving loop).
+            let horizon =
+                if single_window { None } else { Some(next_epoch_horizon(start, self.epoch_s)) };
+            let active: Vec<usize> = match self.mode {
+                TenantMode::Coscheduled => (0..k).collect(),
+                TenantMode::TimeShared => vec![epoch % k],
+            };
+
+            // The active tenants run one engine window together.
+            let folded = self
+                .run_window(&active, &sets, &mut state, &arrivals, &mut recorders, start, horizon);
+            let (results, window) = folded?;
+            let end = horizon.unwrap_or(window.makespan).max(window.makespan);
+            let mut epoch_trace = window.trace;
+            if single_window {
+                // Per-tenant bandwidth from the per-partition split, then
+                // keep the aggregate series as the machine trace.
+                let mut offset = 0usize;
+                for &i in &active {
+                    let n = sets[i].partitions;
+                    if epoch_trace.per_partition.len() >= offset + n {
+                        let slice: Vec<&StepSeries> =
+                            epoch_trace.per_partition[offset..offset + n].iter().collect();
+                        let gbps: Vec<f64> = StepSeries::sum(&slice)
+                            .resample(self.trace_samples.max(1))
+                            .into_iter()
+                            .map(|b| b / 1e9)
+                            .collect();
+                        tenant_bw[i] = Summary::of(&gbps);
+                    }
+                    offset += n;
+                }
+                epoch_trace.per_partition.clear();
+                trace = epoch_trace;
+            } else {
+                // Trim idle padding past the boundary, then stitch.
+                epoch_trace.truncate_to(end);
+                trace.append_clipped(&epoch_trace);
+            }
+            total_bytes += window.total_bytes;
+            makespan = makespan.max(window.makespan);
+
+            // Fold each active tenant's window, enforcing per-tenant
+            // conservation over the epoch.
+            for (r, &i) in results.into_iter().zip(active.iter()) {
+                if r.carried_in + r.stream_arrived != r.served + r.dropped + r.carry.len() {
+                    return Err(Error::SimInvariant(format!(
+                        "tenant {i} epoch {epoch} leaks requests: {} carried + {} arrived vs \
+                         {} served + {} dropped + {} left",
+                        r.carried_in,
+                        r.stream_arrived,
+                        r.served,
+                        r.dropped,
+                        r.carry.len()
+                    )));
+                }
+                let n = sets[i].partitions;
+                let util = if end > start {
+                    (r.busy_s / (n as f64 * (end - start))).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                let s = &mut state[i];
+                s.served += r.served;
+                s.dropped += r.dropped;
+                s.batches += r.batches;
+                s.queue_peak = s.queue_peak.max(r.queue_peak);
+                agg_queue_peak = agg_queue_peak.max(r.queue_peak);
+                s.total_bytes += r.bytes;
+                s.epochs.push(EpochStats {
+                    index: epoch,
+                    partitions: n,
+                    start_s: start,
+                    end_s: end,
+                    arrived: r.stream_arrived,
+                    carried_in: r.carried_in,
+                    served: r.served,
+                    dropped: r.dropped,
+                    carried_out: r.carry.len(),
+                    batches: r.batches,
+                    queue_peak: r.queue_peak,
+                    utilization: util,
+                    latency: r.latency,
+                });
+                s.carry = r.carry;
+                s.gap_carry = r.gap_carry;
+                s.last_dispatch = r.last_dispatch;
+                s.gates = r.gates;
+            }
+
+            // Inactive tenants buffer this window's arrivals into their
+            // carried backlog, re-admitted at their next quantum.
+            let cut = horizon.unwrap_or(f64::INFINITY);
+            for i in 0..k {
+                if active.contains(&i) {
+                    continue;
+                }
+                let upper = arrivals[i].partition_point(|&a| a < cut);
+                let s = &mut state[i];
+                let arrived = upper - s.cursor;
+                let carried_in = s.carry.len();
+                s.carry.extend(s.cursor..upper);
+                s.cursor = upper;
+                s.epochs.push(EpochStats {
+                    index: epoch,
+                    partitions: sets[i].partitions,
+                    start_s: start,
+                    end_s: end,
+                    arrived,
+                    carried_in,
+                    served: 0,
+                    dropped: 0,
+                    carried_out: s.carry.len(),
+                    batches: 0,
+                    queue_peak: 0,
+                    utilization: 0.0,
+                    latency: LatencyStats::zero(),
+                });
+            }
+
+            start = end;
+            epoch += 1;
+            if single_window {
+                break;
+            }
+            let done =
+                (0..k).all(|i| state[i].cursor >= arrivals[i].len() && state[i].carry.is_empty());
+            if done {
+                break;
+            }
+
+            // Co-scheduled re-balancing: at most one core-block move per
+            // boundary, from a drained under-utilized tenant to the most
+            // backlogged one, both slices re-staggered at the new epoch
+            // start. The migrated backlog re-admits through the normal
+            // epoch path.
+            if self.mode == TenantMode::Coscheduled && self.rebalance {
+                if let Some(ev) = self.plan_rebalance(&cores, &sets, &state, epoch - 1, start) {
+                    let shrunk = cores[ev.from_tenant] - ev.cores_moved;
+                    let grown = cores[ev.to_tenant] + ev.cores_moved;
+                    let built = self
+                        .slice_set(ev.from_tenant, shrunk)
+                        .and_then(|d| self.slice_set(ev.to_tenant, grown).map(|r| (d, r)));
+                    match built {
+                        Ok((d, r)) => {
+                            cores[ev.from_tenant] = shrunk;
+                            cores[ev.to_tenant] = grown;
+                            for (i, set) in [(ev.from_tenant, d), (ev.to_tenant, r)] {
+                                state[i].gates =
+                                    stagger_gates(self.stagger, set.partitions, set.batch_time_s)
+                                        .into_iter()
+                                        .map(|o| start + o)
+                                        .collect();
+                                sets[i] = set;
+                            }
+                            rebalances.push(ev);
+                        }
+                        // A move that fails feasibility (e.g. the grown
+                        // slice trips the DRAM check) is skipped, not
+                        // fatal; anything else is a real error.
+                        Err(Error::InfeasiblePartitioning(_)) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+
+        // Final conservation: every tenant's stream fully accounted for.
+        for i in 0..k {
+            if state[i].served + state[i].dropped != arrivals[i].len() {
+                return Err(Error::SimInvariant(format!(
+                    "tenant {i} lost requests: {} served + {} dropped of {}",
+                    state[i].served,
+                    state[i].dropped,
+                    arrivals[i].len()
+                )));
+            }
+        }
+
+        // Assemble per-tenant and aggregate outcomes.
+        let per_s = |n: usize| if makespan > 0.0 { n as f64 / makespan } else { 0.0 };
+        let mut agg_recorder = LatencyRecorder::new();
+        let mut tenants_out: Vec<TenantOutcome> = Vec::with_capacity(k);
+        for (i, t) in self.tenants.iter().enumerate() {
+            agg_recorder.absorb(&recorders[i]);
+            let latency = recorders[i].stats();
+            let s = &state[i];
+            tenants_out.push(TenantOutcome {
+                tag: format!("t{i}"),
+                model: t.graph.name.clone(),
+                cores: cores[i],
+                outcome: ServeOutcome {
+                    partitions: sets[i].partitions,
+                    arrival_rate: t.arrival.mean_rate(),
+                    requests: arrivals[i].len(),
+                    served: s.served,
+                    dropped: s.dropped,
+                    drop_rate: latency.drop_rate(),
+                    batches: s.batches,
+                    mean_batch: s.served as f64 / s.batches.max(1) as f64,
+                    queue_peak: s.queue_peak,
+                    makespan_s: makespan,
+                    throughput_ips: per_s(s.served),
+                    goodput_ips: per_s(latency.slo_hits),
+                    latency,
+                    bw: tenant_bw[i],
+                    total_bytes: s.total_bytes,
+                    trace: BandwidthTrace::total_only(),
+                    epochs: s.epochs.clone(),
+                    reconfigs: Vec::new(),
+                },
+            });
+        }
+        let agg_latency = agg_recorder.stats();
+        let requests: usize = arrivals.iter().map(|a| a.len()).sum();
+        let served: usize = state.iter().map(|s| s.served).sum();
+        let dropped: usize = state.iter().map(|s| s.dropped).sum();
+        let batches: usize = state.iter().map(|s| s.batches).sum();
+        let aggregate = ServeOutcome {
+            partitions: sets.iter().map(|s| s.partitions).sum(),
+            arrival_rate: self.tenants.iter().map(|t| t.arrival.mean_rate()).sum(),
+            requests,
+            served,
+            dropped,
+            drop_rate: agg_latency.drop_rate(),
+            batches,
+            mean_batch: served as f64 / batches.max(1) as f64,
+            queue_peak: agg_queue_peak,
+            makespan_s: makespan,
+            throughput_ips: per_s(served),
+            goodput_ips: per_s(agg_latency.slo_hits),
+            latency: agg_latency,
+            bw: trace.sampled_summary(self.trace_samples),
+            total_bytes,
+            trace,
+            epochs: Vec::new(),
+            reconfigs: Vec::new(),
+        };
+        Ok(MultiTenantOutcome { mode: self.mode, tenants: tenants_out, aggregate, rebalances })
+    }
+
+    /// Run one engine window over the active tenants and split the
+    /// results back per tenant.
+    #[allow(clippy::too_many_arguments)]
+    fn run_window(
+        &self,
+        active: &[usize],
+        sets: &[PartitionSet],
+        state: &mut [TenantState],
+        arrivals: &[Vec<f64>],
+        recorders: &mut [LatencyRecorder],
+        start: f64,
+        horizon: Option<f64>,
+    ) -> Result<(Vec<FoldedWindow>, EngineWindow)> {
+        let cut = horizon.unwrap_or(f64::INFINITY);
+        let mut subs: Vec<ServeController<'_>> = Vec::with_capacity(active.len());
+        let mut sub_tenant: Vec<usize> = Vec::with_capacity(active.len());
+        let mut map: Vec<(usize, usize)> = Vec::new();
+        let mut all_cores: Vec<usize> = Vec::new();
+        let mut meta: Vec<(usize, usize)> = Vec::with_capacity(active.len());
+        for (slot, &i) in active.iter().enumerate() {
+            let upper = arrivals[i].partition_point(|&a| a < cut);
+            let s = &mut state[i];
+            let window = EpochWindow {
+                start_s: start,
+                horizon_s: horizon,
+                stream: s.cursor..upper,
+                carry: std::mem::take(&mut s.carry),
+                gap_carry: std::mem::take(&mut s.gap_carry),
+                last_dispatch: s.last_dispatch,
+            };
+            meta.push((upper - s.cursor, window.carry.len()));
+            s.cursor = upper;
+            // Time-shared quanta re-stagger on every hand-over (the gates
+            // from the tenant's last quantum are long in the past);
+            // co-scheduled slices keep their live gates.
+            let gates = match self.mode {
+                TenantMode::TimeShared => {
+                    stagger_gates(self.stagger, sets[i].partitions, sets[i].batch_time_s)
+                        .into_iter()
+                        .map(|o| start + o)
+                        .collect()
+                }
+                TenantMode::Coscheduled => s.gates.clone(),
+            };
+            let cfg = self.queue_cfg(i, gates, sets[i].batch_time_s)?;
+            subs.push(ServeController::for_epoch(&arrivals[i], sets[i].programs(), cfg, window));
+            sub_tenant.push(i);
+            for p in 0..sets[i].partitions {
+                map.push((slot, p));
+                all_cores.push(sets[i].cores_per_partition);
+            }
+        }
+        let mut engine = SimEngine::new(&self.accel);
+        if horizon.is_none() {
+            // Only the single-window run keeps per-partition traces (for
+            // per-tenant bandwidth); epoch stitching is aggregate-only.
+            engine = engine.with_partition_traces();
+        }
+        let mut mt = MtController { subs, map, batch_map: Vec::new() };
+        let out = engine.run_dynamic(&all_cores, &mut mt)?;
+
+        // Map completions back per tenant through the global batch map.
+        let marks: Vec<_> = active.iter().map(|&i| recorders[i].mark()).collect();
+        let mut served = vec![0usize; active.len()];
+        let mut busy = vec![0.0f64; active.len()];
+        let mut bytes = vec![0.0f64; active.len()];
+        for job in &out.jobs {
+            let Some(&(slot, local)) = mt.batch_map.get(job.id as usize) else {
+                return Err(Error::SimInvariant(format!(
+                    "engine job {} has no dispatched tenant batch",
+                    job.id
+                )));
+            };
+            let i = sub_tenant[slot];
+            let batch = &mt.subs[slot].batches()[local as usize];
+            for &r in &batch.requests {
+                recorders[i].record(arrivals[i][r], job.finished_at);
+            }
+            served[slot] += batch.requests.len();
+            busy[slot] += job.finished_at - job.started_at;
+            bytes[slot] += job.bytes;
+        }
+
+        let mut results = Vec::with_capacity(active.len());
+        for (slot, &i) in active.iter().enumerate() {
+            let sub = &mut mt.subs[slot];
+            let dropped = sub.dropped();
+            recorders[i].record_drops(dropped);
+            let carry = sub.drain_remaining();
+            let (gap_carry, last_dispatch) = sub.gap_state();
+            results.push(FoldedWindow {
+                stream_arrived: meta[slot].0,
+                carried_in: meta[slot].1,
+                served: served[slot],
+                dropped,
+                batches: sub.batches().len(),
+                queue_peak: sub.queue_peak(),
+                busy_s: busy[slot],
+                bytes: bytes[slot],
+                carry,
+                gap_carry,
+                last_dispatch,
+                gates: sub.live_gates().to_vec(),
+                latency: recorders[i].stats_since(&marks[slot]),
+            });
+        }
+        let window = EngineWindow {
+            makespan: out.makespan.0,
+            trace: out.trace,
+            total_bytes: out.total_bytes,
+        };
+        Ok((results, window))
+    }
+
+    /// The deterministic re-balance rule: the most backlogged tenant
+    /// (whose backlog did not shrink over the window) receives one core
+    /// block from the least-utilized tenant that ended the window fully
+    /// drained. Returns `None` when no (receiver, donor) pair qualifies
+    /// or the donor cannot spare a block.
+    fn plan_rebalance(
+        &self,
+        cores: &[usize],
+        sets: &[PartitionSet],
+        state: &[TenantState],
+        epoch: usize,
+        at_s: f64,
+    ) -> Option<RebalanceEvent> {
+        let last = |i: usize| state[i].epochs.iter().rev().find(|e| e.index == epoch);
+        let k = self.tenants.len();
+        let mut receiver: Option<(usize, usize)> = None; // (tenant, backlog)
+        let mut donor: Option<(usize, f64)> = None; // (tenant, utilization)
+        for i in 0..k {
+            let e = last(i)?;
+            // "Needy" (growing backlog) and "idle" (drained, cold) are
+            // mutually exclusive, so a tenant never donates to itself.
+            let needy = e.carried_out > 0 && e.carried_out >= e.carried_in;
+            let idle = e.carried_out == 0 && e.utilization < REBALANCE_LOW_UTIL;
+            if needy && receiver.map_or(true, |(_, b)| e.carried_out > b) {
+                receiver = Some((i, e.carried_out));
+            }
+            if idle && donor.map_or(true, |(_, u)| e.utilization < u) {
+                donor = Some((i, e.utilization));
+            }
+        }
+        let (receiver, _) = receiver?;
+        let (donor, _) = donor?;
+        let unit = lcm(sets[donor].partitions, sets[receiver].partitions);
+        // The donor's partitions each keep at least one core.
+        if cores[donor] < unit + sets[donor].partitions {
+            return None;
+        }
+        Some(RebalanceEvent {
+            epoch,
+            at_s,
+            from_tenant: donor,
+            to_tenant: receiver,
+            cores_moved: unit,
+            migrated: state[receiver].carry.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{resnet50, tiny_cnn, vgg16};
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    fn two_tiny(rate: f64) -> Vec<TenantSpec> {
+        vec![
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(rate)),
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(rate)),
+        ]
+    }
+
+    #[test]
+    fn spec_parsing_round_trips_and_diagnoses() {
+        let ts = TenantSpec::parse_list("resnet50:0.6:300, vgg16:0.4:120").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].graph.name, "resnet50");
+        assert!((ts[0].share - 0.6).abs() < 1e-12);
+        assert_eq!(ts[0].arrival, ArrivalProcess::poisson(300.0));
+        assert_eq!(ts[1].graph.name, "vgg16");
+        assert!((ts[1].arrival.mean_rate() - 120.0).abs() < 1e-12);
+        assert!(TenantSpec::parse_list("resnet50:0.6").is_err());
+        assert!(TenantSpec::parse_list("nosuchmodel:0.5:100").is_err());
+        assert!(TenantSpec::parse_list("resnet50:abc:100").is_err());
+        assert!(TenantSpec::parse_list("resnet50:0:100").is_err(), "share must be > 0");
+        assert!(TenantSpec::parse_list("resnet50:0.5:0").is_err(), "rate must be > 0");
+        assert!(TenantSpec::parse_list("").is_err());
+        assert_eq!(TenantMode::from_name("cosched").unwrap(), TenantMode::Coscheduled);
+        assert_eq!(TenantMode::from_name("ts").unwrap(), TenantMode::TimeShared);
+        assert!(TenantMode::from_name("round_robin").is_err());
+        assert_eq!(TenantMode::Coscheduled.name(), "cosched");
+        assert_eq!(TenantMode::TimeShared.name(), "timeshared");
+    }
+
+    #[test]
+    fn cosched_run_conserves_per_tenant_and_reports() {
+        let out = MultiTenantSimulator::new(&knl(), two_tiny(3000.0))
+            .duration(0.02)
+            .seed(9)
+            .trace_samples(64)
+            .run()
+            .unwrap();
+        assert_eq!(out.mode, TenantMode::Coscheduled);
+        assert_eq!(out.tenants.len(), 2);
+        assert!(out.rebalances.is_empty());
+        let agg = &out.aggregate;
+        assert!(agg.requests > 20, "want a real stream, got {}", agg.requests);
+        assert_eq!(agg.served, agg.requests, "unbounded queues drop nothing");
+        assert_eq!(agg.dropped, 0);
+        assert!(agg.makespan_s > 0.0 && agg.throughput_ips > 0.0);
+        assert!(agg.latency.p50_ms > 0.0 && agg.latency.p50_ms <= agg.latency.p99_ms);
+        assert!(agg.total_bytes > 0.0);
+        assert!(agg.bw.mean > 0.0);
+        let mut served = 0;
+        for (i, t) in out.tenants.iter().enumerate() {
+            assert_eq!(t.tag, format!("t{i}"));
+            assert_eq!(t.model, "tiny");
+            assert_eq!(t.cores, 32, "equal shares on 64 cores");
+            let o = &t.outcome;
+            assert_eq!(o.partitions, 1);
+            assert_eq!(o.served + o.dropped, o.requests, "tenant {i} conservation");
+            assert_eq!(o.latency.count, o.served);
+            assert_eq!(o.epochs.len(), 1, "single-window run is one epoch");
+            assert!(o.epochs[0].is_conserving());
+            assert!(o.bw.mean > 0.0, "per-tenant bandwidth split recorded");
+            assert!(o.total_bytes > 0.0);
+            served += o.served;
+        }
+        assert_eq!(served, agg.served, "tenant rows sum to the aggregate");
+        // Per-tenant bytes are the dispatched (declared) job bytes; the
+        // aggregate is the engine's moved-byte meter — equal up to the
+        // engine's own conservation tolerance.
+        let tenant_bytes: f64 = out.tenants.iter().map(|t| t.outcome.total_bytes).sum();
+        assert!(
+            (tenant_bytes - agg.total_bytes).abs() <= 1e-6 * agg.total_bytes.max(1.0),
+            "tenant bytes {tenant_bytes} != machine total {}",
+            agg.total_bytes
+        );
+        // Different seeds give different streams per tenant.
+        assert_ne!(out.tenants[0].outcome.requests, 0);
+        assert_ne!(
+            out.tenants[0].outcome.latency,
+            out.tenants[1].outcome.latency,
+            "tenant streams must be distinct"
+        );
+    }
+
+    #[test]
+    fn run_is_seed_deterministic() {
+        let run = |seed: u64| {
+            MultiTenantSimulator::new(&knl(), two_tiny(4000.0))
+                .duration(0.01)
+                .seed(seed)
+                .trace_samples(32)
+                .run()
+                .unwrap()
+        };
+        let a = run(5);
+        let b = run(5);
+        assert_eq!(a.aggregate.requests, b.aggregate.requests);
+        assert_eq!(a.aggregate.latency, b.aggregate.latency);
+        assert_eq!(a.aggregate.makespan_s, b.aggregate.makespan_s);
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.outcome.latency, y.outcome.latency);
+        }
+        let c = run(6);
+        assert!(
+            a.aggregate.requests != c.aggregate.requests
+                || a.aggregate.latency != c.aggregate.latency
+        );
+    }
+
+    #[test]
+    fn timeshared_quanta_buffer_inactive_streams() {
+        let out = MultiTenantSimulator::new(&knl(), two_tiny(2000.0))
+            .duration(0.02)
+            .seed(9)
+            .mode(TenantMode::TimeShared)
+            .epoch(0.004)
+            .trace_samples(32)
+            .run()
+            .unwrap();
+        assert_eq!(out.mode, TenantMode::TimeShared);
+        let agg = &out.aggregate;
+        assert!(agg.requests > 20);
+        assert_eq!(agg.served, agg.requests);
+        for t in &out.tenants {
+            let o = &t.outcome;
+            assert_eq!(t.cores, 64, "time sharing hands each tenant the whole machine");
+            assert_eq!(o.served + o.dropped, o.requests);
+            assert!(o.epochs.len() > 1, "quantum turns mean several epochs");
+            for (j, e) in o.epochs.iter().enumerate() {
+                assert!(e.is_conserving(), "epoch {j} leaks: {e:?}");
+                if j + 1 < o.epochs.len() {
+                    assert_eq!(e.carried_out, o.epochs[j + 1].carried_in, "backlog chain");
+                } else {
+                    assert_eq!(e.carried_out, 0, "the run must drain");
+                }
+            }
+            // Inactive quanta serve nothing; active quanta do the work.
+            assert!(o.epochs.iter().any(|e| e.served == 0 && e.arrived + e.carried_in > 0));
+            assert!(o.epochs.iter().any(|e| e.served > 0));
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(MultiTenantSimulator::new(&knl(), vec![]).run().is_err());
+        let bad_share = vec![TenantSpec::new(tiny_cnn(), 0.0, ArrivalProcess::poisson(100.0))];
+        assert!(MultiTenantSimulator::new(&knl(), bad_share).run().is_err());
+        let bad_slo = vec![TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(100.0))
+            .slo_ms(f64::NAN)];
+        assert!(MultiTenantSimulator::new(&knl(), bad_slo).run().is_err());
+        // A slice that cannot host the tenant's partitions is surfaced.
+        let bad_split = vec![
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(100.0)).partitions(7),
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(100.0)),
+        ];
+        assert!(matches!(
+            MultiTenantSimulator::new(&knl(), bad_split).run(),
+            Err(Error::InfeasiblePartitioning(_))
+        ));
+        assert!(MultiTenantSimulator::new(&knl(), two_tiny(100.0)).epoch(0.0).run().is_err());
+        assert!(
+            MultiTenantSimulator::new(&knl(), two_tiny(100.0))
+                .stagger_rearm_quantile(1.5)
+                .run()
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn proportional_shares_give_the_heavy_tenant_more_cores() {
+        let vgg = vgg16();
+        let res = resnet50();
+        let tenants = vec![
+            TenantSpec::new(vgg.clone(), vgg.flops_per_image(), ArrivalProcess::poisson(20.0)),
+            TenantSpec::new(res.clone(), res.flops_per_image(), ArrivalProcess::poisson(20.0)),
+        ];
+        let sim = MultiTenantSimulator::new(&knl(), tenants).duration(0.05).trace_samples(32);
+        let split = sim.core_split();
+        assert_eq!(split.iter().sum::<usize>(), 64);
+        assert!(split[0] > split[1], "VGG-16 must get more cores: {split:?}");
+    }
+
+    #[test]
+    fn rebalance_moves_cores_toward_the_backlogged_tenant() {
+        // Tenant 0 floods its slice (far beyond its capacity); tenant 1
+        // idles. Re-balancing must move cores 1 → 0 at least once, and
+        // conservation must hold across every migration.
+        let tenants = vec![
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(2e6)),
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(500.0)),
+        ];
+        let out = MultiTenantSimulator::new(&knl(), tenants)
+            .duration(0.002)
+            .seed(9)
+            .epoch(0.0005)
+            .rebalance(true)
+            .trace_samples(32)
+            .run()
+            .unwrap();
+        assert!(out.aggregate.requests > 500, "want a flood, got {}", out.aggregate.requests);
+        assert_eq!(out.aggregate.served + out.aggregate.dropped, out.aggregate.requests);
+        assert!(
+            !out.rebalances.is_empty(),
+            "a flooded tenant next to an idle one must trigger re-balancing"
+        );
+        for ev in &out.rebalances {
+            assert_eq!(ev.to_tenant, 0, "cores must flow toward the backlog: {ev:?}");
+            assert_eq!(ev.from_tenant, 1);
+            assert!(ev.cores_moved >= 1);
+        }
+        assert!(
+            out.tenants[0].cores > out.tenants[1].cores,
+            "final split must favor the flooded tenant: {} vs {}",
+            out.tenants[0].cores,
+            out.tenants[1].cores
+        );
+        assert_eq!(out.tenants[0].cores + out.tenants[1].cores, 64);
+        for t in &out.tenants {
+            for e in &t.outcome.epochs {
+                assert!(e.is_conserving(), "{e:?}");
+            }
+        }
+        // The whole rebalancing path stays seed-deterministic.
+        let again = MultiTenantSimulator::new(
+            &knl(),
+            vec![
+                TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(2e6)),
+                TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(500.0)),
+            ],
+        )
+        .duration(0.002)
+        .seed(9)
+        .epoch(0.0005)
+        .rebalance(true)
+        .trace_samples(32)
+        .run()
+        .unwrap();
+        assert_eq!(again.rebalances, out.rebalances);
+        assert_eq!(again.aggregate.latency, out.aggregate.latency);
+    }
+
+    #[test]
+    fn bounded_tenant_queues_drop_under_overload() {
+        let tenants = vec![
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(2e6))
+                .queue_cap(8)
+                .slo_ms(50.0),
+            TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(500.0)),
+        ];
+        let out = MultiTenantSimulator::new(&knl(), tenants)
+            .duration(0.001)
+            .seed(9)
+            .trace_samples(32)
+            .run()
+            .unwrap();
+        let flooded = &out.tenants[0].outcome;
+        let calm = &out.tenants[1].outcome;
+        assert!(flooded.dropped > 0, "cap 8 under a flood must shed");
+        assert!(flooded.queue_peak <= 8);
+        assert_eq!(calm.dropped, 0, "the calm tenant keeps its open loop");
+        assert_eq!(out.aggregate.dropped, flooded.dropped);
+        assert!(out.aggregate.goodput_ips <= out.aggregate.throughput_ips + 1e-9);
+    }
+}

@@ -52,6 +52,54 @@ impl PartitionSet {
         if enforce_capacity {
             plan.check_capacity(accel, graph)?;
         }
+        Self::from_plan(accel, graph, plan, max_batch_cap)
+    }
+
+    /// Build a topology over a *slice* of the machine — `slice_cores` of
+    /// the `accel`'s cores, divided into `n` partitions, keeping the
+    /// paper's one-image-per-core invariant within the slice. This is the
+    /// multi-tenant building block: each tenant owns one slice. The DRAM
+    /// check covers the slice's own footprint only (cross-tenant DRAM
+    /// pressure is checked per tenant, not jointly).
+    pub fn build_slice(
+        accel: &AcceleratorConfig,
+        graph: &Graph,
+        slice_cores: usize,
+        n: usize,
+        max_batch_cap: usize,
+        enforce_capacity: bool,
+    ) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::InfeasiblePartitioning("0 partitions in tenant slice".into()));
+        }
+        if slice_cores == 0 || slice_cores > accel.cores {
+            return Err(Error::InfeasiblePartitioning(format!(
+                "tenant slice of {slice_cores} cores on a {}-core machine",
+                accel.cores
+            )));
+        }
+        if slice_cores % n != 0 {
+            return Err(Error::InfeasiblePartitioning(format!(
+                "tenant slice of {slice_cores} cores not divisible into {n} partitions"
+            )));
+        }
+        let plan = PartitionPlan {
+            partitions: n,
+            cores_per_partition: slice_cores / n,
+            batch_per_partition: slice_cores / n,
+        };
+        if enforce_capacity {
+            crate::sim::DramModel::new(accel).check(graph, n, slice_cores)?;
+        }
+        Self::from_plan(accel, graph, plan, max_batch_cap)
+    }
+
+    fn from_plan(
+        accel: &AcceleratorConfig,
+        graph: &Graph,
+        plan: PartitionPlan,
+        max_batch_cap: usize,
+    ) -> Result<Self> {
         let cap = plan.batch_per_partition;
         let max_batch = if max_batch_cap == 0 { cap } else { max_batch_cap.clamp(1, cap) };
         // One compiled program per batch size, so under-filled batches
@@ -65,7 +113,7 @@ impl PartitionSet {
         let full = PhaseCompiler::new(accel, plan.cores_per_partition, max_batch);
         let batch_time_s = full.roofline_time(&programs[max_batch - 1]).0;
         Ok(Self {
-            partitions: n,
+            partitions: plan.partitions,
             cores_per_partition: plan.cores_per_partition,
             max_batch,
             batch_time_s,
@@ -83,6 +131,26 @@ impl PartitionSet {
     pub fn cores(&self) -> Vec<usize> {
         vec![self.cores_per_partition; self.partitions]
     }
+}
+
+/// Hard cap on serving epochs per run — a stalled-loop backstop shared
+/// by the adaptive and multi-tenant epoch loops, far above anything a
+/// real configuration produces.
+pub(super) const MAX_EPOCHS: usize = 1_000_000;
+
+/// The next epoch boundary strictly after `start`, on the `epoch_s`
+/// grid. A degenerate epoch length below the float resolution of
+/// `start` cannot advance by addition — fall back to the next
+/// representable instant so every epoch loop always makes progress.
+pub(super) fn next_epoch_horizon(start: f64, epoch_s: f64) -> f64 {
+    let mut h = (start / epoch_s).floor() * epoch_s + epoch_s;
+    if h <= start {
+        h = start + epoch_s;
+    }
+    if h <= start {
+        h = f64::from_bits(start.to_bits() + 1);
+    }
+    h
 }
 
 /// Knobs of the adaptive (epoch-based) serving loop.
@@ -225,6 +293,36 @@ mod tests {
     }
 
     #[test]
+    fn partition_set_builds_over_a_machine_slice() {
+        // A 24-core tenant slice of the 64-core machine, 2 partitions:
+        // 12 cores and a 12-image full batch each.
+        let ps = PartitionSet::build_slice(&knl(), &tiny_cnn(), 24, 2, 0, true).unwrap();
+        assert_eq!(ps.partitions, 2);
+        assert_eq!(ps.cores_per_partition, 12);
+        assert_eq!(ps.max_batch, 12);
+        assert_eq!(ps.programs().len(), 12);
+        assert_eq!(ps.cores(), vec![12; 2]);
+        assert!(ps.batch_time_s > 0.0);
+        // The whole machine as a slice reproduces the classic build.
+        let whole = PartitionSet::build_slice(&knl(), &tiny_cnn(), 64, 4, 0, true).unwrap();
+        let classic = PartitionSet::build(&knl(), &tiny_cnn(), 4, 0, true).unwrap();
+        assert_eq!(whole.cores_per_partition, classic.cores_per_partition);
+        assert_eq!(whole.max_batch, classic.max_batch);
+        assert_eq!(whole.batch_time_s, classic.batch_time_s);
+        // Slice validation: zero, oversubscribed, or non-divisible slices.
+        assert!(PartitionSet::build_slice(&knl(), &tiny_cnn(), 0, 1, 0, true).is_err());
+        assert!(PartitionSet::build_slice(&knl(), &tiny_cnn(), 65, 1, 0, true).is_err());
+        assert!(PartitionSet::build_slice(&knl(), &tiny_cnn(), 10, 3, 0, true).is_err());
+        assert!(PartitionSet::build_slice(&knl(), &tiny_cnn(), 24, 0, 0, true).is_err());
+        // The slice DRAM check still bites (VGG-16 spread 16 ways).
+        assert!(matches!(
+            PartitionSet::build_slice(&knl(), &vgg16(), 64, 16, 0, true),
+            Err(Error::InfeasiblePartitioning(_))
+        ));
+        assert!(PartitionSet::build_slice(&knl(), &vgg16(), 64, 16, 0, false).is_ok());
+    }
+
+    #[test]
     fn partition_set_surfaces_infeasibility() {
         // Non-divisor partition count.
         assert!(matches!(
@@ -238,6 +336,19 @@ mod tests {
         ));
         // …unless the capacity check is waived.
         assert!(PartitionSet::build(&knl(), &vgg16(), 16, 0, false).is_ok());
+    }
+
+    #[test]
+    fn epoch_horizon_advances_strictly_on_the_grid() {
+        // On-grid and mid-epoch starts land on the next boundary.
+        assert!((next_epoch_horizon(0.0, 0.05) - 0.05).abs() < 1e-15);
+        assert!((next_epoch_horizon(0.07, 0.05) - 0.10).abs() < 1e-15);
+        // A start exactly on a boundary advances a full epoch.
+        assert!((next_epoch_horizon(0.10, 0.05) - 0.15).abs() < 1e-12);
+        // Degenerate epoch lengths below float resolution still advance.
+        let start = 1e12;
+        let h = next_epoch_horizon(start, 1e-9);
+        assert!(h > start, "horizon must move strictly forward");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::model::Graph;
 use crate::reuse::PhaseCompiler;
 use crate::sim::{SimEngine, Workload};
 use crate::util::stats::Summary;
+use std::cmp::Ordering;
 
 /// One tenant: a model plus the cores it gets.
 #[derive(Debug, Clone)]
@@ -51,27 +52,60 @@ pub struct MixedReport {
 }
 
 /// Split `total_cores` across models proportionally to per-image FLOPs
-/// (rounded to the nearest divisor-friendly share, minimum 1). Use this
-/// to size tenant core shares so no tenant straggles.
+/// (minimum 1 per tenant). Use this to size tenant core shares so no
+/// tenant straggles.
 pub fn proportional_cores(total_cores: usize, graphs: &[&Graph]) -> Vec<usize> {
-    assert!(!graphs.is_empty());
     let work: Vec<f64> = graphs.iter().map(|g| g.flops_per_image()).collect();
-    let total_work: f64 = work.iter().sum();
-    let mut shares: Vec<usize> = work
-        .iter()
-        .map(|w| ((w / total_work) * total_cores as f64).round().max(1.0) as usize)
-        .collect();
-    // Fix rounding drift by adjusting the largest share.
-    let diff = total_cores as isize - shares.iter().sum::<usize>() as isize;
-    if diff != 0 {
-        let idx = shares
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, &s)| s)
-            .map(|(i, _)| i)
-            .unwrap();
-        shares[idx] = (shares[idx] as isize + diff).max(1) as usize;
+    weighted_cores(total_cores, &work)
+}
+
+/// Split `total_cores` proportionally to arbitrary non-negative weights:
+/// every share gets at least 1 core, and `sum(shares) == total_cores`
+/// exactly (largest-remainder apportionment — rounding drift is
+/// redistributed across *all* shares, never silently swallowed by a
+/// single clamped adjustment). All-zero weights degrade to an equal
+/// split. Panics if `weights` is empty, longer than `total_cores`
+/// (the minimum-1 floor would be unsatisfiable), or non-finite.
+pub fn weighted_cores(total_cores: usize, weights: &[f64]) -> Vec<usize> {
+    let k = weights.len();
+    assert!(k > 0, "weighted_cores: no weights");
+    assert!(
+        k <= total_cores,
+        "weighted_cores: {k} shares cannot each get >= 1 of {total_cores} cores"
+    );
+    assert!(
+        weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+        "weighted_cores: weights must be finite and >= 0: {weights:?}"
+    );
+    let total_w: f64 = weights.iter().sum();
+    let fracs: Vec<f64> = if total_w > 0.0 {
+        weights.iter().map(|w| w / total_w).collect()
+    } else {
+        vec![1.0 / k as f64; k]
+    };
+    // The minimum-1 floor first; the spare cores are apportioned by
+    // weight with floor quotas plus largest-remainder top-ups.
+    let spare = total_cores - k;
+    let mut shares = vec![1usize; k];
+    let mut remainders: Vec<(f64, usize)> = Vec::with_capacity(k);
+    let mut used = 0usize;
+    for (i, f) in fracs.iter().enumerate() {
+        let quota = spare as f64 * f;
+        let floor = quota.floor() as usize;
+        shares[i] += floor;
+        used += floor;
+        remainders.push((quota - floor as f64, i));
     }
+    // Ties break toward the lower index, so the split is deterministic.
+    remainders.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(Ordering::Equal).then(a.1.cmp(&b.1)));
+    for &(_, i) in remainders.iter().take(spare - used) {
+        shares[i] += 1;
+    }
+    assert_eq!(
+        shares.iter().sum::<usize>(),
+        total_cores,
+        "weighted_cores drift: {shares:?} from {weights:?}"
+    );
     shares
 }
 
@@ -210,6 +244,68 @@ mod tests {
             "proportional split should roughly break even or win: {}",
             r.speedup
         );
+    }
+
+    #[test]
+    fn weighted_cores_redistributes_drift_instead_of_swallowing_it() {
+        // The old drift fix adjusted only the single largest share and
+        // clamped it at 1, silently losing cores: six near-equal-weight
+        // tenants on six cores used to sum to 8, not 6.
+        let shares = weighted_cores(6, &[1.0, 1.0, 1.0, 1.0, 20.0, 20.0]);
+        assert_eq!(shares.iter().sum::<usize>(), 6, "{shares:?}");
+        assert!(shares.iter().all(|&s| s >= 1), "{shares:?}");
+        // With no spare cores past the minimum-1 floor, everyone gets 1.
+        assert_eq!(shares, vec![1; 6]);
+        // Heavier weights get the spare cores.
+        let shares = weighted_cores(8, &[1.0, 1.0, 20.0, 20.0]);
+        assert_eq!(shares.iter().sum::<usize>(), 8);
+        assert!(shares[2] > shares[0] && shares[3] > shares[1], "{shares:?}");
+        // All-zero weights degrade to an equal split.
+        assert_eq!(weighted_cores(9, &[0.0, 0.0, 0.0]), vec![3, 3, 3]);
+        // Remainder ties break toward the lower index, deterministically.
+        assert_eq!(weighted_cores(3, &[1.0, 1.0]), vec![2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot each get")]
+    fn weighted_cores_rejects_more_shares_than_cores() {
+        weighted_cores(3, &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_weighted_cores_sum_and_floor_hold_for_random_work() {
+        // Property: for random weight vectors the shares always sum to
+        // exactly the machine and never starve a tenant below 1 core.
+        use crate::util::rng::Xoshiro256StarStar;
+        let mut rng = Xoshiro256StarStar::seed_from_u64(2024);
+        for case in 0..200 {
+            let k = 1 + (rng.next_u64() % 8) as usize;
+            let total = k + (rng.next_u64() % 64) as usize;
+            let weights: Vec<f64> = (0..k)
+                .map(|_| {
+                    // Mix magnitudes from ~1e-3 to ~1e3, with occasional
+                    // exact zeros (a tenant with no declared work).
+                    let r = rng.next_f64();
+                    if r < 0.1 {
+                        0.0
+                    } else {
+                        1e-3 * (1e6f64).powf(rng.next_f64())
+                    }
+                })
+                .collect();
+            let shares = weighted_cores(total, &weights);
+            assert_eq!(
+                shares.iter().sum::<usize>(),
+                total,
+                "case {case}: {weights:?} on {total} -> {shares:?}"
+            );
+            assert!(
+                shares.iter().all(|&s| s >= 1),
+                "case {case}: starved share in {shares:?} from {weights:?}"
+            );
+            // Determinism: the same inputs reproduce the same split.
+            assert_eq!(shares, weighted_cores(total, &weights), "case {case}");
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub use adaptive::{
 };
 pub use analysis::ShapingAnalysis;
 pub use experiment::{PartitionExperiment, ShapingReport};
-pub use mixed::{proportional_cores, MixedReport, MixedWorkloadExperiment, Tenant};
+pub use mixed::{proportional_cores, weighted_cores, MixedReport, MixedWorkloadExperiment, Tenant};
 pub use partitioner::PartitionPlan;
 pub use scheduler::{build_workloads, StaggerPolicy};
 pub use tradeoff::TradeoffModel;

@@ -4,6 +4,7 @@
 
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
+use crate::serve::TenantSpec;
 use crate::shaping::StaggerPolicy;
 use crate::util::units::BytesPerS;
 
@@ -36,6 +37,12 @@ pub struct Scenario {
     /// Serve rows: latency deadline in ms (0 = none). Always 0 offline.
     pub slo_ms: f64,
     pub steady_batches: usize,
+    /// Mixed-tenant rows: the `model:share:rate,...` tenant spec. `None`
+    /// is the classic single-model scenario; `Some` rows run the
+    /// co-scheduled multi-tenant simulator against a time-shared
+    /// baseline at identical offered load (`model` is `"mixed"`,
+    /// `partitions` the tenant count).
+    pub tenants: Option<String>,
 }
 
 impl Scenario {
@@ -46,7 +53,10 @@ impl Scenario {
 
     /// Human-readable tag used in reports and logs.
     pub fn label(&self) -> String {
-        let mut s = format!("{}@{}p/bw{:.2}x", self.model, self.partitions, self.bandwidth_scale);
+        let mut s = match &self.tenants {
+            Some(spec) => format!("mixed[{spec}]/bw{:.2}x", self.bandwidth_scale),
+            None => format!("{}@{}p/bw{:.2}x", self.model, self.partitions, self.bandwidth_scale),
+        };
         if self.stagger != StaggerPolicy::UniformPhase {
             s.push_str(&format!("/{}", self.stagger.name()));
         }
@@ -100,6 +110,10 @@ pub struct SweepGrid {
     pub serve_slo_ms: Vec<f64>,
     /// Batch hold timeout for serve scenarios, ms (0 = dispatch on idle).
     pub serve_batch_timeout_ms: f64,
+    /// Mixed-tenant scenario axis: each entry is a `model:share:rate,...`
+    /// tenant spec run once per bandwidth scale (co-scheduled vs its own
+    /// time-shared baseline). Empty by default.
+    pub mixed_tenants: Vec<String>,
     pub trace_samples: usize,
 }
 
@@ -118,6 +132,7 @@ impl SweepGrid {
             serve_queue_caps: vec![0],
             serve_slo_ms: vec![0.0],
             serve_batch_timeout_ms: 0.0,
+            mixed_tenants: Vec::new(),
             trace_samples: 400,
         }
     }
@@ -195,6 +210,14 @@ impl SweepGrid {
         self
     }
 
+    /// The mixed-tenant axis: each `model:share:rate,...` spec adds one
+    /// co-scheduled multi-tenant scenario per bandwidth scale, compared
+    /// against its own time-shared baseline at identical offered load.
+    pub fn mixed_tenants<S: Into<String>>(mut self, specs: Vec<S>) -> Self {
+        self.mixed_tenants = specs.into_iter().map(Into::into).collect();
+        self
+    }
+
     pub fn trace_samples(mut self, samples: usize) -> Self {
         self.trace_samples = samples;
         self
@@ -213,6 +236,7 @@ impl SweepGrid {
             * self.stagger_policies.len()
             * per_rate
             * self.partitions.len()
+            + self.mixed_tenants.len() * self.bandwidth_scales.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -287,6 +311,9 @@ impl SweepGrid {
         if self.trace_samples == 0 {
             return Err(Error::InvalidConfig("trace_samples must be > 0".into()));
         }
+        for spec in &self.mixed_tenants {
+            TenantSpec::parse_list(spec)?;
+        }
         Ok(())
     }
 
@@ -320,6 +347,7 @@ impl SweepGrid {
                                     queue_cap: cap,
                                     slo_ms: slo,
                                     steady_batches: self.steady_batches,
+                                    tenants: None,
                                 });
                                 id += 1;
                             }
@@ -328,8 +356,44 @@ impl SweepGrid {
                 }
             }
         }
+        // Mixed-tenant rows ride at the end of the grid, one per
+        // (bandwidth scale, tenant spec). `partitions` is the tenant
+        // count; `arrival_rate` the summed offered rate, so serve-row
+        // handling (labels, latency columns) applies.
+        for &scale in &self.bandwidth_scales {
+            for spec in &self.mixed_tenants {
+                let (count, rate) = mixed_axis_info(spec);
+                out.push(Scenario {
+                    id,
+                    model: "mixed".into(),
+                    partitions: count.max(1),
+                    bandwidth_scale: scale,
+                    stagger: StaggerPolicy::UniformPhase,
+                    arrival_rate: rate,
+                    queue_cap: 0,
+                    slo_ms: 0.0,
+                    steady_batches: self.steady_batches,
+                    tenants: Some(spec.clone()),
+                });
+                id += 1;
+            }
+        }
         out
     }
+}
+
+/// Tenant count and summed offered rate of a `model:share:rate,...`
+/// spec, parsed leniently (the strict check lives in `validate`).
+fn mixed_axis_info(spec: &str) -> (usize, f64) {
+    let mut count = 0usize;
+    let mut rate = 0.0f64;
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        count += 1;
+        if let Some(r) = part.split(':').nth(2).and_then(|s| s.trim().parse::<f64>().ok()) {
+            rate += r;
+        }
+    }
+    (count, rate)
 }
 
 #[cfg(test)]
@@ -430,12 +494,45 @@ mod tests {
             queue_cap: 0,
             slo_ms: 0.0,
             steady_batches: 4,
+            tenants: None,
         };
         let base = knl();
         let a = s.accel(&base);
         assert!((a.mem_bw.0 - base.mem_bw.0 * 0.5).abs() < 1e-6);
         assert_eq!(a.cores, base.cores);
         assert!(s.label().contains("resnet50@2p"));
+    }
+
+    #[test]
+    fn mixed_tenant_axis_appends_one_row_per_bw_scale() {
+        let g = SweepGrid::new(&knl())
+            .models(vec!["tiny"])
+            .partitions(vec![1, 2])
+            .bandwidth_scales(vec![1.0, 0.75])
+            .mixed_tenants(vec!["resnet50:0.6:300,vgg16:0.4:120"]);
+        // 1 model × 2 bw × 2 n = 4 classic rows + 2 mixed rows.
+        assert_eq!(g.len(), 6);
+        g.validate().unwrap();
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), 6);
+        for (i, s) in sc.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+        assert!(sc[..4].iter().all(|s| s.tenants.is_none()));
+        let mixed = &sc[4];
+        assert_eq!(mixed.model, "mixed");
+        assert_eq!(mixed.partitions, 2, "tenant count");
+        assert!((mixed.arrival_rate - 420.0).abs() < 1e-9, "summed offered rate");
+        assert!(mixed.is_serve());
+        assert_eq!(mixed.tenants.as_deref(), Some("resnet50:0.6:300,vgg16:0.4:120"));
+        assert!(mixed.label().starts_with("mixed[resnet50:0.6:300"), "{}", mixed.label());
+        assert!(mixed.label().contains("/λ420"));
+        assert_eq!(sc[5].bandwidth_scale, 0.75);
+        // A malformed spec is a validation error, not a runtime panic.
+        let bad = SweepGrid::new(&knl()).mixed_tenants(vec!["resnet50:0.6"]);
+        assert!(bad.validate().is_err());
+        let bad = SweepGrid::new(&knl()).mixed_tenants(vec!["nosuchmodel:1:100"]);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -280,6 +280,7 @@ impl SweepReport {
             "queue_cap",
             "slo_ms",
             "steady_batches",
+            "tenants",
             "status",
             "relative_performance",
             "std_reduction",
@@ -311,6 +312,9 @@ impl SweepReport {
                 s.queue_cap.to_string(),
                 f(s.slo_ms),
                 s.steady_batches.to_string(),
+                // Tenant specs are comma-separated; the CSV cell swaps in
+                // ';' so the row stays machine-parseable without quoting.
+                s.tenants.clone().unwrap_or_default().replace(',', ";"),
             ];
             let tail = match &o.status {
                 ScenarioStatus::Completed(m) => vec![
@@ -409,6 +413,7 @@ mod tests {
                 queue_cap: 0,
                 slo_ms: 0.0,
                 steady_batches: 4,
+                tenants: None,
             },
             status: match rel {
                 Some(r) => ScenarioStatus::Completed(metrics(r)),

@@ -23,7 +23,9 @@ use super::grid::{Scenario, SweepGrid};
 use super::report::{ScenarioOutcome, ScenarioStatus, SweepMetrics, SweepReport};
 use crate::error::{Error, Result};
 use crate::model::Graph;
-use crate::serve::{ArrivalProcess, ServeOutcome, ServeSimulator};
+use crate::serve::{
+    ArrivalProcess, MultiTenantSimulator, ServeOutcome, ServeSimulator, TenantMode, TenantSpec,
+};
 use crate::shaping::{PartitionExperiment, ShapingAnalysis, StaggerPolicy};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -129,6 +131,24 @@ impl SweepRunner {
             .trace_samples(self.grid.trace_samples)
     }
 
+    /// The multi-tenant simulator for a mixed scenario — co-scheduled
+    /// for the grid row, time-shared for its baseline.
+    fn mixed_sim(
+        &self,
+        scenario: &Scenario,
+        spec: &str,
+        mode: TenantMode,
+    ) -> Result<MultiTenantSimulator> {
+        let specs = TenantSpec::parse_list(spec)?;
+        Ok(MultiTenantSimulator::new(&scenario.accel(&self.grid.accel), specs)
+            .duration(self.grid.serve_duration_s)
+            .seed(self.grid.serve_seed)
+            .stagger(scenario.stagger)
+            .batch_timeout_ms(self.grid.serve_batch_timeout_ms)
+            .mode(mode)
+            .trace_samples(self.grid.trace_samples))
+    }
+
     /// Execute the full grid and aggregate the report.
     pub fn run(&self) -> Result<SweepReport> {
         self.grid.validate()?;
@@ -145,18 +165,21 @@ impl SweepRunner {
         // (model, bandwidth scale, arrival rate, queue cap, SLO) — the
         // overload knobs shape the baseline run too, so each cap × SLO
         // sub-grid point compares against its own 1-partition machine.
-        type Key = (String, u64, u64, usize, u64);
+        type Key = (String, u64, u64, usize, u64, String);
         // Dedup by bit pattern — the same key the baseline map uses
-        // (f64 == would merge 0.0 and -0.0 here but not there).
+        // (f64 == would merge 0.0 and -0.0 here but not there). Mixed
+        // rows key on their tenant spec as well.
         let mut seen: BTreeSet<Key> = BTreeSet::new();
-        let mut keys: Vec<(String, f64, f64, usize, f64)> = Vec::new();
+        let mut keys: Vec<(String, f64, f64, usize, f64, String)> = Vec::new();
         for sc in self.grid.scenarios() {
+            let tenants = sc.tenants.clone().unwrap_or_default();
             let key = (
                 sc.model.clone(),
                 sc.bandwidth_scale.to_bits(),
                 sc.arrival_rate.to_bits(),
                 sc.queue_cap,
                 sc.slo_ms.to_bits(),
+                tenants.clone(),
             );
             if seen.insert(key) {
                 keys.push((
@@ -165,32 +188,42 @@ impl SweepRunner {
                     sc.arrival_rate,
                     sc.queue_cap,
                     sc.slo_ms,
+                    tenants,
                 ));
             }
         }
-        let baselines_vec = parallel_map(&keys, threads, |(model, scale, rate, cap, slo)| {
-            let probe = Scenario {
-                id: 0,
-                model: model.clone(),
-                partitions: 1,
-                bandwidth_scale: *scale,
-                stagger: StaggerPolicy::None,
-                arrival_rate: *rate,
-                queue_cap: *cap,
-                slo_ms: *slo,
-                steady_batches: self.grid.steady_batches,
-            };
-            if probe.is_serve() {
-                let out = self.serve_sim(&probe, &graphs[model]).run()?;
-                Ok(Baseline::Serve(Box::new(out)))
-            } else {
-                Ok(Baseline::Offline(self.experiment(&probe, &graphs[model]).run_baseline()?))
-            }
-        })?;
+        let baselines_vec =
+            parallel_map(&keys, threads, |(model, scale, rate, cap, slo, tenants)| {
+                let probe = Scenario {
+                    id: 0,
+                    model: model.clone(),
+                    partitions: 1,
+                    bandwidth_scale: *scale,
+                    stagger: StaggerPolicy::None,
+                    arrival_rate: *rate,
+                    queue_cap: *cap,
+                    slo_ms: *slo,
+                    steady_batches: self.grid.steady_batches,
+                    tenants: (!tenants.is_empty()).then(|| tenants.clone()),
+                };
+                if !tenants.is_empty() {
+                    // The mixed row's reference point: the same tenants
+                    // time-sharing the whole machine.
+                    let out = self.mixed_sim(&probe, tenants, TenantMode::TimeShared)?.run()?;
+                    Ok(Baseline::Serve(Box::new(out.aggregate)))
+                } else if probe.is_serve() {
+                    let out = self.serve_sim(&probe, &graphs[model]).run()?;
+                    Ok(Baseline::Serve(Box::new(out)))
+                } else {
+                    Ok(Baseline::Offline(self.experiment(&probe, &graphs[model]).run_baseline()?))
+                }
+            })?;
         let baselines: BTreeMap<Key, Baseline> = keys
             .iter()
             .zip(baselines_vec)
-            .map(|((m, s, r, c, d), b)| ((m.clone(), s.to_bits(), r.to_bits(), *c, d.to_bits()), b))
+            .map(|((m, s, r, c, d, t), b)| {
+                ((m.clone(), s.to_bits(), r.to_bits(), *c, d.to_bits(), t.clone()), b)
+            })
             .collect();
 
         // Phase 2: every scenario against its shared baseline.
@@ -202,7 +235,23 @@ impl SweepRunner {
                 sc.arrival_rate.to_bits(),
                 sc.queue_cap,
                 sc.slo_ms.to_bits(),
+                sc.tenants.clone().unwrap_or_default(),
             );
+            // Mixed rows: co-scheduled tenants vs the time-shared
+            // baseline at identical offered load.
+            if let Some(spec) = &sc.tenants {
+                let Baseline::Serve(base) = &baselines[&key] else {
+                    return Err(Error::SimInvariant("mixed baseline kind mismatch".into()));
+                };
+                return match self.mixed_sim(sc, spec, TenantMode::Coscheduled)?.run() {
+                    Ok(out) => {
+                        let m = SweepMetrics::from_serve(&out.aggregate, base);
+                        Ok(ScenarioStatus::Completed(m))
+                    }
+                    Err(Error::InfeasiblePartitioning(why)) => Ok(ScenarioStatus::Infeasible(why)),
+                    Err(e) => Err(e),
+                };
+            }
             // A 1-partition scenario IS its baseline only when the stagger
             // is a no-op at n = 1 (None/UniformPhase both degenerate to no
             // offset; RandomDelay still delays the single partition).
@@ -304,6 +353,54 @@ mod tests {
         assert!((base.relative_performance - 1.0).abs() < 1e-12);
         assert_eq!(base.smoothness_cov, base.baseline_cov);
         assert_eq!(base.p99_ms, None);
+    }
+
+    #[test]
+    fn mixed_tenant_rows_run_against_the_timeshared_baseline() {
+        let grid = SweepGrid::new(&AcceleratorConfig::knl_7210())
+            .models(vec!["tiny"])
+            .partitions(vec![1])
+            .bandwidth_scales(vec![1.0])
+            .serve_duration(0.01)
+            .steady_batches(2)
+            .trace_samples(32)
+            .mixed_tenants(vec!["tiny:1:2000,tiny:1:2000"]);
+        let report = SweepRunner::new(grid).threads(2).run().unwrap();
+        assert_eq!(report.outcomes.len(), 2);
+        assert_eq!(report.completed_count(), 2);
+        let mixed = report
+            .outcomes
+            .iter()
+            .find(|o| o.scenario.tenants.is_some())
+            .expect("mixed row present");
+        assert_eq!(mixed.scenario.model, "mixed");
+        assert!(mixed.scenario.is_serve());
+        let m = mixed.metrics().unwrap();
+        // Co-scheduled vs time-shared at identical offered load: the
+        // relative-performance column is that comparison, and the serve
+        // latency columns flow through.
+        assert!(m.relative_performance > 0.0);
+        assert!(m.p99_ms.is_some());
+        assert!(m.goodput_ips.is_some());
+        let csv = report.to_csv().to_string();
+        assert!(csv.contains(",tenants,"), "tenants column in header");
+        assert!(csv.contains("tiny:1:2000;tiny:1:2000"), "spec cell is ';'-joined");
+        // Byte-identical across thread counts, mixed rows included.
+        let again = SweepRunner::new(
+            SweepGrid::new(&AcceleratorConfig::knl_7210())
+                .models(vec!["tiny"])
+                .partitions(vec![1])
+                .bandwidth_scales(vec![1.0])
+                .serve_duration(0.01)
+                .steady_batches(2)
+                .trace_samples(32)
+                .mixed_tenants(vec!["tiny:1:2000,tiny:1:2000"]),
+        )
+        .threads(1)
+        .run()
+        .unwrap();
+        assert_eq!(again.render(), report.render());
+        assert_eq!(again.to_csv().to_string(), csv);
     }
 
     #[test]

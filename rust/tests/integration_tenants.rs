@@ -1,0 +1,167 @@
+//! Multi-tenant serving integration: the headline claim — balanced
+//! co-scheduled tenants beat time-sharing on aggregate tail latency at
+//! identical offered load — plus per-tenant conservation, seed
+//! determinism and the byte-identical-reports bar for tenant rows.
+
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::{resnet50, tiny_cnn, vgg16};
+use trafficshape::serve::{
+    ArrivalProcess, MultiTenantSimulator, ServeExperiment, TenantMode, TenantSpec,
+};
+
+fn knl() -> AcceleratorConfig {
+    AcceleratorConfig::knl_7210()
+}
+
+fn balanced_pair(rate: f64) -> Vec<TenantSpec> {
+    vec![
+        TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(rate)),
+        TenantSpec::new(tiny_cnn(), 1.0, ArrivalProcess::poisson(rate)),
+    ]
+}
+
+/// ResNet-50 + VGG-16 with FLOP-proportional core shares — the
+/// imbalanced-work pair whose equal-split straggle the offline mixed
+/// experiment documented; proportional shares are the fix.
+fn heterogeneous_pair() -> Vec<TenantSpec> {
+    let vgg = vgg16();
+    let res = resnet50();
+    vec![
+        TenantSpec::new(vgg.clone(), vgg.flops_per_image(), ArrivalProcess::poisson(60.0)),
+        TenantSpec::new(res.clone(), res.flops_per_image(), ArrivalProcess::poisson(60.0)),
+    ]
+}
+
+#[test]
+fn balanced_cosched_beats_time_sharing_on_aggregate_p99() {
+    // The headline: at identical offered load (same tenants, same seeded
+    // streams), spatial sharing serves every request on its own slice
+    // immediately, while temporal sharing makes a request arriving in a
+    // foreign quantum wait out the turn — so co-scheduling must win the
+    // aggregate tail outright.
+    let run = |mode: TenantMode| {
+        MultiTenantSimulator::new(&knl(), balanced_pair(2000.0))
+            .duration(0.02)
+            .seed(7)
+            .mode(mode)
+            .epoch(0.002)
+            .trace_samples(64)
+            .run()
+            .unwrap()
+    };
+    let co = run(TenantMode::Coscheduled);
+    let ts = run(TenantMode::TimeShared);
+
+    // Identical offered load: the same seeded streams feed both modes.
+    assert_eq!(co.aggregate.requests, ts.aggregate.requests);
+    assert!(co.aggregate.requests > 40, "want a real stream, got {}", co.aggregate.requests);
+    for out in [&co, &ts] {
+        assert_eq!(out.aggregate.served, out.aggregate.requests, "unbounded queues drain");
+        assert_eq!(out.aggregate.dropped, 0);
+        for t in &out.tenants {
+            assert_eq!(t.outcome.served + t.outcome.dropped, t.outcome.requests);
+            for e in &t.outcome.epochs {
+                assert!(e.is_conserving(), "{e:?}");
+            }
+        }
+    }
+    assert!(
+        co.aggregate.latency.p99_ms < ts.aggregate.latency.p99_ms,
+        "co-scheduled aggregate p99 {:.2} ms must beat time-shared {:.2} ms",
+        co.aggregate.latency.p99_ms,
+        ts.aggregate.latency.p99_ms
+    );
+    // Goodput == throughput here (no SLO), and neither mode loses work,
+    // so the latency win is the whole story at this load.
+    assert!(co.aggregate.goodput_ips > 0.0);
+}
+
+#[test]
+fn heterogeneous_pair_conserves_and_is_seed_deterministic() {
+    let run = |seed: u64| {
+        MultiTenantSimulator::new(&knl(), heterogeneous_pair())
+            .duration(0.2)
+            .seed(seed)
+            .trace_samples(64)
+            .run()
+            .unwrap()
+    };
+    let a = run(11);
+    let b = run(11);
+    assert_eq!(a.aggregate.requests, b.aggregate.requests);
+    assert_eq!(a.aggregate.latency, b.aggregate.latency);
+    assert_eq!(a.aggregate.makespan_s, b.aggregate.makespan_s);
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.outcome.latency, y.outcome.latency);
+        assert_eq!(x.cores, y.cores);
+    }
+    let c = run(12);
+    assert!(
+        a.aggregate.requests != c.aggregate.requests || a.aggregate.latency != c.aggregate.latency,
+        "seed must matter"
+    );
+    // Proportional shares: the FLOP-heavy VGG tenant gets the bigger
+    // slice, and both tenants' streams are fully accounted for.
+    assert!(a.tenants[0].cores > a.tenants[1].cores, "VGG must out-size ResNet");
+    assert_eq!(a.tenants[0].cores + a.tenants[1].cores, 64);
+    assert!(a.aggregate.requests > 5, "want a real stream, got {}", a.aggregate.requests);
+    for t in &a.tenants {
+        assert_eq!(t.outcome.served + t.outcome.dropped, t.outcome.requests);
+        if t.outcome.served > 0 {
+            assert!(t.outcome.latency.p99_ms > 0.0, "tenant {} lost its samples", t.tag);
+        }
+    }
+}
+
+#[test]
+fn tenant_reports_are_byte_identical_across_thread_counts() {
+    // The determinism bar extends to multi-tenant reports: the seeded
+    // ResNet-50 + VGG-16 pair must render byte-identical tables, CSV and
+    // JSON for --threads 1 and N, with per-tenant and aggregate rows in
+    // both sharing modes.
+    let run = |threads: usize| {
+        ServeExperiment::new(&knl(), &resnet50())
+            .tenants(heterogeneous_pair())
+            .duration(0.2)
+            .seed(42)
+            .trace_samples(64)
+            .tenant_epoch_ms(10.0)
+            .threads(threads)
+            .run()
+            .unwrap()
+    };
+    let serial = run(1);
+    for threads in [2, 4] {
+        let parallel = run(threads);
+        assert_eq!(serial.render(), parallel.render(), "render differs at {threads} threads");
+        assert_eq!(
+            serial.to_csv().to_string(),
+            parallel.to_csv().to_string(),
+            "csv differs at {threads} threads"
+        );
+        assert_eq!(
+            serial.summary_json().to_string_pretty(),
+            parallel.summary_json().to_string_pretty(),
+            "summary differs at {threads} threads"
+        );
+    }
+    // The report carries per-tenant and aggregate rows for both modes,
+    // with the latency/goodput columns populated.
+    assert_eq!(serial.points.len(), 6, "2 modes x (aggregate + 2 tenants)");
+    assert_eq!(serial.model, "vgg16+resnet50");
+    let csv = serial.to_csv().to_string();
+    assert!(csv.contains(",tenant,tenant_model,tenant_cores,"));
+    assert!(csv.contains(",cosched,ok,"));
+    assert!(csv.contains(",timeshared,ok,"));
+    assert!(csv.contains(",aggregate,mixed,"));
+    assert!(csv.contains(",t0,vgg16,"));
+    assert!(csv.contains(",t1,resnet50,"));
+    let co = serial.tenant_aggregate(TenantMode::Coscheduled).unwrap();
+    let ts = serial.tenant_aggregate(TenantMode::TimeShared).unwrap();
+    assert_eq!(co.requests, ts.requests, "identical offered load across modes");
+    assert!(co.latency.p50_ms > 0.0 && co.latency.p50_ms <= co.latency.p99_ms);
+    for (row, o) in serial.tenant_rows(TenantMode::Coscheduled) {
+        assert!(!row.is_aggregate());
+        assert_eq!(o.served + o.dropped, o.requests, "{} conservation", row.tag);
+    }
+}

@@ -408,3 +408,97 @@ fn prop_unbounded_runs_never_drop() {
         },
     );
 }
+
+#[test]
+fn prop_multi_tenant_conservation_holds_per_tenant() {
+    use trafficshape::serve::{MultiTenantSimulator, TenantMode, TenantSpec};
+    check(
+        &Config { cases: 10, seed: 0x7E4A, max_shrink_steps: 0 },
+        "per tenant: carried_in + arrived = served + dropped + carried_out every epoch, \
+         served + dropped = requests over the run; aggregate = sum of tenants",
+        |rng| {
+            let k = 1 + rng.next_below(3) as usize;
+            let rates: Vec<f64> = (0..k).map(|_| rng.range_f64(500.0, 50_000.0)).collect();
+            let shares: Vec<f64> = (0..k).map(|_| rng.range_f64(0.1, 10.0)).collect();
+            let caps: Vec<usize> = (0..k)
+                .map(|_| if rng.next_below(2) == 0 { 0 } else { rng.range_u64(1, 16) as usize })
+                .collect();
+            let slos: Vec<f64> = (0..k)
+                .map(|_| if rng.next_below(2) == 0 { 0.0 } else { rng.range_f64(0.5, 20.0) })
+                .collect();
+            let timeshared = rng.next_below(2) == 0;
+            let rebalance = rng.next_below(2) == 0;
+            (rates, shares, caps, slos, timeshared, rebalance, rng.next_u64())
+        },
+        no_shrink,
+        |(rates, shares, caps, slos, timeshared, rebalance, seed)| {
+            let accel = AcceleratorConfig::knl_7210();
+            let specs: Vec<TenantSpec> = rates
+                .iter()
+                .zip(shares)
+                .zip(caps)
+                .zip(slos)
+                .map(|(((&r, &s), &c), &d)| {
+                    TenantSpec::new(tiny_cnn(), s, ArrivalProcess::poisson(r))
+                        .queue_cap(c)
+                        .slo_ms(d)
+                })
+                .collect();
+            let mode = if *timeshared { TenantMode::TimeShared } else { TenantMode::Coscheduled };
+            let out = MultiTenantSimulator::new(&accel, specs)
+                .duration(0.004)
+                .seed(*seed)
+                .mode(mode)
+                .epoch(0.001)
+                .rebalance(*rebalance)
+                .trace_samples(16)
+                .run()
+                .map_err(|e| e.to_string())?;
+            let mut served = 0usize;
+            let mut dropped = 0usize;
+            let mut requests = 0usize;
+            for (i, t) in out.tenants.iter().enumerate() {
+                let o = &t.outcome;
+                if o.served + o.dropped != o.requests {
+                    return Err(format!(
+                        "tenant {i}: {} served + {} dropped != {} requests",
+                        o.served, o.dropped, o.requests
+                    ));
+                }
+                if o.latency.count != o.served {
+                    return Err(format!("tenant {i}: latency samples != served"));
+                }
+                for (j, e) in o.epochs.iter().enumerate() {
+                    if !e.is_conserving() {
+                        return Err(format!("tenant {i} epoch {j} leaks: {e:?}"));
+                    }
+                    if j + 1 < o.epochs.len() && e.carried_out != o.epochs[j + 1].carried_in {
+                        return Err(format!("tenant {i} epoch {j}: backlog chain breaks"));
+                    }
+                }
+                if let Some(last) = o.epochs.last() {
+                    if last.carried_out != 0 {
+                        return Err(format!("tenant {i} never drained"));
+                    }
+                }
+                if caps[i] > 0 && o.queue_peak > caps[i] {
+                    return Err(format!("tenant {i}: queue peak {} > cap", o.queue_peak));
+                }
+                served += o.served;
+                dropped += o.dropped;
+                requests += o.requests;
+            }
+            let agg = &out.aggregate;
+            if (agg.served, agg.dropped, agg.requests) != (served, dropped, requests) {
+                return Err("aggregate counters are not the tenant sums".into());
+            }
+            if agg.goodput_ips > agg.throughput_ips + 1e-9 {
+                return Err("aggregate goodput exceeds throughput".into());
+            }
+            if agg.latency.count != agg.served {
+                return Err("aggregate latency samples != served".into());
+            }
+            Ok(())
+        },
+    );
+}
