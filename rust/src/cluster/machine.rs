@@ -1,0 +1,411 @@
+//! One machine's engine window: the unit of parallel work in a cluster
+//! run.
+//!
+//! A machine hosts one or more *lanes* — request streams bound to a
+//! model and a core slice. In routed mode every machine has exactly one
+//! lane (its share of the front-door stream over the cluster-wide
+//! model); in placed mode each hosted tenant is a lane. Between failure
+//! boundaries a machine's lanes are fixed, so each window is a
+//! self-contained [`SimEngine::run_dynamic`] run that can fan out over
+//! the sweep thread pool; all mutation of cluster state happens in the
+//! sequential fold between windows, keyed by machine index so results
+//! are byte-identical across thread counts.
+
+use std::ops::Range;
+
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::serve::{
+    stagger_gates, BatchPolicy, DispatchPolicy, EpochWindow, LatencyRecorder, PartitionSet,
+    QueueConfig, ServeController,
+};
+use crate::shaping::StaggerPolicy;
+use crate::sim::{BandwidthTrace, DynJob, DynNext, SimEngine, WorkSource};
+
+/// One request stream bound to a model and (currently) a machine. The
+/// admit/born streams live in [`super::ClusterSimulator::run`], parallel
+/// to this state, so windows can borrow them immutably while the fold
+/// mutates the lane.
+#[derive(Debug)]
+pub(crate) struct Lane {
+    pub graph: Graph,
+    /// Asynchronous partitions within the lane's core slice.
+    pub partitions: usize,
+    pub queue_cap: usize,
+    pub slo_ms: f64,
+    /// Relative core-share weight among the lanes of one machine
+    /// (placed mode; routed lanes own their whole machine).
+    pub share: f64,
+    /// Machine currently hosting the lane.
+    pub machine: usize,
+    /// Machine the lane was placed on at t=0 (fail-back target).
+    pub home: usize,
+    /// Admitted-stream index of the first request not yet offered to a
+    /// window.
+    pub cursor: usize,
+    pub carry: Vec<usize>,
+    pub gap_carry: Vec<f64>,
+    pub last_dispatch: Option<f64>,
+    /// Live absolute gates; empty means "re-stagger at the next window
+    /// start" (set after placement moves and restarts).
+    pub gates: Vec<f64>,
+    /// Requests spliced into the admit stream since the last window
+    /// fold; they were already counted as `re_routed_in`, so the fold
+    /// subtracts them from the hosting machine's `routed`.
+    pub spliced_pending: usize,
+    pub served: usize,
+    pub dropped: usize,
+}
+
+impl Lane {
+    pub(crate) fn new(graph: Graph, machine: usize) -> Self {
+        Self {
+            graph,
+            partitions: 1,
+            queue_cap: 0,
+            slo_ms: 0.0,
+            share: 1.0,
+            machine,
+            home: machine,
+            cursor: 0,
+            carry: Vec::new(),
+            gap_carry: Vec::new(),
+            last_dispatch: None,
+            gates: Vec::new(),
+            spliced_pending: 0,
+            served: 0,
+            dropped: 0,
+        }
+    }
+}
+
+/// Per-machine accumulators folded across windows.
+#[derive(Debug)]
+pub(crate) struct MachineState {
+    /// Front-door arrivals assigned to this machine (routed mode) or
+    /// admitted by its hosted lanes (placed mode).
+    pub routed: usize,
+    /// Requests inherited from another machine's failure.
+    pub re_routed_in: usize,
+    /// Requests handed off when this machine failed.
+    pub re_routed_out: usize,
+    pub served: usize,
+    pub dropped: usize,
+    pub batches: usize,
+    pub queue_peak: usize,
+    pub total_bytes: f64,
+    /// Weight-transfer bytes charged for tenant migrations onto this
+    /// machine.
+    pub migrated_bytes: f64,
+    pub trace: BandwidthTrace,
+    /// Sojourn times measured from *birth* (front-door arrival), so
+    /// re-route delay counts against the SLO. The recorder itself is
+    /// SLO-less; hits are tallied manually per lane deadline.
+    pub recorder: LatencyRecorder,
+    pub slo_hits: usize,
+    pub failed: bool,
+    pub restarted: bool,
+}
+
+impl MachineState {
+    pub(crate) fn new() -> Self {
+        Self {
+            routed: 0,
+            re_routed_in: 0,
+            re_routed_out: 0,
+            served: 0,
+            dropped: 0,
+            batches: 0,
+            queue_peak: 0,
+            total_bytes: 0.0,
+            migrated_bytes: 0.0,
+            trace: BandwidthTrace::total_only(),
+            recorder: LatencyRecorder::new(),
+            slo_hits: 0,
+            failed: false,
+            restarted: false,
+        }
+    }
+}
+
+/// One lane's slice of a window job: everything `run_machine_window`
+/// needs, with the admit stream borrowed from the cluster run.
+#[derive(Debug)]
+pub(crate) struct LaneJob<'a> {
+    /// Global lane index (for the fold).
+    pub lane: usize,
+    pub graph: &'a Graph,
+    pub partitions: usize,
+    pub cores: usize,
+    pub queue_cap: usize,
+    pub slo_ms: f64,
+    /// The lane's full admitted arrival stream (absolute seconds).
+    pub admit: &'a [f64],
+    /// Stream indices offered to this window.
+    pub range: Range<usize>,
+    pub carry: Vec<usize>,
+    pub gap_carry: Vec<f64>,
+    pub last_dispatch: Option<f64>,
+    /// Absolute gates; empty re-staggers at `start`.
+    pub gates: Vec<f64>,
+}
+
+/// One machine's work for one inter-boundary window.
+#[derive(Debug)]
+pub(crate) struct WindowJob<'a> {
+    pub machine: usize,
+    pub accel: AcceleratorConfig,
+    pub policy: DispatchPolicy,
+    pub stagger: StaggerPolicy,
+    pub batch_timeout_ms: f64,
+    pub max_batch: usize,
+    pub stagger_rearm: bool,
+    pub rearm_quantile: f64,
+    pub enforce_capacity: bool,
+    pub start: f64,
+    /// `None` = run to drain (the final window).
+    pub horizon: Option<f64>,
+    pub lanes: Vec<LaneJob<'a>>,
+}
+
+/// What one lane carries out of a window.
+#[derive(Debug)]
+pub(crate) struct LaneFold {
+    pub lane: usize,
+    pub stream_arrived: usize,
+    pub carried_in: usize,
+    pub served: usize,
+    pub dropped: usize,
+    pub batches: usize,
+    pub queue_peak: usize,
+    pub carry: Vec<usize>,
+    pub gap_carry: Vec<f64>,
+    pub last_dispatch: Option<f64>,
+    pub gates: Vec<f64>,
+    /// `(admit index, finish time)` per completed request, in engine
+    /// completion order.
+    pub completions: Vec<(usize, f64)>,
+}
+
+/// What one machine carries out of a window.
+#[derive(Debug)]
+pub(crate) struct MachineFold {
+    pub machine: usize,
+    pub makespan: f64,
+    pub trace: BandwidthTrace,
+    pub total_bytes: f64,
+    pub lanes: Vec<LaneFold>,
+}
+
+/// [`MtController`]'s shape one level up: multiplex several per-lane
+/// [`ServeController`]s behind one engine, re-tagging job ids globally.
+struct LaneMux<'a> {
+    subs: Vec<ServeController<'a>>,
+    /// Global partition -> (lane slot, the lane's local partition).
+    map: Vec<(usize, usize)>,
+    /// Global job id -> (lane slot, the lane's local batch id).
+    batch_map: Vec<(usize, u64)>,
+}
+
+impl WorkSource for LaneMux<'_> {
+    fn next(&mut self, partition: usize, now: f64) -> DynNext {
+        let (s, local) = self.map[partition];
+        match self.subs[s].next(local, now) {
+            DynNext::Job(job) => {
+                let gid = self.batch_map.len() as u64;
+                self.batch_map.push((s, job.id));
+                DynNext::Job(DynJob { id: gid, phases: job.phases })
+            }
+            other => other,
+        }
+    }
+}
+
+/// Run one machine's window to its horizon (or to drain) and fold the
+/// engine results back per lane. Pure with respect to cluster state:
+/// everything mutable is owned by the job or returned in the fold.
+pub(crate) fn run_machine_window(job: &WindowJob<'_>) -> Result<MachineFold> {
+    let mut sets: Vec<PartitionSet> = Vec::with_capacity(job.lanes.len());
+    for lane in &job.lanes {
+        sets.push(PartitionSet::build_slice(
+            &job.accel,
+            lane.graph,
+            lane.cores,
+            lane.partitions,
+            job.max_batch,
+            job.enforce_capacity,
+        )?);
+    }
+
+    let mut subs: Vec<ServeController<'_>> = Vec::with_capacity(job.lanes.len());
+    let mut map: Vec<(usize, usize)> = Vec::new();
+    let mut all_cores: Vec<usize> = Vec::new();
+    for (slot, lane) in job.lanes.iter().enumerate() {
+        let set = &sets[slot];
+        let gates: Vec<f64> = if lane.gates.is_empty() {
+            stagger_gates(job.stagger, set.partitions, set.batch_time_s)
+                .into_iter()
+                .map(|o| job.start + o)
+                .collect()
+        } else {
+            lane.gates.clone()
+        };
+        let n = gates.len();
+        let mut cfg = QueueConfig::new(job.policy, gates);
+        cfg.queue_cap = (lane.queue_cap > 0).then_some(lane.queue_cap);
+        cfg.slo_s = (lane.slo_ms > 0.0).then_some(lane.slo_ms / 1e3);
+        cfg.batch = BatchPolicy::from_timeout_ms(job.batch_timeout_ms)?;
+        cfg.rearm_idle_s = job.stagger_rearm.then_some(set.batch_time_s);
+        cfg.rearm_quantile = (job.rearm_quantile > 0.0).then_some(job.rearm_quantile);
+        // Gates are absolute, so lull re-arms need the relative offsets.
+        cfg.rearm_offsets = Some(stagger_gates(job.stagger, n, set.batch_time_s));
+        let window = EpochWindow {
+            start_s: job.start,
+            horizon_s: job.horizon,
+            stream: lane.range.clone(),
+            carry: lane.carry.clone(),
+            gap_carry: lane.gap_carry.clone(),
+            last_dispatch: lane.last_dispatch,
+        };
+        subs.push(ServeController::for_epoch(lane.admit, set.programs(), cfg, window));
+        for p in 0..set.partitions {
+            map.push((slot, p));
+            all_cores.push(set.cores_per_partition);
+        }
+    }
+
+    let engine = SimEngine::new(&job.accel);
+    let mut mux = LaneMux { subs, map, batch_map: Vec::new() };
+    let out = engine.run_dynamic(&all_cores, &mut mux)?;
+
+    let mut served = vec![0usize; job.lanes.len()];
+    let mut completions: Vec<Vec<(usize, f64)>> = vec![Vec::new(); job.lanes.len()];
+    for engine_job in &out.jobs {
+        let Some(&(slot, local)) = mux.batch_map.get(engine_job.id as usize) else {
+            return Err(Error::SimInvariant(format!(
+                "engine job {} has no dispatched lane batch",
+                engine_job.id
+            )));
+        };
+        let batch = &mux.subs[slot].batches()[local as usize];
+        for &r in &batch.requests {
+            completions[slot].push((r, engine_job.finished_at));
+        }
+        served[slot] += batch.requests.len();
+    }
+
+    let mut lanes = Vec::with_capacity(job.lanes.len());
+    for (slot, lane) in job.lanes.iter().enumerate() {
+        let sub = &mut mux.subs[slot];
+        let dropped = sub.dropped();
+        let carry = sub.drain_remaining();
+        let (gap_carry, last_dispatch) = sub.gap_state();
+        let fold = LaneFold {
+            lane: lane.lane,
+            stream_arrived: lane.range.len(),
+            carried_in: lane.carry.len(),
+            served: served[slot],
+            dropped,
+            batches: sub.batches().len(),
+            queue_peak: sub.queue_peak(),
+            carry,
+            gap_carry,
+            last_dispatch,
+            gates: sub.live_gates().to_vec(),
+            completions: std::mem::take(&mut completions[slot]),
+        };
+        // Window-level conservation, per lane: everything offered is
+        // served, shed, or carried forward.
+        if fold.carried_in + fold.stream_arrived != fold.served + fold.dropped + fold.carry.len() {
+            return Err(Error::SimInvariant(format!(
+                "machine {} lane {} lost requests in window at {:.6}s: \
+                 {} carried + {} arrived != {} served + {} dropped + {} carried out",
+                job.machine,
+                lane.lane,
+                job.start,
+                fold.carried_in,
+                fold.stream_arrived,
+                fold.served,
+                fold.dropped,
+                fold.carry.len()
+            )));
+        }
+        lanes.push(fold);
+    }
+
+    Ok(MachineFold {
+        machine: job.machine,
+        makespan: out.makespan.0,
+        trace: out.trace,
+        total_bytes: out.total_bytes,
+        lanes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tiny_cnn;
+    use crate::serve::ArrivalProcess;
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    fn job_over<'a>(admit: &'a [f64], horizon: Option<f64>) -> WindowJob<'a> {
+        WindowJob {
+            machine: 0,
+            accel: knl(),
+            policy: DispatchPolicy::ShortestQueue,
+            stagger: StaggerPolicy::UniformPhase,
+            batch_timeout_ms: 0.0,
+            max_batch: 0,
+            stagger_rearm: true,
+            rearm_quantile: 0.95,
+            enforce_capacity: true,
+            start: 0.0,
+            horizon,
+            lanes: vec![LaneJob {
+                lane: 0,
+                graph: Box::leak(Box::new(tiny_cnn())),
+                partitions: 2,
+                cores: 64,
+                queue_cap: 0,
+                slo_ms: 0.0,
+                admit,
+                range: 0..admit.len(),
+                carry: Vec::new(),
+                gap_carry: Vec::new(),
+                last_dispatch: None,
+                gates: Vec::new(),
+            }],
+        }
+    }
+
+    #[test]
+    fn drain_window_serves_the_whole_stream() {
+        let admit = ArrivalProcess::poisson(400.0).generate(0.05, 11).unwrap();
+        let fold = run_machine_window(&job_over(&admit, None)).unwrap();
+        assert_eq!(fold.lanes.len(), 1);
+        let lane = &fold.lanes[0];
+        assert_eq!(lane.served + lane.dropped, admit.len());
+        assert!(lane.carry.is_empty(), "drain window must not carry");
+        assert_eq!(lane.completions.len(), lane.served);
+        assert!(fold.makespan > 0.0);
+        assert!(fold.total_bytes > 0.0);
+    }
+
+    #[test]
+    fn bounded_window_carries_the_tail() {
+        let admit = ArrivalProcess::poisson(2000.0).generate(0.05, 11).unwrap();
+        let fold = run_machine_window(&job_over(&admit, Some(0.004))).unwrap();
+        let lane = &fold.lanes[0];
+        // An overloaded 4 ms window cannot serve a 50 ms stream.
+        assert!(!lane.carry.is_empty());
+        assert_eq!(
+            lane.carried_in + lane.stream_arrived,
+            lane.served + lane.dropped + lane.carry.len()
+        );
+    }
+}

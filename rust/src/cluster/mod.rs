@@ -1,0 +1,857 @@
+//! Fleet-scale serving: many machines behind one front door.
+//!
+//! The paper's argument is statistical: asynchronous partitions shape a
+//! single accelerator's DRAM traffic because independent phases rarely
+//! peak together. A cluster is the same argument one level up — machines
+//! fluctuate independently, so fleet bandwidth adds in mean but only in
+//! root-sum-square in deviation, and a load-aware router smooths the
+//! arrival process each machine sees. This module makes that measurable:
+//!
+//! * [`MachineConfig`] — one heterogeneous machine: a core count, a
+//!   memory-bandwidth scale on the base accelerator, and its own
+//!   [`ServeConfig`] for serving knobs;
+//! * [`RouterPolicy`] — the front door: round-robin, join-shortest-queue
+//!   or power-of-two-choices over a fluid backlog model, all
+//!   seed-deterministic;
+//! * placed mode — fleet-level tenants ([`ServeConfig::tenants`] on the
+//!   cluster config) are bin-packed onto machines by share, under the
+//!   machine-wide joint DRAM footprint
+//!   ([`crate::sim::DramModel::check_joint`]); failures migrate tenants
+//!   (weight-transfer bytes charged to the target), restarts migrate
+//!   them home;
+//! * [`FailureEvent`] — machines fail mid-run and optionally restart;
+//!   backlog drains to the survivors through the same carry/splice path
+//!   the epoch engine uses, and per-machine request conservation
+//!   (`routed + re_routed_in == served + dropped + re_routed_out`) is
+//!   enforced as a [`crate::error::Error::SimInvariant`];
+//! * [`ClusterOutcome`] — per-machine and fleet rows: availability,
+//!   throughput, goodput, latency percentiles, bandwidth mean/σ, and
+//!   the migration ledger.
+//!
+//! Machines between failure boundaries are independent engine runs, so
+//! each window fans out over the sweep thread pool
+//! ([`crate::sweep`]'s `parallel_map`) and folds back in machine order —
+//! reports are byte-identical for any `--threads`.
+
+mod machine;
+mod outcome;
+mod placement;
+mod router;
+
+pub use outcome::{ClusterOutcome, MachineReport};
+pub use placement::Migration;
+pub use router::RouterPolicy;
+
+use machine::{Lane, LaneJob, MachineState, WindowJob};
+use placement::{hosted_cores, migration_bytes, pick_host, place_all};
+use router::Router;
+
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::model::Graph;
+use crate::serve::{roofline_capacity_ips, LatencyRecorder, ServeConfig};
+use crate::sweep::parallel_map;
+
+/// One machine of the fleet: its size, its relative memory bandwidth,
+/// and its serving knobs.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub cores: usize,
+    /// Memory bandwidth relative to the base accelerator (0.5 = half).
+    pub bw_scale: f64,
+    /// Per-machine serving knobs. In routed mode the machine serves
+    /// `serve.headline_partitions()` partitions with these queue/SLO
+    /// settings; fleet-level knobs (arrival, rate, duration, seed,
+    /// tenants) live on [`ClusterConfig::serve`].
+    pub serve: ServeConfig,
+}
+
+impl MachineConfig {
+    pub fn new(cores: usize) -> Self {
+        Self { cores, bw_scale: 1.0, serve: ServeConfig::default() }
+    }
+
+    pub fn bw_scale(mut self, s: f64) -> Self {
+        self.bw_scale = s;
+        self
+    }
+
+    /// This machine's accelerator: the base config resized and scaled.
+    pub fn accel(&self, base: &AcceleratorConfig, index: usize) -> AcceleratorConfig {
+        let mut a = base.clone();
+        a.name = format!("{}/m{index}", base.name);
+        a.cores = self.cores;
+        a.mem_bw = crate::util::units::BytesPerS(base.mem_bw.0 * self.bw_scale);
+        a
+    }
+
+    /// Parse `CORES[:BW_SCALE],...` — e.g. `64:1.0,32:0.5,16` (scale
+    /// defaults to 1).
+    pub fn parse_list(spec: &str) -> Result<Vec<MachineConfig>> {
+        let mut out = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let mut it = part.splitn(2, ':');
+            let cores: usize = it
+                .next()
+                .unwrap_or_default()
+                .parse()
+                .map_err(|_| Error::Usage(format!("bad machine cores in '{part}'")))?;
+            let bw_scale = match it.next() {
+                Some(s) => s
+                    .parse::<f64>()
+                    .map_err(|_| Error::Usage(format!("bad machine bw scale in '{part}'")))?,
+                None => 1.0,
+            };
+            out.push(MachineConfig::new(cores).bw_scale(bw_scale));
+        }
+        if out.is_empty() {
+            return Err(Error::Usage(format!("no machines in '{spec}'")));
+        }
+        Ok(out)
+    }
+}
+
+/// One machine failure, optionally followed by a restart.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    pub machine: usize,
+    pub at_s: f64,
+    /// `None` = the machine stays down for the rest of the run.
+    pub restart_s: Option<f64>,
+}
+
+impl FailureEvent {
+    /// Parse `MACHINE@AT_S[:RESTART_S],...` — e.g. `0@0.1:0.3,2@0.2`.
+    pub fn parse_list(spec: &str) -> Result<Vec<FailureEvent>> {
+        let mut out = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (m, times) = part
+                .split_once('@')
+                .ok_or_else(|| Error::Usage(format!("failure '{part}' is not M@T[:RESTART]")))?;
+            let machine: usize =
+                m.parse().map_err(|_| Error::Usage(format!("bad failure machine in '{part}'")))?;
+            let mut it = times.splitn(2, ':');
+            let at_s: f64 = it
+                .next()
+                .unwrap_or_default()
+                .parse()
+                .map_err(|_| Error::Usage(format!("bad failure time in '{part}'")))?;
+            let restart_s = match it.next() {
+                Some(s) => Some(
+                    s.parse::<f64>()
+                        .map_err(|_| Error::Usage(format!("bad restart time in '{part}'")))?,
+                ),
+                None => None,
+            };
+            out.push(FailureEvent { machine, at_s, restart_s });
+        }
+        Ok(out)
+    }
+}
+
+/// The whole fleet: machines, front door, failure schedule, and the
+/// fleet-level serving scenario.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub machines: Vec<MachineConfig>,
+    pub router: RouterPolicy,
+    pub failures: Vec<FailureEvent>,
+    /// Fleet-level serving scenario: arrival family, headline rate,
+    /// duration, seed, capacity enforcement and trace sampling — and,
+    /// when `serve.tenants` is non-empty, the *placed* mode: tenants are
+    /// bin-packed onto machines instead of routing one shared stream.
+    pub serve: ServeConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            machines: vec![MachineConfig::new(64), MachineConfig::new(64)],
+            router: RouterPolicy::PowerOfTwoChoices,
+            failures: Vec::new(),
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.machines.is_empty() {
+            return Err(Error::InvalidConfig("cluster needs at least one machine".into()));
+        }
+        for (m, mc) in self.machines.iter().enumerate() {
+            if mc.cores == 0 {
+                return Err(Error::InvalidConfig(format!("machine {m} has zero cores")));
+            }
+            if !(mc.bw_scale.is_finite() && mc.bw_scale > 0.0) {
+                return Err(Error::InvalidConfig(format!(
+                    "machine {m} bw scale must be finite and > 0: {}",
+                    mc.bw_scale
+                )));
+            }
+            mc.serve.validate()?;
+        }
+        self.serve.validate()?;
+        if !(self.serve.duration_s > 0.0) {
+            return Err(Error::InvalidConfig("cluster serve duration must be > 0 s".into()));
+        }
+        if self.serve.tenants.is_empty() && !(self.serve.headline_rate() > 0.0) {
+            return Err(Error::InvalidConfig(
+                "routed cluster mode needs a positive arrival rate".into(),
+            ));
+        }
+        let n = self.machines.len();
+        let mut seen = vec![false; n];
+        for f in &self.failures {
+            if f.machine >= n {
+                return Err(Error::InvalidConfig(format!(
+                    "failure targets machine {} of {n}",
+                    f.machine
+                )));
+            }
+            if seen[f.machine] {
+                return Err(Error::InvalidConfig(format!(
+                    "machine {} fails more than once (one failure per machine)",
+                    f.machine
+                )));
+            }
+            seen[f.machine] = true;
+            if !(f.at_s.is_finite() && f.at_s > 0.0 && f.at_s < self.serve.duration_s) {
+                return Err(Error::InvalidConfig(format!(
+                    "failure time must fall inside the arrival window (0, {}): {}",
+                    self.serve.duration_s, f.at_s
+                )));
+            }
+            if let Some(r) = f.restart_s {
+                if !(r.is_finite() && r > f.at_s) {
+                    return Err(Error::InvalidConfig(format!(
+                        "restart must come after the failure at {}: {r}",
+                        f.at_s
+                    )));
+                }
+            }
+        }
+        // Some machine must be up in every inter-boundary window.
+        let mut bounds: Vec<f64> = vec![0.0];
+        for f in &self.failures {
+            bounds.push(f.at_s);
+            if let Some(r) = f.restart_s {
+                bounds.push(r);
+            }
+        }
+        bounds.sort_by(|a, b| a.partial_cmp(b).expect("validated finite"));
+        bounds.dedup();
+        for &b in &bounds {
+            let any_up = (0..n).any(|m| up_at(&self.failures, m, b));
+            if !any_up {
+                return Err(Error::InvalidConfig(format!(
+                    "the whole fleet is down from t = {b}s — nothing can serve"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Is machine `m` up at time `t` (given the failure schedule)?
+fn up_at(failures: &[FailureEvent], m: usize, t: f64) -> bool {
+    !failures
+        .iter()
+        .any(|f| f.machine == m && t >= f.at_s && f.restart_s.map_or(true, |r| t < r))
+}
+
+/// Per-tenant stream seeds, decorrelated from each other (mirrors the
+/// multi-tenant simulator's seeding so a tenant sees the same stream on
+/// one machine or on a fleet).
+fn tenant_seed(seed: u64, i: usize) -> u64 {
+    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1)
+}
+
+/// The cluster simulator: a base accelerator, a model, and a
+/// [`ClusterConfig`].
+#[derive(Debug, Clone)]
+pub struct ClusterSimulator {
+    accel: AcceleratorConfig,
+    /// The fleet-wide model served in routed mode (placed mode takes
+    /// each tenant's own model instead).
+    graph: Graph,
+    cfg: ClusterConfig,
+    threads: usize,
+}
+
+impl ClusterSimulator {
+    pub fn new(accel: &AcceleratorConfig, graph: &Graph) -> Self {
+        Self::from_config(accel, graph, ClusterConfig::default())
+    }
+
+    pub fn from_config(accel: &AcceleratorConfig, graph: &Graph, cfg: ClusterConfig) -> Self {
+        Self { accel: accel.clone(), graph: graph.clone(), cfg, threads: 1 }
+    }
+
+    /// Worker-thread pool for the per-machine window fan-out (0 = all
+    /// hardware threads). Results are byte-identical for any value.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = if n == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            n
+        };
+        self
+    }
+
+    /// Run the fleet to drain.
+    pub fn run(&self) -> Result<ClusterOutcome> {
+        self.cfg.validate()?;
+        let n = self.cfg.machines.len();
+        let duration = self.cfg.serve.duration_s;
+        let placed = !self.cfg.serve.tenants.is_empty();
+        let accels: Vec<AcceleratorConfig> =
+            self.cfg.machines.iter().enumerate().map(|(m, mc)| mc.accel(&self.accel, m)).collect();
+
+        // ---- Streams and lanes -------------------------------------
+        let mut lanes: Vec<Lane> = Vec::new();
+        let mut admit: Vec<Vec<f64>> = Vec::new();
+        let mut born: Vec<Vec<f64>> = Vec::new();
+        let mut hosting: Vec<Vec<usize>> = vec![Vec::new(); n];
+        // The router lives for the whole run so failure-time re-routes
+        // continue its backlog model and RNG stream.
+        let mut router = if placed {
+            None
+        } else {
+            let capacity: Vec<f64> =
+                accels.iter().map(|a| roofline_capacity_ips(a, &self.graph)).collect();
+            Some(Router::new(self.cfg.router, self.cfg.serve.seed, capacity))
+        };
+
+        if placed {
+            for (i, t) in self.cfg.serve.tenants.iter().enumerate() {
+                let stream = t.arrival.generate(duration, tenant_seed(self.cfg.serve.seed, i))?;
+                let mut lane = Lane::new(t.graph.clone(), 0);
+                lane.partitions = t.partitions;
+                lane.queue_cap = t.queue_cap;
+                lane.slo_ms = t.slo_ms;
+                lane.share = t.share;
+                lanes.push(lane);
+                born.push(stream.clone());
+                admit.push(stream);
+            }
+            place_all(&mut lanes, &mut hosting, &accels, self.cfg.serve.enforce_capacity)?;
+        } else {
+            // Routed mode: one lane per machine over the fleet model.
+            for (m, mc) in self.cfg.machines.iter().enumerate() {
+                let mut lane = Lane::new(self.graph.clone(), m);
+                lane.partitions = mc.serve.headline_partitions();
+                lane.queue_cap = mc.serve.queue_cap;
+                lane.slo_ms = mc.serve.slo_ms;
+                lanes.push(lane);
+                hosting[m].push(m);
+                admit.push(Vec::new());
+                born.push(Vec::new());
+            }
+            let rate = self.cfg.serve.headline_rate();
+            let stream =
+                self.cfg.serve.arrival.process(rate).generate(duration, self.cfg.serve.seed)?;
+            let router = router.as_mut().expect("routed mode has a router");
+            for &t in &stream {
+                let up: Vec<bool> = (0..n).map(|m| up_at(&self.cfg.failures, m, t)).collect();
+                let Some(m) = router.route(t, &up) else {
+                    return Err(Error::SimInvariant(format!(
+                        "no machine up for arrival at {t:.6}s (validation should reject this)"
+                    )));
+                };
+                admit[m].push(t);
+                born[m].push(t);
+            }
+        }
+        let requests: usize = admit.iter().map(Vec::len).sum();
+        // Requests a lane handed off at its machine's failure (routed
+        // mode; lane-level conservation needs them).
+        let mut re_routed_away: Vec<usize> = vec![0; lanes.len()];
+
+        // ---- Windows between failure boundaries --------------------
+        let mut bounds: Vec<f64> = Vec::new();
+        for f in &self.cfg.failures {
+            bounds.push(f.at_s);
+            if let Some(r) = f.restart_s {
+                bounds.push(r);
+            }
+        }
+        bounds.sort_by(|a, b| a.partial_cmp(b).expect("validated finite"));
+        bounds.dedup();
+
+        let mut machines: Vec<MachineState> = (0..n).map(|_| MachineState::new()).collect();
+        let mut migrations: Vec<Migration> = Vec::new();
+        let mut fleet_makespan = 0.0f64;
+        let mut start = 0.0f64;
+
+        for w in 0..=bounds.len() {
+            let horizon = bounds.get(w).copied();
+            let cut = horizon.unwrap_or(f64::INFINITY);
+
+            let mut jobs: Vec<WindowJob<'_>> = Vec::new();
+            for m in 0..n {
+                if !up_at(&self.cfg.failures, m, start) || hosting[m].is_empty() {
+                    continue;
+                }
+                let cores = hosted_cores(&lanes, &hosting[m], accels[m].cores);
+                let mut lane_jobs: Vec<LaneJob<'_>> = Vec::new();
+                for (slot, &li) in hosting[m].iter().enumerate() {
+                    let lane = &lanes[li];
+                    let upper = admit[li].partition_point(|&a| a < cut);
+                    if lane.carry.is_empty() && upper == lane.cursor {
+                        continue; // nothing to do this window
+                    }
+                    lane_jobs.push(LaneJob {
+                        lane: li,
+                        graph: &lane.graph,
+                        partitions: lane.partitions,
+                        cores: cores[slot],
+                        queue_cap: lane.queue_cap,
+                        slo_ms: lane.slo_ms,
+                        admit: &admit[li],
+                        range: lane.cursor..upper,
+                        carry: lane.carry.clone(),
+                        gap_carry: lane.gap_carry.clone(),
+                        last_dispatch: lane.last_dispatch,
+                        gates: lane.gates.clone(),
+                    });
+                }
+                if lane_jobs.is_empty() {
+                    continue;
+                }
+                let mc = &self.cfg.machines[m];
+                jobs.push(WindowJob {
+                    machine: m,
+                    accel: accels[m].clone(),
+                    policy: mc.serve.policy,
+                    stagger: mc.serve.stagger,
+                    batch_timeout_ms: mc.serve.batch_timeout_ms,
+                    max_batch: mc.serve.max_batch,
+                    stagger_rearm: mc.serve.stagger_rearm,
+                    rearm_quantile: mc.serve.rearm_quantile,
+                    enforce_capacity: self.cfg.serve.enforce_capacity,
+                    start,
+                    horizon,
+                    lanes: lane_jobs,
+                });
+            }
+
+            let folds = parallel_map(&jobs, self.threads, machine::run_machine_window)?;
+            drop(jobs);
+
+            // Fold sequentially in machine order (jobs were built in
+            // machine order, parallel_map preserves it).
+            for fold in folds {
+                let m = fold.machine;
+                fleet_makespan = fleet_makespan.max(fold.makespan);
+                let end = horizon.unwrap_or(fold.makespan).max(fold.makespan);
+                let mut tr = fold.trace;
+                tr.truncate_to(end);
+                machines[m].trace.append_clipped(&tr);
+                machines[m].total_bytes += fold.total_bytes;
+                for lf in fold.lanes {
+                    let lane = &mut lanes[lf.lane];
+                    machines[m].routed += lf.stream_arrived - lane.spliced_pending;
+                    lane.spliced_pending = 0;
+                    lane.cursor += lf.stream_arrived;
+                    machines[m].served += lf.served;
+                    machines[m].dropped += lf.dropped;
+                    machines[m].batches += lf.batches;
+                    machines[m].queue_peak = machines[m].queue_peak.max(lf.queue_peak);
+                    lane.served += lf.served;
+                    lane.dropped += lf.dropped;
+                    for (r, finish) in lf.completions {
+                        let b = born[lf.lane][r];
+                        machines[m].recorder.record(b, finish);
+                        if lane.slo_ms == 0.0 || finish - b <= lane.slo_ms / 1e3 {
+                            machines[m].slo_hits += 1;
+                        }
+                    }
+                    machines[m].recorder.record_drops(lf.dropped);
+                    lane.carry = lf.carry;
+                    lane.gap_carry = lf.gap_carry;
+                    lane.last_dispatch = lf.last_dispatch;
+                    lane.gates = lf.gates;
+                }
+            }
+
+            // ---- Boundary events -----------------------------------
+            let Some(b) = horizon else { break };
+            let up_after: Vec<bool> = (0..n).map(|m| up_at(&self.cfg.failures, m, b)).collect();
+
+            for f in &self.cfg.failures {
+                if f.at_s == b {
+                    let m = f.machine;
+                    machines[m].failed = true;
+                    let hosted: Vec<usize> = hosting[m].clone();
+                    if placed {
+                        for li in placement::demand_order(&lanes, &hosted) {
+                            hosting[m].retain(|&x| x != li);
+                            match pick_host(
+                                &lanes,
+                                li,
+                                &hosting,
+                                &accels,
+                                &up_after,
+                                self.cfg.serve.enforce_capacity,
+                            ) {
+                                Some(target) => {
+                                    let wb = migration_bytes(&lanes[li], accels[target].elem_bytes);
+                                    migrations.push(Migration {
+                                        tenant: li,
+                                        model: lanes[li].graph.name.clone(),
+                                        from: m,
+                                        to: target,
+                                        at_s: b,
+                                        weight_bytes: wb,
+                                    });
+                                    machines[target].migrated_bytes += wb;
+                                    machines[target].total_bytes += wb;
+                                    let k = lanes[li].carry.len();
+                                    machines[m].re_routed_out += k;
+                                    machines[target].re_routed_in += k;
+                                    hosting[target].push(li);
+                                    lanes[li].machine = target;
+                                    lanes[li].gates.clear();
+                                }
+                                None => {
+                                    // Nowhere to go: shed the backlog
+                                    // and the rest of the stream.
+                                    let carry = std::mem::take(&mut lanes[li].carry);
+                                    let tail = admit[li].len() - lanes[li].cursor;
+                                    machines[m].routed += tail;
+                                    machines[m].dropped += carry.len() + tail;
+                                    machines[m].recorder.record_drops(carry.len() + tail);
+                                    lanes[li].dropped += carry.len() + tail;
+                                    lanes[li].cursor = admit[li].len();
+                                    lanes[li].gates.clear();
+                                    lanes[li].gap_carry.clear();
+                                    lanes[li].last_dispatch = None;
+                                }
+                            }
+                        }
+                    } else {
+                        // Routed mode: the failed machine's backlog
+                        // re-enters the front door at the boundary.
+                        let router = router.as_mut().expect("routed mode has a router");
+                        let li = m; // lane index == machine index
+                        let carry = std::mem::take(&mut lanes[li].carry);
+                        lanes[li].gap_carry.clear();
+                        lanes[li].last_dispatch = None;
+                        lanes[li].gates.clear();
+                        let mut moves: Vec<Vec<usize>> = vec![Vec::new(); n];
+                        for idx in carry {
+                            let Some(target) = router.route(b, &up_after) else {
+                                return Err(Error::SimInvariant(format!(
+                                    "no machine up to absorb machine {m}'s backlog at {b:.6}s"
+                                )));
+                            };
+                            moves[target].push(idx);
+                        }
+                        for (target, idxs) in moves.into_iter().enumerate() {
+                            if idxs.is_empty() {
+                                continue;
+                            }
+                            let k = idxs.len();
+                            let vals: Vec<f64> = idxs.iter().map(|&idx| born[li][idx]).collect();
+                            let pos = lanes[target].cursor;
+                            admit[target].splice(pos..pos, std::iter::repeat(b).take(k));
+                            born[target].splice(pos..pos, vals);
+                            lanes[target].spliced_pending += k;
+                            machines[m].re_routed_out += k;
+                            machines[target].re_routed_in += k;
+                            re_routed_away[li] += k;
+                        }
+                    }
+                }
+                if f.restart_s == Some(b) {
+                    let m = f.machine;
+                    machines[m].restarted = true;
+                    if placed {
+                        // Fail-back: hosted-elsewhere tenants whose home
+                        // this is return when they still fit.
+                        let homecomers: Vec<usize> = (0..lanes.len())
+                            .filter(|&li| {
+                                lanes[li].home == m
+                                    && lanes[li].machine != m
+                                    // No point paying weight bytes for a
+                                    // lane with no work left (e.g. shed).
+                                    && (lanes[li].cursor < admit[li].len()
+                                        || !lanes[li].carry.is_empty())
+                            })
+                            .collect();
+                        for li in placement::demand_order(&lanes, &homecomers) {
+                            let only_home: Vec<bool> =
+                                (0..n).map(|x| x == m && up_after[x]).collect();
+                            if pick_host(
+                                &lanes,
+                                li,
+                                &hosting,
+                                &accels,
+                                &only_home,
+                                self.cfg.serve.enforce_capacity,
+                            )
+                            .is_none()
+                            {
+                                continue; // does not fit back yet
+                            }
+                            let from = lanes[li].machine;
+                            let wb = migration_bytes(&lanes[li], accels[m].elem_bytes);
+                            migrations.push(Migration {
+                                tenant: li,
+                                model: lanes[li].graph.name.clone(),
+                                from,
+                                to: m,
+                                at_s: b,
+                                weight_bytes: wb,
+                            });
+                            machines[m].migrated_bytes += wb;
+                            machines[m].total_bytes += wb;
+                            let k = lanes[li].carry.len();
+                            machines[from].re_routed_out += k;
+                            machines[m].re_routed_in += k;
+                            hosting[from].retain(|&x| x != li);
+                            hosting[m].push(li);
+                            lanes[li].machine = m;
+                            lanes[li].gates.clear();
+                        }
+                    } else {
+                        // The resumed machine re-staggers from scratch.
+                        lanes[m].gates.clear();
+                    }
+                }
+            }
+            start = b;
+        }
+
+        // ---- Conservation ------------------------------------------
+        for (li, lane) in lanes.iter().enumerate() {
+            if lane.served + lane.dropped + re_routed_away[li] != admit[li].len() {
+                return Err(Error::SimInvariant(format!(
+                    "lane {li} lost requests: {} served + {} dropped + {} re-routed of {}",
+                    lane.served,
+                    lane.dropped,
+                    re_routed_away[li],
+                    admit[li].len()
+                )));
+            }
+        }
+        for (m, ms) in machines.iter().enumerate() {
+            if ms.routed + ms.re_routed_in != ms.served + ms.dropped + ms.re_routed_out {
+                return Err(Error::SimInvariant(format!(
+                    "machine {m} leaks requests: {} routed + {} in != {} served + {} dropped + {} out",
+                    ms.routed, ms.re_routed_in, ms.served, ms.dropped, ms.re_routed_out
+                )));
+            }
+        }
+        let fleet_served: usize = machines.iter().map(|m| m.served).sum();
+        let fleet_dropped: usize = machines.iter().map(|m| m.dropped).sum();
+        if fleet_served + fleet_dropped != requests {
+            return Err(Error::SimInvariant(format!(
+                "fleet leaks requests: {fleet_served} served + {fleet_dropped} dropped of {requests}"
+            )));
+        }
+
+        // ---- Reports -----------------------------------------------
+        let per_s = |k: usize| if fleet_makespan > 0.0 { k as f64 / fleet_makespan } else { 0.0 };
+        let samples = self.cfg.serve.trace_samples;
+        let mut reports: Vec<MachineReport> = Vec::with_capacity(n);
+        let mut agg_recorder = LatencyRecorder::new();
+        for (m, ms) in machines.iter().enumerate() {
+            agg_recorder.absorb(&ms.recorder);
+            let down_s: f64 = self
+                .cfg
+                .failures
+                .iter()
+                .filter(|f| f.machine == m)
+                .map(|f| (f.restart_s.unwrap_or(duration).min(duration) - f.at_s).max(0.0))
+                .sum();
+            let status = if ms.restarted {
+                "restarted"
+            } else if ms.failed {
+                "failed"
+            } else {
+                "up"
+            };
+            let mut latency = ms.recorder.stats();
+            latency.slo_hits = ms.slo_hits;
+            reports.push(MachineReport {
+                machine: m.to_string(),
+                cores: self.cfg.machines[m].cores,
+                bw_scale: self.cfg.machines[m].bw_scale,
+                status: status.to_string(),
+                routed: ms.routed,
+                re_routed_in: ms.re_routed_in,
+                re_routed_out: ms.re_routed_out,
+                served: ms.served,
+                dropped: ms.dropped,
+                batches: ms.batches,
+                queue_peak: ms.queue_peak,
+                availability: 1.0 - down_s / duration,
+                throughput_ips: per_s(ms.served),
+                goodput_ips: per_s(ms.slo_hits),
+                latency,
+                bw: ms.trace.sampled_summary(samples),
+                total_bytes: ms.total_bytes,
+                migrated_bytes: ms.migrated_bytes,
+                placed_tenants: if placed { hosting[m].clone() } else { Vec::new() },
+            });
+        }
+
+        // Fleet aggregate: sums where extensive; pooled percentiles;
+        // bandwidth as independent-machine aggregate (means add, σ adds
+        // in quadrature — the paper's statistical argument at fleet
+        // scale).
+        let total_cores: usize = reports.iter().map(|r| r.cores).sum();
+        let wmean = |f: &dyn Fn(&MachineReport) -> f64| {
+            reports.iter().map(|r| f(r) * r.cores as f64).sum::<f64>() / total_cores.max(1) as f64
+        };
+        let fleet_slo_hits: usize = machines.iter().map(|m| m.slo_hits).sum();
+        let mut fleet_latency = agg_recorder.stats();
+        fleet_latency.slo_hits = fleet_slo_hits;
+        let fleet_bw = crate::util::stats::Summary {
+            count: samples,
+            mean: reports.iter().map(|r| r.bw.mean).sum(),
+            std: reports.iter().map(|r| r.bw.std.powi(2)).sum::<f64>().sqrt(),
+            min: reports.iter().map(|r| r.bw.min).sum(),
+            max: reports.iter().map(|r| r.bw.max).sum(),
+        };
+        let fleet = MachineReport {
+            machine: "fleet".to_string(),
+            cores: total_cores,
+            bw_scale: wmean(&|r| r.bw_scale),
+            status: "aggregate".to_string(),
+            routed: reports.iter().map(|r| r.routed).sum(),
+            re_routed_in: reports.iter().map(|r| r.re_routed_in).sum(),
+            re_routed_out: reports.iter().map(|r| r.re_routed_out).sum(),
+            served: fleet_served,
+            dropped: fleet_dropped,
+            batches: reports.iter().map(|r| r.batches).sum(),
+            queue_peak: reports.iter().map(|r| r.queue_peak).max().unwrap_or(0),
+            availability: wmean(&|r| r.availability),
+            throughput_ips: per_s(fleet_served),
+            goodput_ips: per_s(fleet_slo_hits),
+            latency: fleet_latency,
+            bw: fleet_bw,
+            total_bytes: reports.iter().map(|r| r.total_bytes).sum(),
+            migrated_bytes: reports.iter().map(|r| r.migrated_bytes).sum(),
+            placed_tenants: Vec::new(),
+        };
+
+        Ok(ClusterOutcome {
+            router: self.cfg.router,
+            machines: reports,
+            fleet,
+            migrations,
+            requests,
+            duration_s: duration,
+            makespan_s: fleet_makespan,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tiny_cnn;
+    use crate::serve::{ArrivalProcess, TenantSpec};
+
+    fn knl() -> AcceleratorConfig {
+        AcceleratorConfig::knl_7210()
+    }
+
+    fn small_cfg() -> ClusterConfig {
+        let mut cfg = ClusterConfig::default();
+        cfg.machines = vec![MachineConfig::new(64), MachineConfig::new(32).bw_scale(0.5)];
+        cfg.serve.rates = vec![400.0];
+        cfg.serve.duration_s = 0.05;
+        cfg.serve.partitions = vec![2];
+        cfg
+    }
+
+    #[test]
+    fn machine_list_parses() {
+        let ms = MachineConfig::parse_list("64:1.0, 32:0.5,16").unwrap();
+        assert_eq!(ms.len(), 3);
+        assert_eq!(ms[0].cores, 64);
+        assert_eq!(ms[1].bw_scale, 0.5);
+        assert_eq!(ms[2].cores, 16);
+        assert_eq!(ms[2].bw_scale, 1.0);
+        assert!(MachineConfig::parse_list("").is_err());
+        assert!(MachineConfig::parse_list("x:1").is_err());
+        let a = ms[1].accel(&knl(), 1);
+        assert_eq!(a.cores, 32);
+        assert!((a.mem_bw.0 - knl().mem_bw.0 * 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn failure_list_parses() {
+        let fs = FailureEvent::parse_list("0@0.1:0.3,2@0.2").unwrap();
+        assert_eq!(fs.len(), 2);
+        assert_eq!(fs[0], FailureEvent { machine: 0, at_s: 0.1, restart_s: Some(0.3) });
+        assert_eq!(fs[1], FailureEvent { machine: 2, at_s: 0.2, restart_s: None });
+        assert!(FailureEvent::parse_list("0:0.1").is_err());
+        assert!(FailureEvent::parse_list("a@0.1").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_fleets() {
+        let mut cfg = small_cfg();
+        cfg.machines.clear();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = small_cfg();
+        cfg.failures = vec![FailureEvent { machine: 5, at_s: 0.01, restart_s: None }];
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = small_cfg();
+        cfg.failures = vec![FailureEvent { machine: 0, at_s: 0.2, restart_s: None }];
+        assert!(cfg.validate().is_err(), "failure outside the arrival window");
+
+        let mut cfg = small_cfg();
+        cfg.failures = vec![FailureEvent { machine: 0, at_s: 0.02, restart_s: Some(0.01) }];
+        assert!(cfg.validate().is_err(), "restart before failure");
+
+        // Both machines down at once: nothing can serve.
+        let mut cfg = small_cfg();
+        cfg.failures = vec![
+            FailureEvent { machine: 0, at_s: 0.01, restart_s: None },
+            FailureEvent { machine: 1, at_s: 0.02, restart_s: None },
+        ];
+        assert!(cfg.validate().is_err());
+
+        small_cfg().validate().unwrap();
+    }
+
+    #[test]
+    fn routed_fleet_conserves_and_reports() {
+        let sim = ClusterSimulator::from_config(&knl(), &tiny_cnn(), small_cfg());
+        let out = sim.run().unwrap();
+        assert!(out.requests > 0);
+        assert_eq!(out.fleet.served + out.fleet.dropped, out.requests);
+        assert_eq!(out.machines.len(), 2);
+        assert!(out.fleet.availability > 0.999);
+        assert!(out.fleet.bw.mean > 0.0);
+        assert!(out.makespan_s >= out.duration_s * 0.5);
+        // Both machines saw traffic under po2c.
+        assert!(out.machines.iter().all(|m| m.routed > 0));
+        // Deterministic: same config, same result.
+        let again = ClusterSimulator::from_config(&knl(), &tiny_cnn(), small_cfg());
+        assert_eq!(again.run().unwrap().to_csv().to_string(), out.to_csv().to_string());
+    }
+
+    #[test]
+    fn placed_tenants_land_and_conserve() {
+        let mut cfg = small_cfg();
+        cfg.serve.rates = Vec::new();
+        cfg.serve.tenants = vec![
+            TenantSpec::new(tiny_cnn(), 0.6, ArrivalProcess::poisson(300.0)),
+            TenantSpec::new(tiny_cnn(), 0.4, ArrivalProcess::poisson(150.0)),
+        ];
+        let sim = ClusterSimulator::from_config(&knl(), &tiny_cnn(), cfg);
+        let out = sim.run().unwrap();
+        assert_eq!(out.fleet.served + out.fleet.dropped, out.requests);
+        let hosted: usize = out.machines.iter().map(|m| m.placed_tenants.len()).sum();
+        assert_eq!(hosted, 2, "every tenant is hosted somewhere");
+    }
+}

@@ -1,0 +1,286 @@
+//! Cluster run results: per-machine reports plus the fleet aggregate.
+
+use super::placement::Migration;
+use super::router::RouterPolicy;
+use crate::serve::LatencyStats;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// One machine's (or the fleet's) run accounting.
+#[derive(Debug, Clone)]
+pub struct MachineReport {
+    /// Machine label: the index, or `fleet` for the aggregate row.
+    pub machine: String,
+    pub cores: usize,
+    pub bw_scale: f64,
+    /// `up`, `failed` (down at end of run) or `restarted`.
+    pub status: String,
+    /// Front-door arrivals assigned here.
+    pub routed: usize,
+    /// Requests inherited from failed machines.
+    pub re_routed_in: usize,
+    /// Requests handed off at this machine's failure.
+    pub re_routed_out: usize,
+    pub served: usize,
+    pub dropped: usize,
+    pub batches: usize,
+    pub queue_peak: usize,
+    /// Fraction of the arrival window the machine was up (core-weighted
+    /// mean for the fleet row).
+    pub availability: f64,
+    pub throughput_ips: f64,
+    pub goodput_ips: f64,
+    pub latency: LatencyStats,
+    pub bw: Summary,
+    pub total_bytes: f64,
+    /// Weight-transfer bytes paid for migrations onto this machine.
+    pub migrated_bytes: f64,
+    /// Tenants hosted at end of run (placed mode; empty when routed).
+    pub placed_tenants: Vec<usize>,
+}
+
+impl MachineReport {
+    fn drop_rate(&self) -> f64 {
+        let arrived = self.served + self.dropped;
+        if arrived == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / arrived as f64
+        }
+    }
+}
+
+/// Everything a cluster run produces.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub router: RouterPolicy,
+    pub machines: Vec<MachineReport>,
+    /// The fleet aggregate: served/dropped/bytes sum over machines;
+    /// latency percentiles over the pooled sojourn record; bandwidth
+    /// mean is the sum of machine means and its std the root of the
+    /// summed variances (machines fluctuate independently — the paper's
+    /// statistical-shaping argument, one level up).
+    pub fleet: MachineReport,
+    pub migrations: Vec<Migration>,
+    /// Front-door arrivals over the whole run.
+    pub requests: usize,
+    pub duration_s: f64,
+    pub makespan_s: f64,
+}
+
+impl ClusterOutcome {
+    /// Human-readable per-machine table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "machine",
+            "cores",
+            "bw×",
+            "status",
+            "routed",
+            "re-in",
+            "re-out",
+            "served",
+            "drop %",
+            "avail %",
+            "thr (img/s)",
+            "goodput",
+            "p99 ms",
+            "BW GB/s",
+            "mig GB",
+        ])
+        .title(&format!("cluster ({} router)", self.router.name()))
+        .left_first();
+        for r in self.machines.iter().chain(std::iter::once(&self.fleet)) {
+            t.row(vec![
+                r.machine.clone(),
+                r.cores.to_string(),
+                format!("{:.2}", r.bw_scale),
+                r.status.clone(),
+                r.routed.to_string(),
+                r.re_routed_in.to_string(),
+                r.re_routed_out.to_string(),
+                r.served.to_string(),
+                format!("{:.1}", r.drop_rate() * 100.0),
+                format!("{:.1}", r.availability * 100.0),
+                format!("{:.0}", r.throughput_ips),
+                format!("{:.0}", r.goodput_ips),
+                format!("{:.2}", r.latency.p99_ms),
+                format!("{:.1}", r.bw.mean),
+                format!("{:.2}", r.migrated_bytes / 1e9),
+            ]);
+        }
+        t.render()
+    }
+
+    /// One row per machine plus the `fleet` row.
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec![
+            "machine",
+            "cores",
+            "bw_scale",
+            "router",
+            "status",
+            "routed",
+            "re_routed_in",
+            "re_routed_out",
+            "served",
+            "dropped",
+            "drop_rate",
+            "batches",
+            "queue_peak",
+            "availability",
+            "throughput_ips",
+            "goodput_ips",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "bw_mean_gbps",
+            "bw_std_gbps",
+            "total_gb",
+            "placed_tenants",
+            "migrated_gb",
+        ]);
+        let f = crate::util::csv::format_float;
+        for r in self.machines.iter().chain(std::iter::once(&self.fleet)) {
+            let tenants = r
+                .placed_tenants
+                .iter()
+                .map(|t| format!("t{t}"))
+                .collect::<Vec<_>>()
+                .join("+");
+            w.row(vec![
+                r.machine.clone(),
+                r.cores.to_string(),
+                f(r.bw_scale),
+                self.router.name().to_string(),
+                r.status.clone(),
+                r.routed.to_string(),
+                r.re_routed_in.to_string(),
+                r.re_routed_out.to_string(),
+                r.served.to_string(),
+                r.dropped.to_string(),
+                f(r.drop_rate()),
+                r.batches.to_string(),
+                r.queue_peak.to_string(),
+                f(r.availability),
+                f(r.throughput_ips),
+                f(r.goodput_ips),
+                f(r.latency.p50_ms),
+                f(r.latency.p95_ms),
+                f(r.latency.p99_ms),
+                f(r.bw.mean),
+                f(r.bw.std),
+                f(r.total_bytes / 1e9),
+                tenants,
+                f(r.migrated_bytes / 1e9),
+            ]);
+        }
+        w
+    }
+
+    /// Machine-readable run summary.
+    pub fn summary_json(&self) -> Json {
+        let mut migrations = Vec::new();
+        for m in &self.migrations {
+            migrations.push(
+                Json::obj()
+                    .with("tenant", m.tenant)
+                    .with("model", m.model.as_str())
+                    .with("from", m.from)
+                    .with("to", m.to)
+                    .with("at_s", m.at_s)
+                    .with("weight_gb", m.weight_bytes / 1e9),
+            );
+        }
+        Json::obj()
+            .with("router", self.router.name())
+            .with("machines", self.machines.len())
+            .with("requests", self.requests)
+            .with("duration_s", self.duration_s)
+            .with("makespan_s", self.makespan_s)
+            .with("served", self.fleet.served)
+            .with("dropped", self.fleet.dropped)
+            .with("drop_rate", self.fleet.drop_rate())
+            .with("availability", self.fleet.availability)
+            .with("throughput_ips", self.fleet.throughput_ips)
+            .with("goodput_ips", self.fleet.goodput_ips)
+            .with("p50_ms", self.fleet.latency.p50_ms)
+            .with("p99_ms", self.fleet.latency.p99_ms)
+            .with("bw_mean_gbps", self.fleet.bw.mean)
+            .with("bw_std_gbps", self.fleet.bw.std)
+            .with("migrations", migrations)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(label: &str) -> MachineReport {
+        MachineReport {
+            machine: label.to_string(),
+            cores: 64,
+            bw_scale: 1.0,
+            status: "up".to_string(),
+            routed: 100,
+            re_routed_in: 5,
+            re_routed_out: 0,
+            served: 100,
+            dropped: 5,
+            batches: 10,
+            queue_peak: 4,
+            availability: 1.0,
+            throughput_ips: 500.0,
+            goodput_ips: 480.0,
+            latency: crate::serve::LatencyRecorder::new().stats(),
+            bw: Summary::of(&[120.0, 180.0]),
+            total_bytes: 3e9,
+            migrated_bytes: 0.0,
+            placed_tenants: vec![0, 2],
+        }
+    }
+
+    fn outcome() -> ClusterOutcome {
+        ClusterOutcome {
+            router: RouterPolicy::PowerOfTwoChoices,
+            machines: vec![report("0"), report("1")],
+            fleet: report("fleet"),
+            migrations: vec![Migration {
+                tenant: 0,
+                model: "tiny".into(),
+                from: 1,
+                to: 0,
+                at_s: 0.1,
+                weight_bytes: 2e6,
+            }],
+            requests: 210,
+            duration_s: 0.5,
+            makespan_s: 0.6,
+        }
+    }
+
+    #[test]
+    fn csv_has_the_documented_columns_and_fleet_row() {
+        let out = outcome().to_csv().to_string();
+        let header = out.lines().next().unwrap();
+        for col in ["machine", "router", "re_routed_in", "placed_tenants", "migrated_gb"] {
+            assert!(header.split(',').any(|c| c == col), "missing {col} in {header}");
+        }
+        assert_eq!(out.lines().count(), 4, "2 machines + fleet + header");
+        assert!(out.lines().last().unwrap().starts_with("fleet,"));
+        assert!(out.contains("po2c"));
+        assert!(out.contains("t0+t2"));
+    }
+
+    #[test]
+    fn render_and_json_mention_the_router_and_migrations() {
+        let o = outcome();
+        assert!(o.render().contains("po2c"));
+        let j = o.summary_json().to_string_pretty();
+        assert!(j.contains("\"router\""));
+        assert!(j.contains("\"migrations\""));
+        assert!(j.contains("\"weight_gb\""));
+    }
+}

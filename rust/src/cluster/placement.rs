@@ -1,0 +1,232 @@
+//! Tenant placement: which machine hosts which lane.
+//!
+//! Placement is greedy and deterministic: lanes are considered in
+//! decreasing share order and each goes to the up machine with the most
+//! free cores whose hypothetical hosted set still fits — whole cores
+//! (every lane's slice rounded to its partition divisibility) and the
+//! machine-wide joint DRAM footprint
+//! ([`crate::sim::DramModel::check_joint`], under which same-model
+//! tenants share one weight image). The same rule re-places a failed
+//! machine's lanes at a failure boundary, each move paying a
+//! weight-transfer byte cost on the target machine ([`Migration`]).
+
+use super::machine::Lane;
+use crate::config::AcceleratorConfig;
+use crate::error::{Error, Result};
+use crate::reuse::model_weight_bytes;
+use crate::shaping::weighted_cores;
+use crate::sim::DramModel;
+
+/// One tenant move between machines, with the weight-transfer bytes the
+/// target machine paid for it.
+#[derive(Debug, Clone)]
+pub struct Migration {
+    /// Tenant (lane) index.
+    pub tenant: usize,
+    pub model: String,
+    pub from: usize,
+    pub to: usize,
+    pub at_s: f64,
+    /// Weight image bytes shipped to the target (one copy per
+    /// partition, matching the resident-set model).
+    pub weight_bytes: f64,
+}
+
+/// Whole-core split of one machine over its hosted lanes. Starts from
+/// [`weighted_cores`] over the lane shares, then rounds each slice down
+/// to a multiple of its partition count (never below one core per
+/// partition) so [`crate::serve::PartitionSet::build_slice`] accepts it.
+/// Remainder cores idle; the sum may exceed the machine only when the
+/// hosted set genuinely does not fit (the caller checks).
+pub(crate) fn lane_cores(machine_cores: usize, lanes: &[(f64, usize)]) -> Vec<usize> {
+    let shares: Vec<f64> = lanes.iter().map(|&(s, _)| s).collect();
+    weighted_cores(machine_cores, &shares)
+        .iter()
+        .zip(lanes)
+        .map(|(&c, &(_, parts))| ((c / parts) * parts).max(parts))
+        .collect()
+}
+
+/// Core split of machine `m` over the lanes it currently hosts.
+pub(crate) fn hosted_cores(lanes: &[Lane], hosting: &[usize], machine_cores: usize) -> Vec<usize> {
+    if hosting.is_empty() {
+        return Vec::new();
+    }
+    let specs: Vec<(f64, usize)> =
+        hosting.iter().map(|&i| (lanes[i].share, lanes[i].partitions)).collect();
+    lane_cores(machine_cores, &specs)
+}
+
+/// Does machine `m` fit `hosting ∪ {lane}`? Whole cores and, when
+/// capacity is enforced, the machine-wide joint DRAM footprint.
+fn fits(
+    lanes: &[Lane],
+    hosting: &[usize],
+    lane: usize,
+    accel: &AcceleratorConfig,
+    enforce_capacity: bool,
+) -> bool {
+    let mut hypothetical: Vec<usize> = hosting.to_vec();
+    hypothetical.push(lane);
+    let cores = hosted_cores(lanes, &hypothetical, accel.cores);
+    if cores.iter().sum::<usize>() > accel.cores {
+        return false;
+    }
+    if enforce_capacity {
+        let slices: Vec<(&crate::model::Graph, usize, usize)> = hypothetical
+            .iter()
+            .zip(&cores)
+            .map(|(&i, &c)| (&lanes[i].graph, lanes[i].partitions, c))
+            .collect();
+        if DramModel::new(accel).check_joint(&slices).is_err() {
+            return false;
+        }
+    }
+    true
+}
+
+/// The host for one lane: the least-loaded up machine that fits it,
+/// where load is committed share per core (a 0.5-share tenant weighs a
+/// 16-core box four times as heavily as a 64-core one); ties go to the
+/// lowest index. `None` when nothing fits.
+pub(crate) fn pick_host(
+    lanes: &[Lane],
+    lane: usize,
+    hosting: &[Vec<usize>],
+    accels: &[AcceleratorConfig],
+    up: &[bool],
+    enforce_capacity: bool,
+) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None; // (share density after, machine)
+    for (m, accel) in accels.iter().enumerate() {
+        if !up[m] || !fits(lanes, &hosting[m], lane, accel, enforce_capacity) {
+            continue;
+        }
+        let committed: f64 = hosting[m].iter().map(|&i| lanes[i].share).sum();
+        let density = (committed + lanes[lane].share) / accel.cores as f64;
+        if best.map_or(true, |(bd, _)| density < bd) {
+            best = Some((density, m));
+        }
+    }
+    best.map(|(_, m)| m)
+}
+
+/// Deterministic placement order: decreasing share, ties by index.
+pub(crate) fn demand_order(lanes: &[Lane], subset: &[usize]) -> Vec<usize> {
+    let mut order = subset.to_vec();
+    order.sort_by(|&a, &b| {
+        lanes[b]
+            .share
+            .partial_cmp(&lanes[a].share)
+            .expect("tenant shares are validated finite")
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// Initial placement of every lane onto the fleet. Mutates each lane's
+/// `machine`/`home` and fills `hosting` (machine -> hosted lanes).
+pub(crate) fn place_all(
+    lanes: &mut [Lane],
+    hosting: &mut [Vec<usize>],
+    accels: &[AcceleratorConfig],
+    enforce_capacity: bool,
+) -> Result<()> {
+    let up = vec![true; accels.len()];
+    let all: Vec<usize> = (0..lanes.len()).collect();
+    for i in demand_order(lanes, &all) {
+        let Some(m) = pick_host(lanes, i, hosting, accels, &up, enforce_capacity) else {
+            return Err(Error::InfeasiblePartitioning(format!(
+                "tenant {i} ({}, share {:.3}, {} partitions) fits on no machine",
+                lanes[i].graph.name, lanes[i].share, lanes[i].partitions
+            )));
+        };
+        hosting[m].push(i);
+        lanes[i].machine = m;
+        lanes[i].home = m;
+    }
+    Ok(())
+}
+
+/// The weight-transfer bytes a migration of `lane` ships.
+pub(crate) fn migration_bytes(lane: &Lane, elem_bytes: f64) -> f64 {
+    model_weight_bytes(&lane.graph, elem_bytes).0 * lane.partitions as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{resnet50, tiny_cnn, vgg16};
+
+    fn lane(graph: crate::model::Graph, share: f64, partitions: usize) -> Lane {
+        let mut l = Lane::new(graph, 0);
+        l.share = share;
+        l.partitions = partitions;
+        l
+    }
+
+    fn knl(cores: usize) -> AcceleratorConfig {
+        let mut a = AcceleratorConfig::knl_7210();
+        a.cores = cores;
+        a
+    }
+
+    #[test]
+    fn lane_cores_respects_partition_divisibility() {
+        // 64 cores at 60/40: weighted_cores gives 38/26; rounded to the
+        // lanes' partition counts (4 and 3) -> 36/24, remainder idle.
+        assert_eq!(lane_cores(64, &[(0.6, 4), (0.4, 3)]), vec![36, 24]);
+        // Rounding never starves a lane below one core per partition.
+        assert_eq!(lane_cores(8, &[(0.9, 1), (0.1, 4)]), vec![7, 4]);
+    }
+
+    #[test]
+    fn placement_spreads_equal_tenants_over_equal_machines() {
+        let mut lanes = vec![lane(tiny_cnn(), 0.5, 1), lane(tiny_cnn(), 0.5, 1)];
+        let accels = vec![knl(64), knl(64)];
+        let mut hosting = vec![Vec::new(), Vec::new()];
+        place_all(&mut lanes, &mut hosting, &accels, true).unwrap();
+        assert_ne!(lanes[0].machine, lanes[1].machine);
+        assert_eq!(lanes[0].home, lanes[0].machine);
+    }
+
+    #[test]
+    fn heavy_tenant_lands_on_the_big_machine() {
+        let mut lanes = vec![lane(vgg16(), 0.7, 2), lane(resnet50(), 0.3, 1)];
+        let accels = vec![knl(16), knl(64)];
+        let mut hosting = vec![Vec::new(), Vec::new()];
+        place_all(&mut lanes, &mut hosting, &accels, true).unwrap();
+        // The 0.7-share lane is placed first and takes the 64-core box.
+        assert_eq!(lanes[0].machine, 1);
+    }
+
+    #[test]
+    fn infeasible_fleet_is_rejected() {
+        // A one-machine fleet whose DRAM fits either tenant alone but
+        // not both: the first placement passes, the second finds no
+        // host. The capacity is picked between the two footprints so
+        // the test is arithmetic, not calibration.
+        use crate::model::vgg19;
+        use crate::util::units::Bytes;
+        let d = DramModel::new(&knl(64));
+        let (vgg, v19) = (vgg16(), vgg19());
+        // Alone, the first-placed tenant owns all 64 cores; together
+        // each takes a 32-core slice.
+        let alone = d.footprint(&vgg, 8, 64).total().0;
+        let joint = d.footprint_joint(&[(&vgg, 8, 32), (&v19, 8, 32)]).total().0;
+        assert!(alone < joint);
+        let mut a = knl(64);
+        a.mem_capacity = Bytes((alone + joint) / 2.0 / d.high_water);
+        let mut lanes = vec![lane(vgg, 0.5, 8), lane(v19, 0.5, 8)];
+        let mut hosting = vec![Vec::new()];
+        let err = place_all(&mut lanes, &mut hosting, &[a], true).unwrap_err();
+        assert!(matches!(err, Error::InfeasiblePartitioning(_)), "{err}");
+    }
+
+    #[test]
+    fn migration_bytes_scale_with_partitions() {
+        let l1 = lane(vgg16(), 1.0, 1);
+        let l4 = lane(vgg16(), 1.0, 4);
+        assert!((migration_bytes(&l4, 4.0) / migration_bytes(&l1, 4.0) - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,214 @@
+//! The fleet front door: deterministic request routing.
+//!
+//! The router runs as a *pre-simulation* pass over the seeded arrival
+//! stream: because the open-loop arrivals and the failure schedule are
+//! both known up front, every request's target machine can be assigned
+//! before any engine window runs. Load awareness comes from a fluid
+//! backlog model — each machine drains its queue at its roofline
+//! capacity, so the expected wait at time `t` is `backlog / capacity` —
+//! which is exactly the statistical-shaping argument of the paper lifted
+//! one level up: the same smoothing that staggered partitions give a
+//! memory bus, load-aware routing gives a fleet.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Xoshiro256StarStar;
+
+/// How the front door spreads arrivals over the machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle through the up machines in index order. Load-blind: a slow
+    /// machine gets the same share as a fast one.
+    RoundRobin,
+    /// Send each request to the machine with the smallest expected wait
+    /// (fluid backlog over roofline capacity). Needs global state.
+    JoinShortestQueue,
+    /// Sample two distinct machines uniformly and pick the less loaded —
+    /// the classic "power of two choices", which captures most of JSQ's
+    /// benefit with two probes instead of a global scan.
+    PowerOfTwoChoices,
+}
+
+impl RouterPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::JoinShortestQueue => "jsq",
+            RouterPolicy::PowerOfTwoChoices => "po2c",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "round_robin" | "rr" => Ok(Self::RoundRobin),
+            "jsq" | "join_shortest_queue" => Ok(Self::JoinShortestQueue),
+            "po2c" | "power_of_two" | "power_of_two_choices" => Ok(Self::PowerOfTwoChoices),
+            other => Err(Error::Usage(format!(
+                "unknown router policy '{other}' (round_robin|jsq|po2c)"
+            ))),
+        }
+    }
+}
+
+/// Seed-deterministic router state. `capacity[i]` is machine `i`'s
+/// roofline throughput in img/s; the fluid backlog decays at that rate
+/// between arrivals.
+#[derive(Debug, Clone)]
+pub(crate) struct Router {
+    policy: RouterPolicy,
+    rng: Xoshiro256StarStar,
+    rr_next: usize,
+    backlog: Vec<f64>,
+    capacity: Vec<f64>,
+    last_t: f64,
+}
+
+impl Router {
+    pub(crate) fn new(policy: RouterPolicy, seed: u64, capacity: Vec<f64>) -> Self {
+        assert!(!capacity.is_empty());
+        Self {
+            policy,
+            rng: Xoshiro256StarStar::seed_from_u64(seed),
+            rr_next: 0,
+            backlog: vec![0.0; capacity.len()],
+            capacity,
+            last_t: 0.0,
+        }
+    }
+
+    /// Expected wait at machine `i` under the fluid model.
+    fn wait(&self, i: usize) -> f64 {
+        self.backlog[i] / self.capacity[i].max(f64::MIN_POSITIVE)
+    }
+
+    /// Route one arrival at time `t` to an up machine, or `None` when
+    /// the whole fleet is down. Mutates the fluid backlog.
+    pub(crate) fn route(&mut self, t: f64, up: &[bool]) -> Option<usize> {
+        assert_eq!(up.len(), self.capacity.len());
+        let dt = (t - self.last_t).max(0.0);
+        self.last_t = t;
+        for (b, &c) in self.backlog.iter_mut().zip(&self.capacity) {
+            *b = (*b - c * dt).max(0.0);
+        }
+        let live: Vec<usize> = (0..up.len()).filter(|&i| up[i]).collect();
+        if live.is_empty() {
+            return None;
+        }
+        let pick = match self.policy {
+            RouterPolicy::RoundRobin => {
+                // Cycle over *machine indices* so the rotation is stable
+                // across failure epochs, skipping down machines.
+                let mut pick = None;
+                for _ in 0..up.len() {
+                    let i = self.rr_next % up.len();
+                    self.rr_next = (self.rr_next + 1) % up.len();
+                    if up[i] {
+                        pick = Some(i);
+                        break;
+                    }
+                }
+                pick.unwrap_or(live[0])
+            }
+            RouterPolicy::JoinShortestQueue => {
+                let mut best = live[0];
+                for &i in &live[1..] {
+                    if self.wait(i) < self.wait(best) {
+                        best = i;
+                    }
+                }
+                best
+            }
+            RouterPolicy::PowerOfTwoChoices => {
+                let a = live[self.rng.next_below(live.len() as u64) as usize];
+                if live.len() == 1 {
+                    a
+                } else {
+                    let mut b = a;
+                    while b == a {
+                        b = live[self.rng.next_below(live.len() as u64) as usize];
+                    }
+                    if self.wait(b) < self.wait(a) {
+                        b
+                    } else {
+                        a
+                    }
+                }
+            }
+        };
+        self.backlog[pick] += 1.0;
+        Some(pick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize) -> Vec<f64> {
+        vec![100.0; n]
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        let policies = [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::JoinShortestQueue,
+            RouterPolicy::PowerOfTwoChoices,
+        ];
+        for p in policies {
+            assert_eq!(RouterPolicy::from_name(p.name()).unwrap(), p);
+        }
+        assert_eq!(RouterPolicy::from_name("rr").unwrap(), RouterPolicy::RoundRobin);
+        assert_eq!(
+            RouterPolicy::from_name("power_of_two").unwrap(),
+            RouterPolicy::PowerOfTwoChoices
+        );
+        assert!(RouterPolicy::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_down_machines() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 1, uniform(3));
+        let up = vec![true; 3];
+        let picks: Vec<usize> = (0..6).map(|k| r.route(k as f64 * 1e-3, &up).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        let down = vec![true, false, true];
+        let picks: Vec<usize> =
+            (0..4).map(|k| r.route(0.01 + k as f64 * 1e-3, &down).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn jsq_prefers_the_faster_machine_under_load() {
+        // Machine 0 drains 4× faster; a burst of simultaneous arrivals
+        // should land there 4:1-ish, never all on the slow one.
+        let mut r = Router::new(RouterPolicy::JoinShortestQueue, 1, vec![400.0, 100.0]);
+        let up = vec![true; 2];
+        let mut counts = [0usize; 2];
+        for _ in 0..100 {
+            counts[r.route(0.0, &up).unwrap()] += 1;
+        }
+        assert!(counts[0] > counts[1] * 3, "{counts:?}");
+    }
+
+    #[test]
+    fn po2c_is_seed_deterministic_and_spreads_load() {
+        let seq = |seed: u64| -> Vec<usize> {
+            let mut r = Router::new(RouterPolicy::PowerOfTwoChoices, seed, uniform(3));
+            let up = vec![true; 3];
+            (0..64).map(|k| r.route(k as f64 * 1e-4, &up).unwrap()).collect()
+        };
+        assert_eq!(seq(7), seq(7));
+        assert_ne!(seq(7), seq(8));
+        let picks = seq(7);
+        for m in 0..3 {
+            assert!(picks.iter().filter(|&&p| p == m).count() > 0);
+        }
+    }
+
+    #[test]
+    fn all_down_routes_nowhere() {
+        let mut r = Router::new(RouterPolicy::JoinShortestQueue, 1, uniform(2));
+        assert_eq!(r.route(0.0, &[false, false]), None);
+        assert_eq!(r.route(0.0, &[false, true]), Some(1));
+    }
+}

@@ -27,6 +27,11 @@
 //!   (Poisson/MMPP), per-partition admission + dynamic batching, and
 //!   latency percentiles / throughput–latency tradeoff curves driven
 //!   through the fluid engine's dynamic mode.
+//! * [`cluster`] — fleet-scale serving: heterogeneous machines behind a
+//!   deterministic front-door router (round-robin / JSQ / po2c), tenant
+//!   placement under joint DRAM footprints, machine failures with
+//!   drain-and-re-route, and availability / fleet-bandwidth accounting —
+//!   the paper's statistical-shaping argument applied across machines.
 //! * [`sweep`] — parallel scenario-sweep engine: grids of
 //!   models × partitions × stagger policies × arrival rates × bandwidth
 //!   configs fanned out across worker threads and aggregated into a
@@ -54,6 +59,7 @@
 //! ```
 
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -71,6 +77,10 @@ pub mod bench_support;
 
 /// Convenience re-exports of the most commonly used types.
 pub mod prelude {
+    pub use crate::cluster::{
+        ClusterConfig, ClusterOutcome, ClusterSimulator, FailureEvent, MachineConfig,
+        MachineReport, Migration, RouterPolicy,
+    };
     pub use crate::config::{AcceleratorConfig, ExperimentConfig};
     pub use crate::error::{Error, Result};
     pub use crate::model::{

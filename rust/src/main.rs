@@ -6,20 +6,21 @@
 //!   models                    print the model zoo inventory
 //!   sweep                     parallel scenario sweep (models × partitions × bandwidth)
 //!   serve                     open-loop serving: latency percentiles vs arrival rate
+//!   cluster                   fleet-scale serving: routed machines, placement, failures
 //!   e2e                       real-compute coordinator run (PJRT)
 
 use std::process::ExitCode;
 use trafficshape::cli::{App, CommandSpec, Matches};
+use trafficshape::cluster::{
+    ClusterConfig, ClusterSimulator, FailureEvent, MachineConfig, RouterPolicy,
+};
 use trafficshape::config::{AcceleratorConfig, ExperimentConfig};
 use trafficshape::coordinator::{Coordinator, CoordinatorConfig};
 use trafficshape::error::{Error, Result};
 use trafficshape::experiments::{list_experiments, run_by_id};
 use trafficshape::model;
 use trafficshape::runtime::find_artifact_dir;
-use trafficshape::serve::{
-    AdaptiveConfig, ArrivalKind, ArrivalProcess, DispatchPolicy, ServeExperiment, TenantMode,
-    TenantSpec,
-};
+use trafficshape::serve::{ServeConfig, ServeExperiment, TenantMode};
 use trafficshape::shaping::StaggerPolicy;
 use trafficshape::sweep::{SweepGrid, SweepRunner};
 use trafficshape::util::table::Table;
@@ -82,6 +83,29 @@ fn app() -> App {
                 .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
                 .opt("out", "DIR", None, "also write serve_curve.csv + serve_summary.json here")
                 .opt("accel", "NAME", Some("knl_7210"), "accelerator preset"),
+            CommandSpec::new("cluster", "fleet-scale serving: routed machines, placement, failures")
+                .opt("model", "NAME", Some("resnet50"), "fleet-wide model (routed mode)")
+                .opt("machines", "LIST", Some("64,64"), "machines as CORES[:BW_SCALE],...")
+                .opt("router", "NAME", Some("po2c"), "front door: round_robin|jsq|po2c")
+                .opt("fail", "LIST", None, "failure events: MACHINE@AT_S[:RESTART_S],...")
+                .opt("partitions", "N", Some("4"), "partitions per machine (routed mode)")
+                .opt("rate", "LIST", None, "fleet arrival rate in img/s (first value used)")
+                .opt("duration", "S", Some("0.5"), "arrival window in seconds")
+                .opt("seed", "N", Some("42"), "arrival-stream + router rng seed")
+                .opt("policy", "NAME", Some("shortest_queue"), "round_robin|shortest_queue")
+                .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
+                .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
+                .opt("rate-profile", "L:H:P[:S]", None, "rate profile low:high:period[:step|ramp]")
+                .opt("stagger", "NAME", Some("uniform_phase"), "none|uniform_phase|random_delay")
+                .opt("queue-cap", "N", Some("0"), "per-partition queue bound (0 = unbounded)")
+                .opt("slo-ms", "MS", Some("0"), "latency deadline; stale work is shed (0 = none)")
+                .opt("batch-timeout", "MS", Some("0"), "hold under-filled batches (0 = on idle)")
+                .opt("tenants", "LIST", None, "placed mode: bin-pack model:share:rate,...")
+                .opt("tenant-partitions", "N", Some("1"), "tenants: partitions per slice")
+                .opt("samples", "N", Some("400"), "trace samples")
+                .opt("threads", "N", Some("0"), "worker threads (0 = all cores)")
+                .opt("out", "DIR", None, "write cluster_machines.csv + cluster_summary.json here")
+                .opt("accel", "NAME", Some("knl_7210"), "base accelerator preset"),
             CommandSpec::new("tune", "auto-select the partition count for a model")
                 .opt("model", "NAME", Some("resnet50"), "model name")
                 .opt("accel", "NAME", Some("knl_7210"), "accelerator preset")
@@ -233,77 +257,13 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
 fn cmd_serve(m: &Matches) -> Result<()> {
     let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
     let graph = model::by_name(m.get("model").unwrap_or("resnet50"))?;
-    let seed = m.get_usize("seed")?.unwrap_or(42) as u64;
-    let burstiness = m.get_f64("burstiness")?.unwrap_or(4.0);
-    // A rate profile overrides --arrival: the piecewise process IS the
-    // arrival model, and its mean becomes the default grid rate.
-    let profile = m.get("rate-profile").map(ArrivalProcess::parse_profile).transpose()?;
-    let arrival = match &profile {
-        Some(p) => ArrivalKind::from_process(p).expect("parse_profile returns piecewise"),
-        None => ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?,
-    };
-    let policy = DispatchPolicy::from_name(m.get("policy").unwrap_or("shortest_queue"))?;
-    let stagger = StaggerPolicy::from_name(m.get("stagger").unwrap_or("uniform_phase"), seed)?;
-    let partitions = m.get_usize_list("partitions")?.unwrap_or_else(|| vec![1, 2, 4]);
-
-    let mut exp = ServeExperiment::new(&accel, &graph)
-        .partitions(partitions.clone())
-        .arrival(arrival)
-        .duration(m.get_f64("duration")?.unwrap_or(0.5))
-        .seed(seed)
-        .policy(policy)
-        .stagger(stagger)
-        .queue_cap(m.get_usize("queue-cap")?.unwrap_or(0))
-        .slo_ms(m.get_f64("slo-ms")?.unwrap_or(0.0))
-        .batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
-        .trace_samples(m.get_usize("samples")?.unwrap_or(400))
-        .threads(m.get_usize("threads")?.unwrap_or(0));
-    if m.flag("adaptive") {
-        let epoch_s = m.get_f64("epoch-ms")?.unwrap_or(50.0) / 1e3;
-        exp = exp.adaptive(AdaptiveConfig::new(partitions).epoch_s(epoch_s));
-    }
-    if let Some(rates) = m.get_f64_list("rate")? {
-        exp = exp.rates(rates);
-    } else if let Some(p) = &profile {
-        exp = exp.rates(vec![p.mean_rate()]);
-    }
-    // Multi-tenant mode: each tenant brings its own model/share/rate;
-    // the machine-wide --queue-cap/--slo-ms apply per tenant.
-    if let Some(spec) = m.get("tenants") {
-        // Tenants replace the (rate × partitions) grid outright — reject
-        // knobs that would otherwise be silently ignored. Defaulted
-        // flags cannot be told apart from explicit ones, so non-default
-        // values are the signal.
-        let non_default_arrival = m.get("arrival").is_some_and(|a| a != "poisson");
-        let non_default_parts = m.get("partitions").is_some_and(|p| p != "1,2,4");
-        if m.flag("adaptive")
-            || m.get("rate-profile").is_some()
-            || m.get("rate").is_some()
-            || non_default_arrival
-            || non_default_parts
-        {
-            return Err(Error::Usage(
-                "--tenants is its own serving mode: drop --adaptive/--rate/--rate-profile/\
-                 --arrival/--partitions (each tenant carries its own Poisson rate in \
-                 model:share:rate; use --tenant-partitions for per-slice partitioning)"
-                    .into(),
-            ));
-        }
-        let mut specs = TenantSpec::parse_list(spec)?;
-        let cap = m.get_usize("queue-cap")?.unwrap_or(0);
-        let slo = m.get_f64("slo-ms")?.unwrap_or(0.0);
-        let per_tenant = m.get_usize("tenant-partitions")?.unwrap_or(1);
-        for t in &mut specs {
-            t.queue_cap = cap;
-            t.slo_ms = slo;
-            t.partitions = per_tenant;
-        }
-        exp = exp
-            .tenants(specs)
-            .tenant_epoch_ms(m.get_f64("quantum-ms")?.unwrap_or(5.0))
-            .tenant_rebalance(m.flag("rebalance"));
-    }
-    let curve = exp.run()?;
+    // The whole flag surface decodes into one ServeConfig; only the
+    // worker-thread count stays with the experiment front-end.
+    let cfg = ServeConfig::from_cli(m)?;
+    cfg.validate()?;
+    let curve = ServeExperiment::from_config(&accel, &graph, cfg)
+        .threads(m.get_usize("threads")?.unwrap_or(0))
+        .run()?;
 
     print!("{}", curve.render());
     let co = curve.tenant_aggregate(TenantMode::Coscheduled);
@@ -346,6 +306,76 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         curve.to_csv().write_to(&dir.join("serve_curve.csv"))?;
         std::fs::write(dir.join("serve_summary.json"), curve.summary_json().to_string_pretty())?;
         println!("wrote {}/serve_curve.csv", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_cluster(m: &Matches) -> Result<()> {
+    use trafficshape::serve::TenantSpec;
+    let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
+    let graph = model::by_name(m.get("model").unwrap_or("resnet50"))?;
+    // One ServeConfig carries the shared serving knobs: the fleet keeps
+    // arrival/rate/duration/seed, each machine its queue/batch/stagger.
+    let mut base = ServeConfig::default();
+    base.apply_cli(m)?;
+    if let Some(p) = m.get_usize("partitions")? {
+        base.partitions = vec![p];
+    }
+    let mut machines = MachineConfig::parse_list(m.get("machines").unwrap_or("64,64"))?;
+    for mc in &mut machines {
+        mc.serve = base.clone();
+    }
+    let mut cfg = ClusterConfig {
+        machines,
+        router: RouterPolicy::from_name(m.get("router").unwrap_or("po2c"))?,
+        failures: match m.get("fail") {
+            Some(spec) => FailureEvent::parse_list(spec)?,
+            None => Vec::new(),
+        },
+        serve: base,
+    };
+    if let Some(spec) = m.get("tenants") {
+        let mut specs = TenantSpec::parse_list(spec)?;
+        let per_tenant = m.get_usize("tenant-partitions")?.unwrap_or(1);
+        for t in &mut specs {
+            t.queue_cap = cfg.serve.queue_cap;
+            t.slo_ms = cfg.serve.slo_ms;
+            t.partitions = per_tenant;
+        }
+        cfg.serve.tenants = specs;
+    }
+    let out = ClusterSimulator::from_config(&accel, &graph, cfg)
+        .threads(m.get_usize("threads")?.unwrap_or(0))
+        .run()?;
+
+    print!("{}", out.render());
+    println!(
+        "→ fleet: {:.0} img/s served / {:.0} goodput, p99 {:.1} ms, availability {:.1}%, \
+         BW {:.1} ± {:.1} GB/s",
+        out.fleet.throughput_ips,
+        out.fleet.goodput_ips,
+        out.fleet.latency.p99_ms,
+        out.fleet.availability * 100.0,
+        out.fleet.bw.mean,
+        out.fleet.bw.std
+    );
+    for mig in &out.migrations {
+        println!(
+            "→ migrated tenant {} ({}) machine {} → {} at {:.3} s ({:.2} GB of weights)",
+            mig.tenant,
+            mig.model,
+            mig.from,
+            mig.to,
+            mig.at_s,
+            mig.weight_bytes / 1e9
+        );
+    }
+    if let Some(dir) = m.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        out.to_csv().write_to(&dir.join("cluster_machines.csv"))?;
+        std::fs::write(dir.join("cluster_summary.json"), out.summary_json().to_string_pretty())?;
+        println!("wrote {}/cluster_machines.csv", dir.display());
     }
     Ok(())
 }
@@ -454,6 +484,7 @@ fn run() -> Result<()> {
         "models" => cmd_models(),
         "sweep" => cmd_sweep(&matches),
         "serve" => cmd_serve(&matches),
+        "cluster" => cmd_cluster(&matches),
         "tune" => cmd_tune(&matches),
         "mixed" => cmd_mixed(&matches),
         "e2e" => cmd_e2e(&matches),

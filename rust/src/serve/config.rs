@@ -1,0 +1,464 @@
+//! The unified serving configuration.
+//!
+//! Serving grew one knob at a time — arrival process, rate grid,
+//! partition counts, queue caps, SLOs, batch timeouts, stagger + re-arm,
+//! the adaptive loop, tenants, quanta, re-balancing — and each knob
+//! landed as another builder setter on [`super::ServeSimulator`] and
+//! [`super::ServeExperiment`] plus another CLI flag. [`ServeConfig`]
+//! collapses that sprawl into one plain-data struct with `Default`,
+//! validation, and a single CLI decoder, so a serving scenario is a
+//! value that can be stored, compared, embedded (the cluster layer
+//! keeps one per machine) and handed to any of the front-ends:
+//!
+//! * [`super::ServeSimulator::from_config`] — one run at
+//!   `partitions[0]` / `rates[0]`;
+//! * [`super::ServeExperiment::from_config`] — the full
+//!   rate × partition grid;
+//! * [`crate::cluster::ClusterConfig`] — one `ServeConfig` per machine.
+//!
+//! The old builder setters survive as thin shims for one release; new
+//! code should construct a `ServeConfig` and use the `from_config`
+//! constructors.
+
+use super::arrival::ArrivalProcess;
+use super::curve::ArrivalKind;
+use super::queue::DispatchPolicy;
+use super::tenant::TenantSpec;
+use super::topology::AdaptiveConfig;
+use crate::cli::Matches;
+use crate::error::{Error, Result};
+use crate::shaping::StaggerPolicy;
+
+/// Everything that shapes one serving scenario, minus the machine and
+/// the model (those stay with the front-end that owns them).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Arrival-process family; instantiated per rate via
+    /// [`ArrivalKind::process`].
+    pub arrival: ArrivalKind,
+    /// Arrival rates (img/s) to serve. Empty means "auto": the
+    /// experiment calibrates 0.5×/0.8×/1.1× of roofline capacity, and
+    /// the one-shot simulator falls back to 100 img/s.
+    pub rates: Vec<f64>,
+    /// Partition counts. The experiment sweeps all of them; the
+    /// one-shot simulator serves the first entry.
+    pub partitions: Vec<usize>,
+    /// Arrival window in seconds.
+    pub duration_s: f64,
+    /// Arrival-stream RNG seed.
+    pub seed: u64,
+    /// How arrivals are routed to partition queues.
+    pub policy: DispatchPolicy,
+    /// Deployment-time de-phasing of the partitions.
+    pub stagger: StaggerPolicy,
+    /// Dynamic-batch cap (0 = the partition's full batch share).
+    pub max_batch: usize,
+    /// Per-partition queue bound (0 = unbounded).
+    pub queue_cap: usize,
+    /// Latency deadline in ms (0 = none).
+    pub slo_ms: f64,
+    /// Hold under-filled batches up to this long (0 = dispatch on idle).
+    pub batch_timeout_ms: f64,
+    /// Re-arm the stagger gates after a partition-wide lull.
+    pub stagger_rearm: bool,
+    /// Quantile of the measured gap distribution the adaptive re-arm
+    /// threshold derives from (0 disables the adaptive threshold).
+    pub rearm_quantile: f64,
+    /// Runtime re-partitioning knobs (`None` = static topology).
+    pub adaptive: Option<AdaptiveConfig>,
+    /// Multi-tenant mode: each tenant brings its own model and stream.
+    /// Non-empty tenants replace the rate × partition grid.
+    pub tenants: Vec<TenantSpec>,
+    /// Tenant epoch in seconds: the time-sharing quantum and the
+    /// co-scheduled re-balance window.
+    pub tenant_epoch_s: f64,
+    /// Move cores between co-scheduled tenant slices at epoch ends.
+    pub tenant_rebalance: bool,
+    /// Bandwidth-trace resample count.
+    pub trace_samples: usize,
+    /// Apply the DRAM feasibility check (ablations switch it off).
+    pub enforce_capacity: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            arrival: ArrivalKind::Poisson,
+            rates: Vec::new(),
+            partitions: vec![1, 2, 4],
+            duration_s: 0.5,
+            seed: 42,
+            policy: DispatchPolicy::ShortestQueue,
+            stagger: StaggerPolicy::UniformPhase,
+            max_batch: 0,
+            queue_cap: 0,
+            slo_ms: 0.0,
+            batch_timeout_ms: 0.0,
+            stagger_rearm: true,
+            rearm_quantile: 0.95,
+            adaptive: None,
+            tenants: Vec::new(),
+            tenant_epoch_s: 0.005,
+            tenant_rebalance: false,
+            trace_samples: 400,
+            enforce_capacity: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Structural validation — everything that can be rejected without a
+    /// machine or a model. The run-time checks (DRAM capacity,
+    /// partition divisibility) still live with the front-ends.
+    pub fn validate(&self) -> Result<()> {
+        if self.partitions.iter().any(|&n| n == 0) {
+            return Err(Error::InvalidConfig("partition counts must be >= 1".into()));
+        }
+        if !(self.duration_s.is_finite() && self.duration_s >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "serve duration must be finite and >= 0 s: {}",
+                self.duration_s
+            )));
+        }
+        for &r in &self.rates {
+            if !(r.is_finite() && r >= 0.0) {
+                return Err(Error::InvalidConfig(format!(
+                    "arrival rate must be finite and >= 0: {r}"
+                )));
+            }
+        }
+        if !(self.slo_ms.is_finite() && self.slo_ms >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "SLO must be finite and >= 0 ms: {}",
+                self.slo_ms
+            )));
+        }
+        if !(self.batch_timeout_ms.is_finite() && self.batch_timeout_ms >= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "batch timeout must be finite and >= 0 ms: {}",
+                self.batch_timeout_ms
+            )));
+        }
+        if !(self.rearm_quantile.is_finite() && (0.0..1.0).contains(&self.rearm_quantile)) {
+            return Err(Error::InvalidConfig(format!(
+                "re-arm quantile must be in [0, 1): {}",
+                self.rearm_quantile
+            )));
+        }
+        if !(self.tenant_epoch_s.is_finite() && self.tenant_epoch_s > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "tenant epoch must be finite and > 0 s: {}",
+                self.tenant_epoch_s
+            )));
+        }
+        if self.trace_samples == 0 {
+            return Err(Error::InvalidConfig("trace_samples must be >= 1".into()));
+        }
+        if let Some(a) = &self.adaptive {
+            a.validate()?;
+        }
+        for t in &self.tenants {
+            t.validate()?;
+        }
+        Ok(())
+    }
+
+    /// The rate the one-shot simulator serves: the first configured
+    /// rate, or the legacy 100 img/s default.
+    pub(crate) fn headline_rate(&self) -> f64 {
+        self.rates.first().copied().unwrap_or(100.0)
+    }
+
+    /// The partition count the one-shot simulator serves: the first
+    /// configured count, or the legacy default of 4.
+    pub(crate) fn headline_partitions(&self) -> usize {
+        self.partitions.first().copied().unwrap_or(4)
+    }
+
+    /// Decode the flags shared by every serving front-end (`serve`,
+    /// `cluster`): arrival family + rate/profile, dispatch policy,
+    /// stagger, duration, seed, queue cap, SLO, batch timeout, trace
+    /// samples. Flags a command does not declare keep their defaults.
+    pub fn apply_cli(&mut self, m: &Matches) -> Result<()> {
+        if let Some(s) = m.get_usize("seed")? {
+            self.seed = s as u64;
+        }
+        let burstiness = m.get_f64("burstiness")?.unwrap_or(4.0);
+        // A rate profile overrides --arrival: the piecewise process IS
+        // the arrival model, and its mean becomes the default grid rate.
+        let profile = m.get("rate-profile").map(ArrivalProcess::parse_profile).transpose()?;
+        self.arrival = match &profile {
+            Some(p) => ArrivalKind::from_process(p).expect("parse_profile returns piecewise"),
+            None => ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?,
+        };
+        if let Some(rates) = m.get_f64_list("rate")? {
+            self.rates = rates;
+        } else if let Some(p) = &profile {
+            self.rates = vec![p.mean_rate()];
+        }
+        self.policy = DispatchPolicy::from_name(m.get("policy").unwrap_or("shortest_queue"))?;
+        self.stagger =
+            StaggerPolicy::from_name(m.get("stagger").unwrap_or("uniform_phase"), self.seed)?;
+        if let Some(d) = m.get_f64("duration")? {
+            self.duration_s = d;
+        }
+        if let Some(c) = m.get_usize("queue-cap")? {
+            self.queue_cap = c;
+        }
+        if let Some(s) = m.get_f64("slo-ms")? {
+            self.slo_ms = s;
+        }
+        if let Some(t) = m.get_f64("batch-timeout")? {
+            self.batch_timeout_ms = t;
+        }
+        if let Some(s) = m.get_usize("samples")? {
+            self.trace_samples = s;
+        }
+        Ok(())
+    }
+
+    /// Decode the full `serve` command surface — the shared knobs plus
+    /// partitions, the adaptive switch, and the tenant mode (with the
+    /// tenant/grid conflict rules the `serve` subcommand always had).
+    pub fn from_cli(m: &Matches) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        cfg.apply_cli(m)?;
+        if let Some(parts) = m.get_usize_list("partitions")? {
+            cfg.partitions = parts;
+        }
+        if m.flag("adaptive") {
+            let epoch_s = m.get_f64("epoch-ms")?.unwrap_or(50.0) / 1e3;
+            cfg.adaptive = Some(AdaptiveConfig::new(cfg.partitions.clone()).epoch_s(epoch_s));
+        }
+        // Multi-tenant mode: each tenant brings its own model/share/rate;
+        // the machine-wide --queue-cap/--slo-ms apply per tenant.
+        if let Some(spec) = m.get("tenants") {
+            // Tenants replace the (rate × partitions) grid outright —
+            // reject knobs that would otherwise be silently ignored.
+            // Defaulted flags cannot be told apart from explicit ones,
+            // so non-default values are the signal.
+            let non_default_arrival = m.get("arrival").is_some_and(|a| a != "poisson");
+            let non_default_parts = m.get("partitions").is_some_and(|p| p != "1,2,4");
+            if m.flag("adaptive")
+                || m.get("rate-profile").is_some()
+                || m.get("rate").is_some()
+                || non_default_arrival
+                || non_default_parts
+            {
+                return Err(Error::Usage(
+                    "--tenants is its own serving mode: drop --adaptive/--rate/--rate-profile/\
+                     --arrival/--partitions (each tenant carries its own Poisson rate in \
+                     model:share:rate; use --tenant-partitions for per-slice partitioning)"
+                        .into(),
+                ));
+            }
+            let mut specs = TenantSpec::parse_list(spec)?;
+            let per_tenant = m.get_usize("tenant-partitions")?.unwrap_or(1);
+            for t in &mut specs {
+                t.queue_cap = cfg.queue_cap;
+                t.slo_ms = cfg.slo_ms;
+                t.partitions = per_tenant;
+            }
+            cfg.tenants = specs;
+            cfg.tenant_epoch_s = m.get_f64("quantum-ms")?.unwrap_or(5.0) / 1e3;
+            cfg.tenant_rebalance = m.flag("rebalance");
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::CommandSpec;
+
+    fn serve_spec() -> CommandSpec {
+        CommandSpec::new("serve", "test")
+            .opt("partitions", "LIST", Some("1,2,4"), "")
+            .opt("rate", "LIST", None, "")
+            .opt("duration", "S", Some("0.5"), "")
+            .opt("seed", "N", Some("42"), "")
+            .opt("policy", "NAME", Some("shortest_queue"), "")
+            .opt("arrival", "NAME", Some("poisson"), "")
+            .opt("burstiness", "X", Some("4"), "")
+            .opt("rate-profile", "L:H:P[:S]", None, "")
+            .opt("stagger", "NAME", Some("uniform_phase"), "")
+            .opt("queue-cap", "N", Some("0"), "")
+            .opt("slo-ms", "MS", Some("0"), "")
+            .opt("batch-timeout", "MS", Some("0"), "")
+            .switch("adaptive", "")
+            .opt("epoch-ms", "MS", Some("50"), "")
+            .opt("tenants", "LIST", None, "")
+            .opt("tenant-partitions", "N", Some("1"), "")
+            .opt("quantum-ms", "MS", Some("5"), "")
+            .switch("rebalance", "")
+            .opt("samples", "N", Some("400"), "")
+    }
+
+    fn parse(args: &[&str]) -> Matches {
+        let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        serve_spec().parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn default_round_trips_through_the_cli() {
+        // Decoding the command's declared defaults reproduces
+        // `ServeConfig::default()` field for field.
+        let cfg = ServeConfig::from_cli(&parse(&[])).unwrap();
+        let d = ServeConfig::default();
+        assert_eq!(cfg.arrival, d.arrival);
+        assert_eq!(cfg.rates, d.rates);
+        assert_eq!(cfg.partitions, d.partitions);
+        assert_eq!(cfg.duration_s, d.duration_s);
+        assert_eq!(cfg.seed, d.seed);
+        assert_eq!(cfg.policy, d.policy);
+        assert_eq!(cfg.stagger, d.stagger);
+        assert_eq!(cfg.queue_cap, d.queue_cap);
+        assert_eq!(cfg.slo_ms, d.slo_ms);
+        assert_eq!(cfg.batch_timeout_ms, d.batch_timeout_ms);
+        assert!(cfg.adaptive.is_none());
+        assert!(cfg.tenants.is_empty());
+        assert_eq!(cfg.tenant_epoch_s, d.tenant_epoch_s);
+        assert_eq!(cfg.trace_samples, d.trace_samples);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides_land_in_the_right_fields() {
+        let cfg = ServeConfig::from_cli(&parse(&[
+            "--partitions",
+            "2,8",
+            "--rate",
+            "300,600",
+            "--duration",
+            "0.25",
+            "--seed",
+            "7",
+            "--policy",
+            "round_robin",
+            "--arrival",
+            "bursty",
+            "--burstiness",
+            "6",
+            "--stagger",
+            "random_delay",
+            "--queue-cap",
+            "32",
+            "--slo-ms",
+            "40",
+            "--batch-timeout",
+            "2",
+            "--adaptive",
+            "--epoch-ms",
+            "20",
+            "--samples",
+            "128",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.partitions, vec![2, 8]);
+        assert_eq!(cfg.rates, vec![300.0, 600.0]);
+        assert_eq!(cfg.duration_s, 0.25);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.policy, DispatchPolicy::RoundRobin);
+        assert!(matches!(cfg.arrival, ArrivalKind::Bursty { burstiness, .. } if burstiness == 6.0));
+        assert_eq!(cfg.stagger, StaggerPolicy::RandomDelay { seed: 7 });
+        assert_eq!(cfg.queue_cap, 32);
+        assert_eq!(cfg.slo_ms, 40.0);
+        assert_eq!(cfg.batch_timeout_ms, 2.0);
+        let a = cfg.adaptive.as_ref().unwrap();
+        assert_eq!(a.candidates, vec![2, 8]);
+        assert!((a.epoch_s - 0.02).abs() < 1e-12);
+        assert_eq!(cfg.trace_samples, 128);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn rate_profile_overrides_arrival_and_sets_the_mean_rate() {
+        let cfg = ServeConfig::from_cli(&parse(&["--rate-profile", "100:900:0.5"])).unwrap();
+        assert!(matches!(cfg.arrival, ArrivalKind::Piecewise { .. }));
+        assert_eq!(cfg.rates, vec![500.0]);
+        // An explicit --rate still wins over the profile mean.
+        let cfg = ServeConfig::from_cli(&parse(&[
+            "--rate-profile",
+            "100:900:0.5",
+            "--rate",
+            "250",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.rates, vec![250.0]);
+    }
+
+    #[test]
+    fn tenants_decode_with_shared_overload_knobs() {
+        let cfg = ServeConfig::from_cli(&parse(&[
+            "--tenants",
+            "resnet50:0.6:300,vgg16:0.4:120",
+            "--queue-cap",
+            "16",
+            "--slo-ms",
+            "50",
+            "--tenant-partitions",
+            "2",
+            "--quantum-ms",
+            "8",
+            "--rebalance",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.tenants.len(), 2);
+        for t in &cfg.tenants {
+            assert_eq!(t.queue_cap, 16);
+            assert_eq!(t.slo_ms, 50.0);
+            assert_eq!(t.partitions, 2);
+        }
+        assert!((cfg.tenant_epoch_s - 0.008).abs() < 1e-12);
+        assert!(cfg.tenant_rebalance);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn tenants_conflict_with_grid_knobs() {
+        for extra in [
+            vec!["--adaptive"],
+            vec!["--rate", "100"],
+            vec!["--rate-profile", "10:100:1"],
+            vec!["--arrival", "bursty"],
+            vec!["--partitions", "2"],
+        ] {
+            let mut args = vec!["--tenants", "tiny:1:100"];
+            args.extend(extra.iter());
+            let err = ServeConfig::from_cli(&parse(&args)).unwrap_err();
+            assert!(matches!(err, Error::Usage(_)), "{args:?}");
+        }
+        // The defaulted flags alone do not conflict.
+        assert!(ServeConfig::from_cli(&parse(&["--tenants", "tiny:1:100"])).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_configs() {
+        let mut cfg = ServeConfig::default();
+        cfg.partitions = vec![0];
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.duration_s = f64::NAN;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.rates = vec![-1.0];
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.slo_ms = -5.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.rearm_quantile = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.tenant_epoch_s = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.trace_samples = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.adaptive = Some(AdaptiveConfig::new(vec![]));
+        assert!(cfg.validate().is_err());
+        ServeConfig::default().validate().unwrap();
+    }
+}

@@ -9,6 +9,7 @@
 //! engine it borrows its worker pool from.
 
 use super::arrival::{ArrivalProcess, RateShape};
+use super::config::ServeConfig;
 use super::queue::DispatchPolicy;
 use super::simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};
 use super::tenant::{MultiTenantSimulator, TenantMode, TenantSpec};
@@ -142,111 +143,101 @@ impl ServePoint {
 pub struct ServeExperiment {
     accel: AcceleratorConfig,
     graph: Graph,
-    partitions: Vec<usize>,
-    rates: Vec<f64>,
-    arrival: ArrivalKind,
-    duration_s: f64,
-    seed: u64,
-    policy: DispatchPolicy,
-    stagger: StaggerPolicy,
-    queue_cap: usize,
-    slo_ms: f64,
-    batch_timeout_ms: f64,
-    adaptive: Option<AdaptiveConfig>,
-    tenants: Vec<TenantSpec>,
-    tenant_epoch_s: f64,
-    tenant_rebalance: bool,
+    cfg: ServeConfig,
     compare_time_sharing: bool,
-    trace_samples: usize,
     threads: usize,
 }
 
 impl ServeExperiment {
     pub fn new(accel: &AcceleratorConfig, graph: &Graph) -> Self {
+        Self::from_config(accel, graph, ServeConfig::default())
+    }
+
+    /// The grid experiment for one unified serving configuration: sweeps
+    /// `cfg.rates × cfg.partitions` (or runs `cfg.tenants`, when set).
+    pub fn from_config(accel: &AcceleratorConfig, graph: &Graph, cfg: ServeConfig) -> Self {
         Self {
             accel: accel.clone(),
             graph: graph.clone(),
-            partitions: vec![1, 2, 4],
-            rates: Vec::new(),
-            arrival: ArrivalKind::Poisson,
-            duration_s: 0.5,
-            seed: 42,
-            policy: DispatchPolicy::ShortestQueue,
-            stagger: StaggerPolicy::UniformPhase,
-            queue_cap: 0,
-            slo_ms: 0.0,
-            batch_timeout_ms: 0.0,
-            adaptive: None,
-            tenants: Vec::new(),
-            tenant_epoch_s: 0.005,
-            tenant_rebalance: false,
+            cfg,
             compare_time_sharing: true,
-            trace_samples: 400,
             threads: 0,
         }
     }
 
+    /// Deprecated shim for [`ServeConfig::partitions`]; prefer
+    /// [`Self::from_config`].
     pub fn partitions(mut self, ns: Vec<usize>) -> Self {
-        self.partitions = ns;
+        self.cfg.partitions = ns;
         self
     }
 
     /// Arrival rates to sweep; empty (the default) auto-calibrates to
     /// 0.5×, 0.8× and 1.1× the synchronous roofline capacity, bracketing
-    /// the knee of the throughput–latency curve.
+    /// the knee of the throughput–latency curve. Deprecated shim for
+    /// [`ServeConfig::rates`].
     pub fn rates(mut self, rates: Vec<f64>) -> Self {
-        self.rates = rates;
+        self.cfg.rates = rates;
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::arrival`].
     pub fn arrival(mut self, kind: ArrivalKind) -> Self {
-        self.arrival = kind;
+        self.cfg.arrival = kind;
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::duration_s`].
     pub fn duration(mut self, s: f64) -> Self {
-        self.duration_s = s;
+        self.cfg.duration_s = s;
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::seed`].
     pub fn seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
+        self.cfg.seed = seed;
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::policy`].
     pub fn policy(mut self, p: DispatchPolicy) -> Self {
-        self.policy = p;
+        self.cfg.policy = p;
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::stagger`].
     pub fn stagger(mut self, s: StaggerPolicy) -> Self {
-        self.stagger = s;
+        self.cfg.stagger = s;
         self
     }
 
     /// Per-partition queue bound for every grid point (0 = unbounded).
+    /// Deprecated shim for [`ServeConfig::queue_cap`].
     pub fn queue_cap(mut self, cap: usize) -> Self {
-        self.queue_cap = cap;
+        self.cfg.queue_cap = cap;
         self
     }
 
     /// Per-request latency deadline in milliseconds (0 = none).
+    /// Deprecated shim for [`ServeConfig::slo_ms`].
     pub fn slo_ms(mut self, ms: f64) -> Self {
-        self.slo_ms = ms;
+        self.cfg.slo_ms = ms;
         self
     }
 
     /// Batch hold timeout in milliseconds (0 = dispatch on idle).
+    /// Deprecated shim for [`ServeConfig::batch_timeout_ms`].
     pub fn batch_timeout_ms(mut self, ms: f64) -> Self {
-        self.batch_timeout_ms = ms;
+        self.cfg.batch_timeout_ms = ms;
         self
     }
 
     /// Add one adaptive (runtime-mutable topology) row per rate next to
     /// the static rows, with this controller configuration. An empty
-    /// candidate list inherits the grid's partition counts.
+    /// candidate list inherits the grid's partition counts. Deprecated
+    /// shim for [`ServeConfig::adaptive`].
     pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
-        self.adaptive = Some(cfg);
+        self.cfg.adaptive = Some(cfg);
         self
     }
 
@@ -257,22 +248,25 @@ impl ServeExperiment {
     /// identical offered load next to it. The grid's `partitions`/`rates`
     /// axes are ignored in this mode (each tenant carries its own rate);
     /// the experiment's `queue_cap`/`slo_ms` knobs apply to every tenant
-    /// that did not set its own.
+    /// that did not set its own. Deprecated shim for
+    /// [`ServeConfig::tenants`].
     pub fn tenants(mut self, specs: Vec<TenantSpec>) -> Self {
-        self.tenants = specs;
+        self.cfg.tenants = specs;
         self
     }
 
     /// Multi-tenant epoch: the time-sharing quantum and the co-scheduled
-    /// re-balance window, in milliseconds.
+    /// re-balance window, in milliseconds. Deprecated shim for
+    /// [`ServeConfig::tenant_epoch_s`].
     pub fn tenant_epoch_ms(mut self, ms: f64) -> Self {
-        self.tenant_epoch_s = ms / 1e3;
+        self.cfg.tenant_epoch_s = ms / 1e3;
         self
     }
 
     /// Re-balance cores between co-scheduled tenants at epoch boundaries.
+    /// Deprecated shim for [`ServeConfig::tenant_rebalance`].
     pub fn tenant_rebalance(mut self, on: bool) -> Self {
-        self.tenant_rebalance = on;
+        self.cfg.tenant_rebalance = on;
         self
     }
 
@@ -283,8 +277,9 @@ impl ServeExperiment {
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::trace_samples`].
     pub fn trace_samples(mut self, s: usize) -> Self {
-        self.trace_samples = s;
+        self.cfg.trace_samples = s;
         self
     }
 
@@ -296,11 +291,11 @@ impl ServeExperiment {
 
     /// The rates the run will actually use.
     pub fn effective_rates(&self) -> Vec<f64> {
-        if self.rates.is_empty() {
+        if self.cfg.rates.is_empty() {
             let cap = roofline_capacity_ips(&self.accel, &self.graph);
             vec![0.5 * cap, 0.8 * cap, 1.1 * cap]
         } else {
-            self.rates.clone()
+            self.cfg.rates.clone()
         }
     }
 
@@ -324,26 +319,26 @@ impl ServeExperiment {
         // The experiment-level overload knobs apply to every tenant that
         // did not set its own (so `.queue_cap(..)`/`.slo_ms(..)` work in
         // tenant mode exactly like the CLI's machine-wide flags).
-        let mut specs = self.tenants.clone();
+        let mut specs = self.cfg.tenants.clone();
         for t in &mut specs {
             if t.queue_cap == 0 {
-                t.queue_cap = self.queue_cap;
+                t.queue_cap = self.cfg.queue_cap;
             }
             if t.slo_ms == 0.0 {
-                t.slo_ms = self.slo_ms;
+                t.slo_ms = self.cfg.slo_ms;
             }
         }
         let outs = parallel_map(&modes, self.effective_threads(), |&mode| {
             MultiTenantSimulator::new(&self.accel, specs.clone())
-                .duration(self.duration_s)
-                .seed(self.seed)
-                .policy(self.policy)
-                .stagger(self.stagger)
-                .batch_timeout_ms(self.batch_timeout_ms)
+                .duration(self.cfg.duration_s)
+                .seed(self.cfg.seed)
+                .policy(self.cfg.policy)
+                .stagger(self.cfg.stagger)
+                .batch_timeout_ms(self.cfg.batch_timeout_ms)
                 .mode(mode)
-                .epoch(self.tenant_epoch_s)
-                .rebalance(self.tenant_rebalance && mode == TenantMode::Coscheduled)
-                .trace_samples(self.trace_samples)
+                .epoch(self.cfg.tenant_epoch_s)
+                .rebalance(self.cfg.tenant_rebalance && mode == TenantMode::Coscheduled)
+                .trace_samples(self.cfg.trace_samples)
                 .run()
         })?;
         let mut points = Vec::new();
@@ -383,21 +378,22 @@ impl ServeExperiment {
             }
         }
         let model = self
+            .cfg
             .tenants
             .iter()
             .map(|t| t.graph.name.as_str())
             .collect::<Vec<_>>()
             .join("+");
-        let total_rate: f64 = self.tenants.iter().map(|t| t.arrival.mean_rate()).sum();
+        let total_rate: f64 = self.cfg.tenants.iter().map(|t| t.arrival.mean_rate()).sum();
         Ok(ServeCurve { model, arrival: ArrivalProcess::poisson(total_rate.max(1.0)), points })
     }
 
     /// Run the grid and assemble the rate-major curve.
     pub fn run(&self) -> Result<ServeCurve> {
-        if !self.tenants.is_empty() {
+        if !self.cfg.tenants.is_empty() {
             return self.run_tenants();
         }
-        if self.partitions.is_empty() {
+        if self.cfg.partitions.is_empty() {
             return Err(Error::InvalidConfig("serve grid has no partition counts".into()));
         }
         let rates = self.effective_rates();
@@ -406,15 +402,15 @@ impl ServeExperiment {
         }
         // Candidates of the adaptive row: explicit, or the grid's own
         // partition axis.
-        let adaptive_cfg = self.adaptive.clone().map(|mut cfg| {
+        let adaptive_cfg = self.cfg.adaptive.clone().map(|mut cfg| {
             if cfg.candidates.is_empty() {
-                cfg.candidates = self.partitions.clone();
+                cfg.candidates = self.cfg.partitions.clone();
             }
             cfg
         });
         let mut points: Vec<(f64, usize, bool)> = Vec::new();
         for &r in &rates {
-            for &n in &self.partitions {
+            for &n in &self.cfg.partitions {
                 points.push((r, n, false));
             }
             if let Some(cfg) = &adaptive_cfg {
@@ -426,15 +422,15 @@ impl ServeExperiment {
         let statuses = parallel_map(&points, threads, |&(rate, n, adaptive)| {
             let mut sim = ServeSimulator::new(&self.accel, &self.graph)
                 .partitions(n)
-                .arrival(self.arrival.process(rate))
-                .duration(self.duration_s)
-                .seed(self.seed)
-                .policy(self.policy)
-                .stagger(self.stagger)
-                .queue_cap(self.queue_cap)
-                .slo_ms(self.slo_ms)
-                .batch_timeout_ms(self.batch_timeout_ms)
-                .trace_samples(self.trace_samples);
+                .arrival(self.cfg.arrival.process(rate))
+                .duration(self.cfg.duration_s)
+                .seed(self.cfg.seed)
+                .policy(self.cfg.policy)
+                .stagger(self.cfg.stagger)
+                .queue_cap(self.cfg.queue_cap)
+                .slo_ms(self.cfg.slo_ms)
+                .batch_timeout_ms(self.cfg.batch_timeout_ms)
+                .trace_samples(self.cfg.trace_samples);
             if adaptive {
                 if let Some(cfg) = adaptive_cfg.clone() {
                     sim = sim.adaptive(cfg);
@@ -464,7 +460,7 @@ impl ServeExperiment {
             .collect();
         Ok(ServeCurve {
             model: self.graph.name.clone(),
-            arrival: self.arrival.process(1.0),
+            arrival: self.cfg.arrival.process(1.0),
             points,
         })
     }

@@ -27,6 +27,10 @@
 //! * [`ServeExperiment`] / [`ServeCurve`] — parallel (rate × partitions)
 //!   grids producing deterministic throughput–latency tradeoff curves
 //!   with drop-rate, goodput and reconfiguration columns;
+//! * [`ServeConfig`] — the unified plain-data configuration for all of
+//!   the above: one struct with `Default`, validation and a CLI decoder
+//!   that the simulator, the experiment, the sweep grid and the cluster
+//!   layer all consume;
 //! * [`TenantSpec`] / [`MultiTenantSimulator`] — multi-tenant serving:
 //!   several models share the machine, each tenant on its own
 //!   [`PartitionSet`] slice with its own arrival stream, queue cap and
@@ -35,6 +39,7 @@
 //!   accounting.
 
 mod arrival;
+mod config;
 mod curve;
 mod latency;
 mod queue;
@@ -43,6 +48,7 @@ mod tenant;
 mod topology;
 
 pub use arrival::{ArrivalProcess, RateShape};
+pub use config::ServeConfig;
 pub use curve::{
     ArrivalKind, ServeCurve, ServeExperiment, ServePoint, ServePointStatus, TenantRow,
     DEFAULT_MEAN_BURST_S,
@@ -52,6 +58,7 @@ pub use queue::{
     BatchPolicy, BatchRecord, DispatchPolicy, EpochWindow, QueueConfig, ServeController,
 };
 pub use simulator::{roofline_capacity_ips, ServeOutcome, ServeSimulator};
+pub(crate) use simulator::stagger_gates;
 pub use tenant::{
     MultiTenantOutcome, MultiTenantSimulator, RebalanceEvent, TenantMode, TenantOutcome, TenantSpec,
 };

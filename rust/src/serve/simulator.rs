@@ -20,6 +20,7 @@
 //! accounting continues seamlessly across the switch.
 
 use super::arrival::ArrivalProcess;
+use super::config::ServeConfig;
 use super::latency::{LatencyRecorder, LatencyStats};
 use super::queue::{BatchPolicy, DispatchPolicy, EpochWindow, QueueConfig, ServeController};
 use super::topology::{
@@ -162,21 +163,14 @@ impl ServeOutcome {
 pub struct ServeSimulator {
     accel: AcceleratorConfig,
     graph: Graph,
+    /// The partition count a fixed run serves. The grid front-end
+    /// ([`crate::serve::ServeExperiment`]) builds one simulator per grid
+    /// point, so this stays a scalar next to the shared [`ServeConfig`].
     partitions: usize,
+    /// The arrival process at one concrete rate (the config's arrival
+    /// *family* instantiated via [`super::curve::ArrivalKind::process`]).
     arrival: ArrivalProcess,
-    duration_s: f64,
-    seed: u64,
-    policy: DispatchPolicy,
-    stagger: StaggerPolicy,
-    max_batch: usize,
-    queue_cap: usize,
-    slo_ms: f64,
-    batch_timeout_ms: f64,
-    stagger_rearm: bool,
-    rearm_quantile: f64,
-    adaptive: Option<AdaptiveConfig>,
-    trace_samples: usize,
-    enforce_capacity: bool,
+    cfg: ServeConfig,
 }
 
 impl ServeSimulator {
@@ -186,27 +180,28 @@ impl ServeSimulator {
             graph: graph.clone(),
             partitions: 4,
             arrival: ArrivalProcess::poisson(100.0),
-            duration_s: 0.5,
-            seed: 42,
-            policy: DispatchPolicy::ShortestQueue,
-            stagger: StaggerPolicy::UniformPhase,
-            max_batch: 0,
-            queue_cap: 0,
-            slo_ms: 0.0,
-            batch_timeout_ms: 0.0,
-            stagger_rearm: true,
-            rearm_quantile: 0.95,
-            adaptive: None,
-            trace_samples: 400,
-            enforce_capacity: true,
+            cfg: ServeConfig::default(),
         }
     }
 
+    /// One simulator from the unified config: serves the first
+    /// configured partition count at the first configured rate (the
+    /// legacy 4 partitions / 100 img/s when unset).
+    pub fn from_config(accel: &AcceleratorConfig, graph: &Graph, cfg: ServeConfig) -> Self {
+        let partitions = cfg.headline_partitions();
+        let arrival = cfg.arrival.process(cfg.headline_rate());
+        Self { accel: accel.clone(), graph: graph.clone(), partitions, arrival, cfg }
+    }
+
+    /// Deprecated shim: set [`ServeConfig::partitions`] and use
+    /// [`Self::from_config`] instead.
     pub fn partitions(mut self, n: usize) -> Self {
         self.partitions = n;
         self
     }
 
+    /// Deprecated shim: set [`ServeConfig::arrival`] /
+    /// [`ServeConfig::rates`] and use [`Self::from_config`] instead.
     pub fn arrival(mut self, a: ArrivalProcess) -> Self {
         self.arrival = a;
         self
@@ -214,18 +209,21 @@ impl ServeSimulator {
 
     /// Arrival window length in seconds (the run itself continues until
     /// the last admitted request drains).
+    /// Deprecated shim for [`ServeConfig::duration_s`].
     pub fn duration(mut self, s: f64) -> Self {
-        self.duration_s = s;
+        self.cfg.duration_s = s;
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::seed`].
     pub fn seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
+        self.cfg.seed = seed;
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::policy`].
     pub fn policy(mut self, p: DispatchPolicy) -> Self {
-        self.policy = p;
+        self.cfg.policy = p;
         self
     }
 
@@ -234,75 +232,83 @@ impl ServeSimulator {
     /// before its offset — the deployment-time analogue of the offline
     /// scheduler's phase offsets (symmetric partitions launched together
     /// would otherwise stay near-lockstep and forfeit the shaping win).
+    /// Deprecated shim for [`ServeConfig::stagger`].
     pub fn stagger(mut self, s: StaggerPolicy) -> Self {
-        self.stagger = s;
+        self.cfg.stagger = s;
         self
     }
 
     /// Cap on dynamic batch size (0 = the partition's full batch share,
     /// `cores / n` images, the paper's one-image-per-core invariant).
+    /// Deprecated shim for [`ServeConfig::max_batch`].
     pub fn max_batch(mut self, b: usize) -> Self {
-        self.max_batch = b;
+        self.cfg.max_batch = b;
         self
     }
 
     /// Bound each partition queue to this many waiting requests; arrivals
     /// that find every open queue full are dropped (0 = unbounded, the
-    /// legacy open loop).
+    /// legacy open loop). Deprecated shim for [`ServeConfig::queue_cap`].
     pub fn queue_cap(mut self, cap: usize) -> Self {
-        self.queue_cap = cap;
+        self.cfg.queue_cap = cap;
         self
     }
 
     /// Per-request latency deadline in milliseconds: queued requests
     /// already past it are shed, and goodput counts only requests served
-    /// within it (0 = no deadline).
+    /// within it (0 = no deadline). Deprecated shim for
+    /// [`ServeConfig::slo_ms`].
     pub fn slo_ms(mut self, ms: f64) -> Self {
-        self.slo_ms = ms;
+        self.cfg.slo_ms = ms;
         self
     }
 
     /// Hold under-filled batches up to this long so they can fill
-    /// (dispatch-on-deadline); 0 = dispatch-on-idle.
+    /// (dispatch-on-deadline); 0 = dispatch-on-idle. Deprecated shim for
+    /// [`ServeConfig::batch_timeout_ms`].
     pub fn batch_timeout_ms(mut self, ms: f64) -> Self {
-        self.batch_timeout_ms = ms;
+        self.cfg.batch_timeout_ms = ms;
         self
     }
 
     /// Re-arm the stagger start gates after a partition-wide idle gap
     /// longer than one full-batch time (on by default; disable for the
-    /// legacy t = 0-only gates).
+    /// legacy t = 0-only gates). Deprecated shim for
+    /// [`ServeConfig::stagger_rearm`].
     pub fn stagger_rearm(mut self, on: bool) -> Self {
-        self.stagger_rearm = on;
+        self.cfg.stagger_rearm = on;
         self
     }
 
     /// Quantile of the measured inter-dispatch gap distribution the lull
     /// threshold is derived from (`max(one batch time, 2 × quantile)`,
     /// once enough gaps have been observed). Pass 0 to keep the fixed
-    /// one-batch-time constant only.
+    /// one-batch-time constant only. Deprecated shim for
+    /// [`ServeConfig::rearm_quantile`].
     pub fn stagger_rearm_quantile(mut self, q: f64) -> Self {
-        self.rearm_quantile = q;
+        self.cfg.rearm_quantile = q;
         self
     }
 
     /// Make the partition topology runtime-mutable: run in epochs and
     /// let the online controller re-partition at epoch boundaries. With
     /// a single (feasible) candidate the run degenerates to the fixed
-    /// path, bit for bit.
+    /// path, bit for bit. Deprecated shim for [`ServeConfig::adaptive`].
     pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
-        self.adaptive = Some(cfg);
+        self.cfg.adaptive = Some(cfg);
         self
     }
 
+    /// Deprecated shim for [`ServeConfig::trace_samples`].
     pub fn trace_samples(mut self, s: usize) -> Self {
-        self.trace_samples = s;
+        self.cfg.trace_samples = s;
         self
     }
 
-    /// Skip the DRAM feasibility check (ablations only).
+    /// Skip the DRAM feasibility check (ablations only). Deprecated shim
+    /// for [`ServeConfig::enforce_capacity`].
     pub fn ignore_capacity(mut self) -> Self {
-        self.enforce_capacity = false;
+        self.cfg.enforce_capacity = false;
         self
     }
 
@@ -311,36 +317,36 @@ impl ServeSimulator {
     /// Offsets are relative to the topology's install instant (t = 0 for
     /// a fixed run).
     fn gates_for(&self, n: usize, batch_time: f64) -> Vec<f64> {
-        stagger_gates(self.stagger, n, batch_time)
+        stagger_gates(self.cfg.stagger, n, batch_time)
     }
 
     /// The SLO knob, validated and converted to seconds.
     fn slo_s(&self) -> Result<Option<f64>> {
-        if !(self.slo_ms.is_finite() && self.slo_ms >= 0.0) {
+        if !(self.cfg.slo_ms.is_finite() && self.cfg.slo_ms >= 0.0) {
             return Err(Error::InvalidConfig(format!(
                 "SLO must be finite and >= 0 ms: {}",
-                self.slo_ms
+                self.cfg.slo_ms
             )));
         }
-        Ok(if self.slo_ms > 0.0 { Some(self.slo_ms / 1e3) } else { None })
+        Ok(if self.cfg.slo_ms > 0.0 { Some(self.cfg.slo_ms / 1e3) } else { None })
     }
 
     /// The queue configuration one (epoch of a) run uses: the given
     /// gates, overload knobs translated from the builder, lull re-arm
     /// spread over `batch_time`.
     fn queue_config(&self, gates: Vec<f64>, batch_time: f64) -> Result<QueueConfig> {
-        if !(self.rearm_quantile.is_finite() && (0.0..1.0).contains(&self.rearm_quantile)) {
+        if !(self.cfg.rearm_quantile.is_finite() && (0.0..1.0).contains(&self.cfg.rearm_quantile)) {
             return Err(Error::InvalidConfig(format!(
                 "re-arm quantile must be in [0, 1): {}",
-                self.rearm_quantile
+                self.cfg.rearm_quantile
             )));
         }
-        let mut cfg = QueueConfig::new(self.policy, gates);
-        cfg.queue_cap = (self.queue_cap > 0).then_some(self.queue_cap);
+        let mut cfg = QueueConfig::new(self.cfg.policy, gates);
+        cfg.queue_cap = (self.cfg.queue_cap > 0).then_some(self.cfg.queue_cap);
         cfg.slo_s = self.slo_s()?;
-        cfg.batch = BatchPolicy::from_timeout_ms(self.batch_timeout_ms)?;
-        cfg.rearm_idle_s = self.stagger_rearm.then_some(batch_time);
-        cfg.rearm_quantile = (self.rearm_quantile > 0.0).then_some(self.rearm_quantile);
+        cfg.batch = BatchPolicy::from_timeout_ms(self.cfg.batch_timeout_ms)?;
+        cfg.rearm_idle_s = self.cfg.stagger_rearm.then_some(batch_time);
+        cfg.rearm_quantile = (self.cfg.rearm_quantile > 0.0).then_some(self.cfg.rearm_quantile);
         Ok(cfg)
     }
 
@@ -349,7 +355,7 @@ impl ServeSimulator {
     /// [`Self::adaptive`] configured candidates, the epoch loop with
     /// online re-partitioning.
     pub fn run(&self) -> Result<ServeOutcome> {
-        match &self.adaptive {
+        match &self.cfg.adaptive {
             Some(cfg) => self.run_adaptive(cfg),
             None => self.run_fixed(self.partitions),
         }
@@ -361,11 +367,11 @@ impl ServeSimulator {
             &self.accel,
             &self.graph,
             partitions,
-            self.max_batch,
-            self.enforce_capacity,
+            self.cfg.max_batch,
+            self.cfg.enforce_capacity,
         )?;
 
-        let arrivals = self.arrival.generate(self.duration_s, self.seed)?;
+        let arrivals = self.arrival.generate(self.cfg.duration_s, self.cfg.seed)?;
         let rate = self.arrival.mean_rate();
         if arrivals.is_empty() {
             return Ok(ServeOutcome::empty(partitions, rate));
@@ -411,7 +417,7 @@ impl ServeSimulator {
             throughput_ips: per_s(served),
             goodput_ips: per_s(latency.slo_hits),
             latency,
-            bw: out.trace.sampled_summary(self.trace_samples),
+            bw: out.trace.sampled_summary(self.cfg.trace_samples),
             total_bytes: out.total_bytes,
             trace: out.trace,
             epochs: Vec::new(),
@@ -437,8 +443,8 @@ impl ServeSimulator {
                 &self.accel,
                 &self.graph,
                 n,
-                self.max_batch,
-                self.enforce_capacity,
+                self.cfg.max_batch,
+                self.cfg.enforce_capacity,
             );
             match built {
                 Ok(ps) => {
@@ -461,7 +467,7 @@ impl ServeSimulator {
             return self.run_fixed(feasible[0]);
         }
 
-        let arrivals = self.arrival.generate(self.duration_s, self.seed)?;
+        let arrivals = self.arrival.generate(self.cfg.duration_s, self.cfg.seed)?;
         let rate = self.arrival.mean_rate();
         if arrivals.is_empty() {
             return Ok(ServeOutcome::empty(feasible[0], rate));
@@ -635,7 +641,7 @@ impl ServeSimulator {
             throughput_ips: per_s(served_total),
             goodput_ips: per_s(latency.slo_hits),
             latency,
-            bw: trace.sampled_summary(self.trace_samples),
+            bw: trace.sampled_summary(self.cfg.trace_samples),
             total_bytes,
             trace,
             epochs,
@@ -648,7 +654,7 @@ impl ServeSimulator {
 /// over one full-batch roofline time — shared by the single-tenant
 /// simulator and the multi-tenant slices (offsets are relative to the
 /// topology's install instant).
-pub(super) fn stagger_gates(stagger: StaggerPolicy, n: usize, batch_time: f64) -> Vec<f64> {
+pub(crate) fn stagger_gates(stagger: StaggerPolicy, n: usize, batch_time: f64) -> Vec<f64> {
     match stagger {
         StaggerPolicy::None => vec![0.0; n],
         StaggerPolicy::UniformPhase => (0..n).map(|i| i as f64 * batch_time / n as f64).collect(),

@@ -515,6 +515,20 @@ impl MultiTenantSimulator {
         for (i, &c) in cores.iter().enumerate() {
             sets.push(self.slice_set(i, c)?);
         }
+        // The per-slice DRAM checks inside `build_slice` miss the
+        // machine-wide sum: co-scheduled slices are all resident at
+        // once, so the joint footprint must fit too (tenants serving the
+        // same model share one weight image). Time-shared turns swap the
+        // whole machine, so the per-slice check already covers them.
+        if self.mode == TenantMode::Coscheduled && self.enforce_capacity {
+            let slices: Vec<(&Graph, usize, usize)> = self
+                .tenants
+                .iter()
+                .zip(&cores)
+                .map(|(t, &c)| (&t.graph, t.partitions, c))
+                .collect();
+            crate::sim::DramModel::new(&self.accel).check_joint(&slices)?;
+        }
 
         // A single engine window suffices when nothing can change
         // mid-run; epochs exist to re-balance or to take quantum turns.

@@ -59,8 +59,10 @@ impl PartitionSet {
     /// the `accel`'s cores, divided into `n` partitions, keeping the
     /// paper's one-image-per-core invariant within the slice. This is the
     /// multi-tenant building block: each tenant owns one slice. The DRAM
-    /// check covers the slice's own footprint only (cross-tenant DRAM
-    /// pressure is checked per tenant, not jointly).
+    /// check here covers the slice's own footprint only; callers that
+    /// co-locate several slices (co-scheduled tenants, cluster
+    /// placement) follow up with [`crate::sim::DramModel::check_joint`]
+    /// on the whole resident set.
     pub fn build_slice(
         accel: &AcceleratorConfig,
         graph: &Graph,
@@ -136,13 +138,13 @@ impl PartitionSet {
 /// Hard cap on serving epochs per run — a stalled-loop backstop shared
 /// by the adaptive and multi-tenant epoch loops, far above anything a
 /// real configuration produces.
-pub(super) const MAX_EPOCHS: usize = 1_000_000;
+pub(crate) const MAX_EPOCHS: usize = 1_000_000;
 
 /// The next epoch boundary strictly after `start`, on the `epoch_s`
 /// grid. A degenerate epoch length below the float resolution of
 /// `start` cannot advance by addition — fall back to the next
 /// representable instant so every epoch loop always makes progress.
-pub(super) fn next_epoch_horizon(start: f64, epoch_s: f64) -> f64 {
+pub(crate) fn next_epoch_horizon(start: f64, epoch_s: f64) -> f64 {
     let mut h = (start / epoch_s).floor() * epoch_s + epoch_s;
     if h <= start {
         h = start + epoch_s;

@@ -117,6 +117,73 @@ impl DramModel {
         }
     }
 
+    /// Resident set for several co-resident slices at once — the
+    /// whole-machine check behind co-scheduled tenants and cluster
+    /// placement, where [`Self::footprint`] per slice would miss the
+    /// machine-wide sum.
+    ///
+    /// Each slice is `(graph, partitions, total_batch)`. Slices serving
+    /// the *same* model (by [`Graph::name`]) map one shared read-only
+    /// weight image, so a same-model group costs `max(partitions)`
+    /// weight copies rather than the sum; activations and workspace are
+    /// private per slice and always sum. The framework overhead is one
+    /// machine-wide constant, not per slice.
+    pub fn footprint_joint(&self, slices: &[(&Graph, usize, usize)]) -> Footprint {
+        assert!(!slices.is_empty());
+        let mut groups: Vec<(&Graph, usize)> = Vec::new();
+        for &(g, parts, _) in slices {
+            assert!(parts > 0);
+            match groups.iter_mut().find(|(seen, _)| seen.name == g.name) {
+                Some(entry) => entry.1 = entry.1.max(parts),
+                None => groups.push((g, parts)),
+            }
+        }
+        let weights = Bytes(
+            groups
+                .iter()
+                .map(|&(g, p)| model_weight_bytes(g, self.elem_bytes).0 * p as f64)
+                .sum(),
+        );
+        let (mut activations, mut workspace) = (0.0, 0.0);
+        for &(g, parts, batch) in slices {
+            let fp = self.footprint(g, parts, batch);
+            activations += fp.activations.0;
+            workspace += fp.workspace.0;
+        }
+        Footprint {
+            weights,
+            activations: Bytes(activations),
+            workspace: Bytes(workspace),
+            framework_overhead: self.overhead,
+        }
+    }
+
+    /// [`Self::check`] for a whole co-resident slice set.
+    pub fn check_joint(&self, slices: &[(&Graph, usize, usize)]) -> Result<()> {
+        let fp = self.footprint_joint(slices);
+        if fp.total().0 <= self.capacity.0 * self.high_water {
+            Ok(())
+        } else {
+            let mut names: Vec<String> = slices
+                .iter()
+                .map(|&(g, p, _)| format!("{}×{p}", g.name))
+                .collect();
+            names.sort();
+            Err(Error::InfeasiblePartitioning(format!(
+                "co-resident set [{}] needs {} (weights {}, activations {}, \
+                 workspace {}, overhead {}) > {:.0}% of {}",
+                names.join(", "),
+                fp.total(),
+                fp.weights,
+                fp.activations,
+                fp.workspace,
+                fp.framework_overhead,
+                self.high_water * 100.0,
+                self.capacity,
+            )))
+        }
+    }
+
     /// Largest feasible partition count from a candidate list.
     pub fn max_feasible(
         &self,
@@ -171,6 +238,47 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("weights"), "{msg}");
         assert!(msg.contains("vgg16"), "{msg}");
+    }
+
+    #[test]
+    fn joint_shares_same_model_weights() {
+        let d = dram();
+        let g = resnet50();
+        // Two slices of the same model share one weight image: the
+        // group costs max(partitions) copies, not the sum.
+        let joint = d.footprint_joint(&[(&g, 4, 32), (&g, 2, 32)]);
+        assert_eq!(joint.weights.0, d.footprint(&g, 4, 32).weights.0);
+        // Activations stay private per slice and sum.
+        let single = d.footprint(&g, 4, 32).activations.0 + d.footprint(&g, 2, 32).activations.0;
+        assert_eq!(joint.activations.0, single);
+    }
+
+    #[test]
+    fn joint_sums_distinct_models() {
+        let d = dram();
+        let (vgg, res) = (vgg16(), resnet50());
+        let joint = d.footprint_joint(&[(&vgg, 2, 32), (&res, 2, 32)]);
+        let expect = d.footprint(&vgg, 2, 32).weights.0 + d.footprint(&res, 2, 32).weights.0;
+        assert_eq!(joint.weights.0, expect);
+        // One machine-wide framework overhead, not one per slice.
+        assert_eq!(joint.framework_overhead.0, d.overhead.0);
+    }
+
+    #[test]
+    fn joint_catches_whole_machine_overflow() {
+        // A capacity between the largest single slice and the joint set:
+        // each slice passes the per-slice check, the machine does not.
+        let mut d = dram();
+        let (vgg, res) = (vgg16(), resnet50());
+        let slices = [(&vgg, 2usize, 16usize), (&res, 2, 16)];
+        let joint = d.footprint_joint(&slices).total().0;
+        let single =
+            d.footprint(&vgg, 2, 16).total().0.max(d.footprint(&res, 2, 16).total().0);
+        assert!(joint > single);
+        d.capacity = Bytes((single + joint) / 2.0 / d.high_water);
+        assert!(d.check(&vgg, 2, 16).is_ok());
+        assert!(d.check(&res, 2, 16).is_ok());
+        assert!(d.check_joint(&slices).is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
-use crate::serve::TenantSpec;
+use crate::serve::{ServeConfig, TenantSpec};
 use crate::shaping::StaggerPolicy;
 use crate::util::units::BytesPerS;
 
@@ -97,10 +97,11 @@ pub struct SweepGrid {
     /// batch mode, any positive rate adds a serving scenario.
     pub arrival_rates: Vec<f64>,
     pub steady_batches: usize,
-    /// Arrival window for serve scenarios (seconds).
-    pub serve_duration_s: f64,
-    /// Seed for serve scenarios' arrival streams.
-    pub serve_seed: u64,
+    /// Shared serving configuration for serve scenarios: arrival window,
+    /// stream seed and batch hold timeout come from here (the grid's own
+    /// axes override its `partitions`/`rates`/overload knobs per
+    /// scenario).
+    pub serve: ServeConfig,
     /// Queue-bound axis for serve scenarios (0 = unbounded). Like the
     /// other axes this multiplies the grid — a cap × SLO sub-grid per
     /// (model, bw, stagger, rate) charts the goodput/drop trade-off
@@ -108,8 +109,6 @@ pub struct SweepGrid {
     pub serve_queue_caps: Vec<usize>,
     /// Latency-deadline axis for serve scenarios, ms (0 = none).
     pub serve_slo_ms: Vec<f64>,
-    /// Batch hold timeout for serve scenarios, ms (0 = dispatch on idle).
-    pub serve_batch_timeout_ms: f64,
     /// Mixed-tenant scenario axis: each entry is a `model:share:rate,...`
     /// tenant spec run once per bandwidth scale (co-scheduled vs its own
     /// time-shared baseline). Empty by default.
@@ -127,11 +126,9 @@ impl SweepGrid {
             stagger_policies: vec![StaggerPolicy::UniformPhase],
             arrival_rates: vec![0.0],
             steady_batches: 6,
-            serve_duration_s: 0.25,
-            serve_seed: 42,
+            serve: ServeConfig { duration_s: 0.25, ..ServeConfig::default() },
             serve_queue_caps: vec![0],
             serve_slo_ms: vec![0.0],
-            serve_batch_timeout_ms: 0.0,
             mixed_tenants: Vec::new(),
             trace_samples: 400,
         }
@@ -167,13 +164,15 @@ impl SweepGrid {
         self
     }
 
+    /// Shim for [`ServeConfig::duration_s`] on the embedded serve config.
     pub fn serve_duration(mut self, seconds: f64) -> Self {
-        self.serve_duration_s = seconds;
+        self.serve.duration_s = seconds;
         self
     }
 
+    /// Shim for [`ServeConfig::seed`] on the embedded serve config.
     pub fn serve_seed(mut self, seed: u64) -> Self {
-        self.serve_seed = seed;
+        self.serve.seed = seed;
         self
     }
 
@@ -204,9 +203,10 @@ impl SweepGrid {
         self
     }
 
-    /// Batch hold timeout for serve scenarios in ms (0 = on idle).
+    /// Batch hold timeout for serve scenarios in ms (0 = on idle). Shim
+    /// for [`ServeConfig::batch_timeout_ms`] on the embedded serve config.
     pub fn serve_batch_timeout_ms(mut self, ms: f64) -> Self {
-        self.serve_batch_timeout_ms = ms;
+        self.serve.batch_timeout_ms = ms;
         self
     }
 
@@ -283,12 +283,13 @@ impl SweepGrid {
         if self.steady_batches == 0 {
             return Err(Error::InvalidConfig("steady_batches must be > 0".into()));
         }
-        if !(self.serve_duration_s.is_finite() && self.serve_duration_s > 0.0) {
+        if !(self.serve.duration_s.is_finite() && self.serve.duration_s > 0.0) {
             return Err(Error::InvalidConfig(format!(
                 "serve duration {} must be > 0",
-                self.serve_duration_s
+                self.serve.duration_s
             )));
         }
+        self.serve.validate()?;
         if self.serve_queue_caps.is_empty() {
             return Err(Error::InvalidConfig("sweep grid has no serve queue caps".into()));
         }
@@ -302,10 +303,10 @@ impl SweepGrid {
                 )));
             }
         }
-        if !(self.serve_batch_timeout_ms.is_finite() && self.serve_batch_timeout_ms >= 0.0) {
+        if !(self.serve.batch_timeout_ms.is_finite() && self.serve.batch_timeout_ms >= 0.0) {
             return Err(Error::InvalidConfig(format!(
                 "serve batch timeout {} must be finite and >= 0 ms",
-                self.serve_batch_timeout_ms
+                self.serve.batch_timeout_ms
             )));
         }
         if self.trace_samples == 0 {

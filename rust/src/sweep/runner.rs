@@ -122,12 +122,12 @@ impl SweepRunner {
         ServeSimulator::new(&scenario.accel(&self.grid.accel), graph)
             .partitions(scenario.partitions)
             .arrival(ArrivalProcess::poisson(scenario.arrival_rate))
-            .duration(self.grid.serve_duration_s)
-            .seed(self.grid.serve_seed)
+            .duration(self.grid.serve.duration_s)
+            .seed(self.grid.serve.seed)
             .stagger(scenario.stagger)
             .queue_cap(scenario.queue_cap)
             .slo_ms(scenario.slo_ms)
-            .batch_timeout_ms(self.grid.serve_batch_timeout_ms)
+            .batch_timeout_ms(self.grid.serve.batch_timeout_ms)
             .trace_samples(self.grid.trace_samples)
     }
 
@@ -141,10 +141,10 @@ impl SweepRunner {
     ) -> Result<MultiTenantSimulator> {
         let specs = TenantSpec::parse_list(spec)?;
         Ok(MultiTenantSimulator::new(&scenario.accel(&self.grid.accel), specs)
-            .duration(self.grid.serve_duration_s)
-            .seed(self.grid.serve_seed)
+            .duration(self.grid.serve.duration_s)
+            .seed(self.grid.serve.seed)
             .stagger(scenario.stagger)
-            .batch_timeout_ms(self.grid.serve_batch_timeout_ms)
+            .batch_timeout_ms(self.grid.serve.batch_timeout_ms)
             .mode(mode)
             .trace_samples(self.grid.trace_samples))
     }
