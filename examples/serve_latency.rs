@@ -13,6 +13,10 @@
 //! cargo run --release --example serve_latency -- \
 //!     --model resnet50 --partitions 1,2,4 --adaptive \
 //!     --rate-profile 150:700:0.4 --duration 0.6
+//!
+//! # Error bars: 5 Monte-Carlo replications, mean ± 95% CI per row:
+//! cargo run --release --example serve_latency -- \
+//!     --model resnet50 --partitions 1,2 --arrival bursty --replications 5
 //! ```
 
 use trafficshape::cli::CommandSpec;
@@ -29,6 +33,7 @@ fn main() -> std::process::ExitCode {
         .opt("rate", "LIST", None, "arrival rates in img/s (default: auto vs capacity)")
         .opt("duration", "S", Some("0.5"), "arrival window in seconds")
         .opt("seed", "N", Some("42"), "arrival-stream rng seed")
+        .opt("replications", "N", Some("1"), "Monte-Carlo replications (mean ± 95% CI)")
         .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
         .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
         .opt("rate-profile", "L:H:P[:S]", None, "rate profile low:high:period[:step|ramp]")
@@ -66,6 +71,7 @@ fn main() -> std::process::ExitCode {
             .arrival(arrival)
             .duration(m.get_f64("duration")?.unwrap_or(0.5))
             .seed(m.get_usize("seed")?.unwrap_or(42) as u64)
+            .replications(m.get_usize("replications")?.unwrap_or(1))
             .queue_cap(m.get_usize("queue-cap")?.unwrap_or(0))
             .slo_ms(m.get_f64("slo-ms")?.unwrap_or(0.0))
             .batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
@@ -89,6 +95,13 @@ fn main() -> std::process::ExitCode {
                 o.latency.p99_ms,
                 o.throughput_ips,
                 o.drop_rate * 100.0
+            );
+        }
+        if let Some(s) = curve.best_at_peak().and_then(|best| best.stats.as_ref()) {
+            println!(
+                "→ across {} replications, p99 = {} ms (mean ± 95% CI)",
+                s.replications(),
+                s.p99_ms.render(1)
             );
         }
         if let Some(o) = curve.adaptive_at(curve.peak_rate()) {

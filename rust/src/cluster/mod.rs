@@ -31,7 +31,12 @@
 //! Machines between failure boundaries are independent engine runs, so
 //! each window fans out over the sweep thread pool
 //! ([`crate::sweep`]'s `parallel_map`) and folds back in machine order —
-//! reports are byte-identical for any `--threads`.
+//! reports are byte-identical for any `--threads`. With
+//! `serve.replications > 1` the whole fleet run repeats under
+//! [`crate::sweep::ReplicationPlan`]-derived seeds and every report row
+//! gains mean ± 95% CI columns (see [`ClusterOutcome::csv_columns`]);
+//! replication 0 keeps the base seed, so a replicated run's headline
+//! numbers match the single-run report exactly.
 
 mod machine;
 mod outcome;
@@ -50,7 +55,7 @@ use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::serve::{roofline_capacity_ips, LatencyRecorder, ServeConfig};
-use crate::sweep::parallel_map;
+use crate::sweep::{parallel_map, ReplicatedMetrics};
 
 /// One machine of the fleet: its size, its relative memory bandwidth,
 /// and its serving knobs.
@@ -299,9 +304,41 @@ impl ClusterSimulator {
         self
     }
 
-    /// Run the fleet to drain.
+    /// Run the fleet to drain. With `serve.replications > 1` the whole
+    /// fleet run repeats once per [`crate::sweep::ReplicationPlan`]
+    /// seed; replication 0 (the base seed) stays the headline outcome —
+    /// byte-identical to a single run — and every machine row plus the
+    /// fleet row gains a mean ± 95% CI fold. Replications run serially:
+    /// each run already fans its machine windows over the thread pool.
     pub fn run(&self) -> Result<ClusterOutcome> {
         self.cfg.validate()?;
+        let seeds = self.cfg.serve.replication_plan().seeds();
+        if seeds.len() == 1 {
+            return self.run_with_seed(seeds[0]);
+        }
+        let mut runs = Vec::with_capacity(seeds.len());
+        for &s in &seeds {
+            runs.push(self.run_with_seed(s)?);
+        }
+        let machine_stats: Vec<ReplicatedMetrics> = (0..self.cfg.machines.len())
+            .map(|m| {
+                let rows: Vec<[f64; 6]> = runs.iter().map(|o| o.machines[m].metric_row()).collect();
+                ReplicatedMetrics::from_rows(&rows)
+            })
+            .collect();
+        let fleet_rows: Vec<[f64; 6]> = runs.iter().map(|o| o.fleet.metric_row()).collect();
+        let fleet_stats = ReplicatedMetrics::from_rows(&fleet_rows);
+        let mut head = runs.into_iter().next().expect("at least one replication");
+        for (r, s) in head.machines.iter_mut().zip(machine_stats) {
+            r.stats = Some(s);
+        }
+        head.fleet.stats = Some(fleet_stats);
+        Ok(head)
+    }
+
+    /// One full fleet run under one seed (router RNG, routed arrival
+    /// stream, and per-tenant streams all derive from it).
+    fn run_with_seed(&self, seed: u64) -> Result<ClusterOutcome> {
         let n = self.cfg.machines.len();
         let duration = self.cfg.serve.duration_s;
         let placed = !self.cfg.serve.tenants.is_empty();
@@ -320,12 +357,12 @@ impl ClusterSimulator {
         } else {
             let capacity: Vec<f64> =
                 accels.iter().map(|a| roofline_capacity_ips(a, &self.graph)).collect();
-            Some(Router::new(self.cfg.router, self.cfg.serve.seed, capacity))
+            Some(Router::new(self.cfg.router, seed, capacity))
         };
 
         if placed {
             for (i, t) in self.cfg.serve.tenants.iter().enumerate() {
-                let stream = t.arrival.generate(duration, tenant_seed(self.cfg.serve.seed, i))?;
+                let stream = t.arrival.generate(duration, tenant_seed(seed, i))?;
                 let mut lane = Lane::new(t.graph.clone(), 0);
                 lane.partitions = t.partitions;
                 lane.queue_cap = t.queue_cap;
@@ -349,8 +386,7 @@ impl ClusterSimulator {
                 born.push(Vec::new());
             }
             let rate = self.cfg.serve.headline_rate();
-            let stream =
-                self.cfg.serve.arrival.process(rate).generate(duration, self.cfg.serve.seed)?;
+            let stream = self.cfg.serve.arrival.process(rate).generate(duration, seed)?;
             let router = router.as_mut().expect("routed mode has a router");
             for &t in &stream {
                 let up: Vec<bool> = (0..n).map(|m| up_at(&self.cfg.failures, m, t)).collect();
@@ -695,6 +731,7 @@ impl ClusterSimulator {
                 total_bytes: ms.total_bytes,
                 migrated_bytes: ms.migrated_bytes,
                 placed_tenants: if placed { hosting[m].clone() } else { Vec::new() },
+                stats: None,
             });
         }
 
@@ -736,6 +773,7 @@ impl ClusterSimulator {
             total_bytes: reports.iter().map(|r| r.total_bytes).sum(),
             migrated_bytes: reports.iter().map(|r| r.migrated_bytes).sum(),
             placed_tenants: Vec::new(),
+            stats: None,
         };
 
         Ok(ClusterOutcome {
@@ -838,6 +876,35 @@ mod tests {
         // Deterministic: same config, same result.
         let again = ClusterSimulator::from_config(&knl(), &tiny_cnn(), small_cfg());
         assert_eq!(again.run().unwrap().to_csv().to_string(), out.to_csv().to_string());
+    }
+
+    #[test]
+    fn replicated_cluster_folds_ci_and_keeps_rep0_headline() {
+        let base = ClusterSimulator::from_config(&knl(), &tiny_cnn(), small_cfg()).run().unwrap();
+        assert!(!base.is_replicated());
+        let plain_header = base.to_csv().to_string().lines().next().unwrap().to_string();
+
+        let mut cfg = small_cfg();
+        cfg.serve.replications = 3;
+        let rep = ClusterSimulator::from_config(&knl(), &tiny_cnn(), cfg.clone()).run().unwrap();
+        assert_eq!(rep.replications(), Some(3));
+        // Replication 0 runs the base seed: the headline fleet numbers
+        // match the single run exactly.
+        assert_eq!(rep.fleet.served, base.fleet.served);
+        assert_eq!(rep.fleet.dropped, base.fleet.dropped);
+        assert_eq!(rep.fleet.latency.p99_ms.to_bits(), base.fleet.latency.p99_ms.to_bits());
+        // Every machine row and the fleet row carry a fold, and the CI
+        // columns extend the single-run header.
+        assert!(rep.machines.iter().all(|m| m.stats.is_some()));
+        let csv = rep.to_csv().to_string();
+        let header = csv.lines().next().unwrap();
+        assert!(header.starts_with(&plain_header));
+        assert!(header.contains(",p99_ms_mean,p99_ms_ci95,"));
+        assert!(rep.render().contains("p99 ±ci"));
+        // Byte-identical across thread counts.
+        let t4 = ClusterSimulator::from_config(&knl(), &tiny_cnn(), cfg).threads(4).run().unwrap();
+        assert_eq!(t4.to_csv().to_string(), csv);
+        assert_eq!(t4.summary_json().to_string_pretty(), rep.summary_json().to_string_pretty());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use super::placement::Migration;
 use super::router::RouterPolicy;
 use crate::serve::LatencyStats;
+use crate::sweep::ReplicatedMetrics;
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -39,16 +40,31 @@ pub struct MachineReport {
     pub migrated_bytes: f64,
     /// Tenants hosted at end of run (placed mode; empty when routed).
     pub placed_tenants: Vec<usize>,
+    /// Mean ± 95% CI over replications (`None` on single runs).
+    pub stats: Option<ReplicatedMetrics>,
 }
 
 impl MachineReport {
-    fn drop_rate(&self) -> f64 {
+    pub fn drop_rate(&self) -> f64 {
         let arrived = self.served + self.dropped;
         if arrived == 0 {
             0.0
         } else {
             self.dropped as f64 / arrived as f64
         }
+    }
+
+    /// The six headline metrics folded across replications, in the
+    /// order `ReplicatedMetrics::from_rows` expects.
+    pub(crate) fn metric_row(&self) -> [f64; 6] {
+        [
+            self.latency.p50_ms,
+            self.latency.p95_ms,
+            self.latency.p99_ms,
+            self.throughput_ips,
+            self.goodput_ips,
+            self.drop_rate(),
+        ]
     }
 }
 
@@ -71,9 +87,20 @@ pub struct ClusterOutcome {
 }
 
 impl ClusterOutcome {
+    /// True when the run folded more than one replication.
+    pub fn is_replicated(&self) -> bool {
+        self.fleet.stats.is_some()
+    }
+
+    /// Replication count, when the run was replicated.
+    pub fn replications(&self) -> Option<usize> {
+        self.fleet.stats.as_ref().map(|s| s.replications())
+    }
+
     /// Human-readable per-machine table.
     pub fn render(&self) -> String {
-        let mut t = Table::new(vec![
+        let replicated = self.is_replicated();
+        let mut cols = vec![
             "machine",
             "cores",
             "bw×",
@@ -87,13 +114,16 @@ impl ClusterOutcome {
             "thr (img/s)",
             "goodput",
             "p99 ms",
-            "BW GB/s",
-            "mig GB",
-        ])
-        .title(&format!("cluster ({} router)", self.router.name()))
-        .left_first();
+        ];
+        if replicated {
+            cols.push("p99 ±ci");
+        }
+        cols.extend(["BW GB/s", "mig GB"]);
+        let mut t = Table::new(cols)
+            .title(&format!("cluster ({} router)", self.router.name()))
+            .left_first();
         for r in self.machines.iter().chain(std::iter::once(&self.fleet)) {
-            t.row(vec![
+            let mut cells = vec![
                 r.machine.clone(),
                 r.cores.to_string(),
                 format!("{:.2}", r.bw_scale),
@@ -107,16 +137,22 @@ impl ClusterOutcome {
                 format!("{:.0}", r.throughput_ips),
                 format!("{:.0}", r.goodput_ips),
                 format!("{:.2}", r.latency.p99_ms),
-                format!("{:.1}", r.bw.mean),
-                format!("{:.2}", r.migrated_bytes / 1e9),
-            ]);
+            ];
+            if replicated {
+                cells.push(r.stats.as_ref().map_or("-".into(), |s| s.p99_ms.render(1)));
+            }
+            cells.push(format!("{:.1}", r.bw.mean));
+            cells.push(format!("{:.2}", r.migrated_bytes / 1e9));
+            t.row(cells);
         }
         t.render()
     }
 
-    /// One row per machine plus the `fleet` row.
-    pub fn to_csv(&self) -> CsvWriter {
-        let mut w = CsvWriter::new(vec![
+    /// CSV header for machine rows. With `replicated` the per-metric
+    /// `*_mean`/`*_ci95` columns are appended after the base set, so a
+    /// single-run header stays a strict prefix of a replicated one.
+    pub fn csv_columns(replicated: bool) -> Vec<&'static str> {
+        let mut cols = vec![
             "machine",
             "cores",
             "bw_scale",
@@ -141,7 +177,17 @@ impl ClusterOutcome {
             "total_gb",
             "placed_tenants",
             "migrated_gb",
-        ]);
+        ];
+        if replicated {
+            cols.extend(ReplicatedMetrics::CSV_COLUMNS);
+        }
+        cols
+    }
+
+    /// One row per machine plus the `fleet` row.
+    pub fn to_csv(&self) -> CsvWriter {
+        let replicated = self.is_replicated();
+        let mut w = CsvWriter::new(Self::csv_columns(replicated));
         let f = crate::util::csv::format_float;
         for r in self.machines.iter().chain(std::iter::once(&self.fleet)) {
             let tenants = r
@@ -150,7 +196,7 @@ impl ClusterOutcome {
                 .map(|t| format!("t{t}"))
                 .collect::<Vec<_>>()
                 .join("+");
-            w.row(vec![
+            let mut cells = vec![
                 r.machine.clone(),
                 r.cores.to_string(),
                 f(r.bw_scale),
@@ -175,7 +221,17 @@ impl ClusterOutcome {
                 f(r.total_bytes / 1e9),
                 tenants,
                 f(r.migrated_bytes / 1e9),
-            ]);
+            ];
+            if replicated {
+                match &r.stats {
+                    Some(s) => cells.extend(s.csv_cells()),
+                    None => {
+                        let blanks = ReplicatedMetrics::CSV_COLUMNS.len();
+                        cells.extend((0..blanks).map(|_| String::new()));
+                    }
+                }
+            }
+            w.row(cells);
         }
         w
     }
@@ -194,7 +250,7 @@ impl ClusterOutcome {
                     .with("weight_gb", m.weight_bytes / 1e9),
             );
         }
-        Json::obj()
+        let mut j = Json::obj()
             .with("router", self.router.name())
             .with("machines", self.machines.len())
             .with("requests", self.requests)
@@ -209,8 +265,15 @@ impl ClusterOutcome {
             .with("p50_ms", self.fleet.latency.p50_ms)
             .with("p99_ms", self.fleet.latency.p99_ms)
             .with("bw_mean_gbps", self.fleet.bw.mean)
-            .with("bw_std_gbps", self.fleet.bw.std)
-            .with("migrations", migrations)
+            .with("bw_std_gbps", self.fleet.bw.std);
+        if let Some(s) = &self.fleet.stats {
+            j.set("replications", s.replications());
+            j.set("p99_ms_mean", s.p99_ms.mean);
+            j.set("p99_ms_ci95", s.p99_ms.ci95);
+            j.set("goodput_ips_mean", s.goodput_ips.mean);
+            j.set("goodput_ips_ci95", s.goodput_ips.ci95);
+        }
+        j.with("migrations", migrations)
     }
 }
 
@@ -239,6 +302,7 @@ mod tests {
             total_bytes: 3e9,
             migrated_bytes: 0.0,
             placed_tenants: vec![0, 2],
+            stats: None,
         }
     }
 
@@ -272,6 +336,30 @@ mod tests {
         assert!(out.lines().last().unwrap().starts_with("fleet,"));
         assert!(out.contains("po2c"));
         assert!(out.contains("t0+t2"));
+    }
+
+    #[test]
+    fn replicated_outcome_appends_ci_columns_after_the_base_header() {
+        let mut o = outcome();
+        let plain_header = o.to_csv().to_string().lines().next().unwrap().to_string();
+
+        o.fleet.stats =
+            Some(ReplicatedMetrics::from_rows(&[o.fleet.metric_row(), o.fleet.metric_row()]));
+        assert!(o.is_replicated());
+        assert_eq!(o.replications(), Some(2));
+
+        let csv = o.to_csv().to_string();
+        let header = csv.lines().next().unwrap();
+        assert!(header.starts_with(&plain_header), "base header must stay a prefix");
+        assert!(header.ends_with(",drop_rate_mean,drop_rate_ci95"));
+        // Machine rows carry no fold (stats: None) -> empty CI cells.
+        let machine_row = csv.lines().nth(1).unwrap();
+        assert!(machine_row.ends_with(&",".repeat(12)), "12 empty CI cells");
+        assert!(o.render().contains("p99 ±ci"));
+
+        let j = o.summary_json().to_string_pretty();
+        assert!(j.contains("\"replications\": 2"));
+        assert!(j.contains("\"p99_ms_ci95\""));
     }
 
     #[test]

@@ -46,6 +46,7 @@ fn app() -> App {
                 .opt("staggers", "LIST", Some("uniform_phase"), "stagger policies to sweep")
                 .opt("serve-duration", "S", Some("0.25"), "arrival window for serve rows")
                 .opt("seed", "N", Some("42"), "serve arrival-stream seed")
+                .opt("replications", "N", Some("1"), "Monte-Carlo replications per serve row")
                 .opt("queue-cap", "LIST", Some("0"), "serve rows: queue-bound axis (0 = unbounded)")
                 .opt("slo-ms", "LIST", Some("0"), "serve rows: latency-deadline axis (0 = none)")
                 .opt("batch-timeout", "MS", Some("0"), "serve rows: batch hold (0 = on idle)")
@@ -65,6 +66,7 @@ fn app() -> App {
                 .opt("rate", "LIST", None, "arrival rates in img/s (default: auto vs capacity)")
                 .opt("duration", "S", Some("0.5"), "arrival window in seconds")
                 .opt("seed", "N", Some("42"), "arrival-stream rng seed")
+                .opt("replications", "N", Some("1"), "Monte-Carlo replications (mean ± 95% CI)")
                 .opt("policy", "NAME", Some("shortest_queue"), "round_robin|shortest_queue")
                 .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
                 .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
@@ -92,6 +94,7 @@ fn app() -> App {
                 .opt("rate", "LIST", None, "fleet arrival rate in img/s (first value used)")
                 .opt("duration", "S", Some("0.5"), "arrival window in seconds")
                 .opt("seed", "N", Some("42"), "arrival-stream + router rng seed")
+                .opt("replications", "N", Some("1"), "Monte-Carlo replications (mean ± 95% CI)")
                 .opt("policy", "NAME", Some("shortest_queue"), "round_robin|shortest_queue")
                 .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
                 .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
@@ -214,6 +217,7 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
         .arrival_rates(rates)
         .serve_duration(m.get_f64("serve-duration")?.unwrap_or(0.25))
         .serve_seed(seed)
+        .serve_replications(m.get_usize("replications")?.unwrap_or(1))
         .serve_queue_caps(m.get_usize_list("queue-cap")?.unwrap_or_else(|| vec![0]))
         .serve_slo_ms_axis(m.get_f64_list("slo-ms")?.unwrap_or_else(|| vec![0.0]))
         .serve_batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))
@@ -306,6 +310,10 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         curve.to_csv().write_to(&dir.join("serve_curve.csv"))?;
         std::fs::write(dir.join("serve_summary.json"), curve.summary_json().to_string_pretty())?;
         println!("wrote {}/serve_curve.csv", dir.display());
+        if let Some(p) = curve.profile.as_ref().filter(|p| !p.is_empty()) {
+            p.to_csv().write_to(&dir.join("serve_profile.csv"))?;
+            println!("wrote {}/serve_profile.csv", dir.display());
+        }
     }
     Ok(())
 }

@@ -78,6 +78,11 @@ pub struct ServeConfig {
     pub trace_samples: usize,
     /// Apply the DRAM feasibility check (ablations switch it off).
     pub enforce_capacity: bool,
+    /// Monte-Carlo replications per scenario (≥ 1). 1 keeps the classic
+    /// single-seed run; N > 1 repeats every serve point under seeds
+    /// derived via [`crate::sweep::ReplicationPlan`] and adds
+    /// mean ± 95 % CI columns to the reports.
+    pub replications: usize,
 }
 
 impl Default for ServeConfig {
@@ -102,6 +107,7 @@ impl Default for ServeConfig {
             tenant_rebalance: false,
             trace_samples: 400,
             enforce_capacity: true,
+            replications: 1,
         }
     }
 }
@@ -153,6 +159,9 @@ impl ServeConfig {
         }
         if self.trace_samples == 0 {
             return Err(Error::InvalidConfig("trace_samples must be >= 1".into()));
+        }
+        if self.replications == 0 {
+            return Err(Error::InvalidConfig("replications must be >= 1".into()));
         }
         if let Some(a) = &self.adaptive {
             a.validate()?;
@@ -214,7 +223,15 @@ impl ServeConfig {
         if let Some(s) = m.get_usize("samples")? {
             self.trace_samples = s;
         }
+        if let Some(r) = m.get_usize("replications")? {
+            self.replications = r;
+        }
         Ok(())
+    }
+
+    /// The replication plan this config implies.
+    pub fn replication_plan(&self) -> crate::sweep::ReplicationPlan {
+        crate::sweep::ReplicationPlan::new(self.replications.max(1), self.seed)
     }
 
     /// Decode the full `serve` command surface — the shared knobs plus
@@ -293,6 +310,7 @@ mod tests {
             .opt("quantum-ms", "MS", Some("5"), "")
             .switch("rebalance", "")
             .opt("samples", "N", Some("400"), "")
+            .opt("replications", "N", Some("1"), "")
     }
 
     fn parse(args: &[&str]) -> Matches {
@@ -320,7 +338,21 @@ mod tests {
         assert!(cfg.tenants.is_empty());
         assert_eq!(cfg.tenant_epoch_s, d.tenant_epoch_s);
         assert_eq!(cfg.trace_samples, d.trace_samples);
+        assert_eq!(cfg.replications, 1);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn replications_decode_and_derive_the_plan_from_the_seed() {
+        let cfg = ServeConfig::from_cli(&parse(&["--replications", "5", "--seed", "9"])).unwrap();
+        assert_eq!(cfg.replications, 5);
+        let plan = cfg.replication_plan();
+        assert_eq!(plan.replications, 5);
+        assert_eq!(plan.base_seed, 9);
+        assert_eq!(plan.seeds()[0], 9, "replication 0 is the configured seed");
+        let mut bad = ServeConfig::default();
+        bad.replications = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

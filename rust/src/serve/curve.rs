@@ -7,6 +7,13 @@
 //! pure simulation) and aggregates a deterministic, rate-major
 //! [`ServeCurve`]: byte-identical for 1 vs N threads, like the sweep
 //! engine it borrows its worker pool from.
+//!
+//! With [`ServeConfig::replications`] > 1 every grid point (and tenant
+//! row) repeats under the seeds of a [`crate::sweep::ReplicationPlan`]:
+//! replication 0 keeps the configured seed so the headline rows are
+//! unchanged, each point additionally carries mean ± 95 % CI statistics
+//! over its replications, and the curve exports a time-binned
+//! [`ReplicationProfile`] of its first completed grid point.
 
 use super::arrival::{ArrivalProcess, RateShape};
 use super::config::ServeConfig;
@@ -18,7 +25,7 @@ use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::shaping::StaggerPolicy;
-use crate::sweep::parallel_map;
+use crate::sweep::{parallel_map, ReplicatedMetrics, ReplicationProfile};
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -126,6 +133,10 @@ pub struct ServePoint {
     /// Multi-tenant rows: who this row belongs to (`None` for the
     /// classic single-model grid).
     pub tenant: Option<TenantRow>,
+    /// Mean ± 95 % CI over the replications (`None` on single-run
+    /// curves and on infeasible points). The headline `status` outcome
+    /// is always replication 0 — the base seed.
+    pub stats: Option<ReplicatedMetrics>,
     pub status: ServePointStatus,
 }
 
@@ -283,6 +294,13 @@ impl ServeExperiment {
         self
     }
 
+    /// Monte-Carlo replications per grid point (≥ 1; 1 = classic single
+    /// run). Deprecated shim for [`ServeConfig::replications`].
+    pub fn replications(mut self, n: usize) -> Self {
+        self.cfg.replications = n;
+        self
+    }
+
     /// Worker threads; 0 (default) uses the host's available parallelism.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = n;
@@ -328,10 +346,21 @@ impl ServeExperiment {
                 t.slo_ms = self.cfg.slo_ms;
             }
         }
-        let outs = parallel_map(&modes, self.effective_threads(), |&mode| {
+        // Replication fan-out: (mode × replication seed) tasks through
+        // one pool, mode-major so regrouping is a chunked fold and
+        // replication 0 (the base seed) stays the headline row.
+        let seeds = self.cfg.replication_plan().seeds();
+        let reps = seeds.len();
+        let mut tasks: Vec<(TenantMode, u64)> = Vec::with_capacity(modes.len() * reps);
+        for &mode in &modes {
+            for &seed in &seeds {
+                tasks.push((mode, seed));
+            }
+        }
+        let outs = parallel_map(&tasks, self.effective_threads(), |&(mode, seed)| {
             MultiTenantSimulator::new(&self.accel, specs.clone())
                 .duration(self.cfg.duration_s)
-                .seed(self.cfg.seed)
+                .seed(seed)
                 .policy(self.cfg.policy)
                 .stagger(self.cfg.stagger)
                 .batch_timeout_ms(self.cfg.batch_timeout_ms)
@@ -341,8 +370,24 @@ impl ServeExperiment {
                 .trace_samples(self.cfg.trace_samples)
                 .run()
         })?;
+        let mut outs = outs.into_iter();
         let mut points = Vec::new();
-        for out in outs {
+        for _ in &modes {
+            let group: Vec<_> = outs.by_ref().take(reps).collect();
+            let agg_stats = (reps > 1).then(|| {
+                let refs: Vec<&ServeOutcome> = group.iter().map(|o| &o.aggregate).collect();
+                ReplicatedMetrics::from_outcomes(&refs)
+            });
+            let tenant_stats: Vec<Option<ReplicatedMetrics>> = (0..group[0].tenants.len())
+                .map(|i| {
+                    (reps > 1).then(|| {
+                        let refs: Vec<&ServeOutcome> =
+                            group.iter().map(|o| &o.tenants[i].outcome).collect();
+                        ReplicatedMetrics::from_outcomes(&refs)
+                    })
+                })
+                .collect();
+            let out = group.into_iter().next().expect("one outcome per replication");
             let offered = out.offered_rate();
             let rebalances = out.rebalances.len();
             points.push(ServePoint {
@@ -359,9 +404,10 @@ impl ServeExperiment {
                     mode: out.mode,
                     rebalances,
                 }),
+                stats: agg_stats,
                 status: ServePointStatus::Completed(out.aggregate),
             });
-            for t in out.tenants {
+            for (i, t) in out.tenants.into_iter().enumerate() {
                 points.push(ServePoint {
                     rate: t.outcome.arrival_rate,
                     partitions: t.outcome.partitions,
@@ -373,6 +419,7 @@ impl ServeExperiment {
                         mode: out.mode,
                         rebalances,
                     }),
+                    stats: tenant_stats[i],
                     status: ServePointStatus::Completed(t.outcome),
                 });
             }
@@ -385,7 +432,14 @@ impl ServeExperiment {
             .collect::<Vec<_>>()
             .join("+");
         let total_rate: f64 = self.cfg.tenants.iter().map(|t| t.arrival.mean_rate()).sum();
-        Ok(ServeCurve { model, arrival: ArrivalProcess::poisson(total_rate.max(1.0)), points })
+        Ok(ServeCurve {
+            model,
+            arrival: ArrivalProcess::poisson(total_rate.max(1.0)),
+            points,
+            // Tenant rows do not record per-request timelines, so
+            // replicated tenant curves carry CI columns but no profile.
+            profile: None,
+        })
     }
 
     /// Run the grid and assemble the rate-major curve.
@@ -419,12 +473,25 @@ impl ServeExperiment {
             }
         }
         let threads = self.effective_threads();
-        let statuses = parallel_map(&points, threads, |&(rate, n, adaptive)| {
+        // Replication fan-out: every grid point repeats under the plan's
+        // derived seeds through the SAME worker pool. Tasks are
+        // point-major / replication-minor, so regrouping is a chunked
+        // (id-keyed) fold and replication 0 — the base seed — stays the
+        // headline outcome of every point.
+        let seeds = self.cfg.replication_plan().seeds();
+        let reps = seeds.len();
+        let mut tasks: Vec<(f64, usize, bool, u64)> = Vec::with_capacity(points.len() * reps);
+        for &(rate, n, adaptive) in &points {
+            for &seed in &seeds {
+                tasks.push((rate, n, adaptive, seed));
+            }
+        }
+        let statuses = parallel_map(&tasks, threads, |&(rate, n, adaptive, seed)| {
             let mut sim = ServeSimulator::new(&self.accel, &self.graph)
                 .partitions(n)
                 .arrival(self.cfg.arrival.process(rate))
                 .duration(self.cfg.duration_s)
-                .seed(self.cfg.seed)
+                .seed(seed)
                 .policy(self.cfg.policy)
                 .stagger(self.cfg.stagger)
                 .queue_cap(self.cfg.queue_cap)
@@ -442,10 +509,28 @@ impl ServeExperiment {
                 Err(e) => Err(e),
             }
         })?;
+        let mut statuses = statuses.into_iter();
+        let mut profile: Option<ReplicationProfile> = None;
         let points = points
             .into_iter()
-            .zip(statuses)
-            .map(|((rate, partitions, adaptive), status)| {
+            .map(|(rate, partitions, adaptive)| {
+                let group: Vec<ServePointStatus> = statuses.by_ref().take(reps).collect();
+                // Feasibility is seed-independent, so a point completes
+                // in every replication or in none.
+                let outcomes: Vec<&ServeOutcome> = group
+                    .iter()
+                    .filter_map(|s| match s {
+                        ServePointStatus::Completed(o) => Some(o),
+                        ServePointStatus::Infeasible(_) => None,
+                    })
+                    .collect();
+                let stats = (reps > 1 && !outcomes.is_empty())
+                    .then(|| ReplicatedMetrics::from_outcomes(&outcomes));
+                if profile.is_none() && reps > 1 && !outcomes.is_empty() {
+                    let bins = ReplicationProfile::DEFAULT_BINS;
+                    profile = Some(ReplicationProfile::from_outcomes(&outcomes, bins));
+                }
+                let status = group.into_iter().next().expect("one status per replication");
                 // The adaptive row's requested start may have been an
                 // infeasible candidate the run skipped; report the count
                 // the run actually started at.
@@ -455,13 +540,14 @@ impl ServeExperiment {
                     }
                     _ => partitions,
                 };
-                ServePoint { rate, partitions, adaptive, tenant: None, status }
+                ServePoint { rate, partitions, adaptive, tenant: None, stats, status }
             })
             .collect();
         Ok(ServeCurve {
             model: self.graph.name.clone(),
             arrival: self.cfg.arrival.process(1.0),
             points,
+            profile,
         })
     }
 }
@@ -474,9 +560,24 @@ pub struct ServeCurve {
     /// Template process (rate 1.0) — names the arrival family in reports.
     pub arrival: ArrivalProcess,
     pub points: Vec<ServePoint>,
+    /// Time-binned arrived/served/backlog profile (mean ± CI across
+    /// replications) of the first completed grid point; `None` on
+    /// single-run and tenant curves.
+    pub profile: Option<ReplicationProfile>,
 }
 
 impl ServeCurve {
+    /// Whether any point carries replication statistics (a
+    /// `--replications N > 1` run), i.e. whether the CI columns appear.
+    pub fn is_replicated(&self) -> bool {
+        self.points.iter().any(|p| p.stats.is_some())
+    }
+
+    /// The replication count of the run (`None` for single-run curves).
+    pub fn replications(&self) -> Option<usize> {
+        self.points.iter().filter_map(|p| p.stats.as_ref().map(|s| s.replications())).max()
+    }
+
     /// Completed outcome at a *static* grid point, if it completed.
     pub fn at(&self, rate: f64, partitions: usize) -> Option<&ServeOutcome> {
         self.points
@@ -544,9 +645,11 @@ impl ServeCurve {
 
     /// Throughput–latency table (the `serve` CLI's output). Adaptive
     /// rows show their chosen-partition trajectory in the `n` column and
-    /// their reconfiguration count.
+    /// their reconfiguration count; replicated curves append a
+    /// `p99 ±ci` column (mean ± 95 % CI over the replications).
     pub fn render(&self) -> String {
-        let mut t = Table::new(vec![
+        let replicated = self.is_replicated();
+        let mut cols = vec![
             "rate",
             "n",
             "tenant",
@@ -561,7 +664,11 @@ impl ServeCurve {
             "BW GB/s",
             "cov",
             "reconf",
-        ]);
+        ];
+        if replicated {
+            cols.push("p99 ±ci");
+        }
+        let mut t = Table::new(cols);
         for p in &self.points {
             // Multi-tenant rows label themselves `mode/model@cores`
             // (`mode/all` for the machine aggregate).
@@ -584,7 +691,7 @@ impl ServeCurve {
                         None if p.adaptive => o.reconfigurations().to_string(),
                         None => "-".into(),
                     };
-                    t.row(vec![
+                    let mut row = vec![
                         format!("{:.0}", p.rate),
                         n,
                         tenant,
@@ -599,7 +706,11 @@ impl ServeCurve {
                         format!("{:.1}", o.bw.mean),
                         format!("{:.3}", o.bw.cov()),
                         reconf,
-                    ])
+                    ];
+                    if replicated {
+                        row.push(p.stats.as_ref().map_or("-".into(), |s| s.p99_ms.render(1)));
+                    }
+                    t.row(row)
                 }
                 None => {
                     let mut row = vec![
@@ -612,6 +723,9 @@ impl ServeCurve {
                         "infeasible".to_string(),
                     ];
                     row.extend((0..7).map(|_| "-".to_string()));
+                    if replicated {
+                        row.push("-".to_string());
+                    }
                     t.row(row)
                 }
             };
@@ -624,12 +738,11 @@ impl ServeCurve {
         .render()
     }
 
-    /// Full per-point export in grid (rate-major) order. Adaptive rows
-    /// populate the `mode`, `epochs`, `reconfigurations` and
-    /// `chosen_partitions` columns (static rows export their fixed count
-    /// and zero reconfigurations).
-    pub fn to_csv(&self) -> CsvWriter {
-        let mut w = CsvWriter::new(vec![
+    /// The CSV header of [`Self::to_csv`]. The single-run header is a
+    /// strict prefix of the replicated one: `--replications N > 1`
+    /// appends the [`ReplicatedMetrics::CSV_COLUMNS`] mean/CI pairs.
+    pub fn csv_columns(replicated: bool) -> Vec<&'static str> {
+        let mut cols = vec![
             "rate",
             "partitions",
             "mode",
@@ -658,7 +771,21 @@ impl ServeCurve {
             "tenant_model",
             "tenant_cores",
             "reason",
-        ]);
+        ];
+        if replicated {
+            cols.extend(ReplicatedMetrics::CSV_COLUMNS);
+        }
+        cols
+    }
+
+    /// Full per-point export in grid (rate-major) order. Adaptive rows
+    /// populate the `mode`, `epochs`, `reconfigurations` and
+    /// `chosen_partitions` columns (static rows export their fixed count
+    /// and zero reconfigurations); replicated curves append the mean/CI
+    /// column pairs of [`ReplicatedMetrics::CSV_COLUMNS`].
+    pub fn to_csv(&self) -> CsvWriter {
+        let replicated = self.is_replicated();
+        let mut w = CsvWriter::new(Self::csv_columns(replicated));
         let f = crate::util::csv::format_float;
         for p in &self.points {
             // Multi-tenant rows report their sharing discipline in the
@@ -714,7 +841,17 @@ impl ServeCurve {
                     v
                 }
             };
-            w.row(head.into_iter().chain(tail).collect());
+            let mut cells: Vec<String> = head.into_iter().chain(tail).collect();
+            if replicated {
+                match &p.stats {
+                    Some(s) => cells.extend(s.csv_cells()),
+                    None => {
+                        let blanks = ReplicatedMetrics::CSV_COLUMNS.len();
+                        cells.extend((0..blanks).map(|_| String::new()));
+                    }
+                }
+            }
+            w.row(cells);
         }
         w
     }
@@ -728,19 +865,29 @@ impl ServeCurve {
             .with("points", self.points.len())
             .with("completed", completed)
             .with("infeasible", self.points.len() - completed);
+        // Replication keys appear only on replicated curves, keeping the
+        // --replications 1 summary byte-identical to the classic one.
+        if let Some(r) = self.replications() {
+            j.set("replications", r);
+        }
         if let Some(best) = self.best_at_peak() {
             if let Some(o) = best.outcome() {
-                j.set(
-                    "best_at_peak",
-                    Json::obj()
-                        .with("rate", best.rate)
-                        .with("partitions", best.partitions)
-                        .with("adaptive", best.adaptive)
-                        .with("p99_ms", o.latency.p99_ms)
-                        .with("throughput_ips", o.throughput_ips)
-                        .with("goodput_ips", o.goodput_ips)
-                        .with("drop_rate", o.drop_rate),
-                );
+                let mut b = Json::obj()
+                    .with("rate", best.rate)
+                    .with("partitions", best.partitions)
+                    .with("adaptive", best.adaptive)
+                    .with("p99_ms", o.latency.p99_ms)
+                    .with("throughput_ips", o.throughput_ips)
+                    .with("goodput_ips", o.goodput_ips)
+                    .with("drop_rate", o.drop_rate);
+                if let Some(s) = &best.stats {
+                    b = b
+                        .with("p99_ms_mean", s.p99_ms.mean)
+                        .with("p99_ms_ci95", s.p99_ms.ci95)
+                        .with("goodput_ips_mean", s.goodput_ips.mean)
+                        .with("goodput_ips_ci95", s.goodput_ips.ci95);
+                }
+                j.set("best_at_peak", b);
             }
         }
         if let Some(o) = self.adaptive_at(self.peak_rate()) {
@@ -982,6 +1129,65 @@ mod tests {
         let cap = roofline_capacity_ips(&accel, &tiny_cnn());
         assert!(rates[0] < cap && rates[2] > cap);
         assert!(rates.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn replications_add_ci_columns_and_keep_rep0_as_headline() {
+        let accel = AcceleratorConfig::knl_7210();
+        let run = |replications: usize, threads: usize| {
+            ServeExperiment::new(&accel, &tiny_cnn())
+                .partitions(vec![1, 2, 3]) // n = 3 is infeasible on 64 cores
+                .rates(vec![3000.0])
+                .duration(0.01)
+                .seed(5)
+                .trace_samples(16)
+                .replications(replications)
+                .threads(threads)
+                .run()
+                .unwrap()
+        };
+        let single = run(1, 2);
+        assert!(!single.is_replicated());
+        assert_eq!(single.replications(), None);
+        assert!(single.profile.is_none());
+        let single_csv = single.to_csv().to_string();
+        assert!(single_csv.lines().next().unwrap().ends_with(",reason"));
+
+        let rep = run(3, 2);
+        assert!(rep.is_replicated());
+        assert_eq!(rep.replications(), Some(3));
+        // Replication 0 is the base seed: every headline outcome matches
+        // the single-run curve exactly.
+        for (a, b) in single.points.iter().zip(&rep.points) {
+            let key = |p: &ServePoint| {
+                p.outcome().map(|o| (o.served, o.dropped, o.batches, o.latency.p99_ms.to_bits()))
+            };
+            assert_eq!(key(a), key(b), "rate {} n {}", a.rate, a.partitions);
+        }
+        let csv = rep.to_csv().to_string();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains(",p99_ms_mean,p99_ms_ci95,"));
+        assert!(header.ends_with(",drop_rate_mean,drop_rate_ci95"));
+        // Infeasible rows carry empty CI cells, completed rows real ones.
+        assert!(rep.points[2].stats.is_none(), "infeasible point has no stats");
+        assert!(rep.points[0].stats.is_some());
+        assert!(rep.render().contains("p99 ±ci"));
+        assert!(rep.render().contains('±'));
+        assert_eq!(rep.summary_json().req_usize("replications").unwrap(), 3);
+        let profile = rep.profile.as_ref().expect("replicated grid exports a profile");
+        assert!(!profile.is_empty());
+        assert_eq!(profile.bins.len(), ReplicationProfile::DEFAULT_BINS);
+
+        // Byte-identical across thread counts, replications included.
+        let a = run(3, 1);
+        let b = run(3, 4);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.to_csv().to_string(), b.to_csv().to_string());
+        assert_eq!(a.summary_json().to_string_pretty(), b.summary_json().to_string_pretty());
+        assert_eq!(
+            a.profile.unwrap().to_csv().to_string(),
+            b.profile.unwrap().to_csv().to_string()
+        );
     }
 
     #[test]

@@ -37,6 +37,14 @@
 //!   SLO — co-scheduled (optionally re-balancing cores at epoch
 //!   boundaries) or time-shared, with per-tenant and aggregate latency
 //!   accounting.
+//!
+//! Every result above is a point estimate under one seeded arrival
+//! stream. With `ServeConfig::replications > 1` the experiment layer
+//! replays each point under [`crate::sweep::ReplicationPlan`]-derived
+//! seeds and reports mean ± 95 % confidence intervals next to the
+//! replication-0 headline (which keeps the base seed, so single-run
+//! reports are unchanged); see [`crate::sweep::ReplicatedMetrics`] and
+//! the time-binned [`crate::sweep::ReplicationProfile`] export.
 
 mod arrival;
 mod config;

@@ -38,12 +38,15 @@ use std::collections::BTreeMap;
 
 /// Map one engine run's batch completions back to per-request latencies
 /// (shared by the fixed path and every adaptive epoch); returns how many
-/// requests completed service.
+/// requests completed service. Each served request's completion instant
+/// is also appended to `finishes` (batch-completion order) for the
+/// replication harness's time-binned profiles.
 fn fold_completions(
     arrivals: &[f64],
     controller: &ServeController<'_>,
     jobs: &[JobRecord],
     recorder: &mut LatencyRecorder,
+    finishes: &mut Vec<f64>,
 ) -> Result<usize> {
     let batches = controller.batches();
     let mut served = 0usize;
@@ -56,6 +59,7 @@ fn fold_completions(
         };
         for &r in &batch.requests {
             recorder.record(arrivals[r], job.finished_at);
+            finishes.push(job.finished_at);
         }
         served += batch.requests.len();
     }
@@ -103,10 +107,15 @@ pub struct ServeOutcome {
     pub epochs: Vec<EpochStats>,
     /// Online re-partitioning events, in order (empty for fixed runs).
     pub reconfigs: Vec<ReconfigEvent>,
+    /// Per-request arrival instants (seconds from stream start) — the
+    /// raw stream the run served, kept for replication-profile binning.
+    pub arrival_times_s: Vec<f64>,
+    /// Completion instants of served requests, batch-completion order.
+    pub finish_times_s: Vec<f64>,
 }
 
 impl ServeOutcome {
-    fn empty(partitions: usize, arrival_rate: f64) -> Self {
+    pub(crate) fn empty(partitions: usize, arrival_rate: f64) -> Self {
         Self {
             partitions,
             arrival_rate,
@@ -126,6 +135,8 @@ impl ServeOutcome {
             trace: BandwidthTrace::total_only(),
             epochs: Vec::new(),
             reconfigs: Vec::new(),
+            arrival_times_s: Vec::new(),
+            finish_times_s: Vec::new(),
         }
     }
 
@@ -390,7 +401,9 @@ impl ServeSimulator {
             Some(s) => LatencyRecorder::with_slo(s),
             None => LatencyRecorder::new(),
         };
-        let served = fold_completions(&arrivals, &controller, &out.jobs, &mut recorder)?;
+        let mut finishes = Vec::new();
+        let served =
+            fold_completions(&arrivals, &controller, &out.jobs, &mut recorder, &mut finishes)?;
         let dropped = controller.dropped();
         recorder.record_drops(dropped);
         if served + dropped != arrivals.len() || controller.pending() != 0 {
@@ -400,6 +413,8 @@ impl ServeSimulator {
             )));
         }
 
+        let queue_peak = controller.queue_peak();
+        drop(controller);
         let latency = recorder.stats();
         let makespan = out.makespan.0;
         let per_s = |n: usize| if makespan > 0.0 { n as f64 / makespan } else { 0.0 };
@@ -412,7 +427,7 @@ impl ServeSimulator {
             drop_rate: latency.drop_rate(),
             batches: out.jobs.len(),
             mean_batch: served as f64 / out.jobs.len().max(1) as f64,
-            queue_peak: controller.queue_peak(),
+            queue_peak,
             makespan_s: makespan,
             throughput_ips: per_s(served),
             goodput_ips: per_s(latency.slo_hits),
@@ -422,6 +437,8 @@ impl ServeSimulator {
             trace: out.trace,
             epochs: Vec::new(),
             reconfigs: Vec::new(),
+            arrival_times_s: arrivals,
+            finish_times_s: finishes,
         })
     }
 
@@ -483,6 +500,7 @@ impl ServeSimulator {
         let mut trace = BandwidthTrace::total_only();
         let mut epochs: Vec<EpochStats> = Vec::new();
         let mut reconfigs: Vec<ReconfigEvent> = Vec::new();
+        let mut finishes: Vec<f64> = Vec::new();
         let mut carry: Vec<usize> = Vec::new();
         // The lull re-arm state that survives epoch boundaries alongside
         // the live gates: the rolling inter-dispatch gap window and the
@@ -533,7 +551,8 @@ impl ServeSimulator {
 
             // Fold completions into the continuous latency record.
             let mark = recorder.mark();
-            let served_e = fold_completions(&arrivals, &controller, &out.jobs, &mut recorder)?;
+            let served_e =
+                fold_completions(&arrivals, &controller, &out.jobs, &mut recorder, &mut finishes)?;
             let dropped_e = controller.dropped();
             recorder.record_drops(dropped_e);
             carry = controller.drain_remaining();
@@ -646,6 +665,8 @@ impl ServeSimulator {
             trace,
             epochs,
             reconfigs,
+            arrival_times_s: arrivals,
+            finish_times_s: finishes,
         })
     }
 }

@@ -778,6 +778,8 @@ impl MultiTenantSimulator {
                     trace: BandwidthTrace::total_only(),
                     epochs: s.epochs.clone(),
                     reconfigs: Vec::new(),
+                    arrival_times_s: arrivals[i].clone(),
+                    finish_times_s: Vec::new(),
                 },
             });
         }
@@ -805,6 +807,8 @@ impl MultiTenantSimulator {
             trace,
             epochs: Vec::new(),
             reconfigs: Vec::new(),
+            arrival_times_s: Vec::new(),
+            finish_times_s: Vec::new(),
         };
         Ok(MultiTenantOutcome { mode: self.mode, tenants: tenants_out, aggregate, rebalances })
     }

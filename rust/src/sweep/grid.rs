@@ -176,6 +176,14 @@ impl SweepGrid {
         self
     }
 
+    /// Monte-Carlo replications per serve scenario (≥ 1; offline rows
+    /// are deterministic and always run once). See
+    /// [`super::ReplicationPlan`].
+    pub fn serve_replications(mut self, n: usize) -> Self {
+        self.serve.replications = n;
+        self
+    }
+
     /// Bound each serve-scenario partition queue (0 = unbounded) —
     /// single-value convenience over [`Self::serve_queue_caps`].
     pub fn serve_queue_cap(mut self, cap: usize) -> Self {

@@ -14,10 +14,15 @@
 //!   shared;
 //! * [`SweepReport`] aggregates the outcomes into a ranked table with
 //!   relative-performance, traffic-smoothness (coefficient of
-//!   variation) and p50/p95/p99 latency columns, plus CSV/JSON exports.
+//!   variation) and p50/p95/p99 latency columns, plus CSV/JSON exports;
+//! * [`ReplicationPlan`] (see [`replicate`]) repeats serve scenarios
+//!   under SplitMix64-derived seeds and reduces the tail metrics to
+//!   mean ± 95 % t-intervals, so ranked comparisons carry error bars
+//!   instead of single-seed point estimates.
 //!
 //! Results are byte-identical for 1 vs N worker threads: outcomes are
-//! keyed by scenario id and reassembled in grid order.
+//! keyed by scenario id (and replication index) and reassembled in grid
+//! order — the determinism contract `docs/ARCHITECTURE.md` spells out.
 //!
 //! ```no_run
 //! use trafficshape::config::AcceleratorConfig;
@@ -32,10 +37,12 @@
 //! ```
 
 mod grid;
+pub mod replicate;
 mod report;
 mod runner;
 
 pub use grid::{Scenario, SweepGrid, DEFAULT_SWEEP_MODELS};
+pub use replicate::{MetricCi, ProfileBin, ReplicatedMetrics, ReplicationPlan, ReplicationProfile};
 pub use report::{ScenarioOutcome, ScenarioStatus, SweepMetrics, SweepReport};
 pub(crate) use runner::parallel_map;
 pub use runner::SweepRunner;

@@ -1,0 +1,403 @@
+//! Monte-Carlo replication: the same scenario run under many derived
+//! seeds, reduced to mean ± 95 % confidence intervals.
+//!
+//! Every tail metric the single-run reports quote — p99, drop rate,
+//! goodput at overload — is a point estimate of a random quantity: the
+//! arrival stream is stochastic, and the paper's argument is itself
+//! statistical (asynchronous partitions de-correlate traffic so the
+//! aggregate σ shrinks as root-sum-square). A [`ReplicationPlan`] makes
+//! those estimates defensible: it derives one seed per replication from
+//! the scenario's base seed via a SplitMix64 sub-stream, the front-ends
+//! fan the replications out over the existing `parallel_map` pool, and
+//! [`ReplicatedMetrics`] folds the per-replication outcomes into mean,
+//! sample standard deviation and a 95 % Student-t interval per metric.
+//!
+//! Two contracts the harness guarantees:
+//!
+//! * **Replication 0 is the base seed.** `seeds()[0] == base_seed`, so a
+//!   `--replications 1` run *is* today's single-run path and reproduces
+//!   its reports byte for byte.
+//! * **Thread-count independence.** Aggregation is an id-keyed fold over
+//!   the replication index — the same deterministic reduction whatever
+//!   order the worker threads finish in — so every mean/CI column and
+//!   [`ReplicationProfile`] bin is byte-identical across `--threads 1/N`.
+
+use crate::error::{Error, Result};
+use crate::serve::ServeOutcome;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::t_critical_975;
+
+/// How many times to repeat a scenario and under which seed lineage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicationPlan {
+    /// Number of independent runs (≥ 1; 1 = the classic single run).
+    pub replications: usize,
+    /// The scenario seed replication seeds are derived from.
+    pub base_seed: u64,
+}
+
+impl ReplicationPlan {
+    pub fn new(replications: usize, base_seed: u64) -> Self {
+        Self { replications, base_seed }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.replications == 0 {
+            return Err(Error::InvalidConfig("replications must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Whether more than one replication runs (i.e. CI columns appear).
+    pub fn is_replicated(&self) -> bool {
+        self.replications > 1
+    }
+
+    /// The per-replication seeds. Replication 0 keeps the base seed
+    /// itself (see the module contract); replications 1.. draw from a
+    /// SplitMix64 sub-stream of the base seed, so any two plans sharing
+    /// a base seed agree on every prefix.
+    pub fn seeds(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.replications);
+        out.push(self.base_seed);
+        let mut stream = SplitMix64::new(self.base_seed);
+        while out.len() < self.replications {
+            out.push(stream.next_u64());
+        }
+        out
+    }
+}
+
+/// Mean ± dispersion of one metric over the replications.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricCi {
+    /// Sample size (the number of replications folded in).
+    pub n: usize,
+    pub mean: f64,
+    /// Sample (n − 1) standard deviation — an *estimate* of the run-to-
+    /// run σ, unlike [`crate::util::stats::Summary::std`]'s population
+    /// convention for full traces.
+    pub std: f64,
+    /// Half-width of the 95 % Student-t interval,
+    /// `t_{0.975, n−1} · s / √n` (0 when n < 2).
+    pub ci95: f64,
+}
+
+impl MetricCi {
+    pub fn of(xs: &[f64]) -> Self {
+        let n = xs.len();
+        if n == 0 {
+            return Self { n: 0, mean: 0.0, std: 0.0, ci95: 0.0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        if n == 1 {
+            return Self { n, mean, std: 0.0, ci95: 0.0 };
+        }
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+        let std = var.sqrt();
+        let ci95 = t_critical_975(n - 1) * std / (n as f64).sqrt();
+        Self { n, mean, std, ci95 }
+    }
+
+    /// The `mean±ci` cell used by the render tables.
+    pub fn render(&self, decimals: usize) -> String {
+        format!("{:.*}±{:.*}", decimals, self.mean, decimals, self.ci95)
+    }
+}
+
+/// The six headline metrics as replication statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicatedMetrics {
+    pub p50_ms: MetricCi,
+    pub p95_ms: MetricCi,
+    pub p99_ms: MetricCi,
+    pub throughput_ips: MetricCi,
+    pub goodput_ips: MetricCi,
+    pub drop_rate: MetricCi,
+}
+
+impl ReplicatedMetrics {
+    /// The CSV columns every replicated report appends, in cell order.
+    pub const CSV_COLUMNS: [&'static str; 12] = [
+        "p50_ms_mean",
+        "p50_ms_ci95",
+        "p95_ms_mean",
+        "p95_ms_ci95",
+        "p99_ms_mean",
+        "p99_ms_ci95",
+        "throughput_ips_mean",
+        "throughput_ips_ci95",
+        "goodput_ips_mean",
+        "goodput_ips_ci95",
+        "drop_rate_mean",
+        "drop_rate_ci95",
+    ];
+
+    /// Fold rows of `[p50_ms, p95_ms, p99_ms, throughput, goodput,
+    /// drop_rate]` samples, one row per replication.
+    pub fn from_rows(rows: &[[f64; 6]]) -> Self {
+        let col = |i: usize| MetricCi::of(&rows.iter().map(|r| r[i]).collect::<Vec<f64>>());
+        Self {
+            p50_ms: col(0),
+            p95_ms: col(1),
+            p99_ms: col(2),
+            throughput_ips: col(3),
+            goodput_ips: col(4),
+            drop_rate: col(5),
+        }
+    }
+
+    /// Fold per-replication serve outcomes (replication-index order).
+    pub fn from_outcomes(outcomes: &[&ServeOutcome]) -> Self {
+        let rows: Vec<[f64; 6]> = outcomes
+            .iter()
+            .map(|o| {
+                [
+                    o.latency.p50_ms,
+                    o.latency.p95_ms,
+                    o.latency.p99_ms,
+                    o.throughput_ips,
+                    o.goodput_ips,
+                    o.drop_rate,
+                ]
+            })
+            .collect();
+        Self::from_rows(&rows)
+    }
+
+    /// Number of replications folded in.
+    pub fn replications(&self) -> usize {
+        self.p99_ms.n
+    }
+
+    /// CSV cells matching [`Self::CSV_COLUMNS`].
+    pub fn csv_cells(&self) -> Vec<String> {
+        let f = crate::util::csv::format_float;
+        [
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.throughput_ips,
+            self.goodput_ips,
+            self.drop_rate,
+        ]
+        .iter()
+        .flat_map(|m| [f(m.mean), f(m.ci95)])
+        .collect()
+    }
+}
+
+/// One time bin of a [`ReplicationProfile`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfileBin {
+    pub t_start_s: f64,
+    pub t_end_s: f64,
+    /// Requests arriving inside the bin (mean ± CI over replications).
+    pub arrived: MetricCi,
+    /// Requests completing service inside the bin.
+    pub served: MetricCi,
+    /// Backlog at the bin's end: cumulative arrived − cumulative served
+    /// (dropped requests stay counted in — they occupied a queue slot
+    /// until shed, and the shed instant is not recorded).
+    pub backlog: MetricCi,
+}
+
+/// Arrived / served / backlog per fixed-width time bin, mean ± CI across
+/// replications — the plottable profile of a replicated serving run (the
+/// rs-sim-style per-timestep aggregate, with error bars).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicationProfile {
+    pub bins: Vec<ProfileBin>,
+}
+
+impl ReplicationProfile {
+    /// Bin count the serve front-end exports.
+    pub const DEFAULT_BINS: usize = 50;
+
+    /// Bin every replication's request timeline over the common span
+    /// `[0, max event instant)` and fold the per-bin counts across
+    /// replications. Returns an empty profile when no replication saw
+    /// any event.
+    pub fn from_outcomes(outcomes: &[&ServeOutcome], bins: usize) -> Self {
+        assert!(bins > 0, "profile needs at least one bin");
+        let span = outcomes
+            .iter()
+            .flat_map(|o| o.arrival_times_s.iter().chain(o.finish_times_s.iter()))
+            .fold(0.0f64, |a, &t| a.max(t));
+        if !(span > 0.0) {
+            return Self::default();
+        }
+        let width = span / bins as f64;
+        // Per replication: arrived / served counts per bin, then the
+        // running backlog at each bin edge.
+        let mut arrived = vec![Vec::with_capacity(outcomes.len()); bins];
+        let mut served = vec![Vec::with_capacity(outcomes.len()); bins];
+        let mut backlog = vec![Vec::with_capacity(outcomes.len()); bins];
+        for o in outcomes {
+            let count = |ts: &[f64]| {
+                let mut c = vec![0usize; bins];
+                for &t in ts {
+                    let b = ((t / width) as usize).min(bins - 1);
+                    c[b] += 1;
+                }
+                c
+            };
+            let a = count(&o.arrival_times_s);
+            let s = count(&o.finish_times_s);
+            let mut backlogged = 0i64;
+            for b in 0..bins {
+                arrived[b].push(a[b] as f64);
+                served[b].push(s[b] as f64);
+                backlogged += a[b] as i64 - s[b] as i64;
+                backlog[b].push(backlogged as f64);
+            }
+        }
+        let bins_out = (0..bins)
+            .map(|b| ProfileBin {
+                t_start_s: b as f64 * width,
+                t_end_s: (b + 1) as f64 * width,
+                arrived: MetricCi::of(&arrived[b]),
+                served: MetricCi::of(&served[b]),
+                backlog: MetricCi::of(&backlog[b]),
+            })
+            .collect();
+        Self { bins: bins_out }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bins.is_empty()
+    }
+
+    /// Header of [`Self::to_csv`].
+    pub fn csv_columns() -> Vec<&'static str> {
+        vec![
+            "bin",
+            "t_start_s",
+            "t_end_s",
+            "arrived_mean",
+            "arrived_ci95",
+            "served_mean",
+            "served_ci95",
+            "backlog_mean",
+            "backlog_ci95",
+        ]
+    }
+
+    /// One row per time bin.
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(Self::csv_columns());
+        let f = crate::util::csv::format_float;
+        for (i, b) in self.bins.iter().enumerate() {
+            w.row(vec![
+                i.to_string(),
+                f(b.t_start_s),
+                f(b.t_end_s),
+                f(b.arrived.mean),
+                f(b.arrived.ci95),
+                f(b.served.mean),
+                f(b.served.ci95),
+                f(b.backlog.mean),
+                f(b.backlog.ci95),
+            ]);
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_seeds_start_at_the_base_seed_and_agree_on_prefixes() {
+        let p = ReplicationPlan::new(4, 42);
+        p.validate().unwrap();
+        let seeds = p.seeds();
+        assert_eq!(seeds.len(), 4);
+        assert_eq!(seeds[0], 42, "replication 0 must be the base seed");
+        // Derived seeds are distinct from each other and the base.
+        for i in 0..seeds.len() {
+            for j in 0..i {
+                assert_ne!(seeds[i], seeds[j], "seed collision at ({i}, {j})");
+            }
+        }
+        // Prefix-stable: a bigger plan with the same base agrees.
+        assert_eq!(ReplicationPlan::new(2, 42).seeds(), seeds[..2]);
+        // A single-replication plan is exactly the base seed.
+        assert_eq!(ReplicationPlan::new(1, 7).seeds(), vec![7]);
+        assert!(!ReplicationPlan::new(1, 7).is_replicated());
+        assert!(ReplicationPlan::new(2, 7).is_replicated());
+        assert!(ReplicationPlan::new(0, 7).validate().is_err());
+        // Different base seeds diverge immediately after index 0.
+        assert_ne!(ReplicationPlan::new(3, 1).seeds()[1], ReplicationPlan::new(3, 2).seeds()[1]);
+    }
+
+    #[test]
+    fn metric_ci_matches_the_closed_form() {
+        // n = 1: no dispersion information, interval collapses.
+        let one = MetricCi::of(&[5.0]);
+        assert_eq!((one.n, one.mean, one.std, one.ci95), (1, 5.0, 0.0, 0.0));
+        assert_eq!(MetricCi::of(&[]).n, 0);
+        // n = 4 sample: mean 5, sample std sqrt(20/3).
+        let m = MetricCi::of(&[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(m.n, 4);
+        assert!((m.mean - 5.0).abs() < 1e-12);
+        let s = (20.0f64 / 3.0).sqrt();
+        assert!((m.std - s).abs() < 1e-12);
+        assert!((m.ci95 - 3.182 * s / 2.0).abs() < 1e-9, "t(3) = 3.182");
+        // Zero-variance replications give a zero-width interval.
+        let flat = MetricCi::of(&[3.0, 3.0, 3.0]);
+        assert_eq!(flat.std, 0.0);
+        assert_eq!(flat.ci95, 0.0);
+        assert_eq!(flat.render(2), "3.00±0.00");
+    }
+
+    #[test]
+    fn replicated_metrics_fold_per_column() {
+        let rows = [[1.0, 2.0, 3.0, 100.0, 90.0, 0.1], [3.0, 4.0, 5.0, 120.0, 110.0, 0.3]];
+        let m = ReplicatedMetrics::from_rows(&rows);
+        assert_eq!(m.replications(), 2);
+        assert!((m.p50_ms.mean - 2.0).abs() < 1e-12);
+        assert!((m.p99_ms.mean - 4.0).abs() < 1e-12);
+        assert!((m.throughput_ips.mean - 110.0).abs() < 1e-12);
+        assert!((m.drop_rate.mean - 0.2).abs() < 1e-12);
+        assert!(m.p99_ms.ci95 > 0.0, "two distinct samples → nonzero CI");
+        let cells = m.csv_cells();
+        assert_eq!(cells.len(), ReplicatedMetrics::CSV_COLUMNS.len());
+        assert_eq!(cells[4], "4", "p99 mean cell");
+    }
+
+    #[test]
+    fn profile_bins_count_arrivals_served_and_backlog() {
+        // Hand-built outcomes: only the timeline fields matter here.
+        let mk = |arrivals: Vec<f64>, finishes: Vec<f64>| {
+            let mut o = ServeOutcome::empty(1, 0.0);
+            o.arrival_times_s = arrivals;
+            o.finish_times_s = finishes;
+            o
+        };
+        let a = mk(vec![0.1, 0.3, 0.6], vec![0.4, 0.7, 0.9]);
+        let b = mk(vec![0.1, 0.2, 0.6], vec![0.5, 0.8, 1.0]);
+        let p = ReplicationProfile::from_outcomes(&[&a, &b], 2);
+        assert_eq!(p.bins.len(), 2);
+        // Span is 1.0 (the latest finish), so bins are [0, 0.5) / [0.5, 1.0].
+        assert!((p.bins[0].t_end_s - 0.5).abs() < 1e-12);
+        assert!((p.bins[1].t_end_s - 1.0).abs() < 1e-12);
+        // Rep a: bin 0 arrived 2, served 1; rep b: arrived 2, served 0.
+        assert!((p.bins[0].arrived.mean - 2.0).abs() < 1e-12);
+        assert!((p.bins[0].served.mean - 0.5).abs() < 1e-12);
+        // Backlogs at the first edge: a = 1, b = 2 → mean 1.5.
+        assert!((p.bins[0].backlog.mean - 1.5).abs() < 1e-12);
+        assert!(p.bins[0].backlog.ci95 > 0.0);
+        // Everything drains by the end in both replications.
+        assert!((p.bins[1].backlog.mean - 0.0).abs() < 1e-12);
+        let csv = p.to_csv().to_string();
+        assert!(csv.starts_with("bin,t_start_s,t_end_s,arrived_mean"));
+        assert_eq!(csv.lines().count(), 3);
+        // No events at all → empty profile, empty-but-headed CSV.
+        let empty = ReplicationProfile::from_outcomes(&[&mk(vec![], vec![])], 4);
+        assert!(empty.is_empty());
+        assert_eq!(empty.to_csv().to_string().lines().count(), 1);
+    }
+}

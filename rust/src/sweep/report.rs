@@ -1,6 +1,7 @@
 //! Aggregated sweep results: per-scenario metrics, ranking, rendering.
 
 use super::grid::Scenario;
+use super::replicate::{MetricCi, ReplicatedMetrics};
 use crate::serve::ServeOutcome;
 use crate::shaping::{ShapingAnalysis, ShapingReport};
 use crate::util::csv::CsvWriter;
@@ -35,6 +36,14 @@ pub struct SweepMetrics {
     /// Overload accounting — `Some` only for serving scenarios.
     pub drop_rate: Option<f64>,
     pub goodput_ips: Option<f64>,
+    /// Mean ± 95 % CI over the replications of the six serve headline
+    /// metrics — `Some` only on serve rows of a `--replications N > 1`
+    /// sweep. The point-estimate columns above stay replication 0.
+    pub replicated: Option<ReplicatedMetrics>,
+    /// Mean ± 95 % CI of the relative-performance column across
+    /// replications (each replication compared to the same-seed
+    /// baseline). Ranking uses this mean when present.
+    pub relative_performance_ci: Option<MetricCi>,
 }
 
 impl SweepMetrics {
@@ -55,6 +64,8 @@ impl SweepMetrics {
             p99_ms: None,
             drop_rate: None,
             goodput_ips: None,
+            replicated: None,
+            relative_performance_ci: None,
         }
     }
 
@@ -75,6 +86,8 @@ impl SweepMetrics {
             p99_ms: None,
             drop_rate: None,
             goodput_ips: None,
+            replicated: None,
+            relative_performance_ci: None,
         }
     }
 
@@ -104,6 +117,8 @@ impl SweepMetrics {
             p99_ms: Some(out.latency.p99_ms),
             drop_rate: Some(out.drop_rate),
             goodput_ips: Some(out.goodput_ips),
+            replicated: None,
+            relative_performance_ci: None,
         }
     }
 
@@ -115,6 +130,34 @@ impl SweepMetrics {
             avg_bw_increase: 0.0,
             ..Self::from_serve(base, base)
         }
+    }
+
+    /// The value ranking sorts on: the replication mean when CI
+    /// statistics ran, the single-run point estimate otherwise.
+    pub fn rank_value(&self) -> f64 {
+        self.relative_performance_ci.map_or(self.relative_performance, |c| c.mean)
+    }
+
+    /// Attach replication statistics folded from the per-replication
+    /// metrics rows (replication-index order; `self` is replication 0's
+    /// row, which keeps the headline point-estimate columns).
+    pub(crate) fn fold_replications(&mut self, reps: &[SweepMetrics]) {
+        let rows: Vec<[f64; 6]> = reps
+            .iter()
+            .map(|m| {
+                [
+                    m.p50_ms.unwrap_or(0.0),
+                    m.p95_ms.unwrap_or(0.0),
+                    m.p99_ms.unwrap_or(0.0),
+                    m.throughput_ips,
+                    m.goodput_ips.unwrap_or(0.0),
+                    m.drop_rate.unwrap_or(0.0),
+                ]
+            })
+            .collect();
+        self.replicated = Some(ReplicatedMetrics::from_rows(&rows));
+        let rels: Vec<f64> = reps.iter().map(|m| m.relative_performance).collect();
+        self.relative_performance_ci = Some(MetricCi::of(&rels));
     }
 }
 
@@ -152,15 +195,16 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
-    /// Completed outcomes ranked by relative performance (best first,
-    /// scenario id as the deterministic tie-breaker), then infeasible
-    /// outcomes in id order.
+    /// Completed outcomes ranked by relative performance (the
+    /// replication mean when CI statistics ran; best first, scenario id
+    /// as the deterministic tie-breaker), then infeasible outcomes in
+    /// id order.
     pub fn ranked(&self) -> Vec<&ScenarioOutcome> {
         let mut out: Vec<&ScenarioOutcome> = self.outcomes.iter().collect();
         out.sort_by(|a, b| match (a.metrics(), b.metrics()) {
             (Some(ma), Some(mb)) => mb
-                .relative_performance
-                .partial_cmp(&ma.relative_performance)
+                .rank_value()
+                .partial_cmp(&ma.rank_value())
                 .unwrap_or(Ordering::Equal)
                 .then(a.scenario.id.cmp(&b.scenario.id)),
             (Some(_), None) => Ordering::Less,
@@ -188,6 +232,21 @@ impl SweepReport {
         self.outcomes.iter().filter(|o| o.scenario.is_serve()).count()
     }
 
+    /// Whether any row carries replication statistics (a
+    /// `--replications N > 1` sweep), i.e. whether CI columns appear.
+    pub fn is_replicated(&self) -> bool {
+        self.outcomes.iter().any(|o| o.metrics().is_some_and(|m| m.replicated.is_some()))
+    }
+
+    /// The replication count of the sweep (`None` for single-run
+    /// sweeps).
+    pub fn replications(&self) -> Option<usize> {
+        self.outcomes
+            .iter()
+            .filter_map(|o| o.metrics().and_then(|m| m.replicated.map(|r| r.replications())))
+            .max()
+    }
+
     /// Infeasible scenarios with the capacity model's explanation, in
     /// grid order — callers print these as `note:` lines so the DRAM
     /// breakdown (weights/activations/workspace) stays visible.
@@ -201,9 +260,12 @@ impl SweepReport {
             .collect()
     }
 
-    /// Ranked ASCII table (the `sweep` CLI's output).
+    /// Ranked ASCII table (the `sweep` CLI's output). Replicated sweeps
+    /// append a `rel ±ci` column: the relative-performance gain as mean
+    /// ± 95 % CI over the replications, in percent.
     pub fn render(&self) -> String {
-        let mut t = Table::new(vec![
+        let replicated = self.is_replicated();
+        let mut cols = vec![
             "#",
             "model",
             "n",
@@ -218,8 +280,11 @@ impl SweepReport {
             "sync cov",
             "p99 ms",
             "drop %",
-        ])
-        .left_first();
+        ];
+        if replicated {
+            cols.push("rel ±ci");
+        }
+        let mut t = Table::new(cols).left_first();
         for (rank, o) in self.ranked().iter().enumerate() {
             let s = &o.scenario;
             let rate = if s.is_serve() { format!("{:.0}", s.arrival_rate) } else { "-".into() };
@@ -230,47 +295,59 @@ impl SweepReport {
             };
             let opt = |v: Option<String>| v.unwrap_or_else(|| "-".to_string());
             match o.metrics() {
-                Some(m) => t.row(vec![
-                    (rank + 1).to_string(),
-                    s.model.clone(),
-                    s.partitions.to_string(),
-                    format!("{:.2}x", s.bandwidth_scale),
-                    s.stagger.name().to_string(),
-                    rate,
-                    cap_slo,
-                    format!("{:+.1}%", (m.relative_performance - 1.0) * 100.0),
-                    format!("{:+.1}%", m.std_reduction * 100.0),
-                    format!("{:+.1}%", m.avg_bw_increase * 100.0),
-                    format!("{:.3}", m.smoothness_cov),
-                    format!("{:.3}", m.baseline_cov),
-                    opt(m.p99_ms.map(|p| format!("{p:.1}"))),
-                    opt(m.drop_rate.map(|d| format!("{:.1}", d * 100.0))),
-                ]),
-                None => t.row(vec![
-                    "-".to_string(),
-                    s.model.clone(),
-                    s.partitions.to_string(),
-                    format!("{:.2}x", s.bandwidth_scale),
-                    s.stagger.name().to_string(),
-                    rate,
-                    cap_slo,
-                    "DRAM".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                ]),
+                Some(m) => {
+                    let mut row = vec![
+                        (rank + 1).to_string(),
+                        s.model.clone(),
+                        s.partitions.to_string(),
+                        format!("{:.2}x", s.bandwidth_scale),
+                        s.stagger.name().to_string(),
+                        rate,
+                        cap_slo,
+                        format!("{:+.1}%", (m.relative_performance - 1.0) * 100.0),
+                        format!("{:+.1}%", m.std_reduction * 100.0),
+                        format!("{:+.1}%", m.avg_bw_increase * 100.0),
+                        format!("{:.3}", m.smoothness_cov),
+                        format!("{:.3}", m.baseline_cov),
+                        opt(m.p99_ms.map(|p| format!("{p:.1}"))),
+                        opt(m.drop_rate.map(|d| format!("{:.1}", d * 100.0))),
+                    ];
+                    if replicated {
+                        row.push(opt(m.relative_performance_ci.map(|c| {
+                            format!("{:+.1}±{:.1}%", (c.mean - 1.0) * 100.0, c.ci95 * 100.0)
+                        })));
+                    }
+                    t.row(row)
+                }
+                None => {
+                    let mut row = vec![
+                        "-".to_string(),
+                        s.model.clone(),
+                        s.partitions.to_string(),
+                        format!("{:.2}x", s.bandwidth_scale),
+                        s.stagger.name().to_string(),
+                        rate,
+                        cap_slo,
+                        "DRAM".to_string(),
+                    ];
+                    row.extend((0..6).map(|_| "-".to_string()));
+                    if replicated {
+                        row.push("-".to_string());
+                    }
+                    t.row(row)
+                }
             };
         }
         t.title("scenario sweep — ranked by relative performance vs synchronous baseline")
             .render()
     }
 
-    /// Full per-scenario export in grid (id) order.
-    pub fn to_csv(&self) -> CsvWriter {
-        let mut w = CsvWriter::new(vec![
+    /// The CSV header of [`Self::to_csv`]. The single-run header is a
+    /// strict prefix of the replicated one: `--replications N > 1`
+    /// appends the relative-performance mean/CI pair followed by the
+    /// [`ReplicatedMetrics::CSV_COLUMNS`] pairs.
+    pub fn csv_columns(replicated: bool) -> Vec<&'static str> {
+        let mut cols = vec![
             "id",
             "model",
             "partitions",
@@ -297,7 +374,21 @@ impl SweepReport {
             "drop_rate",
             "goodput_ips",
             "reason",
-        ]);
+        ];
+        if replicated {
+            cols.push("relative_performance_mean");
+            cols.push("relative_performance_ci95");
+            cols.extend(ReplicatedMetrics::CSV_COLUMNS);
+        }
+        cols
+    }
+
+    /// Full per-scenario export in grid (id) order. Replicated sweeps
+    /// append the mean/CI column pairs (empty on offline and infeasible
+    /// rows — only serve rows replicate).
+    pub fn to_csv(&self) -> CsvWriter {
+        let replicated = self.is_replicated();
+        let mut w = CsvWriter::new(Self::csv_columns(replicated));
         let f = crate::util::csv::format_float;
         let opt = |v: Option<f64>| v.map(f).unwrap_or_default();
         for o in &self.outcomes {
@@ -342,7 +433,27 @@ impl SweepReport {
                     v
                 }
             };
-            w.row(head.into_iter().chain(tail).collect());
+            let mut cells: Vec<String> = head.into_iter().chain(tail).collect();
+            if replicated {
+                match o.metrics().and_then(|m| m.replicated.map(|r| (m, r))) {
+                    Some((m, r)) => {
+                        let ci = m.relative_performance_ci.unwrap_or(MetricCi {
+                            n: 0,
+                            mean: m.relative_performance,
+                            std: 0.0,
+                            ci95: 0.0,
+                        });
+                        cells.push(f(ci.mean));
+                        cells.push(f(ci.ci95));
+                        cells.extend(r.csv_cells());
+                    }
+                    None => {
+                        let extra = 2 + ReplicatedMetrics::CSV_COLUMNS.len();
+                        cells.extend((0..extra).map(|_| String::new()));
+                    }
+                }
+            }
+            w.row(cells);
         }
         w
     }
@@ -354,16 +465,22 @@ impl SweepReport {
             .with("completed", self.completed_count())
             .with("dram_infeasible", self.infeasible_count())
             .with("serve_scenarios", self.serve_count());
+        // Replication keys appear only on replicated sweeps, keeping the
+        // --replications 1 summary byte-identical to the classic one.
+        if let Some(r) = self.replications() {
+            j.set("replications", r);
+        }
         if let Some(best) = self.best() {
-            j.set(
-                "best",
-                Json::obj()
-                    .with("label", best.scenario.label())
-                    .with(
-                        "relative_performance",
-                        best.metrics().map(|m| m.relative_performance).unwrap_or(0.0),
-                    ),
+            let mut b = Json::obj().with("label", best.scenario.label()).with(
+                "relative_performance",
+                best.metrics().map(|m| m.relative_performance).unwrap_or(0.0),
             );
+            if let Some(ci) = best.metrics().and_then(|m| m.relative_performance_ci) {
+                b = b
+                    .with("relative_performance_mean", ci.mean)
+                    .with("relative_performance_ci95", ci.ci95);
+            }
+            j.set("best", b);
         }
         for o in self.ranked() {
             if let Some(m) = o.metrics() {
@@ -398,6 +515,8 @@ mod tests {
             p99_ms: None,
             drop_rate: None,
             goodput_ips: None,
+            replicated: None,
+            relative_performance_ci: None,
         }
     }
 
@@ -492,6 +611,56 @@ mod tests {
     }
 
     #[test]
+    fn replicated_rows_fold_ci_and_drive_ranking() {
+        // Two serve rows: row 0 has the better single-seed (rep 0)
+        // estimate, row 1 the better replication mean — the mean wins.
+        let mut a = serve_outcome(0, 80.0);
+        let mut b = serve_outcome(1, 60.0);
+        let per_rep = |rels: &[f64]| {
+            rels.iter()
+                .map(|&r| {
+                    let mut m = metrics(r);
+                    m.p99_ms = Some(50.0 + r);
+                    m.throughput_ips = 64.0 * r;
+                    m
+                })
+                .collect::<Vec<_>>()
+        };
+        if let ScenarioStatus::Completed(m) = &mut a.status {
+            m.relative_performance = 1.10;
+            m.fold_replications(&per_rep(&[1.10, 1.00, 0.99]));
+        }
+        if let ScenarioStatus::Completed(m) = &mut b.status {
+            m.relative_performance = 1.04;
+            m.fold_replications(&per_rep(&[1.04, 1.08, 1.09]));
+        }
+        let r = SweepReport { outcomes: vec![a, b, outcome(2, None)] };
+        assert!(r.is_replicated());
+        assert_eq!(r.replications(), Some(3));
+        assert_eq!(r.ranked()[0].scenario.id, 1, "CI mean outranks the rep-0 estimate");
+        let m = r.outcomes[0].metrics().unwrap();
+        let ci = m.relative_performance_ci.unwrap();
+        assert!((ci.mean - (1.10 + 1.00 + 0.99) / 3.0).abs() < 1e-12);
+        assert!(ci.ci95 > 0.0);
+        assert_eq!(m.replicated.unwrap().replications(), 3);
+        let csv = r.to_csv().to_string();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains(",reason,relative_performance_mean,relative_performance_ci95,"));
+        assert!(header.ends_with(",drop_rate_mean,drop_rate_ci95"));
+        // The infeasible row pads the CI cells out empty.
+        let infeasible_line = csv.lines().last().unwrap();
+        assert!(infeasible_line.ends_with(",,,,,,,,,,,,,"));
+        assert!(r.render().contains("rel ±ci"));
+        assert!(r.render().contains('±'));
+        assert_eq!(r.summary_json().req_usize("replications").unwrap(), 3);
+        // A single-run report keeps the classic header and no CI column.
+        let plain = SweepReport { outcomes: vec![outcome(0, Some(1.02))] };
+        assert!(!plain.is_replicated());
+        assert!(plain.to_csv().to_string().lines().next().unwrap().ends_with(",reason"));
+        assert!(!plain.render().contains("rel ±ci"));
+    }
+
+    #[test]
     fn serve_metrics_compare_against_baseline() {
         use crate::serve::{LatencyStats, ServeOutcome};
         use crate::sim::BandwidthTrace;
@@ -524,6 +693,8 @@ mod tests {
             trace: BandwidthTrace::total_only(),
             epochs: Vec::new(),
             reconfigs: Vec::new(),
+            arrival_times_s: Vec::new(),
+            finish_times_s: Vec::new(),
         };
         let base = mk(100.0, 50.0, 80.0);
         let shaped = mk(108.0, 40.0, 50.0);

@@ -18,8 +18,16 @@
 //! order — so the aggregated output is byte-identical whether the pool
 //! has 1 thread or N. Errors are deterministic too: the error attached
 //! to the lowest index wins.
+//!
+//! With `serve.replications > 1` every serve scenario (and its serve
+//! baseline) repeats once per [`super::ReplicationPlan`] seed through
+//! the same pool — replication r always compares against the
+//! replication-r baseline, so the relative-performance CI measures the
+//! partitioning effect, not seed luck. Offline rows are deterministic
+//! and keep running once.
 
 use super::grid::{Scenario, SweepGrid};
+use super::replicate::ReplicationPlan;
 use super::report::{ScenarioOutcome, ScenarioStatus, SweepMetrics, SweepReport};
 use crate::error::{Error, Result};
 use crate::model::Graph;
@@ -77,8 +85,15 @@ where
 }
 
 /// A precomputed 1-partition baseline: offline shaping analysis for
-/// batch-mode scenarios, a full serving outcome for serve scenarios.
+/// batch-mode scenarios, one full serving outcome *per replication*
+/// (replication-index order) for serve scenarios.
 enum Baseline {
+    Offline(ShapingAnalysis),
+    Serve(Vec<ServeOutcome>),
+}
+
+/// One baseline task's result before regrouping into [`Baseline`].
+enum BaselineRun {
     Offline(ShapingAnalysis),
     Serve(Box<ServeOutcome>),
 }
@@ -118,12 +133,12 @@ impl SweepRunner {
             .stagger(scenario.stagger)
     }
 
-    fn serve_sim(&self, scenario: &Scenario, graph: &Graph) -> ServeSimulator {
+    fn serve_sim(&self, scenario: &Scenario, graph: &Graph, seed: u64) -> ServeSimulator {
         ServeSimulator::new(&scenario.accel(&self.grid.accel), graph)
             .partitions(scenario.partitions)
             .arrival(ArrivalProcess::poisson(scenario.arrival_rate))
             .duration(self.grid.serve.duration_s)
-            .seed(self.grid.serve.seed)
+            .seed(seed)
             .stagger(scenario.stagger)
             .queue_cap(scenario.queue_cap)
             .slo_ms(scenario.slo_ms)
@@ -138,11 +153,12 @@ impl SweepRunner {
         scenario: &Scenario,
         spec: &str,
         mode: TenantMode,
+        seed: u64,
     ) -> Result<MultiTenantSimulator> {
         let specs = TenantSpec::parse_list(spec)?;
         Ok(MultiTenantSimulator::new(&scenario.accel(&self.grid.accel), specs)
             .duration(self.grid.serve.duration_s)
-            .seed(self.grid.serve.seed)
+            .seed(seed)
             .stagger(scenario.stagger)
             .batch_timeout_ms(self.grid.serve.batch_timeout_ms)
             .mode(mode)
@@ -192,43 +208,86 @@ impl SweepRunner {
                 ));
             }
         }
-        let baselines_vec =
-            parallel_map(&keys, threads, |(model, scale, rate, cap, slo, tenants)| {
-                let probe = Scenario {
-                    id: 0,
-                    model: model.clone(),
-                    partitions: 1,
-                    bandwidth_scale: *scale,
-                    stagger: StaggerPolicy::None,
-                    arrival_rate: *rate,
-                    queue_cap: *cap,
-                    slo_ms: *slo,
-                    steady_batches: self.grid.steady_batches,
-                    tenants: (!tenants.is_empty()).then(|| tenants.clone()),
-                };
-                if !tenants.is_empty() {
-                    // The mixed row's reference point: the same tenants
-                    // time-sharing the whole machine.
-                    let out = self.mixed_sim(&probe, tenants, TenantMode::TimeShared)?.run()?;
-                    Ok(Baseline::Serve(Box::new(out.aggregate)))
-                } else if probe.is_serve() {
-                    let out = self.serve_sim(&probe, &graphs[model]).run()?;
-                    Ok(Baseline::Serve(Box::new(out)))
-                } else {
-                    Ok(Baseline::Offline(self.experiment(&probe, &graphs[model]).run_baseline()?))
+        // Replication fan-out: serve baselines and serve scenarios run
+        // once per plan seed; offline rows are deterministic and run
+        // once. Tasks are key-major / replication-minor, so regrouping
+        // is a chunked fold and replication 0 stays the headline.
+        let plan = ReplicationPlan::new(self.grid.serve.replications.max(1), self.grid.serve.seed);
+        let seeds = plan.seeds();
+        let reps = seeds.len();
+        // How many times a row with these axes runs: serve and mixed
+        // rows once per seed, offline rows once.
+        let runs_of = |rate: f64, tenants: &str| -> usize {
+            if rate > 0.0 || !tenants.is_empty() {
+                reps
+            } else {
+                1
+            }
+        };
+        let mut base_tasks: Vec<(usize, u64)> = Vec::new();
+        for (ki, (_, _, rate, _, _, tenants)) in keys.iter().enumerate() {
+            for &seed in seeds.iter().take(runs_of(*rate, tenants)) {
+                base_tasks.push((ki, seed));
+            }
+        }
+        let base_runs = parallel_map(&base_tasks, threads, |&(ki, seed)| {
+            let (model, scale, rate, cap, slo, tenants) = &keys[ki];
+            let probe = Scenario {
+                id: 0,
+                model: model.clone(),
+                partitions: 1,
+                bandwidth_scale: *scale,
+                stagger: StaggerPolicy::None,
+                arrival_rate: *rate,
+                queue_cap: *cap,
+                slo_ms: *slo,
+                steady_batches: self.grid.steady_batches,
+                tenants: (!tenants.is_empty()).then(|| tenants.clone()),
+            };
+            if !tenants.is_empty() {
+                // The mixed row's reference point: the same tenants
+                // time-sharing the whole machine.
+                let out = self.mixed_sim(&probe, tenants, TenantMode::TimeShared, seed)?.run()?;
+                Ok(BaselineRun::Serve(Box::new(out.aggregate)))
+            } else if probe.is_serve() {
+                let out = self.serve_sim(&probe, &graphs[model], seed).run()?;
+                Ok(BaselineRun::Serve(Box::new(out)))
+            } else {
+                Ok(BaselineRun::Offline(self.experiment(&probe, &graphs[model]).run_baseline()?))
+            }
+        })?;
+        let mut baselines: BTreeMap<Key, Baseline> = BTreeMap::new();
+        for (&(ki, _), run) in base_tasks.iter().zip(base_runs) {
+            let (m, s, r, c, d, t) = &keys[ki];
+            let key = (m.clone(), s.to_bits(), r.to_bits(), *c, d.to_bits(), t.clone());
+            match run {
+                BaselineRun::Offline(a) => {
+                    baselines.insert(key, Baseline::Offline(a));
                 }
-            })?;
-        let baselines: BTreeMap<Key, Baseline> = keys
-            .iter()
-            .zip(baselines_vec)
-            .map(|((m, s, r, c, d, t), b)| {
-                ((m.clone(), s.to_bits(), r.to_bits(), *c, d.to_bits(), t.clone()), b)
-            })
-            .collect();
+                BaselineRun::Serve(o) => match baselines
+                    .entry(key)
+                    .or_insert_with(|| Baseline::Serve(Vec::with_capacity(reps)))
+                {
+                    Baseline::Serve(v) => v.push(*o),
+                    Baseline::Offline(_) => {
+                        return Err(Error::SimInvariant("sweep baseline kind mismatch".into()))
+                    }
+                },
+            }
+        }
 
-        // Phase 2: every scenario against its shared baseline.
+        // Phase 2: every (scenario, replication) against its same-seed
+        // shared baseline.
         let scenarios = self.grid.scenarios();
-        let statuses = parallel_map(&scenarios, threads, |sc| {
+        let mut tasks: Vec<(usize, usize, u64)> = Vec::new();
+        for (si, sc) in scenarios.iter().enumerate() {
+            let n = runs_of(sc.arrival_rate, sc.tenants.as_deref().unwrap_or(""));
+            for (rep, &seed) in seeds.iter().take(n).enumerate() {
+                tasks.push((si, rep, seed));
+            }
+        }
+        let statuses = parallel_map(&tasks, threads, |&(si, rep, seed)| {
+            let sc = &scenarios[si];
             let key = (
                 sc.model.clone(),
                 sc.bandwidth_scale.to_bits(),
@@ -238,14 +297,14 @@ impl SweepRunner {
                 sc.tenants.clone().unwrap_or_default(),
             );
             // Mixed rows: co-scheduled tenants vs the time-shared
-            // baseline at identical offered load.
+            // baseline at identical offered load (and seed).
             if let Some(spec) = &sc.tenants {
-                let Baseline::Serve(base) = &baselines[&key] else {
+                let Baseline::Serve(bases) = &baselines[&key] else {
                     return Err(Error::SimInvariant("mixed baseline kind mismatch".into()));
                 };
-                return match self.mixed_sim(sc, spec, TenantMode::Coscheduled)?.run() {
+                return match self.mixed_sim(sc, spec, TenantMode::Coscheduled, seed)?.run() {
                     Ok(out) => {
-                        let m = SweepMetrics::from_serve(&out.aggregate, base);
+                        let m = SweepMetrics::from_serve(&out.aggregate, &bases[rep]);
                         Ok(ScenarioStatus::Completed(m))
                     }
                     Err(Error::InfeasiblePartitioning(why)) => Ok(ScenarioStatus::Infeasible(why)),
@@ -258,13 +317,14 @@ impl SweepRunner {
             let is_own_baseline = sc.partitions == 1
                 && !matches!(sc.stagger, StaggerPolicy::RandomDelay { .. });
             match (&baselines[&key], sc.is_serve()) {
-                (Baseline::Serve(base), true) => {
+                (Baseline::Serve(bases), true) => {
+                    let base = &bases[rep];
                     if is_own_baseline {
                         return Ok(ScenarioStatus::Completed(SweepMetrics::serve_baseline_row(
                             base,
                         )));
                     }
-                    match self.serve_sim(sc, &graphs[&sc.model]).run() {
+                    match self.serve_sim(sc, &graphs[&sc.model], seed).run() {
                         Ok(out) => {
                             Ok(ScenarioStatus::Completed(SweepMetrics::from_serve(&out, base)))
                         }
@@ -292,10 +352,31 @@ impl SweepRunner {
             }
         })?;
 
+        // Regroup per scenario: replication 0 is the headline row;
+        // replicated serve rows fold their per-replication metrics into
+        // mean ± CI statistics (id-keyed, thread-count independent).
+        let mut statuses = statuses.into_iter();
         let outcomes = scenarios
             .into_iter()
-            .zip(statuses)
-            .map(|(scenario, status)| ScenarioOutcome { scenario, status })
+            .map(|scenario| {
+                let tenants = scenario.tenants.as_deref().unwrap_or("");
+                let n = runs_of(scenario.arrival_rate, tenants);
+                let group: Vec<ScenarioStatus> = statuses.by_ref().take(n).collect();
+                let mut status = group[0].clone();
+                if n > 1 {
+                    if let ScenarioStatus::Completed(head) = &mut status {
+                        let per_rep: Vec<SweepMetrics> = group
+                            .iter()
+                            .filter_map(|s| match s {
+                                ScenarioStatus::Completed(m) => Some(*m),
+                                ScenarioStatus::Infeasible(_) => None,
+                            })
+                            .collect();
+                        head.fold_replications(&per_rep);
+                    }
+                }
+                ScenarioOutcome { scenario, status }
+            })
             .collect();
         Ok(SweepReport { outcomes })
     }
@@ -401,6 +482,42 @@ mod tests {
         .unwrap();
         assert_eq!(again.render(), report.render());
         assert_eq!(again.to_csv().to_string(), csv);
+    }
+
+    #[test]
+    fn replicated_sweep_folds_ci_per_serve_row() {
+        let mk = |reps: usize| {
+            SweepGrid::new(&AcceleratorConfig::knl_7210())
+                .models(vec!["tiny"])
+                .partitions(vec![1, 2])
+                .bandwidth_scales(vec![1.0])
+                .arrival_rates(vec![0.0, 5000.0])
+                .steady_batches(2)
+                .serve_duration(0.01)
+                .serve_replications(reps)
+                .trace_samples(32)
+        };
+        let single = SweepRunner::new(mk(1)).threads(2).run().unwrap();
+        let rep = SweepRunner::new(mk(3)).threads(2).run().unwrap();
+        assert!(!single.is_replicated());
+        assert!(rep.is_replicated());
+        assert_eq!(rep.replications(), Some(3));
+        for (a, b) in single.outcomes.iter().zip(&rep.outcomes) {
+            // Headline (replication 0) columns match the single-run
+            // sweep bit for bit; only serve rows carry statistics.
+            let (ma, mb) = (a.metrics().unwrap(), b.metrics().unwrap());
+            assert_eq!(ma.relative_performance.to_bits(), mb.relative_performance.to_bits());
+            assert_eq!(ma.p99_ms, mb.p99_ms);
+            assert_eq!(b.scenario.is_serve(), mb.replicated.is_some(), "{}", b.scenario.label());
+        }
+        let csv = rep.to_csv().to_string();
+        assert!(csv.lines().next().unwrap().ends_with(",drop_rate_mean,drop_rate_ci95"));
+        assert!(single.to_csv().to_string().lines().next().unwrap().ends_with(",reason"));
+        // Byte-identical across thread counts, replications included.
+        let again = SweepRunner::new(mk(3)).threads(1).run().unwrap();
+        assert_eq!(again.to_csv().to_string(), csv);
+        assert_eq!(again.render(), rep.render());
+        assert_eq!(again.summary_json().to_string_pretty(), rep.summary_json().to_string_pretty());
     }
 
     #[test]

@@ -136,6 +136,26 @@ pub fn percentile_of(xs: &[f64], p: f64) -> f64 {
     percentile(&v, p)
 }
 
+/// Two-sided 97.5 % critical values of Student's t for 1–30 degrees of
+/// freedom. Past 30 the distribution is within half a percent of the
+/// normal limit, so [`t_critical_975`] falls back to 1.96.
+const T_975: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179, 2.160,
+    2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056,
+    2.052, 2.048, 2.045, 2.042,
+];
+
+/// Critical value `t_{0.975, df}` for a 95 % two-sided confidence
+/// interval on a sample mean. `df == 0` (a single observation carries no
+/// dispersion information) returns 0 so the interval collapses.
+pub fn t_critical_975(df: usize) -> f64 {
+    match df {
+        0 => 0.0,
+        1..=30 => T_975[df - 1],
+        _ => 1.96,
+    }
+}
+
 /// A piecewise-constant time series: value `v[i]` holds on `[t[i], t[i+1])`.
 /// This is exactly what the fluid simulator emits (bandwidth is constant
 /// between events), and what we re-bin into profiler-style samples.
@@ -527,6 +547,21 @@ mod tests {
         // Degenerate lengths.
         assert_eq!(autocorrelation(&[1.0], 1), 0.0);
         assert_eq!(autocorrelation(&[], 0), 0.0);
+    }
+
+    #[test]
+    fn t_critical_matches_the_table_and_asymptote() {
+        assert_eq!(t_critical_975(0), 0.0);
+        assert!((t_critical_975(1) - 12.706).abs() < 1e-9);
+        assert!((t_critical_975(2) - 4.303).abs() < 1e-9);
+        assert!((t_critical_975(9) - 2.262).abs() < 1e-9);
+        assert!((t_critical_975(30) - 2.042).abs() < 1e-9);
+        assert!((t_critical_975(31) - 1.96).abs() < 1e-9);
+        assert!((t_critical_975(10_000) - 1.96).abs() < 1e-9);
+        // Monotone decreasing over the table.
+        for df in 1..30 {
+            assert!(t_critical_975(df) > t_critical_975(df + 1));
+        }
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! docs/OUTPUTS.md is a contract, not prose: every column table in it is
+//! compared here against the header the code actually emits, both via
+//! the `csv_columns` helpers and via real runs of each front-end. Any
+//! drift — a column added in code but not documented, or vice versa —
+//! fails this test (and CI's docs job).
+
+use trafficshape::cluster::{ClusterConfig, ClusterOutcome, ClusterSimulator, MachineConfig};
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::tiny_cnn;
+use trafficshape::serve::{ServeCurve, ServeExperiment};
+use trafficshape::sweep::{ReplicationProfile, SweepGrid, SweepReport, SweepRunner};
+
+const DOC: &str = include_str!("../../docs/OUTPUTS.md");
+
+/// The column names documented for one `### <artifact>` section: the
+/// first backticked token of each table row.
+fn documented_columns(section: &str) -> Vec<String> {
+    let marker = format!("### {section}");
+    let start = DOC.find(&marker).unwrap_or_else(|| panic!("OUTPUTS.md has no section {section}"));
+    let body = &DOC[start + marker.len()..];
+    let body = &body[..body.find("\n### ").unwrap_or(body.len())];
+    body.lines()
+        .filter(|l| l.starts_with("| `"))
+        .map(|l| l.split('`').nth(1).expect("backticked column name").to_string())
+        .collect()
+}
+
+fn assert_columns(section: &str, emitted: &[&str]) {
+    assert_eq!(
+        documented_columns(section),
+        emitted,
+        "docs/OUTPUTS.md section {section} disagrees with the emitted header — \
+         update the table and the code together"
+    );
+}
+
+#[test]
+fn documented_csv_columns_match_the_helpers() {
+    assert_columns("serve_curve.csv", &ServeCurve::csv_columns(true));
+    assert_columns("serve_profile.csv", &ReplicationProfile::csv_columns());
+    assert_columns("sweep_grid.csv", &SweepReport::csv_columns(true));
+    assert_columns("cluster_machines.csv", &ClusterOutcome::csv_columns(true));
+}
+
+#[test]
+fn documented_columns_match_actually_emitted_headers() {
+    let accel = AcceleratorConfig::knl_7210();
+    let graph = tiny_cnn();
+
+    // serve: a tiny replicated curve, so the full (base + CI) header is
+    // what lands in the artifact.
+    let curve = ServeExperiment::new(&accel, &graph)
+        .partitions(vec![1])
+        .rates(vec![2000.0])
+        .duration(0.01)
+        .seed(3)
+        .trace_samples(32)
+        .replications(2)
+        .run()
+        .unwrap();
+    let csv = curve.to_csv().to_string();
+    assert_eq!(csv.lines().next().unwrap(), documented_columns("serve_curve.csv").join(","));
+    let profile = curve.profile.as_ref().expect("replicated curve has a profile");
+    let csv = profile.to_csv().to_string();
+    assert_eq!(csv.lines().next().unwrap(), documented_columns("serve_profile.csv").join(","));
+
+    // sweep: one serve scenario, replicated.
+    let grid = SweepGrid::new(&accel)
+        .models(vec!["tiny"])
+        .partitions(vec![1, 2])
+        .bandwidth_scales(vec![1.0])
+        .arrival_rates(vec![2000.0])
+        .serve_duration(0.01)
+        .serve_seed(3)
+        .serve_replications(2)
+        .steady_batches(2)
+        .trace_samples(32);
+    let report = SweepRunner::new(grid).run().unwrap();
+    let csv = report.to_csv().to_string();
+    assert_eq!(csv.lines().next().unwrap(), documented_columns("sweep_grid.csv").join(","));
+
+    // cluster: two machines, replicated.
+    let mut cfg = ClusterConfig::default();
+    cfg.machines = vec![MachineConfig::new(64), MachineConfig::new(64)];
+    cfg.serve.rates = vec![400.0];
+    cfg.serve.duration_s = 0.02;
+    cfg.serve.partitions = vec![2];
+    cfg.serve.replications = 2;
+    let out = ClusterSimulator::from_config(&accel, &graph, cfg).run().unwrap();
+    let csv = out.to_csv().to_string();
+    assert_eq!(csv.lines().next().unwrap(), documented_columns("cluster_machines.csv").join(","));
+}

@@ -1,0 +1,103 @@
+//! Monte-Carlo replication integration: the statistical-methodology
+//! contract from the docs — `--replications 1` *is* the classic
+//! single-run path, replicated runs quote defensible (nonzero-width)
+//! confidence intervals under stochastic arrivals, and every mean/CI
+//! column is byte-identical whatever the worker-thread count.
+
+use trafficshape::config::AcceleratorConfig;
+use trafficshape::model::tiny_cnn;
+use trafficshape::serve::{ArrivalKind, ServeCurve, ServeExperiment, DEFAULT_MEAN_BURST_S};
+
+fn knl() -> AcceleratorConfig {
+    AcceleratorConfig::knl_7210()
+}
+
+/// A short bursty overload curve on the tiny model: quick to run, with
+/// enough stream randomness that different seeds see different tails.
+fn curve(replications: usize, threads: usize) -> ServeCurve {
+    ServeExperiment::new(&knl(), &tiny_cnn())
+        .partitions(vec![1, 2])
+        .rates(vec![4000.0])
+        .arrival(ArrivalKind::Bursty { burstiness: 4.0, mean_burst_s: DEFAULT_MEAN_BURST_S })
+        .duration(0.02)
+        .seed(11)
+        .trace_samples(64)
+        .replications(replications)
+        .threads(threads)
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn replications_one_reproduces_the_single_run_reports_byte_for_byte() {
+    // The classic path: no replications knob touched at all.
+    let classic = ServeExperiment::new(&knl(), &tiny_cnn())
+        .partitions(vec![1, 2])
+        .rates(vec![4000.0])
+        .arrival(ArrivalKind::Bursty { burstiness: 4.0, mean_burst_s: DEFAULT_MEAN_BURST_S })
+        .duration(0.02)
+        .seed(11)
+        .trace_samples(64)
+        .threads(1)
+        .run()
+        .unwrap();
+    let single = curve(1, 1);
+    assert!(!single.is_replicated());
+    assert_eq!(single.to_csv().to_string(), classic.to_csv().to_string());
+    assert_eq!(single.render(), classic.render());
+    assert_eq!(
+        single.summary_json().to_string_pretty(),
+        classic.summary_json().to_string_pretty()
+    );
+    // No CI columns leak into the single-run artifact.
+    let header = single.to_csv().to_string().lines().next().unwrap().to_string();
+    assert!(!header.contains("_ci95"));
+    assert!(header.ends_with(",reason"));
+}
+
+#[test]
+fn bursty_replications_quote_a_nonzero_p99_interval() {
+    let rep = curve(5, 1);
+    assert_eq!(rep.replications(), Some(5));
+
+    // Every completed point folded all five replications, and the seeded
+    // bursty streams disagree enough that the p99 interval has width.
+    let stats: Vec<_> = rep.points.iter().filter_map(|p| p.stats.as_ref()).collect();
+    assert!(!stats.is_empty(), "completed points must carry folds");
+    for s in &stats {
+        assert_eq!(s.replications(), 5);
+    }
+    assert!(
+        stats.iter().any(|s| s.p99_ms.ci95 > 0.0),
+        "five bursty seeds must not agree on p99 exactly"
+    );
+
+    // The CI columns extend (never reorder) the single-run header.
+    let single_header = curve(1, 1).to_csv().to_string().lines().next().unwrap().to_string();
+    let csv = rep.to_csv().to_string();
+    let header = csv.lines().next().unwrap();
+    assert!(header.starts_with(&single_header));
+    assert!(header.contains(",p99_ms_mean,p99_ms_ci95,"));
+
+    // The time-binned profile export rides along.
+    let profile = rep.profile.as_ref().expect("replicated curves export a profile");
+    assert!(!profile.is_empty());
+    assert!(profile.to_csv().to_string().starts_with("bin,t_start_s,t_end_s,arrived_mean"));
+}
+
+#[test]
+fn replicated_reports_are_byte_identical_across_thread_counts() {
+    let t1 = curve(3, 1);
+    for threads in [2, 4] {
+        let tn = curve(3, threads);
+        assert_eq!(tn.to_csv().to_string(), t1.to_csv().to_string(), "threads {threads}");
+        assert_eq!(tn.render(), t1.render(), "threads {threads}");
+        assert_eq!(
+            tn.summary_json().to_string_pretty(),
+            t1.summary_json().to_string_pretty(),
+            "threads {threads}"
+        );
+        let (pa, pb) = (t1.profile.as_ref().unwrap(), tn.profile.as_ref().unwrap());
+        assert_eq!(pa.to_csv().to_string(), pb.to_csv().to_string(), "threads {threads}");
+    }
+}
