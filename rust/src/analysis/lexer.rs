@@ -1,0 +1,304 @@
+//! Comment/string-aware lexical line scanner for the staticcheck pass.
+//!
+//! The auditor's rules are substring matches over *code*, so the first
+//! job is separating each source line into a code channel and a comment
+//! channel while blanking out string-literal contents. A `HashMap`
+//! inside a doc comment or an error-message string must never trip the
+//! determinism rules, and a `staticcheck: allow(...)` annotation lives
+//! in the comment channel only. Hand-rolled on purpose: the crate's
+//! zero-dependency idiom rules out `syn`, and the handful of lexical
+//! states Rust 2021 needs (nested block comments, raw strings, char
+//! literals vs. lifetimes) fit in one small state machine.
+
+/// One source line split into its two channels.
+///
+/// `code` preserves the non-literal program text with every string /
+/// char literal's *contents* replaced by spaces (the delimiting quotes
+/// survive so parenthesis/brace counting still sees balanced tokens).
+/// `comment` holds the text of any `//`, `///`, `//!` or `/* ... */`
+/// comment overlapping the line, including the comment markers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LexedLine {
+    pub code: String,
+    pub comment: String,
+}
+
+/// Lexer state across line boundaries.
+enum State {
+    Code,
+    /// Nested block comment with the current nesting depth.
+    Block(u32),
+    /// Ordinary `"..."` string (also covers `b"..."`).
+    Str,
+    /// Raw string `r##"..."##` with the opening hash count.
+    Raw(u32),
+}
+
+/// Split `source` into per-line code/comment channels.
+pub fn lex(source: &str) -> Vec<LexedLine> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines: Vec<LexedLine> = Vec::new();
+    let mut cur = LexedLine::default();
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // Closes the current line on '\n' in any state.
+    macro_rules! newline {
+        () => {{
+            lines.push(std::mem::take(&mut cur));
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            newline!();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && next == Some('/') {
+                    // Line comment: everything to end-of-line is comment.
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur.comment.push(chars[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    state = State::Block(1);
+                    cur.comment.push('/');
+                    cur.comment.push('*');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = State::Str;
+                    cur.code.push('"');
+                    i += 1;
+                    continue;
+                }
+                // Raw strings: r"..." / r#"..."# (and br / b variants).
+                // Only when the introducer is not the tail of an
+                // identifier (`crate::r#fn` never matters here).
+                let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+                if (c == 'r' || c == 'b') && !prev_ident {
+                    if let Some((hashes, skip)) = raw_string_open(&chars, i) {
+                        for _ in 0..skip {
+                            cur.code.push(chars[i]);
+                            i += 1;
+                        }
+                        state = State::Raw(hashes);
+                        continue;
+                    }
+                    if c == 'b' && next == Some('"') {
+                        cur.code.push('b');
+                        cur.code.push('"');
+                        state = State::Str;
+                        i += 2;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // Char literal vs. lifetime: a backslash or a
+                    // closing quote two chars on means a literal.
+                    let is_char_lit = match next {
+                        Some('\\') => true,
+                        Some(n) if n != '\'' => chars.get(i + 2) == Some(&'\''),
+                        _ => false,
+                    };
+                    if is_char_lit {
+                        cur.code.push('\'');
+                        i += 1;
+                        // Blank the contents up to the closing quote.
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            if chars[i] == '\\' {
+                                cur.code.push(' ');
+                                i += 1;
+                            }
+                            if i < chars.len() && chars[i] != '\n' {
+                                cur.code.push(' ');
+                                i += 1;
+                            }
+                        }
+                        if chars.get(i) == Some(&'\'') {
+                            cur.code.push('\'');
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    // Lifetime: emit verbatim.
+                    cur.code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                cur.code.push(c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '/' && next == Some('*') {
+                    state = State::Block(depth + 1);
+                    cur.comment.push('/');
+                    cur.comment.push('*');
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && next == Some('/') {
+                    cur.comment.push('*');
+                    cur.comment.push('/');
+                    state = if depth > 1 { State::Block(depth - 1) } else { State::Code };
+                    i += 2;
+                    continue;
+                }
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Escape: blank both chars (covers \" and \\).
+                    cur.code.push(' ');
+                    if next.is_some() && next != Some('\n') {
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                    i += 1;
+                    continue;
+                }
+                if c == '"' {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1;
+                    continue;
+                }
+                cur.code.push(' ');
+                i += 1;
+            }
+            State::Raw(hashes) => {
+                if c == '"' && raw_string_close(&chars, i, hashes) {
+                    cur.code.push('"');
+                    for _ in 0..hashes {
+                        cur.code.push('#');
+                    }
+                    i += 1 + hashes as usize;
+                    state = State::Code;
+                    continue;
+                }
+                cur.code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    // Final (unterminated) line.
+    if !cur.code.is_empty() || !cur.comment.is_empty() || source.ends_with('\n') {
+        if !source.ends_with('\n') {
+            lines.push(cur);
+        }
+    }
+    lines
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If `chars[at..]` opens a raw string (`r"`, `r#"`, `br##"`, ...),
+/// return `(hash_count, chars_consumed_through_opening_quote)`.
+fn raw_string_open(chars: &[char], at: usize) -> Option<(u32, usize)> {
+    let mut j = at;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j - at + 1))
+    } else {
+        None
+    }
+}
+
+/// True when the quote at `at` closes a raw string with `hashes` hashes.
+fn raw_string_close(chars: &[char], at: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(at + k) == Some(&'#'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    fn comment(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.comment).collect()
+    }
+
+    #[test]
+    fn line_comments_split_channels() {
+        let ls = lex("let x = 1; // trailing HashMap\n// full line\nlet y = 2;\n");
+        assert_eq!(ls[0].code, "let x = 1; ");
+        assert_eq!(ls[0].comment, "// trailing HashMap");
+        assert_eq!(ls[1].code, "");
+        assert_eq!(ls[1].comment, "// full line");
+        assert_eq!(ls[2].code, "let y = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments_stay_comments() {
+        let ls = lex("a /* one /* two */ still */ b\n");
+        assert_eq!(ls[0].code, "a  b");
+        assert!(ls[0].comment.contains("still"));
+        let ls = lex("x /* spans\nlines */ y\n");
+        assert_eq!(ls[0].code, "x ");
+        assert_eq!(ls[1].code, " y");
+        assert!(ls[1].comment.contains("lines"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let ls = code("let s = \"HashMap .unwrap() // not a comment\";\n");
+        assert!(!ls[0].contains("HashMap"));
+        assert!(!ls[0].contains("unwrap"));
+        assert!(ls[0].ends_with(';'));
+        // Escaped quote does not end the string early.
+        let ls = code("let s = \"a\\\"b HashMap\"; let t = 1;\n");
+        assert!(!ls[0].contains("HashMap"));
+        assert!(ls[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings_are_blanked() {
+        let ls = code("let s = r#\"Instant::now() \"quoted\" \"#; x\n");
+        assert!(!ls[0].contains("Instant"));
+        assert!(ls[0].ends_with("; x"));
+        let ls = code("let b = b\"panic!(\"; y\n");
+        assert!(!ls[0].contains("panic"));
+        assert!(ls[0].ends_with("; y"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        // '"' must read as a char literal, not open a string; the
+        // lifetimes after it must survive into the code channel.
+        let ls = code("let c = '\\''; let d = '\"'; fn f<'a>(x: &'a str) {}\n");
+        assert!(ls[0].contains("fn f<'a>(x: &'a str) {}"));
+        assert!(ls[0].contains("let d = ' '; "));
+    }
+
+    #[test]
+    fn multiline_strings_blank_every_line() {
+        let ls = code("let s = \"first\nsecond .unwrap()\nthird\"; tail\n");
+        assert!(!ls[1].contains("unwrap"));
+        assert!(ls[2].contains("; tail"));
+    }
+}

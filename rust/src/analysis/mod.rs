@@ -1,0 +1,86 @@
+//! Self-hosted determinism auditor (`staticcheck`).
+//!
+//! A zero-dependency, source-level static-analysis pass that enforces
+//! the simulator's determinism contract on every commit — without a
+//! compiler. The `docs/ARCHITECTURE.md` guarantees (seed-determinism,
+//! byte-identical reports across `--threads`, request/byte
+//! conservation) were previously protected only by runtime tests; this
+//! module turns the hazard classes that break them into lint rules a
+//! plain source scan can catch:
+//!
+//! * [`rules::RULES`] — the registry (R0–R6): hash-collection iteration
+//!   order, wall-clock leaks, panic paths, order-unpinned float folds,
+//!   orphaned conservation checks, format drift, and the suppression
+//!   grammar itself.
+//! * [`lexer`] — the comment/string/raw-string-aware line scanner that
+//!   keeps rules from firing inside comments and string literals.
+//! * [`source`] — `#[cfg(test)]` region detection and
+//!   `staticcheck: allow(rule) -- reason` annotation parsing.
+//! * [`report`] — human-readable findings plus the `staticcheck.json`
+//!   allowlist inventory CI diffs for growth.
+//!
+//! The pass is *self-hosting*: `cargo run --bin staticcheck` scans this
+//! crate's own sources (`rust/src/**` and `rust/tests/**`) and must
+//! exit clean, so every hazard in the tree is either fixed or carries a
+//! written justification.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod source;
+
+pub use report::Analysis;
+pub use rules::{rule_info, AllowRecord, RuleInfo, Violation, RULES};
+pub use source::SourceFile;
+
+use crate::error::Result;
+use std::path::Path;
+
+/// Audit in-memory sources: `(relative_path, contents)` pairs. The
+/// fixture battery drives this directly; [`check_tree`] reduces to it.
+pub fn check_sources(sources: &[(String, String)]) -> Analysis {
+    let mut files: Vec<SourceFile> =
+        sources.iter().map(|(rel, text)| SourceFile::parse(rel, text)).collect();
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    let names: Vec<String> = files.iter().map(|f| f.rel.clone()).collect();
+    let (violations, allows) = rules::run(&files);
+    Analysis { files: names, violations, allows }
+}
+
+/// Audit a crate tree: scans `<root>/src/**` and `<root>/tests/**` for
+/// `.rs` files in deterministic (sorted) order.
+pub fn check_tree(root: &Path) -> Result<Analysis> {
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for top in ["src", "tests"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            collect_rs(&dir, root, &mut sources)?;
+        }
+    }
+    Ok(check_sources(&sources))
+}
+
+/// Recursively gather `.rs` files under `dir`, keyed by their path
+/// relative to `root` (always with `/` separators for stable reports).
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    let mut entries: Vec<std::path::PathBuf> = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Rendering for the staticcheck pass: human-readable findings and the
+//! `staticcheck.json` inventory CI archives to diff allowlist growth.
+
+use super::rules::{rule_info, AllowRecord, Violation};
+use crate::util::json::Json;
+
+/// The complete result of one audit run.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    /// Files scanned, in deterministic (sorted) order.
+    pub files: Vec<String>,
+    /// Unsuppressed findings, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Every suppression annotation in the tree, used or not.
+    pub allows: Vec<AllowRecord>,
+}
+
+impl Analysis {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Annotations that no finding consumed — candidates for deletion,
+    /// reported but deliberately not fatal (a fix can land before its
+    /// annotation is garbage-collected).
+    pub fn unused_allows(&self) -> Vec<&AllowRecord> {
+        self.allows.iter().filter(|a| !a.used).collect()
+    }
+
+    /// `file:line: [rule] message` listing plus a one-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            let title = rule_info(v.rule).map_or("", |r| r.title);
+            out.push_str(&format!(
+                "{}:{}: [{} {}] {}\n",
+                v.file, v.line, v.rule, title, v.message
+            ));
+        }
+        for a in self.unused_allows() {
+            out.push_str(&format!(
+                "{}:{}: note: unused allow({}) -- {}\n",
+                a.file, a.line, a.rule, a.reason
+            ));
+        }
+        out.push_str(&format!(
+            "staticcheck: {} file(s), {} violation(s), {} allow(s) ({} unused)\n",
+            self.files.len(),
+            self.violations.len(),
+            self.allows.len(),
+            self.unused_allows().len()
+        ));
+        out
+    }
+
+    /// The machine-readable inventory: violations, the full allowlist,
+    /// and a summary block, all in deterministic order.
+    pub fn to_json(&self) -> Json {
+        let violations: Vec<Json> = self
+            .violations
+            .iter()
+            .map(|v| {
+                Json::obj()
+                    .with("file", v.file.as_str())
+                    .with("line", v.line)
+                    .with("rule", v.rule)
+                    .with("message", v.message.as_str())
+            })
+            .collect();
+        let allows: Vec<Json> = self
+            .allows
+            .iter()
+            .map(|a| {
+                Json::obj()
+                    .with("file", a.file.as_str())
+                    .with("line", a.line)
+                    .with("rule", a.rule.as_str())
+                    .with("reason", a.reason.as_str())
+                    .with("used", a.used)
+            })
+            .collect();
+        Json::obj()
+            .with(
+                "summary",
+                Json::obj()
+                    .with("files", self.files.len())
+                    .with("violations", self.violations.len())
+                    .with("allows", self.allows.len())
+                    .with("unused_allows", self.unused_allows().len())
+                    .with("clean", self.clean()),
+            )
+            .with("violations", Json::Arr(violations))
+            .with("allows", Json::Arr(allows))
+    }
+}

@@ -1,0 +1,345 @@
+//! The staticcheck rule registry: the determinism contract from
+//! `docs/ARCHITECTURE.md` written as enforceable line predicates.
+//!
+//! Every rule here guards a property the reproduction's headline
+//! numbers depend on — seed-determinism, byte-identical reports across
+//! `--threads`, and request/byte conservation. Rules run over the code
+//! channel of [`super::source::SourceFile`] only, so comments and
+//! string literals can never trip them, and `#[cfg(test)]` regions plus
+//! `tests/**` files are exempt from everything except the format rule.
+
+use super::source::SourceFile;
+
+/// Registry metadata for one rule (also the `--list-rules` output and
+/// the contract `docs/STATICCHECK.md` is machine-checked against).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// What the rule protects, one sentence.
+    pub protects: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "R0",
+        title: "suppression grammar",
+        protects: "every suppression carries a rule id and a written reason; a malformed \
+                   annotation is itself a violation and cannot be suppressed",
+    },
+    RuleInfo {
+        id: "R1",
+        title: "no hash collections",
+        protects: "iteration order of HashMap/HashSet varies run to run and breaks \
+                   byte-identical report folds; use BTreeMap/BTreeSet or a sorted Vec",
+    },
+    RuleInfo {
+        id: "R2",
+        title: "no wall-clock in the simulation core",
+        protects: "Instant::now/SystemTime/thread::current in sim, serve, sweep, cluster or \
+                   shaping leaks host time into seeded runs and breaks replay and resume",
+    },
+    RuleInfo {
+        id: "R3",
+        title: "no panic paths in library code",
+        protects: "unwrap/expect/panic! in non-test library code turns invariant breaches \
+                   into aborts instead of Error::SimInvariant diagnostics",
+    },
+    RuleInfo {
+        id: "R4",
+        title: "order-pinned float folds",
+        protects: "summing f64 over unordered iteration and f64-to-usize truncation in \
+                   index derivation make results depend on container or rounding accidents",
+    },
+    RuleInfo {
+        id: "R5",
+        title: "no orphaned conservation checks",
+        protects: "every simulator conservation check must stay referenced from at least \
+                   one test, so a refactor cannot silently strand an invariant untested",
+    },
+    RuleInfo {
+        id: "R6",
+        title: "line width",
+        protects: "the 100-column rustfmt budget, previously audited by hand",
+    },
+];
+
+/// Look up registry metadata by rule id.
+pub fn rule_info(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// One unsuppressed finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// One parsed suppression, with whether anything actually used it —
+/// the `staticcheck.json` inventory CI diffs for allowlist growth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowRecord {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// Modules whose non-test code the wall-clock rule (R2) gates.
+const R2_MODULES: [&str; 5] = ["sim", "serve", "sweep", "cluster", "shaping"];
+
+/// Run every rule over the lexed tree. Returns the surviving
+/// (unsuppressed) violations and the full allow inventory.
+pub fn run(files: &[SourceFile]) -> (Vec<Violation>, Vec<AllowRecord>) {
+    // R5 needs the cross-file universe of test-scope code first.
+    let mut test_code = String::new();
+    for f in files {
+        for (idx, l) in f.lines.iter().enumerate() {
+            if f.in_test(idx + 1) {
+                test_code.push_str(&l.code);
+                test_code.push('\n');
+            }
+        }
+    }
+
+    let mut violations = Vec::new();
+    let mut allows = Vec::new();
+    for f in files {
+        let mut used = vec![false; f.allows.len()];
+        let mut raw = file_violations(f, &test_code);
+        raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+        for v in raw {
+            // R0 findings are about the annotations themselves and can
+            // never be annotated away.
+            let suppressed = v.rule != "R0"
+                && match f.allow_for(v.line, v.rule) {
+                    Some(k) => {
+                        used[k] = true;
+                        true
+                    }
+                    None => false,
+                };
+            if !suppressed {
+                violations.push(v);
+            }
+        }
+        for (k, a) in f.allows.iter().enumerate() {
+            allows.push(AllowRecord {
+                file: f.rel.clone(),
+                line: a.line,
+                rule: a.rule.clone(),
+                reason: a.reason.clone(),
+                used: used[k],
+            });
+        }
+    }
+    (violations, allows)
+}
+
+/// All raw (pre-suppression) findings for one file.
+fn file_violations(f: &SourceFile, test_code: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let v = |line: usize, rule: &'static str, message: String| Violation {
+        file: f.rel.clone(),
+        line,
+        rule,
+        message,
+    };
+
+    // R0: malformed suppression comments, plus allows naming a rule the
+    // registry does not know (a typo would otherwise silently never
+    // suppress anything while looking intentional).
+    for m in &f.malformed {
+        out.push(v(m.line, "R0", m.message.clone()));
+    }
+    for a in &f.allows {
+        if rule_info(&a.rule).is_none() {
+            out.push(v(a.line, "R0", format!("allow names unknown rule `{}`", a.rule)));
+        }
+    }
+
+    let library = f.rel.starts_with("src/");
+    let r3_scope = library && f.rel != "src/main.rs" && !f.rel.starts_with("src/bin/");
+    let r2_scope = f.top_module().is_some_and(|m| R2_MODULES.contains(&m));
+
+    for (idx, l) in f.lines.iter().enumerate() {
+        let line = idx + 1;
+        let code = l.code.as_str();
+        let in_test = f.in_test(line);
+
+        if library && !in_test {
+            // R1: hash collections in simulation/report code.
+            for ty in ["HashMap", "HashSet"] {
+                if contains_token(code, ty) {
+                    out.push(v(
+                        line,
+                        "R1",
+                        format!("{ty} iteration order is nondeterministic; use an ordered \
+                                 container"),
+                    ));
+                }
+            }
+            // R4a: float sums over unordered iteration.
+            if code.contains(".sum::<f64>()")
+                && (code.contains(".values()") || code.contains(".keys()"))
+            {
+                out.push(v(
+                    line,
+                    "R4",
+                    "f64 sum over keyed-map iteration; pin the fold order first".into(),
+                ));
+            }
+            // R4b: float-to-index truncation.
+            if code.contains(" as usize") && contains_token(code, "f64") {
+                out.push(v(
+                    line,
+                    "R4",
+                    "f64-to-usize truncation in index/seed derivation; round explicitly or \
+                     justify the floor"
+                        .into(),
+                ));
+            }
+        }
+
+        if r2_scope && !in_test {
+            for pat in ["Instant::now", "SystemTime", "thread::current"] {
+                if code.contains(pat) {
+                    out.push(v(
+                        line,
+                        "R2",
+                        format!("wall-clock/thread-identity source `{pat}` in the seeded \
+                                 simulation core"),
+                    ));
+                }
+            }
+        }
+
+        if r3_scope && !in_test {
+            for pat in [".unwrap(", ".expect(", "panic!("] {
+                if code.contains(pat) {
+                    out.push(v(
+                        line,
+                        "R3",
+                        format!("`{pat}..)` in library code; return Err(..) instead"),
+                    ));
+                }
+            }
+        }
+
+        // R6: format drift, everywhere (tests included).
+        let width = f.raw.get(idx).map_or(0, |r| r.chars().count());
+        if width > 100 {
+            out.push(v(line, "R6", format!("line is {width} columns (budget 100)")));
+        }
+    }
+
+    // R5: every conservation check stays referenced from a test. The
+    // error module only *defines* the variant; constructions live in
+    // the simulators.
+    if library && f.rel != "src/error.rs" {
+        let owners = enclosing_fns(f);
+        for (idx, l) in f.lines.iter().enumerate() {
+            let line = idx + 1;
+            if f.in_test(line) || !l.code.contains("Error::SimInvariant(") {
+                continue;
+            }
+            match owners.get(idx).cloned().flatten() {
+                Some(name) if contains_token(test_code, &name) => {}
+                Some(name) => out.push(v(
+                    line,
+                    "R5",
+                    format!("conservation check in `fn {name}` is not referenced from any test"),
+                )),
+                None => out.push(v(
+                    line,
+                    "R5",
+                    "conservation check outside any fn cannot be traced to a test".into(),
+                )),
+            }
+        }
+    }
+
+    out
+}
+
+/// `needle` appears in `hay` delimited by non-identifier characters.
+fn contains_token(hay: &str, needle: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(pos) = hay[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let pre = hay[..start].chars().next_back();
+        let post = hay[end..].chars().next();
+        let pre_ok = pre.map_or(true, |c| !(c.is_ascii_alphanumeric() || c == '_'));
+        let post_ok = post.map_or(true, |c| !(c.is_ascii_alphanumeric() || c == '_'));
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Per line (0-based), the name of the innermost enclosing `fn`,
+/// resolved by brace tracking over the code channel.
+fn enclosing_fns(f: &SourceFile) -> Vec<Option<String>> {
+    let mut out = Vec::with_capacity(f.lines.len());
+    let mut stack: Vec<(String, i64)> = Vec::new();
+    let mut pending: Option<String> = None;
+    let mut depth = 0i64;
+    let mut parens = 0i64;
+    for l in &f.lines {
+        let chars: Vec<char> = l.code.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            // `fn name` introduces a pending function until its body
+            // opens (or a semicolon ends a bodyless trait signature).
+            if chars[i] == 'f'
+                && chars.get(i + 1) == Some(&'n')
+                && chars.get(i + 2).is_some_and(|c| c.is_whitespace())
+                && (i == 0 || !(chars[i - 1].is_ascii_alphanumeric() || chars[i - 1] == '_'))
+            {
+                let mut j = i + 2;
+                while j < chars.len() && chars[j].is_whitespace() {
+                    j += 1;
+                }
+                let mut name = String::new();
+                while j < chars.len() && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                    name.push(chars[j]);
+                    j += 1;
+                }
+                if !name.is_empty() {
+                    pending = Some(name);
+                }
+                i = j;
+                continue;
+            }
+            match chars[i] {
+                '(' => parens += 1,
+                ')' => parens -= 1,
+                ';' if parens == 0 => pending = None,
+                '{' => {
+                    depth += 1;
+                    if let Some(name) = pending.take() {
+                        stack.push((name, depth));
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if stack.last().is_some_and(|(_, d)| *d > depth) {
+                        stack.pop();
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        out.push(stack.last().map(|(n, _)| n.clone()));
+    }
+    out
+}

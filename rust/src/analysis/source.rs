@@ -1,0 +1,241 @@
+//! Per-file source model for the staticcheck pass: lexed channels,
+//! `#[cfg(test)]` region detection, and `staticcheck: allow` parsing.
+//!
+//! The auditor's exemptions are *structural*: a determinism hazard in a
+//! test is fine (tests never feed report folds), and a hazard on the
+//! simulation path is fine only when a human wrote down why. Both
+//! exemptions are resolved here so the rules in [`super::rules`] can
+//! stay simple line predicates.
+
+use super::lexer::{lex, LexedLine};
+
+/// A parsed `// staticcheck: allow(rule) -- reason` annotation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// 1-based line the annotation sits on.
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// A suppression comment that failed the grammar (missing reason,
+/// unclosed rule id, unknown directive). Always a violation: a silent
+/// half-annotation must never look like a working one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MalformedAllow {
+    pub line: usize,
+    pub message: String,
+}
+
+/// One lexed source file with its structural metadata.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Path relative to the crate root, e.g. `src/serve/curve.rs`.
+    pub rel: String,
+    /// Raw source lines (for width checks).
+    pub raw: Vec<String>,
+    /// Code/comment channels per line.
+    pub lines: Vec<LexedLine>,
+    /// Whole-file test scope (`tests/**` integration files).
+    pub is_test_file: bool,
+    /// Per-line `#[cfg(test)]` scope (1-based index shifted down by 1).
+    test_line: Vec<bool>,
+    pub allows: Vec<Allow>,
+    pub malformed: Vec<MalformedAllow>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, source: &str) -> SourceFile {
+        let lines = lex(source);
+        let raw: Vec<String> = source.lines().map(str::to_string).collect();
+        let is_test_file = rel.starts_with("tests/") || rel.contains("/tests/");
+        let test_line = mark_test_regions(&lines);
+        let (allows, malformed) = parse_allows(&lines);
+        SourceFile { rel: rel.to_string(), raw, lines, is_test_file, test_line, allows, malformed }
+    }
+
+    /// The top-level module this file belongs to: `src/serve/curve.rs`
+    /// and `src/serve.rs` are both `serve`; test files have none.
+    pub fn top_module(&self) -> Option<&str> {
+        let rest = self.rel.strip_prefix("src/")?;
+        let first = rest.split('/').next()?;
+        Some(first.strip_suffix(".rs").unwrap_or(first))
+    }
+
+    /// Is the 1-based `line` inside test scope?
+    pub fn in_test(&self, line: usize) -> bool {
+        self.is_test_file || self.test_line.get(line - 1).copied().unwrap_or(false)
+    }
+
+    /// Find an allow annotation covering the 1-based `line` for `rule`:
+    /// either on the line itself, or on an immediately preceding
+    /// comment-only line. Returns the index into [`Self::allows`].
+    pub fn allow_for(&self, line: usize, rule: &str) -> Option<usize> {
+        for (k, a) in self.allows.iter().enumerate() {
+            if a.rule != rule {
+                continue;
+            }
+            if a.line == line {
+                return Some(k);
+            }
+            // A standalone annotation line covers the next line.
+            if a.line + 1 == line && self.code(a.line).trim().is_empty() {
+                return Some(k);
+            }
+        }
+        None
+    }
+
+    /// The code channel of the 1-based `line` (empty when out of range).
+    pub fn code(&self, line: usize) -> &str {
+        self.lines.get(line - 1).map_or("", |l| l.code.as_str())
+    }
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item: from the attribute
+/// line through the close of the brace block it introduces.
+fn mark_test_regions(lines: &[LexedLine]) -> Vec<bool> {
+    let mut test = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        let squashed: String = lines[i].code.chars().filter(|c| !c.is_whitespace()).collect();
+        if !squashed.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Walk forward counting braces until the attributed item closes.
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        'region: while j < lines.len() {
+            test[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            break 'region;
+                        }
+                    }
+                    // An item that never opens a block (`#[cfg(test)]
+                    // use ...;`) ends at its semicolon.
+                    ';' if !opened => break 'region,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    test
+}
+
+/// Scan every comment channel for suppression annotations.
+fn parse_allows(lines: &[LexedLine]) -> (Vec<Allow>, Vec<MalformedAllow>) {
+    let mut allows = Vec::new();
+    let mut malformed = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        let line = idx + 1;
+        // Only a plain line comment whose body leads with the marker is
+        // a directive. Doc comments (`///`, `//!`) are prose and may
+        // mention the grammar without invoking it.
+        let c = l.comment.trim_start();
+        if c.starts_with("///") || c.starts_with("//!") {
+            continue;
+        }
+        let marker = concat!("// ", "staticcheck:");
+        let Some(pos) = c.find(marker) else {
+            continue;
+        };
+        let rest = c[pos + marker.len()..].trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            malformed.push(MalformedAllow {
+                line,
+                message: "staticcheck directive must be `allow(<rule>) -- <reason>`".into(),
+            });
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            malformed.push(MalformedAllow {
+                line,
+                message: "unclosed rule id in staticcheck allow".into(),
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let tail = rest[close + 1..].trim_start();
+        let reason = tail.strip_prefix("--").map(str::trim).unwrap_or("");
+        if rule.is_empty() || reason.is_empty() {
+            malformed.push(MalformedAllow {
+                line,
+                message: "staticcheck allow needs a rule id and a `-- <reason>`".into(),
+            });
+            continue;
+        }
+        allows.push(Allow { line, rule, reason: reason.to_string() });
+    }
+    (allows, malformed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_region_covers_the_whole_mod() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        x();\n\
+                   }\n}\nfn after() {}\n";
+        let f = SourceFile::parse("src/a.rs", src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(2), "attribute line");
+        assert!(f.in_test(5), "body");
+        assert!(f.in_test(7), "closing brace");
+        assert!(!f.in_test(8), "code after the mod");
+    }
+
+    #[test]
+    fn cfg_test_on_a_single_item_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nuse x::y;\nfn live() {}\n";
+        let f = SourceFile::parse("src/a.rs", src);
+        assert!(f.in_test(2));
+        assert!(!f.in_test(3));
+    }
+
+    #[test]
+    fn tests_dir_files_are_wholly_test() {
+        let f = SourceFile::parse("tests/it.rs", "fn x() {}\n");
+        assert!(f.is_test_file);
+        assert!(f.in_test(1));
+    }
+
+    #[test]
+    fn allow_grammar_round_trips_and_rejects() {
+        let src = "\
+let a = 1; // staticcheck: allow(R3) -- measurement layer only
+// staticcheck: allow(R1) -- keyed scratch, folded through sort
+let b = 2;
+// staticcheck: allow(R2)
+// staticcheck: allow(R4) --
+// staticcheck: deny(R1) -- nope
+";
+        let f = SourceFile::parse("src/a.rs", src);
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].rule, "R3");
+        assert_eq!(f.allows[0].reason, "measurement layer only");
+        assert_eq!(f.allow_for(1, "R3"), Some(0));
+        assert_eq!(f.allow_for(3, "R1"), Some(1), "standalone line covers the next");
+        assert_eq!(f.allow_for(3, "R3"), None);
+        assert_eq!(f.malformed.len(), 3, "missing reason, empty reason, unknown directive");
+    }
+
+    #[test]
+    fn top_module_resolution() {
+        assert_eq!(SourceFile::parse("src/serve/curve.rs", "").top_module(), Some("serve"));
+        assert_eq!(SourceFile::parse("src/error.rs", "").top_module(), Some("error"));
+        assert_eq!(SourceFile::parse("tests/it.rs", "").top_module(), None);
+    }
+}

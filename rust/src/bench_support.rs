@@ -56,6 +56,7 @@ impl Bencher {
 
     /// Time `f` and record under `name`. The closure's return value is
     /// passed to a keep-alive sink so the work can't be optimized away.
+    #[allow(clippy::disallowed_methods)] // wall-clock IS the measurement here
     pub fn bench<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &BenchResult {
         for _ in 0..self.warmup_iters {
             std::hint::black_box(f());
@@ -71,6 +72,7 @@ impl Bencher {
             time: Summary::of(&samples),
             throughput: None,
         });
+        // staticcheck: allow(R3) -- pushed one line up, never empty
         self.results.last().unwrap()
     }
 
@@ -83,8 +85,10 @@ impl Bencher {
         f: impl FnMut() -> T,
     ) -> &BenchResult {
         self.bench(name, f);
+        // staticcheck: allow(R3) -- bench() pushed a result, never empty
         let last = self.results.last_mut().unwrap();
         last.throughput = Some((items / last.time.mean, unit));
+        // staticcheck: allow(R3) -- bench() pushed a result, never empty
         self.results.last().unwrap()
     }
 

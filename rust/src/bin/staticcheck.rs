@@ -1,0 +1,82 @@
+//! `staticcheck` — the self-hosted determinism auditor front-end.
+//!
+//! Scans `<root>/src/**` and `<root>/tests/**`, enforces the rule
+//! registry in [`trafficshape::analysis`], writes the allowlist
+//! inventory to `staticcheck.json`, and exits nonzero on any
+//! unsuppressed violation. CI runs it as
+//! `cargo run --bin staticcheck -- --root rust`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+use trafficshape::analysis::{check_tree, RULES};
+
+const USAGE: &str = "\
+usage: staticcheck [--root <dir>] [--json <path>] [--list-rules]
+
+  --root <dir>   crate root holding src/ and tests/ (default: ./rust
+                 when present, else .)
+  --json <path>  where to write the violation/allowlist inventory
+                 (default: staticcheck.json; '-' to skip)
+  --list-rules   print the rule registry and exit
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut json_path = PathBuf::from("staticcheck.json");
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--list-rules" => {
+                for r in RULES {
+                    println!("{}  {}\n    {}", r.id, r.title, r.protects);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--root" if i + 1 < args.len() => {
+                root = Some(PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            "--json" if i + 1 < args.len() => {
+                json_path = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("staticcheck: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        if Path::new("rust/src").is_dir() {
+            PathBuf::from("rust")
+        } else {
+            PathBuf::from(".")
+        }
+    });
+
+    let analysis = match check_tree(&root) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("staticcheck: scanning {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if json_path != Path::new("-") {
+        let doc = analysis.to_json().to_string_pretty();
+        if let Err(e) = std::fs::write(&json_path, doc) {
+            eprintln!("staticcheck: writing {}: {e}", json_path.display());
+            return ExitCode::from(2);
+        }
+    }
+    print!("{}", analysis.render());
+    if analysis.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

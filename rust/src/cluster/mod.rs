@@ -244,7 +244,7 @@ impl ClusterConfig {
                 bounds.push(r);
             }
         }
-        bounds.sort_by(|a, b| a.partial_cmp(b).expect("validated finite"));
+        bounds.sort_by(f64::total_cmp);
         bounds.dedup();
         for &b in &bounds {
             let any_up = (0..n).any(|m| up_at(&self.failures, m, b));
@@ -320,14 +320,16 @@ impl ClusterSimulator {
         for &s in &seeds {
             runs.push(self.run_with_seed(s)?);
         }
+        let confidence = self.cfg.serve.confidence;
         let machine_stats: Vec<ReplicatedMetrics> = (0..self.cfg.machines.len())
             .map(|m| {
                 let rows: Vec<[f64; 6]> = runs.iter().map(|o| o.machines[m].metric_row()).collect();
-                ReplicatedMetrics::from_rows(&rows)
+                ReplicatedMetrics::from_rows_at(&rows, confidence)
             })
             .collect();
         let fleet_rows: Vec<[f64; 6]> = runs.iter().map(|o| o.fleet.metric_row()).collect();
-        let fleet_stats = ReplicatedMetrics::from_rows(&fleet_rows);
+        let fleet_stats = ReplicatedMetrics::from_rows_at(&fleet_rows, confidence);
+        // staticcheck: allow(R3) -- seeds.len() > 1 on this path
         let mut head = runs.into_iter().next().expect("at least one replication");
         for (r, s) in head.machines.iter_mut().zip(machine_stats) {
             r.stats = Some(s);
@@ -387,6 +389,7 @@ impl ClusterSimulator {
             }
             let rate = self.cfg.serve.headline_rate();
             let stream = self.cfg.serve.arrival.process(rate).generate(duration, seed)?;
+            // staticcheck: allow(R3) -- placed mode never reaches here
             let router = router.as_mut().expect("routed mode has a router");
             for &t in &stream {
                 let up: Vec<bool> = (0..n).map(|m| up_at(&self.cfg.failures, m, t)).collect();
@@ -412,7 +415,7 @@ impl ClusterSimulator {
                 bounds.push(r);
             }
         }
-        bounds.sort_by(|a, b| a.partial_cmp(b).expect("validated finite"));
+        bounds.sort_by(f64::total_cmp);
         bounds.dedup();
 
         let mut machines: Vec<MachineState> = (0..n).map(|_| MachineState::new()).collect();
@@ -569,6 +572,7 @@ impl ClusterSimulator {
                     } else {
                         // Routed mode: the failed machine's backlog
                         // re-enters the front door at the boundary.
+                        // staticcheck: allow(R3) -- only routed lanes re-route
                         let router = router.as_mut().expect("routed mode has a router");
                         let li = m; // lane index == machine index
                         let carry = std::mem::take(&mut lanes[li].carry);
@@ -675,7 +679,8 @@ impl ClusterSimulator {
         for (m, ms) in machines.iter().enumerate() {
             if ms.routed + ms.re_routed_in != ms.served + ms.dropped + ms.re_routed_out {
                 return Err(Error::SimInvariant(format!(
-                    "machine {m} leaks requests: {} routed + {} in != {} served + {} dropped + {} out",
+                    "machine {m} leaks requests: {} routed + {} in != {} served + {} dropped \
+                     + {} out",
                     ms.routed, ms.re_routed_in, ms.served, ms.dropped, ms.re_routed_out
                 )));
             }
@@ -684,7 +689,8 @@ impl ClusterSimulator {
         let fleet_dropped: usize = machines.iter().map(|m| m.dropped).sum();
         if fleet_served + fleet_dropped != requests {
             return Err(Error::SimInvariant(format!(
-                "fleet leaks requests: {fleet_served} served + {fleet_dropped} dropped of {requests}"
+                "fleet leaks requests: {fleet_served} served + {fleet_dropped} dropped \
+                 of {requests}"
             )));
         }
 
@@ -876,6 +882,16 @@ mod tests {
         // Deterministic: same config, same result.
         let again = ClusterSimulator::from_config(&knl(), &tiny_cnn(), small_cfg());
         assert_eq!(again.run().unwrap().to_csv().to_string(), out.to_csv().to_string());
+    }
+
+    #[test]
+    fn run_with_seed_is_deterministic_per_seed() {
+        let sim = ClusterSimulator::from_config(&knl(), &tiny_cnn(), small_cfg());
+        let a = sim.run_with_seed(7).unwrap();
+        let b = sim.run_with_seed(7).unwrap();
+        assert_eq!(a.to_csv().to_string(), b.to_csv().to_string());
+        let c = sim.run_with_seed(8).unwrap();
+        assert!(a.requests > 0 && c.requests > 0);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use crate::serve::LatencyStats;
 use crate::sweep::ReplicatedMetrics;
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{Confidence, Summary};
 use crate::util::table::Table;
 
 /// One machine's (or the fleet's) run accounting.
@@ -184,10 +184,27 @@ impl ClusterOutcome {
         cols
     }
 
+    /// [`Self::csv_columns`] at an explicit coverage level: identical at
+    /// the default 95 %, interval suffixes renamed otherwise.
+    pub fn csv_columns_at(replicated: bool, confidence: Confidence) -> Vec<String> {
+        let mut cols: Vec<String> =
+            Self::csv_columns(false).into_iter().map(str::to_string).collect();
+        if replicated {
+            cols.extend(ReplicatedMetrics::csv_columns_at(confidence));
+        }
+        cols
+    }
+
+    /// The interval coverage of the replication folds (the default when
+    /// the outcome is unreplicated).
+    pub fn confidence(&self) -> Confidence {
+        self.fleet.stats.as_ref().map(|s| s.confidence()).unwrap_or_default()
+    }
+
     /// One row per machine plus the `fleet` row.
     pub fn to_csv(&self) -> CsvWriter {
         let replicated = self.is_replicated();
-        let mut w = CsvWriter::new(Self::csv_columns(replicated));
+        let mut w = CsvWriter::new(Self::csv_columns_at(replicated, self.confidence()));
         let f = crate::util::csv::format_float;
         for r in self.machines.iter().chain(std::iter::once(&self.fleet)) {
             let tenants = r
@@ -267,11 +284,12 @@ impl ClusterOutcome {
             .with("bw_mean_gbps", self.fleet.bw.mean)
             .with("bw_std_gbps", self.fleet.bw.std);
         if let Some(s) = &self.fleet.stats {
+            let sfx = s.confidence().suffix();
             j.set("replications", s.replications());
             j.set("p99_ms_mean", s.p99_ms.mean);
-            j.set("p99_ms_ci95", s.p99_ms.ci95);
+            j.set(&format!("p99_ms_{sfx}"), s.p99_ms.ci);
             j.set("goodput_ips_mean", s.goodput_ips.mean);
-            j.set("goodput_ips_ci95", s.goodput_ips.ci95);
+            j.set(&format!("goodput_ips_{sfx}"), s.goodput_ips.ci);
         }
         j.with("migrations", migrations)
     }

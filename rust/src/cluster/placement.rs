@@ -114,13 +114,7 @@ pub(crate) fn pick_host(
 /// Deterministic placement order: decreasing share, ties by index.
 pub(crate) fn demand_order(lanes: &[Lane], subset: &[usize]) -> Vec<usize> {
     let mut order = subset.to_vec();
-    order.sort_by(|&a, &b| {
-        lanes[b]
-            .share
-            .partial_cmp(&lanes[a].share)
-            .expect("tenant shares are validated finite")
-            .then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| lanes[b].share.total_cmp(&lanes[a].share).then(a.cmp(&b)));
     order
 }
 

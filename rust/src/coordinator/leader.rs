@@ -87,6 +87,7 @@ impl Coordinator {
     }
 
     /// Run the full workload; blocks until all jobs complete.
+    #[allow(clippy::disallowed_methods)] // real-execution path: wall-clock origin
     pub fn run(&self) -> Result<CoordinatorReport> {
         let n = self.cfg.partitions;
         let origin = Instant::now();

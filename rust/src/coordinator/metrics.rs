@@ -77,6 +77,7 @@ impl TrafficMeter {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // the meter under test is wall-clock based
 mod tests {
     use super::*;
 

@@ -127,7 +127,8 @@ pub fn run_by_id(id: &str, cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
                 id: "fig1",
                 title: "Fig 1 — bandwidth fluctuation (sync ResNet-50)",
                 rendered: format!(
-                    "Fig 1 — sampled BW: mean {:.1} GB/s, σ {:.1}, min {:.1}, max {:.1} (peak {:.0})\n",
+                    "Fig 1 — sampled BW: mean {:.1} GB/s, σ {:.1}, min {:.1}, \
+                     max {:.1} (peak {:.0})\n",
                     r.summary.mean, r.summary.std, r.summary.min, r.summary.max, r.peak_gbps
                 ),
                 csv: vec![("trace.csv".into(), r.to_csv())],

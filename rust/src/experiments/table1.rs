@@ -102,6 +102,7 @@ pub fn run_table1(cfg: &ExperimentConfig) -> Result<Table1Result> {
         let phase = phases
             .iter()
             .find(|p| p.name == ours)
+            // staticcheck: allow(R3) -- TABLE1_LAYERS names are zoo-static
             .unwrap_or_else(|| panic!("layer {ours} missing from ResNet-50"));
         let tc = phase.compute_time(accel, accel.cores).0;
         let tm = phase.bytes.0 / accel.mem_bw.0;

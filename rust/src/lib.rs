@@ -42,6 +42,10 @@
 //!   metering. Python is never on the request path.
 //! * [`experiments`] — drivers that regenerate every figure and table in
 //!   the paper's evaluation section.
+//! * [`analysis`] — the self-hosted `staticcheck` determinism auditor:
+//!   a zero-dependency source scanner that enforces the contract above
+//!   (no hash-order folds, no wall-clock in the core, no panic paths,
+//!   no orphaned conservation checks) on every commit.
 //!
 //! ## Quick start
 //!
@@ -58,6 +62,7 @@
 //! println!("relative perf vs sync: {:.3}", report.relative_performance);
 //! ```
 
+pub mod analysis;
 pub mod cli;
 pub mod cluster;
 pub mod config;

@@ -23,12 +23,14 @@ use trafficshape::runtime::find_artifact_dir;
 use trafficshape::serve::{ServeConfig, ServeExperiment, TenantMode};
 use trafficshape::shaping::StaggerPolicy;
 use trafficshape::sweep::{SweepGrid, SweepRunner};
+use trafficshape::util::stats::Confidence;
 use trafficshape::util::table::Table;
 
 fn app() -> App {
     App {
         name: "trafficshape",
-        about: "statistical memory traffic shaping for CNN acceleration (Jung et al., IEEE CAL 2018)",
+        about: "statistical memory traffic shaping for CNN acceleration (Jung et al., \
+IEEE CAL 2018)",
         commands: vec![
             CommandSpec::new("list", "list reproducible experiments"),
             CommandSpec::new("exp", "run an experiment driver")
@@ -47,6 +49,7 @@ fn app() -> App {
                 .opt("serve-duration", "S", Some("0.25"), "arrival window for serve rows")
                 .opt("seed", "N", Some("42"), "serve arrival-stream seed")
                 .opt("replications", "N", Some("1"), "Monte-Carlo replications per serve row")
+                .opt("confidence", "PCT", Some("95"), "CI coverage for folds: 90|95|99")
                 .opt("queue-cap", "LIST", Some("0"), "serve rows: queue-bound axis (0 = unbounded)")
                 .opt("slo-ms", "LIST", Some("0"), "serve rows: latency-deadline axis (0 = none)")
                 .opt("batch-timeout", "MS", Some("0"), "serve rows: batch hold (0 = on idle)")
@@ -66,7 +69,8 @@ fn app() -> App {
                 .opt("rate", "LIST", None, "arrival rates in img/s (default: auto vs capacity)")
                 .opt("duration", "S", Some("0.5"), "arrival window in seconds")
                 .opt("seed", "N", Some("42"), "arrival-stream rng seed")
-                .opt("replications", "N", Some("1"), "Monte-Carlo replications (mean ± 95% CI)")
+                .opt("replications", "N", Some("1"), "Monte-Carlo replications (mean ± CI)")
+                .opt("confidence", "PCT", Some("95"), "CI coverage for folds: 90|95|99")
                 .opt("policy", "NAME", Some("shortest_queue"), "round_robin|shortest_queue")
                 .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
                 .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
@@ -94,7 +98,8 @@ fn app() -> App {
                 .opt("rate", "LIST", None, "fleet arrival rate in img/s (first value used)")
                 .opt("duration", "S", Some("0.5"), "arrival window in seconds")
                 .opt("seed", "N", Some("42"), "arrival-stream + router rng seed")
-                .opt("replications", "N", Some("1"), "Monte-Carlo replications (mean ± 95% CI)")
+                .opt("replications", "N", Some("1"), "Monte-Carlo replications (mean ± CI)")
+                .opt("confidence", "PCT", Some("95"), "CI coverage for folds: 90|95|99")
                 .opt("policy", "NAME", Some("shortest_queue"), "round_robin|shortest_queue")
                 .opt("arrival", "NAME", Some("poisson"), "arrival process: poisson|bursty")
                 .opt("burstiness", "X", Some("4"), "bursty only: burst-to-mean rate ratio")
@@ -191,6 +196,16 @@ fn cmd_models() -> Result<()> {
     Ok(())
 }
 
+/// `--confidence {90,95,99}` → [`Confidence`] (sweep wires it by hand;
+/// serve and cluster parse it inside [`ServeConfig::apply_cli`]).
+fn parse_confidence(m: &Matches) -> Result<Confidence> {
+    match m.get_usize("confidence")? {
+        Some(pct) => Confidence::from_percent(pct)
+            .ok_or_else(|| Error::Usage(format!("--confidence must be 90, 95 or 99, got {pct}"))),
+        None => Ok(Confidence::default()),
+    }
+}
+
 fn cmd_sweep(m: &Matches) -> Result<()> {
     let accel = AcceleratorConfig::preset(m.get("accel").unwrap_or("knl_7210"))?;
     let batches = m.get_usize("batches")?.unwrap_or(6);
@@ -218,6 +233,7 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
         .serve_duration(m.get_f64("serve-duration")?.unwrap_or(0.25))
         .serve_seed(seed)
         .serve_replications(m.get_usize("replications")?.unwrap_or(1))
+        .serve_confidence(parse_confidence(m)?)
         .serve_queue_caps(m.get_usize_list("queue-cap")?.unwrap_or_else(|| vec![0]))
         .serve_slo_ms_axis(m.get_f64_list("slo-ms")?.unwrap_or_else(|| vec![0.0]))
         .serve_batch_timeout_ms(m.get_f64("batch-timeout")?.unwrap_or(0.0))

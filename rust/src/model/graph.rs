@@ -155,6 +155,7 @@ impl GraphBuilder {
         let name: String = name.into();
         let ins: Vec<TensorShape> = inputs.iter().map(|&p| self.layers[p].out).collect();
         let out = Layer::infer_shape(&kind, &ins)
+            // staticcheck: allow(R3) -- the zoo is static; a bad shape is a bug
             .unwrap_or_else(|e| panic!("building layer '{name}': {e}"));
         let id = self.layers.len();
         self.layers.push(Layer { id, name, kind, inputs: inputs.to_vec(), out });
@@ -184,6 +185,7 @@ impl GraphBuilder {
 
     pub fn finish(self) -> Graph {
         let g = Graph { name: self.name, layers: self.layers };
+        // staticcheck: allow(R3) -- the zoo is static; a bad graph is a bug
         g.validate().expect("builder produced invalid graph");
         g
     }

@@ -193,10 +193,12 @@ impl Layer {
     pub fn param_elems(&self, in_shape: Option<TensorShape>) -> usize {
         match &self.kind {
             LayerKind::Conv(c) => {
+                // staticcheck: allow(R3) -- zoo builders always feed conv
                 let in_c = in_shape.expect("conv has input").c;
                 c.out_ch * (in_c / c.groups) * c.kh * c.kw + c.out_ch
             }
             LayerKind::FullyConnected { out_features } => {
+                // staticcheck: allow(R3) -- zoo builders always feed fc
                 let in_elems = in_shape.expect("fc has input").elems();
                 in_elems * out_features + out_features
             }

@@ -2,7 +2,7 @@
 
 use super::manifest::{Manifest, StageMeta};
 use crate::error::{Error, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// One compiled stage: executable plus its metadata.
 pub struct StageExecutable {
@@ -73,14 +73,16 @@ impl StageExecutable {
 pub struct RuntimeClient {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: HashMap<(String, usize), StageExecutable>,
+    // BTreeMap, not HashMap: `self_check_all` walks the cache, so probe
+    // order (and therefore first-error reporting) must be deterministic.
+    cache: BTreeMap<(String, usize), StageExecutable>,
 }
 
 impl RuntimeClient {
     /// Create a CPU client and eagerly compile the pipeline for `batch`.
     pub fn new(manifest: &Manifest, batch: usize) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
-        let mut rt = Self { client, manifest: manifest.clone(), cache: HashMap::new() };
+        let mut rt = Self { client, manifest: manifest.clone(), cache: BTreeMap::new() };
         let names: Vec<String> = rt.manifest.stage_order.clone();
         for name in names {
             rt.compile_stage(&name, batch)?;
@@ -103,7 +105,9 @@ impl RuntimeClient {
             let exe = self.client.compile(&comp)?;
             self.cache.insert(key.clone(), StageExecutable { meta, exe });
         }
-        Ok(self.cache.get(&key).unwrap())
+        self.cache
+            .get(&key)
+            .ok_or_else(|| Error::Artifact(format!("stage '{name}'@{batch} vanished from cache")))
     }
 
     /// Fetch a previously compiled stage.

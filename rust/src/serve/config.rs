@@ -28,6 +28,7 @@ use super::topology::AdaptiveConfig;
 use crate::cli::Matches;
 use crate::error::{Error, Result};
 use crate::shaping::StaggerPolicy;
+use crate::util::stats::Confidence;
 
 /// Everything that shapes one serving scenario, minus the machine and
 /// the model (those stay with the front-end that owns them).
@@ -81,8 +82,12 @@ pub struct ServeConfig {
     /// Monte-Carlo replications per scenario (≥ 1). 1 keeps the classic
     /// single-seed run; N > 1 repeats every serve point under seeds
     /// derived via [`crate::sweep::ReplicationPlan`] and adds
-    /// mean ± 95 % CI columns to the reports.
+    /// mean ± CI columns to the reports.
     pub replications: usize,
+    /// Interval coverage for the replication folds (`--confidence
+    /// {90,95,99}`; default 95 keeps every `*_ci95` artifact column
+    /// byte-identical).
+    pub confidence: Confidence,
 }
 
 impl Default for ServeConfig {
@@ -108,6 +113,7 @@ impl Default for ServeConfig {
             trace_samples: 400,
             enforce_capacity: true,
             replications: 1,
+            confidence: Confidence::default(),
         }
     }
 }
@@ -197,6 +203,7 @@ impl ServeConfig {
         // the arrival model, and its mean becomes the default grid rate.
         let profile = m.get("rate-profile").map(ArrivalProcess::parse_profile).transpose()?;
         self.arrival = match &profile {
+            // staticcheck: allow(R3) -- parse_profile always yields piecewise
             Some(p) => ArrivalKind::from_process(p).expect("parse_profile returns piecewise"),
             None => ArrivalKind::from_name(m.get("arrival").unwrap_or("poisson"), burstiness)?,
         };
@@ -226,12 +233,18 @@ impl ServeConfig {
         if let Some(r) = m.get_usize("replications")? {
             self.replications = r;
         }
+        if let Some(pct) = m.get_usize("confidence")? {
+            self.confidence = Confidence::from_percent(pct).ok_or_else(|| {
+                Error::Usage(format!("--confidence must be 90, 95 or 99, got {pct}"))
+            })?;
+        }
         Ok(())
     }
 
     /// The replication plan this config implies.
     pub fn replication_plan(&self) -> crate::sweep::ReplicationPlan {
         crate::sweep::ReplicationPlan::new(self.replications.max(1), self.seed)
+            .confidence(self.confidence)
     }
 
     /// Decode the full `serve` command surface — the shared knobs plus
@@ -303,6 +316,7 @@ mod tests {
             .opt("queue-cap", "N", Some("0"), "")
             .opt("slo-ms", "MS", Some("0"), "")
             .opt("batch-timeout", "MS", Some("0"), "")
+            .opt("confidence", "PCT", Some("95"), "")
             .switch("adaptive", "")
             .opt("epoch-ms", "MS", Some("50"), "")
             .opt("tenants", "LIST", None, "")

@@ -27,6 +27,7 @@ use crate::model::Graph;
 use crate::shaping::StaggerPolicy;
 use crate::sweep::{parallel_map, ReplicatedMetrics, ReplicationProfile};
 use crate::util::csv::CsvWriter;
+use crate::util::stats::Confidence;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -370,23 +371,25 @@ impl ServeExperiment {
                 .trace_samples(self.cfg.trace_samples)
                 .run()
         })?;
+        let confidence = self.cfg.confidence;
         let mut outs = outs.into_iter();
         let mut points = Vec::new();
         for _ in &modes {
             let group: Vec<_> = outs.by_ref().take(reps).collect();
             let agg_stats = (reps > 1).then(|| {
                 let refs: Vec<&ServeOutcome> = group.iter().map(|o| &o.aggregate).collect();
-                ReplicatedMetrics::from_outcomes(&refs)
+                ReplicatedMetrics::from_outcomes_at(&refs, confidence)
             });
             let tenant_stats: Vec<Option<ReplicatedMetrics>> = (0..group[0].tenants.len())
                 .map(|i| {
                     (reps > 1).then(|| {
                         let refs: Vec<&ServeOutcome> =
                             group.iter().map(|o| &o.tenants[i].outcome).collect();
-                        ReplicatedMetrics::from_outcomes(&refs)
+                        ReplicatedMetrics::from_outcomes_at(&refs, confidence)
                     })
                 })
                 .collect();
+            // staticcheck: allow(R3) -- group holds exactly reps outcomes
             let out = group.into_iter().next().expect("one outcome per replication");
             let offered = out.offered_rate();
             let rebalances = out.rebalances.len();
@@ -509,6 +512,7 @@ impl ServeExperiment {
                 Err(e) => Err(e),
             }
         })?;
+        let confidence = self.cfg.confidence;
         let mut statuses = statuses.into_iter();
         let mut profile: Option<ReplicationProfile> = None;
         let points = points
@@ -525,11 +529,13 @@ impl ServeExperiment {
                     })
                     .collect();
                 let stats = (reps > 1 && !outcomes.is_empty())
-                    .then(|| ReplicatedMetrics::from_outcomes(&outcomes));
+                    .then(|| ReplicatedMetrics::from_outcomes_at(&outcomes, confidence));
                 if profile.is_none() && reps > 1 && !outcomes.is_empty() {
                     let bins = ReplicationProfile::DEFAULT_BINS;
-                    profile = Some(ReplicationProfile::from_outcomes(&outcomes, bins));
+                    profile =
+                        Some(ReplicationProfile::from_outcomes_at(&outcomes, bins, confidence));
                 }
+                // staticcheck: allow(R3) -- group holds exactly reps statuses
                 let status = group.into_iter().next().expect("one status per replication");
                 // The adaptive row's requested start may have been an
                 // infeasible candidate the run skipped; report the count
@@ -778,6 +784,28 @@ impl ServeCurve {
         cols
     }
 
+    /// [`Self::csv_columns`] at an explicit coverage level: identical at
+    /// the default 95 %, interval suffixes renamed otherwise.
+    pub fn csv_columns_at(replicated: bool, confidence: Confidence) -> Vec<String> {
+        let mut cols: Vec<String> =
+            Self::csv_columns(false).into_iter().map(str::to_string).collect();
+        if replicated {
+            cols.extend(ReplicatedMetrics::csv_columns_at(confidence));
+        }
+        cols
+    }
+
+    /// The interval coverage of the per-point replication statistics
+    /// (the default when the curve is unreplicated).
+    pub fn confidence(&self) -> Confidence {
+        self.points
+            .iter()
+            .filter_map(|p| p.stats.as_ref())
+            .map(|s| s.confidence())
+            .next()
+            .unwrap_or_default()
+    }
+
     /// Full per-point export in grid (rate-major) order. Adaptive rows
     /// populate the `mode`, `epochs`, `reconfigurations` and
     /// `chosen_partitions` columns (static rows export their fixed count
@@ -785,7 +813,7 @@ impl ServeCurve {
     /// column pairs of [`ReplicatedMetrics::CSV_COLUMNS`].
     pub fn to_csv(&self) -> CsvWriter {
         let replicated = self.is_replicated();
-        let mut w = CsvWriter::new(Self::csv_columns(replicated));
+        let mut w = CsvWriter::new(Self::csv_columns_at(replicated, self.confidence()));
         let f = crate::util::csv::format_float;
         for p in &self.points {
             // Multi-tenant rows report their sharing discipline in the
@@ -881,11 +909,12 @@ impl ServeCurve {
                     .with("goodput_ips", o.goodput_ips)
                     .with("drop_rate", o.drop_rate);
                 if let Some(s) = &best.stats {
+                    let sfx = s.confidence().suffix();
                     b = b
                         .with("p99_ms_mean", s.p99_ms.mean)
-                        .with("p99_ms_ci95", s.p99_ms.ci95)
+                        .with(&format!("p99_ms_{sfx}"), s.p99_ms.ci)
                         .with("goodput_ips_mean", s.goodput_ips.mean)
-                        .with("goodput_ips_ci95", s.goodput_ips.ci95);
+                        .with(&format!("goodput_ips_{sfx}"), s.goodput_ips.ci);
                 }
                 j.set("best_at_peak", b);
             }

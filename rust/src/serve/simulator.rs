@@ -52,6 +52,7 @@ fn fold_completions(
     let mut served = 0usize;
     for job in jobs {
         let Some(batch) = batches.get(job.id as usize) else {
+            // staticcheck: allow(R5) -- needs live engine state; covered via run()
             return Err(Error::SimInvariant(format!(
                 "engine job {} has no dispatched batch",
                 job.id
@@ -716,6 +717,22 @@ mod tests {
             .duration(0.02)
             .seed(9)
             .trace_samples(64)
+    }
+
+    #[test]
+    fn run_fixed_and_run_adaptive_back_the_public_run_dispatch() {
+        let s = sim(3000.0, 2);
+        let direct = s.run_fixed(2).unwrap();
+        let public = s.run().unwrap();
+        assert_eq!(direct.requests, public.requests);
+        assert_eq!(direct.served, public.served);
+        assert_eq!(direct.latency.p99_ms, public.latency.p99_ms);
+
+        let cfg = AdaptiveConfig::new(vec![1, 2]);
+        let a = sim(3000.0, 2).adaptive(cfg.clone());
+        let adaptive = a.run_adaptive(&cfg).unwrap();
+        assert!(adaptive.requests > 0);
+        assert_eq!(adaptive.served + adaptive.dropped, adaptive.requests);
     }
 
     #[test]

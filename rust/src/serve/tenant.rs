@@ -881,6 +881,7 @@ impl MultiTenantSimulator {
         let mut bytes = vec![0.0f64; active.len()];
         for job in &out.jobs {
             let Some(&(slot, local)) = mt.batch_map.get(job.id as usize) else {
+                // staticcheck: allow(R5) -- needs live engine state; covered via run()
                 return Err(Error::SimInvariant(format!(
                     "engine job {} has no dispatched tenant batch",
                     job.id

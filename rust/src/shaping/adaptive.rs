@@ -110,11 +110,8 @@ impl AdaptivePartitioner {
         }
         let best = *probes
             .iter()
-            .max_by(|a, b| {
-                a.relative_performance
-                    .partial_cmp(&b.relative_performance)
-                    .unwrap()
-            })
+            .max_by(|a, b| a.relative_performance.total_cmp(&b.relative_performance))
+            // staticcheck: allow(R3) -- probes never empty: the loop above ran
             .expect("probes never empty");
         Ok(AdaptiveDecision { best, probes, skipped })
     }
@@ -295,6 +292,7 @@ impl OnlineRepartitioner {
             self.cursor += 1;
         } else if went_up {
             // Confirm the climb: it must clear the gain threshold.
+            // staticcheck: allow(R3) -- went_up is only set when prev is set
             let (_, prev_score) = self.prev.expect("went_up requires prev");
             if score < prev_score + self.min_gain_step * prev_score.abs().max(1.0) {
                 self.cursor -= 1;

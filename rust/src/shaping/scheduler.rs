@@ -89,6 +89,7 @@ pub fn build_workloads(
                     w = w.with_start_phase(offset);
                 }
                 StaggerPolicy::RandomDelay { .. } => {
+                    // staticcheck: allow(R3) -- rng is Some for RandomDelay
                     let d = rng.as_mut().unwrap().range_f64(0.0, batch_time);
                     w = w.with_start_delay(Seconds(d));
                 }

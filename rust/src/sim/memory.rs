@@ -39,7 +39,7 @@ pub fn max_min_allocate_into(
     // if the equal share covers it.
     order.clear();
     order.extend(0..n);
-    order.sort_unstable_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+    order.sort_unstable_by(|&a, &b| demands[a].total_cmp(&demands[b]));
 
     let mut remaining = peak;
     let mut left = n;

@@ -184,6 +184,13 @@ impl SweepGrid {
         self
     }
 
+    /// Interval coverage for replication folds — shim for
+    /// [`ServeConfig::confidence`] on the embedded serve config.
+    pub fn serve_confidence(mut self, confidence: crate::util::stats::Confidence) -> Self {
+        self.serve.confidence = confidence;
+        self
+    }
+
     /// Bound each serve-scenario partition queue (0 = unbounded) —
     /// single-value convenience over [`Self::serve_queue_caps`].
     pub fn serve_queue_cap(mut self, cap: usize) -> Self {

@@ -10,7 +10,9 @@
 //! the scenario's base seed via a SplitMix64 sub-stream, the front-ends
 //! fan the replications out over the existing `parallel_map` pool, and
 //! [`ReplicatedMetrics`] folds the per-replication outcomes into mean,
-//! sample standard deviation and a 95 % Student-t interval per metric.
+//! sample standard deviation and a two-sided Student-t interval per
+//! metric (95 % by default; `--confidence {90,95,99}` retunes both the
+//! critical values and the `*_ci<pct>` artifact column names).
 //!
 //! Two contracts the harness guarantees:
 //!
@@ -26,7 +28,7 @@ use crate::error::{Error, Result};
 use crate::serve::ServeOutcome;
 use crate::util::csv::CsvWriter;
 use crate::util::rng::SplitMix64;
-use crate::util::stats::t_critical_975;
+use crate::util::stats::{t_critical, Confidence};
 
 /// How many times to repeat a scenario and under which seed lineage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,11 +37,20 @@ pub struct ReplicationPlan {
     pub replications: usize,
     /// The scenario seed replication seeds are derived from.
     pub base_seed: u64,
+    /// Interval coverage for every folded metric (default 95 %, which
+    /// keeps the historical `*_ci95` artifact columns byte-identical).
+    pub confidence: Confidence,
 }
 
 impl ReplicationPlan {
     pub fn new(replications: usize, base_seed: u64) -> Self {
-        Self { replications, base_seed }
+        Self { replications, base_seed, confidence: Confidence::default() }
+    }
+
+    /// Builder-style override of the interval coverage.
+    pub fn confidence(mut self, confidence: Confidence) -> Self {
+        self.confidence = confidence;
+        self
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -79,30 +90,38 @@ pub struct MetricCi {
     /// run σ, unlike [`crate::util::stats::Summary::std`]'s population
     /// convention for full traces.
     pub std: f64,
-    /// Half-width of the 95 % Student-t interval,
-    /// `t_{0.975, n−1} · s / √n` (0 when n < 2).
-    pub ci95: f64,
+    /// Half-width of the two-sided Student-t interval at
+    /// [`Self::confidence`], `t_{q, n−1} · s / √n` (0 when n < 2).
+    pub ci: f64,
+    /// The coverage [`Self::ci`] was computed at.
+    pub confidence: Confidence,
 }
 
 impl MetricCi {
+    /// Fold at the default 95 % coverage.
     pub fn of(xs: &[f64]) -> Self {
+        Self::of_at(xs, Confidence::default())
+    }
+
+    /// Fold at an explicit coverage level.
+    pub fn of_at(xs: &[f64], confidence: Confidence) -> Self {
         let n = xs.len();
         if n == 0 {
-            return Self { n: 0, mean: 0.0, std: 0.0, ci95: 0.0 };
+            return Self { n: 0, mean: 0.0, std: 0.0, ci: 0.0, confidence };
         }
         let mean = xs.iter().sum::<f64>() / n as f64;
         if n == 1 {
-            return Self { n, mean, std: 0.0, ci95: 0.0 };
+            return Self { n, mean, std: 0.0, ci: 0.0, confidence };
         }
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
         let std = var.sqrt();
-        let ci95 = t_critical_975(n - 1) * std / (n as f64).sqrt();
-        Self { n, mean, std, ci95 }
+        let ci = t_critical(confidence, n - 1) * std / (n as f64).sqrt();
+        Self { n, mean, std, ci, confidence }
     }
 
     /// The `mean±ci` cell used by the render tables.
     pub fn render(&self, decimals: usize) -> String {
-        format!("{:.*}±{:.*}", decimals, self.mean, decimals, self.ci95)
+        format!("{:.*}±{:.*}", decimals, self.mean, decimals, self.ci)
     }
 }
 
@@ -134,10 +153,30 @@ impl ReplicatedMetrics {
         "drop_rate_ci95",
     ];
 
+    /// The six folded metric names, in cell order.
+    const METRICS: [&'static str; 6] =
+        ["p50_ms", "p95_ms", "p99_ms", "throughput_ips", "goodput_ips", "drop_rate"];
+
+    /// The CSV columns for a report folded at `confidence` — identical
+    /// to [`Self::CSV_COLUMNS`] at the default 95 % level.
+    pub fn csv_columns_at(confidence: Confidence) -> Vec<String> {
+        Self::METRICS
+            .iter()
+            .flat_map(|m| [format!("{m}_mean"), format!("{m}_{}", confidence.suffix())])
+            .collect()
+    }
+
     /// Fold rows of `[p50_ms, p95_ms, p99_ms, throughput, goodput,
-    /// drop_rate]` samples, one row per replication.
+    /// drop_rate]` samples, one row per replication, at 95 % coverage.
     pub fn from_rows(rows: &[[f64; 6]]) -> Self {
-        let col = |i: usize| MetricCi::of(&rows.iter().map(|r| r[i]).collect::<Vec<f64>>());
+        Self::from_rows_at(rows, Confidence::default())
+    }
+
+    /// [`Self::from_rows`] at an explicit coverage level.
+    pub fn from_rows_at(rows: &[[f64; 6]], confidence: Confidence) -> Self {
+        let col = |i: usize| {
+            MetricCi::of_at(&rows.iter().map(|r| r[i]).collect::<Vec<f64>>(), confidence)
+        };
         Self {
             p50_ms: col(0),
             p95_ms: col(1),
@@ -148,8 +187,9 @@ impl ReplicatedMetrics {
         }
     }
 
-    /// Fold per-replication serve outcomes (replication-index order).
-    pub fn from_outcomes(outcomes: &[&ServeOutcome]) -> Self {
+    /// Fold per-replication serve outcomes (replication-index order) at
+    /// an explicit coverage level.
+    pub fn from_outcomes_at(outcomes: &[&ServeOutcome], confidence: Confidence) -> Self {
         let rows: Vec<[f64; 6]> = outcomes
             .iter()
             .map(|o| {
@@ -163,7 +203,12 @@ impl ReplicatedMetrics {
                 ]
             })
             .collect();
-        Self::from_rows(&rows)
+        Self::from_rows_at(&rows, confidence)
+    }
+
+    /// Fold per-replication serve outcomes (replication-index order).
+    pub fn from_outcomes(outcomes: &[&ServeOutcome]) -> Self {
+        Self::from_outcomes_at(outcomes, Confidence::default())
     }
 
     /// Number of replications folded in.
@@ -171,7 +216,13 @@ impl ReplicatedMetrics {
         self.p99_ms.n
     }
 
-    /// CSV cells matching [`Self::CSV_COLUMNS`].
+    /// The coverage level this fold was computed at.
+    pub fn confidence(&self) -> Confidence {
+        self.p99_ms.confidence
+    }
+
+    /// CSV cells matching [`Self::csv_columns_at`] (and, at the default
+    /// level, [`Self::CSV_COLUMNS`]).
     pub fn csv_cells(&self) -> Vec<String> {
         let f = crate::util::csv::format_float;
         [
@@ -183,7 +234,7 @@ impl ReplicatedMetrics {
             self.drop_rate,
         ]
         .iter()
-        .flat_map(|m| [f(m.mean), f(m.ci95)])
+        .flat_map(|m| [f(m.mean), f(m.ci)])
         .collect()
     }
 }
@@ -220,6 +271,11 @@ impl ReplicationProfile {
     /// replications. Returns an empty profile when no replication saw
     /// any event.
     pub fn from_outcomes(outcomes: &[&ServeOutcome], bins: usize) -> Self {
+        Self::from_outcomes_at(outcomes, bins, Confidence::default())
+    }
+
+    /// [`Self::from_outcomes`] at an explicit coverage level.
+    pub fn from_outcomes_at(outcomes: &[&ServeOutcome], bins: usize, conf: Confidence) -> Self {
         assert!(bins > 0, "profile needs at least one bin");
         let span = outcomes
             .iter()
@@ -257,9 +313,9 @@ impl ReplicationProfile {
             .map(|b| ProfileBin {
                 t_start_s: b as f64 * width,
                 t_end_s: (b + 1) as f64 * width,
-                arrived: MetricCi::of(&arrived[b]),
-                served: MetricCi::of(&served[b]),
-                backlog: MetricCi::of(&backlog[b]),
+                arrived: MetricCi::of_at(&arrived[b], conf),
+                served: MetricCi::of_at(&served[b], conf),
+                backlog: MetricCi::of_at(&backlog[b], conf),
             })
             .collect();
         Self { bins: bins_out }
@@ -269,7 +325,13 @@ impl ReplicationProfile {
         self.bins.is_empty()
     }
 
-    /// Header of [`Self::to_csv`].
+    /// The coverage the bins were folded at (default for an empty
+    /// profile).
+    pub fn confidence(&self) -> Confidence {
+        self.bins.first().map_or_else(Confidence::default, |b| b.arrived.confidence)
+    }
+
+    /// Header of [`Self::to_csv`] at the default 95 % coverage.
     pub fn csv_columns() -> Vec<&'static str> {
         vec![
             "bin",
@@ -284,9 +346,21 @@ impl ReplicationProfile {
         ]
     }
 
+    /// Header of [`Self::to_csv`] at `conf` — [`Self::csv_columns`]
+    /// with the interval suffix renamed.
+    pub fn csv_columns_at(conf: Confidence) -> Vec<String> {
+        let sfx = conf.suffix();
+        let mut cols = vec!["bin".to_string(), "t_start_s".into(), "t_end_s".into()];
+        for m in ["arrived", "served", "backlog"] {
+            cols.push(format!("{m}_mean"));
+            cols.push(format!("{m}_{sfx}"));
+        }
+        cols
+    }
+
     /// One row per time bin.
     pub fn to_csv(&self) -> CsvWriter {
-        let mut w = CsvWriter::new(Self::csv_columns());
+        let mut w = CsvWriter::new(Self::csv_columns_at(self.confidence()));
         let f = crate::util::csv::format_float;
         for (i, b) in self.bins.iter().enumerate() {
             w.row(vec![
@@ -294,11 +368,11 @@ impl ReplicationProfile {
                 f(b.t_start_s),
                 f(b.t_end_s),
                 f(b.arrived.mean),
-                f(b.arrived.ci95),
+                f(b.arrived.ci),
                 f(b.served.mean),
-                f(b.served.ci95),
+                f(b.served.ci),
                 f(b.backlog.mean),
-                f(b.backlog.ci95),
+                f(b.backlog.ci),
             ]);
         }
         w
@@ -337,7 +411,7 @@ mod tests {
     fn metric_ci_matches_the_closed_form() {
         // n = 1: no dispersion information, interval collapses.
         let one = MetricCi::of(&[5.0]);
-        assert_eq!((one.n, one.mean, one.std, one.ci95), (1, 5.0, 0.0, 0.0));
+        assert_eq!((one.n, one.mean, one.std, one.ci), (1, 5.0, 0.0, 0.0));
         assert_eq!(MetricCi::of(&[]).n, 0);
         // n = 4 sample: mean 5, sample std sqrt(20/3).
         let m = MetricCi::of(&[2.0, 4.0, 6.0, 8.0]);
@@ -345,11 +419,11 @@ mod tests {
         assert!((m.mean - 5.0).abs() < 1e-12);
         let s = (20.0f64 / 3.0).sqrt();
         assert!((m.std - s).abs() < 1e-12);
-        assert!((m.ci95 - 3.182 * s / 2.0).abs() < 1e-9, "t(3) = 3.182");
+        assert!((m.ci - 3.182 * s / 2.0).abs() < 1e-9, "t(3) = 3.182");
         // Zero-variance replications give a zero-width interval.
         let flat = MetricCi::of(&[3.0, 3.0, 3.0]);
         assert_eq!(flat.std, 0.0);
-        assert_eq!(flat.ci95, 0.0);
+        assert_eq!(flat.ci, 0.0);
         assert_eq!(flat.render(2), "3.00±0.00");
     }
 
@@ -362,10 +436,54 @@ mod tests {
         assert!((m.p99_ms.mean - 4.0).abs() < 1e-12);
         assert!((m.throughput_ips.mean - 110.0).abs() < 1e-12);
         assert!((m.drop_rate.mean - 0.2).abs() < 1e-12);
-        assert!(m.p99_ms.ci95 > 0.0, "two distinct samples → nonzero CI");
+        assert!(m.p99_ms.ci > 0.0, "two distinct samples → nonzero CI");
         let cells = m.csv_cells();
         assert_eq!(cells.len(), ReplicatedMetrics::CSV_COLUMNS.len());
         assert_eq!(cells[4], "4", "p99 mean cell");
+    }
+
+    #[test]
+    fn confidence_threads_into_folds_and_column_names() {
+        use crate::util::stats::t_critical;
+        use Confidence::{P90, P95, P99};
+        let xs = [2.0, 4.0, 6.0, 8.0];
+        let m95 = MetricCi::of(&xs);
+        assert_eq!(m95.confidence, P95, "default coverage is 95 %");
+        for conf in [P90, P95, P99] {
+            let m = MetricCi::of_at(&xs, conf);
+            assert_eq!(m.confidence, conf);
+            assert_eq!((m.n, m.mean, m.std), (m95.n, m95.mean, m95.std));
+            assert!((m.ci - t_critical(conf, 3) * m.std / 2.0).abs() < 1e-12);
+        }
+        // Wider coverage, wider interval.
+        assert!(MetricCi::of_at(&xs, P90).ci < MetricCi::of_at(&xs, P99).ci);
+        // Default column names are the historical ci95 set; other
+        // levels only rename the suffix.
+        let c95: Vec<String> =
+            ReplicatedMetrics::CSV_COLUMNS.iter().map(|s| s.to_string()).collect();
+        assert_eq!(ReplicatedMetrics::csv_columns_at(P95), c95);
+        let c99 = ReplicatedMetrics::csv_columns_at(P99);
+        assert_eq!(c99[5], "p99_ms_ci99");
+        assert_eq!(c99[4], "p99_ms_mean");
+        // The replication plan carries its coverage into the fold.
+        let plan = ReplicationPlan::new(3, 42).confidence(P99);
+        assert_eq!(plan.confidence, P99);
+        assert_eq!(plan.seeds(), ReplicationPlan::new(3, 42).seeds(), "seeds ignore coverage");
+        let folded = ReplicatedMetrics::from_rows_at(
+            &[[1.0, 2.0, 3.0, 4.0, 5.0, 0.1], [2.0, 3.0, 4.0, 5.0, 6.0, 0.2]],
+            plan.confidence,
+        );
+        assert_eq!(folded.confidence(), P99);
+        // Profiles carry the coverage into their header.
+        let mut o = ServeOutcome::empty(1, 0.0);
+        o.arrival_times_s = vec![0.1, 0.6];
+        o.finish_times_s = vec![0.4, 1.0];
+        let p = ReplicationProfile::from_outcomes_at(&[&o], 2, P90);
+        assert_eq!(p.confidence(), P90);
+        let header = p.to_csv().to_string().lines().next().map(str::to_string);
+        let want = "bin,t_start_s,t_end_s,arrived_mean,arrived_ci90,served_mean,\
+                    served_ci90,backlog_mean,backlog_ci90";
+        assert_eq!(header.as_deref(), Some(want));
     }
 
     #[test]
@@ -389,7 +507,7 @@ mod tests {
         assert!((p.bins[0].served.mean - 0.5).abs() < 1e-12);
         // Backlogs at the first edge: a = 1, b = 2 → mean 1.5.
         assert!((p.bins[0].backlog.mean - 1.5).abs() < 1e-12);
-        assert!(p.bins[0].backlog.ci95 > 0.0);
+        assert!(p.bins[0].backlog.ci > 0.0);
         // Everything drains by the end in both replications.
         assert!((p.bins[1].backlog.mean - 0.0).abs() < 1e-12);
         let csv = p.to_csv().to_string();

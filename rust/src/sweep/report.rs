@@ -5,6 +5,7 @@ use super::replicate::{MetricCi, ReplicatedMetrics};
 use crate::serve::ServeOutcome;
 use crate::shaping::{ShapingAnalysis, ShapingReport};
 use crate::util::csv::CsvWriter;
+use crate::util::stats::Confidence;
 use crate::util::json::Json;
 use crate::util::table::Table;
 use std::cmp::Ordering;
@@ -141,7 +142,11 @@ impl SweepMetrics {
     /// Attach replication statistics folded from the per-replication
     /// metrics rows (replication-index order; `self` is replication 0's
     /// row, which keeps the headline point-estimate columns).
-    pub(crate) fn fold_replications(&mut self, reps: &[SweepMetrics]) {
+    pub(crate) fn fold_replications(
+        &mut self,
+        reps: &[SweepMetrics],
+        confidence: Confidence,
+    ) {
         let rows: Vec<[f64; 6]> = reps
             .iter()
             .map(|m| {
@@ -155,9 +160,9 @@ impl SweepMetrics {
                 ]
             })
             .collect();
-        self.replicated = Some(ReplicatedMetrics::from_rows(&rows));
+        self.replicated = Some(ReplicatedMetrics::from_rows_at(&rows, confidence));
         let rels: Vec<f64> = reps.iter().map(|m| m.relative_performance).collect();
-        self.relative_performance_ci = Some(MetricCi::of(&rels));
+        self.relative_performance_ci = Some(MetricCi::of_at(&rels, confidence));
     }
 }
 
@@ -314,7 +319,7 @@ impl SweepReport {
                     ];
                     if replicated {
                         row.push(opt(m.relative_performance_ci.map(|c| {
-                            format!("{:+.1}±{:.1}%", (c.mean - 1.0) * 100.0, c.ci95 * 100.0)
+                            format!("{:+.1}±{:.1}%", (c.mean - 1.0) * 100.0, c.ci * 100.0)
                         })));
                     }
                     t.row(row)
@@ -383,12 +388,36 @@ impl SweepReport {
         cols
     }
 
+    /// [`Self::csv_columns`] at an explicit coverage level: identical
+    /// at the default 95 %, interval suffixes renamed otherwise.
+    pub fn csv_columns_at(replicated: bool, confidence: Confidence) -> Vec<String> {
+        let mut cols: Vec<String> =
+            Self::csv_columns(false).into_iter().map(str::to_string).collect();
+        if replicated {
+            cols.push("relative_performance_mean".to_string());
+            cols.push(format!("relative_performance_{}", confidence.suffix()));
+            cols.extend(ReplicatedMetrics::csv_columns_at(confidence));
+        }
+        cols
+    }
+
+    /// The interval coverage of the replication folds (the default when
+    /// nothing replicated).
+    pub fn confidence(&self) -> Confidence {
+        self.outcomes
+            .iter()
+            .filter_map(|o| o.metrics().and_then(|m| m.replicated))
+            .map(|r| r.confidence())
+            .next()
+            .unwrap_or_default()
+    }
+
     /// Full per-scenario export in grid (id) order. Replicated sweeps
     /// append the mean/CI column pairs (empty on offline and infeasible
     /// rows — only serve rows replicate).
     pub fn to_csv(&self) -> CsvWriter {
         let replicated = self.is_replicated();
-        let mut w = CsvWriter::new(Self::csv_columns(replicated));
+        let mut w = CsvWriter::new(Self::csv_columns_at(replicated, self.confidence()));
         let f = crate::util::csv::format_float;
         let opt = |v: Option<f64>| v.map(f).unwrap_or_default();
         for o in &self.outcomes {
@@ -441,10 +470,11 @@ impl SweepReport {
                             n: 0,
                             mean: m.relative_performance,
                             std: 0.0,
-                            ci95: 0.0,
+                            ci: 0.0,
+                            confidence: r.confidence(),
                         });
                         cells.push(f(ci.mean));
-                        cells.push(f(ci.ci95));
+                        cells.push(f(ci.ci));
                         cells.extend(r.csv_cells());
                     }
                     None => {
@@ -478,7 +508,7 @@ impl SweepReport {
             if let Some(ci) = best.metrics().and_then(|m| m.relative_performance_ci) {
                 b = b
                     .with("relative_performance_mean", ci.mean)
-                    .with("relative_performance_ci95", ci.ci95);
+                    .with(&format!("relative_performance_{}", ci.confidence.suffix()), ci.ci);
             }
             j.set("best", b);
         }
@@ -628,11 +658,11 @@ mod tests {
         };
         if let ScenarioStatus::Completed(m) = &mut a.status {
             m.relative_performance = 1.10;
-            m.fold_replications(&per_rep(&[1.10, 1.00, 0.99]));
+            m.fold_replications(&per_rep(&[1.10, 1.00, 0.99]), Confidence::default());
         }
         if let ScenarioStatus::Completed(m) = &mut b.status {
             m.relative_performance = 1.04;
-            m.fold_replications(&per_rep(&[1.04, 1.08, 1.09]));
+            m.fold_replications(&per_rep(&[1.04, 1.08, 1.09]), Confidence::default());
         }
         let r = SweepReport { outcomes: vec![a, b, outcome(2, None)] };
         assert!(r.is_replicated());
@@ -641,7 +671,7 @@ mod tests {
         let m = r.outcomes[0].metrics().unwrap();
         let ci = m.relative_performance_ci.unwrap();
         assert!((ci.mean - (1.10 + 1.00 + 0.99) / 3.0).abs() < 1e-12);
-        assert!(ci.ci95 > 0.0);
+        assert!(ci.ci > 0.0);
         assert_eq!(m.replicated.unwrap().replications(), 3);
         let csv = r.to_csv().to_string();
         let header = csv.lines().next().unwrap();

@@ -65,12 +65,14 @@ where
                     break;
                 }
                 let r = f(&items[i]);
+                // staticcheck: allow(R3) -- a poisoned slot means a worker panicked
                 *slots[i].lock().expect("sweep slot poisoned") = Some(r);
             });
         }
     });
     let mut out = Vec::with_capacity(n);
     for slot in slots {
+        // staticcheck: allow(R3) -- a poisoned slot means a worker panicked
         match slot.into_inner().expect("sweep slot poisoned") {
             Some(Ok(r)) => out.push(r),
             Some(Err(e)) => return Err(e),
@@ -212,7 +214,7 @@ impl SweepRunner {
         // once per plan seed; offline rows are deterministic and run
         // once. Tasks are key-major / replication-minor, so regrouping
         // is a chunked fold and replication 0 stays the headline.
-        let plan = ReplicationPlan::new(self.grid.serve.replications.max(1), self.grid.serve.seed);
+        let plan = self.grid.serve.replication_plan();
         let seeds = plan.seeds();
         let reps = seeds.len();
         // How many times a row with these axes runs: serve and mixed
@@ -372,7 +374,7 @@ impl SweepRunner {
                                 ScenarioStatus::Infeasible(_) => None,
                             })
                             .collect();
-                        head.fold_replications(&per_rep);
+                        head.fold_replications(&per_rep, plan.confidence);
                     }
                 }
                 ScenarioOutcome { scenario, status }

@@ -39,6 +39,7 @@ impl Json {
                 pairs.push((key.to_string(), value));
             }
         } else {
+            // staticcheck: allow(R3) -- builder misuse is a programmer bug
             panic!("with() on non-object Json");
         }
         self
@@ -274,7 +275,7 @@ impl<'a> Parser<'a> {
         self.bytes.get(self.pos).copied()
     }
 
-    fn expect(&mut self, b: u8) -> Result<()> {
+    fn expect_byte(&mut self, b: u8) -> Result<()> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
@@ -307,7 +308,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -330,7 +331,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -341,7 +342,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             pairs.push((key, val));
@@ -358,7 +359,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -384,7 +385,7 @@ impl<'a> Parser<'a> {
                             let c = if (0xD800..0xDC00).contains(&cp) {
                                 if self.peek() == Some(b'\\') {
                                     self.pos += 1;
-                                    self.expect(b'u')?;
+                                    self.expect_byte(b'u')?;
                                     let lo = self.hex4()?;
                                     let combined = 0x10000
                                         + ((cp - 0xD800) << 10)
@@ -410,7 +411,10 @@ impl<'a> Parser<'a> {
                     let rest = &self.bytes[self.pos..];
                     let s = std::str::from_utf8(rest)
                         .map_err(|_| Error::json(self.pos, "invalid utf-8"))?;
-                    let c = s.chars().next().unwrap();
+                    let c = s
+                        .chars()
+                        .next()
+                        .ok_or_else(|| Error::json(self.pos, "unterminated string"))?;
                     out.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -442,7 +446,8 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| Error::json(start, "invalid number bytes"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| Error::json(start, format!("invalid number '{s}'")))

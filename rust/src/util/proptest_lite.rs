@@ -60,6 +60,7 @@ where
                 }
                 break; // no shrink candidate fails => minimal
             }
+            // staticcheck: allow(R3) -- the harness reports failure by panic
             panic!(
                 "property '{name}' failed (case {case_idx}, seed {seed:#x})\n\
                  minimal input: {best:?}\nreason: {best_msg}",

@@ -132,28 +132,105 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 /// Sort a copy and take a percentile; convenience for small samples.
 pub fn percentile_of(xs: &[f64], p: f64) -> f64 {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile(&v, p)
 }
 
+/// Two-sided confidence level for Student-t intervals on replicated
+/// metrics. The variants order by coverage so monotonicity in the
+/// level is an `Ord` comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Confidence {
+    /// 90 % two-sided (t quantile 0.95).
+    P90,
+    /// 95 % two-sided (t quantile 0.975) — the default; artifacts keep
+    /// their historical `*_ci95` column names at this level.
+    #[default]
+    P95,
+    /// 99 % two-sided (t quantile 0.995).
+    P99,
+}
+
+impl Confidence {
+    /// Parse the CLI percent form (90, 95 or 99).
+    pub fn from_percent(p: usize) -> Option<Confidence> {
+        match p {
+            90 => Some(Confidence::P90),
+            95 => Some(Confidence::P95),
+            99 => Some(Confidence::P99),
+            _ => None,
+        }
+    }
+
+    pub fn percent(self) -> usize {
+        match self {
+            Confidence::P90 => 90,
+            Confidence::P95 => 95,
+            Confidence::P99 => 99,
+        }
+    }
+
+    /// The CSV-column / JSON-key suffix for intervals at this level.
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Confidence::P90 => "ci90",
+            Confidence::P95 => "ci95",
+            Confidence::P99 => "ci99",
+        }
+    }
+
+    /// Method-form convenience over [`t_critical`].
+    pub fn t_critical(self, df: usize) -> f64 {
+        t_critical(self, df)
+    }
+}
+
+/// Two-sided 95 % critical values of Student's t (quantile 0.950) for
+/// 1–30 degrees of freedom; past 30 [`t_critical`] falls back to the
+/// normal limit 1.645.
+const T_950: [f64; 30] = [
+    6.314, 2.920, 2.353, 2.132, 2.015, 1.943, 1.895, 1.860, 1.833, 1.812, 1.796, 1.782, 1.771,
+    1.761, 1.753, 1.746, 1.740, 1.734, 1.729, 1.725, 1.721, 1.717, 1.714, 1.711, 1.708, 1.706,
+    1.703, 1.701, 1.699, 1.697,
+];
+
 /// Two-sided 97.5 % critical values of Student's t for 1–30 degrees of
 /// freedom. Past 30 the distribution is within half a percent of the
-/// normal limit, so [`t_critical_975`] falls back to 1.96.
+/// normal limit, so [`t_critical`] falls back to 1.96.
 const T_975: [f64; 30] = [
     12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179, 2.160,
     2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056,
     2.052, 2.048, 2.045, 2.042,
 ];
 
-/// Critical value `t_{0.975, df}` for a 95 % two-sided confidence
-/// interval on a sample mean. `df == 0` (a single observation carries no
-/// dispersion information) returns 0 so the interval collapses.
-pub fn t_critical_975(df: usize) -> f64 {
+/// Two-sided 99.5 % critical values of Student's t (quantile 0.995) for
+/// 1–30 degrees of freedom; past 30 [`t_critical`] falls back to the
+/// normal limit 2.576.
+const T_995: [f64; 30] = [
+    63.657, 9.925, 5.841, 4.604, 4.032, 3.707, 3.499, 3.355, 3.250, 3.169, 3.106, 3.055, 3.012,
+    2.977, 2.947, 2.921, 2.898, 2.878, 2.861, 2.845, 2.831, 2.819, 2.807, 2.797, 2.787, 2.779,
+    2.771, 2.763, 2.756, 2.750,
+];
+
+/// Critical value of Student's t for a two-sided interval at `conf` on
+/// a sample mean. `df == 0` (a single observation carries no dispersion
+/// information) returns 0 so the interval collapses.
+pub fn t_critical(conf: Confidence, df: usize) -> f64 {
+    let (table, asymptote) = match conf {
+        Confidence::P90 => (&T_950, 1.645),
+        Confidence::P95 => (&T_975, 1.96),
+        Confidence::P99 => (&T_995, 2.576),
+    };
     match df {
         0 => 0.0,
-        1..=30 => T_975[df - 1],
-        _ => 1.96,
+        1..=30 => table[df - 1],
+        _ => asymptote,
     }
+}
+
+/// The historical 95 %-only entry point, kept as a thin delegate.
+pub fn t_critical_975(df: usize) -> f64 {
+    t_critical(Confidence::P95, df)
 }
 
 /// A piecewise-constant time series: value `v[i]` holds on `[t[i], t[i+1])`.
@@ -273,7 +350,10 @@ impl StepSeries {
                 self.times.pop();
                 self.values.pop();
             } else {
-                *self.times.last_mut().expect("non-empty") = t;
+                // The loop guard proved `times` non-empty.
+                if let Some(end) = self.times.last_mut() {
+                    *end = t;
+                }
                 break;
             }
         }
@@ -285,7 +365,7 @@ impl StepSeries {
             return 0.0;
         }
         // Binary search for the segment containing t.
-        let idx = match self.times.binary_search_by(|x| x.partial_cmp(&t).unwrap()) {
+        let idx = match self.times.binary_search_by(|x| x.total_cmp(&t)) {
             Ok(i) => i,
             Err(i) => i - 1,
         };
@@ -300,7 +380,7 @@ impl StepSeries {
             .iter()
             .flat_map(|s| s.times.iter().copied())
             .collect();
-        cuts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        cuts.sort_by(f64::total_cmp);
         cuts.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
         let mut out = StepSeries::new();
         for w in cuts.windows(2) {
@@ -335,6 +415,7 @@ impl Histogram {
         } else if x >= self.hi {
             self.overflow += 1;
         } else {
+            // staticcheck: allow(R4) -- histogram binning floors on purpose
             let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
             let last = self.counts.len() - 1;
             self.counts[b.min(last)] += 1;
@@ -561,6 +642,59 @@ mod tests {
         // Monotone decreasing over the table.
         for df in 1..30 {
             assert!(t_critical_975(df) > t_critical_975(df + 1));
+        }
+    }
+
+    #[test]
+    fn t_critical_known_references_at_every_confidence() {
+        use Confidence::{P90, P95, P99};
+        // df ∈ {1, 5, 30, ∞} against the standard t tables.
+        for (conf, df1, df5, df30, inf) in [
+            (P90, 6.314, 2.015, 1.697, 1.645),
+            (P95, 12.706, 2.571, 2.042, 1.96),
+            (P99, 63.657, 4.032, 2.750, 2.576),
+        ] {
+            assert!((t_critical(conf, 1) - df1).abs() < 1e-9, "{conf:?} df=1");
+            assert!((t_critical(conf, 5) - df5).abs() < 1e-9, "{conf:?} df=5");
+            assert!((t_critical(conf, 30) - df30).abs() < 1e-9, "{conf:?} df=30");
+            assert!((t_critical(conf, 1_000_000) - inf).abs() < 1e-9, "{conf:?} df=inf");
+            assert_eq!(t_critical(conf, 0), 0.0, "{conf:?}: a single sample has no interval");
+        }
+        // The method form and the historical 95 % helper agree.
+        assert_eq!(P99.t_critical(7), t_critical(P99, 7));
+        assert_eq!(t_critical_975(12), t_critical(P95, 12));
+    }
+
+    #[test]
+    fn t_critical_is_monotone_in_df_and_confidence() {
+        use Confidence::{P90, P95, P99};
+        for conf in [P90, P95, P99] {
+            // Strictly decreasing through the table and across the
+            // table→asymptote seam, flat beyond it.
+            for df in 1..=30 {
+                assert!(t_critical(conf, df) > t_critical(conf, df + 1), "{conf:?} df={df}");
+            }
+            assert_eq!(t_critical(conf, 31), t_critical(conf, 100));
+        }
+        // Wider coverage needs a wider interval at every df.
+        for df in 1..=40 {
+            assert!(t_critical(P90, df) < t_critical(P95, df), "df={df}");
+            assert!(t_critical(P95, df) < t_critical(P99, df), "df={df}");
+        }
+        assert!(P90 < P95 && P95 < P99, "variant order mirrors coverage");
+    }
+
+    #[test]
+    fn confidence_percent_suffix_and_default_round_trip() {
+        use Confidence::{P90, P95, P99};
+        assert_eq!(Confidence::default(), P95);
+        for (conf, pct, sfx) in [(P90, 90, "ci90"), (P95, 95, "ci95"), (P99, 99, "ci99")] {
+            assert_eq!(conf.percent(), pct);
+            assert_eq!(conf.suffix(), sfx);
+            assert_eq!(Confidence::from_percent(pct), Some(conf));
+        }
+        for bad in [0, 50, 96, 100] {
+            assert_eq!(Confidence::from_percent(bad), None);
         }
     }
 

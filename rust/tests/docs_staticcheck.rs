@@ -1,0 +1,68 @@
+//! docs/STATICCHECK.md is a contract, not prose: the rule table is
+//! compared here against the registry the auditor actually enforces
+//! (`trafficshape::analysis::RULES`), and the documented command lines
+//! and suppression marker are checked against the binary's interface.
+//! Any drift fails this test (and CI's docs job).
+
+use trafficshape::analysis::{check_sources, rule_info, RULES};
+
+const DOC: &str = include_str!("../../docs/STATICCHECK.md");
+
+/// `(id, title)` pairs from the "Rule catalog" table: the first two
+/// backticked/plain cells of each `| \`R..\` |` row.
+fn documented_rules() -> Vec<(String, String)> {
+    DOC.lines()
+        .filter(|l| l.starts_with("| `R"))
+        .map(|l| {
+            let mut cells = l.split('|').map(str::trim);
+            cells.next(); // leading empty cell
+            let id = cells.next().expect("rule id cell").trim_matches('`').to_string();
+            let title = cells.next().expect("title cell").to_string();
+            (id, title)
+        })
+        .collect()
+}
+
+#[test]
+fn rule_table_matches_the_registry() {
+    let documented = documented_rules();
+    let registry: Vec<(String, String)> =
+        RULES.iter().map(|r| (r.id.to_string(), r.title.to_string())).collect();
+    assert_eq!(
+        documented, registry,
+        "docs/STATICCHECK.md rule catalog disagrees with analysis::RULES — \
+         update the table and the registry together"
+    );
+}
+
+#[test]
+fn every_registry_rule_resolves_and_is_documented_in_prose() {
+    for r in RULES {
+        assert!(rule_info(r.id).is_some(), "registry self-lookup for {}", r.id);
+        assert!(
+            DOC.contains(&format!("`{}`", r.id)),
+            "docs/STATICCHECK.md never mentions rule {}",
+            r.id
+        );
+    }
+}
+
+#[test]
+fn documented_command_and_marker_are_real() {
+    assert!(
+        DOC.contains("cargo run --release --bin staticcheck -- --root rust"),
+        "the documented invocation must match CI's"
+    );
+    // The documented suppression marker must actually parse: a file
+    // using exactly the documented grammar audits clean.
+    let src = "fn f() -> Result<(), ()> {\n\
+                   let x: Option<u32> = Some(1);\n\
+                   // staticcheck: allow(R3) -- documented example\n\
+                   let _ = x.unwrap();\n\
+                   Ok(())\n\
+               }\n";
+    let a = check_sources(&[("src/doc_example.rs".to_string(), src.to_string())]);
+    assert!(a.clean(), "documented grammar must suppress: {}", a.render());
+    assert_eq!(a.allows.len(), 1);
+    assert!(a.allows[0].used);
+}

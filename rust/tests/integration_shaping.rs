@@ -9,6 +9,7 @@ fn knl() -> AcceleratorConfig {
 }
 
 #[test]
+#[allow(clippy::disallowed_types)] // test-local scratch; iteration order unused
 fn headline_gains_in_plausible_bands() {
     // Paper best gains: VGG +3.9%, GoogLeNet +11.1%, ResNet-50 +8.0%.
     // The simulator substitute must land the same ordering with gains in

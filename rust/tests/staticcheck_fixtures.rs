@@ -1,0 +1,199 @@
+//! Fixture battery for the staticcheck determinism auditor: every rule
+//! must fire on a minimal violating snippet, must NOT fire when the
+//! same hazard sits in `#[cfg(test)]` code, comments or string
+//! literals, and must be silenced only by a reasoned
+//! `staticcheck: allow` annotation. The allow marker below is split so
+//! this file never registers directives of its own.
+
+use trafficshape::analysis::{check_sources, Analysis, RULES};
+
+const MARK: &str = concat!("// ", "staticcheck:");
+
+fn check(files: &[(&str, &str)]) -> Analysis {
+    let owned: Vec<(String, String)> =
+        files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+    check_sources(&owned)
+}
+
+fn rules_fired(a: &Analysis) -> Vec<&'static str> {
+    let mut r: Vec<&'static str> = a.violations.iter().map(|v| v.rule).collect();
+    r.dedup();
+    r
+}
+
+#[test]
+fn r1_hash_collections_fire_in_library_code_only() {
+    let bad = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = x(); }\n";
+    let a = check(&[("src/sim/a.rs", bad)]);
+    assert_eq!(rules_fired(&a), vec!["R1"]);
+    assert_eq!(a.violations.len(), 2, "import line and use line");
+
+    // The same text in a tests/ file, a cfg(test) mod, a comment or a
+    // string literal is exempt.
+    let a = check(&[("tests/a.rs", bad)]);
+    assert!(a.clean(), "{}", a.render());
+    let cfg = "#[cfg(test)]\nmod tests {\n    use std::collections::HashSet;\n}\n";
+    let a = check(&[("src/a.rs", cfg)]);
+    assert!(a.clean(), "{}", a.render());
+    let masked = "// HashMap in prose\nfn f() { let s = \"HashMap\"; }\n";
+    let a = check(&[("src/a.rs", masked)]);
+    assert!(a.clean(), "{}", a.render());
+}
+
+#[test]
+fn r2_wall_clock_fires_only_in_core_modules() {
+    let bad = "fn f() { let t = std::time::Instant::now(); }\n";
+    for core in ["src/sim/x.rs", "src/serve/x.rs", "src/sweep.rs", "src/cluster/x.rs"] {
+        let a = check(&[(core, bad)]);
+        assert_eq!(rules_fired(&a), vec!["R2"], "{core}");
+    }
+    // The measurement layer is outside the audited module set.
+    let a = check(&[("src/coordinator/x.rs", bad)]);
+    assert!(a.clean(), "{}", a.render());
+    // Raw strings mask the pattern.
+    let raw = "fn f() { let s = r#\"Instant::now SystemTime\"#; }\n";
+    let a = check(&[("src/sim/x.rs", raw)]);
+    assert!(a.clean(), "{}", a.render());
+}
+
+#[test]
+fn r3_panic_paths_fire_outside_bins_and_tests() {
+    let bad = "fn f() { x.unwrap(); y.expect(\"z\"); panic!(\"no\"); }\n";
+    let a = check(&[("src/model/a.rs", bad)]);
+    assert_eq!(rules_fired(&a), vec!["R3"]);
+    assert_eq!(a.violations.len(), 3);
+    // main.rs, src/bin/** and tests are allowed to panic.
+    for exempt in ["src/main.rs", "src/bin/tool.rs", "tests/a.rs"] {
+        let a = check(&[(exempt, bad)]);
+        assert!(a.clean(), "{exempt}: {}", a.render());
+    }
+    // `.unwrap_or(` is not `.unwrap(`.
+    let a = check(&[("src/model/a.rs", "fn f() { x.unwrap_or(1); }\n")]);
+    assert!(a.clean(), "{}", a.render());
+}
+
+#[test]
+fn r4_order_unpinned_folds_and_truncation_fire() {
+    let sum = "fn f(m: &BTreeMap<u32, f64>) -> f64 { m.values().sum::<f64>() }\n";
+    let a = check(&[("src/sim/a.rs", sum)]);
+    assert_eq!(rules_fired(&a), vec!["R4"]);
+    let trunc = "fn f(x: f64) -> usize { x as usize }\n";
+    let a = check(&[("src/sim/a.rs", trunc)]);
+    assert_eq!(rules_fired(&a), vec!["R4"]);
+    // A slice fold is order-pinned; an integer cast is exact.
+    let a = check(&[("src/sim/a.rs", "fn f(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\n")]);
+    assert!(a.clean(), "{}", a.render());
+    let a = check(&[("src/sim/a.rs", "fn f(x: u32) -> usize { x as usize }\n")]);
+    assert!(a.clean(), "{}", a.render());
+}
+
+#[test]
+fn r5_orphaned_conservation_checks_fire_until_a_test_names_the_fn() {
+    let sim = "fn drain() -> Result<()> {\n\
+                   Err(Error::SimInvariant(\"leak\".into()))\n\
+               }\n";
+    let a = check(&[("src/sim/a.rs", sim)]);
+    assert_eq!(rules_fired(&a), vec!["R5"]);
+    assert!(a.violations[0].message.contains("drain"));
+
+    // A test anywhere in the tree that names the fn clears it.
+    let test = "#[test]\nfn covers() { drain(); }\n";
+    let a = check(&[("src/sim/a.rs", sim), ("tests/it.rs", test)]);
+    assert!(a.clean(), "{}", a.render());
+    // ...but only as an identifier token, not a substring.
+    let near_miss = "#[test]\nfn covers() { drained(); }\n";
+    let a = check(&[("src/sim/a.rs", sim), ("tests/it.rs", near_miss)]);
+    assert_eq!(rules_fired(&a), vec!["R5"]);
+    // error.rs only defines the variant.
+    let a = check(&[("src/error.rs", sim)]);
+    assert!(a.clean(), "{}", a.render());
+}
+
+#[test]
+fn r6_line_width_applies_everywhere_even_tests() {
+    let wide = format!("fn f() {{}} // {}\n", "x".repeat(100));
+    let a = check(&[("tests/a.rs", wide.as_str())]);
+    assert_eq!(rules_fired(&a), vec!["R6"]);
+    let a = check(&[("src/a.rs", "fn f() {}\n")]);
+    assert!(a.clean(), "{}", a.render());
+}
+
+#[test]
+fn reasoned_allow_silences_and_is_inventoried() {
+    let src = format!(
+        "fn f() {{ x.unwrap(); }} {MARK} allow(R3) -- fixture justification\n"
+    );
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert!(a.clean(), "{}", a.render());
+    assert_eq!(a.allows.len(), 1);
+    assert_eq!(a.allows[0].rule, "R3");
+    assert_eq!(a.allows[0].reason, "fixture justification");
+    assert!(a.allows[0].used);
+    assert!(a.unused_allows().is_empty());
+
+    // A standalone annotation line covers the next line.
+    let src = format!("{MARK} allow(R3) -- next-line form\nfn f() {{ x.unwrap(); }}\n");
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert!(a.clean(), "{}", a.render());
+
+    // An allow for the wrong rule does not silence.
+    let src = format!("fn f() {{ x.unwrap(); }} {MARK} allow(R1) -- wrong rule\n");
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert_eq!(rules_fired(&a), vec!["R3"]);
+    assert!(!a.allows[0].used, "the mismatched allow is reported unused");
+    assert_eq!(a.unused_allows().len(), 1);
+}
+
+#[test]
+fn malformed_or_unknown_suppressions_are_r0_and_unsuppressible() {
+    // Missing reason.
+    let src = format!("fn f() {{ x.unwrap(); }} {MARK} allow(R3)\n");
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert_eq!(rules_fired(&a), vec!["R0", "R3"]);
+
+    // Unknown rule id.
+    let src = format!("fn f() {{}} {MARK} allow(R9) -- no such rule\n");
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert_eq!(rules_fired(&a), vec!["R0"]);
+
+    // R0 cannot be annotated away, even with a well-formed allow(R0).
+    let src = format!("{MARK} allow(R0) -- nice try\nfn f() {{}} {MARK} allow(R3)\n");
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert!(rules_fired(&a).contains(&"R0"), "{}", a.render());
+
+    // Doc comments may discuss the grammar without invoking it.
+    let src = "/// {} allow(R3) -- prose, not a directive\nfn f() {}\n"
+        .replace("{}", MARK.trim_start_matches("// "));
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert!(a.clean(), "{}", a.render());
+    assert!(a.allows.is_empty());
+}
+
+#[test]
+fn unused_allows_are_reported_but_not_fatal() {
+    let src = format!("fn f() {{}} {MARK} allow(R3) -- nothing here anymore\n");
+    let a = check(&[("src/model/a.rs", src.as_str())]);
+    assert!(a.clean());
+    assert_eq!(a.unused_allows().len(), 1);
+    assert!(a.render().contains("unused allow(R3)"));
+    let j = a.to_json().to_string_pretty();
+    assert!(j.contains("\"unused_allows\": 1"));
+    assert!(j.contains("\"clean\": true"));
+}
+
+#[test]
+fn registry_is_complete_and_deterministically_ordered() {
+    let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec!["R0", "R1", "R2", "R3", "R4", "R5", "R6"]);
+    // Violations come back sorted by (file, line, rule).
+    let a = check(&[
+        ("src/sim/b.rs", "fn g() { x.unwrap(); }\nuse std::collections::HashMap;\n"),
+        ("src/sim/a.rs", "fn f() { let t = std::time::Instant::now(); }\n"),
+    ]);
+    let got: Vec<(String, usize, &str)> =
+        a.violations.iter().map(|v| (v.file.clone(), v.line, v.rule)).collect();
+    let mut sorted = got.clone();
+    sorted.sort();
+    assert_eq!(got, sorted);
+    assert_eq!(a.files, vec!["src/sim/a.rs", "src/sim/b.rs"]);
+}
