@@ -56,6 +56,10 @@ fn main() {
         rows.push((tb, last));
     }
     print!("{}", b.report("Ablation — in-flight image count (ResNet-50, 4 partitions)"));
+    match b.write_json("ablation_batch_size") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let mut t = Table::new(vec!["total in-flight images", "rel perf vs sync"]).left_first();
     for (tb, g) in &rows {
         let mark = if *tb == 64 { "  ← paper's operating point" } else { "" };

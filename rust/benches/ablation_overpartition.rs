@@ -39,6 +39,10 @@ fn main() {
     }
 
     print!("{}", b.report("Ablation — over-partitioning (ResNet-50)"));
+    match b.write_json("ablation_overpartition") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let mut t = Table::new(vec!["n", "rel perf", "σ reduction", "note"]).left_first();
     for (n, r) in rows {
         match r {

@@ -39,6 +39,10 @@ fn main() {
     }
 
     print!("{}", b.report("Ablation — stagger policy (ResNet-50, 4 partitions)"));
+    match b.write_json("ablation_stagger") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let mut t = Table::new(vec!["policy", "rel perf", "σ reduction", "avg BW gain"]).left_first();
     for (name, r) in &rows {
         t.row(vec![

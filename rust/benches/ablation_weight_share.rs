@@ -60,6 +60,10 @@ fn main() {
         rows.push((s, last));
     }
     print!("{}", b.report("Ablation — weight-share sensitivity (ResNet-50, 4 partitions)"));
+    match b.write_json("ablation_weight_share") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let mut t = Table::new(vec!["weight scale", "rel perf vs sync"]).left_first();
     for (s, g) in &rows {
         t.row(vec![format!("×{s}"), format!("{:+.1}%", (g - 1.0) * 100.0)]);

@@ -27,6 +27,10 @@ fn main() {
         rows.push((parts, last.unwrap()));
     }
     print!("{}", b.report("E2E — real-compute coordinator throughput (TinyCNN)"));
+    match b.write_json("e2e_throughput") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let mut t = Table::new(vec!["partitions", "img/s", "traffic MB", "BW cov"]).left_first();
     for (p, r) in &rows {
         t.row(vec![

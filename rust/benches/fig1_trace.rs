@@ -13,6 +13,10 @@ fn main() {
         last = Some(run_fig1(&cfg).unwrap());
     });
     print!("{}", b.report("Fig 1 — bandwidth fluctuation (sync ResNet-50)"));
+    match b.write_json("fig1_trace") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let r = last.unwrap();
     println!(
         "sampled BW: mean {:.1} GB/s σ {:.1} min {:.1} max {:.1} (peak {:.0}); cov {:.3}",

@@ -12,5 +12,9 @@ fn main() {
         last = Some(run_fig2(&cfg).unwrap());
     });
     print!("{}", b.report("Fig 2 — weight share of conv+FC traffic"));
+    match b.write_json("fig2_weight_ratio") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     print!("{}", last.unwrap().render());
 }

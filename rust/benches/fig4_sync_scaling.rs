@@ -13,5 +13,9 @@ fn main() {
         last = Some(run_fig4(&cfg).unwrap());
     });
     print!("{}", b.report("Fig 4 — sync baseline scaling"));
+    match b.write_json("fig4_sync_scaling") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     print!("{}", last.unwrap().render());
 }

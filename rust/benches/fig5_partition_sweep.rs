@@ -14,6 +14,10 @@ fn main() {
         last = Some(run_fig5(&cfg).unwrap());
     });
     print!("{}", b.report("Fig 5 — partition sweep (3 models × {2,4,8,16})"));
+    match b.write_json("fig5_partition_sweep") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let r = last.unwrap();
     print!("{}", r.render());
 

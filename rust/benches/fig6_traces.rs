@@ -12,6 +12,10 @@ fn main() {
         last = Some(run_fig6(&cfg).unwrap());
     });
     print!("{}", b.report("Fig 6 — BW traces at 1/4/16 partitions"));
+    match b.write_json("fig6_traces") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let r = last.unwrap();
     for (n, s) in r.configs.iter().zip(&r.summaries) {
         println!(

@@ -36,6 +36,10 @@ fn main() {
     }
 
     print!("{}", b.report("Generalization — ResNet-50 on a Volta-class device"));
+    match b.write_json("generalization_volta") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     let mut t = Table::new(vec!["n", "rel perf", "σ reduction", "avg BW gain"]);
     for (n, r) in &rows {
         t.row(vec![

@@ -12,5 +12,9 @@ fn main() {
         last = Some(run_table1(&cfg).unwrap());
     });
     print!("{}", b.report("Table 1 — per-layer BW & FLOPS"));
+    match b.write_json("table1_layers") {
+        Ok(p) => println!("bench JSON: {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
     print!("{}", last.unwrap().render());
 }

@@ -62,6 +62,13 @@ pub const RULES: &[RuleInfo] = &[
         title: "line width",
         protects: "the 100-column rustfmt budget, previously audited by hand",
     },
+    RuleInfo {
+        id: "R7",
+        title: "no per-event allocation in the stepper hot path",
+        protects: "the fluid stepper's O(log n) event loop is allocation-free by contract; \
+                   heap constructors outside the scratch builders re-introduce per-event \
+                   malloc traffic the epoch-reuse optimization removed",
+    },
 ];
 
 /// Look up registry metadata by rule id.
@@ -92,6 +99,12 @@ pub struct AllowRecord {
 
 /// Modules whose non-test code the wall-clock rule (R2) gates.
 const R2_MODULES: [&str; 5] = ["sim", "serve", "sweep", "cluster", "shaping"];
+
+/// Files whose non-test code the hot-path allocation rule (R7) gates.
+const R7_FILES: [&str; 2] = ["src/sim/step.rs", "src/sim/calendar.rs"];
+
+/// Allocation constructors R7 flags outside constructor/reset fns.
+const R7_PATTERNS: [&str; 5] = ["Vec::new", "vec![", ".collect(", "Box::new", ".to_vec("];
 
 /// Run every rule over the lexed tree. Returns the surviving
 /// (unsuppressed) violations and the full allow inventory.
@@ -235,6 +248,36 @@ fn file_violations(f: &SourceFile, test_code: &str) -> Vec<Violation> {
         let width = f.raw.get(idx).map_or(0, |r| r.chars().count());
         if width > 100 {
             out.push(v(line, "R6", format!("line is {width} columns (budget 100)")));
+        }
+    }
+
+    // R7: the stepper hot path must not allocate per event. The scratch
+    // constructors and reset/seeding helpers are the only places the
+    // step modules may touch the allocator; everything reachable from
+    // `step` reuses buffers (`docs/ARCHITECTURE.md` §Stepper hot path).
+    if R7_FILES.contains(&f.rel.as_str()) {
+        let owners = enclosing_fns(f);
+        for (idx, l) in f.lines.iter().enumerate() {
+            let line = idx + 1;
+            if f.in_test(line) {
+                continue;
+            }
+            let Some(pat) = R7_PATTERNS.iter().find(|p| l.code.contains(*p)) else {
+                continue;
+            };
+            let exempt = owners.get(idx).cloned().flatten().is_some_and(|name| {
+                name == "new"
+                    || name == "reset"
+                    || name.starts_with("with_")
+                    || name.starts_with("from_")
+            });
+            if !exempt {
+                out.push(v(
+                    line,
+                    "R7",
+                    format!("allocation `{pat}` in the stepper hot path; reuse scratch buffers"),
+                ));
+            }
         }
     }
 

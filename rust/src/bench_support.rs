@@ -2,10 +2,13 @@
 //!
 //! Provides warmup + timed iterations with mean/σ/min reporting, plus a
 //! tiny runner so `cargo bench` targets (all `harness = false`) share
-//! consistent output. Results print as a table and can be dumped as CSV
-//! for EXPERIMENTS.md.
+//! consistent output. Results print as a table, can be dumped as CSV for
+//! EXPERIMENTS.md, and [`Bencher::write_json`] emits the
+//! machine-readable `BENCH_<name>.json` artifact CI tracks across
+//! commits (see docs/OUTPUTS.md).
 
-use crate::util::stats::Summary;
+use crate::util::json::Json;
+use crate::util::stats::{percentile_of, Summary};
 use crate::util::table::Table;
 use std::time::Instant;
 
@@ -15,6 +18,9 @@ pub struct BenchResult {
     pub name: String,
     /// Per-iteration wall time in seconds.
     pub time: Summary,
+    /// Median per-iteration wall time in seconds ([`Summary`] keeps only
+    /// moments; the median is the robust statistic to track over time).
+    pub p50: f64,
     /// Optional throughput label (e.g. images/s) computed by the caller.
     pub throughput: Option<(f64, &'static str)>,
 }
@@ -70,6 +76,7 @@ impl Bencher {
         self.results.push(BenchResult {
             name: name.into(),
             time: Summary::of(&samples),
+            p50: percentile_of(&samples, 50.0),
             throughput: None,
         });
         // staticcheck: allow(R3) -- pushed one line up, never empty
@@ -115,6 +122,48 @@ impl Bencher {
         }
         t.render()
     }
+
+    /// The machine-readable twin of [`Self::report`]: every recorded
+    /// result as one JSON object, in recording order.
+    pub fn to_json(&self, name: &str) -> Json {
+        let benches: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let tp = match r.throughput {
+                    Some((v, unit)) => Json::obj().with("value", v).with("unit", unit),
+                    None => Json::Null,
+                };
+                Json::obj()
+                    .with("name", r.name.as_str())
+                    .with("iters", r.time.count)
+                    .with("mean_ms", r.time.mean * 1e3)
+                    .with("p50_ms", r.p50 * 1e3)
+                    .with("min_ms", r.time.min * 1e3)
+                    .with("std_ms", r.time.std * 1e3)
+                    .with("throughput", tp)
+            })
+            .collect();
+        Json::obj()
+            .with("name", name)
+            .with("fast_mode", std::env::var("TRAFFICSHAPE_BENCH_FAST").as_deref() == Ok("1"))
+            .with("warmup_iters", self.warmup_iters)
+            .with("iters", self.iters)
+            .with("benches", Json::Arr(benches))
+    }
+
+    /// Write `BENCH_<name>.json` next to the text report, under
+    /// `$TRAFFICSHAPE_BENCH_OUT` (default `out/bench`). Returns the path
+    /// written, so bench mains can echo it.
+    pub fn write_json(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("TRAFFICSHAPE_BENCH_OUT")
+            .unwrap_or_else(|_| "out/bench".to_string());
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{name}.json"));
+        std::fs::write(&path, self.to_json(name).to_string_pretty())?;
+        Ok(path)
+    }
 }
 
 fn format_secs(s: f64) -> String {
@@ -158,6 +207,42 @@ mod tests {
         let (v, unit) = b.results()[0].throughput.unwrap();
         assert!(v > 0.0 && v < 200_000.0);
         assert_eq!(unit, "img/s");
+    }
+
+    #[test]
+    fn json_twin_round_trips() {
+        let mut b = Bencher::new(0, 4);
+        b.bench("alpha", || 1u64);
+        b.bench_throughput("beta", 50.0, "img/s", || 2u64);
+        let j = b.to_json("unit");
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req_str("name").unwrap(), "unit");
+        assert_eq!(parsed.req_usize("iters").unwrap(), 4);
+        let benches = parsed.req_arr("benches").unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].req_str("name").unwrap(), "alpha");
+        assert_eq!(benches[0].req_usize("iters").unwrap(), 4);
+        assert!(benches[0].req_f64("mean_ms").unwrap() >= 0.0);
+        assert!(benches[0].req_f64("p50_ms").unwrap() >= benches[0].req_f64("min_ms").unwrap());
+        assert_eq!(benches[0].get("throughput"), Some(&Json::Null));
+        let tp = benches[1].get("throughput").unwrap();
+        assert_eq!(tp.req_str("unit").unwrap(), "img/s");
+        assert!(tp.req_f64("value").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn write_json_lands_in_the_bench_out_dir() {
+        let dir = std::env::temp_dir().join(format!("ts_bench_{}", std::process::id()));
+        std::env::set_var("TRAFFICSHAPE_BENCH_OUT", &dir);
+        let mut b = Bencher::new(0, 1);
+        b.bench("only", || 0u64);
+        let path = b.write_json("smoke").unwrap();
+        std::env::remove_var("TRAFFICSHAPE_BENCH_OUT");
+        assert!(path.ends_with("BENCH_smoke.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req_str("name").unwrap(), "smoke");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! are byte-identical across thread counts.
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
@@ -135,9 +136,9 @@ impl MachineState {
 pub(crate) struct LaneJob<'a> {
     /// Global lane index (for the fold).
     pub lane: usize,
-    pub graph: &'a Graph,
-    pub partitions: usize,
-    pub cores: usize,
+    /// The lane's installed topology, built (and cached) by the cluster
+    /// loop — windows share one compiled slice until hosting changes.
+    pub set: Arc<PartitionSet>,
     pub queue_cap: usize,
     pub slo_ms: f64,
     /// The lane's full admitted arrival stream (absolute seconds).
@@ -159,10 +160,8 @@ pub(crate) struct WindowJob<'a> {
     pub policy: DispatchPolicy,
     pub stagger: StaggerPolicy,
     pub batch_timeout_ms: f64,
-    pub max_batch: usize,
     pub stagger_rearm: bool,
     pub rearm_quantile: f64,
-    pub enforce_capacity: bool,
     pub start: f64,
     /// `None` = run to drain (the final window).
     pub horizon: Option<f64>,
@@ -226,23 +225,11 @@ impl WorkSource for LaneMux<'_> {
 /// engine results back per lane. Pure with respect to cluster state:
 /// everything mutable is owned by the job or returned in the fold.
 pub(crate) fn run_machine_window(job: &WindowJob<'_>) -> Result<MachineFold> {
-    let mut sets: Vec<PartitionSet> = Vec::with_capacity(job.lanes.len());
-    for lane in &job.lanes {
-        sets.push(PartitionSet::build_slice(
-            &job.accel,
-            lane.graph,
-            lane.cores,
-            lane.partitions,
-            job.max_batch,
-            job.enforce_capacity,
-        )?);
-    }
-
     let mut subs: Vec<ServeController<'_>> = Vec::with_capacity(job.lanes.len());
     let mut map: Vec<(usize, usize)> = Vec::new();
     let mut all_cores: Vec<usize> = Vec::new();
     for (slot, lane) in job.lanes.iter().enumerate() {
-        let set = &sets[slot];
+        let set = &lane.set;
         let gates: Vec<f64> = if lane.gates.is_empty() {
             stagger_gates(job.stagger, set.partitions, set.batch_time_s)
                 .into_iter()
@@ -354,23 +341,20 @@ mod tests {
     }
 
     fn job_over<'a>(admit: &'a [f64], horizon: Option<f64>) -> WindowJob<'a> {
+        let set = PartitionSet::build_slice(&knl(), &tiny_cnn(), 64, 2, 0, true).unwrap();
         WindowJob {
             machine: 0,
             accel: knl(),
             policy: DispatchPolicy::ShortestQueue,
             stagger: StaggerPolicy::UniformPhase,
             batch_timeout_ms: 0.0,
-            max_batch: 0,
             stagger_rearm: true,
             rearm_quantile: 0.95,
-            enforce_capacity: true,
             start: 0.0,
             horizon,
             lanes: vec![LaneJob {
                 lane: 0,
-                graph: Box::leak(Box::new(tiny_cnn())),
-                partitions: 2,
-                cores: 64,
+                set: Arc::new(set),
                 queue_cap: 0,
                 slo_ms: 0.0,
                 admit,

@@ -54,8 +54,10 @@ use router::Router;
 use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
-use crate::serve::{roofline_capacity_ips, LatencyRecorder, ServeConfig};
+use crate::serve::{roofline_capacity_ips, LatencyRecorder, PartitionSet, ServeConfig};
 use crate::sweep::{parallel_map, ReplicatedMetrics};
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// One machine of the fleet: its size, its relative memory bandwidth,
 /// and its serving knobs.
@@ -422,6 +424,11 @@ impl ClusterSimulator {
         let mut migrations: Vec<Migration> = Vec::new();
         let mut fleet_makespan = 0.0f64;
         let mut start = 0.0f64;
+        // Installed topologies, shared across windows: a lane's slice is
+        // recompiled only when its hosting actually changes (the key is
+        // everything `build_slice` depends on), not once per window.
+        let mut set_cache: BTreeMap<(usize, usize, usize, usize), Arc<PartitionSet>> =
+            BTreeMap::new();
 
         for w in 0..=bounds.len() {
             let horizon = bounds.get(w).copied();
@@ -433,6 +440,7 @@ impl ClusterSimulator {
                     continue;
                 }
                 let cores = hosted_cores(&lanes, &hosting[m], accels[m].cores);
+                let mc = &self.cfg.machines[m];
                 let mut lane_jobs: Vec<LaneJob<'_>> = Vec::new();
                 for (slot, &li) in hosting[m].iter().enumerate() {
                     let lane = &lanes[li];
@@ -440,11 +448,25 @@ impl ClusterSimulator {
                     if lane.carry.is_empty() && upper == lane.cursor {
                         continue; // nothing to do this window
                     }
+                    let key = (li, m, cores[slot], lane.partitions);
+                    let set = match set_cache.get(&key) {
+                        Some(s) => s.clone(),
+                        None => {
+                            let built = Arc::new(PartitionSet::build_slice(
+                                &accels[m],
+                                &lane.graph,
+                                cores[slot],
+                                lane.partitions,
+                                mc.serve.max_batch,
+                                self.cfg.serve.enforce_capacity,
+                            )?);
+                            set_cache.insert(key, built.clone());
+                            built
+                        }
+                    };
                     lane_jobs.push(LaneJob {
                         lane: li,
-                        graph: &lane.graph,
-                        partitions: lane.partitions,
-                        cores: cores[slot],
+                        set,
                         queue_cap: lane.queue_cap,
                         slo_ms: lane.slo_ms,
                         admit: &admit[li],
@@ -458,17 +480,14 @@ impl ClusterSimulator {
                 if lane_jobs.is_empty() {
                     continue;
                 }
-                let mc = &self.cfg.machines[m];
                 jobs.push(WindowJob {
                     machine: m,
                     accel: accels[m].clone(),
                     policy: mc.serve.policy,
                     stagger: mc.serve.stagger,
                     batch_timeout_ms: mc.serve.batch_timeout_ms,
-                    max_batch: mc.serve.max_batch,
                     stagger_rearm: mc.serve.stagger_rearm,
                     rearm_quantile: mc.serve.rearm_quantile,
-                    enforce_capacity: self.cfg.serve.enforce_capacity,
                     start,
                     horizon,
                     lanes: lane_jobs,

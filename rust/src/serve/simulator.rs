@@ -31,7 +31,7 @@ use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::reuse::PhaseCompiler;
 use crate::shaping::{OnlineRepartitioner, StaggerPolicy, WindowSignals};
-use crate::sim::{BandwidthTrace, JobRecord, SimEngine};
+use crate::sim::{BandwidthTrace, JobRecord, SimEngine, StepScratch};
 use crate::util::rng::Xoshiro256StarStar;
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
@@ -395,7 +395,7 @@ impl ServeSimulator {
         // deadline — one source of truth.
         let slo_s = queue_cfg.slo_s;
         let mut controller = ServeController::new(&arrivals, set.programs(), queue_cfg);
-        let out = SimEngine::new(&self.accel).run_dynamic(&set.cores(), &mut controller)?;
+        let out = SimEngine::new(&self.accel).run_dynamic(set.cores(), &mut controller)?;
 
         // Map batch completions back to per-request latencies.
         let mut recorder = match slo_s {
@@ -494,6 +494,10 @@ impl ServeSimulator {
         let slo_s = self.slo_s()?;
         let mut climber = OnlineRepartitioner::new(feasible, cfg.min_gain_step, cfg.low_util)?;
         let engine = SimEngine::new(&self.accel);
+        // One stepper scratch (slot state, wake calendar, trace pool)
+        // reused across every epoch's engine run — the epoch loop's
+        // dominant allocation cost otherwise.
+        let mut scratch = StepScratch::new();
         let mut recorder = match slo_s {
             Some(s) => LatencyRecorder::with_slo(s),
             None => LatencyRecorder::new(),
@@ -548,7 +552,7 @@ impl ServeSimulator {
             };
             let mut controller =
                 ServeController::for_epoch(&arrivals, set.programs(), queue_cfg, window);
-            let out = engine.run_dynamic(&set.cores(), &mut controller)?;
+            let out = engine.run_dynamic_with_scratch(set.cores(), &mut controller, &mut scratch)?;
 
             // Fold completions into the continuous latency record.
             let mark = recorder.mark();
@@ -583,6 +587,7 @@ impl ServeSimulator {
             let mut epoch_trace = out.trace;
             epoch_trace.truncate_to(end);
             trace.append_clipped(&epoch_trace);
+            scratch.recycle_trace(epoch_trace);
             total_bytes += out.total_bytes;
             served_total += served_e;
             dropped_total += dropped_e;

@@ -42,7 +42,7 @@ use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::shaping::{weighted_cores, StaggerPolicy};
-use crate::sim::{BandwidthTrace, DynJob, DynNext, SimEngine, WorkSource};
+use crate::sim::{BandwidthTrace, DynJob, DynNext, SimEngine, StepScratch, WorkSource};
 use crate::util::stats::{StepSeries, Summary};
 
 /// Utilization below which a tenant with no backlog qualifies as a
@@ -552,6 +552,9 @@ impl MultiTenantSimulator {
             .collect();
 
         let mut trace = BandwidthTrace::total_only();
+        // One stepper scratch (slot state, wake calendar, trace pool)
+        // reused across every window's engine run.
+        let mut scratch = StepScratch::new();
         let mut tenant_bw: Vec<Summary> = vec![Summary::of(&[]); k];
         let mut rebalances: Vec<RebalanceEvent> = Vec::new();
         let mut start = 0.0f64;
@@ -577,8 +580,16 @@ impl MultiTenantSimulator {
             };
 
             // The active tenants run one engine window together.
-            let folded = self
-                .run_window(&active, &sets, &mut state, &arrivals, &mut recorders, start, horizon);
+            let folded = self.run_window(
+                &active,
+                &sets,
+                &mut state,
+                &arrivals,
+                &mut recorders,
+                start,
+                horizon,
+                &mut scratch,
+            );
             let (results, window) = folded?;
             let end = horizon.unwrap_or(window.makespan).max(window.makespan);
             let mut epoch_trace = window.trace;
@@ -603,9 +614,11 @@ impl MultiTenantSimulator {
                 epoch_trace.per_partition.clear();
                 trace = epoch_trace;
             } else {
-                // Trim idle padding past the boundary, then stitch.
+                // Trim idle padding past the boundary, stitch, then hand
+                // the buffers back for the next window.
                 epoch_trace.truncate_to(end);
                 trace.append_clipped(&epoch_trace);
+                scratch.recycle_trace(epoch_trace);
             }
             total_bytes += window.total_bytes;
             makespan = makespan.max(window.makespan);
@@ -825,6 +838,7 @@ impl MultiTenantSimulator {
         recorders: &mut [LatencyRecorder],
         start: f64,
         horizon: Option<f64>,
+        scratch: &mut StepScratch,
     ) -> Result<(Vec<FoldedWindow>, EngineWindow)> {
         let cut = horizon.unwrap_or(f64::INFINITY);
         let mut subs: Vec<ServeController<'_>> = Vec::with_capacity(active.len());
@@ -872,7 +886,7 @@ impl MultiTenantSimulator {
             engine = engine.with_partition_traces();
         }
         let mut mt = MtController { subs, map, batch_map: Vec::new() };
-        let out = engine.run_dynamic(&all_cores, &mut mt)?;
+        let out = engine.run_dynamic_with_scratch(&all_cores, &mut mt, scratch)?;
 
         // Map completions back per tenant through the global batch map.
         let marks: Vec<_> = active.iter().map(|&i| recorders[i].mark()).collect();

@@ -34,6 +34,9 @@ pub struct PartitionSet {
     /// `programs[b - 1]` is the phase program compiled for exactly a
     /// batch of `b` images (shared: a dispatch is a refcount bump).
     programs: Vec<Arc<Vec<Phase>>>,
+    /// Cached `[cores_per_partition; partitions]` — handed to the dynamic
+    /// engine every epoch, so it is built once instead of per run.
+    cores: Vec<usize>,
 }
 
 impl PartitionSet {
@@ -120,6 +123,7 @@ impl PartitionSet {
             max_batch,
             batch_time_s,
             programs,
+            cores: vec![plan.cores_per_partition; plan.partitions],
         })
     }
 
@@ -130,8 +134,8 @@ impl PartitionSet {
     }
 
     /// Core counts per partition, as the dynamic engine expects them.
-    pub fn cores(&self) -> Vec<usize> {
-        vec![self.cores_per_partition; self.partitions]
+    pub fn cores(&self) -> &[usize] {
+        &self.cores
     }
 }
 

@@ -1,0 +1,298 @@
+//! Next-wake calendar for the fluid stepper.
+//!
+//! A binary min-heap over per-slot wake-up deadlines (absolute times)
+//! with lazy invalidation: rescheduling or cancelling a slot's deadline
+//! never searches the heap — it bumps the slot's generation stamp, and
+//! superseded entries are discarded when they surface at the top. Only
+//! *sleep* deadlines live here: they are stable absolute times handed to
+//! the stepper by the driver, unlike phase completions, whose predicted
+//! times move whenever the max–min allocation changes a rate (and whose
+//! re-derivation would drift bitwise from the reference scan).
+//!
+//! Keys are the `f64::to_bits` image of the deadline. For the
+//! non-negative times the simulation produces (deadlines are asserted
+//! `> now ≥ 0`, and `+∞` is legal), the bit pattern orders identically
+//! to the float itself, so the heap never compares floats.
+
+/// Sentinel for "this slot has no live deadline" — the bit pattern is a
+/// NaN, which a deadline can never be.
+const NO_ENTRY: u64 = u64::MAX;
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    /// `to_bits` of the deadline (orderable as an integer).
+    key: u64,
+    /// Generation stamp at push time; stale once the slot moves on.
+    gen: u64,
+    slot: usize,
+}
+
+/// Min-heap of per-slot wake deadlines with O(1) lazy invalidation.
+///
+/// At most one *live* entry per slot: [`schedule`](Self::schedule)
+/// supersedes, [`invalidate`](Self::invalidate) cancels, and
+/// [`pop`](Self::pop) consumes. Dead entries linger in the heap until
+/// they reach the top, so a heap of `n` slots holds at most one entry
+/// per `schedule` call since the last drain — bounded in the stepper by
+/// the number of wake transitions, each paying O(log n).
+pub(crate) struct WakeCalendar {
+    heap: Vec<Entry>,
+    /// Latest generation per slot; heap entries stamped older are stale.
+    gen: Vec<u64>,
+    /// `to_bits` of the slot's live deadline, or [`NO_ENTRY`].
+    live_key: Vec<u64>,
+}
+
+impl Default for WakeCalendar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WakeCalendar {
+    pub fn new() -> Self {
+        Self { heap: Vec::new(), gen: Vec::new(), live_key: Vec::new() }
+    }
+
+    /// Prepare for a run over `n` slots, keeping the buffers.
+    pub fn reset(&mut self, n: usize) {
+        self.heap.clear();
+        self.heap.reserve(n);
+        self.gen.clear();
+        self.gen.resize(n, 0);
+        self.live_key.clear();
+        self.live_key.resize(n, NO_ENTRY);
+    }
+
+    /// Set `slot`'s wake deadline. Rescheduling the bit-identical
+    /// deadline is a no-op; any other value supersedes the old entry,
+    /// which dies lazily in the heap.
+    pub fn schedule(&mut self, slot: usize, until: f64) {
+        debug_assert!(until > 0.0, "wake deadline must be a positive time, got {until}");
+        let key = until.to_bits();
+        if self.live_key[slot] == key {
+            return;
+        }
+        self.gen[slot] += 1;
+        self.live_key[slot] = key;
+        self.heap.push(Entry { key, gen: self.gen[slot], slot });
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    /// Cancel `slot`'s deadline, if any, without touching the heap.
+    pub fn invalidate(&mut self, slot: usize) {
+        if self.live_key[slot] != NO_ENTRY {
+            self.gen[slot] += 1;
+            self.live_key[slot] = NO_ENTRY;
+        }
+    }
+
+    /// Earliest live deadline as `(until, slot)`, or `None` when no slot
+    /// has one. Discards stale entries encountered at the top.
+    pub fn peek(&mut self) -> Option<(f64, usize)> {
+        loop {
+            let e = *self.heap.first()?;
+            if self.gen[e.slot] == e.gen {
+                return Some((f64::from_bits(e.key), e.slot));
+            }
+            self.discard_top();
+        }
+    }
+
+    /// Remove and return the earliest live deadline.
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        let (until, slot) = self.peek()?;
+        self.discard_top();
+        self.live_key[slot] = NO_ENTRY;
+        Some((until, slot))
+    }
+
+    fn discard_top(&mut self) {
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        self.heap.truncate(last);
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].key < self.heap[parent].key {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let left = 2 * i + 1;
+            if left >= n {
+                break;
+            }
+            let right = left + 1;
+            let mut m = left;
+            if right < n && self.heap[right].key < self.heap[left].key {
+                m = right;
+            }
+            if self.heap[m].key < self.heap[i].key {
+                self.heap.swap(i, m);
+                i = m;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(c: &mut WakeCalendar) -> Vec<(f64, usize)> {
+        let mut out = Vec::new();
+        while let Some(e) = c.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_deadline_order() {
+        let mut c = WakeCalendar::new();
+        c.reset(4);
+        c.schedule(0, 3.0);
+        c.schedule(1, 1.0);
+        c.schedule(2, 2.0);
+        c.schedule(3, 0.5);
+        assert_eq!(drain(&mut c), vec![(0.5, 3), (1.0, 1), (2.0, 2), (3.0, 0)]);
+        assert_eq!(c.peek(), None);
+    }
+
+    #[test]
+    fn invalidate_hides_a_slot_lazily() {
+        let mut c = WakeCalendar::new();
+        c.reset(3);
+        c.schedule(0, 1.0);
+        c.schedule(1, 2.0);
+        c.invalidate(0);
+        // The stale entry is still physically in the heap…
+        assert_eq!(c.heap.len(), 2);
+        // …but peek skips it and drops it in passing.
+        assert_eq!(c.peek(), Some((2.0, 1)));
+        assert_eq!(c.heap.len(), 1);
+        assert_eq!(drain(&mut c), vec![(2.0, 1)]);
+    }
+
+    #[test]
+    fn reschedule_supersedes_old_deadline() {
+        let mut c = WakeCalendar::new();
+        c.reset(2);
+        c.schedule(0, 5.0);
+        c.schedule(1, 4.0);
+        c.schedule(0, 1.0); // earlier than before
+        assert_eq!(c.pop(), Some((1.0, 0)));
+        // Slot 0's old 5.0 entry must not resurface.
+        assert_eq!(drain(&mut c), vec![(4.0, 1)]);
+
+        c.reset(2);
+        c.schedule(0, 1.0);
+        c.schedule(0, 9.0); // later than before
+        assert_eq!(drain(&mut c), vec![(9.0, 0)]);
+    }
+
+    #[test]
+    fn bit_identical_reschedule_is_a_noop() {
+        let mut c = WakeCalendar::new();
+        c.reset(1);
+        c.schedule(0, 2.5);
+        let len = c.heap.len();
+        let gen = c.gen[0];
+        c.schedule(0, 2.5);
+        assert_eq!(c.heap.len(), len, "identical reschedule must not push");
+        assert_eq!(c.gen[0], gen, "identical reschedule must not invalidate");
+        assert_eq!(c.pop(), Some((2.5, 0)));
+    }
+
+    #[test]
+    fn pop_clears_liveness_so_the_slot_can_rearm() {
+        let mut c = WakeCalendar::new();
+        c.reset(1);
+        c.schedule(0, 1.0);
+        assert_eq!(c.pop(), Some((1.0, 0)));
+        // Re-arming with the same time after a pop is a real schedule.
+        c.schedule(0, 1.0);
+        assert_eq!(c.pop(), Some((1.0, 0)));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn invalidate_without_a_live_entry_is_inert() {
+        let mut c = WakeCalendar::new();
+        c.reset(2);
+        c.invalidate(0); // never scheduled
+        c.schedule(0, 1.0);
+        assert_eq!(c.pop(), Some((1.0, 0)));
+        c.invalidate(0); // already popped
+        c.schedule(1, 3.0);
+        assert_eq!(drain(&mut c), vec![(3.0, 1)]);
+    }
+
+    #[test]
+    fn infinite_deadlines_sort_after_every_finite_one() {
+        let mut c = WakeCalendar::new();
+        c.reset(3);
+        c.schedule(0, f64::INFINITY);
+        c.schedule(1, 1e300);
+        c.schedule(2, 0.25);
+        assert_eq!(
+            drain(&mut c),
+            vec![(0.25, 2), (1e300, 1), (f64::INFINITY, 0)]
+        );
+    }
+
+    #[test]
+    fn reset_reuses_the_buffers_cleanly() {
+        let mut c = WakeCalendar::new();
+        c.reset(2);
+        c.schedule(0, 1.0);
+        c.schedule(1, 2.0);
+        c.reset(5);
+        assert_eq!(c.peek(), None);
+        for s in 0..5 {
+            c.schedule(s, (s + 1) as f64);
+        }
+        c.invalidate(2);
+        let got = drain(&mut c);
+        assert_eq!(got, vec![(1.0, 0), (2.0, 1), (4.0, 3), (5.0, 4)]);
+    }
+
+    #[test]
+    fn equal_deadlines_across_slots_all_surface() {
+        let mut c = WakeCalendar::new();
+        c.reset(4);
+        for s in 0..4 {
+            c.schedule(s, 7.0);
+        }
+        let mut got = drain(&mut c);
+        got.sort_by(|a, b| a.1.cmp(&b.1));
+        assert_eq!(got, vec![(7.0, 0), (7.0, 1), (7.0, 2), (7.0, 3)]);
+    }
+
+    #[test]
+    fn churned_slot_keeps_only_its_latest_deadline() {
+        let mut c = WakeCalendar::new();
+        c.reset(2);
+        for k in 0..100 {
+            c.schedule(0, 1.0 + k as f64);
+        }
+        c.schedule(1, 50.5);
+        assert_eq!(c.pop(), Some((50.5, 1)));
+        assert_eq!(drain(&mut c), vec![(100.0, 0)]);
+    }
+}

@@ -14,7 +14,9 @@
 //! characterize → allocate → pick-dt → advance event to it, so the
 //! offline figures and the serving results cannot drift apart.
 
-use super::step::{Activity, FluidStepper, PhaseInfo, SlotAdvance, StepSlots, StepTiming};
+use super::step::{
+    Activity, FluidStepper, PhaseInfo, SlotAdvance, StepScratch, StepSlots, StepTiming,
+};
 use super::trace::BandwidthTrace;
 use super::workload::{PartitionState, Workload};
 use crate::config::AcceleratorConfig;
@@ -124,6 +126,8 @@ struct OfflineSlots<'a> {
     /// Per-workload phase characterizations, indexed like `phases`.
     infos: &'a [Vec<PhaseInfo>],
     states: Vec<PartitionState>,
+    /// Partitions not yet finished — the loop condition, kept O(1).
+    unfinished: usize,
 }
 
 impl StepSlots for OfflineSlots<'_> {
@@ -152,6 +156,7 @@ impl StepSlots for OfflineSlots<'_> {
             s.remaining_frac = 1.0;
             if s.step >= self.workloads[slot].total_steps() {
                 s.finished_at = Some(t1);
+                self.unfinished -= 1;
             }
         }
     }
@@ -192,6 +197,10 @@ struct ServingSlots {
     jobs: Vec<JobRecord>,
     moved_bytes: f64,
     done_flops: f64,
+    /// Partitions with a job in flight (termination test, kept O(1)).
+    active: usize,
+    /// Partitions whose source reported `Finished`.
+    finished: usize,
 }
 
 impl StepSlots for ServingSlots {
@@ -229,6 +238,7 @@ impl StepSlots for ServingSlots {
                     flops: r.flops,
                 });
                 self.running[slot] = None;
+                self.active -= 1;
             }
         }
     }
@@ -247,6 +257,18 @@ impl SimEngine {
 
     /// Run the workloads to completion and return the outcome.
     pub fn run(&self, workloads: &[Workload]) -> Result<SimOutcome> {
+        self.run_with_scratch(workloads, &mut StepScratch::new())
+    }
+
+    /// [`Self::run`] on caller-owned stepper buffers: loops that run the
+    /// engine many times (sweeps, replications) thread one
+    /// [`StepScratch`] through every run so steady-state simulation
+    /// performs no per-run allocation beyond the outcome itself.
+    pub(crate) fn run_with_scratch(
+        &self,
+        workloads: &[Workload],
+        scratch: &mut StepScratch,
+    ) -> Result<SimOutcome> {
         if workloads.is_empty() {
             return Err(Error::InvalidConfig("no workloads".into()));
         }
@@ -271,11 +293,7 @@ impl SimEngine {
         }
 
         let peak = self.accel.mem_bw.0;
-        let mut trace = if self.record_per_partition {
-            BandwidthTrace::new(n)
-        } else {
-            BandwidthTrace::total_only()
-        };
+        let mut trace = scratch.take_trace(n, self.record_per_partition);
         let mut now = 0.0f64;
         let mut events = 0usize;
 
@@ -286,9 +304,11 @@ impl SimEngine {
             .map(|w| w.phases.iter().map(|ph| PhaseInfo::of(ph, &self.accel, w.cores)).collect())
             .collect();
 
-        let mut stepper = FluidStepper::new(peak, n, StepTiming::Offline);
-        let mut slots = OfflineSlots { workloads, infos: &infos, states };
-        while slots.states.iter().any(|s| !s.done()) {
+        let unfinished = states.iter().filter(|s| !s.done()).count();
+        let mut stepper =
+            FluidStepper::from_scratch(peak, n, StepTiming::Offline, std::mem::take(scratch));
+        let mut slots = OfflineSlots { workloads, infos: &infos, states, unfinished };
+        while slots.unfinished > 0 {
             events += 1;
             if events > self.max_events {
                 return Err(Error::SimInvariant(format!(
@@ -298,6 +318,7 @@ impl SimEngine {
             }
             now = stepper.step(now, &mut slots, &mut trace)?;
         }
+        *scratch = stepper.into_scratch();
         let states = slots.states;
 
         let finish_times: Vec<Seconds> = states
@@ -332,6 +353,19 @@ impl SimEngine {
         partition_cores: &[usize],
         source: &mut dyn WorkSource,
     ) -> Result<DynOutcome> {
+        self.run_dynamic_with_scratch(partition_cores, source, &mut StepScratch::new())
+    }
+
+    /// [`Self::run_dynamic`] on caller-owned stepper buffers — the
+    /// adaptive/multi-tenant epoch loops and the fleet window loop run
+    /// one engine per epoch, so recycling the scratch (and its trace
+    /// pool) across epochs removes every per-epoch allocation.
+    pub(crate) fn run_dynamic_with_scratch(
+        &self,
+        partition_cores: &[usize],
+        source: &mut dyn WorkSource,
+        scratch: &mut StepScratch,
+    ) -> Result<DynOutcome> {
         let n = partition_cores.len();
         if n == 0 {
             return Err(Error::InvalidConfig("no partitions".into()));
@@ -345,11 +379,7 @@ impl SimEngine {
         }
 
         let peak = self.accel.mem_bw.0;
-        let mut trace = if self.record_per_partition {
-            BandwidthTrace::new(n)
-        } else {
-            BandwidthTrace::total_only()
-        };
+        let mut trace = scratch.take_trace(n, self.record_per_partition);
         let mut sl = ServingSlots {
             running: (0..n).map(|_| None).collect(),
             cache: Vec::new(),
@@ -358,18 +388,25 @@ impl SimEngine {
             jobs: Vec::new(),
             moved_bytes: 0.0,
             done_flops: 0.0,
+            active: 0,
+            finished: 0,
         };
         let mut declared_bytes = 0.0f64;
         let mut declared_flops = 0.0f64;
         let mut now = 0.0f64;
         let mut events = 0usize;
 
-        let mut stepper = FluidStepper::new(peak, n, StepTiming::Serving);
+        let mut stepper =
+            FluidStepper::from_scratch(peak, n, StepTiming::Serving, std::mem::take(scratch));
 
         loop {
-            // Offer work to every idle partition (a source may hand back a
-            // zero-phase job, which completes instantly — keep polling).
-            for i in 0..n {
+            // Offer work to every idle partition that could have changed
+            // state since the last event — before the first step that is
+            // all of them, afterwards exactly the stepper's changed set
+            // (completions and expired sleeps), in ascending slot order
+            // like the reference full scan. A source may hand back a
+            // zero-phase job, which completes instantly — keep polling.
+            for &i in stepper.changed() {
                 while sl.running[i].is_none() && !sl.done[i] && sl.idle_until[i] <= now {
                     events += 1;
                     if events > self.max_events {
@@ -422,6 +459,7 @@ impl SimEngine {
                                     bytes,
                                     flops,
                                 });
+                                sl.active += 1;
                             }
                         }
                         DynNext::IdleUntil(t) => {
@@ -433,12 +471,15 @@ impl SimEngine {
                             }
                             sl.idle_until[i] = t;
                         }
-                        DynNext::Finished => sl.done[i] = true,
+                        DynNext::Finished => {
+                            sl.done[i] = true;
+                            sl.finished += 1;
+                        }
                     }
                 }
             }
 
-            if sl.running.iter().all(|r| r.is_none()) && sl.done.iter().all(|&d| d) {
+            if sl.active == 0 && sl.finished == n {
                 break;
             }
 
@@ -452,6 +493,7 @@ impl SimEngine {
 
             now = stepper.step(now, &mut sl, &mut trace)?;
         }
+        *scratch = stepper.into_scratch();
 
         let makespan = Seconds(sl.jobs.iter().map(|j| j.finished_at).fold(0.0, f64::max));
         let outcome = DynOutcome {
@@ -583,9 +625,13 @@ impl DynOutcome {
     }
 }
 
-#[cfg(test)]
+// The pre-optimization engine, kept verbatim as the bit-exactness
+// oracle. Compiled into the library (not just tests) so the
+// `e2e_stepper_hotpath` bench can race the optimized stepper against
+// it; hidden from docs because it is an oracle, not API.
+#[doc(hidden)]
 #[path = "engine_reference.rs"]
-mod reference;
+pub mod reference;
 
 #[cfg(test)]
 mod tests {

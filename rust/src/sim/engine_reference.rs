@@ -7,15 +7,18 @@
 //! drive both the live engine and these references over the same
 //! scenario battery and assert **bit-identical** outcomes — makespans,
 //! finish times, conservation totals, every trace segment and every job
-//! record — so the refactor provably changed nothing. Test-only code:
-//! compiled out of every non-test build.
+//! record — so the refactor provably changed nothing. The reference
+//! runners are compiled into the library (hidden from docs) so the
+//! `e2e_stepper_hotpath` bench can race the optimized stepper against
+//! them; everything else here is test-only.
 
 use super::super::memory::max_min_allocate_into;
 use super::super::step::{phase_rate, PhaseInfo};
 use super::*;
 
 /// Verbatim pre-refactor `SimEngine::run`.
-pub(super) fn run_reference(engine: &SimEngine, workloads: &[Workload]) -> Result<SimOutcome> {
+#[doc(hidden)]
+pub fn run_reference(engine: &SimEngine, workloads: &[Workload]) -> Result<SimOutcome> {
     if workloads.is_empty() {
         return Err(Error::InvalidConfig("no workloads".into()));
     }
@@ -159,7 +162,8 @@ pub(super) fn run_reference(engine: &SimEngine, workloads: &[Workload]) -> Resul
 }
 
 /// Verbatim pre-refactor `SimEngine::run_dynamic`.
-pub(super) fn run_dynamic_reference(
+#[doc(hidden)]
+pub fn run_dynamic_reference(
     engine: &SimEngine,
     partition_cores: &[usize],
     source: &mut dyn WorkSource,
@@ -635,5 +639,137 @@ mod differential {
         ];
         assert!(run_reference(&engine, &over).is_err());
         assert!(engine.run(&over).is_err());
+    }
+
+    /// Deterministic large offline battery: 48 one-core partitions mixing
+    /// start delays that collide in groups (equal wake deadlines in the
+    /// calendar), zero-step programs, instantaneous phases (zero-dt
+    /// events from infinite rates) and pure copies — the shapes that
+    /// stress the wake calendar and the dirty-slot bookkeeping hardest.
+    fn stress_offline_battery() -> Vec<Workload> {
+        let mut ws = Vec::new();
+        for i in 0..48usize {
+            let w = match i % 6 {
+                0 => Workload::new(
+                    format!("mix{i}"),
+                    1,
+                    vec![
+                        phase((i % 5) as f64 * 0.5, ((i * 29) % 97) as f64 + 1.0),
+                        phase(1.0 + (i % 3) as f64, ((i * 13) % 41) as f64),
+                    ],
+                    2 + i % 3,
+                )
+                .with_start_phase(i % 2),
+                1 => Workload::new(format!("copy{i}"), 1, vec![phase(0.0, 60.0 + i as f64)], 1),
+                2 => Workload::new(
+                    format!("instant{i}"),
+                    1,
+                    vec![phase(0.0, 0.0), phase(0.7, 9.0)],
+                    2,
+                ),
+                3 => Workload::new(format!("empty{i}"), 1, vec![], 1),
+                // Delays depend only on i / 4, so neighbouring slots
+                // become ready at exactly the same instant.
+                4 => Workload::new(format!("late{i}"), 1, vec![phase(2.0, 30.0)], 1)
+                    .with_start_delay(Seconds(((i / 4) % 3 + 1) as f64)),
+                _ => Workload::new(format!("cpu{i}"), 1, vec![phase(8.0, 1.0)], 1),
+            };
+            ws.push(w);
+        }
+        ws
+    }
+
+    #[test]
+    fn stress_offline_calendar_path_is_byte_identical() {
+        let mut accel = toy();
+        accel.cores = 64;
+        // One scratch across every run — later runs must be unaffected by
+        // whatever slot state, heap entries or pooled traces earlier runs
+        // left behind.
+        let mut scratch = StepScratch::new();
+        for per_partition in [false, true] {
+            let engine = if per_partition {
+                SimEngine::new(&accel).with_partition_traces()
+            } else {
+                SimEngine::new(&accel)
+            };
+            let ws = stress_offline_battery();
+            let new = engine.run_with_scratch(&ws, &mut scratch).unwrap();
+            let old = run_reference(&engine, &ws).unwrap();
+            assert_sim_identical(&new, &old);
+        }
+    }
+
+    /// 40-partition serving battery with synchronized release groups —
+    /// release times depend only on `p % 5`, so eight partitions report
+    /// *bit-equal* wake deadlines at once, driving the highest-index tie
+    /// rule — plus instant jobs (zero-dt events) and partitions that
+    /// finish on their very first poll.
+    fn stress_dynamic_battery() -> Vec<Vec<(f64, Arc<Vec<Phase>>)>> {
+        let light = Arc::new(vec![phase(0.5, 12.0)]);
+        let heavy = Arc::new(vec![phase(1.0, 150.0), phase(3.0, 4.0)]);
+        let instant = Arc::new(vec![phase(0.0, 0.0)]);
+        let empty: Arc<Vec<Phase>> = Arc::new(vec![]);
+        let mut feed = Vec::new();
+        for p in 0..40usize {
+            let q = match p % 5 {
+                0 => vec![(1.0, light.clone()), (5.0, heavy.clone())],
+                1 => vec![(1.0, heavy.clone()), (1.0, instant.clone())],
+                2 => vec![(0.0, instant.clone()), (2.5, light.clone())],
+                3 => vec![],
+                _ => vec![
+                    (0.25 * (p as f64), light.clone()),
+                    (0.25 * (p as f64) + 0.125, empty.clone()),
+                ],
+            };
+            feed.push(q);
+        }
+        feed
+    }
+
+    #[test]
+    fn stress_dynamic_calendar_path_is_byte_identical() {
+        let mut accel = toy();
+        accel.cores = 64;
+        let mut scratch = StepScratch::new();
+        for per_partition in [false, true] {
+            let engine = if per_partition {
+                SimEngine::new(&accel).with_partition_traces()
+            } else {
+                SimEngine::new(&accel)
+            };
+            let feed = stress_dynamic_battery();
+            let cores = vec![1usize; feed.len()];
+            let mut src_new = Script::new(feed.clone());
+            let mut src_old = Script::new(feed);
+            let new = engine.run_dynamic_with_scratch(&cores, &mut src_new, &mut scratch).unwrap();
+            let old = run_dynamic_reference(&engine, &cores, &mut src_old).unwrap();
+            assert_dyn_identical(&new, &old);
+        }
+    }
+
+    /// The scratch is mode-agnostic: alternating offline and serving runs
+    /// through one `StepScratch` (as the serving epoch loops do) must
+    /// leave every outcome byte-identical to fresh-allocation runs.
+    #[test]
+    fn one_scratch_alternates_between_offline_and_serving_modes() {
+        let engine = SimEngine::new(&toy());
+        let mut scratch = StepScratch::new();
+        for _ in 0..3 {
+            for ws in offline_scenarios() {
+                let new = engine.run_with_scratch(&ws, &mut scratch).unwrap();
+                let old = run_reference(&engine, &ws).unwrap();
+                assert_sim_identical(&new, &old);
+            }
+            for feed in dynamic_scenarios() {
+                let cores = vec![1usize; feed.len()];
+                let mut src_new = Script::new(feed.clone());
+                let mut src_old = Script::new(feed);
+                let new =
+                    engine.run_dynamic_with_scratch(&cores, &mut src_new, &mut scratch).unwrap();
+                let old = run_dynamic_reference(&engine, &cores, &mut src_old).unwrap();
+                assert_dyn_identical(&new, &old);
+            }
+        }
     }
 }

@@ -14,6 +14,7 @@
 //! place only — the `step` module's fluid stepper — and both engine
 //! modes (`SimEngine::run`, `SimEngine::run_dynamic`) drive it.
 
+mod calendar;
 mod dram;
 mod engine;
 mod memory;
@@ -22,7 +23,12 @@ mod trace;
 mod workload;
 
 pub use dram::{DramModel, Footprint};
+// The pre-refactor engine bodies double as the bit-exactness oracle for
+// the stepper benchmarks; hidden from docs (oracle, not API).
+#[doc(hidden)]
+pub use engine::reference;
 pub use engine::{DynJob, DynNext, DynOutcome, JobRecord, SimEngine, SimOutcome, WorkSource};
 pub use memory::max_min_allocate;
+pub(crate) use step::StepScratch;
 pub use trace::BandwidthTrace;
 pub use workload::{PartitionState, Workload};

@@ -9,7 +9,35 @@
 //! This module is the only copy of that physics: the engines are thin
 //! drivers that present their job state through [`StepSlots`] and apply
 //! the per-slot progress the stepper hands back.
+//!
+//! # The hot path
+//!
+//! The stepper is bit-for-bit equivalent to the reference full-scan
+//! engine (`engine_reference.rs` pins this differentially) but does
+//! per-event work proportional to the slots that *changed*, not the
+//! slots that exist:
+//!
+//! * **Structure-of-arrays state.** Per-slot kind/info/remaining/rate
+//!   live in parallel `Vec`s inside [`StepScratch`], so the advance and
+//!   allocate loops stream cache-linearly instead of chasing enums.
+//! * **Dirty-slot re-characterization.** [`StepSlots::activity`] takes
+//!   `&self` — drivers cannot mutate a slot the stepper didn't hand
+//!   back — so only slots that completed a phase or woke from a sleep
+//!   ([`FluidStepper::changed`]) are re-queried each event.
+//! * **A next-wake calendar.** Sleep deadlines are stable absolute
+//!   times, so they sit in a lazy-invalidation binary heap
+//!   ([`super::calendar::WakeCalendar`]) and dt selection over them is
+//!   O(log n). Run completions are *not* in the calendar: their
+//!   predicted times move whenever the allocation changes, and the
+//!   reference recomputes them from `remaining/rate` every event, so
+//!   the stepper scans the (dense, ascending) running set instead —
+//!   that scan is also what pins the floating-point fold orders.
+//! * **Allocation reuse.** `max_min_allocate_into` is a pure function
+//!   of the demand vector; when no dirty slot changed its demand
+//!   bit-pattern the previous allocation (and every cached rate) is
+//!   reused verbatim.
 
+use super::calendar::WakeCalendar;
 use super::memory::max_min_allocate_into;
 use super::trace::BandwidthTrace;
 use crate::config::AcceleratorConfig;
@@ -111,45 +139,171 @@ pub(crate) enum StepTiming {
 }
 
 /// The driver's view of its job state, one slot per partition. The
-/// stepper queries [`activity`](Self::activity) for every slot at the
-/// start of the event and calls [`apply`](Self::apply) for every running
-/// slot once the interval is chosen.
+/// stepper queries [`activity`](Self::activity) for the slots listed in
+/// [`FluidStepper::changed`] at the start of the event and calls
+/// [`apply`](Self::apply) for every running slot once the interval is
+/// chosen. `activity` must stay a pure read: the stepper trusts that a
+/// slot it was not told about (via `changed`) reports the same activity
+/// it did last event.
 pub(crate) trait StepSlots {
     fn activity(&self, slot: usize, now: f64) -> Activity<'_>;
     fn apply(&mut self, slot: usize, adv: &SlotAdvance, t1: f64);
 }
 
-/// Per-slot scratch cached between the characterize and advance passes
-/// of one event (the state cannot change in between).
-enum Cached {
-    Run { info: PhaseInfo, remaining: f64, rate: f64 },
-    Sleep { until: f64 },
+/// Cached kind of each slot between events (the SoA tag for the last
+/// [`Activity`] the slot reported).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotKind {
     Off,
+    Run,
+    Sleep,
 }
 
-/// The fluid stepper: owns the hot-loop scratch buffers so a full run
-/// performs no per-event allocation.
-pub(crate) struct FluidStepper {
-    peak: f64,
-    timing: StepTiming,
+/// Every buffer the stepper needs, split out from [`FluidStepper`] so
+/// the epoch/window loops (`serve::simulator`, `serve::tenant`) can
+/// carry one allocation through thousands of engine runs instead of
+/// reallocating per epoch — see
+/// [`super::engine::SimEngine::run_dynamic_with_scratch`].
+pub(crate) struct StepScratch {
+    kind: Vec<SlotKind>,
+    /// Characterization of the slot's current phase (valid when `Run`).
+    info: Vec<PhaseInfo>,
+    /// Remaining fraction of the slot's current phase (valid when `Run`).
+    remaining: Vec<f64>,
+    rate: Vec<f64>,
     demand: Vec<f64>,
     bw_used: Vec<f64>,
     alloc: Vec<f64>,
+    /// `max_min_allocate_into`'s sort scratch.
     order: Vec<usize>,
-    cache: Vec<Cached>,
+    /// Slots currently `Run`, ascending — the per-event working set.
+    running: Vec<usize>,
+    /// Slots whose activity may have changed since the last
+    /// characterize pass; rebuilt by every step, consumed by the next.
+    dirty: Vec<usize>,
+    /// Dirty slots that (re-)entered `Run` this event and need their
+    /// rate recomputed even when the allocation itself was reusable.
+    fresh_run: Vec<usize>,
+    /// Wake deadlines popped while resolving a serving-mode dt tie.
+    ties: Vec<(f64, usize)>,
+    calendar: WakeCalendar,
+    /// Recycled trace buffers ([`Self::take_trace`]).
+    traces: Vec<BandwidthTrace>,
+}
+
+impl Default for StepScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StepScratch {
+    pub fn new() -> Self {
+        Self {
+            kind: Vec::new(),
+            info: Vec::new(),
+            remaining: Vec::new(),
+            rate: Vec::new(),
+            demand: Vec::new(),
+            bw_used: Vec::new(),
+            alloc: Vec::new(),
+            order: Vec::new(),
+            running: Vec::new(),
+            dirty: Vec::new(),
+            fresh_run: Vec::new(),
+            ties: Vec::new(),
+            calendar: WakeCalendar::new(),
+            traces: Vec::new(),
+        }
+    }
+
+    /// Re-shape every buffer for a run over `n` slots. All slots start
+    /// `Off` with zero demand and everything marked dirty, exactly the
+    /// state the first event's full characterize pass expects.
+    fn reset(&mut self, n: usize) {
+        self.kind.clear();
+        self.kind.resize(n, SlotKind::Off);
+        self.info.clear();
+        self.info.resize(n, PhaseInfo { full_rate: 0.0, demand: 0.0, bytes: 0.0, flops: 0.0 });
+        self.remaining.clear();
+        self.remaining.resize(n, 0.0);
+        self.rate.clear();
+        self.rate.resize(n, 0.0);
+        self.demand.clear();
+        self.demand.resize(n, 0.0);
+        self.bw_used.clear();
+        self.bw_used.resize(n, 0.0);
+        self.alloc.clear();
+        self.alloc.resize(n, 0.0);
+        self.order.clear();
+        self.running.clear();
+        self.dirty.clear();
+        self.dirty.extend(0..n);
+        self.fresh_run.clear();
+        self.ties.clear();
+        self.calendar.reset(n);
+    }
+
+    /// Hand out a trace buffer, recycled from the pool when available.
+    pub fn take_trace(&mut self, partitions: usize, per_partition: bool) -> BandwidthTrace {
+        let mut tr = self.traces.pop().unwrap_or_else(BandwidthTrace::total_only);
+        tr.reset(partitions, per_partition);
+        tr
+    }
+
+    /// Return a trace buffer to the pool once its segments are consumed
+    /// (e.g. stitched into a whole-run trace by `append_clipped`).
+    pub fn recycle_trace(&mut self, trace: BandwidthTrace) {
+        self.traces.push(trace);
+    }
+}
+
+/// Insert into a sorted, deduplicated index list.
+fn insert_sorted(v: &mut Vec<usize>, x: usize) {
+    if let Err(pos) = v.binary_search(&x) {
+        v.insert(pos, x);
+    }
+}
+
+/// Remove from a sorted, deduplicated index list.
+fn remove_sorted(v: &mut Vec<usize>, x: usize) {
+    if let Ok(pos) = v.binary_search(&x) {
+        v.remove(pos);
+    }
+}
+
+/// The fluid stepper: owns the hot-loop scratch so a full run performs
+/// no per-event allocation (staticcheck rule `R7` audits this module).
+pub(crate) struct FluidStepper {
+    peak: f64,
+    timing: StepTiming,
+    s: StepScratch,
 }
 
 impl FluidStepper {
-    pub fn new(peak: f64, slots: usize, timing: StepTiming) -> Self {
-        Self {
-            peak,
-            timing,
-            demand: vec![0.0; slots],
-            bw_used: vec![0.0; slots],
-            alloc: Vec::with_capacity(slots),
-            order: Vec::with_capacity(slots),
-            cache: (0..slots).map(|_| Cached::Off).collect(),
-        }
+    /// Build a stepper on recycled buffers; `into_scratch` hands them
+    /// back so consecutive engine runs share one allocation.
+    pub fn from_scratch(
+        peak: f64,
+        slots: usize,
+        timing: StepTiming,
+        mut scratch: StepScratch,
+    ) -> Self {
+        scratch.reset(slots);
+        Self { peak, timing, s: scratch }
+    }
+
+    /// Recover the scratch buffers for the next run.
+    pub fn into_scratch(self) -> StepScratch {
+        self.s
+    }
+
+    /// Slots whose activity may have changed across the last step —
+    /// exactly the set a driver needs to re-poll before the next event
+    /// (phase completions and expired sleeps), ascending. Before the
+    /// first step this is every slot.
+    pub fn changed(&self) -> &[usize] {
+        &self.s.dirty
     }
 
     /// Advance the simulation by one event: characterize → allocate →
@@ -162,99 +316,213 @@ impl FluidStepper {
         slots: &mut S,
         trace: &mut BandwidthTrace,
     ) -> Result<f64> {
-        let n = self.cache.len();
-
-        // Characterize each running phase (drivers cache PhaseInfo per
-        // program, so this is a table lookup).
-        for i in 0..n {
+        // Re-characterize the slots that changed since the previous
+        // event (every slot, on the first). Demands are compared by bit
+        // pattern: `max_min_allocate_into` is pure, so an unchanged
+        // demand vector means the previous allocation is exact.
+        let mut demands_changed = false;
+        self.s.fresh_run.clear();
+        for &i in &self.s.dirty {
             match slots.activity(i, now) {
                 Activity::Run { info, remaining_frac } => {
-                    self.demand[i] = info.demand;
-                    self.cache[i] =
-                        Cached::Run { info: *info, remaining: remaining_frac, rate: 0.0 };
+                    match self.s.kind[i] {
+                        SlotKind::Sleep => {
+                            self.s.calendar.invalidate(i);
+                            insert_sorted(&mut self.s.running, i);
+                        }
+                        SlotKind::Off => insert_sorted(&mut self.s.running, i),
+                        SlotKind::Run => {}
+                    }
+                    self.s.kind[i] = SlotKind::Run;
+                    self.s.info[i] = *info;
+                    self.s.remaining[i] = remaining_frac;
+                    if self.s.demand[i].to_bits() != info.demand.to_bits() {
+                        self.s.demand[i] = info.demand;
+                        demands_changed = true;
+                    }
+                    self.s.fresh_run.push(i);
                 }
                 Activity::SleepUntil(until) => {
                     debug_assert!(until > now, "sleep into the past: {until} <= {now}");
-                    self.demand[i] = 0.0;
-                    self.cache[i] = Cached::Sleep { until };
+                    if self.s.kind[i] == SlotKind::Run {
+                        remove_sorted(&mut self.s.running, i);
+                    }
+                    self.s.kind[i] = SlotKind::Sleep;
+                    self.s.calendar.schedule(i, until);
+                    self.s.rate[i] = 0.0;
+                    self.s.bw_used[i] = 0.0;
+                    if self.s.demand[i].to_bits() != 0 {
+                        self.s.demand[i] = 0.0;
+                        demands_changed = true;
+                    }
                 }
                 Activity::Off => {
-                    self.demand[i] = 0.0;
-                    self.cache[i] = Cached::Off;
+                    match self.s.kind[i] {
+                        SlotKind::Run => remove_sorted(&mut self.s.running, i),
+                        SlotKind::Sleep => self.s.calendar.invalidate(i),
+                        SlotKind::Off => {}
+                    }
+                    self.s.kind[i] = SlotKind::Off;
+                    self.s.rate[i] = 0.0;
+                    self.s.bw_used[i] = 0.0;
+                    if self.s.demand[i].to_bits() != 0 {
+                        self.s.demand[i] = 0.0;
+                        demands_changed = true;
+                    }
                 }
             }
         }
+        self.s.dirty.clear();
 
-        max_min_allocate_into(self.peak, &self.demand, &mut self.order, &mut self.alloc);
-
-        // Next event: earliest phase completion or sleep wake-up. Track
-        // the binding wake-up's absolute time so serving mode can land on
-        // it exactly.
-        let mut next_dt = f64::INFINITY;
-        let mut wake_at: Option<f64> = None;
-        for i in 0..n {
-            match &mut self.cache[i] {
-                Cached::Run { info, remaining, rate } => {
-                    let r = phase_rate(info, self.alloc[i]);
-                    *rate = r;
-                    self.bw_used[i] = if info.bytes > 0.0 { r * info.bytes } else { 0.0 };
-                    debug_assert!(
-                        self.bw_used[i] <= self.alloc[i] * (1.0 + 1e-9) || self.demand[i] == 0.0
-                    );
-                    if r.is_infinite() {
-                        // Instantaneous phase (no flops, no bytes): complete now.
-                        next_dt = 0.0;
-                    } else if r > 0.0 {
-                        next_dt = next_dt.min(*remaining / r);
-                    }
-                }
-                Cached::Sleep { until } => {
-                    self.bw_used[i] = 0.0;
-                    let dt = *until - now;
-                    if dt <= next_dt {
-                        next_dt = dt;
-                        wake_at = Some(*until);
-                    }
-                }
-                Cached::Off => self.bw_used[i] = 0.0,
+        // Allocate (only if any demand bit changed) and refresh rates.
+        // A changed allocation can move *every* running slot's rate; an
+        // unchanged one only requires rates for slots that just entered
+        // the running set.
+        if demands_changed {
+            max_min_allocate_into(self.peak, &self.s.demand, &mut self.s.order, &mut self.s.alloc);
+            for &i in &self.s.running {
+                let r = phase_rate(&self.s.info[i], self.s.alloc[i]);
+                self.s.rate[i] = r;
+                self.s.bw_used[i] =
+                    if self.s.info[i].bytes > 0.0 { r * self.s.info[i].bytes } else { 0.0 };
+                debug_assert!(
+                    self.s.bw_used[i] <= self.s.alloc[i] * (1.0 + 1e-9) || self.s.demand[i] == 0.0
+                );
+            }
+        } else {
+            for &i in &self.s.fresh_run {
+                let r = phase_rate(&self.s.info[i], self.s.alloc[i]);
+                self.s.rate[i] = r;
+                self.s.bw_used[i] =
+                    if self.s.info[i].bytes > 0.0 { r * self.s.info[i].bytes } else { 0.0 };
+                debug_assert!(
+                    self.s.bw_used[i] <= self.s.alloc[i] * (1.0 + 1e-9) || self.s.demand[i] == 0.0
+                );
             }
         }
-        if next_dt.is_infinite() {
+
+        // Earliest phase completion over the running set, plus the total
+        // bandwidth for the trace segment. Summing only running slots is
+        // bit-identical to the reference's full-vector sum: idle entries
+        // are exactly +0.0 and `x + 0.0 == x` for the non-negative
+        // partial sums this fold produces.
+        let mut run_min = f64::INFINITY;
+        let mut total_bw = 0.0f64;
+        for &i in &self.s.running {
+            let r = self.s.rate[i];
+            if r.is_infinite() {
+                // Instantaneous phase (no flops, no bytes): complete now.
+                run_min = 0.0;
+            } else if r > 0.0 {
+                run_min = run_min.min(self.s.remaining[i] / r);
+            }
+            total_bw += self.s.bw_used[i];
+        }
+
+        // Earliest wake deadline. `dt` per sleep is monotone in the
+        // absolute deadline, so the calendar minimum is the sleep-side
+        // minimum of the reference scan.
+        let ds = match self.s.calendar.peek() {
+            Some((w, _)) => w - now,
+            None => f64::INFINITY,
+        };
+        let m = run_min.min(ds);
+        if m.is_infinite() {
             return Err(Error::SimInvariant(
                 "fluid deadlock: no runnable phase and no pending wake-up".into(),
             ));
         }
 
         let (t1, dt) = match self.timing {
-            StepTiming::Offline => (now + next_dt, next_dt),
+            StepTiming::Offline => (now + m, m),
             StepTiming::Serving => {
-                let t1 = match wake_at {
-                    Some(w) if w - now <= next_dt => w,
-                    _ => now + next_dt,
-                };
-                (t1, t1 - now)
+                if ds <= run_min {
+                    // A wake is binding. The reference scan lands on the
+                    // *highest-index* sleeping slot whose dt ties the
+                    // minimum, so gather every tied deadline and let the
+                    // highest slot choose the landing time.
+                    self.s.ties.clear();
+                    while let Some((w, slot)) = self.s.calendar.peek() {
+                        if w - now == ds {
+                            self.s.calendar.pop();
+                            self.s.ties.push((w, slot));
+                        } else {
+                            break;
+                        }
+                    }
+                    let mut t1 = now + m;
+                    let mut best = 0usize;
+                    let mut have = false;
+                    for &(w, slot) in &self.s.ties {
+                        if !have || slot >= best {
+                            t1 = w;
+                            best = slot;
+                            have = true;
+                        }
+                    }
+                    // Tied sleeps landing at or before t1 wake now; later
+                    // ones (equal dt, later absolute deadline) go back to
+                    // sleep untouched.
+                    for &(w, slot) in &self.s.ties {
+                        if w <= t1 {
+                            self.s.dirty.push(slot);
+                        } else {
+                            self.s.calendar.schedule(slot, w);
+                        }
+                    }
+                    (t1, t1 - now)
+                } else {
+                    let t1 = now + run_min;
+                    (t1, t1 - now)
+                }
             }
         };
-        trace.record(now, t1, &self.bw_used);
+
+        // Wake everything due by t1 — including sleeps whose dt rounded
+        // above m but whose absolute deadline lands inside the interval:
+        // the drivers' own `until > now` tests at t1 see those slots as
+        // runnable, so they must be re-queried next event.
+        while let Some((w, slot)) = self.s.calendar.peek() {
+            if w <= t1 {
+                self.s.calendar.pop();
+                self.s.dirty.push(slot);
+            } else {
+                break;
+            }
+        }
+
+        trace.record_total(now, t1, total_bw, &self.s.bw_used);
 
         // Advance every running slot by dt, completing phases that hit
         // zero; the driver owns all bookkeeping beyond the current phase.
-        for i in 0..n {
-            let Cached::Run { info, remaining, rate } = &self.cache[i] else { continue };
+        for &i in &self.s.running {
+            let rate = self.s.rate[i];
+            let remaining = self.s.remaining[i];
             let progressed = if rate.is_infinite() {
-                *remaining
+                remaining
             } else {
-                (rate * dt).min(*remaining)
+                (rate * dt).min(remaining)
             };
-            let after = *remaining - progressed;
+            let after = remaining - progressed;
             let adv = SlotAdvance {
-                bytes: progressed * info.bytes,
-                flops: progressed * info.flops,
+                bytes: progressed * self.s.info[i].bytes,
+                flops: progressed * self.s.info[i].flops,
                 remaining_frac: after,
                 completed: after <= PHASE_DONE_EPS,
             };
             slots.apply(i, &adv, t1);
+            if adv.completed {
+                self.s.dirty.push(i);
+            } else {
+                self.s.remaining[i] = after;
+            }
         }
+
+        // Drivers poll `changed()` ascending; wake-ups surfaced in heap
+        // order, so restore index order (dedup is insurance — no slot
+        // can both wake and complete in one event).
+        self.s.dirty.sort_unstable();
+        self.s.dirty.dedup();
 
         Ok(t1)
     }

@@ -34,10 +34,19 @@ impl BandwidthTrace {
 
     /// Record one inter-event interval.
     pub fn record(&mut self, t0: f64, t1: f64, per_partition_bw: &[f64]) {
+        let total: f64 = per_partition_bw.iter().sum();
+        self.record_total(t0, t1, total, per_partition_bw);
+    }
+
+    /// Record one inter-event interval with the total precomputed by the
+    /// caller. The stepper folds the total over its running set only;
+    /// that is bit-identical to summing the full vector because idle
+    /// entries are exactly `+0.0` and `x + 0.0 == x` for the
+    /// non-negative partial sums bandwidth produces.
+    pub(crate) fn record_total(&mut self, t0: f64, t1: f64, total: f64, per_partition_bw: &[f64]) {
         if t1 <= t0 {
             return;
         }
-        let total: f64 = per_partition_bw.iter().sum();
         self.total.push(t0, t1, total);
         if !self.per_partition.is_empty() {
             debug_assert_eq!(per_partition_bw.len(), self.per_partition.len());
@@ -45,6 +54,31 @@ impl BandwidthTrace {
                 series.push(t0, t1, bw);
             }
         }
+    }
+
+    /// Drop every recorded segment, keeping the allocations — the
+    /// epoch/window loops clear and refill one trace rather than
+    /// constructing a new one per engine run.
+    pub fn clear(&mut self) {
+        self.total.clear();
+        for s in &mut self.per_partition {
+            s.clear();
+        }
+    }
+
+    /// Clear and re-shape for reuse: `partitions` per-partition series
+    /// when the split is recorded, none otherwise (the aggregate-only
+    /// hot-loop default).
+    pub(crate) fn reset(&mut self, partitions: usize, per_partition: bool) {
+        let want = if per_partition { partitions } else { 0 };
+        self.per_partition.truncate(want);
+        for s in &mut self.per_partition {
+            s.clear();
+        }
+        while self.per_partition.len() < want {
+            self.per_partition.push(StepSeries::new());
+        }
+        self.total.clear();
     }
 
     /// Total bytes moved (∫ total bw dt).

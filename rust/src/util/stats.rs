@@ -273,6 +273,13 @@ impl StepSeries {
         self.values.is_empty()
     }
 
+    /// Drop every segment, keeping the allocations (buffer reuse across
+    /// simulation epochs).
+    pub fn clear(&mut self) {
+        self.times.clear();
+        self.values.clear();
+    }
+
     pub fn start(&self) -> f64 {
         *self.times.first().unwrap_or(&0.0)
     }

@@ -119,6 +119,40 @@ fn r6_line_width_applies_everywhere_even_tests() {
 }
 
 #[test]
+fn r7_stepper_allocations_fire_outside_constructor_fns() {
+    let bad = "fn step() {\n    let v: Vec<u32> = xs.collect();\n    let w = vec![0; 4];\n}\n";
+    for hot in ["src/sim/step.rs", "src/sim/calendar.rs"] {
+        let a = check(&[(hot, bad)]);
+        assert_eq!(rules_fired(&a), vec!["R7"], "{hot}");
+        assert_eq!(a.violations.len(), 2, "{hot}");
+    }
+    // The same text anywhere else is outside the hot-path scope.
+    let a = check(&[("src/sim/engine.rs", bad)]);
+    assert!(a.clean(), "{}", a.render());
+
+    // Constructors and reset/seeding helpers may allocate.
+    let ok = "impl S {\n\
+                  fn new() -> S {\n        S { v: Vec::new() }\n    }\n\
+                  fn reset(&mut self) {\n        self.v = vec![0; 4];\n    }\n\
+                  fn from_scratch(t: T) -> S {\n        t.items.collect()\n    }\n\
+                  fn with_traces(n: usize) -> S {\n        S { v: Vec::new() }\n    }\n\
+              }\n";
+    let a = check(&[("src/sim/step.rs", ok)]);
+    assert!(a.clean(), "{}", a.render());
+
+    // Test modules inside the hot-path files are exempt.
+    let cfg = "#[cfg(test)]\nmod tests {\n    fn helper() -> Vec<u32> { Vec::new() }\n}\n";
+    let a = check(&[("src/sim/calendar.rs", cfg)]);
+    assert!(a.clean(), "{}", a.render());
+
+    // A reasoned allow silences, like every other rule.
+    let src = format!("fn step() {{ let v = vec![0; 4]; }} {MARK} allow(R7) -- fixture\n");
+    let a = check(&[("src/sim/step.rs", src.as_str())]);
+    assert!(a.clean(), "{}", a.render());
+    assert!(a.allows[0].used);
+}
+
+#[test]
 fn reasoned_allow_silences_and_is_inventoried() {
     let src = format!(
         "fn f() {{ x.unwrap(); }} {MARK} allow(R3) -- fixture justification\n"
@@ -184,7 +218,7 @@ fn unused_allows_are_reported_but_not_fatal() {
 #[test]
 fn registry_is_complete_and_deterministically_ordered() {
     let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
-    assert_eq!(ids, vec!["R0", "R1", "R2", "R3", "R4", "R5", "R6"]);
+    assert_eq!(ids, vec!["R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7"]);
     // Violations come back sorted by (file, line, rule).
     let a = check(&[
         ("src/sim/b.rs", "fn g() { x.unwrap(); }\nuse std::collections::HashMap;\n"),
