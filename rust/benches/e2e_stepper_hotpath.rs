@@ -86,7 +86,7 @@ fn feed() -> Vec<Vec<(f64, Arc<Vec<Phase>>)>> {
 fn main() {
     let mut accel = AcceleratorConfig::knl_7210();
     accel.cores = PARTITIONS;
-    accel.core_flops = FlopsPerS(1.0);
+    accel.core_flops_per_s = FlopsPerS(1.0);
     accel.mem_bw = BytesPerS(100.0);
     accel.conv_efficiency = 1.0;
     accel.elementwise_efficiency = 1.0;

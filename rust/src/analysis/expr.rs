@@ -1,0 +1,718 @@
+//! Precedence-aware expression reader over the lexer's code channel.
+//!
+//! The dimensional-analysis rules (R8/R9) need more shape than the line
+//! predicates in [`super::rules`]: `deadline_s + batch_timeout_ms` is a
+//! unit conflict, `format!("{}_ms", x)` is not. This module tokenizes a
+//! file's non-test code channel and reads it back as a forest of small
+//! expression trees — binary operators with Rust's precedence, calls,
+//! method/field chains, casts, closures — without attempting a full
+//! parse. Statement glue (`let`, `match`, `{}`, attributes) is skipped
+//! by a resynchronizing driver loop, so a construct the reader does not
+//! model degrades to "unknown", never to a false parse.
+//!
+//! The reader is deliberately lossy: anything it cannot shape becomes
+//! an opaque group whose unit inference is `Unknown`, and the rules in
+//! [`super::units_rule`] only fire when *both* operands of a conflict
+//! are positively known.
+
+/// Token classes the reader distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// Numeric literal (integer or float form, suffix included).
+    Num,
+    /// A string literal (contents already blanked by the lexer).
+    Str,
+    /// Any operator / punctuation, multi-char ops pre-joined.
+    Op,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// Three- then two-character operators, longest match first.
+const OPS3: [&str; 3] = ["..=", "<<=", ">>="];
+const OPS2: [&str; 19] = [
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>", "+=", "-=", "*=", "/=",
+    "%=", "^=", "|=", "..",
+];
+
+/// Tokenize the code channels of `(line_number, code)` pairs.
+pub fn tokenize(lines: &[(usize, &str)]) -> Vec<Token> {
+    let mut out = Vec::new();
+    for &(line, code) in lines {
+        let chars: Vec<char> = code.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if c.is_ascii_digit() {
+                i = lex_number(&chars, i, line, &mut out);
+            } else if c.is_ascii_alphabetic() || c == '_' {
+                let start = i;
+                while i < chars.len() && is_ident_char(chars[i]) {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                out.push(Token { kind: TokKind::Ident, text, line });
+            } else if c == '"' {
+                // The lexer blanked the contents; pair the quotes when
+                // the close sits on the same line, else run to EOL (a
+                // multi-line literal's other half arrives as its own
+                // stray Str token — a harmless opaque primary).
+                i += 1;
+                while i < chars.len() && chars[i] != '"' {
+                    i += 1;
+                }
+                i = (i + 1).min(chars.len());
+                out.push(Token { kind: TokKind::Str, text: String::new(), line });
+            } else if c == '\'' {
+                // Lifetime marker or a blanked char literal's quote;
+                // swallow the quote (plus a lifetime's identifier).
+                i += 1;
+                while i < chars.len() && is_ident_char(chars[i]) {
+                    i += 1;
+                }
+            } else if c == '#' {
+                // Attribute introducer (or stray raw-string hash).
+                out.push(Token { kind: TokKind::Op, text: "#".into(), line });
+                i += 1;
+            } else {
+                let rest: String = chars[i..].iter().take(3).collect();
+                let op = OPS3
+                    .iter()
+                    .find(|o| rest.starts_with(**o))
+                    .or_else(|| OPS2.iter().find(|o| rest.starts_with(**o)));
+                let text = match op {
+                    Some(o) => (*o).to_string(),
+                    None => c.to_string(),
+                };
+                i += text.chars().count();
+                out.push(Token { kind: TokKind::Op, text, line });
+            }
+        }
+    }
+    out
+}
+
+/// Scan one numeric literal starting at `chars[i]`; returns the index
+/// past it. Handles `0x..`, separators, `1.5`, `1e9`, `2.0f64`. A `.`
+/// is part of the number only when a digit follows (so `0..n` and
+/// `1.max(x)` keep their postfix meaning).
+fn lex_number(chars: &[char], mut i: usize, line: usize, out: &mut Vec<Token>) -> usize {
+    let start = i;
+    let radix_prefix = chars[i] == '0'
+        && matches!(chars.get(i + 1), Some('x') | Some('b') | Some('o'));
+    if radix_prefix {
+        i += 2;
+        while i < chars.len() && (is_ident_char(chars[i])) {
+            i += 1;
+        }
+    } else {
+        while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '_') {
+            i += 1;
+        }
+        if i + 1 < chars.len() && chars[i] == '.' && chars[i + 1].is_ascii_digit() {
+            i += 1;
+            while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                i += 1;
+            }
+        }
+        if i < chars.len() && (chars[i] == 'e' || chars[i] == 'E') {
+            let mut j = i + 1;
+            if matches!(chars.get(j), Some('+') | Some('-')) {
+                j += 1;
+            }
+            if chars.get(j).is_some_and(|c| c.is_ascii_digit()) {
+                i = j;
+                while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                    i += 1;
+                }
+            }
+        }
+        // Type suffix (f64, u32, ...).
+        while i < chars.len() && is_ident_char(chars[i]) {
+            i += 1;
+        }
+    }
+    let text: String = chars[start..i].iter().collect();
+    out.push(Token { kind: TokKind::Num, text, line });
+    i
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Binary operators the unit rules care about; everything else is
+/// `Other` (parsed for shape, inferred as `Unknown`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// `==`, `!=`, `<`, `>`, `<=`, `>=`.
+    Cmp,
+    /// `=`, `+=`, `-=` — value flows into the left-hand side.
+    Assign,
+    /// `name: expr` in struct literals / `let` type ascriptions.
+    Colon,
+    Other,
+}
+
+/// A (lossy) expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num { text: String, line: usize },
+    Str,
+    /// `a::b::c` (a lone identifier is a one-segment path).
+    Path { segs: Vec<String>, line: usize },
+    /// Prefix op, `?`, or parenthesized single expression.
+    Unary { inner: Box<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr>, line: usize },
+    Call { callee: Box<Expr>, args: Vec<Expr>, line: usize },
+    Method { recv: Box<Expr>, name: String, args: Vec<Expr>, line: usize },
+    Field { recv: Box<Expr>, name: String, line: usize },
+    Index { recv: Box<Expr>, index: Box<Expr> },
+    Cast { inner: Box<Expr> },
+    Closure { body: Box<Expr> },
+    /// Tuple/array literal or any opaque run; unit `Unknown`.
+    Group { items: Vec<Expr> },
+}
+
+impl Expr {
+    /// The path segments when this is a plain path callee.
+    pub fn path_segs(&self) -> Option<&[String]> {
+        match self {
+            Expr::Path { segs, .. } => Some(segs),
+            _ => None,
+        }
+    }
+}
+
+/// Identifiers that end an expression attempt (statement keywords). The
+/// driver skips them and resynchronizes on the next token.
+const KEYWORDS: [&str; 30] = [
+    "let", "mut", "fn", "pub", "use", "mod", "impl", "struct", "enum", "trait", "type", "const",
+    "static", "if", "else", "match", "for", "while", "loop", "return", "break", "continue", "in",
+    "move", "ref", "where", "unsafe", "dyn", "async", "await",
+];
+
+/// Parse every expression in the token stream, resynchronizing across
+/// statement glue. The result is a forest, not a single tree.
+pub fn parse_all(toks: &[Token]) -> Vec<Expr> {
+    let mut p = Parser { toks, pos: 0 };
+    let mut out = Vec::new();
+    while p.pos < p.toks.len() {
+        let start = p.pos;
+        if let Some(e) = p.assign() {
+            out.push(e);
+        }
+        if p.pos == start {
+            p.pos += 1;
+        }
+    }
+    out
+}
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn peek_at(&self, off: usize) -> Option<&Token> {
+        self.toks.get(self.pos + off)
+    }
+
+    fn at_op(&self, text: &str) -> bool {
+        self.peek().is_some_and(|t| t.kind == TokKind::Op && t.text == text)
+    }
+
+    fn line(&self) -> usize {
+        self.peek().map_or(0, |t| t.line)
+    }
+
+    fn bump(&mut self) {
+        self.pos += 1;
+    }
+
+    /// Assignment / type-ascription level (lowest precedence). For
+    /// `name: T = expr` the initializer is still unified against
+    /// `name`, so an annotated `let` checks like a bare one.
+    fn assign(&mut self) -> Option<Expr> {
+        let lhs = self.range()?;
+        if self.at_op(":") {
+            let line = self.line();
+            self.bump();
+            let ann = self.range().unwrap_or(Expr::Group { items: Vec::new() });
+            let mut node = Expr::Binary {
+                op: BinOp::Colon,
+                lhs: Box::new(lhs),
+                rhs: Box::new(ann),
+                line,
+            };
+            if self.at_op("=") {
+                let line = self.line();
+                self.bump();
+                let rhs = self.assign().unwrap_or(Expr::Group { items: Vec::new() });
+                node = Expr::Binary {
+                    op: BinOp::Assign,
+                    lhs: Box::new(node),
+                    rhs: Box::new(rhs),
+                    line,
+                };
+            }
+            return Some(node);
+        }
+        for (op_text, op) in
+            [("=", BinOp::Assign), ("+=", BinOp::Assign), ("-=", BinOp::Assign)]
+        {
+            if self.at_op(op_text) {
+                let line = self.line();
+                self.bump();
+                let rhs = self.assign().unwrap_or(Expr::Group { items: Vec::new() });
+                return Some(Expr::Binary {
+                    op,
+                    lhs: Box::new(lhs),
+                    rhs: Box::new(rhs),
+                    line,
+                });
+            }
+        }
+        Some(lhs)
+    }
+
+    fn range(&mut self) -> Option<Expr> {
+        self.binary_level(0)
+    }
+
+    /// Left-associative binary levels, loosest first.
+    fn binary_level(&mut self, level: usize) -> Option<Expr> {
+        const LEVELS: [&[(&str, BinOp)]; 9] = [
+            &[("..", BinOp::Other), ("..=", BinOp::Other)],
+            &[("||", BinOp::Other)],
+            &[("&&", BinOp::Other)],
+            &[
+                ("==", BinOp::Cmp),
+                ("!=", BinOp::Cmp),
+                ("<=", BinOp::Cmp),
+                (">=", BinOp::Cmp),
+                ("<", BinOp::Cmp),
+                (">", BinOp::Cmp),
+            ],
+            &[("|", BinOp::Other)],
+            &[("^", BinOp::Other)],
+            &[("&", BinOp::Other)],
+            &[("<<", BinOp::Other), (">>", BinOp::Other)],
+            &[("+", BinOp::Add), ("-", BinOp::Sub)],
+        ];
+        if level >= LEVELS.len() {
+            return self.mul();
+        }
+        let mut lhs = self.binary_level(level + 1)?;
+        loop {
+            let found = LEVELS[level]
+                .iter()
+                .find(|(t, _)| self.at_op(t))
+                .map(|(_, op)| *op);
+            let Some(op) = found else {
+                return Some(lhs);
+            };
+            let line = self.line();
+            self.bump();
+            let Some(rhs) = self.binary_level(level + 1) else {
+                return Some(lhs);
+            };
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), line };
+        }
+    }
+
+    fn mul(&mut self) -> Option<Expr> {
+        let mut lhs = self.cast()?;
+        loop {
+            let op = if self.at_op("*") {
+                BinOp::Mul
+            } else if self.at_op("/") {
+                BinOp::Div
+            } else if self.at_op("%") {
+                BinOp::Other
+            } else {
+                return Some(lhs);
+            };
+            let line = self.line();
+            self.bump();
+            let Some(rhs) = self.cast() else {
+                return Some(lhs);
+            };
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), line };
+        }
+    }
+
+    /// `expr as Type` — the cast keeps the operand's inferred unit.
+    fn cast(&mut self) -> Option<Expr> {
+        let mut node = self.unary()?;
+        while self.peek().is_some_and(|t| t.kind == TokKind::Ident && t.text == "as") {
+            self.bump();
+            self.skip_type();
+            node = Expr::Cast { inner: Box::new(node) };
+        }
+        Some(node)
+    }
+
+    /// Swallow one type after `as`: refs/pointers, a path, a turbofish.
+    fn skip_type(&mut self) {
+        while self.at_op("&") || self.at_op("*") {
+            self.bump();
+            if self.peek().is_some_and(|t| {
+                t.kind == TokKind::Ident && (t.text == "mut" || t.text == "const")
+            }) {
+                self.bump();
+            }
+        }
+        while let Some(t) = self.peek() {
+            match t.kind {
+                TokKind::Ident => self.bump(),
+                TokKind::Op if t.text == "::" => self.bump(),
+                TokKind::Op if t.text == "<" => {
+                    self.skip_angles();
+                }
+                _ => return,
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Option<Expr> {
+        for prefix in ["-", "!", "*", "&", "..", "..="] {
+            if self.at_op(prefix) {
+                self.bump();
+                if prefix == "&"
+                    && self.peek().is_some_and(|t| t.kind == TokKind::Ident && t.text == "mut")
+                {
+                    self.bump();
+                }
+                let inner = self.unary().unwrap_or(Expr::Group { items: Vec::new() });
+                return Some(Expr::Unary { inner: Box::new(inner) });
+            }
+        }
+        self.postfix()
+    }
+
+    fn postfix(&mut self) -> Option<Expr> {
+        let mut node = self.primary()?;
+        loop {
+            if self.at_op(".") {
+                let line = self.line();
+                match self.peek_at(1) {
+                    Some(t) if t.kind == TokKind::Num => {
+                        let name = t.text.clone();
+                        self.bump();
+                        self.bump();
+                        node = Expr::Field { recv: Box::new(node), name, line };
+                    }
+                    Some(t) if t.kind == TokKind::Ident => {
+                        let name = t.text.clone();
+                        self.bump();
+                        self.bump();
+                        if self.at_op("::") && self.peek_at(1).is_some_and(|t| t.text == "<") {
+                            self.bump();
+                            self.skip_angles();
+                        }
+                        if self.at_op("(") {
+                            let args = self.arg_list(")");
+                            node = Expr::Method { recv: Box::new(node), name, args, line };
+                        } else {
+                            node = Expr::Field { recv: Box::new(node), name, line };
+                        }
+                    }
+                    _ => return Some(node),
+                }
+            } else if self.at_op("(") {
+                let line = self.line();
+                let args = self.arg_list(")");
+                node = Expr::Call { callee: Box::new(node), args, line };
+            } else if self.at_op("[") {
+                let items = self.arg_list("]");
+                let index = items.into_iter().next().unwrap_or(Expr::Group { items: Vec::new() });
+                node = Expr::Index { recv: Box::new(node), index: Box::new(index) };
+            } else if self.at_op("?") {
+                self.bump();
+                node = Expr::Unary { inner: Box::new(node) };
+            } else {
+                return Some(node);
+            }
+        }
+    }
+
+    /// Comma-separated expressions up to (and past) `close`. Tokens no
+    /// expression attempt consumes are skipped, so macro innards and
+    /// patterns degrade gracefully. Brace blocks nested inside an
+    /// argument (closure bodies) are swallowed balanced.
+    fn arg_list(&mut self, close: &str) -> Vec<Expr> {
+        self.bump(); // The opener.
+        let mut items = Vec::new();
+        while let Some(t) = self.peek() {
+            if t.kind == TokKind::Op {
+                match t.text.as_str() {
+                    c if c == close => {
+                        self.bump();
+                        return items;
+                    }
+                    "," => {
+                        self.bump();
+                        continue;
+                    }
+                    "{" => {
+                        self.skip_braces();
+                        continue;
+                    }
+                    // A closer we did not open: bail without eating it.
+                    ")" | "]" | "}" | ";" => return items,
+                    _ => {}
+                }
+            }
+            let start = self.pos;
+            if let Some(e) = self.assign() {
+                items.push(e);
+            }
+            if self.pos == start {
+                self.bump();
+            }
+        }
+        items
+    }
+
+    /// Swallow a balanced `{ ... }` run (closure/match bodies inside
+    /// argument lists; their innards are opaque to this reader).
+    fn skip_braces(&mut self) {
+        let mut depth = 0i64;
+        while let Some(t) = self.peek() {
+            if t.kind == TokKind::Op {
+                match t.text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth <= 0 {
+                            self.bump();
+                            return;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            self.bump();
+        }
+    }
+
+    /// Swallow a balanced `< ... >` run after a turbofish `::`.
+    fn skip_angles(&mut self) {
+        let mut depth = 0i64;
+        let mut steps = 0usize;
+        while let Some(t) = self.peek() {
+            steps += 1;
+            if steps > 64 {
+                return;
+            }
+            if t.kind == TokKind::Op {
+                match t.text.as_str() {
+                    "<" => depth += 1,
+                    "<<" => depth += 2,
+                    ">" => depth -= 1,
+                    ">>" => depth -= 2,
+                    ";" | "{" => return,
+                    _ => {}
+                }
+            }
+            self.bump();
+            if depth <= 0 {
+                return;
+            }
+        }
+    }
+
+    fn primary(&mut self) -> Option<Expr> {
+        let t = self.peek()?.clone();
+        match t.kind {
+            TokKind::Num => {
+                self.bump();
+                Some(Expr::Num { text: t.text, line: t.line })
+            }
+            TokKind::Str => {
+                self.bump();
+                Some(Expr::Str)
+            }
+            TokKind::Ident => {
+                if KEYWORDS.contains(&t.text.as_str()) {
+                    return None;
+                }
+                self.bump();
+                let mut segs = vec![t.text];
+                while self.at_op("::") {
+                    match self.peek_at(1) {
+                        Some(n) if n.kind == TokKind::Ident => {
+                            segs.push(n.text.clone());
+                            self.bump();
+                            self.bump();
+                        }
+                        Some(n) if n.text == "<" => {
+                            self.bump();
+                            self.skip_angles();
+                        }
+                        _ => break,
+                    }
+                }
+                Some(Expr::Path { segs, line: t.line })
+            }
+            TokKind::Op => match t.text.as_str() {
+                "(" => {
+                    let mut items = self.arg_list(")");
+                    if items.len() == 1 {
+                        let inner = items.remove(0);
+                        Some(Expr::Unary { inner: Box::new(inner) })
+                    } else {
+                        Some(Expr::Group { items })
+                    }
+                }
+                "[" => Some(Expr::Group { items: self.arg_list("]") }),
+                "|" | "||" => {
+                    if t.text == "|" {
+                        self.bump();
+                        self.skip_closure_params();
+                    } else {
+                        self.bump();
+                    }
+                    if self.at_op("{") {
+                        return Some(Expr::Closure {
+                            body: Box::new(Expr::Group { items: Vec::new() }),
+                        });
+                    }
+                    let body = self.assign().unwrap_or(Expr::Group { items: Vec::new() });
+                    Some(Expr::Closure { body: Box::new(body) })
+                }
+                _ => None,
+            },
+        }
+    }
+
+    /// From just past a closure's opening `|` to just past its closing
+    /// `|`. Parameter lists never nest another bare `|`.
+    fn skip_closure_params(&mut self) {
+        while let Some(t) = self.peek() {
+            if t.kind == TokKind::Op {
+                match t.text.as_str() {
+                    "|" => {
+                        self.bump();
+                        return;
+                    }
+                    ";" | "{" | "}" => return,
+                    _ => {}
+                }
+            }
+            self.bump();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Token> {
+        tokenize(&[(1, src)])
+    }
+
+    fn one(src: &str) -> Expr {
+        let ts = toks(src);
+        let mut all = parse_all(&ts);
+        assert_eq!(all.len(), 1, "{src} -> {all:?}");
+        all.remove(0)
+    }
+
+    #[test]
+    fn numbers_lex_whole() {
+        let t = toks("1e3 2.5f64 0x1f 1_000.0 0..n 1.max(y)");
+        let nums: Vec<&str> = t
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1e3", "2.5f64", "0x1f", "1_000.0", "0", "1"]);
+    }
+
+    #[test]
+    fn precedence_nests_mul_under_add() {
+        let e = one("a + b * c");
+        let Expr::Binary { op: BinOp::Add, rhs, .. } = e else {
+            unreachable!("want Add at root, got {e:?}");
+        };
+        assert!(matches!(*rhs, Expr::Binary { op: BinOp::Mul, .. }));
+    }
+
+    #[test]
+    fn method_chains_and_paths_shape() {
+        let e = one("x.per(t).gb()");
+        let Expr::Method { name, recv, .. } = e else {
+            unreachable!();
+        };
+        assert_eq!(name, "gb");
+        assert!(matches!(*recv, Expr::Method { .. }));
+
+        let e = one("Seconds::from_ms(x)");
+        let Expr::Call { callee, args, .. } = e else {
+            unreachable!();
+        };
+        assert_eq!(callee.path_segs(), Some(&["Seconds".into(), "from_ms".into()][..]));
+        assert_eq!(args.len(), 1);
+    }
+
+    #[test]
+    fn driver_resyncs_over_statement_glue() {
+        let src = "let x = a_s + b_ms; if x > y { return x / z; }";
+        let ts = toks(src);
+        let all = parse_all(&ts);
+        // x = a_s + b_ms;  x > y;  x / z  (plus stray atoms).
+        assert!(all.iter().any(|e| matches!(e, Expr::Binary { op: BinOp::Assign, .. })));
+        assert!(all.iter().any(|e| matches!(e, Expr::Binary { op: BinOp::Cmp, .. })));
+        assert!(all.iter().any(|e| matches!(e, Expr::Binary { op: BinOp::Div, .. })));
+    }
+
+    #[test]
+    fn struct_literal_fields_become_colon_bindings() {
+        let ts = toks("Foo { hold_s: ms / kilo, n: 3 }");
+        let all = parse_all(&ts);
+        let colons = all
+            .iter()
+            .filter(|e| matches!(e, Expr::Binary { op: BinOp::Colon, .. }))
+            .count();
+        assert_eq!(colons, 2);
+    }
+
+    #[test]
+    fn annotated_let_unifies_initializer_with_binding() {
+        let e = one("x_ms: f64 = y_s");
+        let Expr::Binary { op: BinOp::Assign, lhs, rhs, .. } = e else {
+            unreachable!("{e:?}");
+        };
+        assert!(matches!(*lhs, Expr::Binary { op: BinOp::Colon, .. }));
+        assert!(matches!(*rhs, Expr::Path { .. }));
+    }
+
+    #[test]
+    fn closures_casts_and_turbofish_do_not_derail() {
+        let ts = toks("v.iter().map(|b| b / gig).sum::<f64>() as u32");
+        let all = parse_all(&ts);
+        assert_eq!(all.len(), 1, "{all:?}");
+        assert!(matches!(all[0], Expr::Cast { .. }));
+    }
+}

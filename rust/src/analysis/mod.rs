@@ -8,14 +8,21 @@
 //! module turns the hazard classes that break them into lint rules a
 //! plain source scan can catch:
 //!
-//! * [`rules::RULES`] — the registry (R0–R6): hash-collection iteration
+//! * [`rules::RULES`] — the registry (R0–R9): hash-collection iteration
 //!   order, wall-clock leaks, panic paths, order-unpinned float folds,
-//!   orphaned conservation checks, format drift, and the suppression
-//!   grammar itself.
+//!   orphaned conservation checks, format drift, hot-path allocation,
+//!   the two dimensional-analysis rules, and the suppression grammar
+//!   itself.
 //! * [`lexer`] — the comment/string/raw-string-aware line scanner that
 //!   keeps rules from firing inside comments and string literals.
 //! * [`source`] — `#[cfg(test)]` region detection and
 //!   `staticcheck: allow(rule) -- reason` annotation parsing.
+//! * [`expr`] — a precedence-aware, deliberately lossy expression
+//!   reader over the code channel (tokens, binary ops, calls, method
+//!   chains, casts) feeding the unit inference.
+//! * [`units_rule`] — the dimensional-analysis pass (R8/R9): a unit
+//!   lattice seeded from the identifier-suffix grammar and the
+//!   `util::units` constructors/accessors.
 //! * [`report`] — human-readable findings plus the `staticcheck.json`
 //!   allowlist inventory CI diffs for growth.
 //!
@@ -24,10 +31,12 @@
 //! exit clean, so every hazard in the tree is either fixed or carries a
 //! written justification.
 
+pub mod expr;
 pub mod lexer;
 pub mod report;
 pub mod rules;
 pub mod source;
+pub mod units_rule;
 
 pub use report::Analysis;
 pub use rules::{rule_info, AllowRecord, RuleInfo, Violation, RULES};

@@ -27,6 +27,12 @@ impl Analysis {
         self.allows.iter().filter(|a| !a.used).collect()
     }
 
+    /// The `--strict` bar CI enforces: no violations *and* no unused
+    /// allows, so the allowlist can only shrink once a hazard is fixed.
+    pub fn strict_clean(&self) -> bool {
+        self.clean() && self.unused_allows().is_empty()
+    }
+
     /// `file:line: [rule] message` listing plus a one-line summary.
     pub fn render(&self) -> String {
         let mut out = String::new();

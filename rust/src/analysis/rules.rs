@@ -9,6 +9,7 @@
 //! `tests/**` files are exempt from everything except the format rule.
 
 use super::source::SourceFile;
+use super::units_rule;
 
 /// Registry metadata for one rule (also the `--list-rules` output and
 /// the contract `docs/STATICCHECK.md` is machine-checked against).
@@ -68,6 +69,20 @@ pub const RULES: &[RuleInfo] = &[
         protects: "the fluid stepper's O(log n) event loop is allocation-free by contract; \
                    heap constructors outside the scratch builders re-introduce per-event \
                    malloc traffic the epoch-reuse optimization removed",
+    },
+    RuleInfo {
+        id: "R8",
+        title: "no unit-conflicting arithmetic",
+        protects: "adding, comparing or assigning across inferred units (the slo_ms-vs-slo_s \
+                   bug class); the identifier-suffix grammar and the util::units \
+                   constructors seed the inference",
+    },
+    RuleInfo {
+        id: "R9",
+        title: "no raw unit-conversion constants",
+        protects: "inline 1e3/1e6/1e9/1024.0 factors in arithmetic bypass util::units and \
+                   desynchronize the scale conventions its helpers centralize; conversions \
+                   flow through the newtypes",
     },
 ];
 
@@ -279,6 +294,13 @@ fn file_violations(f: &SourceFile, test_code: &str) -> Vec<Violation> {
                 ));
             }
         }
+    }
+
+    // R8/R9: dimensional analysis over library code. The units module
+    // itself is the one place raw conversion factors belong, and its
+    // intra-newtype arithmetic is definitionally cross-scale.
+    if library && f.rel != "src/util/units.rs" {
+        out.extend(units_rule::check(f));
     }
 
     // R5: every conservation check stays referenced from a test. The

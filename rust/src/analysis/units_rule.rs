@@ -1,0 +1,514 @@
+//! Dimensional analysis for the staticcheck pass (rules R8 and R9).
+//!
+//! The simulator distinguishes seconds from milliseconds and bytes from
+//! gigabytes only by naming convention — the PR 3 goodput bug (deadline
+//! derived from `slo_ms` where `slo_s` was meant) is the canonical
+//! failure. This module infers a unit for every expression the reader
+//! in [`super::expr`] can shape, seeded from two sources:
+//!
+//! * the identifier-suffix grammar ([`SUFFIXES`]): `_s`, `_ms`,
+//!   `_bytes`, `_gb`, `_flops`, `_ips`, `_rate`, `_frac`, `_per_s`;
+//! * the `util::units` newtypes: constructors (`Seconds::from_ms`,
+//!   `Bytes(..)`) are unit sources *and* argument sinks, accessors
+//!   (`.ms()`, `.gb()`, `.per(..)`, `.time_for(..)`) map units through.
+//!
+//! **R8** fires when add/sub/compare/assign/bind mixes two *known*,
+//! incompatible units; `unknown` never fires, so unshaped code cannot
+//! false-positive. `ips` and `per_s` are compatible (both are event
+//! rates). Division understands ratios (`x_s / y_s` is dimensionless)
+//! and rate formation (`bytes / seconds` is `per_s`), and flags
+//! mixed-scale divisions (`_ms / _s`) that silently embed a factor of
+//! 1e3.
+//!
+//! **R9** is token-level and parser-independent: a raw conversion
+//! constant (`1e3`, `1e6`, `1e9`, `1e12`, `1024.0`, or an inverse)
+//! multiplied or divided in library code bypasses `util::units` and
+//! desynchronizes the scale conventions those helpers centralize.
+
+use super::expr::{parse_all, tokenize, BinOp, Expr, TokKind, Token};
+use super::rules::Violation;
+use super::source::SourceFile;
+
+/// The unit lattice. `Unknown` is the top: it absorbs everything and
+/// never participates in a conflict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    S,
+    Ms,
+    Bytes,
+    Gb,
+    Flops,
+    Ips,
+    PerS,
+    Ratio,
+    Unknown,
+}
+
+/// The identifier-suffix grammar, longest suffix first (so
+/// `core_flops_per_s_per_s` reads as a rate, not as seconds). The label
+/// column is what `docs/STATICCHECK.md` renders; the doc test keeps the
+/// two in sync.
+pub const SUFFIXES: &[(&str, &str)] = &[
+    ("_per_s", "per_s"),
+    ("_bytes", "bytes"),
+    ("_flops", "flops"),
+    ("_rate", "per_s"),
+    ("_frac", "ratio"),
+    ("_ips", "ips"),
+    ("_gb", "gb"),
+    ("_ms", "ms"),
+    ("_s", "s"),
+];
+
+/// Human label for a unit, matching the [`SUFFIXES`] label column.
+pub fn label(u: Unit) -> &'static str {
+    match u {
+        Unit::S => "s",
+        Unit::Ms => "ms",
+        Unit::Bytes => "bytes",
+        Unit::Gb => "gb",
+        Unit::Flops => "flops",
+        Unit::Ips => "ips",
+        Unit::PerS => "per_s",
+        Unit::Ratio => "ratio",
+        Unit::Unknown => "unknown",
+    }
+}
+
+fn label_unit(l: &str) -> Unit {
+    match l {
+        "s" => Unit::S,
+        "ms" => Unit::Ms,
+        "bytes" => Unit::Bytes,
+        "gb" => Unit::Gb,
+        "flops" => Unit::Flops,
+        "ips" => Unit::Ips,
+        "per_s" => Unit::PerS,
+        "ratio" => Unit::Ratio,
+        _ => Unit::Unknown,
+    }
+}
+
+/// `util::units` newtype names, usable in type ascriptions and as
+/// constructor paths.
+fn type_unit(name: &str) -> Option<Unit> {
+    match name {
+        "Seconds" => Some(Unit::S),
+        "Bytes" => Some(Unit::Bytes),
+        "Flops" => Some(Unit::Flops),
+        "BytesPerS" | "FlopsPerS" | "GbPerS" | "PerS" => Some(Unit::PerS),
+        _ => None,
+    }
+}
+
+/// Unit of a lone identifier: newtype names, a few conventional bare
+/// words, then the suffix grammar.
+fn ident_unit(name: &str) -> Unit {
+    if let Some(u) = type_unit(name) {
+        return u;
+    }
+    match name {
+        "seconds" | "secs" => return Unit::S,
+        "ms" | "millis" => return Unit::Ms,
+        "bytes" => return Unit::Bytes,
+        "gb" => return Unit::Gb,
+        "ips" => return Unit::Ips,
+        "flops" => return Unit::Flops,
+        _ => {}
+    }
+    for (suffix, l) in SUFFIXES {
+        if name.ends_with(suffix) && name.len() > suffix.len() {
+            return label_unit(l);
+        }
+    }
+    Unit::Unknown
+}
+
+/// `ips` and `per_s` are both event rates; everything else must match
+/// exactly to be compatible.
+fn compatible(a: Unit, b: Unit) -> bool {
+    a == b
+        || matches!((a, b), (Unit::Ips, Unit::PerS) | (Unit::PerS, Unit::Ips))
+}
+
+fn conflict(a: Unit, b: Unit) -> bool {
+    a != Unit::Unknown && b != Unit::Unknown && !compatible(a, b)
+}
+
+/// Same dimension, different scale: a division that silently embeds a
+/// conversion factor.
+fn scale_pair(a: Unit, b: Unit) -> bool {
+    matches!(
+        (a, b),
+        (Unit::S, Unit::Ms)
+            | (Unit::Ms, Unit::S)
+            | (Unit::Bytes, Unit::Gb)
+            | (Unit::Gb, Unit::Bytes)
+    )
+}
+
+/// Constructor/helper calls: result unit plus `(arg_index, expected)`
+/// sinks checked against the inferred argument units.
+fn call_units(segs: &[String]) -> Option<(Unit, &'static [(usize, Unit)])> {
+    let last = segs.last().map(String::as_str).unwrap_or("");
+    let prev = if segs.len() >= 2 { segs[segs.len() - 2].as_str() } else { "" };
+    let r = match (prev, last) {
+        ("Seconds", "from_ms") => (Unit::S, &[(0usize, Unit::Ms)][..]),
+        ("Bytes", "from_gb") => (Unit::Bytes, &[(0, Unit::Gb)][..]),
+        ("Bytes", "from_mib") | ("Bytes", "from_gib") => (Unit::Bytes, &[][..]),
+        ("Flops", "from_tera") | ("Flops", "from_giga") => (Unit::Flops, &[][..]),
+        ("FlopsPerS", "from_tera") | ("FlopsPerS", "from_giga") => (Unit::PerS, &[][..]),
+        ("BytesPerS", "from_gb") => (Unit::PerS, &[][..]),
+        ("PerS", "from_count") => (Unit::PerS, &[(1, Unit::S)][..]),
+        (_, "Seconds") => (Unit::S, &[(0, Unit::S)][..]),
+        (_, "Bytes") => (Unit::Bytes, &[(0, Unit::Bytes)][..]),
+        (_, "Flops") => (Unit::Flops, &[(0, Unit::Flops)][..]),
+        (_, "BytesPerS") | (_, "FlopsPerS") | (_, "GbPerS") | (_, "PerS") => {
+            (Unit::PerS, &[(0, Unit::PerS)][..])
+        }
+        _ => return None,
+    };
+    Some(r)
+}
+
+/// Raw conversion factors R9 refuses outside `util/units.rs`.
+const RAW_CONSTANTS: [f64; 9] =
+    [1e3, 1e6, 1e9, 1e12, 1024.0, 1e-3, 1e-6, 1e-9, 1e-12];
+
+/// Run both unit rules over one library file's non-test code.
+pub fn check(f: &SourceFile) -> Vec<Violation> {
+    let lines: Vec<(usize, &str)> = f
+        .lines
+        .iter()
+        .enumerate()
+        .filter(|(idx, _)| !f.in_test(idx + 1))
+        .map(|(idx, l)| (idx + 1, l.code.as_str()))
+        .collect();
+    let toks = tokenize(&lines);
+    let mut cx = Cx { rel: f.rel.as_str(), out: Vec::new() };
+    scan_raw_constants(&toks, &mut cx);
+    for e in parse_all(&toks) {
+        infer(&e, &mut cx);
+    }
+    cx.out
+}
+
+struct Cx<'a> {
+    rel: &'a str,
+    out: Vec<Violation>,
+}
+
+impl Cx<'_> {
+    fn fire(&mut self, line: usize, rule: &'static str, message: String) {
+        self.out.push(Violation { file: self.rel.to_string(), line, rule, message });
+    }
+}
+
+/// R9: a conversion constant directly multiplied or divided.
+fn scan_raw_constants(toks: &[Token], cx: &mut Cx) {
+    let is_mul_div = |t: Option<&Token>| {
+        t.is_some_and(|t| {
+            t.kind == TokKind::Op && matches!(t.text.as_str(), "*" | "/" | "*=" | "/=")
+        })
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Num || !float_form(&t.text) {
+            continue;
+        }
+        let Some(v) = parse_float(&t.text) else {
+            continue;
+        };
+        if !RAW_CONSTANTS.iter().any(|c| *c == v) {
+            continue;
+        }
+        let prev = i.checked_sub(1).and_then(|k| toks.get(k));
+        if is_mul_div(prev) || is_mul_div(toks.get(i + 1)) {
+            cx.fire(
+                t.line,
+                "R9",
+                format!(
+                    "raw unit-conversion constant `{}` in arithmetic; route the conversion \
+                     through util::units",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// Float-shaped literal text (has a decimal point or an exponent).
+fn float_form(s: &str) -> bool {
+    if s.starts_with("0x") || s.starts_with("0b") || s.starts_with("0o") {
+        return false;
+    }
+    s.contains('.') || s.chars().skip(1).any(|c| c == 'e' || c == 'E')
+}
+
+fn parse_float(s: &str) -> Option<f64> {
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    let body = cleaned
+        .strip_suffix("f64")
+        .or_else(|| cleaned.strip_suffix("f32"))
+        .unwrap_or(cleaned.as_str());
+    body.parse().ok()
+}
+
+/// Infer the unit of `e`, firing R8 on every conflict found inside.
+fn infer(e: &Expr, cx: &mut Cx) -> Unit {
+    match e {
+        Expr::Num { .. } | Expr::Str => Unit::Unknown,
+        Expr::Path { segs, .. } => {
+            if segs.len() == 1 {
+                ident_unit(&segs[0])
+            } else {
+                segs.last().and_then(|s| type_unit(s)).unwrap_or(Unit::Unknown)
+            }
+        }
+        Expr::Unary { inner } | Expr::Cast { inner } => infer(inner, cx),
+        Expr::Field { recv, name, .. } => {
+            let ru = infer(recv, cx);
+            if name.chars().all(|c| c.is_ascii_digit()) {
+                ru
+            } else {
+                ident_unit(name)
+            }
+        }
+        Expr::Index { recv, index } => {
+            infer(index, cx);
+            infer(recv, cx)
+        }
+        Expr::Group { items } => {
+            for it in items {
+                infer(it, cx);
+            }
+            Unit::Unknown
+        }
+        Expr::Closure { body } => {
+            infer(body, cx);
+            Unit::Unknown
+        }
+        Expr::Call { callee, args, line } => {
+            let arg_units: Vec<Unit> = args.iter().map(|a| infer(a, cx)).collect();
+            let Some(segs) = callee.path_segs() else {
+                infer(callee, cx);
+                return Unit::Unknown;
+            };
+            let Some((result, sinks)) = call_units(segs) else {
+                return Unit::Unknown;
+            };
+            for (idx, expected) in sinks {
+                let got = arg_units.get(*idx).copied().unwrap_or(Unit::Unknown);
+                if conflict(got, *expected) {
+                    cx.fire(
+                        *line,
+                        "R8",
+                        format!(
+                            "`{}` expects `{}` for argument {} but the value reads as `{}`",
+                            segs.join("::"),
+                            label(*expected),
+                            idx + 1,
+                            label(got)
+                        ),
+                    );
+                }
+            }
+            result
+        }
+        Expr::Method { recv, name, args, line } => {
+            let ru = infer(recv, cx);
+            let arg_units: Vec<Unit> = args.iter().map(|a| infer(a, cx)).collect();
+            match name.as_str() {
+                "value" | "clone" | "abs" | "floor" | "ceil" | "round" => ru,
+                "max" | "min" | "clamp" => {
+                    for au in &arg_units {
+                        if conflict(ru, *au) {
+                            cx.fire(
+                                *line,
+                                "R8",
+                                format!(
+                                    "`.{name}(..)` compares `{}` against `{}`",
+                                    label(ru),
+                                    label(*au)
+                                ),
+                            );
+                        }
+                    }
+                    ru
+                }
+                "ms" => Unit::Ms,
+                "per" => Unit::PerS,
+                "time_for" => Unit::S,
+                "gb" if ru == Unit::Bytes => Unit::Gb,
+                _ => Unit::Unknown,
+            }
+        }
+        Expr::Binary { op, lhs, rhs, line } => {
+            let a = infer(lhs, cx);
+            let b = infer(rhs, cx);
+            match op {
+                BinOp::Add | BinOp::Sub | BinOp::Cmp => {
+                    if conflict(a, b) {
+                        let what = if *op == BinOp::Cmp { "comparison" } else { "add/sub" };
+                        cx.fire(
+                            *line,
+                            "R8",
+                            format!(
+                                "{what} mixes units: `{}` vs `{}`",
+                                label(a),
+                                label(b)
+                            ),
+                        );
+                    }
+                    match op {
+                        BinOp::Cmp => Unit::Unknown,
+                        _ if compatible(a, b) && a != Unit::Unknown => a,
+                        _ => Unit::Unknown,
+                    }
+                }
+                BinOp::Assign | BinOp::Colon => {
+                    if conflict(a, b) {
+                        let name = describe(lhs).unwrap_or_else(|| "value".to_string());
+                        let verb = if *op == BinOp::Colon { "declared as" } else { "assigned" };
+                        cx.fire(
+                            *line,
+                            "R8",
+                            format!(
+                                "`{name}` reads as `{}` but is {verb} `{}`",
+                                label(a),
+                                label(b)
+                            ),
+                        );
+                    }
+                    a
+                }
+                BinOp::Div => {
+                    if a == Unit::Unknown || b == Unit::Unknown {
+                        Unit::Unknown
+                    } else if scale_pair(a, b) {
+                        cx.fire(
+                            *line,
+                            "R8",
+                            format!(
+                                "division mixes scales: `{}` / `{}` embeds a conversion factor",
+                                label(a),
+                                label(b)
+                            ),
+                        );
+                        Unit::Ratio
+                    } else if compatible(a, b) {
+                        Unit::Ratio
+                    } else if b == Unit::S
+                        && matches!(a, Unit::Bytes | Unit::Gb | Unit::Flops)
+                    {
+                        Unit::PerS
+                    } else if b == Unit::Ratio {
+                        a
+                    } else {
+                        Unit::Unknown
+                    }
+                }
+                BinOp::Mul => {
+                    if a == Unit::Ratio {
+                        b
+                    } else if b == Unit::Ratio {
+                        a
+                    } else {
+                        Unit::Unknown
+                    }
+                }
+                BinOp::Other => Unit::Unknown,
+            }
+        }
+    }
+}
+
+/// A short name for the conflicting binding in assignment messages.
+fn describe(e: &Expr) -> Option<String> {
+    match e {
+        Expr::Path { segs, .. } => segs.last().cloned(),
+        Expr::Field { name, .. } => Some(name.clone()),
+        Expr::Binary { op: BinOp::Colon, lhs, .. } => describe(lhs),
+        Expr::Unary { inner } | Expr::Cast { inner } => describe(inner),
+        Expr::Index { recv, .. } => describe(recv),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_of(src: &str) -> Unit {
+        let toks = tokenize(&[(1, src)]);
+        let exprs = parse_all(&toks);
+        let mut cx = Cx { rel: "src/x.rs", out: Vec::new() };
+        let mut last = Unit::Unknown;
+        for e in &exprs {
+            last = infer(e, &mut cx);
+        }
+        last
+    }
+
+    fn fires(src: &str) -> Vec<String> {
+        let f = SourceFile::parse("src/x.rs", src);
+        check(&f).into_iter().map(|v| format!("{}:{}", v.rule, v.line)).collect()
+    }
+
+    #[test]
+    fn suffix_grammar_reads_longest_first() {
+        assert_eq!(ident_unit("deadline_s"), Unit::S);
+        assert_eq!(ident_unit("batch_timeout_ms"), Unit::Ms);
+        assert_eq!(ident_unit("core_flops_per_s_per_s"), Unit::PerS, "not `_s`");
+        assert_eq!(ident_unit("weight_bytes"), Unit::Bytes);
+        assert_eq!(ident_unit("arrival_rate"), Unit::PerS);
+        assert_eq!(ident_unit("util_frac"), Unit::Ratio);
+        assert_eq!(ident_unit("throughput_ips"), Unit::Ips);
+        assert_eq!(ident_unit("cap_gb"), Unit::Gb);
+        assert_eq!(ident_unit("plain"), Unit::Unknown);
+        assert_eq!(ident_unit("_s"), Unit::Unknown, "a bare suffix is not a name");
+    }
+
+    #[test]
+    fn lattice_follows_units_helpers() {
+        assert_eq!(unit_of("Seconds::from_ms(t)"), Unit::S);
+        assert_eq!(unit_of("Seconds(x).ms()"), Unit::Ms);
+        assert_eq!(unit_of("weight_bytes.per(elapsed_s)"), Unit::PerS);
+        assert_eq!(unit_of("Bytes(b).gb()"), Unit::Gb);
+        assert_eq!(unit_of("bw.time_for(weight_bytes)"), Unit::S);
+        assert_eq!(unit_of("total_bytes / elapsed_s"), Unit::PerS);
+        assert_eq!(unit_of("a_s / b_s"), Unit::Ratio);
+        assert_eq!(unit_of("x_ms * 2.0"), Unit::Unknown, "scalar mul is opaque");
+        assert_eq!(unit_of("(a_s / b_s) * c_ms"), Unit::Ms, "ratio scales");
+        assert_eq!(unit_of("x_s.max(y_s)"), Unit::S);
+        assert_eq!(unit_of("arr_s[i]"), Unit::S);
+        assert_eq!(unit_of("self.t.slo_ms"), Unit::Ms);
+    }
+
+    #[test]
+    fn rate_units_are_mutually_compatible() {
+        assert!(fires("let ok = throughput_ips >= arrival_rate;").is_empty());
+        assert!(!fires("let bad = throughput_ips >= deadline_s;").is_empty());
+    }
+
+    #[test]
+    fn conflicts_fire_and_unknown_stays_silent() {
+        assert_eq!(fires("let x = deadline_s + batch_timeout_ms;"), vec!["R8:1"]);
+        assert_eq!(fires("let x = a_s - b_s + c;"), Vec::<String>::new());
+        assert_eq!(fires("let slo_s = t.slo_ms;"), vec!["R8:1"]);
+        assert_eq!(fires("let x = plain + other;"), Vec::<String>::new());
+        assert_eq!(fires("f.hold_s = Seconds::from_ms(ms).value();"), Vec::<String>::new());
+        assert_eq!(fires("let r = elapsed_ms / window_s;"), vec!["R8:1"], "scale division");
+        assert_eq!(fires("Seconds(t.slo_ms)"), vec!["R8:1"], "constructor sink");
+    }
+
+    #[test]
+    fn raw_conversion_constants_fire_only_in_arithmetic() {
+        assert_eq!(fires("let x = ms / 1e3;"), vec!["R9:1"]);
+        assert_eq!(fires("let x = b / 1e9;"), vec!["R9:1"]);
+        assert_eq!(fires("let x = s * 1e6;"), vec!["R9:1"]);
+        assert_eq!(fires("let x = mb * 1024.0;"), vec!["R9:1"]);
+        assert_eq!(fires("let ok = x >= 1e6;"), Vec::<String>::new(), "comparison");
+        assert_eq!(fires("let ok = f(1e6);"), Vec::<String>::new(), "call argument");
+        assert_eq!(fires("let ok = x + 1e3;"), Vec::<String>::new(), "offset, not scale");
+    }
+}

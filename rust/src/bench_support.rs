@@ -10,6 +10,7 @@
 use crate::util::json::Json;
 use crate::util::stats::{percentile_of, Summary};
 use crate::util::table::Table;
+use crate::util::units::Seconds;
 use std::time::Instant;
 
 /// One measured benchmark.
@@ -27,7 +28,7 @@ pub struct BenchResult {
 
 impl BenchResult {
     pub fn mean_ms(&self) -> f64 {
-        self.time.mean * 1e3
+        Seconds(self.time.mean).ms()
     }
 }
 
@@ -137,10 +138,10 @@ impl Bencher {
                 Json::obj()
                     .with("name", r.name.as_str())
                     .with("iters", r.time.count)
-                    .with("mean_ms", r.time.mean * 1e3)
-                    .with("p50_ms", r.p50 * 1e3)
-                    .with("min_ms", r.time.min * 1e3)
-                    .with("std_ms", r.time.std * 1e3)
+                    .with("mean_ms", Seconds(r.time.mean).ms())
+                    .with("p50_ms", Seconds(r.p50).ms())
+                    .with("min_ms", Seconds(r.time.min).ms())
+                    .with("std_ms", Seconds(r.time.std).ms())
                     .with("throughput", tp)
             })
             .collect();
@@ -170,9 +171,9 @@ fn format_secs(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")
     } else if s >= 1e-3 {
-        format!("{:.3} ms", s * 1e3)
+        format!("{:.3} ms", Seconds(s).ms())
     } else {
-        format!("{:.1} µs", s * 1e6)
+        format!("{:.1} µs", Seconds(s).us())
     }
 }
 

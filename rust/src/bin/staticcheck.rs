@@ -11,12 +11,14 @@ use std::process::ExitCode;
 use trafficshape::analysis::{check_tree, RULES};
 
 const USAGE: &str = "\
-usage: staticcheck [--root <dir>] [--json <path>] [--list-rules]
+usage: staticcheck [--root <dir>] [--json <path>] [--strict] [--list-rules]
 
   --root <dir>   crate root holding src/ and tests/ (default: ./rust
                  when present, else .)
   --json <path>  where to write the violation/allowlist inventory
                  (default: staticcheck.json; '-' to skip)
+  --strict       unused allow(...) annotations are violations too
+                 (exit 1); the bar CI enforces
   --list-rules   print the rule registry and exit
 ";
 
@@ -24,6 +26,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut root: Option<PathBuf> = None;
     let mut json_path = PathBuf::from("staticcheck.json");
+    let mut strict = false;
     let mut i = 0usize;
     while i < args.len() {
         match args[i].as_str() {
@@ -40,6 +43,10 @@ fn main() -> ExitCode {
             "--json" if i + 1 < args.len() => {
                 json_path = PathBuf::from(&args[i + 1]);
                 i += 2;
+            }
+            "--strict" => {
+                strict = true;
+                i += 1;
             }
             "-h" | "--help" => {
                 print!("{USAGE}");
@@ -74,9 +81,13 @@ fn main() -> ExitCode {
         }
     }
     print!("{}", analysis.render());
-    if analysis.clean() {
+    let pass = if strict { analysis.strict_clean() } else { analysis.clean() };
+    if pass {
         ExitCode::SUCCESS
     } else {
+        if strict && analysis.clean() {
+            eprintln!("staticcheck: strict mode: unused allows are fatal (garbage-collect them)");
+        }
         ExitCode::FAILURE
     }
 }

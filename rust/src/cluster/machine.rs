@@ -22,6 +22,7 @@ use crate::serve::{
     QueueConfig, ServeController,
 };
 use crate::shaping::StaggerPolicy;
+use crate::util::units::Seconds;
 use crate::sim::{BandwidthTrace, DynJob, DynNext, SimEngine, WorkSource};
 
 /// One request stream bound to a model and (currently) a machine. The
@@ -241,7 +242,7 @@ pub(crate) fn run_machine_window(job: &WindowJob<'_>) -> Result<MachineFold> {
         let n = gates.len();
         let mut cfg = QueueConfig::new(job.policy, gates);
         cfg.queue_cap = (lane.queue_cap > 0).then_some(lane.queue_cap);
-        cfg.slo_s = (lane.slo_ms > 0.0).then_some(lane.slo_ms / 1e3);
+        cfg.slo_s = (lane.slo_ms > 0.0).then_some(Seconds::from_ms(lane.slo_ms).value());
         cfg.batch = BatchPolicy::from_timeout_ms(job.batch_timeout_ms)?;
         cfg.rearm_idle_s = job.stagger_rearm.then_some(set.batch_time_s);
         cfg.rearm_quantile = (job.rearm_quantile > 0.0).then_some(job.rearm_quantile);

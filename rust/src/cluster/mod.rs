@@ -56,6 +56,7 @@ use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::serve::{roofline_capacity_ips, LatencyRecorder, PartitionSet, ServeConfig};
 use crate::sweep::{parallel_map, ReplicatedMetrics};
+use crate::util::units::Seconds;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -521,7 +522,8 @@ impl ClusterSimulator {
                     for (r, finish) in lf.completions {
                         let b = born[lf.lane][r];
                         machines[m].recorder.record(b, finish);
-                        if lane.slo_ms == 0.0 || finish - b <= lane.slo_ms / 1e3 {
+                        let slo_s = Seconds::from_ms(lane.slo_ms).value();
+                        if lane.slo_ms == 0.0 || finish - b <= slo_s {
                             machines[m].slo_hits += 1;
                         }
                     }

@@ -8,6 +8,7 @@ use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use crate::util::stats::{Confidence, Summary};
 use crate::util::table::Table;
+use crate::util::units::Bytes;
 
 /// One machine's (or the fleet's) run accounting.
 #[derive(Debug, Clone)]
@@ -142,7 +143,7 @@ impl ClusterOutcome {
                 cells.push(r.stats.as_ref().map_or("-".into(), |s| s.p99_ms.render(1)));
             }
             cells.push(format!("{:.1}", r.bw.mean));
-            cells.push(format!("{:.2}", r.migrated_bytes / 1e9));
+            cells.push(format!("{:.2}", Bytes(r.migrated_bytes).gb()));
             t.row(cells);
         }
         t.render()
@@ -235,9 +236,9 @@ impl ClusterOutcome {
                 f(r.latency.p99_ms),
                 f(r.bw.mean),
                 f(r.bw.std),
-                f(r.total_bytes / 1e9),
+                f(Bytes(r.total_bytes).gb()),
                 tenants,
-                f(r.migrated_bytes / 1e9),
+                f(Bytes(r.migrated_bytes).gb()),
             ];
             if replicated {
                 match &r.stats {
@@ -264,7 +265,7 @@ impl ClusterOutcome {
                     .with("from", m.from)
                     .with("to", m.to)
                     .with("at_s", m.at_s)
-                    .with("weight_gb", m.weight_bytes / 1e9),
+                    .with("weight_gb", Bytes(m.weight_bytes).gb()),
             );
         }
         let mut j = Json::obj()

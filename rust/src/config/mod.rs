@@ -20,7 +20,7 @@ pub struct AcceleratorConfig {
     /// Number of compute cores (64 on the KNL 7210).
     pub cores: usize,
     /// Peak per-core compute rate (SP FLOP/s). 6 TFLOPS / 64 cores on KNL.
-    pub core_flops: FlopsPerS,
+    pub core_flops_per_s: FlopsPerS,
     /// Sustained main-memory bandwidth shared by all cores
     /// (MCDRAM ≈ 400 GB/s on KNL; we use a sustained fraction of peak).
     pub mem_bw: BytesPerS,
@@ -54,7 +54,7 @@ impl AcceleratorConfig {
         Self {
             name: "knl_7210".to_string(),
             cores: 64,
-            core_flops: FlopsPerS::from_giga(93.75),
+            core_flops_per_s: FlopsPerS::from_giga(93.75),
             mem_bw: BytesPerS::from_gb(380.0),
             mem_capacity: Bytes::from_gib(16.0),
             on_chip: Bytes::from_mib(32.0),
@@ -82,7 +82,7 @@ impl AcceleratorConfig {
         Self {
             name: "volta_like".to_string(),
             cores: 80,
-            core_flops: FlopsPerS::from_giga(175.0),
+            core_flops_per_s: FlopsPerS::from_giga(175.0),
             mem_bw: BytesPerS::from_gb(900.0),
             mem_capacity: Bytes::from_gib(16.0),
             on_chip: Bytes::from_mib(6.0),
@@ -104,7 +104,7 @@ impl AcceleratorConfig {
 
     /// Aggregate peak compute of all cores.
     pub fn peak_flops(&self) -> FlopsPerS {
-        FlopsPerS(self.core_flops.0 * self.cores as f64)
+        FlopsPerS(self.core_flops_per_s.0 * self.cores as f64)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -112,8 +112,8 @@ impl AcceleratorConfig {
         if self.cores == 0 {
             return bad("cores must be > 0".into());
         }
-        if self.core_flops.0 <= 0.0 {
-            return bad("core_flops must be positive".into());
+        if self.core_flops_per_s.0 <= 0.0 {
+            return bad("core_flops_per_s must be positive".into());
         }
         if self.mem_bw.0 <= 0.0 {
             return bad("mem_bw must be positive".into());
@@ -139,7 +139,7 @@ impl AcceleratorConfig {
         Json::obj()
             .with("name", self.name.as_str())
             .with("cores", self.cores)
-            .with("core_gflops", self.core_flops.0 / 1e9)
+            .with("core_gflops", self.core_flops_per_s.giga())
             .with("mem_bw_gbps", self.mem_bw.gb())
             .with("mem_capacity_gib", self.mem_capacity.gib())
             .with("on_chip_mib", self.on_chip.mib())
@@ -152,7 +152,7 @@ impl AcceleratorConfig {
         let c = Self {
             name: j.req_str("name")?.to_string(),
             cores: j.req_usize("cores")?,
-            core_flops: FlopsPerS::from_giga(j.req_f64("core_gflops")?),
+            core_flops_per_s: FlopsPerS::from_giga(j.req_f64("core_gflops")?),
             mem_bw: BytesPerS::from_gb(j.req_f64("mem_bw_gbps")?),
             mem_capacity: Bytes::from_gib(j.req_f64("mem_capacity_gib")?),
             on_chip: Bytes::from_mib(j.req_f64("on_chip_mib")?),

@@ -7,6 +7,7 @@ use crate::error::{Error, Result};
 use crate::runtime::Manifest;
 use crate::util::rng::Xoshiro256StarStar;
 use crate::util::stats::{StepSeries, Summary};
+use crate::util::units::Bytes;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -161,7 +162,7 @@ impl Coordinator {
         let gbps: Vec<f64> = merged
             .resample(self.cfg.trace_samples)
             .into_iter()
-            .map(|b| b / 1e9)
+            .map(|b| Bytes(b).gb())
             .collect();
         let mut jobs_per_worker = vec![0usize; n];
         let mut checksum = 0.0f64;

@@ -24,6 +24,7 @@ use crate::model::resnet50;
 use crate::reuse::PhaseCompiler;
 use crate::util::csv::CsvWriter;
 use crate::util::table::Table;
+use crate::util::units::Seconds;
 
 /// (paper row name, our layer name, paper BW GB/s, paper TFLOPS).
 pub const TABLE1_LAYERS: [(&str, &str, f64, f64); 6] = [
@@ -110,8 +111,8 @@ pub fn run_table1(cfg: &ExperimentConfig) -> Result<Table1Result> {
         rows.push(Table1Row {
             paper_name: paper_name.to_string(),
             layer_name: ours.to_string(),
-            bw_gbps: phase.bytes.0 / t / 1e9,
-            tflops: phase.flops.0 / t / 1e12,
+            bw_gbps: phase.bytes.per(Seconds(t)).gb(),
+            tflops: phase.flops.per(Seconds(t)).tera(),
             paper_bw_gbps: paper_bw,
             paper_tflops: paper_tf,
         });

@@ -25,6 +25,7 @@ use trafficshape::shaping::StaggerPolicy;
 use trafficshape::sweep::{SweepGrid, SweepRunner};
 use trafficshape::util::stats::Confidence;
 use trafficshape::util::table::Table;
+use trafficshape::util::units::{Bytes, Flops, MEGA};
 
 fn app() -> App {
     App {
@@ -187,9 +188,9 @@ fn cmd_models() -> Result<()> {
         t.row(vec![
             g.name.clone(),
             g.len().to_string(),
-            format!("{:.2}", g.param_elems() as f64 / 1e6),
-            format!("{:.2}", g.flops_per_image() / 1e9),
-            format!("{:.1}", g.param_elems() as f64 * 4.0 / 1e6),
+            format!("{:.2}", g.param_elems() as f64 / MEGA),
+            format!("{:.2}", Flops(g.flops_per_image()).giga()),
+            format!("{:.1}", Bytes(g.param_elems() as f64 * 4.0).mb()),
         ]);
     }
     print!("{}", t.render());
@@ -391,7 +392,7 @@ fn cmd_cluster(m: &Matches) -> Result<()> {
             mig.from,
             mig.to,
             mig.at_s,
-            mig.weight_bytes / 1e9
+            Bytes(mig.weight_bytes).gb()
         );
     }
     if let Some(dir) = m.get("out") {
@@ -489,7 +490,7 @@ fn cmd_e2e(m: &Matches) -> Result<()> {
     );
     println!(
         "metered traffic: {:.1} MB total; bandwidth mean {:.4} GB/s σ {:.4} (cov {:.3})",
-        report.total_traffic_bytes / 1e6,
+        Bytes(report.total_traffic_bytes).mb(),
         report.bw.mean,
         report.bw.std,
         report.bw.cov()

@@ -42,7 +42,7 @@ impl Phase {
             PhaseClass::ComputeDense => accel.conv_efficiency,
             PhaseClass::MemoryBound => accel.elementwise_efficiency,
         };
-        let rate = FlopsPerS(accel.core_flops.0 * cores as f64 * eff);
+        let rate = FlopsPerS(accel.core_flops_per_s.0 * cores as f64 * eff);
         if self.flops.0 == 0.0 {
             Seconds(0.0)
         } else {

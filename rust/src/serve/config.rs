@@ -29,6 +29,7 @@ use crate::cli::Matches;
 use crate::error::{Error, Result};
 use crate::shaping::StaggerPolicy;
 use crate::util::stats::Confidence;
+use crate::util::units::Seconds;
 
 /// Everything that shapes one serving scenario, minus the machine and
 /// the model (those stay with the front-end that owns them).
@@ -257,7 +258,7 @@ impl ServeConfig {
             cfg.partitions = parts;
         }
         if m.flag("adaptive") {
-            let epoch_s = m.get_f64("epoch-ms")?.unwrap_or(50.0) / 1e3;
+            let epoch_s = Seconds::from_ms(m.get_f64("epoch-ms")?.unwrap_or(50.0)).value();
             cfg.adaptive = Some(AdaptiveConfig::new(cfg.partitions.clone()).epoch_s(epoch_s));
         }
         // Multi-tenant mode: each tenant brings its own model/share/rate;
@@ -290,7 +291,7 @@ impl ServeConfig {
                 t.partitions = per_tenant;
             }
             cfg.tenants = specs;
-            cfg.tenant_epoch_s = m.get_f64("quantum-ms")?.unwrap_or(5.0) / 1e3;
+            cfg.tenant_epoch_s = Seconds::from_ms(m.get_f64("quantum-ms")?.unwrap_or(5.0)).value();
             cfg.tenant_rebalance = m.flag("rebalance");
         }
         Ok(cfg)

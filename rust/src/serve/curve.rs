@@ -25,6 +25,7 @@ use crate::config::AcceleratorConfig;
 use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::shaping::StaggerPolicy;
+use crate::util::units::Seconds;
 use crate::sweep::{parallel_map, ReplicatedMetrics, ReplicationProfile};
 use crate::util::csv::CsvWriter;
 use crate::util::stats::Confidence;
@@ -271,7 +272,7 @@ impl ServeExperiment {
     /// re-balance window, in milliseconds. Deprecated shim for
     /// [`ServeConfig::tenant_epoch_s`].
     pub fn tenant_epoch_ms(mut self, ms: f64) -> Self {
-        self.cfg.tenant_epoch_s = ms / 1e3;
+        self.cfg.tenant_epoch_s = Seconds::from_ms(ms).value();
         self
     }
 

@@ -10,6 +10,7 @@
 //! than an unbounded-latency artifact.
 
 use crate::util::stats::{percentile, Summary};
+use crate::util::units::Seconds;
 
 /// Percentile summary of one run's request latencies (milliseconds).
 ///
@@ -163,11 +164,11 @@ impl LatencyRecorder {
             count: s.count,
             dropped,
             slo_hits,
-            mean_ms: s.mean * 1e3,
-            p50_ms: percentile(&sorted, 50.0) * 1e3,
-            p95_ms: percentile(&sorted, 95.0) * 1e3,
-            p99_ms: percentile(&sorted, 99.0) * 1e3,
-            max_ms: s.max * 1e3,
+            mean_ms: Seconds(s.mean).ms(),
+            p50_ms: Seconds(percentile(&sorted, 50.0)).ms(),
+            p95_ms: Seconds(percentile(&sorted, 95.0)).ms(),
+            p99_ms: Seconds(percentile(&sorted, 99.0)).ms(),
+            max_ms: Seconds(s.max).ms(),
         }
     }
 }

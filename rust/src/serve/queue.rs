@@ -38,6 +38,7 @@ use crate::error::{Error, Result};
 use crate::reuse::Phase;
 use crate::sim::{DynJob, DynNext, WorkSource};
 use crate::util::stats::percentile_of;
+use crate::util::units::Seconds;
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::Arc;
@@ -113,7 +114,7 @@ impl BatchPolicy {
         if ms == 0.0 {
             Ok(BatchPolicy::DispatchOnIdle)
         } else {
-            Ok(BatchPolicy::DispatchOnDeadline { hold_s: ms / 1e3 })
+            Ok(BatchPolicy::DispatchOnDeadline { hold_s: Seconds::from_ms(ms).value() })
         }
     }
 }

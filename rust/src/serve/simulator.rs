@@ -31,6 +31,7 @@ use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::reuse::PhaseCompiler;
 use crate::shaping::{OnlineRepartitioner, StaggerPolicy, WindowSignals};
+use crate::util::units::Seconds;
 use crate::sim::{BandwidthTrace, JobRecord, SimEngine, StepScratch};
 use crate::util::rng::Xoshiro256StarStar;
 use crate::util::stats::Summary;
@@ -340,7 +341,7 @@ impl ServeSimulator {
                 self.cfg.slo_ms
             )));
         }
-        Ok(if self.cfg.slo_ms > 0.0 { Some(self.cfg.slo_ms / 1e3) } else { None })
+        Ok((self.cfg.slo_ms > 0.0).then_some(Seconds::from_ms(self.cfg.slo_ms).value()))
     }
 
     /// The queue configuration one (epoch of a) run uses: the given

@@ -43,6 +43,7 @@ use crate::error::{Error, Result};
 use crate::model::Graph;
 use crate::shaping::{weighted_cores, StaggerPolicy};
 use crate::sim::{BandwidthTrace, DynJob, DynNext, SimEngine, StepScratch, WorkSource};
+use crate::util::units::{Bytes, Seconds};
 use crate::util::stats::{StepSeries, Summary};
 
 /// Utilization below which a tenant with no backlog qualifies as a
@@ -482,7 +483,7 @@ impl MultiTenantSimulator {
         let n = gates.len();
         let mut cfg = QueueConfig::new(self.policy, gates);
         cfg.queue_cap = (t.queue_cap > 0).then_some(t.queue_cap);
-        cfg.slo_s = (t.slo_ms > 0.0).then_some(t.slo_ms / 1e3);
+        cfg.slo_s = (t.slo_ms > 0.0).then_some(Seconds::from_ms(t.slo_ms).value());
         cfg.batch = BatchPolicy::from_timeout_ms(self.batch_timeout_ms)?;
         cfg.rearm_idle_s = self.stagger_rearm.then_some(batch_time);
         cfg.rearm_quantile = (self.rearm_quantile > 0.0).then_some(self.rearm_quantile);
@@ -544,7 +545,7 @@ impl MultiTenantSimulator {
             .iter()
             .map(|t| {
                 if t.slo_ms > 0.0 {
-                    LatencyRecorder::with_slo(t.slo_ms / 1e3)
+                    LatencyRecorder::with_slo(Seconds::from_ms(t.slo_ms).value())
                 } else {
                     LatencyRecorder::new()
                 }
@@ -605,7 +606,7 @@ impl MultiTenantSimulator {
                         let gbps: Vec<f64> = StepSeries::sum(&slice)
                             .resample(self.trace_samples.max(1))
                             .into_iter()
-                            .map(|b| b / 1e9)
+                            .map(|b| Bytes(b).gb())
                             .collect();
                         tenant_bw[i] = Summary::of(&gbps);
                     }

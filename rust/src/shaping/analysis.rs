@@ -72,7 +72,7 @@ mod tests {
     fn toy_outcome(bytes: f64) -> SimOutcome {
         let mut a = AcceleratorConfig::knl_7210();
         a.cores = 2;
-        a.core_flops = crate::util::units::FlopsPerS(1.0);
+        a.core_flops_per_s = crate::util::units::FlopsPerS(1.0);
         a.mem_bw = crate::util::units::BytesPerS(100.0);
         a.conv_efficiency = 1.0;
         let ph = Phase {

@@ -25,6 +25,10 @@ use crate::reuse::Phase;
 use crate::util::units::Seconds;
 use std::sync::Arc;
 
+/// Relative tolerance for the conservation invariants: a dimensionless
+/// precision bound (float accumulation error), not a unit conversion.
+const REL_TOL: f64 = 1e-6;
+
 /// Result of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
@@ -66,14 +70,14 @@ impl SimOutcome {
     /// Post-run invariant checks; returns an error describing the first
     /// violation. Cheap — called by every experiment driver.
     pub fn validate(&self) -> Result<()> {
-        let tol = 1e-6 * self.declared_bytes.max(1.0);
+        let tol = REL_TOL * self.declared_bytes.max(1.0);
         if (self.total_bytes - self.declared_bytes).abs() > tol {
             return Err(Error::SimInvariant(format!(
                 "byte conservation violated: moved {} vs declared {}",
                 self.total_bytes, self.declared_bytes
             )));
         }
-        let ftol = 1e-6 * self.declared_flops.max(1.0);
+        let ftol = REL_TOL * self.declared_flops.max(1.0);
         if (self.total_flops - self.declared_flops).abs() > ftol {
             return Err(Error::SimInvariant(format!(
                 "flop conservation violated: {} vs {}",
@@ -576,14 +580,14 @@ impl DynOutcome {
     /// byte/FLOP conservation against everything the source dispatched,
     /// trace consistency, bandwidth feasibility, monotone job times.
     pub fn validate(&self) -> Result<()> {
-        let tol = 1e-6 * self.declared_bytes.max(1.0);
+        let tol = REL_TOL * self.declared_bytes.max(1.0);
         if (self.total_bytes - self.declared_bytes).abs() > tol {
             return Err(Error::SimInvariant(format!(
                 "byte conservation violated: moved {} vs dispatched {}",
                 self.total_bytes, self.declared_bytes
             )));
         }
-        let ftol = 1e-6 * self.declared_flops.max(1.0);
+        let ftol = REL_TOL * self.declared_flops.max(1.0);
         if (self.total_flops - self.declared_flops).abs() > ftol {
             return Err(Error::SimInvariant(format!(
                 "flop conservation violated: {} vs {}",
@@ -644,7 +648,7 @@ mod tests {
     fn toy() -> AcceleratorConfig {
         let mut a = AcceleratorConfig::knl_7210();
         a.cores = 4;
-        a.core_flops = crate::util::units::FlopsPerS(1.0);
+        a.core_flops_per_s = crate::util::units::FlopsPerS(1.0);
         a.mem_bw = crate::util::units::BytesPerS(100.0);
         a.conv_efficiency = 1.0;
         a.elementwise_efficiency = 1.0;

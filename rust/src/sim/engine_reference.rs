@@ -403,7 +403,7 @@ mod differential {
     fn toy() -> AcceleratorConfig {
         let mut a = AcceleratorConfig::knl_7210();
         a.cores = 8;
-        a.core_flops = crate::util::units::FlopsPerS(1.0);
+        a.core_flops_per_s = crate::util::units::FlopsPerS(1.0);
         a.mem_bw = crate::util::units::BytesPerS(100.0);
         a.conv_efficiency = 1.0;
         a.elementwise_efficiency = 1.0;

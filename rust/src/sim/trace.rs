@@ -6,6 +6,7 @@
 //! resample of the exact piecewise-constant series.
 
 use crate::util::stats::{StepSeries, Summary};
+use crate::util::units::Bytes;
 
 /// Exact bandwidth-over-time record of one simulation.
 #[derive(Debug, Clone)]
@@ -91,7 +92,7 @@ impl BandwidthTrace {
         self.total
             .resample(samples)
             .into_iter()
-            .map(|b| b / 1e9)
+            .map(|b| Bytes(b).gb())
             .collect()
     }
 

@@ -119,6 +119,14 @@ impl MetricCi {
         Self { n, mean, std, ci, confidence }
     }
 
+    /// Conservative lower edge of the interval, `mean − ci`. Rankings
+    /// sort on this so a scenario only outranks another when its whole
+    /// interval supports the claim; with a single replication `ci` is 0
+    /// and this degrades to the point estimate (byte-identical ranks).
+    pub fn lower_bound(&self) -> f64 {
+        self.mean - self.ci
+    }
+
     /// The `mean±ci` cell used by the render tables.
     pub fn render(&self, decimals: usize) -> String {
         format!("{:.*}±{:.*}", decimals, self.mean, decimals, self.ci)

@@ -133,9 +133,20 @@ impl SweepMetrics {
         }
     }
 
-    /// The value ranking sorts on: the replication mean when CI
-    /// statistics ran, the single-run point estimate otherwise.
+    /// The value ranking sorts on: the *lower* edge of the replication
+    /// confidence interval when CI statistics ran (a scenario must beat
+    /// another across its whole interval to outrank it), the single-run
+    /// point estimate otherwise. At `--replications 1` the interval
+    /// half-width is 0, so this equals the mean and ranks are
+    /// byte-identical to the classic single-run path.
     pub fn rank_value(&self) -> f64 {
+        self.relative_performance_ci.map_or(self.relative_performance, |c| c.lower_bound())
+    }
+
+    /// First tie-breaker under [`Self::rank_value`]: the point estimate
+    /// (replication mean when CI statistics ran), so equal lower bounds
+    /// order by the better central tendency before falling back to id.
+    pub fn rank_mean(&self) -> f64 {
         self.relative_performance_ci.map_or(self.relative_performance, |c| c.mean)
     }
 
@@ -200,10 +211,11 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
-    /// Completed outcomes ranked by relative performance (the
-    /// replication mean when CI statistics ran; best first, scenario id
-    /// as the deterministic tie-breaker), then infeasible outcomes in
-    /// id order.
+    /// Completed outcomes ranked by relative performance (the lower
+    /// 95 % confidence bound when replication statistics ran; best
+    /// first, with the replication mean and then the scenario id as
+    /// deterministic tie-breakers), then infeasible outcomes in id
+    /// order.
     pub fn ranked(&self) -> Vec<&ScenarioOutcome> {
         let mut out: Vec<&ScenarioOutcome> = self.outcomes.iter().collect();
         out.sort_by(|a, b| match (a.metrics(), b.metrics()) {
@@ -211,6 +223,11 @@ impl SweepReport {
                 .rank_value()
                 .partial_cmp(&ma.rank_value())
                 .unwrap_or(Ordering::Equal)
+                .then(
+                    mb.rank_mean()
+                        .partial_cmp(&ma.rank_mean())
+                        .unwrap_or(Ordering::Equal),
+                )
                 .then(a.scenario.id.cmp(&b.scenario.id)),
             (Some(_), None) => Ordering::Less,
             (None, Some(_)) => Ordering::Greater,
@@ -643,7 +660,8 @@ mod tests {
     #[test]
     fn replicated_rows_fold_ci_and_drive_ranking() {
         // Two serve rows: row 0 has the better single-seed (rep 0)
-        // estimate, row 1 the better replication mean — the mean wins.
+        // estimate, row 1 the better replication mean AND the tighter
+        // interval — its lower confidence bound wins the ranking.
         let mut a = serve_outcome(0, 80.0);
         let mut b = serve_outcome(1, 60.0);
         let per_rep = |rels: &[f64]| {
@@ -667,7 +685,7 @@ mod tests {
         let r = SweepReport { outcomes: vec![a, b, outcome(2, None)] };
         assert!(r.is_replicated());
         assert_eq!(r.replications(), Some(3));
-        assert_eq!(r.ranked()[0].scenario.id, 1, "CI mean outranks the rep-0 estimate");
+        assert_eq!(r.ranked()[0].scenario.id, 1, "CI lower bound outranks the rep-0 estimate");
         let m = r.outcomes[0].metrics().unwrap();
         let ci = m.relative_performance_ci.unwrap();
         assert!((ci.mean - (1.10 + 1.00 + 0.99) / 3.0).abs() < 1e-12);
@@ -688,6 +706,62 @@ mod tests {
         assert!(!plain.is_replicated());
         assert!(plain.to_csv().to_string().lines().next().unwrap().ends_with(",reason"));
         assert!(!plain.render().contains("rel ±ci"));
+    }
+
+    #[test]
+    fn ranking_prefers_tight_intervals_over_wide_means() {
+        // Row 0: higher mean but a wide interval (noisy seeds). Row 1:
+        // lower mean, tight interval. The conservative lower bound
+        // ranks the defensible row first.
+        let mut a = outcome(0, Some(1.20));
+        let mut b = outcome(1, Some(1.06));
+        if let ScenarioStatus::Completed(m) = &mut a.status {
+            m.relative_performance_ci =
+                Some(MetricCi::of_at(&[1.40, 1.20, 1.00], Confidence::default()));
+        }
+        if let ScenarioStatus::Completed(m) = &mut b.status {
+            m.relative_performance_ci =
+                Some(MetricCi::of_at(&[1.07, 1.06, 1.05], Confidence::default()));
+        }
+        let ma = a.metrics().unwrap().rank_value();
+        let mb = b.metrics().unwrap().rank_value();
+        assert!(mb > ma, "tight interval ({mb:.3}) must outrank wide one ({ma:.3})");
+        let r = SweepReport { outcomes: vec![a, b] };
+        assert_eq!(r.ranked()[0].scenario.id, 1);
+        assert_eq!(r.best().unwrap().scenario.id, 1);
+    }
+
+    #[test]
+    fn ranking_breaks_lower_bound_ties_by_mean_then_id() {
+        // Hand-built intervals with identical lower bounds: 1.10−0.10
+        // and 1.05−0.05 both bound at 1.00; the higher mean wins.
+        let ci = |mean: f64, half: f64| MetricCi {
+            n: 3,
+            mean,
+            std: 0.0,
+            ci: half,
+            confidence: Confidence::default(),
+        };
+        let mut a = outcome(0, Some(1.05));
+        let mut b = outcome(1, Some(1.10));
+        if let ScenarioStatus::Completed(m) = &mut a.status {
+            m.relative_performance_ci = Some(ci(1.05, 0.05));
+        }
+        if let ScenarioStatus::Completed(m) = &mut b.status {
+            m.relative_performance_ci = Some(ci(1.10, 0.10));
+        }
+        let r = SweepReport { outcomes: vec![a, b] };
+        assert_eq!(r.ranked()[0].scenario.id, 1, "equal bounds: mean breaks the tie");
+        // Fully identical intervals fall back to scenario id.
+        let mut c = outcome(5, Some(1.05));
+        let mut d = outcome(4, Some(1.05));
+        for o in [&mut c, &mut d] {
+            if let ScenarioStatus::Completed(m) = &mut o.status {
+                m.relative_performance_ci = Some(ci(1.05, 0.05));
+            }
+        }
+        let r = SweepReport { outcomes: vec![c, d] };
+        assert_eq!(r.ranked()[0].scenario.id, 4, "identical stats: id orders");
     }
 
     #[test]

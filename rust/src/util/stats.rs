@@ -258,6 +258,7 @@ impl StepSeries {
         }
         if let Some(&last) = self.times.last() {
             assert!(
+                // staticcheck: allow(R9) -- relative float tolerance, not a unit conversion
                 (t0 - last).abs() < 1e-9 * t1.abs().max(1.0),
                 "non-contiguous segment: expected start {last}, got {t0}"
             );

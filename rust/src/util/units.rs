@@ -3,6 +3,30 @@
 //! The traffic-shaping math constantly mixes bytes, FLOPs, seconds and
 //! GB/s; newtype wrappers catch unit bugs at compile time and centralize
 //! the formatting used in tables and logs.
+//!
+//! # Units convention
+//!
+//! This module is the *only* place raw scale factors (`1e3`, `1e9`,
+//! `1024.0`, ...) may appear in arithmetic — `staticcheck` rule R9
+//! enforces that every conversion elsewhere flows through these
+//! helpers, and rule R8 checks dimensional consistency against the
+//! identifier-suffix grammar:
+//!
+//! | suffix     | unit                        |
+//! |------------|-----------------------------|
+//! | `_s`       | seconds                     |
+//! | `_ms`      | milliseconds                |
+//! | `_bytes`   | bytes                       |
+//! | `_gb`      | decimal gigabytes           |
+//! | `_flops`   | floating-point operations   |
+//! | `_ips`     | images (inferences) per second |
+//! | `_rate`    | events per second           |
+//! | `_per_s`   | events per second           |
+//! | `_frac`    | dimensionless ratio         |
+//!
+//! A bare `f64` named `deadline_s` is seconds; naming one `_ms` while
+//! storing seconds is exactly the bug class the lint exists to catch
+//! (see `docs/STATICCHECK.md`).
 
 use std::fmt;
 use std::iter::Sum;
@@ -107,6 +131,11 @@ quantity!(
     /// A compute rate in FLOP/s.
     FlopsPerS
 );
+quantity!(
+    /// A generic event rate in events per second (requests, images,
+    /// batch completions) — the `_rate` / `_per_s` suffix family.
+    PerS
+);
 
 /// Convenience alias used pervasively in reports: GB/s as a display unit.
 pub type GbPerS = BytesPerS;
@@ -114,6 +143,10 @@ pub type GbPerS = BytesPerS;
 pub const KIB: f64 = 1024.0;
 pub const MIB: f64 = 1024.0 * 1024.0;
 pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+/// Decimal kilo (ms per second).
+pub const KILO: f64 = 1e3;
+/// Decimal mega, used for MB and M-parameter model-card figures.
+pub const MEGA: f64 = 1e6;
 /// Decimal giga, used for GB/s and GFLOPS as in the paper.
 pub const GIGA: f64 = 1e9;
 pub const TERA: f64 = 1e12;
@@ -127,12 +160,27 @@ impl Bytes {
         Bytes(g * GIB)
     }
 
+    /// Decimal gigabytes, the paper's reporting unit.
+    pub fn from_gb(g: f64) -> Self {
+        Bytes(g * GIGA)
+    }
+
     pub fn mib(self) -> f64 {
         self.0 / MIB
     }
 
     pub fn gib(self) -> f64 {
         self.0 / GIB
+    }
+
+    /// Decimal gigabytes, the paper's reporting unit.
+    pub fn gb(self) -> f64 {
+        self.0 / GIGA
+    }
+
+    /// Decimal megabytes (model-card weight sizes).
+    pub fn mb(self) -> f64 {
+        self.0 / MEGA
     }
 
     /// Rate over a duration.
@@ -146,8 +194,16 @@ impl Flops {
         Flops(t * TERA)
     }
 
+    pub fn from_giga(g: f64) -> Self {
+        Flops(g * GIGA)
+    }
+
     pub fn tera(self) -> f64 {
         self.0 / TERA
+    }
+
+    pub fn giga(self) -> f64 {
+        self.0 / GIGA
     }
 
     pub fn per(self, t: Seconds) -> FlopsPerS {
@@ -183,9 +239,21 @@ impl FlopsPerS {
         self.0 / TERA
     }
 
+    /// GFLOP/s, the config-report unit.
+    pub fn giga(self) -> f64 {
+        self.0 / GIGA
+    }
+
     /// Time to execute `f` FLOPs at this rate.
     pub fn time_for(self, f: Flops) -> Seconds {
         Seconds(f.0 / self.0)
+    }
+}
+
+impl PerS {
+    /// Rate of `n` events over a duration.
+    pub fn from_count(n: f64, t: Seconds) -> Self {
+        PerS(n / t.0)
     }
 }
 
@@ -243,6 +311,12 @@ impl fmt::Display for FlopsPerS {
     }
 }
 
+impl fmt::Display for PerS {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.2}/s", self.0)
+    }
+}
+
 impl fmt::Display for Seconds {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         if self.0 >= 1.0 {
@@ -295,5 +369,30 @@ mod tests {
     fn sum_works() {
         let total: Bytes = [Bytes(1.0), Bytes(2.0), Bytes(3.0)].into_iter().sum();
         assert_eq!(total.0, 6.0);
+    }
+
+    #[test]
+    fn ms_and_gb_round_trips_are_exact_scalings() {
+        // The R9 normalization swapped `x / 1e3`-style inline math for
+        // these helpers; they must compile to the identical operation.
+        assert_eq!(Seconds::from_ms(250.0).value(), 250.0 / 1e3);
+        assert_eq!(Seconds(0.25).ms(), 0.25 * 1e3);
+        assert_eq!(Seconds::from_ms(Seconds(0.25).ms()).value(), 0.25);
+        assert_eq!(Bytes::from_gb(2.5).value(), 2.5 * 1e9);
+        assert_eq!(Bytes(7e9).gb(), 7e9 / 1e9);
+        assert_eq!(Bytes::from_gb(Bytes(7e9).gb()).value(), 7e9);
+        assert_eq!(Bytes(3e6).mb(), 3.0);
+        assert_eq!(Flops::from_giga(4.0).value(), 4e9);
+        assert_eq!(Flops(4e9).giga(), 4.0);
+        assert_eq!(FlopsPerS::from_giga(2.0).giga(), 2.0);
+    }
+
+    #[test]
+    fn per_s_family_forms_rates() {
+        let r = PerS::from_count(120.0, Seconds(2.0));
+        assert_eq!(r.value(), 60.0);
+        assert_eq!(format!("{r}"), "60.00/s");
+        let half: f64 = PerS(30.0) / PerS(60.0);
+        assert!((half - 0.5).abs() < 1e-12);
     }
 }

@@ -4,6 +4,7 @@
 //! and suppression marker are checked against the binary's interface.
 //! Any drift fails this test (and CI's docs job).
 
+use trafficshape::analysis::units_rule::SUFFIXES;
 use trafficshape::analysis::{check_sources, rule_info, RULES};
 
 const DOC: &str = include_str!("../../docs/STATICCHECK.md");
@@ -45,6 +46,33 @@ fn every_registry_rule_resolves_and_is_documented_in_prose() {
             r.id
         );
     }
+}
+
+/// `(suffix, label)` pairs from the "identifier-suffix grammar" table:
+/// the backticked cells of each `| \`_..\` |` row.
+fn documented_suffixes() -> Vec<(String, String)> {
+    DOC.lines()
+        .filter(|l| l.starts_with("| `_"))
+        .map(|l| {
+            let mut cells = l.split('|').map(str::trim);
+            cells.next(); // leading empty cell
+            let suffix = cells.next().expect("suffix cell").trim_matches('`').to_string();
+            let label = cells.next().expect("label cell").trim_matches('`').to_string();
+            (suffix, label)
+        })
+        .collect()
+}
+
+#[test]
+fn suffix_table_matches_the_grammar() {
+    let documented = documented_suffixes();
+    let grammar: Vec<(String, String)> =
+        SUFFIXES.iter().map(|&(s, l)| (s.to_string(), l.to_string())).collect();
+    assert_eq!(
+        documented, grammar,
+        "docs/STATICCHECK.md suffix table disagrees with units_rule::SUFFIXES — \
+         update the table and the grammar together (order matters: longest-match)"
+    );
 }
 
 #[test]

@@ -9,7 +9,7 @@ use trafficshape::util::units::{Bytes, Flops, FlopsPerS, BytesPerS, Seconds};
 fn toy_accel(cores: usize, flops_per_core: f64, bw: f64) -> AcceleratorConfig {
     let mut a = AcceleratorConfig::knl_7210();
     a.cores = cores;
-    a.core_flops = FlopsPerS(flops_per_core);
+    a.core_flops_per_s = FlopsPerS(flops_per_core);
     a.mem_bw = BytesPerS(bw);
     a.conv_efficiency = 1.0;
     a.elementwise_efficiency = 1.0;

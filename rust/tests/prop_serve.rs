@@ -16,7 +16,7 @@ use trafficshape::util::units::{Bytes, BytesPerS, Flops, FlopsPerS};
 fn toy_accel(cores: usize) -> AcceleratorConfig {
     let mut a = AcceleratorConfig::knl_7210();
     a.cores = cores;
-    a.core_flops = FlopsPerS(1.0);
+    a.core_flops_per_s = FlopsPerS(1.0);
     a.mem_bw = BytesPerS(50.0);
     a.conv_efficiency = 1.0;
     a.elementwise_efficiency = 1.0;

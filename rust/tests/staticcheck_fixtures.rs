@@ -153,6 +153,97 @@ fn r7_stepper_allocations_fire_outside_constructor_fns() {
 }
 
 #[test]
+fn r8_unit_conflicts_fire_on_suffix_and_constructor_evidence() {
+    // Adding seconds to milliseconds is the bug class R8 exists for.
+    let a = check(&[("src/sim/a.rs", "fn f(a_s: f64, b_ms: f64) -> f64 { a_s + b_ms }\n")]);
+    assert_eq!(rules_fired(&a), vec!["R8"]);
+    assert!(a.violations[0].message.contains('s') && a.violations[0].message.contains("ms"));
+    // Comparisons across units fire too.
+    let a = check(&[("src/sim/a.rs", "fn f(x_ms: f64, y_s: f64) -> bool { x_ms < y_s }\n")]);
+    assert_eq!(rules_fired(&a), vec!["R8"]);
+    // A suffix that lies about what is assigned into it fires.
+    let a = check(&[("src/sim/a.rs", "fn f(x_s: f64) { let y_ms: f64 = x_s; }\n")]);
+    assert_eq!(rules_fired(&a), vec!["R8"]);
+    // util::units constructors are argument sinks: from_ms wants ms.
+    let bad = "fn f(x_s: f64) -> Seconds { Seconds::from_ms(x_s) }\n";
+    let a = check(&[("src/sim/a.rs", bad)]);
+    assert_eq!(rules_fired(&a), vec!["R8"]);
+    // The core_flops-style hazard: a `_flops` name holding a rate.
+    let bad = "fn f() { let x_flops: FlopsPerS = FlopsPerS::from_giga(1.0); g(x_flops); }\n";
+    let a = check(&[("src/sim/a.rs", bad)]);
+    assert_eq!(rules_fired(&a), vec!["R8"]);
+}
+
+#[test]
+fn r8_stays_silent_without_conflicting_evidence() {
+    // Same-unit arithmetic, unknown operands, and compatible rates
+    // (events/s vs images/s) are all fine.
+    for ok in [
+        "fn f(a_s: f64, b_s: f64) -> f64 { a_s + b_s }\n",
+        "fn f(a_s: f64, b: f64) -> f64 { a_s + b }\n",
+        "fn f(thr_ips: f64, arrival_rate: f64) -> f64 { thr_ips - arrival_rate }\n",
+        "fn f(total_bytes: f64, d_s: f64) -> f64 { Bytes(total_bytes).per(Seconds(d_s)).gb() }\n",
+    ] {
+        let a = check(&[("src/sim/a.rs", ok)]);
+        assert!(a.clean(), "{ok}: {}", a.render());
+    }
+    let bad = "fn f(a_s: f64, b_ms: f64) -> f64 { a_s + b_ms }\n";
+    // Test code, comments and strings are exempt; so is units.rs itself.
+    let a = check(&[("tests/a.rs", bad)]);
+    assert!(a.clean(), "{}", a.render());
+    let cfg = format!("#[cfg(test)]\nmod tests {{\n    {bad}}}\n");
+    let a = check(&[("src/sim/a.rs", cfg.as_str())]);
+    assert!(a.clean(), "{}", a.render());
+    let masked = "// a_s + b_ms in prose\nfn f() { let s = \"a_s + b_ms\"; }\n";
+    let a = check(&[("src/sim/a.rs", masked)]);
+    assert!(a.clean(), "{}", a.render());
+    let a = check(&[("src/util/units.rs", bad)]);
+    assert!(a.clean(), "{}", a.render());
+    // A reasoned allow silences and is inventoried.
+    let src =
+        format!("fn f(a_s: f64, b_ms: f64) -> f64 {{ a_s + b_ms }} {MARK} allow(R8) -- fix\n");
+    let a = check(&[("src/sim/a.rs", src.as_str())]);
+    assert!(a.clean(), "{}", a.render());
+    assert!(a.allows[0].used);
+}
+
+#[test]
+fn r9_raw_conversion_constants_fire_in_arithmetic_only() {
+    for bad in [
+        "fn f(t_ms: f64) -> f64 { t_ms / 1e3 }\n",
+        "fn f(b: f64) -> f64 { b / 1e9 }\n",
+        "fn f(s: f64) -> f64 { s * 1e6 }\n",
+        "fn f(k: f64) -> f64 { k * 1024.0 }\n",
+    ] {
+        let a = check(&[("src/sim/a.rs", bad)]);
+        assert_eq!(rules_fired(&a), vec!["R9"], "{bad}: {}", a.render());
+    }
+    // Comparisons, call arguments and non-scale floats are not
+    // conversions; units.rs, tests and masked text are out of scope.
+    for ok in [
+        "fn f(x: f64) -> bool { x > 1e9 }\n",
+        "fn f() { g(1e6); }\n",
+        "fn f(x: f64) -> f64 { x * 2.0 }\n",
+    ] {
+        let a = check(&[("src/sim/a.rs", ok)]);
+        assert!(a.clean(), "{ok}: {}", a.render());
+    }
+    let bad = "fn f(t_ms: f64) -> f64 { t_ms / 1e3 }\n";
+    let a = check(&[("src/util/units.rs", bad)]);
+    assert!(a.clean(), "{}", a.render());
+    let a = check(&[("tests/a.rs", bad)]);
+    assert!(a.clean(), "{}", a.render());
+    let masked = "// t / 1e3 in prose\nfn f() { let s = \"x / 1e9\"; }\n";
+    let a = check(&[("src/sim/a.rs", masked)]);
+    assert!(a.clean(), "{}", a.render());
+    // A reasoned allow silences (the stats.rs tolerance pattern).
+    let src = format!("fn f(x: f64) -> f64 {{ x * 1e-9 }} {MARK} allow(R9) -- tolerance\n");
+    let a = check(&[("src/sim/a.rs", src.as_str())]);
+    assert!(a.clean(), "{}", a.render());
+    assert!(a.allows[0].used);
+}
+
+#[test]
 fn reasoned_allow_silences_and_is_inventoried() {
     let src = format!(
         "fn f() {{ x.unwrap(); }} {MARK} allow(R3) -- fixture justification\n"
@@ -186,7 +277,7 @@ fn malformed_or_unknown_suppressions_are_r0_and_unsuppressible() {
     assert_eq!(rules_fired(&a), vec!["R0", "R3"]);
 
     // Unknown rule id.
-    let src = format!("fn f() {{}} {MARK} allow(R9) -- no such rule\n");
+    let src = format!("fn f() {{}} {MARK} allow(R42) -- no such rule\n");
     let a = check(&[("src/model/a.rs", src.as_str())]);
     assert_eq!(rules_fired(&a), vec!["R0"]);
 
@@ -218,7 +309,7 @@ fn unused_allows_are_reported_but_not_fatal() {
 #[test]
 fn registry_is_complete_and_deterministically_ordered() {
     let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
-    assert_eq!(ids, vec!["R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7"]);
+    assert_eq!(ids, vec!["R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8", "R9"]);
     // Violations come back sorted by (file, line, rule).
     let a = check(&[
         ("src/sim/b.rs", "fn g() { x.unwrap(); }\nuse std::collections::HashMap;\n"),
